@@ -1,0 +1,77 @@
+//! Heterogeneous-fleet scenario: the paper's §III-A setting in miniature.
+//!
+//! Samples a fleet with the paper's resource ranges (memory U[2,16] GB,
+//! latency U[20,200] ms), shows the Eq. 1 subnetwork allocation, then runs
+//! SuperSFL vs the two baselines on the *same* fleet/seed and compares
+//! rounds-to-target, communication and simulated training time — a
+//! one-screen version of Table I.
+//!
+//! ```bash
+//! cargo run --release --example heterogeneous_fleet
+//! ```
+
+use supersfl::config::{ExperimentConfig, Method};
+use supersfl::metrics::Table;
+use supersfl::orchestrator::run_experiment;
+use supersfl::runtime::Runtime;
+
+fn base_cfg(method: Method) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default()
+        .with_name("het_fleet")
+        .with_method(method)
+        .with_clients(12)
+        .with_rounds(20)
+        .with_seed(11);
+    cfg.data.train_per_class = 120;
+    cfg.train.local_steps = 2;
+    cfg.train.eval_samples = 300;
+    cfg.train.target_accuracy = Some(0.70);
+    cfg
+}
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::load(&ExperimentConfig::default().artifacts_dir)?;
+
+    println!("== fleet & allocation (Eq. 1) ==");
+    let probe = run_experiment(&rt, &base_cfg(Method::SuperSfl).with_rounds(1))?;
+    let mut hist = vec![0usize; rt.model().depth];
+    for &d in &probe.depths {
+        hist[d] += 1;
+    }
+    println!("client depths: {:?}", probe.depths);
+    println!("depth histogram (1..L-1): {:?}\n", &hist[1..]);
+
+    println!("== method comparison on the identical fleet ==");
+    let mut table = Table::new(&[
+        "method",
+        "rounds→70%",
+        "comm MB",
+        "sim time s",
+        "final acc",
+        "W/%",
+    ]);
+    for method in [Method::Sfl, Method::Dfl, Method::SuperSfl] {
+        let res = run_experiment(&rt, &base_cfg(method))?;
+        let m = &res.metrics;
+        table.row(&[
+            method.as_str().to_uppercase(),
+            m.rounds_to_target
+                .map(|r| r.to_string())
+                .unwrap_or_else(|| format!(">{}", m.rounds.len())),
+            format!(
+                "{:.0}",
+                m.comm_mb_to_target.unwrap_or(m.total_comm_mb)
+            ),
+            format!(
+                "{:.0}",
+                m.sim_time_to_target.unwrap_or(m.total_sim_time_s)
+            ),
+            format!("{:.3}", m.best_accuracy),
+            format!("{:.2}", m.power_per_acc),
+        ]);
+    }
+    println!("{}", table.render());
+    println!("(SSFL should need the fewest rounds and the least communication; \
+              see `cargo bench --bench table1_efficiency` for the full grid)");
+    Ok(())
+}

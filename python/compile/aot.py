@@ -1,0 +1,192 @@
+"""AOT pipeline: lower every L2 entry point to HLO *text* + manifest.
+
+Build-time only (``make artifacts``). For each legal split depth d ∈ [1, L-1]
+(and each class-count variant) this emits one HLO text file per entry point
+listed in DESIGN.md §3, plus:
+
+  * ``manifest.json``  — model geometry, per-layer encoder segmentation,
+    and the full artifact table (file, inputs, outputs with shapes/dtypes)
+    that the Rust runtime loads at startup;
+  * ``init_*.bin``     — deterministic initial parameters as raw
+    little-endian f32, so Rust and Python start from identical weights.
+
+HLO **text** (not ``.serialize()``) is the interchange format: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids which the ``xla`` crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(fn, *specs) -> str:
+    """jit → lower → StableHLO → XlaComputation → HLO text."""
+    lowered = jax.jit(fn).lower(*specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _io(name, shape, dtype="f32"):
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+def build_artifacts(cfg, out_dir: str, verbose: bool = True):
+    """Lower the full artifact set for the given build profile."""
+    os.makedirs(out_dir, exist_ok=True)
+    L = cfg["depth"]
+    B = cfg["batch"]
+    BE = cfg["eval_batch"]
+    T = M.tokens(cfg)
+    D = cfg["dim"]
+    img = (cfg["image_size"], cfg["image_size"], cfg["channels"])
+
+    artifacts = {}
+
+    def emit(name, fn, specs, inputs, outputs):
+        t0 = time.time()
+        text = to_hlo_text(fn, *specs)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        artifacts[name] = {"file": fname, "inputs": inputs, "outputs": outputs}
+        if verbose:
+            print(f"  {name}: {len(text)/1e3:.0f} kB in {time.time()-t0:.1f}s",
+                  flush=True)
+
+    x_spec = _spec((B,) + img)
+    y_spec = _spec((B,), jnp.int32)
+    z_shape = (B, T, D)
+
+    for d in range(1, L):
+        ne = M.enc_size(cfg, d)
+        ns = M.srv_size(cfg, d)
+
+        emit(
+            f"client_fwd_d{d}",
+            M.make_client_fwd(cfg, d),
+            (_spec((ne,)), x_spec),
+            [_io("enc", (ne,)), _io("x", (B,) + img)],
+            [_io("z", z_shape)],
+        )
+        emit(
+            f"client_bwd_d{d}",
+            M.make_client_bwd(cfg, d),
+            (_spec((ne,)), x_spec, _spec(z_shape)),
+            [_io("enc", (ne,)), _io("x", (B,) + img), _io("g_z", z_shape)],
+            [_io("g_enc", (ne,))],
+        )
+        emit(
+            f"tpgf_update_d{d}",
+            M.make_tpgf(cfg, d),
+            (_spec((ne,)), _spec((ne,)), _spec((ne,)),
+             _spec(()), _spec(()), _spec(())),
+            [_io("theta", (ne,)), _io("g_c", (ne,)), _io("g_s", (ne,)),
+             _io("l_c", ()), _io("l_s", ()), _io("lr", ())],
+            [_io("theta_new", (ne,))],
+        )
+        for c in cfg["classes_variants"]:
+            ncc = M.clf_client_size(cfg, c)
+            ncs = M.clf_server_size(cfg, c)
+            emit(
+                f"client_local_d{d}_c{c}",
+                M.make_client_local(cfg, d, c),
+                (_spec((ne,)), _spec((ncc,)), x_spec, y_spec),
+                [_io("enc", (ne,)), _io("clf", (ncc,)),
+                 _io("x", (B,) + img), _io("y", (B,), "i32")],
+                [_io("z", z_shape), _io("loss", ()),
+                 _io("g_enc", (ne,)), _io("g_clf", (ncc,))],
+            )
+            emit(
+                f"server_step_d{d}_c{c}",
+                M.make_server_step(cfg, d, c),
+                (_spec((ns,)), _spec((ncs,)), _spec(z_shape), y_spec),
+                [_io("srv", (ns,)), _io("clf_s", (ncs,)),
+                 _io("z", z_shape), _io("y", (B,), "i32")],
+                [_io("loss", ()), _io("g_srv", (ns,)),
+                 _io("g_clf_s", (ncs,)), _io("g_z", z_shape)],
+            )
+
+    for c in cfg["classes_variants"]:
+        ncs = M.clf_server_size(cfg, c)
+        nef = M.enc_size(cfg, L)
+        emit(
+            f"eval_c{c}",
+            M.make_eval(cfg, c),
+            (_spec((nef,)), _spec((ncs,)), _spec((BE,) + img)),
+            [_io("enc_full", (nef,)), _io("clf_s", (ncs,)),
+             _io("x", (BE,) + img)],
+            [_io("logits", (BE, c))],
+        )
+
+    # Deterministic initial parameters (shared Rust/Python starting point).
+    init_files = {}
+    for c in cfg["classes_variants"]:
+        enc, clf_s, clf_c = M.init_params(cfg, c, cfg["seed"])
+        for tag, arr in [
+            (f"init_enc_c{c}", enc),
+            (f"init_clf_s_c{c}", clf_s),
+            (f"init_clf_client_c{c}", clf_c),
+        ]:
+            fname = f"{tag}.bin"
+            np.asarray(arr, dtype="<f4").tofile(os.path.join(out_dir, fname))
+            init_files[tag] = {"file": fname, "len": int(arr.size)}
+
+    manifest = {
+        "build": cfg,
+        "model": {
+            "tokens": T,
+            "dim": D,
+            "depth": L,
+            "batch": B,
+            "eval_batch": BE,
+            "embed_size": M.embed_size(cfg),
+            "block_size": M.block_size(cfg),
+            "enc_layer_sizes": M.enc_layer_sizes(cfg),
+            "enc_full_size": M.enc_size(cfg, L),
+            "srv_sizes": {str(d): M.srv_size(cfg, d) for d in range(1, L)},
+            "enc_sizes": {str(d): M.enc_size(cfg, d) for d in range(1, L + 1)},
+            "clf_client_sizes": {str(c): M.clf_client_size(cfg, c)
+                                 for c in cfg["classes_variants"]},
+            "clf_server_sizes": {str(c): M.clf_server_size(cfg, c)
+                                 for c in cfg["classes_variants"]},
+        },
+        "init": init_files,
+        "artifacts": artifacts,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if verbose:
+        print(f"wrote {len(artifacts)} artifacts + manifest to {out_dir}")
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description="SuperSFL AOT artifact builder")
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--config", default=None, help="build_config.json override")
+    args = ap.parse_args()
+    cfg = M.load_build_config(args.config)
+    build_artifacts(cfg, args.out)
+
+
+if __name__ == "__main__":
+    main()

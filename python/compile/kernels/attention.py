@@ -1,0 +1,242 @@
+"""L1: tiled (flash-style) multi-head attention as Pallas kernels.
+
+The ViT backbone's compute hot-spot. Implements the numerically-stable
+streaming-softmax attention in the forward pass and the standard
+flash-attention backward (recompute-P from the saved logsumexp) — both as
+Pallas kernels, stitched together with ``jax.custom_vjp`` so the L2 model
+can differentiate straight through them.
+
+TPU adaptation of the paper's GPU setting (see DESIGN.md §6):
+  * the grid walks ``(batch·head tiles, q tiles)``; each step sees a
+    ``(block_bh, block_q, head_dim)`` Q tile against the K/V panels for its
+    batch·head tile, held in VMEM via ``BlockSpec`` and reused across all
+    q-tiles — the Pallas analogue of a CUDA kernel parking K/V in
+    L2/shared memory;
+  * both tile contractions (QKᵀ and PV) are batched f32 MXU matmuls
+    (``preferred_element_type=float32``);
+  * sequence and batch·head dims are padded to tile multiples; padded keys
+    are masked with −inf inside the tile so no attention weight leaks.
+
+``block_bh`` trades grid-step count against per-step working-set size. On
+real TPU hardware small tiles keep the working set inside VMEM; under
+``interpret=True`` on CPU (mandatory here — the CPU PJRT plugin cannot run
+Mosaic custom-calls) every grid step lowers to one while-loop iteration of
+plain HLO, so the AOT build uses one panel-sized step (``block_bh = BH``)
+and the hypothesis suite sweeps small tiles to validate the tiling logic.
+Real-TPU perf is estimated from the block shapes in DESIGN.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _pad_to(x: jax.Array, axis: int, target: int) -> jax.Array:
+    pad = target - x.shape[axis]
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _bdot(a, b, contract, batch=((0,), (0,))):
+    """Batched f32 contraction on the MXU."""
+    return jax.lax.dot_general(
+        a, b, (contract, batch), preferred_element_type=jnp.float32
+    )
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, *, seq_len: int, scale: float):
+    """One (bh-tile, q-tile) grid step of the forward pass.
+
+    Block shapes: q ``(bbh, bq, hd)``; k/v ``(bbh, Tp, hd)`` (full key
+    panel); o ``(bbh, bq, hd)``; lse ``(bbh, bq)``.
+    """
+    q = q_ref[...]
+    k = k_ref[...]
+    v = v_ref[...]
+
+    # s[b, i, j] = q[b, i, :] · k[b, j, :]  — QKᵀ on the MXU.
+    s = _bdot(q, k, ((2,), (2,))) * scale  # [bbh, bq, Tp]
+
+    # Mask padded key positions (>= seq_len) so they carry zero weight.
+    tp = k.shape[1]
+    key_idx = jax.lax.broadcasted_iota(jnp.int32, s.shape, 2)
+    s = jnp.where(key_idx < seq_len, s, NEG_INF)
+
+    m = jnp.max(s, axis=-1, keepdims=True)  # [bbh, bq, 1]
+    m = jnp.maximum(m, -1e30)  # keep padded q-rows finite
+    p = jnp.exp(s - m)
+    l = jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+
+    o = _bdot(p, v, ((2,), (1,)))  # [bbh, bq, hd] — PV on the MXU
+    o_ref[...] = o / l
+    lse_ref[...] = (m + jnp.log(l))[:, :, 0]
+
+
+def _bwd_kernel(
+    q_ref, k_ref, v_ref, o_ref, do_ref, lse_ref,
+    dq_ref, dk_ref, dv_ref, *, seq_len: int, scale: float,
+):
+    """One (bh-tile, q-tile) grid step of the backward pass.
+
+    dK/dV blocks are indexed only by the bh grid dim, so they are
+    revisited by every q-tile step and accumulated in place; they are
+    zeroed on the first q-tile (``pl.when(j == 0)``).
+    """
+    j = pl.program_id(1)
+
+    q = q_ref[...]
+    k = k_ref[...]
+    v = v_ref[...]
+    o = o_ref[...]
+    do = do_ref[...]
+    lse = lse_ref[...]  # [bbh, bq]
+
+    @pl.when(j == 0)
+    def _init():
+        dk_ref[...] = jnp.zeros_like(dk_ref[...])
+        dv_ref[...] = jnp.zeros_like(dv_ref[...])
+
+    s = _bdot(q, k, ((2,), (2,))) * scale  # [bbh, bq, Tp]
+    key_idx = jax.lax.broadcasted_iota(jnp.int32, s.shape, 2)
+    s = jnp.where(key_idx < seq_len, s, NEG_INF)
+
+    p = jnp.exp(s - lse[:, :, None])  # recomputed softmax  [bbh, bq, Tp]
+
+    # dv += pᵀ · do  (contract the q dim)
+    dv_ref[...] += _bdot(p, do, ((1,), (1,)))
+    # dp = do · vᵀ ; ds = p ⊙ (dp − Δ), Δ_r = Σ_d do_{rd} o_{rd}
+    dp = _bdot(do, v, ((2,), (2,)))  # [bbh, bq, Tp]
+    delta = jnp.sum(do * o, axis=-1, keepdims=True)  # [bbh, bq, 1]
+    ds = p * (dp - delta) * scale
+
+    # dq = ds · k ; dk += dsᵀ · q
+    dq_ref[...] = _bdot(ds, k, ((2,), (1,)))
+    dk_ref[...] += _bdot(ds, q, ((1,), (1,)))
+
+
+def _tiles(n: int, block: int) -> int:
+    return (n + block - 1) // block
+
+
+def _resolve_blocks(bh: int, t: int, block_q: int, block_bh: int):
+    """0 or oversized blocks clamp to the full dim (panel mode)."""
+    bq = t if block_q <= 0 else min(block_q, max(t, 1))
+    bbh = bh if block_bh <= 0 else min(block_bh, bh)
+    tp = _tiles(t, bq) * bq
+    bhp = _tiles(bh, bbh) * bbh
+    return bq, bbh, tp, bhp
+
+
+def _attention_fwd_impl(q, k, v, block_q: int, block_bh: int):
+    bh, t, hd = q.shape
+    scale = 1.0 / (hd ** 0.5)
+    bq, bbh, tp, bhp = _resolve_blocks(bh, t, block_q, block_bh)
+    nq = tp // bq
+    nbh = bhp // bbh
+
+    qp = _pad_to(_pad_to(q, 1, tp), 0, bhp)
+    kp = _pad_to(_pad_to(k, 1, tp), 0, bhp)
+    vp = _pad_to(_pad_to(v, 1, tp), 0, bhp)
+
+    o, lse = pl.pallas_call(
+        functools.partial(_fwd_kernel, seq_len=t, scale=scale),
+        grid=(nbh, nq),
+        in_specs=[
+            pl.BlockSpec((bbh, bq, hd), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((bbh, tp, hd), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((bbh, tp, hd), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bbh, bq, hd), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((bbh, bq), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bhp, tp, hd), jnp.float32),
+            jax.ShapeDtypeStruct((bhp, tp), jnp.float32),
+        ],
+        interpret=True,
+    )(qp, kp, vp)
+    return o[:bh, :t, :], lse[:bh, :t]
+
+
+def _attention_bwd_impl(q, k, v, o, lse, do, block_q: int, block_bh: int):
+    bh, t, hd = q.shape
+    scale = 1.0 / (hd ** 0.5)
+    bq, bbh, tp, bhp = _resolve_blocks(bh, t, block_q, block_bh)
+    nq = tp // bq
+    nbh = bhp // bbh
+
+    qp = _pad_to(_pad_to(q, 1, tp), 0, bhp)
+    kp = _pad_to(_pad_to(k, 1, tp), 0, bhp)
+    vp = _pad_to(_pad_to(v, 1, tp), 0, bhp)
+    op = _pad_to(_pad_to(o, 1, tp), 0, bhp)
+    dop = _pad_to(_pad_to(do, 1, tp), 0, bhp)
+    # Padded q-rows have garbage lse but zero do, so ds = 0 and nothing
+    # leaks into dk/dv. Pad lse with zeros to keep exp() finite.
+    lsep = _pad_to(_pad_to(lse, 1, tp), 0, bhp)
+
+    dq, dk, dv = pl.pallas_call(
+        functools.partial(_bwd_kernel, seq_len=t, scale=scale),
+        grid=(nbh, nq),
+        in_specs=[
+            pl.BlockSpec((bbh, bq, hd), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((bbh, tp, hd), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((bbh, tp, hd), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((bbh, bq, hd), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((bbh, bq, hd), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((bbh, bq), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bbh, bq, hd), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((bbh, tp, hd), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((bbh, tp, hd), lambda i, j: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bhp, tp, hd), jnp.float32),
+            jax.ShapeDtypeStruct((bhp, tp, hd), jnp.float32),
+            jax.ShapeDtypeStruct((bhp, tp, hd), jnp.float32),
+        ],
+        interpret=True,
+    )(qp, kp, vp, op, dop, lsep)
+    return dq[:bh, :t, :], dk[:bh, :t, :], dv[:bh, :t, :]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    block_q: int = 128,
+    block_bh: int = 0,
+) -> jax.Array:
+    """Flash-style attention over ``[BH, T, hd]`` with Pallas fwd+bwd kernels.
+
+    Matches :func:`.ref.attention_ref` to ~1e-5. ``block_q`` is the q-tile
+    height, ``block_bh`` the batch·head tile (0 = whole dim, panel mode);
+    both are static and the inputs are padded up to tile multiples.
+    """
+    o, _ = _attention_fwd_impl(q, k, v, block_q, block_bh)
+    return o
+
+
+def _attention_vjp_fwd(q, k, v, block_q, block_bh):
+    o, lse = _attention_fwd_impl(q, k, v, block_q, block_bh)
+    return o, (q, k, v, o, lse)
+
+
+def _attention_vjp_bwd(block_q, block_bh, res, do):
+    q, k, v, o, lse = res
+    dq, dk, dv = _attention_bwd_impl(q, k, v, o, lse, do, block_q, block_bh)
+    return dq, dk, dv
+
+
+attention.defvjp(_attention_vjp_fwd, _attention_vjp_bwd)

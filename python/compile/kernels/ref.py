@@ -1,0 +1,90 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness ground truth).
+
+Every Pallas kernel in this package has a reference implementation here,
+written with plain ``jax.numpy`` ops only. pytest (and hypothesis sweeps)
+assert ``assert_allclose(kernel(...), ref(...))`` over shapes/dtypes; the
+reference is also what the L2 model would compute if the kernels were
+disabled, so any divergence is a kernel bug by definition.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Scaled dot-product attention oracle.
+
+    Args:
+      q, k, v: ``[BH, T, hd]`` — batch*heads folded into the leading dim.
+
+    Returns:
+      ``[BH, T, hd]`` attention output, f32.
+    """
+    hd = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q, k) / jnp.sqrt(jnp.float32(hd))
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v)
+
+
+def clip_by_l2(g: jax.Array, tau: float, eps: float = 1e-12) -> jax.Array:
+    """l2-norm gradient clipping (paper §II-B Phase 1, tau = 0.5).
+
+    ``g`` is scaled by ``min(1, tau / ||g||_2)``; identical semantics to
+    ``torch.nn.utils.clip_grad_norm_`` on a single flat vector.
+    """
+    norm = jnp.sqrt(jnp.sum(g * g) + eps)
+    scale = jnp.minimum(1.0, tau / jnp.maximum(norm, eps))
+    return g * scale
+
+
+def tpgf_client_weight(
+    l_client: jax.Array,
+    l_server: jax.Array,
+    d_i: int,
+    d_s: int,
+    eps: float = 1e-8,
+):
+    """TPGF fusion weight, Eq. (3) of the paper.
+
+    w_client = d_i/(d_i+d_s)
+             * inv(L_client+eps) / (inv(L_client+eps) + inv(L_server+eps))
+    """
+    depth = jnp.float32(d_i) / jnp.float32(d_i + d_s)
+    inv_c = 1.0 / (l_client + eps)
+    inv_s = 1.0 / (l_server + eps)
+    return depth * inv_c / (inv_c + inv_s)
+
+
+def tpgf_update_ref(
+    theta: jax.Array,
+    g_client: jax.Array,
+    g_server: jax.Array,
+    l_client: jax.Array,
+    l_server: jax.Array,
+    lr: jax.Array,
+    d_i: int,
+    d_s: int,
+    eps: float = 1e-8,
+) -> jax.Array:
+    """Fused TPGF encoder update, Eq. (3)-(4): theta' = theta - lr * g_fused.
+
+    ``g_client`` is assumed to be the already-clipped Phase-1 gradient (the
+    clip happens inside the ``client_local`` artifact via :func:`clip_by_l2`).
+    """
+    w_c = tpgf_client_weight(l_client, l_server, d_i, d_s, eps)
+    g = w_c * g_client + (1.0 - w_c) * g_server
+    return theta - lr * g
+
+
+def sgd_ref(theta: jax.Array, g: jax.Array, lr: jax.Array) -> jax.Array:
+    """Plain SGD step oracle (used for classifier / server-suffix updates)."""
+    return theta - lr * g
+
+
+def layernorm_ref(x: jax.Array, g: jax.Array, b: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """LayerNorm over the trailing feature dim (oracle for model tests)."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b

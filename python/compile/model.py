@@ -1,0 +1,343 @@
+"""L2: the weight-sharing super-network — a split-aware ViT in JAX.
+
+The global backbone is a Vision Transformer whose *splitting unit* is the
+transformer block: layer 1 bundles the patch embedding with block 1, layers
+2..L are blocks 2..L. A client of depth ``d`` runs layers 1..d (a contiguous
+prefix, paper §II-A); the server runs blocks d+1..L plus the final
+LayerNorm + CLS head. Each client additionally carries a lightweight local
+classifier (LayerNorm + mean-pool + linear over the smashed data) used for
+TPGF Phase 1 and for fault-tolerant fallback (paper §II-B/§II-C).
+
+Everything operates on **flat f32 parameter vectors** — the calling
+convention shared with the Rust coordinator (DESIGN.md §3). The per-layer
+segmentation of the encoder vector (needed by the Rust side for
+layer-aligned aggregation, Eq. 8) is exported via :func:`enc_layer_sizes`.
+
+All entry points are pure functions built by ``make_*`` factories; they are
+traced and AOT-lowered once by ``aot.py`` and never run in the request path.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import attention
+from .kernels.ref import clip_by_l2
+from .kernels.tpgf import tpgf_update
+
+Shape = Tuple[int, ...]
+
+_HERE = os.path.dirname(__file__)
+
+
+def load_build_config(path: str | None = None) -> Dict[str, Any]:
+    """Load the build-time model profile (shapes are static per build)."""
+    with open(path or os.path.join(_HERE, "build_config.json")) as f:
+        return json.load(f)
+
+
+# --------------------------------------------------------------------------
+# Parameter layout
+# --------------------------------------------------------------------------
+
+def tokens(cfg) -> int:
+    """Sequence length: (img/patch)² patches + 1 CLS token."""
+    n = (cfg["image_size"] // cfg["patch_size"]) ** 2
+    return n + 1
+
+
+def embed_shapes(cfg) -> List[Tuple[str, Shape]]:
+    p, c, d = cfg["patch_size"], cfg["channels"], cfg["dim"]
+    return [
+        ("wpatch", (p * p * c, d)),
+        ("bpatch", (d,)),
+        ("cls", (d,)),
+        ("pos", (tokens(cfg), d)),
+    ]
+
+
+def block_shapes(cfg) -> List[Tuple[str, Shape]]:
+    d = cfg["dim"]
+    m = cfg["mlp_ratio"] * d
+    return [
+        ("ln1_g", (d,)), ("ln1_b", (d,)),
+        ("wqkv", (d, 3 * d)), ("bqkv", (3 * d,)),
+        ("wo", (d, d)), ("bo", (d,)),
+        ("ln2_g", (d,)), ("ln2_b", (d,)),
+        ("w1", (d, m)), ("b1", (m,)),
+        ("w2", (m, d)), ("b2", (d,)),
+    ]
+
+
+def clf_client_shapes(cfg, classes: int) -> List[Tuple[str, Shape]]:
+    d = cfg["dim"]
+    return [("ln_g", (d,)), ("ln_b", (d,)), ("w", (d, classes)), ("b", (classes,))]
+
+
+def clf_server_shapes(cfg, classes: int) -> List[Tuple[str, Shape]]:
+    d = cfg["dim"]
+    return [("lnf_g", (d,)), ("lnf_b", (d,)), ("w", (d, classes)), ("b", (classes,))]
+
+
+def _size(shapes) -> int:
+    return sum(int(jnp.prod(jnp.asarray(s))) for _, s in shapes)
+
+
+def embed_size(cfg) -> int:
+    return _size(embed_shapes(cfg))
+
+
+def block_size(cfg) -> int:
+    return _size(block_shapes(cfg))
+
+
+def enc_size(cfg, depth: int) -> int:
+    """Flat size of a depth-``depth`` encoder prefix."""
+    return embed_size(cfg) + depth * block_size(cfg)
+
+
+def srv_size(cfg, depth: int) -> int:
+    """Flat size of the server suffix for client depth ``depth``."""
+    return (cfg["depth"] - depth) * block_size(cfg)
+
+
+def clf_client_size(cfg, classes: int) -> int:
+    return _size(clf_client_shapes(cfg, classes))
+
+
+def clf_server_size(cfg, classes: int) -> int:
+    return _size(clf_server_shapes(cfg, classes))
+
+
+def enc_layer_sizes(cfg) -> List[int]:
+    """Per-layer segment lengths of the full encoder flat vector.
+
+    Layer 1 = patch embedding + block 1; layers 2..L = one block each.
+    The Rust fed-server uses these offsets for layer-aligned aggregation.
+    """
+    bs = block_size(cfg)
+    return [embed_size(cfg) + bs] + [bs] * (cfg["depth"] - 1)
+
+
+def _unflatten(flat: jax.Array, shapes: List[Tuple[str, Shape]], off: int = 0):
+    """Slice a flat vector into named arrays (static offsets; jit-friendly)."""
+    out = {}
+    for name, shp in shapes:
+        n = 1
+        for s in shp:
+            n *= s
+        out[name] = flat[off:off + n].reshape(shp)
+        off += n
+    return out, off
+
+
+# --------------------------------------------------------------------------
+# Forward pieces
+# --------------------------------------------------------------------------
+
+def _layernorm(x, g, b, eps=1e-6):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def _patchify(cfg, x):
+    """[B, H, W, C] → [B, T-1, P·P·C] row-major patch extraction."""
+    b = x.shape[0]
+    hw = cfg["image_size"]
+    p = cfg["patch_size"]
+    c = cfg["channels"]
+    g = hw // p
+    x = x.reshape(b, g, p, g, p, c)
+    x = x.transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(b, g * g, p * p * c)
+
+
+def _embed(cfg, ep, x):
+    tok = _patchify(cfg, x) @ ep["wpatch"] + ep["bpatch"]
+    b = tok.shape[0]
+    cls = jnp.broadcast_to(ep["cls"], (b, 1, cfg["dim"]))
+    tok = jnp.concatenate([cls, tok], axis=1)
+    return tok + ep["pos"]
+
+
+def _block(cfg, bp, x):
+    b, t, d = x.shape
+    h = cfg["heads"]
+    hd = d // h
+    y = _layernorm(x, bp["ln1_g"], bp["ln1_b"])
+    qkv = y @ bp["wqkv"] + bp["bqkv"]                     # [B, T, 3D]
+    qkv = qkv.reshape(b, t, 3, h, hd).transpose(2, 0, 3, 1, 4)  # [3, B, H, T, hd]
+    q, k, v = (a.reshape(b * h, t, hd) for a in (qkv[0], qkv[1], qkv[2]))
+    # L1 Pallas kernel. block_bh=0 → one panel-sized grid step: under
+    # interpret=True each grid step lowers to a while-loop iteration of
+    # plain HLO, so the AOT build uses the fewest, largest steps (see
+    # kernels/attention.py docstring; real-TPU tiling analysed in
+    # DESIGN.md §Perf).
+    att = attention(q, k, v, cfg["attn_block_q"], cfg.get("attn_block_bh", 0))
+    att = att.reshape(b, h, t, hd).transpose(0, 2, 1, 3).reshape(b, t, d)
+    x = x + att @ bp["wo"] + bp["bo"]
+    y = _layernorm(x, bp["ln2_g"], bp["ln2_b"])
+    x = x + jax.nn.gelu(y @ bp["w1"] + bp["b1"]) @ bp["w2"] + bp["b2"]
+    return x
+
+
+def _apply_blocks(cfg, flat, n_blocks: int, x, off: int = 0):
+    for _ in range(n_blocks):
+        bp, off = _unflatten(flat, block_shapes(cfg), off)
+        x = _block(cfg, bp, x)
+    return x
+
+
+def client_fwd(cfg, depth: int, enc_flat, x):
+    """Layers 1..depth: patch embed + ``depth`` blocks → smashed data z."""
+    ep, off = _unflatten(enc_flat, embed_shapes(cfg))
+    z = _embed(cfg, ep, x)
+    return _apply_blocks(cfg, enc_flat, depth, z, off)
+
+
+def client_head(cfg, classes: int, clf_flat, z):
+    """Local classifier h_φᵢ: LayerNorm → mean-pool → linear (paper Eq. 5)."""
+    cp, _ = _unflatten(clf_flat, clf_client_shapes(cfg, classes))
+    h = _layernorm(z, cp["ln_g"], cp["ln_b"])
+    h = jnp.mean(h, axis=1)
+    return h @ cp["w"] + cp["b"]
+
+
+def server_apply(cfg, depth: int, srv_flat, z):
+    """Server suffix: blocks depth+1..L over the smashed data."""
+    return _apply_blocks(cfg, srv_flat, cfg["depth"] - depth, z)
+
+
+def server_head(cfg, classes: int, clf_s_flat, h):
+    """Server classifier h_φₛ: final LayerNorm → CLS token → linear."""
+    cp, _ = _unflatten(clf_s_flat, clf_server_shapes(cfg, classes))
+    h = _layernorm(h, cp["lnf_g"], cp["lnf_b"])
+    return h[:, 0, :] @ cp["w"] + cp["b"]
+
+
+def cross_entropy(logits, y):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=-1))
+
+
+# --------------------------------------------------------------------------
+# AOT entry-point factories (one artifact each; see DESIGN.md §3)
+# --------------------------------------------------------------------------
+
+def make_client_fwd(cfg, depth: int):
+    """(enc_d, x) → (z,) — plain split-learning client forward (SFL/DFL)."""
+    def fn(enc, x):
+        return (client_fwd(cfg, depth, enc, x),)
+    return fn
+
+
+def make_client_local(cfg, depth: int, classes: int):
+    """(enc_d, clf, x, y) → (z, L_client, g_enc_clipped, g_clf).
+
+    TPGF Phase 1 (Alg. 2 lines 3-7) and the entire fallback step (Alg. 3):
+    smashed data, local loss, τ-clipped encoder gradient, classifier grad.
+    """
+    tau = cfg["clip_tau"]
+
+    def fn(enc, clf, x, y):
+        def lossfn(enc_, clf_):
+            z = client_fwd(cfg, depth, enc_, x)
+            logits = client_head(cfg, classes, clf_, z)
+            return cross_entropy(logits, y), z
+
+        (loss, z), (g_enc, g_clf) = jax.value_and_grad(
+            lossfn, argnums=(0, 1), has_aux=True
+        )(enc, clf)
+        return z, loss, clip_by_l2(g_enc, tau), g_clf
+    return fn
+
+
+def make_client_bwd(cfg, depth: int):
+    """(enc_d, x, g_z) → (g_enc,) — TPGF Phase 2 client-side backprop."""
+    def fn(enc, x, g_z):
+        _, vjp = jax.vjp(lambda e: client_fwd(cfg, depth, e, x), enc)
+        (g_enc,) = vjp(g_z)
+        return (g_enc,)
+    return fn
+
+
+def make_server_step(cfg, depth: int, classes: int):
+    """(srv_d, clf_s, z, y) → (L_server, g_srv, g_clf_s, g_z).
+
+    TPGF Phase 2 server side (Alg. 2 lines 9-12): deep forward, loss,
+    gradients for the server suffix + head, and the smashed-data gradient
+    returned to the client.
+    """
+    def fn(srv, clf_s, z, y):
+        def lossfn(srv_, clf_s_, z_):
+            h = server_apply(cfg, depth, srv_, z_)
+            logits = server_head(cfg, classes, clf_s_, h)
+            return cross_entropy(logits, y)
+
+        loss, (g_srv, g_clf_s, g_z) = jax.value_and_grad(
+            lossfn, argnums=(0, 1, 2)
+        )(srv, clf_s, z)
+        return loss, g_srv, g_clf_s, g_z
+    return fn
+
+
+def make_eval(cfg, classes: int):
+    """(enc_full, clf_s, x) → (logits,) — full-model test-set forward."""
+    depth = cfg["depth"]
+
+    def fn(enc_full, clf_s, x):
+        h = client_fwd(cfg, depth, enc_full, x)
+        return (server_head(cfg, classes, clf_s, h),)
+    return fn
+
+
+def make_tpgf(cfg, depth: int):
+    """(θ, g_c, g_s, L_c, L_s, lr) → (θ',) — Phase 3 via the Pallas kernel."""
+    d_s = cfg["depth"] - depth
+
+    def fn(theta, g_c, g_s, l_c, l_s, lr):
+        return (tpgf_update(theta, g_c, g_s, l_c, l_s, lr, depth, d_s),)
+    return fn
+
+
+# --------------------------------------------------------------------------
+# Initialization (written to artifacts/*.bin for the Rust side)
+# --------------------------------------------------------------------------
+
+def _init_shapes(key, shapes: List[Tuple[str, Shape]]) -> jax.Array:
+    """LeCun-normal weights, zero biases, unit LN gains — flattened."""
+    chunks = []
+    for name, shp in shapes:
+        key, sub = jax.random.split(key)
+        if name.startswith(("ln", "lnf")) and name.endswith("_g"):
+            a = jnp.ones(shp, jnp.float32)
+        elif len(shp) == 1 and name != "cls":
+            a = jnp.zeros(shp, jnp.float32)
+        elif name == "pos" or name == "cls":
+            a = 0.02 * jax.random.normal(sub, shp, jnp.float32)
+        else:
+            fan_in = shp[0] if len(shp) > 1 else 1
+            a = jax.random.normal(sub, shp, jnp.float32) / jnp.sqrt(
+                jnp.float32(max(fan_in, 1))
+            )
+        chunks.append(a.reshape(-1))
+    return jnp.concatenate(chunks)
+
+
+def init_params(cfg, classes: int, seed: int):
+    """Initial global parameters: full encoder, server head, client head."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    shapes = list(embed_shapes(cfg))
+    for _ in range(cfg["depth"]):
+        shapes += block_shapes(cfg)
+    enc = _init_shapes(k1, shapes)
+    clf_s = _init_shapes(k2, clf_server_shapes(cfg, classes))
+    clf_c = _init_shapes(k3, clf_client_shapes(cfg, classes))
+    return enc, clf_s, clf_c

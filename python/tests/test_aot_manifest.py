@@ -1,0 +1,95 @@
+"""Build-output contract tests: manifest ↔ model geometry ↔ files on disk.
+
+These validate the interchange contract the Rust runtime depends on. They
+run against `artifacts/` produced by `make artifacts` and are skipped when
+the artifacts have not been built yet.
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import model as M
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+MANIFEST = os.path.join(ART, "manifest.json")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(MANIFEST), reason="artifacts not built (run `make artifacts`)"
+)
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    with open(MANIFEST) as f:
+        return json.load(f)
+
+
+def test_manifest_geometry_matches_model(manifest):
+    cfg = manifest["build"]
+    m = manifest["model"]
+    assert m["tokens"] == M.tokens(cfg)
+    assert m["embed_size"] == M.embed_size(cfg)
+    assert m["block_size"] == M.block_size(cfg)
+    assert m["enc_layer_sizes"] == M.enc_layer_sizes(cfg)
+    assert m["enc_full_size"] == M.enc_size(cfg, cfg["depth"])
+    assert sum(m["enc_layer_sizes"]) == m["enc_full_size"]
+
+
+def test_all_artifact_files_exist_and_parse(manifest):
+    for name, a in manifest["artifacts"].items():
+        path = os.path.join(ART, a["file"])
+        assert os.path.exists(path), name
+        head = open(path).read(200)
+        assert "HloModule" in head, f"{name} is not HLO text"
+
+
+def test_expected_artifact_set_complete(manifest):
+    cfg = manifest["build"]
+    L = cfg["depth"]
+    names = set(manifest["artifacts"])
+    for d in range(1, L):
+        for base in ("client_fwd", "client_bwd", "tpgf_update"):
+            assert f"{base}_d{d}" in names
+        for c in cfg["classes_variants"]:
+            assert f"client_local_d{d}_c{c}" in names
+            assert f"server_step_d{d}_c{c}" in names
+    for c in cfg["classes_variants"]:
+        assert f"eval_c{c}" in names
+
+
+def test_artifact_io_shapes_consistent(manifest):
+    cfg = manifest["build"]
+    for d in range(1, cfg["depth"]):
+        a = manifest["artifacts"][f"client_bwd_d{d}"]
+        enc_in = next(i for i in a["inputs"] if i["name"] == "enc")
+        g_out = next(o for o in a["outputs"] if o["name"] == "g_enc")
+        assert enc_in["shape"] == [M.enc_size(cfg, d)]
+        assert g_out["shape"] == enc_in["shape"]
+        s = manifest["artifacts"][f"server_step_d{d}_c{cfg['classes_variants'][0]}"]
+        srv_in = next(i for i in s["inputs"] if i["name"] == "srv")
+        assert srv_in["shape"] == [M.srv_size(cfg, d)]
+
+
+def test_init_blobs_match_sizes(manifest):
+    cfg = manifest["build"]
+    for c in cfg["classes_variants"]:
+        info = manifest["init"][f"init_enc_c{c}"]
+        arr = np.fromfile(os.path.join(ART, info["file"]), dtype="<f4")
+        assert arr.size == info["len"] == M.enc_size(cfg, cfg["depth"])
+        assert np.isfinite(arr).all()
+        info_s = manifest["init"][f"init_clf_s_c{c}"]
+        arr_s = np.fromfile(os.path.join(ART, info_s["file"]), dtype="<f4")
+        assert arr_s.size == M.clf_server_size(cfg, c)
+
+
+def test_init_blob_deterministic(manifest):
+    cfg = manifest["build"]
+    c = cfg["classes_variants"][0]
+    enc, _, _ = M.init_params(cfg, c, cfg["seed"])
+    on_disk = np.fromfile(
+        os.path.join(ART, manifest["init"][f"init_enc_c{c}"]["file"]), dtype="<f4"
+    )
+    np.testing.assert_allclose(np.asarray(enc), on_disk, atol=0)

@@ -1,0 +1,132 @@
+"""L1 correctness: Pallas flash-attention vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes and q-tile sizes (including non-dividing tiles that
+force padding + masking) for both the forward pass and the custom-vjp
+backward kernels.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import ref
+from compile.kernels.attention import attention
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+def test_fwd_matches_ref_basic():
+    q, k, v = (_rand(i, (4, 65, 32)) for i in range(3))
+    out = attention(q, k, v, 16)
+    assert_allclose(np.asarray(out), np.asarray(ref.attention_ref(q, k, v)),
+                    atol=2e-5, rtol=2e-5)
+
+
+def test_fwd_single_tile_covers_sequence():
+    # block_q >= T: one q-tile, pure padding-mask path.
+    q, k, v = (_rand(i, (2, 7, 8)) for i in range(3))
+    out = attention(q, k, v, 128)
+    assert_allclose(np.asarray(out), np.asarray(ref.attention_ref(q, k, v)),
+                    atol=2e-5, rtol=2e-5)
+
+
+def test_fwd_tile_exactly_divides():
+    q, k, v = (_rand(i, (2, 64, 16)) for i in range(3))
+    out = attention(q, k, v, 16)
+    assert_allclose(np.asarray(out), np.asarray(ref.attention_ref(q, k, v)),
+                    atol=2e-5, rtol=2e-5)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    bh=st.integers(1, 4),
+    t=st.integers(2, 40),
+    hd=st.sampled_from([4, 8, 16]),
+    bq=st.sampled_from([4, 8, 16, 64]),
+    seed=st.integers(0, 2**16),
+)
+def test_fwd_matches_ref_hypothesis(bh, t, hd, bq, seed):
+    key = jax.random.PRNGKey(seed)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (bh, t, hd), jnp.float32)
+    k = jax.random.normal(kk, (bh, t, hd), jnp.float32)
+    v = jax.random.normal(kv, (bh, t, hd), jnp.float32)
+    out = attention(q, k, v, bq)
+    assert_allclose(np.asarray(out), np.asarray(ref.attention_ref(q, k, v)),
+                    atol=3e-5, rtol=3e-5)
+
+
+def test_fwd_softmax_rows_weighted_average():
+    # Attention output rows lie in the convex hull of V rows: with constant
+    # V the output must be exactly that constant.
+    q, k = (_rand(i, (2, 10, 8)) for i in range(2))
+    v = jnp.ones((2, 10, 8), jnp.float32) * 3.5
+    out = attention(q, k, v, 4)
+    assert_allclose(np.asarray(out), np.full((2, 10, 8), 3.5), atol=1e-5)
+
+
+def test_bwd_matches_ref_grads():
+    q, k, v = (_rand(i + 10, (3, 33, 16)) for i in range(3))
+
+    def loss_kernel(q, k, v):
+        return jnp.sum(jnp.tanh(attention(q, k, v, 8)))
+
+    def loss_ref(q, k, v):
+        return jnp.sum(jnp.tanh(ref.attention_ref(q, k, v)))
+
+    gk = jax.grad(loss_kernel, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gk, gr):
+        assert_allclose(np.asarray(a), np.asarray(b), atol=5e-5, rtol=5e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    bh=st.integers(1, 3),
+    t=st.integers(2, 24),
+    hd=st.sampled_from([4, 8]),
+    bq=st.sampled_from([4, 8, 32]),
+    seed=st.integers(0, 2**16),
+)
+def test_bwd_matches_ref_hypothesis(bh, t, hd, bq, seed):
+    key = jax.random.PRNGKey(seed)
+    kq, kk, kv, kw = jax.random.split(key, 4)
+    q = jax.random.normal(kq, (bh, t, hd), jnp.float32)
+    k = jax.random.normal(kk, (bh, t, hd), jnp.float32)
+    v = jax.random.normal(kv, (bh, t, hd), jnp.float32)
+    w = jax.random.normal(kw, (bh, t, hd), jnp.float32)
+
+    gk = jax.grad(lambda *a: jnp.sum(attention(*a, bq) * w), argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(lambda *a: jnp.sum(ref.attention_ref(*a) * w), argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gk, gr):
+        assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4, rtol=1e-4)
+
+
+def test_bwd_zero_cotangent_gives_zero_grads():
+    q, k, v = (_rand(i, (2, 9, 4)) for i in range(3))
+    g = jax.grad(lambda *a: jnp.sum(attention(*a, 4) * 0.0), argnums=(0, 1, 2))(q, k, v)
+    for a in g:
+        assert float(jnp.max(jnp.abs(a))) == 0.0
+
+
+def test_fwd_jit_and_nojit_agree():
+    q, k, v = (_rand(i, (2, 17, 8)) for i in range(3))
+    eager = attention(q, k, v, 8)
+    jitted = jax.jit(lambda q, k, v: attention(q, k, v, 8))(q, k, v)
+    assert_allclose(np.asarray(eager), np.asarray(jitted), atol=1e-6)
+
+
+def test_fwd_rejects_scale_dependence():
+    # Doubling head_dim scaling: output must equal softmax(QK^T/sqrt(hd))V,
+    # i.e. multiplying Q by c and K by 1/c leaves the output unchanged.
+    q, k, v = (_rand(i, (1, 12, 8)) for i in range(3))
+    o1 = attention(q, k, v, 4)
+    o2 = attention(q * 2.0, k / 2.0, v, 4)
+    assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-5, rtol=2e-5)

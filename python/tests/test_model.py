@@ -1,0 +1,165 @@
+"""L2 correctness: split consistency of the super-network.
+
+The defining property of the weight-sharing super-network: for every split
+depth d, client-prefix(d) ∘ server-suffix(d) must equal the full model, and
+the gradient that flows through the split boundary (g_z) must reproduce the
+end-to-end gradient.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = M.load_build_config()
+# A slimmer profile keeps the full-depth sweep fast under pytest.
+CFG = {**CFG, "dim": 32, "heads": 2, "depth": 4, "mlp_ratio": 2,
+       "batch": 4, "eval_batch": 4, "attn_block_q": 32}
+CLASSES = 10
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, CLASSES, seed=7)
+
+
+@pytest.fixture(scope="module")
+def batch():
+    key = jax.random.PRNGKey(3)
+    kx, ky = jax.random.split(key)
+    x = jax.random.normal(kx, (CFG["batch"], CFG["image_size"],
+                               CFG["image_size"], CFG["channels"]), jnp.float32)
+    y = jax.random.randint(ky, (CFG["batch"],), 0, CLASSES)
+    return x, y
+
+
+def test_layer_sizes_partition_encoder(params):
+    enc, _, _ = params
+    assert sum(M.enc_layer_sizes(CFG)) == enc.size == M.enc_size(CFG, CFG["depth"])
+
+
+def test_enc_srv_sizes_complementary():
+    for d in range(1, CFG["depth"]):
+        assert M.enc_size(CFG, d) + M.srv_size(CFG, d) == M.enc_size(CFG, CFG["depth"])
+
+
+@pytest.mark.parametrize("d", range(1, 4))
+def test_split_forward_equals_full_forward(params, batch, d):
+    enc, clf_s, _ = params
+    x, _ = batch
+    z = M.client_fwd(CFG, d, enc[:M.enc_size(CFG, d)], x)
+    h_split = M.server_apply(CFG, d, enc[M.enc_size(CFG, d):], z)
+    h_full = M.client_fwd(CFG, CFG["depth"], enc, x)
+    assert_allclose(np.asarray(h_split), np.asarray(h_full), atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("d", [1, 2, 3])
+def test_chained_gradient_equals_end_to_end(params, batch, d):
+    """client_bwd(g_z from server_step) == d(full loss)/d(enc prefix)."""
+    enc, clf_s, _ = params
+    x, y = batch
+    ne = M.enc_size(CFG, d)
+    enc_d, srv = enc[:ne], enc[ne:]
+
+    # Chained path (what the Rust coordinator executes).
+    z = M.client_fwd(CFG, d, enc_d, x)
+    step = M.make_server_step(CFG, d, CLASSES)
+    _, _, _, g_z = step(srv, clf_s, z, y)
+    (g_enc_chained,) = M.make_client_bwd(CFG, d)(enc_d, x, g_z)
+
+    # End-to-end reference.
+    def full_loss(enc_d_):
+        z_ = M.client_fwd(CFG, d, enc_d_, x)
+        h = M.server_apply(CFG, d, srv, z_)
+        return M.cross_entropy(M.server_head(CFG, CLASSES, clf_s, h), y)
+
+    g_ref = jax.grad(full_loss)(enc_d)
+    assert_allclose(np.asarray(g_enc_chained), np.asarray(g_ref),
+                    atol=1e-5, rtol=1e-4)
+
+
+def test_client_local_clips_encoder_grad(params, batch):
+    enc, _, clf_c = params
+    x, y = batch
+    d = 2
+    fn = M.make_client_local(CFG, d, CLASSES)
+    z, loss, g_enc, g_clf = fn(enc[:M.enc_size(CFG, d)], clf_c, x, y)
+    assert z.shape == (CFG["batch"], M.tokens(CFG), CFG["dim"])
+    assert float(loss) > 0.0
+    assert float(jnp.linalg.norm(g_enc)) <= CFG["clip_tau"] + 1e-5
+    assert g_clf.shape == (M.clf_client_size(CFG, CLASSES),)
+
+
+def test_client_local_loss_matches_manual(params, batch):
+    enc, _, clf_c = params
+    x, y = batch
+    d = 1
+    fn = M.make_client_local(CFG, d, CLASSES)
+    z, loss, _, _ = fn(enc[:M.enc_size(CFG, d)], clf_c, x, y)
+    logits = M.client_head(CFG, CLASSES, clf_c, z)
+    assert_allclose(float(loss), float(M.cross_entropy(logits, y)), rtol=1e-6)
+
+
+def test_eval_matches_split_path(params, batch):
+    enc, clf_s, _ = params
+    x, _ = batch
+    (logits,) = M.make_eval(CFG, CLASSES)(enc, clf_s, x)
+    h = M.client_fwd(CFG, CFG["depth"], enc, x)
+    exp = M.server_head(CFG, CLASSES, clf_s, h)
+    assert_allclose(np.asarray(logits), np.asarray(exp), atol=1e-6)
+    assert logits.shape == (CFG["batch"], CLASSES)
+
+
+def test_init_deterministic():
+    a = M.init_params(CFG, CLASSES, seed=11)
+    b = M.init_params(CFG, CLASSES, seed=11)
+    c = M.init_params(CFG, CLASSES, seed=12)
+    for x, y in zip(a, b):
+        assert_allclose(np.asarray(x), np.asarray(y), atol=0)
+    assert float(jnp.max(jnp.abs(a[0] - c[0]))) > 0.0
+
+
+def test_init_layernorm_gains_are_one(params):
+    enc, _, _ = params
+    # First LN gain of block 1 sits right after the embed params.
+    off = M.embed_size(CFG)
+    ln1_g = enc[off:off + CFG["dim"]]
+    assert_allclose(np.asarray(ln1_g), np.ones(CFG["dim"], np.float32), atol=0)
+
+
+def test_training_reduces_local_loss(params, batch):
+    """A few Phase-1 SGD steps on one batch must reduce the local loss."""
+    enc, _, clf_c = params
+    x, y = batch
+    d = 2
+    ne = M.enc_size(CFG, d)
+    enc_d = enc[:ne]
+    fn = jax.jit(M.make_client_local(CFG, d, CLASSES))
+    lr = 0.5
+    losses = []
+    for _ in range(8):
+        _, loss, g_enc, g_clf = fn(enc_d, clf_c, x, y)
+        losses.append(float(loss))
+        enc_d = enc_d - lr * g_enc
+        clf_c = clf_c - lr * g_clf
+    assert losses[-1] < losses[0]
+
+
+def test_tpgf_artifact_fn_matches_ref(params):
+    from compile.kernels import ref as R
+    enc, _, _ = params
+    d = 2
+    ne = M.enc_size(CFG, d)
+    theta = enc[:ne]
+    key = jax.random.PRNGKey(0)
+    gc = jax.random.normal(key, (ne,), jnp.float32)
+    gs = gc[::-1]
+    lc, ls, lr = jnp.float32(0.9), jnp.float32(1.7), jnp.float32(0.05)
+    (out,) = M.make_tpgf(CFG, d)(theta, gc, gs, lc, ls, lr)
+    exp = R.tpgf_update_ref(theta, gc, gs, lc, ls, lr, d, CFG["depth"] - d)
+    assert_allclose(np.asarray(out), np.asarray(exp), atol=1e-6, rtol=1e-5)

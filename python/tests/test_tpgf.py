@@ -1,0 +1,121 @@
+"""L1 correctness: the TPGF fused-update Pallas kernel vs the oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import ref
+from compile.kernels.tpgf import tpgf_update
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _vecs(seed, n):
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    return (
+        jax.random.normal(k1, (n,), jnp.float32),
+        jax.random.normal(k2, (n,), jnp.float32),
+        jax.random.normal(k3, (n,), jnp.float32),
+    )
+
+
+def test_matches_ref_basic():
+    theta, gc, gs = _vecs(0, 10_000)
+    lc, ls, lr = jnp.float32(1.2), jnp.float32(0.7), jnp.float32(0.01)
+    out = tpgf_update(theta, gc, gs, lc, ls, lr, 3, 5, block=1024)
+    exp = ref.tpgf_update_ref(theta, gc, gs, lc, ls, lr, 3, 5)
+    assert_allclose(np.asarray(out), np.asarray(exp), atol=1e-6, rtol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(1, 5000),
+    block=st.sampled_from([64, 256, 4096]),
+    d_i=st.integers(1, 7),
+    lc=st.floats(1e-4, 10.0),
+    ls=st.floats(1e-4, 10.0),
+    lr=st.floats(1e-5, 1.0),
+    seed=st.integers(0, 2**16),
+)
+def test_matches_ref_hypothesis(n, block, d_i, lc, ls, lr, seed):
+    theta, gc, gs = _vecs(seed, n)
+    d_s = 8 - d_i
+    out = tpgf_update(theta, gc, gs, jnp.float32(lc), jnp.float32(ls),
+                      jnp.float32(lr), d_i, d_s, block=block)
+    exp = ref.tpgf_update_ref(theta, gc, gs, jnp.float32(lc), jnp.float32(ls),
+                              jnp.float32(lr), d_i, d_s)
+    assert_allclose(np.asarray(out), np.asarray(exp), atol=1e-5, rtol=1e-5)
+
+
+def test_zero_lr_is_identity():
+    theta, gc, gs = _vecs(1, 777)
+    out = tpgf_update(theta, gc, gs, jnp.float32(1.0), jnp.float32(1.0),
+                      jnp.float32(0.0), 4, 4, block=256)
+    assert_allclose(np.asarray(out), np.asarray(theta), atol=0)
+
+
+def test_equal_losses_equal_depth_is_half_mix():
+    # L_c == L_s and d_i == d_s ⇒ w_client = 0.5 · 0.5 = 0.25 (Eq. 3).
+    n = 512
+    theta = jnp.zeros((n,), jnp.float32)
+    gc = jnp.ones((n,), jnp.float32)
+    gs = jnp.zeros((n,), jnp.float32)
+    out = tpgf_update(theta, gc, gs, jnp.float32(2.0), jnp.float32(2.0),
+                      jnp.float32(1.0), 4, 4, block=256)
+    assert_allclose(np.asarray(out), np.full(n, -0.25, np.float32), atol=1e-6)
+
+
+def test_low_client_loss_shifts_weight_to_client():
+    # Lower client loss ⇒ larger w_client ⇒ update tracks g_client more.
+    n = 256
+    theta = jnp.zeros((n,), jnp.float32)
+    gc = jnp.ones((n,), jnp.float32)
+    gs = -jnp.ones((n,), jnp.float32)
+    low = tpgf_update(theta, gc, gs, jnp.float32(0.1), jnp.float32(5.0),
+                      jnp.float32(1.0), 4, 4, block=256)
+    high = tpgf_update(theta, gc, gs, jnp.float32(5.0), jnp.float32(0.1),
+                       jnp.float32(1.0), 4, 4, block=256)
+    assert float(low[0]) < float(high[0])
+
+
+def test_depth_ratio_caps_client_weight():
+    # Even with negligible client loss, w_client <= d_i/(d_i+d_s) (Eq. 3).
+    n = 128
+    theta = jnp.zeros((n,), jnp.float32)
+    gc = jnp.ones((n,), jnp.float32)
+    gs = jnp.zeros((n,), jnp.float32)
+    out = tpgf_update(theta, gc, gs, jnp.float32(1e-8), jnp.float32(100.0),
+                      jnp.float32(1.0), 1, 7, block=128)
+    # theta' = -w_c·1, and w_c → 1/8 as the loss ratio saturates.
+    assert float(out[0]) >= -(1.0 / 8.0) - 1e-5
+
+
+def test_weights_sum_to_one_property():
+    # g_c == g_s == g ⇒ fused gradient must equal g regardless of losses.
+    theta, g, _ = _vecs(2, 333)
+    for lc, ls, d_i in [(0.5, 3.0, 2), (4.0, 0.2, 6), (1.0, 1.0, 1)]:
+        out = tpgf_update(theta, g, g, jnp.float32(lc), jnp.float32(ls),
+                          jnp.float32(0.1), d_i, 8 - d_i, block=256)
+        exp = theta - 0.1 * g
+        assert_allclose(np.asarray(out), np.asarray(exp), atol=1e-6, rtol=1e-5)
+
+
+def test_clip_by_l2_property():
+    for seed in range(5):
+        (g, _, _) = _vecs(seed, 2048)
+        clipped = ref.clip_by_l2(g, 0.5)
+        assert float(jnp.linalg.norm(clipped)) <= 0.5 + 1e-5
+    small = jnp.full((16,), 1e-4, jnp.float32)
+    assert_allclose(np.asarray(ref.clip_by_l2(small, 0.5)), np.asarray(small),
+                    rtol=1e-4)
+
+
+def test_client_weight_bounds():
+    # 0 < w_client < d_i/(d_i+d_s) for all positive losses.
+    for d_i in range(1, 8):
+        for lc, ls in [(0.01, 10.0), (10.0, 0.01), (1.0, 1.0)]:
+            w = ref.tpgf_client_weight(jnp.float32(lc), jnp.float32(ls), d_i, 8 - d_i)
+            assert 0.0 < float(w) < d_i / 8.0 + 1e-6

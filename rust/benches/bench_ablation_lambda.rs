@@ -1,0 +1,50 @@
+//! Ablation bench: aggregation consistency weight λ (paper Eq. 7–8,
+//! default 0.01) — one of the design choices DESIGN.md §7 calls out.
+//!
+//! Runs SuperSFL with λ ∈ {0, 0.01, 0.1, 1.0} under degraded server
+//! availability (where fallback-trained prefixes diverge most and the
+//! consistency pull matters) and reports accuracy.
+
+use supersfl::config::ExperimentConfig;
+use supersfl::metrics::Table;
+use supersfl::orchestrator::run_experiment;
+use supersfl::runtime::Runtime;
+
+fn cfg(lambda: f64, seed: u64) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default()
+        .with_name(&format!("lam_{lambda}"))
+        .with_clients(6)
+        .with_rounds(10)
+        .with_seed(seed);
+    cfg.ssfl.lambda = lambda;
+    cfg.net.server_availability = 0.5; // stress the consistency term
+    cfg.data.train_per_class = 120;
+    cfg.train.local_steps = 2;
+    cfg.train.eval_samples = 400;
+    cfg
+}
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::load(&ExperimentConfig::default().artifacts_dir)?;
+    println!("== λ ablation (Eq. 8 consistency term) at 50% availability ==\n");
+
+    let mut table = Table::new(&["lambda", "best acc %", "final acc %"]);
+    for lambda in [0.0, 0.01, 0.1, 1.0] {
+        let mut best = 0.0;
+        let mut fin = 0.0;
+        for seed in [42u64] {
+            let m = run_experiment(&rt, &cfg(lambda, seed))?.metrics;
+            best += m.best_accuracy;
+            fin += m.final_accuracy;
+        }
+        eprintln!("  lambda {lambda}: best {best:.3}");
+        table.row(&[
+            format!("{lambda}"),
+            format!("{:.2}", best * 100.0),
+            format!("{:.2}", fin * 100.0),
+        ]);
+    }
+    println!("{}", table.render());
+    println!("paper uses λ=0.01; expect small-λ ≈ best, large λ (1.0) pins to the server copy and hurts.");
+    Ok(())
+}

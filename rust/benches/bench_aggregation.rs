@@ -1,0 +1,55 @@
+//! Perf microbench: layer-aligned aggregation throughput (Eq. 6–8).
+//!
+//! The Fed server aggregates every client prefix each round; this measures
+//! the Rust hot loop at fleet sizes 10/50/100/200 over the real model
+//! geometry. Feeds EXPERIMENTS.md §Perf.
+
+use supersfl::bench_util::{black_box, measure, report, throughput};
+use supersfl::config::ExperimentConfig;
+use supersfl::fedserver::{aggregate, ClientUpdate};
+use supersfl::runtime::Runtime;
+use supersfl::util::rng::Pcg32;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::load(&ExperimentConfig::default().artifacts_dir)?;
+    let sizes = rt.model().enc_layer_sizes.clone();
+    let total: usize = sizes.iter().sum();
+    let depth = sizes.len();
+    let mut rng = Pcg32::seeded(1);
+
+    println!(
+        "== bench_aggregation: Eq. 8 over {total} params x {depth} layers =="
+    );
+    for &n_clients in &[10usize, 50, 100, 200] {
+        // Heterogeneous depths 1..L-1, random params/losses.
+        let depths: Vec<usize> = (0..n_clients).map(|i| 1 + i % (depth - 1)).collect();
+        let params: Vec<Vec<f32>> = depths
+            .iter()
+            .map(|&d| {
+                let len: usize = sizes[..d].iter().sum();
+                (0..len).map(|_| rng.normal() as f32).collect()
+            })
+            .collect();
+        let losses: Vec<f64> = (0..n_clients).map(|_| rng.uniform_range(0.1, 3.0)).collect();
+        let mut global: Vec<f32> = (0..total).map(|_| rng.normal() as f32).collect();
+
+        let s = measure(2, 10, || {
+            let updates: Vec<ClientUpdate<'_>> = (0..n_clients)
+                .map(|i| ClientUpdate {
+                    client: i,
+                    depth: depths[i],
+                    params: &params[i],
+                    loss: losses[i],
+                })
+                .collect();
+            black_box(aggregate(&mut global, &sizes, &updates, 0.01, 1e-8));
+        });
+        report(&format!("aggregate n={n_clients}"), &s);
+        let touched: f64 = params.iter().map(|p| p.len() as f64).sum();
+        println!(
+            "    -> {:.2} Gparam/s weighted-averaged",
+            throughput(&s, touched) / 1e9
+        );
+    }
+    Ok(())
+}

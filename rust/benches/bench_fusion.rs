@@ -1,0 +1,57 @@
+//! Perf microbench + ablation: TPGF Phase-3 fused update, Rust SIMD loop
+//! vs the Pallas `tpgf_update` artifact (DESIGN.md §7 design choice).
+//!
+//! The two paths are numerically interchangeable; this bench quantifies
+//! the dispatch-overhead / fusion tradeoff that decides the default
+//! (`ssfl.fuse_via_artifact = false`). Feeds EXPERIMENTS.md §Perf.
+
+use supersfl::bench_util::{black_box, measure, report, throughput};
+use supersfl::config::{ExperimentConfig, TpgfMode};
+use supersfl::runtime::Runtime;
+use supersfl::tpgf;
+use supersfl::util::math;
+use supersfl::util::rng::Pcg32;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::load(&ExperimentConfig::default().artifacts_dir)?;
+    let mut rng = Pcg32::seeded(2);
+
+    println!("== bench_fusion: Rust loop vs Pallas artifact ==");
+    for depth in [1usize, 4, 7] {
+        let n = rt.model().enc_size(depth);
+        let theta: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let gc: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let gs: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+
+        // Correctness cross-check first.
+        let mut rust_out = theta.clone();
+        tpgf::fuse_update(&mut rust_out, &gc, &gs, 1.3, 0.7, depth, 8 - depth, 0.05, TpgfMode::Full);
+        let art_out = rt.tpgf_update(depth, &theta, &gc, &gs, 1.3, 0.7, 0.05)?;
+        let diff = math::max_abs_diff(&rust_out, &art_out);
+        assert!(diff < 1e-5, "paths diverge: {diff}");
+
+        let mut buf = theta.clone();
+        let s_rust = measure(3, 60, || {
+            buf.copy_from_slice(&theta);
+            tpgf::fuse_update(
+                &mut buf, &gc, &gs, 1.3, 0.7, depth, 8 - depth, 0.05, TpgfMode::Full,
+            );
+            black_box(&buf);
+        });
+        report(&format!("rust_loop_d{depth} ({n} params)"), &s_rust);
+
+        let s_art = measure(2, 12, || {
+            black_box(rt.tpgf_update(depth, &theta, &gc, &gs, 1.3, 0.7, 0.05).unwrap());
+        });
+        report(&format!("pallas_artifact_d{depth} ({n} params)"), &s_art);
+
+        println!(
+            "    -> rust {:.2} Gparam/s vs artifact {:.2} Gparam/s (x{:.1} dispatch overhead)",
+            throughput(&s_rust, n as f64) / 1e9,
+            throughput(&s_art, n as f64) / 1e9,
+            s_art.mean_s / s_rust.mean_s
+        );
+    }
+    println!("(max |Δ| between paths < 1e-5 asserted above)");
+    Ok(())
+}

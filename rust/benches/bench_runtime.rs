@@ -1,0 +1,77 @@
+//! Perf microbench: PJRT dispatch cost per protocol op (L3 hot path).
+//!
+//! Measures each artifact call the coordinator makes per client step —
+//! client_local / server_step / client_bwd / tpgf_update / eval — plus the
+//! literal-marshalling overhead split reported by RuntimeStats. Feeds
+//! EXPERIMENTS.md §Perf.
+
+use supersfl::bench_util::{black_box, measure, report, throughput};
+use supersfl::config::ExperimentConfig;
+use supersfl::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::load(&ExperimentConfig::default().artifacts_dir)?;
+    let m = rt.model().clone();
+    let enc = rt.manifest.load_init("init_enc_c10")?;
+    let clf_c = rt.manifest.load_init("init_clf_client_c10")?;
+    let clf_s = rt.manifest.load_init("init_clf_s_c10")?;
+    let x = vec![0.1f32; m.batch * m.image_elems()];
+    let xe = vec![0.1f32; m.eval_batch * m.image_elems()];
+    let y: Vec<i32> = (0..m.batch as i32).map(|i| i % 10).collect();
+
+    println!("== bench_runtime: per-op dispatch cost (batch {}) ==", m.batch);
+    for depth in [1usize, 4, 7] {
+        let ne = m.enc_size(depth);
+        let enc_d = &enc[..ne];
+        let srv = &enc[ne..];
+
+        let s = measure(2, 8, || {
+            black_box(rt.client_local(depth, 10, enc_d, &clf_c, &x, &y).unwrap());
+        });
+        report(&format!("client_local_d{depth}"), &s);
+        println!(
+            "    -> {:.0} samples/s",
+            throughput(&s, m.batch as f64)
+        );
+
+        let local = rt.client_local(depth, 10, enc_d, &clf_c, &x, &y)?;
+        let s = measure(2, 8, || {
+            black_box(
+                rt.server_step(depth, 10, srv, &clf_s, &local.z, &y)
+                    .unwrap(),
+            );
+        });
+        report(&format!("server_step_d{depth}"), &s);
+
+        let srv_out = rt.server_step(depth, 10, srv, &clf_s, &local.z, &y)?;
+        let s = measure(2, 8, || {
+            black_box(rt.client_bwd(depth, enc_d, &x, &srv_out.g_z).unwrap());
+        });
+        report(&format!("client_bwd_d{depth}"), &s);
+
+        let s = measure(2, 8, || {
+            black_box(
+                rt.tpgf_update(depth, enc_d, &local.g_enc, &local.g_enc, 1.0, 1.0, 0.05)
+                    .unwrap(),
+            );
+        });
+        report(&format!("tpgf_update_d{depth} (artifact)"), &s);
+    }
+
+    let s = measure(2, 6, || {
+        black_box(rt.eval_batch(10, &enc, &clf_s, &xe).unwrap());
+    });
+    report(&format!("eval_batch (B={})", m.eval_batch), &s);
+
+    let st = rt.stats();
+    println!(
+        "\nruntime stats: {} executions | exec {:.3}s | marshal {:.3}s ({:.1}% of exec) | {} compiles {:.2}s",
+        st.executions,
+        st.exec_time_s,
+        st.marshal_time_s,
+        100.0 * st.marshal_time_s / st.exec_time_s.max(1e-9),
+        st.compile_count,
+        st.compile_time_s
+    );
+    Ok(())
+}

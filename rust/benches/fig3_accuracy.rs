@@ -1,0 +1,77 @@
+//! Regenerates **Fig. 3a/3b**: accuracy-vs-round curves on the
+//! CIFAR-100-like task with the 50- and 100-client fleets (scaled), for
+//! SSFL / DFL / SFL. Emits the series as CSV (results/fig3_*.csv) and an
+//! ASCII sparkline summary; the shape claim is SSFL above DFL above SFL
+//! at every round horizon.
+
+use supersfl::bench_util::scenarios::{cell_config, GridCell, Scale};
+use supersfl::config::{ExperimentConfig, Method};
+use supersfl::orchestrator::run_experiment;
+use supersfl::runtime::Runtime;
+
+fn spark(series: &[f64]) -> String {
+    let glyphs = [' ', '▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    series
+        .iter()
+        .map(|&a| glyphs[((a * 8.0).round() as usize).min(8)])
+        .collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::load(&ExperimentConfig::default().artifacts_dir)?;
+    let scale = Scale::from_env();
+    std::fs::create_dir_all("results")?;
+
+    for (fig, paper_clients) in [("fig3a", 50usize), ("fig3b", 100)] {
+        println!("== {fig}: C100-like accuracy curves, paper fleet {paper_clients} ==");
+        let cell = GridCell {
+            classes: 100,
+            paper_clients,
+            target: 1.0, // never early-stop: we want full curves
+            paper_target_pct: 0.0,
+        };
+        let mut csv = String::from("round,sfl,dfl,ssfl\n");
+        let mut curves: Vec<Vec<f64>> = Vec::new();
+        for method in [Method::Sfl, Method::Dfl, Method::SuperSfl] {
+            let mut cfg = cell_config(&scale, &cell, method, 42);
+            cfg.train.target_accuracy = None;
+            cfg.train.rounds = scale.rounds_cap.min(12);
+            let m = run_experiment(&rt, &cfg)?.metrics;
+            let series: Vec<f64> = m.rounds.iter().map(|r| r.accuracy).collect();
+            println!(
+                "  {:<4} final {:.3}  |{}|",
+                method.as_str(),
+                series.last().copied().unwrap_or(0.0),
+                spark(&series)
+            );
+            curves.push(series);
+        }
+        let rounds = curves.iter().map(|c| c.len()).max().unwrap_or(0);
+        for r in 0..rounds {
+            let g = |i: usize| {
+                curves[i]
+                    .get(r)
+                    .map(|a| format!("{a:.4}"))
+                    .unwrap_or_default()
+            };
+            csv.push_str(&format!("{},{},{},{}\n", r + 1, g(0), g(1), g(2)));
+        }
+        let path = format!("results/{fig}_accuracy.csv");
+        std::fs::write(&path, csv)?;
+        println!("  series written to {path}");
+
+        // Shape check at mid-training: SSFL should lead.
+        let mid = rounds / 2;
+        if mid > 0 {
+            let at = |i: usize| curves[i].get(mid).copied().unwrap_or(0.0);
+            println!(
+                "  at round {}: SFL {:.3}, DFL {:.3}, SSFL {:.3} (paper shape: SSFL > DFL > SFL)\n",
+                mid + 1,
+                at(0),
+                at(1),
+                at(2)
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,59 @@
+//! Regenerates **Fig. 4**: communication- and training-time speed-up of
+//! SSFL over SFL and DFL across the evaluation grid (bars in the paper;
+//! ASCII bars + a table here). Speed-up = baseline metric / SSFL metric
+//! at the same target accuracy.
+
+use supersfl::bench_util::scenarios::{
+    efficiency_grid, efficiency_numbers, paper_table1, run_cell, Scale,
+};
+use supersfl::config::{ExperimentConfig, Method};
+use supersfl::metrics::Table;
+use supersfl::runtime::Runtime;
+
+fn bar(x: f64, unit: f64) -> String {
+    let n = ((x / unit).round() as usize).clamp(1, 60);
+    "#".repeat(n)
+}
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::load(&ExperimentConfig::default().artifacts_dir)?;
+    let scale = Scale::from_env();
+    println!("== Fig. 4: SSFL speed-up over SFL / DFL ==\n");
+
+    let mut table = Table::new(&[
+        "setting",
+        "comm ×(SFL/SSFL)",
+        "comm ×(DFL/SSFL)",
+        "time ×(SFL/SSFL)",
+        "time ×(DFL/SSFL)",
+        "paper comm ×SFL",
+        "paper time ×SFL",
+    ]);
+
+    for cell in efficiency_grid().into_iter().filter(|c| c.classes == 10) {
+        let sfl = efficiency_numbers(&run_cell(&rt, &scale, &cell, Method::Sfl, 42)?);
+        let dfl = efficiency_numbers(&run_cell(&rt, &scale, &cell, Method::Dfl, 42)?);
+        let ssfl = efficiency_numbers(&run_cell(&rt, &scale, &cell, Method::SuperSfl, 42)?);
+        let paper = paper_table1(cell.classes, cell.paper_clients);
+        let p_comm = paper[0].1 / paper[2].1;
+        let p_time = paper[0].2 / paper[2].2;
+        let label = format!("C{} n{}", cell.classes, cell.paper_clients);
+        let c_sfl = sfl.1 / ssfl.1.max(1e-9);
+        let c_dfl = dfl.1 / ssfl.1.max(1e-9);
+        let t_sfl = sfl.2 / ssfl.2.max(1e-9);
+        let t_dfl = dfl.2 / ssfl.2.max(1e-9);
+        eprintln!("  {label} comm x{c_sfl:.1} |{}|", bar(c_sfl, 0.5));
+        table.row(&[
+            label,
+            format!("{c_sfl:.1}"),
+            format!("{c_dfl:.1}"),
+            format!("{t_sfl:.1}"),
+            format!("{t_dfl:.1}"),
+            format!("{p_comm:.1}"),
+            format!("{p_time:.1}"),
+        ]);
+    }
+    println!("{}", table.render());
+    println!("shape: every speed-up factor > 1; largest gains at 100 clients (paper: up to 20× comm, 13× time).");
+    Ok(())
+}

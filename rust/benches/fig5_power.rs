@@ -1,0 +1,44 @@
+//! Regenerates **Fig. 5**: power-per-accuracy (W/%) and carbon footprint
+//! bars per method and dataset. Derived from the same runs as Table II
+//! but rendered as the figure's two bar groups.
+
+use supersfl::bench_util::scenarios::{cell_config, efficiency_grid, paper_table2, Scale};
+use supersfl::config::{ExperimentConfig, Method};
+use supersfl::orchestrator::run_experiment;
+use supersfl::runtime::Runtime;
+
+fn bar(x: f64, unit: f64) -> String {
+    "#".repeat(((x / unit).round() as usize).clamp(1, 50))
+}
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::load(&ExperimentConfig::default().artifacts_dir)?;
+    let scale = Scale::from_env();
+    println!("== Fig. 5: consumption-per-accuracy and carbon footprint ==\n");
+
+    for cell in efficiency_grid().into_iter().filter(|c| c.classes == 10) {
+        let paper = paper_table2(cell.classes, cell.paper_clients);
+        println!("-- C{} ({} clients) --", cell.classes, cell.paper_clients);
+        for (mi, method) in [Method::Sfl, Method::Dfl, Method::SuperSfl]
+            .into_iter()
+            .enumerate()
+        {
+            let mut cfg = cell_config(&scale, &cell, method, 42);
+            cfg.train.target_accuracy = None;
+            cfg.train.rounds = scale.rounds_cap.min(10);
+            let m = run_experiment(&rt, &cfg)?.metrics;
+            println!(
+                "  {:<4} W/%: {:>7.2} |{:<30}| CO2 g: {:>8.1} |{:<20}| (paper W/% {:.2})",
+                method.as_str().to_uppercase(),
+                m.power_per_acc,
+                bar(m.power_per_acc, 0.05),
+                m.co2_g,
+                bar(m.co2_g, 0.5),
+                paper[mi].2
+            );
+        }
+        println!();
+    }
+    println!("shape: SSFL best (lowest) W/% on the 10-class task; SFL worst everywhere.");
+    Ok(())
+}

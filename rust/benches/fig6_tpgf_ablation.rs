@@ -1,0 +1,61 @@
+//! Regenerates **Fig. 6**: the TPGF fusion-rule ablation on the
+//! CIFAR-10-like task — full rule vs no-loss-term vs no-depth-term vs
+//! naïve equal fusion (paper §IV). Expected ordering:
+//! full > no_loss > no_depth > equal.
+
+use supersfl::bench_util::scenarios::paper_fig6;
+use supersfl::config::{ExperimentConfig, TpgfMode};
+use supersfl::metrics::Table;
+use supersfl::orchestrator::run_experiment;
+use supersfl::runtime::Runtime;
+
+fn cfg(mode: TpgfMode) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default()
+        .with_name(&format!("fig6_{}", mode.as_str()))
+        .with_clients(8)
+        .with_rounds(12)
+        .with_seed(42);
+    cfg.ssfl.tpgf_mode = mode;
+    cfg.data.train_per_class = 100;
+    cfg.train.local_steps = 2;
+    cfg.train.eval_samples = 400;
+    cfg
+}
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::load(&ExperimentConfig::default().artifacts_dir)?;
+    println!("== Fig. 6: TPGF fusion-rule ablation ==\n");
+
+    let mut table = Table::new(&["fusion rule", "best acc %", "final acc %", "paper acc %"]);
+    let mut results = Vec::new();
+    for (mode, (paper_name, paper_acc)) in [
+        TpgfMode::Full,
+        TpgfMode::NoLoss,
+        TpgfMode::NoDepth,
+        TpgfMode::Equal,
+    ]
+    .into_iter()
+    .zip(paper_fig6())
+    {
+        let m = run_experiment(&rt, &cfg(mode))?.metrics;
+        eprintln!("  {}: best {:.3}", mode.as_str(), m.best_accuracy);
+        assert_eq!(mode.as_str(), paper_name);
+        results.push((mode, m.best_accuracy));
+        table.row(&[
+            mode.as_str().into(),
+            format!("{:.2}", m.best_accuracy * 100.0),
+            format!("{:.2}", m.final_accuracy * 100.0),
+            format!("{paper_acc:.2}"),
+        ]);
+    }
+    println!("{}", table.render());
+    println!(
+        "paper ordering: full > no_loss > no_depth > equal; ours: {}",
+        results
+            .iter()
+            .map(|(m, a)| format!("{} {:.3}", m.as_str(), a))
+            .collect::<Vec<_>>()
+            .join(" | ")
+    );
+    Ok(())
+}

@@ -1,0 +1,88 @@
+//! Regenerates **Table I**: rounds / communication cost / training time to
+//! a fixed target accuracy, for SFL vs DFL vs SSFL over the
+//! {CIFAR-10-like, CIFAR-100-like} × {50, 100}-client grid (scaled fleet
+//! by default; `SUPERSFL_FULL=1` for paper-scale).
+//!
+//! The reproduction claim is the *shape*: SSFL reaches the target in the
+//! fewest rounds, with the least communication and the shortest simulated
+//! training time, and the gaps widen with client count / task difficulty.
+
+use supersfl::bench_util::scenarios::{
+    efficiency_grid, efficiency_numbers, paper_table1, run_cell, Scale,
+};
+use supersfl::config::{ExperimentConfig, Method};
+use supersfl::metrics::Table;
+use supersfl::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::load(&ExperimentConfig::default().artifacts_dir)?;
+    let scale = Scale::from_env();
+    println!(
+        "== Table I: rounds / comm / time to target (scaled fleet: {}→50, {}→100) ==\n",
+        scale.clients_small, scale.clients_large
+    );
+
+    let mut table = Table::new(&[
+        "dataset", "clients", "metric", "SFL", "DFL", "SSFL", "paper SFL", "paper DFL",
+        "paper SSFL",
+    ]);
+
+    for cell in efficiency_grid() {
+        let mut ours = Vec::new();
+        for method in [Method::Sfl, Method::Dfl, Method::SuperSfl] {
+            let m = run_cell(&rt, &scale, &cell, method, 42)?;
+            let nums = efficiency_numbers(&m);
+            eprintln!(
+                "  ran c{} n{} {}: rounds {} comm {:.0} MB time {:.0} s (best acc {:.3})",
+                cell.classes,
+                cell.paper_clients,
+                method.as_str(),
+                nums.0,
+                nums.1,
+                nums.2,
+                m.best_accuracy
+            );
+            ours.push(nums);
+        }
+        let paper = paper_table1(cell.classes, cell.paper_clients);
+        let ds = format!("C{}", cell.classes);
+        let cl = cell.paper_clients.to_string();
+        table.row(&[
+            ds.clone(),
+            cl.clone(),
+            format!("rounds→{:.0}%", cell.target * 100.0),
+            ours[0].0.to_string(),
+            ours[1].0.to_string(),
+            ours[2].0.to_string(),
+            paper[0].0.to_string(),
+            paper[1].0.to_string(),
+            paper[2].0.to_string(),
+        ]);
+        table.row(&[
+            ds.clone(),
+            cl.clone(),
+            "comm (MB)".into(),
+            format!("{:.0}", ours[0].1),
+            format!("{:.0}", ours[1].1),
+            format!("{:.0}", ours[2].1),
+            format!("{:.0}", paper[0].1),
+            format!("{:.0}", paper[1].1),
+            format!("{:.0}", paper[2].1),
+        ]);
+        table.row(&[
+            ds,
+            cl,
+            "time (s)".into(),
+            format!("{:.0}", ours[0].2),
+            format!("{:.0}", ours[1].2),
+            format!("{:.0}", ours[2].2),
+            format!("{:.0}", paper[0].2),
+            format!("{:.0}", paper[1].2),
+            format!("{:.0}", paper[2].2),
+        ]);
+    }
+
+    println!("{}", table.render());
+    println!("shape checks: SSFL rounds <= DFL <= SFL; SSFL comm lowest; SSFL time lowest.");
+    Ok(())
+}

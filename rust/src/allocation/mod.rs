@@ -1,0 +1,195 @@
+//! Resource-aware subnetwork allocation (paper §II-A, Eq. 1, Alg. 1).
+//!
+//! Given each client's one-shot resource report `C_i = (m_i, lat_i)`, the
+//! allocator assigns a contiguous-prefix depth
+//!
+//! ```text
+//! d_i = min( ⌊α·m_i⌋ + ⌊β·(lat_max − lat_i)/(lat_max − lat_min + ε)⌋, L−1 ),
+//! d_i ≥ 1
+//! ```
+//!
+//! with α = 0.5 layers/GB and β = 4 by default (the paper treats these as
+//! interpretable resource-scaling heuristics, not tuned hyperparameters).
+//! `lat_min`/`lat_max` are the extremes *observed during initialization*,
+//! exactly as in Alg. 1.
+
+use crate::config::AllocConfig;
+use crate::network::DeviceProfile;
+
+/// The allocation decision for one client.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Assignment {
+    pub client: usize,
+    /// Encoder depth d_i ∈ [1, L-1] (number of prefix layers).
+    pub depth: usize,
+}
+
+/// Allocate depths for the whole fleet (Eq. 1 applied per client).
+pub fn allocate(
+    profiles: &[DeviceProfile],
+    cfg: &AllocConfig,
+    total_layers: usize,
+) -> Vec<Assignment> {
+    assert!(total_layers >= 2, "need at least one client + one server layer");
+    let lat_min = profiles
+        .iter()
+        .map(|p| p.latency_s)
+        .fold(f64::INFINITY, f64::min);
+    let lat_max = profiles
+        .iter()
+        .map(|p| p.latency_s)
+        .fold(f64::NEG_INFINITY, f64::max);
+
+    profiles
+        .iter()
+        .map(|p| Assignment {
+            client: p.id,
+            depth: depth_for(p.mem_gb, p.latency_s, lat_min, lat_max, cfg, total_layers),
+        })
+        .collect()
+}
+
+/// Eq. 1 for a single client given the observed latency extremes.
+pub fn depth_for(
+    mem_gb: f64,
+    latency_s: f64,
+    lat_min: f64,
+    lat_max: f64,
+    cfg: &AllocConfig,
+    total_layers: usize,
+) -> usize {
+    let mem_term = (cfg.alpha * mem_gb).floor();
+    let norm = (lat_max - latency_s) / (lat_max - lat_min + cfg.eps);
+    let lat_term = (cfg.beta * norm).floor();
+    let d = (mem_term + lat_term).min((total_layers - 1) as f64);
+    (d.max(1.0)) as usize
+}
+
+/// Histogram of assigned depths (diagnostics / tests).
+pub fn depth_histogram(assignments: &[Assignment], total_layers: usize) -> Vec<usize> {
+    let mut h = vec![0usize; total_layers];
+    for a in assignments {
+        h[a.depth] += 1;
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{EnergyConfig, FleetConfig};
+    use crate::network::sample_fleet;
+    use crate::util::prop::forall;
+    use crate::util::rng::Pcg32;
+
+    fn profile(id: usize, mem: f64, lat_ms: f64) -> DeviceProfile {
+        DeviceProfile {
+            id,
+            mem_gb: mem,
+            latency_s: lat_ms / 1e3,
+            flops: 1e10,
+            uplink_bps: 1e6,
+            downlink_bps: 1e6,
+            active_w: 10.0,
+            idle_w: 1.0,
+            tx_w: 2.0,
+        }
+    }
+
+    #[test]
+    fn paper_equation_worked_example() {
+        // α=0.5, β=4. Client A: 16 GB, lat = lat_min → d = ⌊8⌋+⌊4⌋ = 12 → cap L-1.
+        // Client B: 2 GB, lat = lat_max → d = ⌊1⌋+⌊0⌋ = 1.
+        let profiles = vec![profile(0, 16.0, 20.0), profile(1, 2.0, 200.0)];
+        let a = allocate(&profiles, &AllocConfig::default(), 8);
+        assert_eq!(a[0].depth, 7); // capped at L-1
+        assert_eq!(a[1].depth, 1);
+    }
+
+    #[test]
+    fn bounds_one_to_l_minus_one() {
+        forall(1, 30, |rng| {
+            let fleet_cfg = FleetConfig {
+                clients: 20,
+                ..FleetConfig::default()
+            };
+            let profiles = sample_fleet(&fleet_cfg, &EnergyConfig::default(), rng);
+            let a = allocate(&profiles, &AllocConfig::default(), 8);
+            for x in &a {
+                assert!((1..=7).contains(&x.depth), "depth {}", x.depth);
+            }
+        });
+    }
+
+    #[test]
+    fn monotone_in_memory() {
+        // More memory (same latency) never yields a shallower model.
+        let cfg = AllocConfig::default();
+        let mut prev = 0;
+        for mem in [2.0, 4.0, 8.0, 12.0, 16.0] {
+            let d = depth_for(mem, 0.1, 0.02, 0.2, &cfg, 16);
+            assert!(d >= prev);
+            prev = d;
+        }
+    }
+
+    #[test]
+    fn monotone_in_latency() {
+        // Lower latency (same memory) never yields a shallower model.
+        let cfg = AllocConfig::default();
+        let mut prev = usize::MAX;
+        for lat in [0.02, 0.05, 0.1, 0.15, 0.2] {
+            let d = depth_for(8.0, lat, 0.02, 0.2, &cfg, 16);
+            assert!(d <= prev, "lat {lat} depth {d} prev {prev}");
+            prev = d;
+        }
+    }
+
+    #[test]
+    fn lowest_latency_client_gets_full_latency_score() {
+        let cfg = AllocConfig::default();
+        // lat == lat_min → normalized score = (Δ)/(Δ+ε) ≈ 1⁻, so the floor
+        // yields ⌊β·(1−ε′)⌋ = β−1 extra layers over the slowest client —
+        // an artifact of Eq. 1's ε guard interacting with the floor.
+        let fast = depth_for(2.0, 0.02, 0.02, 0.2, &cfg, 16);
+        let slow = depth_for(2.0, 0.2, 0.02, 0.2, &cfg, 16);
+        assert_eq!(fast - slow, cfg.beta as usize - 1);
+    }
+
+    #[test]
+    fn homogeneous_latency_does_not_blow_up() {
+        // lat_max == lat_min: ε guards the division; score term ≈ 0 ⇒
+        // allocation driven by memory alone.
+        let profiles = vec![profile(0, 8.0, 100.0), profile(1, 8.0, 100.0)];
+        let a = allocate(&profiles, &AllocConfig::default(), 8);
+        assert_eq!(a[0].depth, a[1].depth);
+        assert!(a[0].depth >= 1);
+    }
+
+    #[test]
+    fn histogram_counts_all() {
+        let profiles: Vec<_> = (0..10).map(|i| profile(i, 4.0, 50.0)).collect();
+        let a = allocate(&profiles, &AllocConfig::default(), 8);
+        let h = depth_histogram(&a, 8);
+        assert_eq!(h.iter().sum::<usize>(), 10);
+    }
+
+    #[test]
+    fn heterogeneous_fleet_spreads_depths() {
+        // With the paper's U[2,16] GB × U[20,200] ms fleet, the allocator
+        // must produce at least 3 distinct depths (the whole point of the
+        // super-network).
+        let fleet_cfg = FleetConfig {
+            clients: 50,
+            ..FleetConfig::default()
+        };
+        let profiles = sample_fleet(
+            &fleet_cfg,
+            &EnergyConfig::default(),
+            &mut Pcg32::seeded(7),
+        );
+        let a = allocate(&profiles, &AllocConfig::default(), 8);
+        let distinct = depth_histogram(&a, 8).iter().filter(|&&c| c > 0).count();
+        assert!(distinct >= 3, "only {distinct} distinct depths");
+    }
+}

@@ -1,0 +1,221 @@
+//! Dynamic Federated Split Learning (DFL) baseline — Samikwa et al.,
+//! IEEE IoT-J 2024, as characterized by the SuperSFL paper (§I/§III:
+//! "requires frequent coordination across decentralized replicas").
+//!
+//! * Split points are **resource-aware per client** and **dynamic**:
+//!   client resources fluctuate round to round (`fleet.resource_jitter`),
+//!   DFL re-profiles every round and moves each client's split point —
+//!   re-provisioning the full backbone to each client. SuperSFL profiles
+//!   once (§II-A: "eliminates the need for client profiling during
+//!   training").
+//! * The server side is **decentralized**: `dfl_replicas` server replicas
+//!   each hold a full backbone copy and serve a subset of clients. Between
+//!   syncs each replica's deep layers train only on its own clients'
+//!   non-IID shards, so replicas drift and the per-round averaging loses
+//!   progress — the fragmentation cost SuperSFL's single centrally-hosted
+//!   super-network avoids (SFL is the extreme: one copy per client).
+//!   Replica coordination ships every replica's backbone both ways each
+//!   round (the "frequent coordination" communication term).
+//! * No auxiliary classifier and no fault tolerance: clients learn from
+//!   server gradients only and **stall** when the server is unreachable.
+
+use crate::allocation;
+use crate::energy::PowerState;
+use crate::fedserver;
+use crate::network::DeviceProfile;
+use crate::orchestrator::Harness;
+use crate::runtime::Runtime;
+use crate::util::math;
+use crate::util::rng::Pcg32;
+use crate::Result;
+
+/// One round of observed (jittered) resources, per client.
+fn jittered_profiles(
+    base: &[DeviceProfile],
+    jitter: f64,
+    rng: &mut Pcg32,
+) -> Vec<DeviceProfile> {
+    base.iter()
+        .map(|p| {
+            let mut q = p.clone();
+            q.mem_gb = (p.mem_gb * (1.0 + jitter * (rng.uniform() * 2.0 - 1.0))).max(0.5);
+            q.latency_s =
+                (p.latency_s * (1.0 + jitter * (rng.uniform() * 2.0 - 1.0))).max(1e-3);
+            q
+        })
+        .collect()
+}
+
+pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
+    let classes = h.cfg.data.classes;
+    let dim = rt.model().dim;
+    let local_steps = h.cfg.train.local_steps;
+    let n = h.clients.len();
+    let full_bytes = (h.server.enc.len() * 4) as u64;
+    let total_layers = rt.model().depth;
+    let lr_server = h.cfg.train.lr_server as f32;
+    let mut profile_rng = Pcg32::new(h.cfg.train.seed, 0xDF1);
+
+    // Decentralized server replicas: full backbone + classifier each.
+    let r = h.cfg.dfl_replicas.clamp(1, n.max(1));
+    let mut rep_enc: Vec<Vec<f32>> = vec![h.server.enc.clone(); r];
+    let mut rep_clf: Vec<Vec<f32>> = vec![h.server.clf_s.clone(); r];
+    let replica_of = |client: usize| client % r;
+
+    for round in 1..=h.cfg.train.rounds {
+        h.net.begin_round();
+
+        // ---- Dynamic re-profiling: resources moved, so do the splits ----
+        // (round 1 keeps the initial allocation; re-profiling starts once
+        // training is underway, as in the DFL protocol.)
+        if round > 1 && h.cfg.fleet.resource_jitter > 0.0 {
+            let observed =
+                jittered_profiles(&h.profiles, h.cfg.fleet.resource_jitter, &mut profile_rng);
+            let new_assign = allocation::allocate(&observed, &h.cfg.alloc, total_layers);
+            for ci in 0..n {
+                let new_depth = new_assign[ci].depth;
+                if new_depth != h.clients[ci].depth {
+                    // Split moved: the client takes over a different
+                    // prefix of the (just-provisioned) global backbone.
+                    let len: usize = h.server.layer_sizes()[..new_depth].iter().sum();
+                    h.clients[ci].depth = new_depth;
+                    h.clients[ci].enc = h.server.enc[..len].to_vec();
+                }
+            }
+        }
+
+        let mut busy = vec![0.0f64; n];
+        let mut branch = vec![0.0f64; n];
+        let mut stalled = 0usize;
+        let mut server_steps = 0usize;
+
+        for ci in 0..n {
+            h.clients[ci].begin_round();
+            let depth = h.clients[ci].depth;
+            let profile = h.profiles[ci].clone();
+            let smashed = h.cost.smashed_bytes(dim);
+            let srv_time = h.server_step_time(depth);
+            let rep = replica_of(ci);
+            let cut = h.server.prefix_len(depth);
+
+            for _ in 0..local_steps {
+                let batch = h.clients[ci].shard.next_batch(&h.train, rt.model().batch);
+
+                let z = rt.client_fwd(depth, &h.clients[ci].enc, &batch.x)?;
+                let t_fwd = h.cost.time_s(h.cost.client_fwd_flops(depth), profile.flops);
+                h.meter.client(&profile, PowerState::Compute, t_fwd);
+                branch[ci] += t_fwd;
+                busy[ci] += t_fwd;
+
+                let ex = h.net.exchange(ci, smashed, smashed, srv_time);
+                branch[ci] += ex.time_s();
+                let tx = (ex.time_s() - srv_time).max(0.0);
+                h.meter.client(&profile, PowerState::Transmit, tx);
+                busy[ci] += tx;
+
+                if ex.is_ok() {
+                    h.meter.server_busy(srv_time);
+                    let out = rt.server_step(
+                        depth,
+                        classes,
+                        &rep_enc[rep][cut..],
+                        &rep_clf[rep],
+                        &z,
+                        &batch.y,
+                    )?;
+                    math::sgd_step(&mut rep_enc[rep][cut..], &out.g_srv, lr_server);
+                    math::sgd_step(&mut rep_clf[rep], &out.g_clf_s, lr_server);
+                    h.clients[ci].round_server_loss.push(out.loss as f64);
+
+                    let g_enc = rt.client_bwd(depth, &h.clients[ci].enc, &batch.x, &out.g_z)?;
+                    let lr = h.clients[ci].lr;
+                    math::sgd_step(&mut h.clients[ci].enc, &g_enc, lr);
+                    let t_bwd = h.cost.time_s(h.cost.client_bwd_flops(depth), profile.flops);
+                    h.meter.client(&profile, PowerState::Compute, t_bwd);
+                    branch[ci] += t_bwd;
+                    busy[ci] += t_bwd;
+                    server_steps += 1;
+                } else {
+                    // Server-dependent: no local supervision, step lost.
+                    stalled += 1;
+                }
+            }
+        }
+
+        let round_dt = h.clock.advance_parallel(&branch);
+
+        // ---- Replica coordination: ship every replica both ways and
+        // average (the "frequent coordination" term), then layer-align
+        // with the client prefixes. ----
+        let clf_len = h.server.clf_s.len();
+        let fed_t = h
+            .net
+            .fed_link((full_bytes + (clf_len * 4) as u64) * r as u64 * 2);
+        h.clock.advance(fed_t);
+        let mut enc_avg = vec![0.0f32; h.server.enc.len()];
+        let mut clf_avg = vec![0.0f32; clf_len];
+        for rep in 0..r {
+            math::axpy(&mut enc_avg, &rep_enc[rep], 1.0 / r as f32);
+            math::axpy(&mut clf_avg, &rep_clf[rep], 1.0 / r as f32);
+        }
+
+        // ---- Layer-aligned FedAvg of client prefixes (sample weights)
+        // on top of the replica average. ----
+        let mut agg_branch = vec![0.0f64; n];
+        for ci in 0..n {
+            agg_branch[ci] = h.net.bulk_up(ci, (h.clients[ci].enc.len() * 4) as u64);
+        }
+        let agg_dt = h.clock.advance_parallel(&agg_branch);
+        for (i, &t) in agg_branch.iter().enumerate() {
+            let p = h.profiles[i].clone();
+            h.meter.client(&p, PowerState::Transmit, t);
+            h.meter.client(&p, PowerState::Idle, (agg_dt - t).max(0.0));
+        }
+        let total_samples: f64 = h.clients.iter().map(|c| c.shard.len() as f64).sum();
+        {
+            let items: Vec<(usize, &[f32], f64)> = h
+                .clients
+                .iter()
+                .map(|c| {
+                    (
+                        c.depth,
+                        c.enc.as_slice(),
+                        c.shard.len() as f64 / total_samples.max(1.0),
+                    )
+                })
+                .collect();
+            let sizes = h.server.layer_sizes().to_vec();
+            // λ = 1 against the replica average: layers trained by both
+            // clients and replicas blend 50/50 (Σw_i = 1 for FedAvg
+            // weights); client-only layers follow the clients, server-only
+            // layers keep the replica average.
+            h.server.enc.copy_from_slice(&enc_avg);
+            fedserver::aggregate_weighted(&mut h.server.enc, &sizes, &items, 1.0);
+        }
+        h.server.clf_s.copy_from_slice(&clf_avg);
+        for rep in 0..r {
+            rep_enc[rep].copy_from_slice(&h.server.enc);
+            rep_clf[rep].copy_from_slice(&h.server.clf_s);
+        }
+
+        // ---- Full-backbone provisioning for the dynamic split ----
+        let mut bc = vec![0.0f64; n];
+        for ci in 0..n {
+            bc[ci] = h.net.bulk_down(ci, full_bytes);
+            let g = h.server.enc.clone();
+            h.clients[ci].sync_from_global(&g);
+        }
+        let bc_dt = h.clock.advance_parallel(&bc);
+        for (i, &t) in bc.iter().enumerate() {
+            let p = h.profiles[i].clone();
+            h.meter.client(&p, PowerState::Transmit, t);
+            h.meter.client(&p, PowerState::Idle, (bc_dt - t).max(0.0));
+        }
+
+        let acc = h.eval_global(rt)?;
+        if h.finish_round(round, round_dt, &busy, acc, stalled, server_steps) {
+            break;
+        }
+    }
+    Ok(())
+}

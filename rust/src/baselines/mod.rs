@@ -1,0 +1,15 @@
+//! Baseline comparators reimplemented from their papers (DESIGN.md §4.6):
+//!
+//! * [`sfl`] — SplitFed (Thapa et al., AAAI 2022): a fixed global split
+//!   point, per-client server-side model copies FedAvg'd every round,
+//!   server-only gradients, strict synchronization (stalls on failures).
+//! * [`dfl`] — Dynamic Federated Split Learning (Samikwa et al., IEEE
+//!   IoT-J 2024): resource-aware per-client split points over a shared
+//!   server model, full-backbone provisioning each round so the split can
+//!   move, no auxiliary classifier, no fault tolerance.
+//!
+//! Both run on the same [`crate::orchestrator::Harness`] as SuperSFL, so
+//! bytes / simulated time / energy are accounted identically.
+
+pub mod dfl;
+pub mod sfl;

@@ -1,0 +1,160 @@
+//! SplitFed (SFL) baseline — Thapa et al., AAAI 2022.
+//!
+//! Faithful to SplitFed v1's architecture:
+//! * one **fixed** split depth for every client (no resource awareness);
+//! * the main server keeps a **per-client copy** of the server-side
+//!   network (suffix + classifier); each round the Fed server FedAvgs
+//!   both the client-side and the server-side models, which is why SFL's
+//!   communication bill scales with `clients × server-side size`;
+//! * clients depend entirely on server gradients: when the server is
+//!   unreachable the step **stalls** (the behaviour SuperSFL's fallback
+//!   removes — recorded in `fallback_steps` as stalled steps).
+
+use crate::energy::PowerState;
+use crate::fedserver;
+use crate::orchestrator::Harness;
+use crate::runtime::Runtime;
+use crate::util::math;
+use crate::Result;
+
+pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
+    let classes = h.cfg.data.classes;
+    let depth = h.cfg.sfl_fixed_depth.clamp(1, rt.model().depth - 1);
+    let dim = rt.model().dim;
+    let local_steps = h.cfg.train.local_steps;
+    let lr_server = h.cfg.train.lr_server as f32;
+    let suffix_len = h.server.suffix(depth).len();
+
+    // Per-client server-side copies (suffix + classifier), SplitFed-style.
+    let n = h.clients.len();
+    let mut srv_copies: Vec<Vec<f32>> = vec![h.server.suffix(depth).to_vec(); n];
+    let mut clf_copies: Vec<Vec<f32>> = vec![h.server.clf_s.clone(); n];
+
+    for round in 1..=h.cfg.train.rounds {
+        h.net.begin_round();
+        let mut busy = vec![0.0f64; n];
+        let mut branch = vec![0.0f64; n];
+        let mut stalled = 0usize;
+        let mut server_steps = 0usize;
+
+        for ci in 0..n {
+            h.clients[ci].begin_round();
+            let profile = h.profiles[ci].clone();
+            let smashed = h.cost.smashed_bytes(dim);
+            let srv_time = h.server_step_time(depth);
+
+            for _ in 0..local_steps {
+                let batch = h.clients[ci].shard.next_batch(&h.train, rt.model().batch);
+
+                let z = rt.client_fwd(depth, &h.clients[ci].enc, &batch.x)?;
+                let t_fwd = h.cost.time_s(h.cost.client_fwd_flops(depth), profile.flops);
+                h.meter.client(&profile, PowerState::Compute, t_fwd);
+                branch[ci] += t_fwd;
+                busy[ci] += t_fwd;
+
+                let ex = h.net.exchange(ci, smashed, smashed, srv_time);
+                branch[ci] += ex.time_s();
+                let tx = (ex.time_s() - srv_time).max(0.0);
+                h.meter.client(&profile, PowerState::Transmit, tx);
+                busy[ci] += tx;
+
+                if ex.is_ok() {
+                    h.meter.server_busy(srv_time);
+                    let out = rt.server_step(
+                        depth,
+                        classes,
+                        &srv_copies[ci],
+                        &clf_copies[ci],
+                        &z,
+                        &batch.y,
+                    )?;
+                    math::sgd_step(&mut srv_copies[ci], &out.g_srv, lr_server);
+                    math::sgd_step(&mut clf_copies[ci], &out.g_clf_s, lr_server);
+                    h.clients[ci].round_server_loss.push(out.loss as f64);
+
+                    let g_enc = rt.client_bwd(depth, &h.clients[ci].enc, &batch.x, &out.g_z)?;
+                    let lr = h.clients[ci].lr;
+                    math::sgd_step(&mut h.clients[ci].enc, &g_enc, lr);
+                    let t_bwd = h.cost.time_s(h.cost.client_bwd_flops(depth), profile.flops);
+                    h.meter.client(&profile, PowerState::Compute, t_bwd);
+                    branch[ci] += t_bwd;
+                    busy[ci] += t_bwd;
+                    server_steps += 1;
+                } else {
+                    // No fallback path in SplitFed: the step is lost.
+                    stalled += 1;
+                }
+            }
+        }
+
+        let round_dt = h.clock.advance_parallel(&branch);
+
+        // ---- FedAvg of client-side models (sample-count weights) ----
+        let mut agg_branch = vec![0.0f64; n];
+        for ci in 0..n {
+            agg_branch[ci] = h.net.bulk_up(ci, (h.clients[ci].enc.len() * 4) as u64);
+        }
+        let agg_dt = h.clock.advance_parallel(&agg_branch);
+        for (i, &t) in agg_branch.iter().enumerate() {
+            let p = h.profiles[i].clone();
+            h.meter.client(&p, PowerState::Transmit, t);
+            h.meter.client(&p, PowerState::Idle, (agg_dt - t).max(0.0));
+        }
+        let total_samples: f64 = h.clients.iter().map(|c| c.shard.len() as f64).sum();
+        {
+            let items: Vec<(usize, &[f32], f64)> = h
+                .clients
+                .iter()
+                .map(|c| {
+                    (
+                        depth,
+                        c.enc.as_slice(),
+                        c.shard.len() as f64 / total_samples.max(1.0),
+                    )
+                })
+                .collect();
+            let sizes = h.server.layer_sizes().to_vec();
+            fedserver::aggregate_weighted(&mut h.server.enc, &sizes, &items, 0.0);
+        }
+
+        // ---- FedAvg of the per-client server-side copies (SplitFed) ----
+        // Every copy crosses the main↔Fed server link, both directions.
+        let copy_bytes = ((suffix_len + h.server.clf_s.len()) * 4) as u64;
+        let fed_t = h.net.fed_link(copy_bytes * n as u64 * 2);
+        h.clock.advance(fed_t);
+        let mut srv_avg = vec![0.0f32; suffix_len];
+        let mut clf_avg = vec![0.0f32; h.server.clf_s.len()];
+        for ci in 0..n {
+            let w = (h.clients[ci].shard.len() as f64 / total_samples.max(1.0)) as f32;
+            math::axpy(&mut srv_avg, &srv_copies[ci], w);
+            math::axpy(&mut clf_avg, &clf_copies[ci], w);
+        }
+        let cut = h.server.prefix_len(depth);
+        h.server.enc[cut..].copy_from_slice(&srv_avg);
+        h.server.clf_s.copy_from_slice(&clf_avg);
+        for ci in 0..n {
+            srv_copies[ci].copy_from_slice(&srv_avg);
+            clf_copies[ci].copy_from_slice(&clf_avg);
+        }
+
+        // ---- Broadcast the aggregated client-side model ----
+        let mut bc = vec![0.0f64; n];
+        for ci in 0..n {
+            bc[ci] = h.net.bulk_down(ci, (h.clients[ci].enc.len() * 4) as u64);
+            let g = h.server.enc.clone();
+            h.clients[ci].sync_from_global(&g);
+        }
+        let bc_dt = h.clock.advance_parallel(&bc);
+        for (i, &t) in bc.iter().enumerate() {
+            let p = h.profiles[i].clone();
+            h.meter.client(&p, PowerState::Transmit, t);
+            h.meter.client(&p, PowerState::Idle, (bc_dt - t).max(0.0));
+        }
+
+        let acc = h.eval_global(rt)?;
+        if h.finish_round(round, round_dt, &busy, acc, stalled, server_steps) {
+            break;
+        }
+    }
+    Ok(())
+}

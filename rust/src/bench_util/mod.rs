@@ -1,0 +1,120 @@
+//! Micro-benchmark harness (substitute for `criterion`, which is not in
+//! the offline crate set — DESIGN.md §4.5).
+//!
+//! `cargo bench` targets are `harness = false` binaries that use
+//! [`measure`] for timing loops and [`crate::metrics::Table`] for output.
+//! Paper-table benches (table1_*, fig3_*, …) mostly run whole simulated
+//! experiments and print the regenerated rows next to the paper's values.
+
+pub mod scenarios;
+
+use std::time::Instant;
+
+/// Timing statistics over the measured iterations.
+#[derive(Clone, Copy, Debug)]
+pub struct Sample {
+    pub iters: usize,
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+    pub std_s: f64,
+}
+
+impl Sample {
+    pub fn per_iter_display(&self) -> String {
+        format_time(self.mean_s)
+    }
+}
+
+/// Human-readable duration.
+pub fn format_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Run `f` `warmup` times unmeasured, then `iters` times measured.
+pub fn measure<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Sample {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let mean = times.iter().sum::<f64>() / iters as f64;
+    let var = times.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>() / iters as f64;
+    Sample {
+        iters,
+        mean_s: mean,
+        min_s: times.iter().cloned().fold(f64::MAX, f64::min),
+        max_s: times.iter().cloned().fold(0.0, f64::max),
+        std_s: var.sqrt(),
+    }
+}
+
+/// Print one benchmark line in a stable, grep-friendly format.
+pub fn report(name: &str, s: &Sample) {
+    println!(
+        "bench {name}: mean {} (min {}, max {}, ±{}, n={})",
+        format_time(s.mean_s),
+        format_time(s.min_s),
+        format_time(s.max_s),
+        format_time(s.std_s),
+        s.iters
+    );
+}
+
+/// Throughput helper: items/s at the measured mean.
+pub fn throughput(s: &Sample, items_per_iter: f64) -> f64 {
+    items_per_iter / s.mean_s
+}
+
+/// Black-box: prevent the optimizer from deleting a computed value.
+pub fn black_box<T>(x: T) -> T {
+    // std::hint::black_box is stable since 1.66.
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_counts_iterations() {
+        let mut n = 0usize;
+        let s = measure(2, 10, || n += 1);
+        assert_eq!(n, 12);
+        assert_eq!(s.iters, 10);
+        assert!(s.min_s <= s.mean_s && s.mean_s <= s.max_s);
+    }
+
+    #[test]
+    fn format_time_units() {
+        assert!(format_time(2.0).ends_with(" s"));
+        assert!(format_time(2e-3).ends_with(" ms"));
+        assert!(format_time(2e-6).ends_with(" µs"));
+        assert!(format_time(2e-10).ends_with(" ns"));
+    }
+
+    #[test]
+    fn throughput_inverse_of_mean() {
+        let s = Sample {
+            iters: 1,
+            mean_s: 0.5,
+            min_s: 0.5,
+            max_s: 0.5,
+            std_s: 0.0,
+        };
+        assert!((throughput(&s, 10.0) - 20.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,103 @@
+//! Tiny CLI argument parser (no `clap` in the offline crate set).
+//!
+//! Grammar: positionals, `--key value`, `--key=value`, bare `--flag`.
+//! Repeated keys accumulate (used by `--set k=v --set k2=v2`).
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pairs: Vec<(String, String)>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse<I: Iterator<Item = String>>(it: I) -> Args {
+        let toks: Vec<String> = it.collect();
+        let mut args = Args::default();
+        let mut i = 0;
+        while i < toks.len() {
+            let tok = &toks[i];
+            if let Some(body) = tok.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    args.pairs.push((k.to_string(), v.to_string()));
+                } else if i + 1 < toks.len() && !toks[i + 1].starts_with("--") {
+                    // `--key value` form: consume the value.
+                    args.pairs.push((body.to_string(), toks[i + 1].clone()));
+                    i += 1;
+                } else {
+                    // Bare `--flag` (next token is another flag or EOF).
+                    args.flags.push(body.to_string());
+                }
+            } else {
+                args.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        args
+    }
+
+    /// Last value for a key (later overrides earlier).
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.pairs
+            .iter()
+            .rev()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// All values for a repeatable key, in order.
+    pub fn get_all(&self, key: &str) -> Vec<&str> {
+        self.pairs
+            .iter()
+            .filter(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+            .collect()
+    }
+
+    #[allow(dead_code)] // part of the parser's public surface; used in tests
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn positionals_and_pairs() {
+        let a = parse(&["train", "--method", "ssfl", "--clients=50"]);
+        assert_eq!(a.positional, vec!["train"]);
+        assert_eq!(a.get("method"), Some("ssfl"));
+        assert_eq!(a.get("clients"), Some("50"));
+    }
+
+    #[test]
+    fn repeated_set_accumulates() {
+        let a = parse(&["x", "--set", "a=1", "--set", "b=2"]);
+        assert_eq!(a.get_all("set"), vec!["a=1", "b=2"]);
+    }
+
+    #[test]
+    fn last_value_wins() {
+        let a = parse(&["--rounds", "5", "--rounds", "9"]);
+        assert_eq!(a.get("rounds"), Some("9"));
+    }
+
+    #[test]
+    fn bare_flags() {
+        let a = parse(&["run", "--verbose", "--out", "dir"]);
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.get("out"), Some("dir"));
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse(&["--quiet"]);
+        assert!(a.has_flag("quiet"));
+    }
+}

@@ -1,0 +1,235 @@
+//! The fault-tolerant split-learning client (paper §II-B/§II-C, Alg. 2–3).
+//!
+//! A client owns its contiguous encoder prefix θ_i, its lightweight local
+//! classifier φ_i, and its data shard. Per step it:
+//!
+//! 1. runs Phase 1 (`client_local` artifact): smashed data, local loss,
+//!    τ-clipped encoder gradient, classifier gradient — and updates φ_i;
+//! 2. attempts the server exchange; on success it backprops the returned
+//!    g_z (`client_bwd` artifact) and fuses the two encoder gradients
+//!    (Phase 3, Eq. 3–4);
+//! 3. on timeout it falls back to the local-only update (Alg. 3) and keeps
+//!    training — the defining fault-tolerance behaviour.
+//!
+//! Baseline methods reuse the same state with `clf = None` (no local
+//! supervision → they stall on timeouts).
+
+use crate::config::TpgfMode;
+use crate::data::{Batch, ClientShard};
+use crate::runtime::{ClientLocalOut, Runtime};
+use crate::tpgf;
+use crate::util::math;
+use crate::Result;
+
+/// Per-client mutable training state.
+pub struct ClientState {
+    pub id: usize,
+    /// Encoder depth d_i (contiguous prefix of the super-network).
+    pub depth: usize,
+    /// Flat encoder prefix θ_i.
+    pub enc: Vec<f32>,
+    /// Local classifier φ_i (None for SFL/DFL baseline clients).
+    pub clf: Option<Vec<f32>>,
+    pub shard: ClientShard,
+    pub lr: f32,
+    /// Round-scoped loss accumulators (for Eq. 6 aggregation weights).
+    pub round_local_loss: LossAcc,
+    pub round_server_loss: LossAcc,
+}
+
+/// Streaming mean accumulator.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LossAcc {
+    sum: f64,
+    n: usize,
+}
+
+impl LossAcc {
+    pub fn push(&mut self, v: f64) {
+        self.sum += v;
+        self.n += 1;
+    }
+
+    pub fn mean(&self) -> Option<f64> {
+        if self.n == 0 {
+            None
+        } else {
+            Some(self.sum / self.n as f64)
+        }
+    }
+
+    pub fn reset(&mut self) {
+        *self = LossAcc::default();
+    }
+}
+
+impl ClientState {
+    /// A SuperSFL client: prefix of the global init + its own classifier.
+    pub fn new_ssfl(
+        rt: &Runtime,
+        id: usize,
+        depth: usize,
+        classes: usize,
+        global_enc: &[f32],
+        shard: ClientShard,
+        lr: f32,
+    ) -> Result<ClientState> {
+        let prefix_len: usize = rt.model().enc_layer_sizes[..depth].iter().sum();
+        let clf = rt
+            .manifest
+            .load_init(&format!("init_clf_client_c{classes}"))?;
+        Ok(ClientState {
+            id,
+            depth,
+            enc: global_enc[..prefix_len].to_vec(),
+            clf: Some(clf),
+            shard,
+            lr,
+            round_local_loss: LossAcc::default(),
+            round_server_loss: LossAcc::default(),
+        })
+    }
+
+    /// A baseline client (SFL/DFL): no local classifier.
+    pub fn new_baseline(
+        rt: &Runtime,
+        id: usize,
+        depth: usize,
+        global_enc: &[f32],
+        shard: ClientShard,
+        lr: f32,
+    ) -> Result<ClientState> {
+        let prefix_len: usize = rt.model().enc_layer_sizes[..depth].iter().sum();
+        Ok(ClientState {
+            id,
+            depth,
+            enc: global_enc[..prefix_len].to_vec(),
+            clf: None,
+            shard,
+            lr,
+            round_local_loss: LossAcc::default(),
+            round_server_loss: LossAcc::default(),
+        })
+    }
+
+    /// Refresh θ_i from the aggregated global model (broadcast).
+    pub fn sync_from_global(&mut self, global_enc: &[f32]) {
+        let n = self.enc.len();
+        self.enc.copy_from_slice(&global_enc[..n]);
+    }
+
+    /// Begin a new round: reset loss accumulators.
+    pub fn begin_round(&mut self) {
+        self.round_local_loss.reset();
+        self.round_server_loss.reset();
+    }
+
+    /// TPGF Phase 1 (Alg. 2 lines 3–7): local forward + loss + grads, and
+    /// the φ_i update. Returns the artifact output (z, loss, clipped
+    /// g_enc, g_clf).
+    pub fn phase1(&mut self, rt: &Runtime, classes: usize, batch: &Batch) -> Result<ClientLocalOut> {
+        let clf = self
+            .clf
+            .as_mut()
+            .expect("phase1 requires a local classifier (SSFL client)");
+        let out = rt.client_local(self.depth, classes, &self.enc, clf, &batch.x, &batch.y)?;
+        // Alg. 2 line 6: φ_i ← φ_i − η ∇φ L_client (always, even pre-fusion).
+        math::sgd_step(clf, &out.g_clf, self.lr);
+        self.round_local_loss.push(out.loss as f64);
+        Ok(out)
+    }
+
+    /// Fallback branch (Alg. 3 line 8): local-only encoder update using
+    /// the clipped Phase-1 gradient.
+    pub fn fallback_update(&mut self, out: &ClientLocalOut) {
+        math::sgd_step(&mut self.enc, &out.g_enc, self.lr);
+    }
+
+    /// TPGF Phase 2 client side + Phase 3 (Alg. 2 lines 13–16): backprop
+    /// g_z, then fuse with the local gradient and update θ_i.
+    ///
+    /// `fuse_via_artifact` routes Phase 3 through the Pallas
+    /// `tpgf_update_d{d}` artifact instead of the Rust loop (numerically
+    /// interchangeable — `bench_fusion` measures both).
+    #[allow(clippy::too_many_arguments)]
+    pub fn phase2_phase3(
+        &mut self,
+        rt: &Runtime,
+        batch: &Batch,
+        local: &ClientLocalOut,
+        g_z: &[f32],
+        l_server: f32,
+        mode: TpgfMode,
+        fuse_via_artifact: bool,
+        total_layers: usize,
+    ) -> Result<()> {
+        let g_server = rt.client_bwd(self.depth, &self.enc, &batch.x, g_z)?;
+        self.round_server_loss.push(l_server as f64);
+        let d_s = total_layers - self.depth;
+        if fuse_via_artifact && mode == TpgfMode::Full {
+            // The artifact bakes the Eq. 3 rule (Full mode) per depth.
+            let theta = rt.tpgf_update(
+                self.depth,
+                &self.enc,
+                &local.g_enc,
+                &g_server,
+                local.loss,
+                l_server,
+                self.lr,
+            )?;
+            self.enc = theta;
+        } else {
+            tpgf::fuse_update(
+                &mut self.enc,
+                &local.g_enc,
+                &g_server,
+                local.loss as f64,
+                l_server as f64,
+                self.depth,
+                d_s,
+                self.lr as f64,
+                mode,
+            );
+        }
+        Ok(())
+    }
+
+    /// The loss used for Eq. 6 at aggregation time: fused when the client
+    /// saw server supervision this round, plain local mean otherwise
+    /// (paper §II-D "Aggregation Inputs").
+    pub fn aggregation_loss(&self, mode: TpgfMode, total_layers: usize) -> Option<f64> {
+        let local = self.round_local_loss.mean();
+        let server = self.round_server_loss.mean();
+        match (local, server) {
+            (Some(lc), Some(ls)) => Some(tpgf::fused_loss(
+                mode,
+                lc,
+                ls,
+                self.depth,
+                total_layers - self.depth,
+            )),
+            (Some(lc), None) => Some(lc),
+            (None, Some(ls)) => Some(ls),
+            (None, None) => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loss_acc_mean_and_reset() {
+        let mut a = LossAcc::default();
+        assert_eq!(a.mean(), None);
+        a.push(1.0);
+        a.push(3.0);
+        assert_eq!(a.mean(), Some(2.0));
+        a.reset();
+        assert_eq!(a.mean(), None);
+    }
+
+    // Runtime-backed client behaviour is covered by rust/tests/
+    // integration tests (requires built artifacts).
+}

@@ -1,0 +1,587 @@
+//! Typed experiment configuration with JSON overrides.
+//!
+//! Every knob of the simulator is a field here with a paper-faithful
+//! default (fleet ranges from §III-A, α/β from §II-A, τ/λ from §II-B/D,
+//! timeout from §II-C). Configs round-trip through the hand-rolled JSON
+//! module so experiments are recorded exactly.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{self, JsonValue};
+use crate::{Error, Result};
+
+/// Which training method to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    /// SuperSFL (the paper's system; "SSFL" in the tables).
+    SuperSfl,
+    /// SplitFed baseline: fixed split point, server-only gradients.
+    Sfl,
+    /// Dynamic federated split learning baseline: resource-aware split,
+    /// no local classifier, no fallback.
+    Dfl,
+}
+
+impl Method {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Method::SuperSfl => "ssfl",
+            Method::Sfl => "sfl",
+            Method::Dfl => "dfl",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Method> {
+        match s.to_ascii_lowercase().as_str() {
+            "ssfl" | "supersfl" => Ok(Method::SuperSfl),
+            "sfl" => Ok(Method::Sfl),
+            "dfl" => Ok(Method::Dfl),
+            _ => Err(Error::Config(format!("unknown method '{s}'"))),
+        }
+    }
+}
+
+/// TPGF fusion-rule variant (paper §IV ablation, Fig. 6).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TpgfMode {
+    /// Depth term × inverse-loss term (Eq. 3).
+    Full,
+    /// Depth term only (ablate loss reliability).
+    NoLoss,
+    /// Inverse-loss term only (ablate depth awareness).
+    NoDepth,
+    /// Naïve equal-weight fusion (w = 0.5).
+    Equal,
+}
+
+impl TpgfMode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            TpgfMode::Full => "full",
+            TpgfMode::NoLoss => "no_loss",
+            TpgfMode::NoDepth => "no_depth",
+            TpgfMode::Equal => "equal",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<TpgfMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "full" => Ok(TpgfMode::Full),
+            "no_loss" | "noloss" => Ok(TpgfMode::NoLoss),
+            "no_depth" | "nodepth" => Ok(TpgfMode::NoDepth),
+            "equal" => Ok(TpgfMode::Equal),
+            _ => Err(Error::Config(format!("unknown tpgf mode '{s}'"))),
+        }
+    }
+}
+
+/// Heterogeneous fleet sampling ranges (paper §III-A).
+#[derive(Clone, Debug)]
+pub struct FleetConfig {
+    pub clients: usize,
+    /// Memory capacity uniform range, GB. Paper: U[2, 16].
+    pub mem_gb: (f64, f64),
+    /// Communication latency uniform range, ms. Paper: U[20, 200].
+    pub latency_ms: (f64, f64),
+    /// Client device compute uniform range, GFLOP/s (edge devices).
+    pub compute_gflops: (f64, f64),
+    /// Client uplink bandwidth range, Mbit/s.
+    pub uplink_mbps: (f64, f64),
+    /// Client downlink bandwidth range, Mbit/s.
+    pub downlink_mbps: (f64, f64),
+    /// Main-server accelerator speed, GFLOP/s (A10/A100-class in §III-A).
+    pub server_gflops: f64,
+    /// Per-round relative fluctuation of observed client resources
+    /// (memory pressure, latency jitter) — the dynamic-IoT premise of the
+    /// DFL baseline. SuperSFL profiles once at init (§II-A: "no runtime
+    /// profiling"); DFL re-profiles every round and moves its split
+    /// points accordingly.
+    pub resource_jitter: f64,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            clients: 50,
+            mem_gb: (2.0, 16.0),
+            latency_ms: (20.0, 200.0),
+            compute_gflops: (5.0, 100.0),
+            uplink_mbps: (10.0, 100.0),
+            downlink_mbps: (20.0, 200.0),
+            server_gflops: 5000.0,
+            resource_jitter: 0.25,
+        }
+    }
+}
+
+/// Resource-aware allocation coefficients (paper Eq. 1).
+#[derive(Clone, Debug)]
+pub struct AllocConfig {
+    /// Layers per GB of client memory. Paper default 0.5.
+    pub alpha: f64,
+    /// Weight of the normalized-latency score. Paper default 4.
+    pub beta: f64,
+    /// Denominator guard in the latency normalization.
+    pub eps: f64,
+}
+
+impl Default for AllocConfig {
+    fn default() -> Self {
+        AllocConfig {
+            alpha: 0.5,
+            beta: 4.0,
+            eps: 1e-6,
+        }
+    }
+}
+
+/// Simulated network behaviour (paper §II-C fault model).
+#[derive(Clone, Debug)]
+pub struct NetConfig {
+    /// Server response timeout in (simulated) seconds. Paper: 5 s.
+    pub timeout_s: f64,
+    /// Fraction of client↔server exchanges where the server responds in
+    /// time. 1.0 = always reachable; Table III sweeps this down to 0.
+    pub server_availability: f64,
+    /// Per-message probability of a transient drop (independent of the
+    /// availability schedule; models flaky links).
+    pub drop_prob: f64,
+    /// Server NIC bandwidth, Mbit/s (shared across concurrent clients).
+    pub server_bandwidth_mbps: f64,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            timeout_s: 5.0,
+            server_availability: 1.0,
+            drop_prob: 0.0,
+            server_bandwidth_mbps: 10_000.0,
+        }
+    }
+}
+
+/// Device power model (paper §III-D; Table II accounting).
+#[derive(Clone, Debug)]
+pub struct EnergyConfig {
+    /// Client active-compute power range, W (heterogeneous edge devices).
+    pub client_active_w: (f64, f64),
+    /// Client idle power, W.
+    pub client_idle_w: f64,
+    /// Client radio power while transmitting, W.
+    pub client_tx_w: f64,
+    /// Server (GPU) active power, W.
+    pub server_active_w: f64,
+    /// Server idle power, W.
+    pub server_idle_w: f64,
+    /// Grid emission factor, g CO₂ per kWh.
+    pub co2_g_per_kwh: f64,
+}
+
+impl Default for EnergyConfig {
+    fn default() -> Self {
+        EnergyConfig {
+            client_active_w: (4.0, 25.0),
+            client_idle_w: 1.0,
+            client_tx_w: 2.5,
+            server_active_w: 300.0,
+            server_idle_w: 60.0,
+            co2_g_per_kwh: 400.0,
+        }
+    }
+}
+
+/// Synthetic dataset + non-IID partitioning (paper §III-A substitution,
+/// DESIGN.md §4.1).
+#[derive(Clone, Debug)]
+pub struct DataConfig {
+    /// 10 (CIFAR-10-like) or 100 (CIFAR-100-like).
+    pub classes: usize,
+    /// Training samples per class.
+    pub train_per_class: usize,
+    /// Held-out test samples (balanced).
+    pub test_total: usize,
+    /// Per-pixel noise σ of the generator (task difficulty).
+    pub noise: f64,
+    /// Max circular shift of the class prototype, px (intra-class variety).
+    pub max_shift: usize,
+    /// Dirichlet concentration for the non-IID partition. Paper: 0.5.
+    pub dirichlet_alpha: f64,
+}
+
+impl Default for DataConfig {
+    fn default() -> Self {
+        DataConfig {
+            classes: 10,
+            train_per_class: 200,
+            test_total: 1000,
+            noise: 2.2,
+            max_shift: 8,
+            dirichlet_alpha: 0.5,
+        }
+    }
+}
+
+/// Optimization + round schedule.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub rounds: usize,
+    /// Local batches per client per round.
+    pub local_steps: usize,
+    pub lr_client: f64,
+    pub lr_server: f64,
+    /// Stop early once test accuracy reaches this (rounds-to-target).
+    pub target_accuracy: Option<f64>,
+    /// Test samples evaluated per round (subsample for speed).
+    pub eval_samples: usize,
+    pub seed: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            rounds: 30,
+            local_steps: 3,
+            lr_client: 0.05,
+            lr_server: 0.05,
+            target_accuracy: None,
+            eval_samples: 500,
+            seed: 42,
+        }
+    }
+}
+
+/// SuperSFL-specific knobs.
+#[derive(Clone, Debug)]
+pub struct SuperSflConfig {
+    pub tpgf_mode: TpgfMode,
+    /// Aggregation consistency weight λ (paper Eq. 7-8; default 0.01).
+    pub lambda: f64,
+    /// Aggregation-weight ε (paper Eq. 6).
+    pub eps: f64,
+    /// Apply the TPGF Phase-3 update through the Pallas artifact instead
+    /// of the Rust loop (both are bit-compatible; see bench_fusion).
+    pub fuse_via_artifact: bool,
+}
+
+impl Default for SuperSflConfig {
+    fn default() -> Self {
+        SuperSflConfig {
+            tpgf_mode: TpgfMode::Full,
+            lambda: 0.01,
+            eps: 1e-8,
+            fuse_via_artifact: false,
+        }
+    }
+}
+
+/// Top-level experiment description.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub name: String,
+    pub method: Method,
+    pub fleet: FleetConfig,
+    pub alloc: AllocConfig,
+    pub net: NetConfig,
+    pub energy: EnergyConfig,
+    pub data: DataConfig,
+    pub train: TrainConfig,
+    pub ssfl: SuperSflConfig,
+    /// Fixed split depth for the SFL baseline (SplitFed uses one global
+    /// split point).
+    pub sfl_fixed_depth: usize,
+    /// Number of decentralized server replicas in the DFL baseline (this
+    /// paper's §III characterizes DFL as "frequent coordination across
+    /// decentralized replicas"; SuperSFL hosts ONE central super-network).
+    pub dfl_replicas: usize,
+    /// Where `make artifacts` put the HLO + manifest.
+    pub artifacts_dir: PathBuf,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            name: "experiment".into(),
+            method: Method::SuperSfl,
+            fleet: FleetConfig::default(),
+            alloc: AllocConfig::default(),
+            net: NetConfig::default(),
+            energy: EnergyConfig::default(),
+            data: DataConfig::default(),
+            train: TrainConfig::default(),
+            ssfl: SuperSflConfig::default(),
+            sfl_fixed_depth: 2,
+            dfl_replicas: 2,
+            artifacts_dir: PathBuf::from("artifacts"),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Builder-style setters used pervasively by examples and benches.
+    pub fn with_method(mut self, m: Method) -> Self {
+        self.method = m;
+        self
+    }
+
+    pub fn with_clients(mut self, n: usize) -> Self {
+        self.fleet.clients = n;
+        self
+    }
+
+    pub fn with_classes(mut self, c: usize) -> Self {
+        self.data.classes = c;
+        self
+    }
+
+    pub fn with_rounds(mut self, r: usize) -> Self {
+        self.train.rounds = r;
+        self
+    }
+
+    pub fn with_seed(mut self, s: u64) -> Self {
+        self.train.seed = s;
+        self
+    }
+
+    pub fn with_name(mut self, n: &str) -> Self {
+        self.name = n.to_string();
+        self
+    }
+
+    /// Validate cross-field invariants before running.
+    pub fn validate(&self) -> Result<()> {
+        if self.fleet.clients == 0 {
+            return Err(Error::Config("fleet.clients must be > 0".into()));
+        }
+        if !(0.0..=1.0).contains(&self.net.server_availability) {
+            return Err(Error::Config("net.server_availability must be in [0,1]".into()));
+        }
+        if self.data.classes != 10 && self.data.classes != 100 {
+            return Err(Error::Config(
+                "data.classes must be 10 or 100 (artifact variants)".into(),
+            ));
+        }
+        if self.train.local_steps == 0 || self.train.rounds == 0 {
+            return Err(Error::Config("train.rounds/local_steps must be > 0".into()));
+        }
+        if self.ssfl.lambda < 0.0 {
+            return Err(Error::Config("ssfl.lambda must be >= 0".into()));
+        }
+        Ok(())
+    }
+
+    /// Apply a (possibly partial) JSON object of overrides, e.g. parsed
+    /// from a `--config file.json` or inline `--set key.path=value` pairs.
+    pub fn apply_json(&mut self, v: &JsonValue) -> Result<()> {
+        let entries = v
+            .entries()
+            .ok_or_else(|| Error::Config("config root must be an object".into()))?;
+        for (key, val) in entries {
+            self.apply_one(key, val)?;
+        }
+        Ok(())
+    }
+
+    fn apply_one(&mut self, key: &str, v: &JsonValue) -> Result<()> {
+        let f = |v: &JsonValue| -> Result<f64> {
+            v.as_f64()
+                .ok_or_else(|| Error::Config(format!("'{key}' must be a number")))
+        };
+        fn s<'a>(v: &'a JsonValue, key: &str) -> Result<&'a str> {
+            v.as_str()
+                .ok_or_else(|| Error::Config(format!("'{key}' must be a string")))
+        }
+        let pair = |v: &JsonValue| -> Result<(f64, f64)> {
+            let a = v
+                .as_array()
+                .ok_or_else(|| Error::Config(format!("'{key}' must be [lo, hi]")))?;
+            if a.len() != 2 {
+                return Err(Error::Config(format!("'{key}' must be [lo, hi]")));
+            }
+            Ok((f(&a[0])?, f(&a[1])?))
+        };
+        match key {
+            "name" => self.name = s(v, key)?.to_string(),
+            "method" => self.method = Method::parse(s(v, key)?)?,
+            "sfl_fixed_depth" => self.sfl_fixed_depth = f(v)? as usize,
+            "dfl_replicas" => self.dfl_replicas = (f(v)? as usize).max(1),
+            "artifacts_dir" => self.artifacts_dir = PathBuf::from(s(v, key)?),
+            "clients" => self.fleet.clients = f(v)? as usize,
+            "mem_gb" => self.fleet.mem_gb = pair(v)?,
+            "latency_ms" => self.fleet.latency_ms = pair(v)?,
+            "compute_gflops" => self.fleet.compute_gflops = pair(v)?,
+            "uplink_mbps" => self.fleet.uplink_mbps = pair(v)?,
+            "downlink_mbps" => self.fleet.downlink_mbps = pair(v)?,
+            "server_gflops" => self.fleet.server_gflops = f(v)?,
+            "resource_jitter" => self.fleet.resource_jitter = f(v)?,
+            "alloc_alpha" => self.alloc.alpha = f(v)?,
+            "alloc_beta" => self.alloc.beta = f(v)?,
+            "timeout_s" => self.net.timeout_s = f(v)?,
+            "server_availability" => self.net.server_availability = f(v)?,
+            "drop_prob" => self.net.drop_prob = f(v)?,
+            "server_bandwidth_mbps" => self.net.server_bandwidth_mbps = f(v)?,
+            "client_active_w" => self.energy.client_active_w = pair(v)?,
+            "client_idle_w" => self.energy.client_idle_w = f(v)?,
+            "client_tx_w" => self.energy.client_tx_w = f(v)?,
+            "server_active_w" => self.energy.server_active_w = f(v)?,
+            "server_idle_w" => self.energy.server_idle_w = f(v)?,
+            "co2_g_per_kwh" => self.energy.co2_g_per_kwh = f(v)?,
+            "classes" => self.data.classes = f(v)? as usize,
+            "train_per_class" => self.data.train_per_class = f(v)? as usize,
+            "test_total" => self.data.test_total = f(v)? as usize,
+            "noise" => self.data.noise = f(v)?,
+            "max_shift" => self.data.max_shift = f(v)? as usize,
+            "dirichlet_alpha" => self.data.dirichlet_alpha = f(v)?,
+            "rounds" => self.train.rounds = f(v)? as usize,
+            "local_steps" => self.train.local_steps = f(v)? as usize,
+            "lr_client" => self.train.lr_client = f(v)?,
+            "lr_server" => self.train.lr_server = f(v)?,
+            "target_accuracy" => self.train.target_accuracy = Some(f(v)?),
+            "eval_samples" => self.train.eval_samples = f(v)? as usize,
+            "seed" => self.train.seed = f(v)? as u64,
+            "tpgf_mode" => self.ssfl.tpgf_mode = TpgfMode::parse(s(v, key)?)?,
+            "lambda" => self.ssfl.lambda = f(v)?,
+            "fuse_via_artifact" => {
+                self.ssfl.fuse_via_artifact = v
+                    .as_bool()
+                    .ok_or_else(|| Error::Config("fuse_via_artifact must be bool".into()))?
+            }
+            other => return Err(Error::Config(format!("unknown config key '{other}'"))),
+        }
+        Ok(())
+    }
+
+    /// Load overrides from a JSON file on top of defaults.
+    pub fn from_json_file(path: &Path) -> Result<ExperimentConfig> {
+        let mut cfg = ExperimentConfig::default();
+        cfg.apply_json(&json::parse_file(path)?)?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Serialize the *full* effective config (for experiment records).
+    pub fn to_json(&self) -> JsonValue {
+        let mut o = JsonValue::object();
+        let n = JsonValue::Number;
+        let pair = |(a, b): (f64, f64)| JsonValue::Array(vec![n(a), n(b)]);
+        o.set("name", JsonValue::String(self.name.clone()));
+        o.set("method", JsonValue::String(self.method.as_str().into()));
+        o.set("clients", n(self.fleet.clients as f64));
+        o.set("mem_gb", pair(self.fleet.mem_gb));
+        o.set("latency_ms", pair(self.fleet.latency_ms));
+        o.set("compute_gflops", pair(self.fleet.compute_gflops));
+        o.set("uplink_mbps", pair(self.fleet.uplink_mbps));
+        o.set("downlink_mbps", pair(self.fleet.downlink_mbps));
+        o.set("alloc_alpha", n(self.alloc.alpha));
+        o.set("alloc_beta", n(self.alloc.beta));
+        o.set("timeout_s", n(self.net.timeout_s));
+        o.set("server_availability", n(self.net.server_availability));
+        o.set("drop_prob", n(self.net.drop_prob));
+        o.set("classes", n(self.data.classes as f64));
+        o.set("train_per_class", n(self.data.train_per_class as f64));
+        o.set("test_total", n(self.data.test_total as f64));
+        o.set("noise", n(self.data.noise));
+        o.set("dirichlet_alpha", n(self.data.dirichlet_alpha));
+        o.set("rounds", n(self.train.rounds as f64));
+        o.set("local_steps", n(self.train.local_steps as f64));
+        o.set("lr_client", n(self.train.lr_client));
+        o.set("lr_server", n(self.train.lr_server));
+        o.set("eval_samples", n(self.train.eval_samples as f64));
+        o.set("seed", n(self.train.seed as f64));
+        o.set("tpgf_mode", JsonValue::String(self.ssfl.tpgf_mode.as_str().into()));
+        o.set("lambda", n(self.ssfl.lambda));
+        o.set("sfl_fixed_depth", n(self.sfl_fixed_depth as f64));
+        o.set("dfl_replicas", n(self.dfl_replicas as f64));
+        if let Some(t) = self.train.target_accuracy {
+            o.set("target_accuracy", n(t));
+        }
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    #[test]
+    fn defaults_are_paper_faithful() {
+        let c = ExperimentConfig::default();
+        assert_eq!(c.fleet.mem_gb, (2.0, 16.0)); // §III-A
+        assert_eq!(c.fleet.latency_ms, (20.0, 200.0)); // §III-A
+        assert_eq!(c.alloc.alpha, 0.5); // §II-A
+        assert_eq!(c.alloc.beta, 4.0); // §II-A
+        assert_eq!(c.net.timeout_s, 5.0); // §II-C
+        assert_eq!(c.ssfl.lambda, 0.01); // §II-D
+        assert_eq!(c.data.dirichlet_alpha, 0.5); // §III-A
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn json_overrides_apply() {
+        let mut c = ExperimentConfig::default();
+        let v = json::parse(
+            r#"{"method": "sfl", "clients": 100, "mem_gb": [1, 4],
+                "tpgf_mode": "equal", "target_accuracy": 0.75}"#,
+        )
+        .unwrap();
+        c.apply_json(&v).unwrap();
+        assert_eq!(c.method, Method::Sfl);
+        assert_eq!(c.fleet.clients, 100);
+        assert_eq!(c.fleet.mem_gb, (1.0, 4.0));
+        assert_eq!(c.ssfl.tpgf_mode, TpgfMode::Equal);
+        assert_eq!(c.train.target_accuracy, Some(0.75));
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let mut c = ExperimentConfig::default();
+        let v = json::parse(r#"{"nonsense": 1}"#).unwrap();
+        assert!(c.apply_json(&v).is_err());
+    }
+
+    #[test]
+    fn validation_catches_bad_values() {
+        let mut c = ExperimentConfig::default();
+        c.fleet.clients = 0;
+        assert!(c.validate().is_err());
+
+        let mut c = ExperimentConfig::default();
+        c.net.server_availability = 1.5;
+        assert!(c.validate().is_err());
+
+        let mut c = ExperimentConfig::default();
+        c.data.classes = 37;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn to_json_roundtrips_through_apply() {
+        let mut c = ExperimentConfig::default()
+            .with_method(Method::Dfl)
+            .with_clients(77)
+            .with_classes(100)
+            .with_seed(9);
+        c.ssfl.tpgf_mode = TpgfMode::NoDepth;
+        let j = c.to_json();
+        let mut c2 = ExperimentConfig::default();
+        c2.apply_json(&j).unwrap();
+        assert_eq!(c2.method, Method::Dfl);
+        assert_eq!(c2.fleet.clients, 77);
+        assert_eq!(c2.data.classes, 100);
+        assert_eq!(c2.train.seed, 9);
+        assert_eq!(c2.ssfl.tpgf_mode, TpgfMode::NoDepth);
+    }
+
+    #[test]
+    fn method_and_mode_parse_all() {
+        for m in ["ssfl", "sfl", "dfl", "SuperSFL"] {
+            Method::parse(m).unwrap();
+        }
+        for m in ["full", "no_loss", "no_depth", "equal"] {
+            TpgfMode::parse(m).unwrap();
+        }
+        assert!(Method::parse("fedavg").is_err());
+    }
+}

@@ -1,0 +1,122 @@
+//! Data substrate: synthetic image dataset + non-IID partitioning + batching.
+
+pub mod partition;
+pub mod synthetic;
+
+pub use partition::dirichlet_partition;
+pub use synthetic::{Dataset, SyntheticSpec, SyntheticTask};
+
+use crate::util::rng::Pcg32;
+
+/// A training batch in the artifact calling convention: row-major
+/// `[B, H, W, C]` images and `i32` labels.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub x: Vec<f32>,
+    pub y: Vec<i32>,
+    pub batch: usize,
+}
+
+/// A client's local shard: owns its sample indices and cycles through them
+/// epoch-by-epoch with reshuffling (the standard local-loader behaviour).
+#[derive(Clone, Debug)]
+pub struct ClientShard {
+    indices: Vec<usize>,
+    cursor: usize,
+    rng: Pcg32,
+}
+
+impl ClientShard {
+    pub fn new(mut indices: Vec<usize>, mut rng: Pcg32) -> Self {
+        rng.shuffle(&mut indices);
+        ClientShard {
+            indices,
+            cursor: 0,
+            rng,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.indices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.indices.is_empty()
+    }
+
+    pub fn indices(&self) -> &[usize] {
+        &self.indices
+    }
+
+    /// Next `batch` sample indices, wrapping (and reshuffling) at epoch
+    /// boundaries. Small shards repeat samples within a batch — same as a
+    /// cycling data loader.
+    pub fn next_indices(&mut self, batch: usize) -> Vec<usize> {
+        let mut out = Vec::with_capacity(batch);
+        for _ in 0..batch {
+            if self.cursor >= self.indices.len() {
+                self.rng.shuffle(&mut self.indices);
+                self.cursor = 0;
+            }
+            out.push(self.indices[self.cursor]);
+            self.cursor += 1;
+        }
+        out
+    }
+
+    /// Materialize the next batch from the backing dataset.
+    pub fn next_batch(&mut self, data: &Dataset, batch: usize) -> Batch {
+        let idx = self.next_indices(batch);
+        data.gather(&idx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn tiny_dataset() -> Dataset {
+        let spec = SyntheticSpec {
+            classes: 4,
+            image_size: 8,
+            channels: 3,
+            noise: 0.1,
+            max_shift: 2,
+        };
+        Dataset::generate(&spec, 10, &mut Pcg32::seeded(5))
+    }
+
+    #[test]
+    fn shard_cycles_and_reshuffles() {
+        let data = tiny_dataset();
+        let mut shard = ClientShard::new(vec![0, 1, 2], Pcg32::seeded(1));
+        let first: Vec<usize> = shard.next_indices(3);
+        let second: Vec<usize> = shard.next_indices(3);
+        let mut f = first.clone();
+        let mut s = second.clone();
+        f.sort_unstable();
+        s.sort_unstable();
+        assert_eq!(f, vec![0, 1, 2]);
+        assert_eq!(s, vec![0, 1, 2]);
+        let b = shard.next_batch(&data, 4);
+        assert_eq!(b.y.len(), 4);
+        assert_eq!(b.x.len(), 4 * data.elems_per_image());
+    }
+
+    #[test]
+    fn shard_smaller_than_batch_repeats() {
+        let mut shard = ClientShard::new(vec![7], Pcg32::seeded(2));
+        assert_eq!(shard.next_indices(3), vec![7, 7, 7]);
+    }
+
+    #[test]
+    fn gathered_batch_matches_source_rows() {
+        let data = tiny_dataset();
+        let b = data.gather(&[3, 0]);
+        let e = data.elems_per_image();
+        assert_eq!(&b.x[0..e], data.image(3));
+        assert_eq!(&b.x[e..2 * e], data.image(0));
+        assert_eq!(b.y, vec![data.labels[3], data.labels[0]]);
+    }
+}

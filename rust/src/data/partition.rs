@@ -1,0 +1,164 @@
+//! Dirichlet non-IID partitioner (paper §III-A).
+//!
+//! For each class, client shares are drawn from Dirichlet(α·1); smaller α
+//! yields more skewed per-client class distributions. α = 0.5 is the
+//! paper's setting. Every client is guaranteed at least one sample (a
+//! degenerate empty shard would stall its simulated training loop, which
+//! the paper's setup never exhibits).
+
+use crate::util::rng::Pcg32;
+
+/// Partition `labels` into `n_clients` index shards with Dirichlet(α)
+/// class skew. Returns one index vector per client.
+pub fn dirichlet_partition(
+    labels: &[i32],
+    classes: usize,
+    n_clients: usize,
+    alpha: f64,
+    rng: &mut Pcg32,
+) -> Vec<Vec<usize>> {
+    assert!(n_clients > 0);
+    let mut shards: Vec<Vec<usize>> = vec![Vec::new(); n_clients];
+
+    for class in 0..classes {
+        let mut idx: Vec<usize> = labels
+            .iter()
+            .enumerate()
+            .filter(|(_, &l)| l as usize == class)
+            .map(|(i, _)| i)
+            .collect();
+        if idx.is_empty() {
+            continue;
+        }
+        rng.shuffle(&mut idx);
+        let props = rng.dirichlet(alpha, n_clients);
+
+        // Largest-remainder apportionment of the class samples.
+        let n = idx.len();
+        let mut take: Vec<usize> = props.iter().map(|p| (p * n as f64) as usize).collect();
+        let assigned: usize = take.iter().sum();
+        let mut rema: Vec<(f64, usize)> = props
+            .iter()
+            .enumerate()
+            .map(|(i, p)| (p * n as f64 - take[i] as f64, i))
+            .collect();
+        rema.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        for k in 0..(n - assigned) {
+            take[rema[k % n_clients].1] += 1;
+        }
+
+        let mut cursor = 0;
+        for (client, &t) in take.iter().enumerate() {
+            shards[client].extend_from_slice(&idx[cursor..cursor + t]);
+            cursor += t;
+        }
+    }
+
+    // Guarantee non-empty shards: move one sample from the richest client.
+    loop {
+        let empty = match shards.iter().position(|s| s.is_empty()) {
+            Some(i) => i,
+            None => break,
+        };
+        let richest = (0..n_clients)
+            .max_by_key(|&i| shards[i].len())
+            .expect("n_clients > 0");
+        if shards[richest].len() <= 1 {
+            break; // fewer samples than clients: leave remaining empty
+        }
+        let moved = shards[richest].pop().expect("richest non-empty");
+        shards[empty].push(moved);
+    }
+    shards
+}
+
+/// Summary statistic used in tests/diagnostics: for each client, the
+/// fraction of its samples belonging to its most common class. IID ≈ 1/C;
+/// low-α Dirichlet pushes this toward 1.
+pub fn dominance(shards: &[Vec<usize>], labels: &[i32], classes: usize) -> Vec<f64> {
+    shards
+        .iter()
+        .map(|s| {
+            if s.is_empty() {
+                return 0.0;
+            }
+            let mut counts = vec![0usize; classes];
+            for &i in s {
+                counts[labels[i] as usize] += 1;
+            }
+            *counts.iter().max().unwrap() as f64 / s.len() as f64
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    fn labels(classes: usize, per_class: usize) -> Vec<i32> {
+        (0..classes * per_class)
+            .map(|i| (i % classes) as i32)
+            .collect()
+    }
+
+    #[test]
+    fn covers_all_samples_exactly_once() {
+        let mut rng = Pcg32::seeded(1);
+        let l = labels(10, 50);
+        let shards = dirichlet_partition(&l, 10, 8, 0.5, &mut rng);
+        let mut all: Vec<usize> = shards.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..500).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn no_empty_shards_when_enough_samples() {
+        forall(2, 20, |rng| {
+            let l = labels(10, 30);
+            let n = 2 + rng.uniform_usize(30);
+            let shards = dirichlet_partition(&l, 10, n, 0.3, rng);
+            assert!(shards.iter().all(|s| !s.is_empty()));
+        });
+    }
+
+    #[test]
+    fn low_alpha_is_more_skewed_than_high_alpha() {
+        let l = labels(10, 100);
+        let mut r1 = Pcg32::seeded(3);
+        let mut r2 = Pcg32::seeded(3);
+        let skewed = dirichlet_partition(&l, 10, 20, 0.1, &mut r1);
+        let iid = dirichlet_partition(&l, 10, 20, 100.0, &mut r2);
+        let dom_skew: f64 =
+            dominance(&skewed, &l, 10).iter().sum::<f64>() / 20.0;
+        let dom_iid: f64 = dominance(&iid, &l, 10).iter().sum::<f64>() / 20.0;
+        assert!(
+            dom_skew > dom_iid + 0.1,
+            "skew {dom_skew} vs iid {dom_iid}"
+        );
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let l = labels(5, 40);
+        let a = dirichlet_partition(&l, 5, 7, 0.5, &mut Pcg32::seeded(4));
+        let b = dirichlet_partition(&l, 5, 7, 0.5, &mut Pcg32::seeded(4));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn handles_more_clients_than_samples() {
+        let l = labels(2, 3); // 6 samples
+        let shards = dirichlet_partition(&l, 2, 10, 0.5, &mut Pcg32::seeded(5));
+        let total: usize = shards.iter().map(|s| s.len()).sum();
+        assert_eq!(total, 6);
+    }
+
+    #[test]
+    fn single_client_gets_everything() {
+        let l = labels(3, 10);
+        let shards = dirichlet_partition(&l, 3, 1, 0.5, &mut Pcg32::seeded(6));
+        assert_eq!(shards.len(), 1);
+        assert_eq!(shards[0].len(), 30);
+    }
+}

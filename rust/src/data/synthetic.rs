@@ -1,0 +1,301 @@
+//! Synthetic CIFAR-like image generator (DESIGN.md §4.1).
+//!
+//! Real CIFAR cannot be downloaded in this offline environment, so the
+//! benchmark task is generated: each class has a smooth low-frequency
+//! prototype pattern (a class-specific mixture of 2-D sinusoids plus a
+//! color bias); a sample is a randomly circular-shifted, amplitude-jittered
+//! copy of its class prototype plus Gaussian pixel noise. The task is
+//! learnable but non-trivial (noise σ ≈ 0.7 with ±6 px shifts keeps early
+//! accuracy well below ceiling), has the same `[32, 32, 3]` f32 geometry as
+//! CIFAR, and behaves like a classification workload under Dirichlet
+//! non-IID partitioning — which is what the paper's experiments exercise.
+
+use crate::util::rng::Pcg32;
+
+/// Generation parameters (a subset of `DataConfig`).
+#[derive(Clone, Debug)]
+pub struct SyntheticSpec {
+    pub classes: usize,
+    pub image_size: usize,
+    pub channels: usize,
+    /// Per-pixel Gaussian noise σ.
+    pub noise: f64,
+    /// Maximum circular shift in pixels (both axes).
+    pub max_shift: usize,
+}
+
+impl Default for SyntheticSpec {
+    fn default() -> Self {
+        SyntheticSpec {
+            classes: 10,
+            image_size: 32,
+            channels: 3,
+            noise: 0.7,
+            max_shift: 6,
+        }
+    }
+}
+
+/// An in-memory labelled image set (row-major `[N, H, W, C]`).
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub images: Vec<f32>,
+    pub labels: Vec<i32>,
+    pub image_size: usize,
+    pub channels: usize,
+    pub classes: usize,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    pub fn elems_per_image(&self) -> usize {
+        self.image_size * self.image_size * self.channels
+    }
+
+    pub fn image(&self, i: usize) -> &[f32] {
+        let e = self.elems_per_image();
+        &self.images[i * e..(i + 1) * e]
+    }
+
+    /// Gather rows into a batch (artifact calling convention).
+    pub fn gather(&self, indices: &[usize]) -> super::Batch {
+        let e = self.elems_per_image();
+        let mut x = Vec::with_capacity(indices.len() * e);
+        let mut y = Vec::with_capacity(indices.len());
+        for &i in indices {
+            x.extend_from_slice(self.image(i));
+            y.push(self.labels[i]);
+        }
+        super::Batch {
+            x,
+            y,
+            batch: indices.len(),
+        }
+    }
+
+    /// Generate `per_class` samples for each class (balanced, shuffled)
+    /// from freshly drawn prototypes. For train/test splits that must share
+    /// prototypes, use [`SyntheticTask`].
+    pub fn generate(spec: &SyntheticSpec, per_class: usize, rng: &mut Pcg32) -> Dataset {
+        SyntheticTask::new(spec.clone(), rng).generate(per_class, rng)
+    }
+}
+
+/// A fixed classification task: the class prototypes. Train and test sets
+/// are independent sample draws from the *same* task.
+#[derive(Clone, Debug)]
+pub struct SyntheticTask {
+    spec: SyntheticSpec,
+    protos: Vec<Vec<f32>>,
+}
+
+impl SyntheticTask {
+    pub fn new(spec: SyntheticSpec, rng: &mut Pcg32) -> SyntheticTask {
+        let protos = class_prototypes(&spec, rng);
+        SyntheticTask { spec, protos }
+    }
+
+    pub fn spec(&self) -> &SyntheticSpec {
+        &self.spec
+    }
+
+    /// Draw a balanced, shuffled dataset of `per_class` samples per class.
+    pub fn generate(&self, per_class: usize, rng: &mut Pcg32) -> Dataset {
+        let spec = &self.spec;
+        let n = per_class * spec.classes;
+        let e = spec.image_size * spec.image_size * spec.channels;
+        let mut images = vec![0.0f32; n * e];
+        let mut labels = vec![0i32; n];
+
+        // Build a shuffled label sequence first so storage order carries no
+        // class signal.
+        let mut order: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut order);
+        for (slot, &seq) in order.iter().enumerate() {
+            let class = seq % spec.classes;
+            labels[slot] = class as i32;
+            let img = &mut images[slot * e..(slot + 1) * e];
+            render_sample(spec, &self.protos[class], img, rng);
+        }
+        Dataset {
+            images,
+            labels,
+            image_size: spec.image_size,
+            channels: spec.channels,
+            classes: spec.classes,
+        }
+    }
+}
+
+/// Deterministic per-class prototype: 3 sinusoidal components per channel
+/// with class-specific frequencies/phases + a class color bias.
+fn class_prototypes(spec: &SyntheticSpec, rng: &mut Pcg32) -> Vec<Vec<f32>> {
+    let hw = spec.image_size;
+    let e = hw * hw * spec.channels;
+    let mut protos = Vec::with_capacity(spec.classes);
+    for _class in 0..spec.classes {
+        let mut proto = vec![0.0f32; e];
+        for ch in 0..spec.channels {
+            let bias = rng.uniform_range(-0.5, 0.5);
+            // Low integer frequencies keep the pattern smooth enough to
+            // survive patch embedding, high enough to be class-distinctive.
+            let comps: Vec<(f64, f64, f64, f64)> = (0..3)
+                .map(|_| {
+                    (
+                        rng.uniform_range(0.5, 3.5).round(), // fx cycles
+                        rng.uniform_range(0.5, 3.5).round(), // fy cycles
+                        rng.uniform_range(0.0, std::f64::consts::TAU), // phase
+                        rng.uniform_range(0.4, 1.0), // amplitude
+                    )
+                })
+                .collect();
+            for y in 0..hw {
+                for x in 0..hw {
+                    let mut v = bias;
+                    for &(fx, fy, ph, amp) in &comps {
+                        let t = std::f64::consts::TAU
+                            * (fx * x as f64 + fy * y as f64)
+                            / hw as f64
+                            + ph;
+                        v += amp * t.sin();
+                    }
+                    proto[(y * hw + x) * spec.channels + ch] = v as f32;
+                }
+            }
+        }
+        protos.push(proto);
+    }
+    protos
+}
+
+/// One sample: circular shift + amplitude jitter + Gaussian noise.
+fn render_sample(spec: &SyntheticSpec, proto: &[f32], out: &mut [f32], rng: &mut Pcg32) {
+    let hw = spec.image_size;
+    let c = spec.channels;
+    let shift = spec.max_shift as i64;
+    let dx = rng.uniform_range(-(shift as f64), shift as f64 + 1.0) as i64;
+    let dy = rng.uniform_range(-(shift as f64), shift as f64 + 1.0) as i64;
+    let gain = rng.uniform_range(0.8, 1.2) as f32;
+    for y in 0..hw as i64 {
+        let sy = (y - dy).rem_euclid(hw as i64) as usize;
+        for x in 0..hw as i64 {
+            let sx = (x - dx).rem_euclid(hw as i64) as usize;
+            for ch in 0..c {
+                let v = proto[(sy * hw + sx) * c + ch] * gain
+                    + (rng.normal() * spec.noise) as f32;
+                out[(y as usize * hw + x as usize) * c + ch] = v;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::math;
+    use crate::util::prop::forall;
+
+    fn spec() -> SyntheticSpec {
+        SyntheticSpec {
+            classes: 10,
+            image_size: 16,
+            channels: 3,
+            noise: 0.3,
+            max_shift: 3,
+        }
+    }
+
+    #[test]
+    fn generates_balanced_labels() {
+        let mut rng = Pcg32::seeded(1);
+        let d = Dataset::generate(&spec(), 20, &mut rng);
+        assert_eq!(d.len(), 200);
+        let mut counts = vec![0usize; 10];
+        for &l in &d.labels {
+            counts[l as usize] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 20), "{counts:?}");
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let a = Dataset::generate(&spec(), 5, &mut Pcg32::seeded(9));
+        let b = Dataset::generate(&spec(), 5, &mut Pcg32::seeded(9));
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.images, b.images);
+        let c = Dataset::generate(&spec(), 5, &mut Pcg32::seeded(10));
+        assert!(math::max_abs_diff(&a.images, &c.images) > 0.0);
+    }
+
+    #[test]
+    fn images_finite_and_bounded() {
+        let d = Dataset::generate(&spec(), 10, &mut Pcg32::seeded(2));
+        assert!(d.images.iter().all(|v| v.is_finite() && v.abs() < 20.0));
+    }
+
+    #[test]
+    fn same_class_more_similar_than_cross_class() {
+        // Nearest-prototype sanity: mean intra-class distance must be
+        // well below mean inter-class distance, else the task is pure noise.
+        let s = SyntheticSpec {
+            noise: 0.2,
+            max_shift: 1, // small shift: isolates the class-pattern signal
+            ..spec()
+        };
+        let d = Dataset::generate(&s, 12, &mut Pcg32::seeded(3));
+        let mut intra = (0.0f64, 0usize);
+        let mut inter = (0.0f64, 0usize);
+        for i in 0..60 {
+            for j in (i + 1)..60 {
+                let dist = d
+                    .image(i)
+                    .iter()
+                    .zip(d.image(j))
+                    .map(|(a, b)| ((a - b) * (a - b)) as f64)
+                    .sum::<f64>();
+                if d.labels[i] == d.labels[j] {
+                    intra.0 += dist;
+                    intra.1 += 1;
+                } else {
+                    inter.0 += dist;
+                    inter.1 += 1;
+                }
+            }
+        }
+        let intra_mean = intra.0 / intra.1 as f64;
+        let inter_mean = inter.0 / inter.1 as f64;
+        assert!(
+            intra_mean < 0.8 * inter_mean,
+            "intra {intra_mean} vs inter {inter_mean}"
+        );
+    }
+
+    #[test]
+    fn shift_property_images_are_not_identical_within_class() {
+        forall(11, 10, |rng| {
+            let d = Dataset::generate(&spec(), 4, rng);
+            // Find two samples of class 0 — they must differ (noise+shift).
+            let idx: Vec<usize> = (0..d.len()).filter(|&i| d.labels[i] == 0).collect();
+            assert!(math::max_abs_diff(d.image(idx[0]), d.image(idx[1])) > 1e-3);
+        });
+    }
+
+    #[test]
+    fn hundred_class_variant() {
+        let s = SyntheticSpec {
+            classes: 100,
+            ..spec()
+        };
+        let d = Dataset::generate(&s, 2, &mut Pcg32::seeded(4));
+        assert_eq!(d.len(), 200);
+        assert_eq!(d.classes, 100);
+        assert!(d.labels.iter().any(|&l| l == 99));
+    }
+}

@@ -1,0 +1,153 @@
+//! FLOP cost model for simulated compute time.
+//!
+//! Simulated per-step durations are FLOPs / device-speed. FLOPs are
+//! estimated from the model geometry in the artifact manifest with the
+//! standard dense-transformer rule of thumb: a forward pass costs
+//! ≈ 2·P·tokens FLOPs per sample over P touched parameters, a backward
+//! pass ≈ 2× the forward. Absolute accuracy is secondary — the *relative*
+//! cost between split depths and methods is what drives the simulation,
+//! and that is exact under this rule.
+
+/// Model geometry snapshot (extracted from `manifest.json`).
+#[derive(Clone, Debug)]
+pub struct ModelGeometry {
+    pub tokens: usize,
+    pub batch: usize,
+    pub embed_size: usize,
+    pub block_size: usize,
+    pub depth: usize,
+    pub clf_client_size: usize,
+    pub clf_server_size: usize,
+}
+
+/// FLOP estimates per protocol step.
+#[derive(Clone, Debug)]
+pub struct CostModel {
+    geo: ModelGeometry,
+}
+
+impl CostModel {
+    pub fn new(geo: ModelGeometry) -> Self {
+        CostModel { geo }
+    }
+
+    pub fn geometry(&self) -> &ModelGeometry {
+        &self.geo
+    }
+
+    fn enc_params(&self, depth: usize) -> f64 {
+        (self.geo.embed_size + depth * self.geo.block_size) as f64
+    }
+
+    fn srv_params(&self, depth: usize) -> f64 {
+        ((self.geo.depth - depth) * self.geo.block_size) as f64
+    }
+
+    fn per_batch(&self, params: f64) -> f64 {
+        2.0 * params * self.geo.tokens as f64 * self.geo.batch as f64
+    }
+
+    /// Client forward to depth `d` (smashed-data production).
+    pub fn client_fwd_flops(&self, depth: usize) -> f64 {
+        self.per_batch(self.enc_params(depth))
+    }
+
+    /// Phase 1: forward + local head + backward through encoder+head.
+    pub fn client_local_flops(&self, depth: usize) -> f64 {
+        3.0 * self.per_batch(self.enc_params(depth) + self.geo.clf_client_size as f64)
+    }
+
+    /// Phase 2 client side: backward through the encoder given g_z.
+    pub fn client_bwd_flops(&self, depth: usize) -> f64 {
+        2.0 * self.per_batch(self.enc_params(depth))
+    }
+
+    /// Phase 2 server side: fwd+bwd through the suffix + head.
+    pub fn server_step_flops(&self, depth: usize) -> f64 {
+        3.0 * self.per_batch(self.srv_params(depth) + self.geo.clf_server_size as f64)
+    }
+
+    /// Phase 3: the fused update touches 4·N floats (read θ,g_c,g_s; write θ).
+    pub fn tpgf_fuse_flops(&self, depth: usize) -> f64 {
+        4.0 * self.enc_params(depth)
+    }
+
+    /// Full-model evaluation forward for `n` samples.
+    pub fn eval_flops(&self, n: usize) -> f64 {
+        2.0 * (self.enc_params(self.geo.depth) + self.geo.clf_server_size as f64)
+            * self.geo.tokens as f64
+            * n as f64
+    }
+
+    /// Seconds on a device of the given speed.
+    pub fn time_s(&self, flops: f64, device_flops: f64) -> f64 {
+        flops / device_flops.max(1.0)
+    }
+
+    /// Bytes of one smashed-data tensor `[B, T, D]` — what crosses the
+    /// network per batch (f32).
+    pub fn smashed_bytes(&self, dim: usize) -> u64 {
+        (self.geo.batch * self.geo.tokens * dim * 4) as u64
+    }
+
+    /// Bytes of a flat f32 parameter vector.
+    pub fn params_bytes(n: usize) -> u64 {
+        (n * 4) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn geo() -> ModelGeometry {
+        ModelGeometry {
+            tokens: 17,
+            batch: 32,
+            embed_size: 5_000,
+            block_size: 30_000,
+            depth: 8,
+            clf_client_size: 1_000,
+            clf_server_size: 1_000,
+        }
+    }
+
+    #[test]
+    fn deeper_clients_cost_more() {
+        let c = CostModel::new(geo());
+        assert!(c.client_fwd_flops(5) > c.client_fwd_flops(1));
+        assert!(c.client_local_flops(5) > c.client_local_flops(1));
+        // And the server-side cost moves the other way.
+        assert!(c.server_step_flops(1) > c.server_step_flops(5));
+    }
+
+    #[test]
+    fn split_conservation() {
+        // enc(d) + srv(d) params == full model params for every d.
+        let c = CostModel::new(geo());
+        let full = c.enc_params(8);
+        for d in 1..8 {
+            assert!((c.enc_params(d) + c.srv_params(d) - full).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn bwd_costs_twice_fwd() {
+        let c = CostModel::new(geo());
+        assert!((c.client_bwd_flops(3) - 2.0 * c.client_fwd_flops(3)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn time_inversely_proportional_to_speed() {
+        let c = CostModel::new(geo());
+        let f = c.client_fwd_flops(2);
+        assert!((c.time_s(f, 1e9) / c.time_s(f, 2e9) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn smashed_bytes_match_tensor_size() {
+        let c = CostModel::new(geo());
+        assert_eq!(c.smashed_bytes(64), (32 * 17 * 64 * 4) as u64);
+        assert_eq!(CostModel::params_bytes(10), 40);
+    }
+}

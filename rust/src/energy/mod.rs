@@ -1,0 +1,176 @@
+//! Device power states, energy integration, and carbon accounting.
+//!
+//! Reproduces the paper's §III-D metrics: average power, power per
+//! accuracy point (W/%), total energy (power–time integration on the
+//! simulated clock) and CO₂ via a grid emission factor (DESIGN.md §4.3).
+
+pub mod cost;
+
+pub use cost::CostModel;
+
+use crate::network::DeviceProfile;
+
+/// What a device is doing during an interval.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PowerState {
+    Compute,
+    Transmit,
+    Idle,
+}
+
+/// Accumulates energy per device + the server over simulated time.
+#[derive(Clone, Debug)]
+pub struct EnergyMeter {
+    client_energy_j: Vec<f64>,
+    server_energy_j: f64,
+    server_active_w: f64,
+    server_idle_w: f64,
+    co2_g_per_kwh: f64,
+    /// Simulated server busy-time (the remainder of wall time is idle).
+    server_busy_s: f64,
+}
+
+impl EnergyMeter {
+    pub fn new(n_clients: usize, energy: &crate::config::EnergyConfig) -> Self {
+        EnergyMeter {
+            client_energy_j: vec![0.0; n_clients],
+            server_energy_j: 0.0,
+            server_active_w: energy.server_active_w,
+            server_idle_w: energy.server_idle_w,
+            co2_g_per_kwh: energy.co2_g_per_kwh,
+            server_busy_s: 0.0,
+        }
+    }
+
+    /// Charge a client interval in the given state.
+    pub fn client(&mut self, profile: &DeviceProfile, state: PowerState, dt: f64) {
+        let w = match state {
+            PowerState::Compute => profile.active_w,
+            PowerState::Transmit => profile.tx_w,
+            PowerState::Idle => profile.idle_w,
+        };
+        self.client_energy_j[profile.id] += w * dt.max(0.0);
+    }
+
+    /// Charge server busy time (compute on behalf of clients).
+    pub fn server_busy(&mut self, dt: f64) {
+        self.server_busy_s += dt.max(0.0);
+        self.server_energy_j += self.server_active_w * dt.max(0.0);
+    }
+
+    /// At run end: charge server idle draw for the rest of the wall time.
+    pub fn finalize(&mut self, total_sim_time_s: f64) {
+        let idle = (total_sim_time_s - self.server_busy_s).max(0.0);
+        self.server_energy_j += self.server_idle_w * idle;
+    }
+
+    pub fn total_energy_j(&self) -> f64 {
+        self.client_energy_j.iter().sum::<f64>() + self.server_energy_j
+    }
+
+    pub fn client_energy_j(&self, id: usize) -> f64 {
+        self.client_energy_j[id]
+    }
+
+    pub fn server_energy_j(&self) -> f64 {
+        self.server_energy_j
+    }
+
+    /// Fleet-wide average power over the run (paper Table II "Average
+    /// Power"): total energy / simulated wall time.
+    pub fn avg_power_w(&self, total_sim_time_s: f64) -> f64 {
+        if total_sim_time_s <= 0.0 {
+            return 0.0;
+        }
+        self.total_energy_j() / total_sim_time_s
+    }
+
+    /// Power per accuracy point, W/% (paper §III-D, after Brownlee et al.).
+    pub fn power_per_acc(&self, total_sim_time_s: f64, accuracy_pct: f64) -> f64 {
+        if accuracy_pct <= 0.0 {
+            return f64::INFINITY;
+        }
+        self.avg_power_w(total_sim_time_s) / accuracy_pct
+    }
+
+    /// CO₂ grams: kWh × grid factor.
+    pub fn co2_g(&self) -> f64 {
+        self.total_energy_j() / 3.6e6 * self.co2_g_per_kwh
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{EnergyConfig, FleetConfig};
+    use crate::network::sample_fleet;
+    use crate::util::rng::Pcg32;
+
+    fn meter_and_fleet() -> (EnergyMeter, Vec<DeviceProfile>) {
+        let e = EnergyConfig::default();
+        let fleet = sample_fleet(
+            &FleetConfig {
+                clients: 3,
+                ..FleetConfig::default()
+            },
+            &e,
+            &mut Pcg32::seeded(1),
+        );
+        (EnergyMeter::new(3, &e), fleet)
+    }
+
+    #[test]
+    fn integrates_power_times_time() {
+        let (mut m, fleet) = meter_and_fleet();
+        m.client(&fleet[0], PowerState::Compute, 10.0);
+        let expect = fleet[0].active_w * 10.0;
+        assert!((m.client_energy_j(0) - expect).abs() < 1e-9);
+        assert_eq!(m.client_energy_j(1), 0.0);
+    }
+
+    #[test]
+    fn states_have_distinct_draw() {
+        let (mut m, fleet) = meter_and_fleet();
+        m.client(&fleet[0], PowerState::Compute, 1.0);
+        let compute = m.client_energy_j(0);
+        m.client(&fleet[1], PowerState::Idle, 1.0);
+        let idle = m.client_energy_j(1);
+        assert!(compute > idle);
+    }
+
+    #[test]
+    fn server_idle_fills_remaining_time() {
+        let (mut m, _) = meter_and_fleet();
+        m.server_busy(10.0);
+        m.finalize(100.0);
+        let e = EnergyConfig::default();
+        let expect = e.server_active_w * 10.0 + e.server_idle_w * 90.0;
+        assert!((m.server_energy_j() - expect).abs() < 1e-6);
+    }
+
+    #[test]
+    fn avg_power_and_co2() {
+        let (mut m, fleet) = meter_and_fleet();
+        m.client(&fleet[0], PowerState::Compute, 100.0);
+        m.finalize(100.0);
+        let avg = m.avg_power_w(100.0);
+        assert!(avg > 0.0);
+        // 1 kWh at 400 g/kWh = 400 g.
+        let mut m2 = EnergyMeter::new(1, &EnergyConfig::default());
+        m2.server_energy_j = 3.6e6;
+        assert!((m2.co2_g() - 400.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn power_per_acc_guards_zero() {
+        let (m, _) = meter_and_fleet();
+        assert!(m.power_per_acc(10.0, 0.0).is_infinite());
+    }
+
+    #[test]
+    fn negative_dt_clamped() {
+        let (mut m, fleet) = meter_and_fleet();
+        m.client(&fleet[0], PowerState::Compute, -5.0);
+        assert_eq!(m.client_energy_j(0), 0.0);
+    }
+}

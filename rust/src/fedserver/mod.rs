@@ -1,0 +1,319 @@
+//! Collaborative client–server model aggregation (paper §II-D, Eq. 6–8).
+//!
+//! At round end the Fed server merges heterogeneous client encoder
+//! prefixes into the global super-network:
+//!
+//! * **Client weighting (Eq. 6)** — depth share × inverse-loss share:
+//!   `w_i = d_i/Σd_j · (L_i+ε)⁻¹ / Σ(L_j+ε)⁻¹`, where `L_i` is the fused
+//!   loss when the client had server supervision (§II-B rule) and the
+//!   plain local loss for fallback-only clients.
+//! * **Layer-aligned averaging (Eq. 7–8)** — per layer ℓ, only clients
+//!   whose prefix includes ℓ contribute; the consistency term λ pulls the
+//!   average toward the server's current copy of the layer, with the
+//!   closed-form solution `θ̄ℓ = (Σ wᵢ θᵢℓ + λ θsℓ) / (Σ wᵢ + λ)`.
+//!
+//! Classifiers are never aggregated (they have no consistent global
+//! structure — §II-D).
+
+use crate::util::math;
+
+/// Per-client aggregation input: the trained prefix + metadata.
+pub struct ClientUpdate<'a> {
+    pub client: usize,
+    /// Encoder depth d_i (prefix layer count).
+    pub depth: usize,
+    /// Flat encoder prefix parameters (length = Σ layer_sizes[0..depth]).
+    pub params: &'a [f32],
+    /// Loss used for Eq. 6 (fused when server-supervised, local otherwise).
+    pub loss: f64,
+}
+
+/// Eq. 6 weights for a set of updates. Returns one weight per update, in
+/// order; weights sum to ≤ 1 (they are products of two normalized shares).
+pub fn client_weights(updates: &[ClientUpdate<'_>], eps: f64) -> Vec<f64> {
+    let depth_sum: f64 = updates.iter().map(|u| u.depth as f64).sum();
+    let inv_sum: f64 = updates.iter().map(|u| 1.0 / (u.loss + eps)).sum();
+    updates
+        .iter()
+        .map(|u| {
+            let depth_share = u.depth as f64 / depth_sum.max(1e-300);
+            let loss_share = (1.0 / (u.loss + eps)) / inv_sum.max(1e-300);
+            depth_share * loss_share
+        })
+        .collect()
+}
+
+/// Layer-aligned aggregation (Eq. 8) over the global encoder.
+///
+/// * `global` — the full flat encoder θ (server's copy; layer ℓ's segment
+///   doubles as θ_s^ℓ in the consistency term). Updated in place.
+/// * `layer_sizes` — per-layer segment lengths (manifest
+///   `enc_layer_sizes`).
+/// * `lambda` — consistency weight (paper default 0.01).
+///
+/// Returns per-layer contributor counts (diagnostics).
+pub fn aggregate(
+    global: &mut [f32],
+    layer_sizes: &[usize],
+    updates: &[ClientUpdate<'_>],
+    lambda: f64,
+    eps: f64,
+) -> Vec<usize> {
+    let weights = client_weights(updates, eps);
+    let items: Vec<(usize, &[f32], f64)> = updates
+        .iter()
+        .zip(weights.iter())
+        .map(|(u, &w)| (u.depth, u.params, w))
+        .collect();
+    aggregate_weighted(global, layer_sizes, &items, lambda)
+}
+
+/// Layer-aligned weighted average with explicit per-client weights — the
+/// computational core of Eq. 8, also reused by the FedAvg-style baselines
+/// (sample-count weights, λ = 0).
+///
+/// `items` = `(depth, prefix_params, weight)`.
+pub fn aggregate_weighted(
+    global: &mut [f32],
+    layer_sizes: &[usize],
+    items: &[(usize, &[f32], f64)],
+    lambda: f64,
+) -> Vec<usize> {
+    assert_eq!(
+        layer_sizes.iter().sum::<usize>(),
+        global.len(),
+        "layer table does not partition the global encoder"
+    );
+    for (i, (depth, params, _)) in items.iter().enumerate() {
+        let expect: usize = layer_sizes[..*depth].iter().sum();
+        assert_eq!(
+            params.len(),
+            expect,
+            "item {i} params length {} != prefix size {expect}",
+            params.len()
+        );
+    }
+
+    let mut contributors = vec![0usize; layer_sizes.len()];
+    let mut scratch: Vec<f32> = Vec::new();
+
+    let mut off = 0usize;
+    for (layer, &len) in layer_sizes.iter().enumerate() {
+        let holders: Vec<usize> = items
+            .iter()
+            .enumerate()
+            .filter(|(_, (depth, _, _))| *depth > layer)
+            .map(|(i, _)| i)
+            .collect();
+        contributors[layer] = holders.len();
+        if holders.is_empty() {
+            // No client trained this layer: server copy stands (§II-D
+            // "if only one source provides layer ℓ, used directly").
+            off += len;
+            continue;
+        }
+
+        // θ̄ℓ = (Σ wᵢ θᵢℓ + λ θsℓ) / (Σ wᵢ + λ)   — closed form of Eq. 7.
+        scratch.clear();
+        scratch.resize(len, 0.0);
+        let mut wsum = 0.0f64;
+        for &i in &holders {
+            let (_, params, w) = &items[i];
+            let seg = &params[off..off + len];
+            math::axpy(&mut scratch, seg, *w as f32);
+            wsum += *w;
+        }
+        let g_seg = &mut global[off..off + len];
+        let denom = (wsum + lambda) as f32;
+        for (g, s) in g_seg.iter_mut().zip(scratch.iter()) {
+            *g = (s + lambda as f32 * *g) / denom;
+        }
+        off += len;
+    }
+    contributors
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+    use crate::util::rng::Pcg32;
+
+    const EPS: f64 = 1e-8;
+
+    fn sizes() -> Vec<usize> {
+        vec![4, 3, 3, 2] // 4-layer toy encoder, 12 params total
+    }
+
+    fn prefix(v: f32, depth: usize) -> Vec<f32> {
+        vec![v; sizes()[..depth].iter().sum::<usize>()]
+    }
+
+    #[test]
+    fn weights_match_eq6_by_hand() {
+        let p1 = prefix(0.0, 2);
+        let p2 = prefix(0.0, 6.min(4)); // depth 4
+        let updates = vec![
+            ClientUpdate { client: 0, depth: 2, params: &p1, loss: 1.0 },
+            ClientUpdate { client: 1, depth: 4, params: &p2, loss: 0.5 },
+        ];
+        let w = client_weights(&updates, 0.0);
+        // depth shares: 2/6, 4/6; inv-loss shares: 1/(1+2)=1/3, 2/3.
+        assert!((w[0] - (2.0 / 6.0) * (1.0 / 3.0)).abs() < 1e-9);
+        assert!((w[1] - (4.0 / 6.0) * (2.0 / 3.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn deeper_and_lower_loss_weigh_more() {
+        let p = prefix(0.0, 2);
+        let deep = prefix(0.0, 3);
+        let updates = vec![
+            ClientUpdate { client: 0, depth: 2, params: &p, loss: 1.0 },
+            ClientUpdate { client: 1, depth: 3, params: &deep, loss: 1.0 },
+        ];
+        let w = client_weights(&updates, EPS);
+        assert!(w[1] > w[0]);
+
+        let updates = vec![
+            ClientUpdate { client: 0, depth: 2, params: &p, loss: 2.0 },
+            ClientUpdate { client: 1, depth: 2, params: &p, loss: 0.5 },
+        ];
+        let w = client_weights(&updates, EPS);
+        assert!(w[1] > w[0]);
+    }
+
+    #[test]
+    fn aggregate_closed_form_single_client() {
+        // One client, one layer held: θ̄ = (w θ_c + λ θ_s)/(w + λ).
+        let mut global = vec![1.0f32; 12];
+        let p = prefix(3.0, 1);
+        let updates = vec![ClientUpdate { client: 0, depth: 1, params: &p, loss: 1.0 }];
+        let w = client_weights(&updates, EPS)[0];
+        let lambda = 0.01;
+        aggregate(&mut global, &sizes(), &updates, lambda, EPS);
+        let expect = ((w * 3.0 + lambda * 1.0) / (w + lambda)) as f32;
+        for &g in &global[..4] {
+            assert!((g - expect).abs() < 1e-5);
+        }
+        // Untouched deeper layers keep the server copy.
+        for &g in &global[4..] {
+            assert_eq!(g, 1.0);
+        }
+    }
+
+    #[test]
+    fn deeper_layers_only_from_deep_clients() {
+        let mut global = vec![0.0f32; 12];
+        let shallow = prefix(1.0, 1);
+        let deep = prefix(2.0, 4);
+        let updates = vec![
+            ClientUpdate { client: 0, depth: 1, params: &shallow, loss: 1.0 },
+            ClientUpdate { client: 1, depth: 4, params: &deep, loss: 1.0 },
+        ];
+        let contributors = aggregate(&mut global, &sizes(), &updates, 0.0, EPS);
+        assert_eq!(contributors, vec![2, 1, 1, 1]);
+        // Layer 0: mix of 1.0 and 2.0 → strictly between.
+        assert!(global[0] > 1.0 && global[0] < 2.0);
+        // Layers 1..: only the deep client → exactly 2.0 (λ=0).
+        for &g in &global[4..] {
+            assert!((g - 2.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn lambda_zero_ignores_server_lambda_large_keeps_server() {
+        let mut g0 = vec![10.0f32; 12];
+        let mut g1 = vec![10.0f32; 12];
+        let p = prefix(0.0, 4);
+        let updates = vec![ClientUpdate { client: 0, depth: 4, params: &p, loss: 1.0 }];
+        aggregate(&mut g0, &sizes(), &updates, 0.0, EPS);
+        assert!(g0.iter().all(|&v| v.abs() < 1e-6)); // pure client value
+        aggregate(&mut g1, &sizes(), &updates, 1e9, EPS);
+        assert!(g1.iter().all(|&v| (v - 10.0).abs() < 1e-3)); // pinned to server
+    }
+
+    #[test]
+    fn aggregate_is_convex_combination_per_layer() {
+        forall(5, 30, |rng: &mut Pcg32| {
+            let layer_sizes = sizes();
+            let total: usize = layer_sizes.iter().sum();
+            let mut global: Vec<f32> = (0..total).map(|_| rng.normal() as f32).collect();
+            let g0 = global.clone();
+
+            let n = 1 + rng.uniform_usize(6);
+            let depths: Vec<usize> = (0..n).map(|_| 1 + rng.uniform_usize(4)).collect();
+            let params: Vec<Vec<f32>> = depths
+                .iter()
+                .map(|&d| {
+                    let len: usize = layer_sizes[..d].iter().sum();
+                    (0..len).map(|_| rng.normal() as f32).collect()
+                })
+                .collect();
+            let losses: Vec<f64> = (0..n).map(|_| rng.uniform_range(0.05, 5.0)).collect();
+            let updates: Vec<ClientUpdate<'_>> = (0..n)
+                .map(|i| ClientUpdate {
+                    client: i,
+                    depth: depths[i],
+                    params: &params[i],
+                    loss: losses[i],
+                })
+                .collect();
+
+            aggregate(&mut global, &layer_sizes, &updates, 0.01, EPS);
+
+            // Every aggregated parameter lies within [min, max] of its
+            // sources (client values + server prior) — convexity of Eq. 8.
+            let mut off = 0;
+            for (layer, &len) in layer_sizes.iter().enumerate() {
+                for k in 0..len {
+                    let mut lo = g0[off + k];
+                    let mut hi = g0[off + k];
+                    for (i, u) in updates.iter().enumerate() {
+                        if u.depth > layer {
+                            let v = params[i][off + k];
+                            lo = lo.min(v);
+                            hi = hi.max(v);
+                        }
+                    }
+                    let v = global[off + k];
+                    assert!(
+                        v >= lo - 1e-4 && v <= hi + 1e-4,
+                        "layer {layer} param {k}: {v} outside [{lo}, {hi}]"
+                    );
+                }
+                off += len;
+            }
+        });
+    }
+
+    #[test]
+    fn equal_everything_preserves_value() {
+        // All clients and the server agree ⇒ aggregation is a no-op.
+        let mut global = vec![2.5f32; 12];
+        let p1 = prefix(2.5, 2);
+        let p2 = prefix(2.5, 3);
+        let updates = vec![
+            ClientUpdate { client: 0, depth: 2, params: &p1, loss: 0.8 },
+            ClientUpdate { client: 1, depth: 3, params: &p2, loss: 1.3 },
+        ];
+        aggregate(&mut global, &sizes(), &updates, 0.01, EPS);
+        assert!(global.iter().all(|&v| (v - 2.5).abs() < 1e-5));
+    }
+
+    #[test]
+    #[should_panic]
+    fn wrong_prefix_length_rejected() {
+        let mut global = vec![0.0f32; 12];
+        let bad = vec![0.0f32; 5]; // depth-2 prefix should be 7 params
+        let updates = vec![ClientUpdate { client: 0, depth: 2, params: &bad, loss: 1.0 }];
+        aggregate(&mut global, &sizes(), &updates, 0.01, EPS);
+    }
+
+    #[test]
+    fn empty_update_set_keeps_global() {
+        let mut global = vec![1.25f32; 12];
+        let contributors = aggregate(&mut global, &sizes(), &[], 0.01, EPS);
+        assert!(global.iter().all(|&v| v == 1.25));
+        assert_eq!(contributors, vec![0; 4]);
+    }
+}

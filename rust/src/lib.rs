@@ -1,0 +1,74 @@
+//! # SuperSFL — resource-heterogeneous federated split learning
+//!
+//! Rust implementation of the coordination layer of *"SuperSFL:
+//! Resource-Heterogeneous Federated Split Learning with Weight-Sharing
+//! Super-Networks"* (CS.DC 2026), on top of AOT-compiled JAX/Pallas compute
+//! artifacts executed through the PJRT C API (`xla` crate).
+//!
+//! The crate is organised bottom-up (see `DESIGN.md` for the full system
+//! inventory):
+//!
+//! * [`util`] — JSON, PRNG, vector math, property-testing helpers
+//!   (hand-rolled: the offline build has no serde/proptest/criterion).
+//! * [`config`] — typed experiment configuration with JSON overrides.
+//! * [`data`] — synthetic CIFAR-like dataset + Dirichlet non-IID partitioner.
+//! * [`network`] — simulated edge network: latency, bandwidth, failures,
+//!   timeouts, byte accounting, and the simulated cluster clock.
+//! * [`energy`] — device power states, energy integration, CO₂ accounting.
+//! * [`metrics`] — round records, run summaries, CSV/JSON export.
+//! * [`runtime`] — PJRT artifact registry and executor (loads
+//!   `artifacts/*.hlo.txt` per the manifest; Python never runs here).
+//! * [`allocation`] — resource-aware subnetwork allocation (paper Eq. 1).
+//! * [`tpgf`] — Three-Phase Gradient Fusion weighting + fused update
+//!   (paper Eq. 3–4), Rust SIMD-friendly loop and Pallas-artifact paths.
+//! * [`client`] — the fault-tolerant split-learning client (paper Alg. 3).
+//! * [`server`] — the main server: deep-suffix execution over the shared
+//!   super-network.
+//! * [`fedserver`] — collaborative layer-aligned aggregation (paper Eq. 6–8).
+//! * [`orchestrator`] — the round loop tying everything together.
+//! * [`baselines`] — SFL (SplitFed) and DFL comparators.
+//! * [`bench_util`] — the bench harness used by `cargo bench` targets.
+
+pub mod allocation;
+pub mod baselines;
+pub mod bench_util;
+pub mod client;
+pub mod config;
+pub mod data;
+pub mod energy;
+pub mod fedserver;
+pub mod metrics;
+pub mod network;
+pub mod orchestrator;
+pub mod runtime;
+pub mod server;
+pub mod tpgf;
+pub mod util;
+
+pub use config::ExperimentConfig;
+pub use orchestrator::{run_experiment, RunResult};
+
+/// Crate-wide error type.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    #[error("xla: {0}")]
+    Xla(String),
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("json: {0}")]
+    Json(String),
+    #[error("config: {0}")]
+    Config(String),
+    #[error("manifest: {0}")]
+    Manifest(String),
+    #[error("shape mismatch: {0}")]
+    Shape(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;

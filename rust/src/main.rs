@@ -1,0 +1,214 @@
+//! `supersfl` — the leader binary / launcher.
+//!
+//! ```text
+//! supersfl train    --method ssfl --clients 50 --classes 10 --rounds 30
+//! supersfl allocate --clients 50            # Eq. 1 allocation table
+//! supersfl inspect                          # artifact manifest summary
+//! ```
+//!
+//! Any config key from `config::ExperimentConfig::apply_json` can be set
+//! with `--set key=value` (repeatable) or a `--config file.json`.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use supersfl::config::{ExperimentConfig, Method};
+use supersfl::metrics::Table;
+use supersfl::runtime::Runtime;
+use supersfl::util::json::{self, JsonValue};
+use supersfl::{allocation, network, orchestrator, util::rng::Pcg32};
+
+mod cli;
+
+fn main() -> ExitCode {
+    let args = cli::Args::parse(std::env::args().skip(1));
+    let result = match args.positional.first().map(|s| s.as_str()) {
+        Some("train") => cmd_train(&args),
+        Some("allocate") => cmd_allocate(&args),
+        Some("inspect") => cmd_inspect(&args),
+        Some(other) => {
+            eprintln!("unknown command '{other}'");
+            usage();
+            return ExitCode::FAILURE;
+        }
+        None => {
+            usage();
+            return ExitCode::FAILURE;
+        }
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn usage() {
+    eprintln!(
+        "usage: supersfl <train|allocate|inspect> [--method ssfl|sfl|dfl] \
+         [--clients N] [--classes 10|100] [--rounds N] [--seed N] \
+         [--config file.json] [--set key=value]... [--artifacts DIR] [--out DIR]"
+    );
+}
+
+fn build_config(args: &cli::Args) -> anyhow::Result<ExperimentConfig> {
+    let mut cfg = ExperimentConfig::default();
+    if let Some(path) = args.get("config") {
+        cfg = ExperimentConfig::from_json_file(&PathBuf::from(path))?;
+    }
+    if let Some(m) = args.get("method") {
+        cfg.method = Method::parse(m)?;
+    }
+    if let Some(v) = args.get("clients") {
+        cfg.fleet.clients = v.parse()?;
+    }
+    if let Some(v) = args.get("classes") {
+        cfg.data.classes = v.parse()?;
+    }
+    if let Some(v) = args.get("rounds") {
+        cfg.train.rounds = v.parse()?;
+    }
+    if let Some(v) = args.get("seed") {
+        cfg.train.seed = v.parse()?;
+    }
+    if let Some(v) = args.get("target") {
+        cfg.train.target_accuracy = Some(v.parse()?);
+    }
+    if let Some(v) = args.get("artifacts") {
+        cfg.artifacts_dir = PathBuf::from(v);
+    }
+    for kv in args.get_all("set") {
+        let (k, v) = kv
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("--set expects key=value, got '{kv}'"))?;
+        // Numbers and strings both arrive as text; try number first.
+        let val = match v.parse::<f64>() {
+            Ok(n) => JsonValue::Number(n),
+            Err(_) => match v {
+                "true" => JsonValue::Bool(true),
+                "false" => JsonValue::Bool(false),
+                _ => JsonValue::String(v.to_string()),
+            },
+        };
+        let mut o = JsonValue::object();
+        o.set(k, val);
+        cfg.apply_json(&o)?;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_train(args: &cli::Args) -> anyhow::Result<()> {
+    let cfg = build_config(args)?;
+    println!(
+        "supersfl train: method={} clients={} classes={} rounds={} seed={}",
+        cfg.method.as_str(),
+        cfg.fleet.clients,
+        cfg.data.classes,
+        cfg.train.rounds,
+        cfg.train.seed
+    );
+    let rt = Runtime::load(&cfg.artifacts_dir)?;
+    let t0 = std::time::Instant::now();
+    let res = orchestrator::run_experiment(&rt, &cfg)?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mut table = Table::new(&["round", "acc", "loss(c)", "loss(s)", "comm MB", "sim t(s)", "fallback"]);
+    for r in &res.metrics.rounds {
+        table.row(&[
+            r.round.to_string(),
+            format!("{:.3}", r.accuracy),
+            format!("{:.3}", r.mean_client_loss),
+            format!("{:.3}", r.mean_server_loss),
+            format!("{:.1}", r.cum_comm_mb),
+            format!("{:.1}", r.sim_time_s),
+            r.fallback_steps.to_string(),
+        ]);
+    }
+    println!("{}", table.render());
+    println!(
+        "final acc {:.3} | best {:.3} | comm {:.1} MB | sim time {:.1} s | avg power {:.0} W | CO2 {:.1} g",
+        res.metrics.final_accuracy,
+        res.metrics.best_accuracy,
+        res.metrics.total_comm_mb,
+        res.metrics.total_sim_time_s,
+        res.metrics.avg_power_w,
+        res.metrics.co2_g
+    );
+    if let Some(r) = res.metrics.rounds_to_target {
+        println!("target reached at round {r}");
+    }
+    let st = rt.stats();
+    println!(
+        "runtime: {} executions, {:.2}s exec, {:.2}s marshal, {} compiles ({:.1}s), wall {:.1}s",
+        st.executions, st.exec_time_s, st.marshal_time_s, st.compile_count, st.compile_time_s, wall
+    );
+
+    if let Some(out) = args.get("out") {
+        let dir = PathBuf::from(out);
+        let base = format!("{}_{}", cfg.name, cfg.method.as_str());
+        res.metrics.write_csv(&dir.join(format!("{base}.csv")))?;
+        res.metrics.write_json(&dir.join(format!("{base}.json")))?;
+        std::fs::write(
+            dir.join(format!("{base}_config.json")),
+            cfg.to_json().to_string_pretty(),
+        )?;
+        println!("wrote results to {}", dir.display());
+    }
+    Ok(())
+}
+
+fn cmd_allocate(args: &cli::Args) -> anyhow::Result<()> {
+    let cfg = build_config(args)?;
+    let rt = Runtime::load(&cfg.artifacts_dir)?;
+    let mut rng = Pcg32::new(cfg.train.seed, 0xD15EA5E).fork(3);
+    let profiles = network::sample_fleet(&cfg.fleet, &cfg.energy, &mut rng);
+    let assignments = allocation::allocate(&profiles, &cfg.alloc, rt.model().depth);
+
+    let mut table = Table::new(&["client", "mem GB", "lat ms", "GFLOP/s", "depth", "params"]);
+    for (p, a) in profiles.iter().zip(assignments.iter()) {
+        let params: usize = rt.model().enc_layer_sizes[..a.depth].iter().sum();
+        table.row(&[
+            p.id.to_string(),
+            format!("{:.1}", p.mem_gb),
+            format!("{:.0}", p.latency_s * 1e3),
+            format!("{:.0}", p.flops / 1e9),
+            a.depth.to_string(),
+            params.to_string(),
+        ]);
+    }
+    println!("{}", table.render());
+    let hist = allocation::depth_histogram(&assignments, rt.model().depth);
+    println!("depth histogram: {hist:?}");
+    Ok(())
+}
+
+fn cmd_inspect(args: &cli::Args) -> anyhow::Result<()> {
+    let dir = args
+        .get("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"));
+    let manifest = json::parse_file(&dir.join("manifest.json"))?;
+    let rt = Runtime::load(&dir)?;
+    let m = rt.model();
+    println!("artifacts: {}", dir.display());
+    println!(
+        "model: dim={} depth={} tokens={} batch={} eval_batch={} enc_params={}",
+        m.dim, m.depth, m.tokens, m.batch, m.eval_batch, m.enc_full_size
+    );
+    println!("enc layer sizes: {:?}", m.enc_layer_sizes);
+    let names = rt.manifest.artifact_names();
+    println!("{} artifacts:", names.len());
+    for n in names {
+        println!("  {n}");
+    }
+    let profile = manifest
+        .get("build")
+        .and_then(|b| b.get("profile"))
+        .and_then(|p| p.as_str())
+        .unwrap_or("?");
+    println!("build profile: {profile}");
+    Ok(())
+}

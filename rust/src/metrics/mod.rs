@@ -1,0 +1,292 @@
+//! Experiment recording: per-round metrics, run summaries, CSV/JSON export.
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::util::json::JsonValue;
+use crate::Result;
+
+/// One global round's measurements.
+#[derive(Clone, Debug, Default)]
+pub struct RoundRecord {
+    pub round: usize,
+    /// Cumulative simulated time at end of round, s.
+    pub sim_time_s: f64,
+    /// Test accuracy in [0, 1].
+    pub accuracy: f64,
+    /// Mean client-side loss over the round (local heads; SSFL only).
+    pub mean_client_loss: f64,
+    /// Mean server-side loss over the round (when server was reachable).
+    pub mean_server_loss: f64,
+    /// Bytes moved this round (both directions), MB.
+    pub comm_mb: f64,
+    /// Cumulative communication, MB.
+    pub cum_comm_mb: f64,
+    /// Cumulative energy, J.
+    pub energy_j: f64,
+    /// Client steps that fell back to local-only training this round.
+    pub fallback_steps: usize,
+    /// Client steps with full server supervision this round.
+    pub server_steps: usize,
+}
+
+/// Whole-run result + the per-round trajectory.
+#[derive(Clone, Debug)]
+pub struct RunMetrics {
+    pub name: String,
+    pub method: String,
+    pub rounds: Vec<RoundRecord>,
+    pub final_accuracy: f64,
+    pub best_accuracy: f64,
+    /// First round (1-based) at which `target` was reached, if configured.
+    pub rounds_to_target: Option<usize>,
+    pub comm_mb_to_target: Option<f64>,
+    pub sim_time_to_target: Option<f64>,
+    pub total_comm_mb: f64,
+    pub total_sim_time_s: f64,
+    pub total_energy_j: f64,
+    pub avg_power_w: f64,
+    pub power_per_acc: f64,
+    pub co2_g: f64,
+}
+
+impl RunMetrics {
+    pub fn from_rounds(
+        name: &str,
+        method: &str,
+        rounds: Vec<RoundRecord>,
+        target: Option<f64>,
+        total_energy_j: f64,
+        avg_power_w: f64,
+        co2_g: f64,
+    ) -> RunMetrics {
+        let best = rounds.iter().map(|r| r.accuracy).fold(0.0, f64::max);
+        let fin = rounds.last().map(|r| r.accuracy).unwrap_or(0.0);
+        let total_comm = rounds.last().map(|r| r.cum_comm_mb).unwrap_or(0.0);
+        let total_time = rounds.last().map(|r| r.sim_time_s).unwrap_or(0.0);
+        let hit = target.and_then(|t| rounds.iter().find(|r| r.accuracy >= t));
+        RunMetrics {
+            name: name.to_string(),
+            method: method.to_string(),
+            rounds_to_target: hit.map(|r| r.round),
+            comm_mb_to_target: hit.map(|r| r.cum_comm_mb),
+            sim_time_to_target: hit.map(|r| r.sim_time_s),
+            final_accuracy: fin,
+            best_accuracy: best,
+            total_comm_mb: total_comm,
+            total_sim_time_s: total_time,
+            total_energy_j,
+            avg_power_w,
+            power_per_acc: if best > 0.0 {
+                avg_power_w / (best * 100.0)
+            } else {
+                f64::INFINITY
+            },
+            co2_g,
+            rounds,
+        }
+    }
+
+    /// CSV of the per-round trajectory (one file per run).
+    pub fn write_csv(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        writeln!(
+            f,
+            "round,sim_time_s,accuracy,mean_client_loss,mean_server_loss,comm_mb,cum_comm_mb,energy_j,fallback_steps,server_steps"
+        )?;
+        for r in &self.rounds {
+            writeln!(
+                f,
+                "{},{:.3},{:.4},{:.4},{:.4},{:.3},{:.3},{:.1},{},{}",
+                r.round,
+                r.sim_time_s,
+                r.accuracy,
+                r.mean_client_loss,
+                r.mean_server_loss,
+                r.comm_mb,
+                r.cum_comm_mb,
+                r.energy_j,
+                r.fallback_steps,
+                r.server_steps
+            )?;
+        }
+        Ok(())
+    }
+
+    /// Summary as JSON (for EXPERIMENTS.md provenance).
+    pub fn to_json(&self) -> JsonValue {
+        let n = JsonValue::Number;
+        let mut o = JsonValue::object();
+        o.set("name", JsonValue::String(self.name.clone()));
+        o.set("method", JsonValue::String(self.method.clone()));
+        o.set("rounds_run", n(self.rounds.len() as f64));
+        o.set("final_accuracy", n(self.final_accuracy));
+        o.set("best_accuracy", n(self.best_accuracy));
+        match self.rounds_to_target {
+            Some(r) => o.set("rounds_to_target", n(r as f64)),
+            None => o.set("rounds_to_target", JsonValue::Null),
+        }
+        match self.comm_mb_to_target {
+            Some(v) => o.set("comm_mb_to_target", n(v)),
+            None => o.set("comm_mb_to_target", JsonValue::Null),
+        }
+        match self.sim_time_to_target {
+            Some(v) => o.set("sim_time_to_target", n(v)),
+            None => o.set("sim_time_to_target", JsonValue::Null),
+        }
+        o.set("total_comm_mb", n(self.total_comm_mb));
+        o.set("total_sim_time_s", n(self.total_sim_time_s));
+        o.set("total_energy_j", n(self.total_energy_j));
+        o.set("avg_power_w", n(self.avg_power_w));
+        o.set("power_per_acc", n(self.power_per_acc));
+        o.set("co2_g", n(self.co2_g));
+        o
+    }
+
+    pub fn write_json(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json().to_string_pretty())?;
+        Ok(())
+    }
+}
+
+/// Fixed-width table printer for bench/report output.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "column mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let line = |out: &mut String, cells: &[String]| {
+            for (i, c) in cells.iter().enumerate() {
+                out.push_str(&format!("{:<w$}  ", c, w = widths[i]));
+            }
+            while out.ends_with(' ') {
+                out.pop();
+            }
+            out.push('\n');
+        };
+        line(&mut out, &self.headers);
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        line(&mut out, &sep);
+        for row in &self.rows {
+            line(&mut out, row);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rounds() -> Vec<RoundRecord> {
+        (1..=5)
+            .map(|i| RoundRecord {
+                round: i,
+                sim_time_s: i as f64 * 10.0,
+                accuracy: 0.1 * i as f64 + 0.3,
+                comm_mb: 5.0,
+                cum_comm_mb: 5.0 * i as f64,
+                ..RoundRecord::default()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn target_detection_first_crossing() {
+        let m = RunMetrics::from_rounds("t", "ssfl", rounds(), Some(0.58), 100.0, 10.0, 1.0);
+        // acc(3) = 0.6 is the first >= 0.58.
+        assert_eq!(m.rounds_to_target, Some(3));
+        assert_eq!(m.comm_mb_to_target, Some(15.0));
+        assert_eq!(m.sim_time_to_target, Some(30.0));
+    }
+
+    #[test]
+    fn no_target_gives_none() {
+        let m = RunMetrics::from_rounds("t", "sfl", rounds(), Some(0.99), 1.0, 1.0, 1.0);
+        assert_eq!(m.rounds_to_target, None);
+        let m2 = RunMetrics::from_rounds("t", "sfl", rounds(), None, 1.0, 1.0, 1.0);
+        assert_eq!(m2.rounds_to_target, None);
+    }
+
+    #[test]
+    fn summary_totals_from_last_round() {
+        let m = RunMetrics::from_rounds("t", "dfl", rounds(), None, 500.0, 20.0, 2.0);
+        assert_eq!(m.total_comm_mb, 25.0);
+        assert_eq!(m.total_sim_time_s, 50.0);
+        assert!((m.final_accuracy - 0.8).abs() < 1e-12);
+        assert!((m.best_accuracy - 0.8).abs() < 1e-12);
+        assert!((m.power_per_acc - 20.0 / 80.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let m = RunMetrics::from_rounds("t", "ssfl", rounds(), None, 1.0, 1.0, 1.0);
+        let tmp = std::env::temp_dir().join("supersfl_test_metrics.csv");
+        m.write_csv(&tmp).unwrap();
+        let text = std::fs::read_to_string(&tmp).unwrap();
+        assert_eq!(text.lines().count(), 6); // header + 5 rounds
+        assert!(text.starts_with("round,"));
+        std::fs::remove_file(&tmp).ok();
+    }
+
+    #[test]
+    fn json_has_required_keys() {
+        let m = RunMetrics::from_rounds("t", "ssfl", rounds(), Some(0.5), 1.0, 1.0, 1.0);
+        let j = m.to_json();
+        for key in [
+            "name",
+            "method",
+            "final_accuracy",
+            "rounds_to_target",
+            "total_comm_mb",
+            "power_per_acc",
+            "co2_g",
+        ] {
+            assert!(j.get(key).is_some(), "missing {key}");
+        }
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["a", "metric"]);
+        t.row(&["x".into(), "1.5".into()]);
+        t.row(&["longer".into(), "2".into()]);
+        let s = t.render();
+        assert!(s.contains("a       metric"));
+        assert!(s.lines().count() == 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+}

@@ -1,0 +1,86 @@
+//! Simulated cluster clock.
+//!
+//! Clients run in parallel in the modeled system, so a round's duration is
+//! the *maximum* over per-client branch times (stragglers dominate, as in
+//! the paper's synchronized rounds), plus serial phases (aggregation,
+//! evaluation). The clock only ever moves forward.
+
+/// Forward-only simulated time.
+#[derive(Clone, Debug, Default)]
+pub struct SimClock {
+    t: f64,
+}
+
+impl SimClock {
+    pub fn new() -> Self {
+        SimClock { t: 0.0 }
+    }
+
+    pub fn now(&self) -> f64 {
+        self.t
+    }
+
+    /// Advance by a serial phase.
+    pub fn advance(&mut self, dt: f64) {
+        debug_assert!(dt >= 0.0, "negative dt {dt}");
+        self.t += dt.max(0.0);
+    }
+
+    /// Advance by a set of parallel branches: the slowest one gates the
+    /// round (synchronized aggregation barrier).
+    pub fn advance_parallel(&mut self, branch_times: &[f64]) -> f64 {
+        let dt = branch_times.iter().cloned().fold(0.0, f64::max);
+        self.advance(dt);
+        dt
+    }
+}
+
+/// Accumulator for one client's branch within a round.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Branch {
+    pub t: f64,
+}
+
+impl Branch {
+    pub fn add(&mut self, dt: f64) {
+        debug_assert!(dt >= 0.0);
+        self.t += dt.max(0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn starts_at_zero_and_accumulates() {
+        let mut c = SimClock::new();
+        assert_eq!(c.now(), 0.0);
+        c.advance(1.5);
+        c.advance(0.5);
+        assert!((c.now() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parallel_takes_straggler_max() {
+        let mut c = SimClock::new();
+        let dt = c.advance_parallel(&[0.1, 3.0, 0.2]);
+        assert_eq!(dt, 3.0);
+        assert_eq!(c.now(), 3.0);
+    }
+
+    #[test]
+    fn empty_parallel_is_noop() {
+        let mut c = SimClock::new();
+        c.advance_parallel(&[]);
+        assert_eq!(c.now(), 0.0);
+    }
+
+    #[test]
+    fn branch_accumulates() {
+        let mut b = Branch::default();
+        b.add(0.25);
+        b.add(0.75);
+        assert!((b.t - 1.0).abs() < 1e-12);
+    }
+}

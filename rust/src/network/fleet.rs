@@ -1,0 +1,135 @@
+//! Heterogeneous device fleet sampling (paper §III-A).
+//!
+//! Each simulated client gets a resource profile drawn once at experiment
+//! start: memory U[2,16] GB and latency U[20,200] ms exactly as the paper
+//! samples them, plus compute speed, link bandwidths and a power draw used
+//! by the cost/energy models.
+
+use crate::config::{EnergyConfig, FleetConfig};
+use crate::util::rng::Pcg32;
+
+/// One client device's static resource profile — the `C_i = (m_i, lat_i)`
+/// of paper Eq. 1 plus simulator-side attributes.
+#[derive(Clone, Debug)]
+pub struct DeviceProfile {
+    pub id: usize,
+    /// Memory capacity, GB (paper: reported via psutil//proc/meminfo).
+    pub mem_gb: f64,
+    /// Round-trip latency to the server, seconds (paper: measured with a
+    /// dummy 2-layer CNN probe during initialization).
+    pub latency_s: f64,
+    /// Device compute speed, FLOP/s.
+    pub flops: f64,
+    /// Uplink bandwidth, bytes/s.
+    pub uplink_bps: f64,
+    /// Downlink bandwidth, bytes/s.
+    pub downlink_bps: f64,
+    /// Power while computing, W.
+    pub active_w: f64,
+    /// Power while idle, W.
+    pub idle_w: f64,
+    /// Radio power while transmitting, W.
+    pub tx_w: f64,
+}
+
+/// Sample a fleet of `cfg.clients` profiles.
+pub fn sample_fleet(
+    cfg: &FleetConfig,
+    energy: &EnergyConfig,
+    rng: &mut Pcg32,
+) -> Vec<DeviceProfile> {
+    (0..cfg.clients)
+        .map(|id| {
+            let mem_gb = rng.uniform_range(cfg.mem_gb.0, cfg.mem_gb.1);
+            let latency_s = rng.uniform_range(cfg.latency_ms.0, cfg.latency_ms.1) / 1e3;
+            let flops = rng.uniform_range(cfg.compute_gflops.0, cfg.compute_gflops.1) * 1e9;
+            // Power correlates with compute capability: faster devices are
+            // bigger SoCs. Map the compute draw linearly into the range.
+            let frac = (flops / 1e9 - cfg.compute_gflops.0)
+                / (cfg.compute_gflops.1 - cfg.compute_gflops.0).max(1e-9);
+            let active_w = energy.client_active_w.0
+                + frac * (energy.client_active_w.1 - energy.client_active_w.0);
+            DeviceProfile {
+                id,
+                mem_gb,
+                latency_s,
+                flops,
+                uplink_bps: rng.uniform_range(cfg.uplink_mbps.0, cfg.uplink_mbps.1) * 1e6
+                    / 8.0,
+                downlink_bps: rng.uniform_range(cfg.downlink_mbps.0, cfg.downlink_mbps.1)
+                    * 1e6
+                    / 8.0,
+                active_w,
+                idle_w: energy.client_idle_w,
+                tx_w: energy.client_tx_w,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn profiles_within_configured_ranges() {
+        forall(1, 20, |rng| {
+            let cfg = FleetConfig {
+                clients: 25,
+                ..FleetConfig::default()
+            };
+            let fleet = sample_fleet(&cfg, &EnergyConfig::default(), rng);
+            assert_eq!(fleet.len(), 25);
+            for p in &fleet {
+                assert!((2.0..=16.0).contains(&p.mem_gb));
+                assert!((0.020..=0.200).contains(&p.latency_s));
+                assert!(p.flops > 0.0 && p.uplink_bps > 0.0 && p.downlink_bps > 0.0);
+                assert!(p.active_w >= EnergyConfig::default().client_active_w.0 - 1e-9);
+                assert!(p.active_w <= EnergyConfig::default().client_active_w.1 + 1e-9);
+            }
+        });
+    }
+
+    #[test]
+    fn fleet_is_actually_heterogeneous() {
+        let cfg = FleetConfig {
+            clients: 30,
+            ..FleetConfig::default()
+        };
+        let fleet = sample_fleet(&cfg, &EnergyConfig::default(), &mut Pcg32::seeded(3));
+        let min_mem = fleet.iter().map(|p| p.mem_gb).fold(f64::MAX, f64::min);
+        let max_mem = fleet.iter().map(|p| p.mem_gb).fold(f64::MIN, f64::max);
+        assert!(max_mem - min_mem > 4.0, "spread {}", max_mem - min_mem);
+    }
+
+    #[test]
+    fn ids_are_sequential() {
+        let cfg = FleetConfig {
+            clients: 5,
+            ..FleetConfig::default()
+        };
+        let fleet = sample_fleet(&cfg, &EnergyConfig::default(), &mut Pcg32::seeded(4));
+        for (i, p) in fleet.iter().enumerate() {
+            assert_eq!(p.id, i);
+        }
+    }
+
+    #[test]
+    fn power_tracks_compute() {
+        let cfg = FleetConfig {
+            clients: 40,
+            ..FleetConfig::default()
+        };
+        let fleet = sample_fleet(&cfg, &EnergyConfig::default(), &mut Pcg32::seeded(5));
+        let fastest = fleet
+            .iter()
+            .max_by(|a, b| a.flops.partial_cmp(&b.flops).unwrap())
+            .unwrap();
+        let slowest = fleet
+            .iter()
+            .min_by(|a, b| a.flops.partial_cmp(&b.flops).unwrap())
+            .unwrap();
+        assert!(fastest.active_w > slowest.active_w);
+    }
+}

@@ -1,0 +1,283 @@
+//! Simulated edge network: device fleet, link model, failures, accounting.
+//!
+//! The paper evaluates on homogeneous GPUs with *simulated* device
+//! heterogeneity (§III-A); we do the same. The network simulator owns:
+//!
+//! * per-client link parameters (RTT, up/downlink bandwidth),
+//! * the server-availability schedule (Table III sweeps it) and transient
+//!   drops, producing the timeout behaviour of paper §II-C,
+//! * byte-level communication accounting (Table I's "Communication Cost"),
+//! * the simulated clock (training time is simulated time — this box's
+//!   wall-clock is not comparable to the paper's A100 testbed).
+
+pub mod clock;
+pub mod fleet;
+
+pub use clock::SimClock;
+pub use fleet::{sample_fleet, DeviceProfile};
+
+use crate::config::NetConfig;
+use crate::util::rng::Pcg32;
+
+/// Outcome of one client↔server exchange attempt.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Exchange {
+    /// Server responded: total simulated round-trip seconds.
+    Ok { time_s: f64 },
+    /// No response within the timeout window → client enters fallback
+    /// (paper Alg. 3). Elapsed simulated time equals the timeout.
+    TimedOut { time_s: f64 },
+}
+
+impl Exchange {
+    pub fn time_s(&self) -> f64 {
+        match self {
+            Exchange::Ok { time_s } | Exchange::TimedOut { time_s } => *time_s,
+        }
+    }
+
+    pub fn is_ok(&self) -> bool {
+        matches!(self, Exchange::Ok { .. })
+    }
+}
+
+/// Byte counters, split by direction (activations vs weights accounted by
+/// the caller through distinct channels).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Traffic {
+    pub up_bytes: u64,
+    pub down_bytes: u64,
+}
+
+impl Traffic {
+    pub fn total_mb(&self) -> f64 {
+        (self.up_bytes + self.down_bytes) as f64 / 1e6
+    }
+}
+
+/// The network simulator. One instance per experiment run.
+pub struct NetworkSim {
+    cfg: NetConfig,
+    profiles: Vec<DeviceProfile>,
+    rng: Pcg32,
+    /// Whether the server answers during the current round (Table III's
+    /// "server gradient availability" is a per-round schedule).
+    server_up_this_round: bool,
+    pub traffic: Traffic,
+    /// Traffic accumulated during the current round only.
+    pub round_traffic: Traffic,
+}
+
+impl NetworkSim {
+    pub fn new(cfg: NetConfig, profiles: Vec<DeviceProfile>, rng: Pcg32) -> Self {
+        NetworkSim {
+            cfg,
+            profiles,
+            rng,
+            server_up_this_round: true,
+            traffic: Traffic::default(),
+            round_traffic: Traffic::default(),
+        }
+    }
+
+    pub fn profiles(&self) -> &[DeviceProfile] {
+        &self.profiles
+    }
+
+    /// Draw the server-availability schedule for a new round and reset the
+    /// per-round byte counters.
+    pub fn begin_round(&mut self) {
+        self.server_up_this_round = self.rng.bernoulli(self.cfg.server_availability);
+        self.round_traffic = Traffic::default();
+    }
+
+    pub fn server_available(&self) -> bool {
+        self.server_up_this_round
+    }
+
+    fn up_bw(&self, client: usize) -> f64 {
+        self.profiles[client]
+            .uplink_bps
+            .min(self.cfg.server_bandwidth_mbps * 1e6 / 8.0)
+    }
+
+    fn down_bw(&self, client: usize) -> f64 {
+        self.profiles[client]
+            .downlink_bps
+            .min(self.cfg.server_bandwidth_mbps * 1e6 / 8.0)
+    }
+
+    /// Pure transfer-time model (no failure roll): one-way up.
+    pub fn up_time(&self, client: usize, bytes: u64) -> f64 {
+        self.profiles[client].latency_s / 2.0 + bytes as f64 / self.up_bw(client)
+    }
+
+    /// Pure transfer-time model: one-way down.
+    pub fn down_time(&self, client: usize, bytes: u64) -> f64 {
+        self.profiles[client].latency_s / 2.0 + bytes as f64 / self.down_bw(client)
+    }
+
+    /// One request/response exchange with the server (smashed data up,
+    /// gradients down; paper Alg. 2 Phase 2). `server_time_s` is the
+    /// simulated server-side compute time between receive and reply.
+    ///
+    /// Accounting: uplink bytes are always charged (the client transmitted
+    /// them before it could observe the failure); downlink bytes only on
+    /// success.
+    pub fn exchange(
+        &mut self,
+        client: usize,
+        up_bytes: u64,
+        down_bytes: u64,
+        server_time_s: f64,
+    ) -> Exchange {
+        self.traffic.up_bytes += up_bytes;
+        self.round_traffic.up_bytes += up_bytes;
+
+        let dropped = self.rng.bernoulli(self.cfg.drop_prob);
+        if !self.server_up_this_round || dropped {
+            return Exchange::TimedOut {
+                time_s: self.cfg.timeout_s,
+            };
+        }
+
+        let t = self.up_time(client, up_bytes) + server_time_s + self.down_time(client, down_bytes);
+        if t > self.cfg.timeout_s {
+            // Link too slow for the timeout window: same observable
+            // behaviour as an outage (paper §II-C fallback trigger).
+            return Exchange::TimedOut {
+                time_s: self.cfg.timeout_s,
+            };
+        }
+        self.traffic.down_bytes += down_bytes;
+        self.round_traffic.down_bytes += down_bytes;
+        Exchange::Ok { time_s: t }
+    }
+
+    /// A bulk weight sync (aggregation upload / broadcast download).
+    /// Returns the transfer time; bytes are always charged.
+    pub fn bulk_up(&mut self, client: usize, bytes: u64) -> f64 {
+        self.traffic.up_bytes += bytes;
+        self.round_traffic.up_bytes += bytes;
+        self.up_time(client, bytes)
+    }
+
+    pub fn bulk_down(&mut self, client: usize, bytes: u64) -> f64 {
+        self.traffic.down_bytes += bytes;
+        self.round_traffic.down_bytes += bytes;
+        self.down_time(client, bytes)
+    }
+
+    /// Main-server ↔ Fed-server bulk transfer (Fig. 2 of the paper; used
+    /// heavily by the SplitFed baseline, which ships every per-client
+    /// server-side model copy to the Fed server each round). Charged as
+    /// uplink traffic over the server NIC.
+    pub fn fed_link(&mut self, bytes: u64) -> f64 {
+        self.traffic.up_bytes += bytes;
+        self.round_traffic.up_bytes += bytes;
+        bytes as f64 / (self.cfg.server_bandwidth_mbps * 1e6 / 8.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{EnergyConfig, FleetConfig};
+
+    fn sim(avail: f64, drop: f64) -> NetworkSim {
+        let fleet = FleetConfig {
+            clients: 4,
+            ..FleetConfig::default()
+        };
+        let profiles = sample_fleet(&fleet, &EnergyConfig::default(), &mut Pcg32::seeded(1));
+        let cfg = NetConfig {
+            server_availability: avail,
+            drop_prob: drop,
+            ..NetConfig::default()
+        };
+        NetworkSim::new(cfg, profiles, Pcg32::seeded(2))
+    }
+
+    #[test]
+    fn exchange_ok_accounts_both_directions() {
+        let mut s = sim(1.0, 0.0);
+        s.begin_round();
+        let e = s.exchange(0, 1000, 2000, 0.001);
+        assert!(e.is_ok());
+        assert!(e.time_s() > 0.0);
+        assert_eq!(s.traffic.up_bytes, 1000);
+        assert_eq!(s.traffic.down_bytes, 2000);
+    }
+
+    #[test]
+    fn unavailable_round_times_out_and_charges_uplink_only() {
+        let mut s = sim(0.0, 0.0);
+        s.begin_round();
+        assert!(!s.server_available());
+        let e = s.exchange(1, 500, 700, 0.001);
+        assert_eq!(
+            e,
+            Exchange::TimedOut {
+                time_s: s.cfg.timeout_s
+            }
+        );
+        assert_eq!(s.traffic.up_bytes, 500);
+        assert_eq!(s.traffic.down_bytes, 0);
+    }
+
+    #[test]
+    fn availability_is_per_round_schedule() {
+        let mut s = sim(0.5, 0.0);
+        let mut ups = 0;
+        for _ in 0..200 {
+            s.begin_round();
+            if s.server_available() {
+                ups += 1;
+            }
+        }
+        assert!((60..140).contains(&ups), "ups {ups}");
+    }
+
+    #[test]
+    fn transfer_time_scales_with_bytes_and_latency() {
+        let s = sim(1.0, 0.0);
+        let small = s.up_time(0, 1_000);
+        let big = s.up_time(0, 10_000_000);
+        assert!(big > small);
+        assert!(small >= s.profiles()[0].latency_s / 2.0);
+    }
+
+    #[test]
+    fn slow_link_exceeding_timeout_behaves_as_outage() {
+        let mut s = sim(1.0, 0.0);
+        s.begin_round();
+        // Enormous payload cannot fit in the 5 s window on any edge link.
+        let e = s.exchange(2, 100_000_000_000, 0, 0.0);
+        assert!(!e.is_ok());
+        assert_eq!(e.time_s(), s.cfg.timeout_s);
+    }
+
+    #[test]
+    fn drops_cause_sporadic_timeouts() {
+        let mut s = sim(1.0, 0.3);
+        s.begin_round();
+        let fails = (0..300)
+            .filter(|_| !s.exchange(0, 10, 10, 0.0).is_ok())
+            .count();
+        assert!((40..160).contains(&fails), "fails {fails}");
+    }
+
+    #[test]
+    fn bulk_transfers_account_bytes() {
+        let mut s = sim(1.0, 0.0);
+        s.begin_round();
+        let t1 = s.bulk_up(0, 4_000_000);
+        let t2 = s.bulk_down(0, 4_000_000);
+        assert!(t1 > 0.0 && t2 > 0.0);
+        assert_eq!(s.round_traffic.up_bytes, 4_000_000);
+        assert_eq!(s.round_traffic.down_bytes, 4_000_000);
+        s.begin_round();
+        assert_eq!(s.round_traffic.up_bytes, 0); // per-round counter resets
+        assert_eq!(s.traffic.up_bytes, 4_000_000); // totals persist
+    }
+}

@@ -1,0 +1,492 @@
+//! The round orchestrator: experiment setup + the SuperSFL training loop.
+//!
+//! `run_experiment` is the single entry point used by the CLI, examples
+//! and benches. It prepares the simulated world (task, non-IID shards,
+//! fleet, allocation, network, energy meter, simulated clock) and then
+//! dispatches to the method-specific round loop — SuperSFL here, SFL/DFL
+//! in [`crate::baselines`]. All three share the same [`Harness`] so their
+//! accounting (bytes, simulated time, energy) is identical by
+//! construction.
+//!
+//! Within a round, clients conceptually run in parallel: each client's
+//! simulated branch time is accumulated separately and the round advances
+//! the clock by the straggler maximum (synchronized aggregation barrier),
+//! exactly as in the paper's synchronized-round setting.
+
+use crate::allocation::{self, Assignment};
+use crate::baselines;
+use crate::client::ClientState;
+use crate::config::{ExperimentConfig, Method};
+use crate::data::{dirichlet_partition, ClientShard, Dataset, SyntheticSpec, SyntheticTask};
+use crate::energy::{cost::ModelGeometry, CostModel, EnergyMeter, PowerState};
+use crate::fedserver::{self, ClientUpdate};
+use crate::metrics::{RoundRecord, RunMetrics};
+use crate::network::{sample_fleet, DeviceProfile, NetworkSim, SimClock};
+use crate::runtime::Runtime;
+use crate::server::ServerState;
+use crate::util::rng::Pcg32;
+use crate::Result;
+
+/// Everything a method loop needs, pre-built by [`Harness::prepare`].
+pub struct Harness {
+    pub cfg: ExperimentConfig,
+    pub clients: Vec<ClientState>,
+    pub server: ServerState,
+    pub profiles: Vec<DeviceProfile>,
+    pub assignments: Vec<Assignment>,
+    pub net: NetworkSim,
+    pub meter: EnergyMeter,
+    pub clock: SimClock,
+    pub cost: CostModel,
+    pub train: Dataset,
+    pub test: Dataset,
+    /// Fixed test subset evaluated every round.
+    pub eval_indices: Vec<usize>,
+    pub records: Vec<RoundRecord>,
+}
+
+/// The result of one experiment run.
+pub struct RunResult {
+    pub metrics: RunMetrics,
+    /// Depth assigned to each client (Eq. 1).
+    pub depths: Vec<usize>,
+}
+
+impl Harness {
+    /// Build the simulated world for a config.
+    pub fn prepare(rt: &Runtime, cfg: &ExperimentConfig) -> Result<Harness> {
+        cfg.validate()?;
+        let m = rt.model().clone();
+        let mut root = Pcg32::new(cfg.train.seed, 0xD15EA5E);
+
+        // Task + datasets (shared prototypes across train/test).
+        let spec = SyntheticSpec {
+            classes: cfg.data.classes,
+            image_size: m.image_size,
+            channels: m.channels,
+            noise: cfg.data.noise,
+            max_shift: cfg.data.max_shift,
+        };
+        let mut data_rng = root.fork(1);
+        let task = SyntheticTask::new(spec, &mut data_rng);
+        let train = task.generate(cfg.data.train_per_class, &mut data_rng);
+        let per_class_test = (cfg.data.test_total / cfg.data.classes).max(1);
+        let test = task.generate(per_class_test, &mut data_rng);
+
+        // Non-IID shards.
+        let mut part_rng = root.fork(2);
+        let shards = dirichlet_partition(
+            &train.labels,
+            cfg.data.classes,
+            cfg.fleet.clients,
+            cfg.data.dirichlet_alpha,
+            &mut part_rng,
+        );
+
+        // Fleet + allocation (Eq. 1). Baselines override depths themselves.
+        let mut fleet_rng = root.fork(3);
+        let profiles = sample_fleet(&cfg.fleet, &cfg.energy, &mut fleet_rng);
+        let assignments = allocation::allocate(&profiles, &cfg.alloc, m.depth);
+
+        let server = ServerState::new(rt, cfg.data.classes, cfg.train.lr_server as f32)?;
+
+        // Clients.
+        let mut shard_rng = root.fork(4);
+        let mut clients = Vec::with_capacity(cfg.fleet.clients);
+        for (i, shard_idx) in shards.into_iter().enumerate() {
+            let depth = match cfg.method {
+                Method::Sfl => cfg.sfl_fixed_depth.clamp(1, m.depth - 1),
+                _ => assignments[i].depth,
+            };
+            let shard = ClientShard::new(shard_idx, shard_rng.fork(i as u64));
+            let c = match cfg.method {
+                Method::SuperSfl => ClientState::new_ssfl(
+                    rt,
+                    i,
+                    depth,
+                    cfg.data.classes,
+                    &server.enc,
+                    shard,
+                    cfg.train.lr_client as f32,
+                )?,
+                _ => ClientState::new_baseline(
+                    rt,
+                    i,
+                    depth,
+                    &server.enc,
+                    shard,
+                    cfg.train.lr_client as f32,
+                )?,
+            };
+            clients.push(c);
+        }
+
+        let net = NetworkSim::new(cfg.net.clone(), profiles.clone(), root.fork(5));
+        let meter = EnergyMeter::new(cfg.fleet.clients, &cfg.energy);
+        let cost = CostModel::new(ModelGeometry {
+            tokens: m.tokens,
+            batch: m.batch,
+            embed_size: m.embed_size,
+            block_size: m.block_size,
+            depth: m.depth,
+            clf_client_size: rt.manifest.clf_client_size(cfg.data.classes)?,
+            clf_server_size: rt.manifest.clf_server_size(cfg.data.classes)?,
+        });
+
+        let eval_n = cfg.train.eval_samples.min(test.len());
+        let eval_indices: Vec<usize> = (0..eval_n).collect();
+
+        Ok(Harness {
+            cfg: cfg.clone(),
+            clients,
+            server,
+            profiles,
+            assignments,
+            net,
+            meter,
+            clock: SimClock::new(),
+            cost,
+            train,
+            test,
+            eval_indices,
+            records: Vec::new(),
+        })
+    }
+
+    /// Simulated server compute time for one suffix step of depth `d`.
+    pub fn server_step_time(&self, depth: usize) -> f64 {
+        self.cost
+            .time_s(self.cost.server_step_flops(depth), self.cfg.fleet.server_gflops * 1e9)
+    }
+
+    /// Evaluate the current global model on the fixed test subset.
+    pub fn eval_global(&mut self, rt: &Runtime) -> Result<f64> {
+        let acc = self
+            .server
+            .evaluate(rt, &self.test, &self.eval_indices)?;
+        let t = self
+            .cost
+            .time_s(self.cost.eval_flops(self.eval_indices.len()), self.cfg.fleet.server_gflops * 1e9);
+        self.meter.server_busy(t);
+        self.clock.advance(t);
+        Ok(acc)
+    }
+
+    /// Close out a round: charge client idle, build + store the record,
+    /// and return whether the accuracy target was reached.
+    #[allow(clippy::too_many_arguments)]
+    pub fn finish_round(
+        &mut self,
+        round: usize,
+        round_dt: f64,
+        busy: &[f64],
+        accuracy: f64,
+        fallback_steps: usize,
+        server_steps: usize,
+    ) -> bool {
+        for (i, &b) in busy.iter().enumerate() {
+            let idle = (round_dt - b).max(0.0);
+            self.meter
+                .client(&self.profiles[i].clone(), PowerState::Idle, idle);
+        }
+        let mean = |xs: Vec<f64>| {
+            if xs.is_empty() {
+                0.0
+            } else {
+                xs.iter().sum::<f64>() / xs.len() as f64
+            }
+        };
+        let local_losses: Vec<f64> = self
+            .clients
+            .iter()
+            .filter_map(|c| c.round_local_loss.mean())
+            .collect();
+        let server_losses: Vec<f64> = self
+            .clients
+            .iter()
+            .filter_map(|c| c.round_server_loss.mean())
+            .collect();
+        let cum_comm = self.net.traffic.total_mb();
+        let rec = RoundRecord {
+            round,
+            sim_time_s: self.clock.now(),
+            accuracy,
+            mean_client_loss: mean(local_losses),
+            mean_server_loss: mean(server_losses),
+            comm_mb: self.net.round_traffic.total_mb(),
+            cum_comm_mb: cum_comm,
+            energy_j: self.meter.total_energy_j(),
+            fallback_steps,
+            server_steps,
+        };
+        self.records.push(rec);
+        match self.cfg.train.target_accuracy {
+            Some(t) => accuracy >= t,
+            None => false,
+        }
+    }
+
+    /// Assemble the final run metrics.
+    pub fn finalize(&mut self) -> RunResult {
+        self.meter.finalize(self.clock.now());
+        let total = self.clock.now();
+        let metrics = RunMetrics::from_rounds(
+            &self.cfg.name,
+            self.cfg.method.as_str(),
+            self.records.clone(),
+            self.cfg.train.target_accuracy,
+            self.meter.total_energy_j(),
+            self.meter.avg_power_w(total),
+            self.meter.co2_g(),
+        );
+        RunResult {
+            metrics,
+            depths: self.clients.iter().map(|c| c.depth).collect(),
+        }
+    }
+}
+
+/// Run one experiment end to end (the public API).
+pub fn run_experiment(rt: &Runtime, cfg: &ExperimentConfig) -> Result<RunResult> {
+    let mut h = Harness::prepare(rt, cfg)?;
+    match cfg.method {
+        Method::SuperSfl => run_ssfl(rt, &mut h)?,
+        Method::Sfl => baselines::sfl::run(rt, &mut h)?,
+        Method::Dfl => baselines::dfl::run(rt, &mut h)?,
+    }
+    Ok(h.finalize())
+}
+
+/// The SuperSFL round loop (paper Alg. 1–3 + §II-D aggregation).
+fn run_ssfl(rt: &Runtime, h: &mut Harness) -> Result<()> {
+    let classes = h.cfg.data.classes;
+    let total_layers = rt.model().depth;
+    let batch_elems_dim = rt.model().dim;
+    let local_steps = h.cfg.train.local_steps;
+    let tpgf_mode = h.cfg.ssfl.tpgf_mode;
+    let fuse_via_artifact = h.cfg.ssfl.fuse_via_artifact;
+
+    for round in 1..=h.cfg.train.rounds {
+        h.net.begin_round();
+        let mut busy = vec![0.0f64; h.clients.len()];
+        let mut branch = vec![0.0f64; h.clients.len()];
+        let mut fallback_steps = 0usize;
+        let mut server_steps = 0usize;
+
+        for ci in 0..h.clients.len() {
+            h.clients[ci].begin_round();
+            let depth = h.clients[ci].depth;
+            let profile = h.profiles[ci].clone();
+            let smashed = h.cost.smashed_bytes(batch_elems_dim);
+            let srv_time = h.server_step_time(depth);
+
+            for _ in 0..local_steps {
+                let batch = {
+                    let c = &mut h.clients[ci];
+                    c.shard.next_batch(&h.train, rt.model().batch)
+                };
+
+                // Phase 1 (always; also the entire fallback step).
+                let local = h.clients[ci].phase1(rt, classes, &batch)?;
+                let t1 = h
+                    .cost
+                    .time_s(h.cost.client_local_flops(depth), profile.flops);
+                h.meter.client(&profile, PowerState::Compute, t1);
+                branch[ci] += t1;
+                busy[ci] += t1;
+
+                // Phase 2 attempt: smashed data up, g_z down.
+                let ex = h.net.exchange(ci, smashed, smashed, srv_time);
+                branch[ci] += ex.time_s();
+                let tx_time = (ex.time_s() - srv_time).max(0.0);
+                h.meter.client(&profile, PowerState::Transmit, tx_time);
+                busy[ci] += tx_time;
+
+                if ex.is_ok() {
+                    h.meter.server_busy(srv_time);
+                    let out = h.server.process(rt, depth, &local.z, &batch.y)?;
+                    // Phase 2 client backprop + Phase 3 fusion.
+                    h.clients[ci].phase2_phase3(
+                        rt,
+                        &batch,
+                        &local,
+                        &out.g_z,
+                        out.loss,
+                        tpgf_mode,
+                        fuse_via_artifact,
+                        total_layers,
+                    )?;
+                    let t23 = h.cost.time_s(
+                        h.cost.client_bwd_flops(depth) + h.cost.tpgf_fuse_flops(depth),
+                        profile.flops,
+                    );
+                    h.meter.client(&profile, PowerState::Compute, t23);
+                    branch[ci] += t23;
+                    busy[ci] += t23;
+                    server_steps += 1;
+                } else {
+                    // Fault-tolerant fallback (Alg. 3): local-only update.
+                    h.clients[ci].fallback_update(&local);
+                    fallback_steps += 1;
+                }
+            }
+        }
+
+        let round_dt = h.clock.advance_parallel(&branch);
+
+        // ---- Collaborative aggregation (Eq. 6–8) ----
+        let mut agg_branch = vec![0.0f64; h.clients.len()];
+        for ci in 0..h.clients.len() {
+            let bytes = (h.clients[ci].enc.len() * 4) as u64;
+            agg_branch[ci] = h.net.bulk_up(ci, bytes);
+        }
+        let agg_dt = h.clock.advance_parallel(&agg_branch);
+        for (i, &t) in agg_branch.iter().enumerate() {
+            let p = h.profiles[i].clone();
+            h.meter.client(&p, PowerState::Transmit, t);
+            h.meter
+                .client(&p, PowerState::Idle, (agg_dt - t).max(0.0));
+        }
+
+        {
+            let updates: Vec<ClientUpdate<'_>> = h
+                .clients
+                .iter()
+                .map(|c| ClientUpdate {
+                    client: c.id,
+                    depth: c.depth,
+                    params: &c.enc,
+                    loss: c
+                        .aggregation_loss(tpgf_mode, total_layers)
+                        .unwrap_or(1.0),
+                })
+                .collect();
+            let sizes = h.server.layer_sizes().to_vec();
+            fedserver::aggregate(
+                &mut h.server.enc,
+                &sizes,
+                &updates,
+                h.cfg.ssfl.lambda,
+                h.cfg.ssfl.eps,
+            );
+        }
+        // Aggregation itself: one pass over the encoder on the server.
+        let agg_compute = h
+            .cost
+            .time_s(2.0 * h.server.enc.len() as f64, h.cfg.fleet.server_gflops * 1e9);
+        h.meter.server_busy(agg_compute);
+        h.clock.advance(agg_compute);
+
+        // ---- Broadcast the refreshed prefixes ----
+        let mut bc_branch = vec![0.0f64; h.clients.len()];
+        for ci in 0..h.clients.len() {
+            let bytes = (h.clients[ci].enc.len() * 4) as u64;
+            bc_branch[ci] = h.net.bulk_down(ci, bytes);
+            let global = h.server.enc.clone();
+            h.clients[ci].sync_from_global(&global);
+        }
+        let bc_dt = h.clock.advance_parallel(&bc_branch);
+        for (i, &t) in bc_branch.iter().enumerate() {
+            let p = h.profiles[i].clone();
+            h.meter.client(&p, PowerState::Transmit, t);
+            h.meter.client(&p, PowerState::Idle, (bc_dt - t).max(0.0));
+        }
+
+        // ---- Evaluate + record ----
+        let acc = h.eval_global(rt)?;
+        let hit = h.finish_round(round, round_dt, &busy, acc, fallback_steps, server_steps);
+        if hit {
+            break;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn runtime() -> Option<Runtime> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        Some(Runtime::load(&dir).unwrap())
+    }
+
+    fn tiny_cfg() -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::default()
+            .with_clients(4)
+            .with_rounds(2)
+            .with_seed(7);
+        cfg.data.train_per_class = 20;
+        cfg.data.test_total = 100;
+        cfg.train.local_steps = 1;
+        cfg.train.eval_samples = 100;
+        cfg
+    }
+
+    #[test]
+    fn prepare_builds_consistent_world() {
+        let Some(rt) = runtime() else { return };
+        let h = Harness::prepare(&rt, &tiny_cfg()).unwrap();
+        assert_eq!(h.clients.len(), 4);
+        assert_eq!(h.profiles.len(), 4);
+        // Every client's prefix length matches its depth.
+        for c in &h.clients {
+            let expect: usize = rt.model().enc_layer_sizes[..c.depth].iter().sum();
+            assert_eq!(c.enc.len(), expect);
+            assert!(c.clf.is_some());
+        }
+        // Shards cover the training set.
+        let total: usize = h.clients.iter().map(|c| c.shard.len()).sum();
+        assert_eq!(total, h.train.len());
+    }
+
+    #[test]
+    fn ssfl_two_rounds_produce_records() {
+        let Some(rt) = runtime() else { return };
+        let res = run_experiment(&rt, &tiny_cfg()).unwrap();
+        assert_eq!(res.metrics.rounds.len(), 2);
+        assert!(res.metrics.total_comm_mb > 0.0);
+        assert!(res.metrics.total_sim_time_s > 0.0);
+        assert!(res.metrics.total_energy_j > 0.0);
+        assert!(res.metrics.rounds[0].server_steps > 0);
+        assert_eq!(res.depths.len(), 4);
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let Some(rt) = runtime() else { return };
+        let a = run_experiment(&rt, &tiny_cfg()).unwrap();
+        let b = run_experiment(&rt, &tiny_cfg()).unwrap();
+        assert_eq!(a.metrics.final_accuracy, b.metrics.final_accuracy);
+        assert_eq!(a.metrics.total_comm_mb, b.metrics.total_comm_mb);
+        assert_eq!(a.depths, b.depths);
+    }
+
+    #[test]
+    fn serverless_round_uses_fallback_everywhere() {
+        let Some(rt) = runtime() else { return };
+        let mut cfg = tiny_cfg();
+        cfg.net.server_availability = 0.0;
+        let res = run_experiment(&rt, &cfg).unwrap();
+        for r in &res.metrics.rounds {
+            assert_eq!(r.server_steps, 0);
+            assert!(r.fallback_steps > 0);
+        }
+    }
+
+    #[test]
+    fn target_accuracy_stops_early() {
+        let Some(rt) = runtime() else { return };
+        let mut cfg = tiny_cfg();
+        cfg.train.rounds = 50;
+        cfg.train.target_accuracy = Some(0.0); // trivially hit at round 1
+        let res = run_experiment(&rt, &cfg).unwrap();
+        assert_eq!(res.metrics.rounds.len(), 1);
+        assert_eq!(res.metrics.rounds_to_target, Some(1));
+    }
+}

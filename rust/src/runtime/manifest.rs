@@ -1,0 +1,334 @@
+//! The artifact manifest: the build-time contract between `aot.py` and
+//! the Rust runtime (DESIGN.md §3).
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{self, JsonValue};
+use crate::{Error, Result};
+
+/// Tensor dtype in the interchange format.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            other => Err(Error::Manifest(format!("unknown dtype '{other}'"))),
+        }
+    }
+}
+
+/// One input/output tensor of an artifact.
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    fn parse(v: &JsonValue) -> Result<TensorSpec> {
+        let shape = v
+            .req("shape")?
+            .as_array()
+            .ok_or_else(|| Error::Manifest("shape must be an array".into()))?
+            .iter()
+            .map(|x| {
+                x.as_usize()
+                    .ok_or_else(|| Error::Manifest("bad shape element".into()))
+            })
+            .collect::<Result<Vec<usize>>>()?;
+        Ok(TensorSpec {
+            name: v.str_at("name")?.to_string(),
+            shape,
+            dtype: Dtype::parse(v.str_at("dtype")?)?,
+        })
+    }
+}
+
+/// One AOT artifact (an HLO text file + its signature).
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Model geometry exported by `aot.py` (see python/compile/model.py).
+#[derive(Clone, Debug)]
+pub struct ModelInfo {
+    pub tokens: usize,
+    pub dim: usize,
+    pub depth: usize,
+    pub batch: usize,
+    pub eval_batch: usize,
+    pub embed_size: usize,
+    pub block_size: usize,
+    pub enc_layer_sizes: Vec<usize>,
+    pub enc_full_size: usize,
+    pub image_size: usize,
+    pub channels: usize,
+    pub classes_variants: Vec<usize>,
+}
+
+impl ModelInfo {
+    /// Flat size of a depth-`d` encoder prefix.
+    pub fn enc_size(&self, depth: usize) -> usize {
+        assert!(depth >= 1 && depth <= self.depth);
+        self.enc_layer_sizes[..depth].iter().sum()
+    }
+
+    /// Flat size of the server suffix for client depth `d`.
+    pub fn srv_size(&self, depth: usize) -> usize {
+        self.enc_full_size - self.enc_size(depth)
+    }
+
+    pub fn image_elems(&self) -> usize {
+        self.image_size * self.image_size * self.channels
+    }
+
+    pub fn smashed_elems(&self) -> usize {
+        self.batch * self.tokens * self.dim
+    }
+}
+
+/// Parsed `manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: ModelInfo,
+    pub clf_client_sizes: Vec<(usize, usize)>,
+    pub clf_server_sizes: Vec<(usize, usize)>,
+    artifacts: Vec<ArtifactSpec>,
+    init: Vec<(String, PathBuf, usize)>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let v = json::parse_file(&dir.join("manifest.json")).map_err(|e| {
+            Error::Manifest(format!(
+                "cannot read {}/manifest.json (run `make artifacts`): {e}",
+                dir.display()
+            ))
+        })?;
+        let build = v.req("build")?;
+        let m = v.req("model")?;
+        let layer_sizes: Vec<usize> = m
+            .req("enc_layer_sizes")?
+            .as_array()
+            .ok_or_else(|| Error::Manifest("enc_layer_sizes".into()))?
+            .iter()
+            .map(|x| x.as_usize().unwrap_or(0))
+            .collect();
+        let classes_variants: Vec<usize> = build
+            .req("classes_variants")?
+            .as_array()
+            .ok_or_else(|| Error::Manifest("classes_variants".into()))?
+            .iter()
+            .map(|x| x.as_usize().unwrap_or(0))
+            .collect();
+        let model = ModelInfo {
+            tokens: m.usize_at("tokens")?,
+            dim: m.usize_at("dim")?,
+            depth: m.usize_at("depth")?,
+            batch: m.usize_at("batch")?,
+            eval_batch: m.usize_at("eval_batch")?,
+            embed_size: m.usize_at("embed_size")?,
+            block_size: m.usize_at("block_size")?,
+            enc_full_size: m.usize_at("enc_full_size")?,
+            enc_layer_sizes: layer_sizes,
+            image_size: build.usize_at("image_size")?,
+            channels: build.usize_at("channels")?,
+            classes_variants,
+        };
+
+        let pairs = |key: &str| -> Result<Vec<(usize, usize)>> {
+            Ok(m.req(key)?
+                .entries()
+                .ok_or_else(|| Error::Manifest(key.into()))?
+                .iter()
+                .map(|(k, v)| (k.parse::<usize>().unwrap_or(0), v.as_usize().unwrap_or(0)))
+                .collect())
+        };
+
+        let mut artifacts = Vec::new();
+        for (name, spec) in v
+            .req("artifacts")?
+            .entries()
+            .ok_or_else(|| Error::Manifest("artifacts".into()))?
+        {
+            let inputs = spec
+                .req("inputs")?
+                .as_array()
+                .ok_or_else(|| Error::Manifest("inputs".into()))?
+                .iter()
+                .map(TensorSpec::parse)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = spec
+                .req("outputs")?
+                .as_array()
+                .ok_or_else(|| Error::Manifest("outputs".into()))?
+                .iter()
+                .map(TensorSpec::parse)
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.push(ArtifactSpec {
+                name: name.clone(),
+                file: dir.join(spec.str_at("file")?),
+                inputs,
+                outputs,
+            });
+        }
+
+        let mut init = Vec::new();
+        for (tag, info) in v
+            .req("init")?
+            .entries()
+            .ok_or_else(|| Error::Manifest("init".into()))?
+        {
+            init.push((
+                tag.clone(),
+                dir.join(info.str_at("file")?),
+                info.usize_at("len")?,
+            ));
+        }
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            model,
+            clf_client_sizes: pairs("clf_client_sizes")?,
+            clf_server_sizes: pairs("clf_server_sizes")?,
+            artifacts,
+            init,
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| Error::Manifest(format!("no artifact '{name}'")))
+    }
+
+    pub fn artifact_names(&self) -> Vec<&str> {
+        self.artifacts.iter().map(|a| a.name.as_str()).collect()
+    }
+
+    pub fn clf_client_size(&self, classes: usize) -> Result<usize> {
+        self.clf_client_sizes
+            .iter()
+            .find(|(c, _)| *c == classes)
+            .map(|(_, s)| *s)
+            .ok_or_else(|| Error::Manifest(format!("no classifier variant for {classes} classes")))
+    }
+
+    pub fn clf_server_size(&self, classes: usize) -> Result<usize> {
+        self.clf_server_sizes
+            .iter()
+            .find(|(c, _)| *c == classes)
+            .map(|(_, s)| *s)
+            .ok_or_else(|| Error::Manifest(format!("no classifier variant for {classes} classes")))
+    }
+
+    /// Load an `init_*.bin` blob as f32 (little-endian raw).
+    pub fn load_init(&self, tag: &str) -> Result<Vec<f32>> {
+        let (_, path, len) = self
+            .init
+            .iter()
+            .find(|(t, _, _)| t == tag)
+            .ok_or_else(|| Error::Manifest(format!("no init blob '{tag}'")))?;
+        let bytes = std::fs::read(path)?;
+        if bytes.len() != len * 4 {
+            return Err(Error::Manifest(format!(
+                "init blob '{tag}': {} bytes, expected {}",
+                bytes.len(),
+                len * 4
+            )));
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn skip() -> bool {
+        let ok = artifacts_dir().join("manifest.json").exists();
+        if !ok {
+            eprintln!("skipping: artifacts not built");
+        }
+        !ok
+    }
+
+    #[test]
+    fn loads_and_geometry_consistent() {
+        if skip() {
+            return;
+        }
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        assert_eq!(m.model.enc_layer_sizes.len(), m.model.depth);
+        assert_eq!(
+            m.model.enc_layer_sizes.iter().sum::<usize>(),
+            m.model.enc_full_size
+        );
+        for d in 1..m.model.depth {
+            assert_eq!(m.model.enc_size(d) + m.model.srv_size(d), m.model.enc_full_size);
+        }
+    }
+
+    #[test]
+    fn artifact_lookup_and_specs() {
+        if skip() {
+            return;
+        }
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        let a = m.artifact("client_local_d3_c10").unwrap();
+        assert_eq!(a.inputs.len(), 4);
+        assert_eq!(a.outputs.len(), 4);
+        let enc = &a.inputs[0];
+        assert_eq!(enc.elems(), m.model.enc_size(3));
+        assert!(m.artifact("no_such_artifact").is_err());
+    }
+
+    #[test]
+    fn init_blob_loads_with_correct_length() {
+        if skip() {
+            return;
+        }
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        let enc = m.load_init("init_enc_c10").unwrap();
+        assert_eq!(enc.len(), m.model.enc_full_size);
+        assert!(enc.iter().all(|v| v.is_finite()));
+        assert!(m.load_init("bogus").is_err());
+    }
+
+    #[test]
+    fn classifier_sizes_exposed() {
+        if skip() {
+            return;
+        }
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        for &c in &[10usize, 100] {
+            assert!(m.clf_client_size(c).unwrap() > 0);
+            assert!(m.clf_server_size(c).unwrap() > 0);
+        }
+        assert!(m.clf_client_size(7).is_err());
+    }
+}

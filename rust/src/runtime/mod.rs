@@ -1,0 +1,404 @@
+//! PJRT runtime: load AOT artifacts, compile once, execute on the hot path.
+//!
+//! The Rust side of the three-layer architecture. At startup the runtime
+//! loads `artifacts/manifest.json`; each artifact's HLO text is parsed and
+//! compiled by the PJRT CPU client **lazily on first use** and cached for
+//! the rest of the process. Execution marshals flat `f32`/`i32` slices
+//! into `xla::Literal`s with the manifest shapes and unpacks the returned
+//! tuple back into `Vec<f32>` buffers.
+//!
+//! Python never runs here — the binary is self-contained given the
+//! `artifacts/` directory.
+
+pub mod manifest;
+
+pub use manifest::{ArtifactSpec, Dtype, Manifest, ModelInfo, TensorSpec};
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::{Error, Result};
+
+/// An argument for artifact execution.
+#[derive(Clone, Copy, Debug)]
+pub enum Arg<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+    /// A 0-d f32 scalar (losses, learning rate).
+    Scalar(f32),
+}
+
+impl<'a> Arg<'a> {
+    fn elems(&self) -> usize {
+        match self {
+            Arg::F32(s) => s.len(),
+            Arg::I32(s) => s.len(),
+            Arg::Scalar(_) => 1,
+        }
+    }
+}
+
+/// Cumulative execution statistics (profiling; see EXPERIMENTS.md §Perf).
+#[derive(Clone, Debug, Default)]
+pub struct RuntimeStats {
+    pub executions: u64,
+    pub compile_count: u64,
+    pub compile_time_s: f64,
+    pub exec_time_s: f64,
+    pub marshal_time_s: f64,
+}
+
+/// The artifact registry + PJRT client. One per process.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+    stats: RefCell<RuntimeStats>,
+}
+
+impl Runtime {
+    /// Load the manifest and create the PJRT CPU client.
+    pub fn load(artifacts_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            stats: RefCell::new(RuntimeStats::default()),
+        })
+    }
+
+    pub fn model(&self) -> &ModelInfo {
+        &self.manifest.model
+    }
+
+    pub fn stats(&self) -> RuntimeStats {
+        self.stats.borrow().clone()
+    }
+
+    /// Compile (or fetch from cache) an artifact's executable.
+    fn ensure_compiled(&self, name: &str) -> Result<()> {
+        if self.cache.borrow().contains_key(name) {
+            return Ok(());
+        }
+        let spec = self.manifest.artifact(name)?;
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            spec.file
+                .to_str()
+                .ok_or_else(|| Error::Manifest("non-utf8 path".into()))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let dt = t0.elapsed().as_secs_f64();
+        {
+            let mut st = self.stats.borrow_mut();
+            st.compile_count += 1;
+            st.compile_time_s += dt;
+        }
+        self.cache.borrow_mut().insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Pre-compile a set of artifacts (startup warm-up for serving loops).
+    pub fn warm_up(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.ensure_compiled(n)?;
+        }
+        Ok(())
+    }
+
+    /// Execute an artifact. Inputs are validated against the manifest
+    /// signature; outputs come back as flat `Vec<f32>` in manifest order.
+    pub fn exec(&self, name: &str, args: &[Arg<'_>]) -> Result<Vec<Vec<f32>>> {
+        self.ensure_compiled(name)?;
+        let spec = self.manifest.artifact(name)?;
+        if args.len() != spec.inputs.len() {
+            return Err(Error::Shape(format!(
+                "{name}: {} args, expected {}",
+                args.len(),
+                spec.inputs.len()
+            )));
+        }
+
+        let t0 = std::time::Instant::now();
+        let mut literals = Vec::with_capacity(args.len());
+        for (arg, input) in args.iter().zip(spec.inputs.iter()) {
+            if arg.elems() != input.elems() {
+                return Err(Error::Shape(format!(
+                    "{name}.{}: {} elements, expected {} (shape {:?})",
+                    input.name,
+                    arg.elems(),
+                    input.elems(),
+                    input.shape
+                )));
+            }
+            literals.push(make_literal(arg, input)?);
+        }
+        let marshal = t0.elapsed().as_secs_f64();
+
+        let t1 = std::time::Instant::now();
+        let cache = self.cache.borrow();
+        let exe = cache.get(name).expect("ensured above");
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let exec = t1.elapsed().as_secs_f64();
+
+        let t2 = std::time::Instant::now();
+        // aot.py lowers with return_tuple=True: unpack the tuple.
+        let parts = result.to_tuple()?;
+        if parts.len() != spec.outputs.len() {
+            return Err(Error::Shape(format!(
+                "{name}: {} outputs, expected {}",
+                parts.len(),
+                spec.outputs.len()
+            )));
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (lit, ospec) in parts.into_iter().zip(spec.outputs.iter()) {
+            let v = lit.to_vec::<f32>()?;
+            if v.len() != ospec.elems() {
+                return Err(Error::Shape(format!(
+                    "{name}.{}: got {} elements, expected {}",
+                    ospec.name,
+                    v.len(),
+                    ospec.elems()
+                )));
+            }
+            out.push(v);
+        }
+        let unmarshal = t2.elapsed().as_secs_f64();
+
+        let mut st = self.stats.borrow_mut();
+        st.executions += 1;
+        st.exec_time_s += exec;
+        st.marshal_time_s += marshal + unmarshal;
+        Ok(out)
+    }
+
+    // ---- typed protocol ops (DESIGN.md §3 artifact table) --------------
+
+    /// TPGF Phase 1 / fallback step: `(z, L_client, g_enc_clipped, g_clf)`.
+    pub fn client_local(
+        &self,
+        depth: usize,
+        classes: usize,
+        enc: &[f32],
+        clf: &[f32],
+        x: &[f32],
+        y: &[i32],
+    ) -> Result<ClientLocalOut> {
+        let name = format!("client_local_d{depth}_c{classes}");
+        let mut out = self.exec(
+            &name,
+            &[Arg::F32(enc), Arg::F32(clf), Arg::F32(x), Arg::I32(y)],
+        )?;
+        let g_clf = out.pop().unwrap();
+        let g_enc = out.pop().unwrap();
+        let loss = out.pop().unwrap()[0];
+        let z = out.pop().unwrap();
+        Ok(ClientLocalOut {
+            z,
+            loss,
+            g_enc,
+            g_clf,
+        })
+    }
+
+    /// Plain split-learning client forward (SFL/DFL): smashed data.
+    pub fn client_fwd(&self, depth: usize, enc: &[f32], x: &[f32]) -> Result<Vec<f32>> {
+        let name = format!("client_fwd_d{depth}");
+        Ok(self.exec(&name, &[Arg::F32(enc), Arg::F32(x)])?.remove(0))
+    }
+
+    /// TPGF Phase 2 client side: backprop g_z through the encoder.
+    pub fn client_bwd(
+        &self,
+        depth: usize,
+        enc: &[f32],
+        x: &[f32],
+        g_z: &[f32],
+    ) -> Result<Vec<f32>> {
+        let name = format!("client_bwd_d{depth}");
+        Ok(self
+            .exec(&name, &[Arg::F32(enc), Arg::F32(x), Arg::F32(g_z)])?
+            .remove(0))
+    }
+
+    /// TPGF Phase 2 server side: `(L_server, g_srv, g_clf_s, g_z)`.
+    pub fn server_step(
+        &self,
+        depth: usize,
+        classes: usize,
+        srv: &[f32],
+        clf_s: &[f32],
+        z: &[f32],
+        y: &[i32],
+    ) -> Result<ServerStepOut> {
+        let name = format!("server_step_d{depth}_c{classes}");
+        let mut out = self.exec(
+            &name,
+            &[Arg::F32(srv), Arg::F32(clf_s), Arg::F32(z), Arg::I32(y)],
+        )?;
+        let g_z = out.pop().unwrap();
+        let g_clf_s = out.pop().unwrap();
+        let g_srv = out.pop().unwrap();
+        let loss = out.pop().unwrap()[0];
+        Ok(ServerStepOut {
+            loss,
+            g_srv,
+            g_clf_s,
+            g_z,
+        })
+    }
+
+    /// TPGF Phase 3 through the Pallas artifact: θ' (alternative to the
+    /// Rust loop in [`crate::tpgf::fuse_update`]).
+    pub fn tpgf_update(
+        &self,
+        depth: usize,
+        theta: &[f32],
+        g_client: &[f32],
+        g_server: &[f32],
+        l_client: f32,
+        l_server: f32,
+        lr: f32,
+    ) -> Result<Vec<f32>> {
+        let name = format!("tpgf_update_d{depth}");
+        Ok(self
+            .exec(
+                &name,
+                &[
+                    Arg::F32(theta),
+                    Arg::F32(g_client),
+                    Arg::F32(g_server),
+                    Arg::Scalar(l_client),
+                    Arg::Scalar(l_server),
+                    Arg::Scalar(lr),
+                ],
+            )?
+            .remove(0))
+    }
+
+    /// Full-model evaluation logits for one eval batch.
+    pub fn eval_batch(
+        &self,
+        classes: usize,
+        enc_full: &[f32],
+        clf_s: &[f32],
+        x: &[f32],
+    ) -> Result<Vec<f32>> {
+        let name = format!("eval_c{classes}");
+        Ok(self
+            .exec(&name, &[Arg::F32(enc_full), Arg::F32(clf_s), Arg::F32(x)])?
+            .remove(0))
+    }
+}
+
+/// Output of `client_local_d{d}_c{c}`.
+#[derive(Clone, Debug)]
+pub struct ClientLocalOut {
+    pub z: Vec<f32>,
+    pub loss: f32,
+    /// Encoder gradient, already τ-clipped inside the artifact.
+    pub g_enc: Vec<f32>,
+    pub g_clf: Vec<f32>,
+}
+
+/// Output of `server_step_d{d}_c{c}`.
+#[derive(Clone, Debug)]
+pub struct ServerStepOut {
+    pub loss: f32,
+    pub g_srv: Vec<f32>,
+    pub g_clf_s: Vec<f32>,
+    pub g_z: Vec<f32>,
+}
+
+fn make_literal(arg: &Arg<'_>, spec: &TensorSpec) -> Result<xla::Literal> {
+    let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+    let lit = match (arg, spec.dtype) {
+        (Arg::Scalar(v), Dtype::F32) => xla::Literal::scalar(*v),
+        (Arg::F32(s), Dtype::F32) => {
+            let l = xla::Literal::vec1(s);
+            if dims.is_empty() {
+                l.reshape(&[])?
+            } else {
+                l.reshape(&dims)?
+            }
+        }
+        (Arg::I32(s), Dtype::I32) => {
+            let l = xla::Literal::vec1(s);
+            l.reshape(&dims)?
+        }
+        _ => {
+            return Err(Error::Shape(format!(
+                "{}: dtype mismatch ({:?})",
+                spec.name, spec.dtype
+            )))
+        }
+    };
+    Ok(lit)
+}
+
+#[cfg(test)]
+mod tests {
+    //! Integration tests against the real artifacts (skipped when
+    //! `make artifacts` has not run). Heavier cross-module checks live in
+    //! rust/tests/.
+    use super::*;
+    use std::path::PathBuf;
+
+    fn runtime() -> Option<Runtime> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        Some(Runtime::load(&dir).unwrap())
+    }
+
+    #[test]
+    fn exec_validates_arity_and_shapes() {
+        let Some(rt) = runtime() else { return };
+        let m = rt.model();
+        let enc = vec![0.0f32; m.enc_size(1)];
+        // Wrong arity.
+        assert!(matches!(
+            rt.exec("client_fwd_d1", &[Arg::F32(&enc)]),
+            Err(Error::Shape(_))
+        ));
+        // Wrong element count.
+        let bad_x = vec![0.0f32; 7];
+        assert!(matches!(
+            rt.exec("client_fwd_d1", &[Arg::F32(&enc), Arg::F32(&bad_x)]),
+            Err(Error::Shape(_))
+        ));
+        // Unknown artifact.
+        assert!(rt.exec("nope", &[]).is_err());
+    }
+
+    #[test]
+    fn client_fwd_produces_smashed_shape() {
+        let Some(rt) = runtime() else { return };
+        let m = rt.model().clone();
+        let enc = rt.manifest.load_init("init_enc_c10").unwrap();
+        let x = vec![0.1f32; m.batch * m.image_elems()];
+        let z = rt.client_fwd(2, &enc[..m.enc_size(2)], &x).unwrap();
+        assert_eq!(z.len(), m.smashed_elems());
+        assert!(z.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn compile_cache_hits_after_first_use() {
+        let Some(rt) = runtime() else { return };
+        let m = rt.model().clone();
+        let enc = rt.manifest.load_init("init_enc_c10").unwrap();
+        let x = vec![0.1f32; m.batch * m.image_elems()];
+        rt.client_fwd(1, &enc[..m.enc_size(1)], &x).unwrap();
+        let c1 = rt.stats().compile_count;
+        rt.client_fwd(1, &enc[..m.enc_size(1)], &x).unwrap();
+        assert_eq!(rt.stats().compile_count, c1);
+        assert_eq!(rt.stats().executions, 2);
+    }
+}

@@ -1,0 +1,166 @@
+//! The main server: hosts the weight-sharing super-network and executes
+//! the deep suffix for every client (paper §II, Fig. 1).
+//!
+//! A single global encoder θ (all L layers) lives here. Serving client
+//! `i` of depth `d_i` means running blocks `d_i+1..L` — a *slice view* of
+//! the shared super-network — plus the server classifier, then applying
+//! the SGD update to exactly that slice (Alg. 2 line 11). Different-depth
+//! clients therefore train overlapping suffixes of one model, which is
+//! what keeps all subnetworks aggregation-compatible.
+
+use crate::data::Dataset;
+use crate::runtime::{Runtime, ServerStepOut};
+use crate::util::math;
+use crate::{Error, Result};
+
+/// Global model state owned by the main server.
+pub struct ServerState {
+    /// Full L-layer flat encoder (the super-network θ).
+    pub enc: Vec<f32>,
+    /// Server classifier φ_s (final LN + CLS head).
+    pub clf_s: Vec<f32>,
+    pub classes: usize,
+    pub lr: f32,
+    layer_sizes: Vec<usize>,
+}
+
+impl ServerState {
+    /// Initialize from the deterministic `init_*.bin` blobs.
+    pub fn new(rt: &Runtime, classes: usize, lr: f32) -> Result<ServerState> {
+        let enc = rt.manifest.load_init(&format!("init_enc_c{classes}"))?;
+        let clf_s = rt.manifest.load_init(&format!("init_clf_s_c{classes}"))?;
+        Ok(ServerState {
+            enc,
+            clf_s,
+            classes,
+            lr,
+            layer_sizes: rt.model().enc_layer_sizes.clone(),
+        })
+    }
+
+    pub fn layer_sizes(&self) -> &[usize] {
+        &self.layer_sizes
+    }
+
+    /// Flat size of the depth-`d` prefix.
+    pub fn prefix_len(&self, depth: usize) -> usize {
+        self.layer_sizes[..depth].iter().sum()
+    }
+
+    /// The suffix slice serving a depth-`d` client.
+    pub fn suffix(&self, depth: usize) -> &[f32] {
+        &self.enc[self.prefix_len(depth)..]
+    }
+
+    /// The global prefix broadcast to a depth-`d` client after aggregation.
+    pub fn prefix(&self, depth: usize) -> &[f32] {
+        &self.enc[..self.prefix_len(depth)]
+    }
+
+    /// TPGF Phase 2, server side (Alg. 2 lines 9–12): run the deep
+    /// forward/backward for one client batch, update the shared suffix +
+    /// classifier in place, and return the smashed-data gradient.
+    pub fn process(
+        &mut self,
+        rt: &Runtime,
+        depth: usize,
+        z: &[f32],
+        y: &[i32],
+    ) -> Result<ServerStepOut> {
+        let off = self.prefix_len(depth);
+        let out = rt.server_step(depth, self.classes, &self.enc[off..], &self.clf_s, z, y)?;
+        math::sgd_step(&mut self.enc[off..], &out.g_srv, self.lr);
+        math::sgd_step(&mut self.clf_s, &out.g_clf_s, self.lr);
+        Ok(out)
+    }
+
+    /// Test-set top-1 accuracy of the current global model over the given
+    /// sample indices (padded to the artifact's fixed eval batch; padding
+    /// rows are not scored).
+    pub fn evaluate(&self, rt: &Runtime, data: &Dataset, indices: &[usize]) -> Result<f64> {
+        if indices.is_empty() {
+            return Err(Error::Config("evaluate: empty index set".into()));
+        }
+        let m = rt.model();
+        let be = m.eval_batch;
+        let mut hits = 0usize;
+        let mut total = 0usize;
+        for chunk in indices.chunks(be) {
+            let mut padded: Vec<usize> = chunk.to_vec();
+            while padded.len() < be {
+                padded.push(chunk[0]);
+            }
+            let batch = data.gather(&padded);
+            let logits = rt.eval_batch(self.classes, &self.enc, &self.clf_s, &batch.x)?;
+            for (row, &label) in logits
+                .chunks_exact(self.classes)
+                .zip(batch.y.iter())
+                .take(chunk.len())
+            {
+                if math::argmax(row) == label as usize {
+                    hits += 1;
+                }
+                total += 1;
+            }
+        }
+        Ok(hits as f64 / total as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn runtime() -> Option<Runtime> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        Some(Runtime::load(&dir).unwrap())
+    }
+
+    #[test]
+    fn prefix_suffix_partition_encoder() {
+        let Some(rt) = runtime() else { return };
+        let s = ServerState::new(&rt, 10, 0.05).unwrap();
+        for d in 1..rt.model().depth {
+            assert_eq!(s.prefix(d).len() + s.suffix(d).len(), s.enc.len());
+        }
+    }
+
+    #[test]
+    fn process_updates_only_suffix() {
+        let Some(rt) = runtime() else { return };
+        let m = rt.model().clone();
+        let mut s = ServerState::new(&rt, 10, 0.05).unwrap();
+        let before = s.enc.clone();
+        let clf_before = s.clf_s.clone();
+        let d = 3;
+        let z = vec![0.1f32; m.smashed_elems()];
+        let y: Vec<i32> = (0..m.batch as i32).map(|i| i % 10).collect();
+        let out = s.process(&rt, d, &z, &y).unwrap();
+        assert!(out.loss > 0.0);
+        assert_eq!(out.g_z.len(), z.len());
+        // Prefix untouched; suffix and classifier moved.
+        let cut = s.prefix_len(d);
+        assert_eq!(&s.enc[..cut], &before[..cut]);
+        assert!(math::max_abs_diff(&s.enc[cut..], &before[cut..]) > 0.0);
+        assert!(math::max_abs_diff(&s.clf_s, &clf_before) > 0.0);
+    }
+
+    #[test]
+    fn evaluate_on_random_data_near_chance() {
+        let Some(rt) = runtime() else { return };
+        use crate::data::{Dataset, SyntheticSpec};
+        use crate::util::rng::Pcg32;
+        let s = ServerState::new(&rt, 10, 0.05).unwrap();
+        let spec = SyntheticSpec::default();
+        let data = Dataset::generate(&spec, 30, &mut Pcg32::seeded(3));
+        let idx: Vec<usize> = (0..250).collect();
+        let acc = s.evaluate(&rt, &data, &idx).unwrap();
+        // Untrained model ≈ chance (0.1); generous band.
+        assert!(acc < 0.35, "acc {acc}");
+    }
+}

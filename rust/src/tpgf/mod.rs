@@ -1,0 +1,164 @@
+//! Three-Phase Gradient Fusion — the weighting rule and the fused update
+//! (paper §II-B, Eq. 3–4; ablation modes from §IV).
+//!
+//! The fusion weight combines a structural depth factor with an
+//! instantaneous inverse-loss reliability factor:
+//!
+//! ```text
+//! w_client = d_i/(d_i+d_s) · (L_c+ε)⁻¹ / ((L_c+ε)⁻¹ + (L_s+ε)⁻¹)
+//! w_server = 1 − w_client
+//! θ ← θ − η (w_client·g_client + w_server·g_server)
+//! ```
+//!
+//! Phase 3 executes either as a single-pass Rust loop (default hot path)
+//! or through the per-depth Pallas `tpgf_update_d{d}` artifact — the two
+//! are numerically interchangeable (`bench_fusion` compares them).
+
+use crate::config::TpgfMode;
+use crate::util::math;
+
+pub const EPS: f64 = 1e-8;
+
+/// Compute w_client per Eq. 3 (or an ablated variant, §IV / Fig. 6).
+pub fn client_weight(
+    mode: TpgfMode,
+    l_client: f64,
+    l_server: f64,
+    d_i: usize,
+    d_s: usize,
+) -> f64 {
+    let depth_term = d_i as f64 / (d_i + d_s) as f64;
+    let inv_c = 1.0 / (l_client + EPS);
+    let inv_s = 1.0 / (l_server + EPS);
+    let loss_term = inv_c / (inv_c + inv_s);
+    match mode {
+        TpgfMode::Full => depth_term * loss_term,
+        TpgfMode::NoLoss => depth_term * 0.5,
+        TpgfMode::NoDepth => 0.5 * loss_term,
+        TpgfMode::Equal => 0.25, // 0.5 · 0.5: both factors neutralized
+    }
+}
+
+/// The paper also reuses the loss-fusion rule at aggregation time
+/// (§II-D): combine a client's local and server losses with the same
+/// weighting so Eq. 6 sees one fused reliability signal.
+pub fn fused_loss(mode: TpgfMode, l_client: f64, l_server: f64, d_i: usize, d_s: usize) -> f64 {
+    let w = client_weight(mode, l_client, l_server, d_i, d_s);
+    w * l_client + (1.0 - w) * l_server
+}
+
+/// Phase 3 in Rust: θ ← θ − η(w·g_c + (1−w)·g_s), single fused pass.
+pub fn fuse_update(
+    theta: &mut [f32],
+    g_client: &[f32],
+    g_server: &[f32],
+    l_client: f64,
+    l_server: f64,
+    d_i: usize,
+    d_s: usize,
+    lr: f64,
+    mode: TpgfMode,
+) {
+    let w = client_weight(mode, l_client, l_server, d_i, d_s) as f32;
+    math::fused_blend_sgd(theta, g_client, w, g_server, 1.0 - w, lr as f32);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn weight_bounds_full_mode() {
+        forall(1, 100, |rng| {
+            let d_i = 1 + rng.uniform_usize(7);
+            let d_s = 8 - d_i;
+            let lc = rng.uniform_range(1e-4, 10.0);
+            let ls = rng.uniform_range(1e-4, 10.0);
+            let w = client_weight(TpgfMode::Full, lc, ls, d_i, d_s);
+            assert!(w > 0.0 && w < d_i as f64 / 8.0 + 1e-12);
+        });
+    }
+
+    #[test]
+    fn lower_client_loss_raises_client_weight() {
+        let w_low = client_weight(TpgfMode::Full, 0.1, 2.0, 4, 4);
+        let w_high = client_weight(TpgfMode::Full, 2.0, 0.1, 4, 4);
+        assert!(w_low > w_high);
+    }
+
+    #[test]
+    fn deeper_client_raises_client_weight() {
+        let shallow = client_weight(TpgfMode::Full, 1.0, 1.0, 1, 7);
+        let deep = client_weight(TpgfMode::Full, 1.0, 1.0, 7, 1);
+        assert!(deep > shallow);
+        assert!((shallow - 1.0 / 16.0).abs() < 1e-9); // (1/8)·(1/2)
+        assert!((deep - 7.0 / 16.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ablation_modes_drop_their_term() {
+        // NoLoss: invariant to losses.
+        let a = client_weight(TpgfMode::NoLoss, 0.01, 5.0, 3, 5);
+        let b = client_weight(TpgfMode::NoLoss, 5.0, 0.01, 3, 5);
+        assert_eq!(a, b);
+        assert!((a - 3.0 / 8.0 * 0.5).abs() < 1e-12);
+        // NoDepth: invariant to depths.
+        let c = client_weight(TpgfMode::NoDepth, 1.0, 3.0, 1, 7);
+        let d = client_weight(TpgfMode::NoDepth, 1.0, 3.0, 7, 1);
+        assert_eq!(c, d);
+        // Equal: constant.
+        assert_eq!(client_weight(TpgfMode::Equal, 0.1, 9.0, 1, 7), 0.25);
+    }
+
+    #[test]
+    fn fuse_update_matches_manual() {
+        forall(2, 50, |rng: &mut Pcg32| {
+            let n = 1 + rng.uniform_usize(500);
+            let theta0: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let gc: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let gs: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let (lc, ls) = (rng.uniform_range(0.01, 5.0), rng.uniform_range(0.01, 5.0));
+            let d_i = 1 + rng.uniform_usize(7);
+            let lr = 0.05;
+
+            let mut theta = theta0.clone();
+            fuse_update(&mut theta, &gc, &gs, lc, ls, d_i, 8 - d_i, lr, TpgfMode::Full);
+
+            let w = client_weight(TpgfMode::Full, lc, ls, d_i, 8 - d_i) as f32;
+            for i in 0..n {
+                let expect = theta0[i] - lr as f32 * (w * gc[i] + (1.0 - w) * gs[i]);
+                assert!((theta[i] - expect).abs() < 1e-5);
+            }
+        });
+    }
+
+    #[test]
+    fn identical_gradients_reduce_to_sgd() {
+        // w + (1-w) = 1 ⇒ fusing g with itself is plain SGD on g.
+        let mut theta = vec![1.0f32; 64];
+        let g = vec![0.5f32; 64];
+        fuse_update(&mut theta, &g, &g, 0.3, 1.7, 2, 6, 0.1, TpgfMode::Full);
+        for t in theta {
+            assert!((t - (1.0 - 0.1 * 0.5)).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn fused_loss_between_inputs() {
+        forall(3, 50, |rng| {
+            let lc = rng.uniform_range(0.01, 5.0);
+            let ls = rng.uniform_range(0.01, 5.0);
+            let f = fused_loss(TpgfMode::Full, lc, ls, 3, 5);
+            assert!(f >= lc.min(ls) - 1e-12 && f <= lc.max(ls) + 1e-12);
+        });
+    }
+
+    #[test]
+    fn zero_losses_guarded_by_eps() {
+        let w = client_weight(TpgfMode::Full, 0.0, 0.0, 4, 4);
+        assert!(w.is_finite());
+        assert!((w - 0.25).abs() < 1e-9);
+    }
+}

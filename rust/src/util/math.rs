@@ -1,0 +1,228 @@
+//! Flat-vector math used on the L3 hot path.
+//!
+//! All model parameters cross the Rust/XLA boundary as flat `f32` vectors
+//! (DESIGN.md §3), so the coordinator's own compute — SGD steps, TPGF
+//! fusion, layer-aligned aggregation — is expressed as tight loops over
+//! slices. The loops are written in a form LLVM auto-vectorizes (no
+//! bounds checks in the kernel loop, chunked accumulators for reductions).
+
+/// `y ← y - lr * g` (plain SGD step, used for classifier/server updates).
+pub fn sgd_step(theta: &mut [f32], grad: &[f32], lr: f32) {
+    assert_eq!(theta.len(), grad.len());
+    for (t, g) in theta.iter_mut().zip(grad.iter()) {
+        *t -= lr * *g;
+    }
+}
+
+/// `out ← a*x + b*y` element-wise (gradient blend, Eq. 4).
+pub fn blend(out: &mut [f32], x: &[f32], a: f32, y: &[f32], b: f32) {
+    assert_eq!(out.len(), x.len());
+    assert_eq!(out.len(), y.len());
+    for i in 0..out.len() {
+        out[i] = a * x[i] + b * y[i];
+    }
+}
+
+/// Fused `theta ← theta - lr*(a*gx + b*gy)` — single pass, no temp buffer.
+pub fn fused_blend_sgd(theta: &mut [f32], gx: &[f32], a: f32, gy: &[f32], b: f32, lr: f32) {
+    assert_eq!(theta.len(), gx.len());
+    assert_eq!(theta.len(), gy.len());
+    for i in 0..theta.len() {
+        theta[i] -= lr * (a * gx[i] + b * gy[i]);
+    }
+}
+
+/// l2 norm with 8-way partial sums (accurate + auto-vectorizable).
+pub fn l2_norm(x: &[f32]) -> f32 {
+    let mut acc = [0.0f64; 8];
+    let chunks = x.chunks_exact(8);
+    let rem = chunks.remainder();
+    for c in chunks {
+        for i in 0..8 {
+            acc[i] += (c[i] as f64) * (c[i] as f64);
+        }
+    }
+    let mut s: f64 = acc.iter().sum();
+    for &v in rem {
+        s += (v as f64) * (v as f64);
+    }
+    s.sqrt() as f32
+}
+
+/// Scale `x` in place so its l2 norm is at most `tau` (paper §II-B).
+pub fn clip_l2(x: &mut [f32], tau: f32) -> f32 {
+    let norm = l2_norm(x);
+    if norm > tau && norm > 0.0 {
+        let s = tau / norm;
+        for v in x.iter_mut() {
+            *v *= s;
+        }
+        tau
+    } else {
+        norm
+    }
+}
+
+/// Weighted accumulate: `acc ← acc + w*x`.
+pub fn axpy(acc: &mut [f32], x: &[f32], w: f32) {
+    assert_eq!(acc.len(), x.len());
+    for (a, v) in acc.iter_mut().zip(x.iter()) {
+        *a += w * *v;
+    }
+}
+
+/// Scale in place.
+pub fn scale(x: &mut [f32], s: f32) {
+    for v in x.iter_mut() {
+        *v *= s;
+    }
+}
+
+/// Mean of a slice.
+pub fn mean(x: &[f32]) -> f32 {
+    if x.is_empty() {
+        return 0.0;
+    }
+    (x.iter().map(|&v| v as f64).sum::<f64>() / x.len() as f64) as f32
+}
+
+/// Arg-max of a logits row.
+pub fn argmax(x: &[f32]) -> usize {
+    let mut best = 0;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &v) in x.iter().enumerate() {
+        if v > bv {
+            bv = v;
+            best = i;
+        }
+    }
+    best
+}
+
+/// Top-1 accuracy of `[n, classes]` row-major logits against labels.
+pub fn accuracy(logits: &[f32], labels: &[i32], classes: usize) -> f64 {
+    assert_eq!(logits.len(), labels.len() * classes);
+    let mut hits = 0usize;
+    for (row, &y) in logits.chunks_exact(classes).zip(labels.iter()) {
+        if argmax(row) == y as usize {
+            hits += 1;
+        }
+    }
+    hits as f64 / labels.len().max(1) as f64
+}
+
+/// Max absolute difference between two slices (test helper).
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter()
+        .zip(b.iter())
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f32::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn sgd_step_basic() {
+        let mut t = vec![1.0, 2.0, 3.0];
+        sgd_step(&mut t, &[1.0, -1.0, 0.5], 0.1);
+        assert_eq!(t, vec![0.9, 2.1, 2.95]);
+    }
+
+    #[test]
+    fn blend_weights() {
+        let mut out = vec![0.0; 3];
+        blend(&mut out, &[1.0, 1.0, 1.0], 0.25, &[2.0, 2.0, 2.0], 0.75);
+        for v in out {
+            assert!((v - 1.75).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn fused_blend_sgd_matches_two_step() {
+        forall(42, 50, |rng: &mut Pcg32| {
+            let n = 1 + rng.uniform_usize(200);
+            let theta: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let gx: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let gy: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let (a, b, lr) = (
+                rng.uniform() as f32,
+                rng.uniform() as f32,
+                rng.uniform() as f32,
+            );
+
+            let mut one = theta.clone();
+            fused_blend_sgd(&mut one, &gx, a, &gy, b, lr);
+
+            let mut g = vec![0.0f32; n];
+            blend(&mut g, &gx, a, &gy, b);
+            let mut two = theta.clone();
+            sgd_step(&mut two, &g, lr);
+
+            assert!(max_abs_diff(&one, &two) < 1e-6);
+        });
+    }
+
+    #[test]
+    fn l2_norm_known() {
+        assert!((l2_norm(&[3.0, 4.0]) - 5.0).abs() < 1e-6);
+        assert_eq!(l2_norm(&[]), 0.0);
+    }
+
+    #[test]
+    fn clip_l2_properties() {
+        forall(7, 50, |rng: &mut Pcg32| {
+            let n = 1 + rng.uniform_usize(300);
+            let mut x: Vec<f32> = (0..n).map(|_| (rng.normal() * 3.0) as f32).collect();
+            let before = l2_norm(&x);
+            let tau = rng.uniform_range(0.01, 2.0) as f32;
+            let dir: Vec<f32> = x.clone();
+            clip_l2(&mut x, tau);
+            let after = l2_norm(&x);
+            // Norm bounded by tau (+fp slack).
+            assert!(after <= tau * 1.0001 + 1e-6);
+            // Direction preserved: x stays a non-negative multiple of dir.
+            if before > tau {
+                let s = after / before;
+                for (a, d) in x.iter().zip(dir.iter()) {
+                    assert!((a - d * s).abs() < 1e-4);
+                }
+            } else {
+                assert_eq!(x, dir); // untouched when already inside the ball
+            }
+        });
+    }
+
+    #[test]
+    fn accuracy_counts_correct_rows() {
+        // 3 samples, 2 classes.
+        let logits = [0.1, 0.9, 0.8, 0.2, 0.4, 0.6];
+        let labels = [1, 0, 0];
+        let acc = accuracy(&logits, &labels, 2);
+        assert!((acc - 2.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn argmax_first_max_wins() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0, 2.0]), 1);
+        assert_eq!(argmax(&[-1.0]), 0);
+    }
+
+    #[test]
+    fn axpy_and_scale() {
+        let mut acc = vec![1.0, 1.0];
+        axpy(&mut acc, &[2.0, 4.0], 0.5);
+        assert_eq!(acc, vec![2.0, 3.0]);
+        scale(&mut acc, 2.0);
+        assert_eq!(acc, vec![4.0, 6.0]);
+    }
+
+    #[test]
+    fn mean_empty_is_zero() {
+        assert_eq!(mean(&[]), 0.0);
+        assert!((mean(&[1.0, 2.0, 3.0]) - 2.0).abs() < 1e-6);
+    }
+}

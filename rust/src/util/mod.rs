@@ -1,0 +1,13 @@
+//! Foundation utilities: PRNG, JSON, vector math, property testing.
+//!
+//! The offline crate set ships neither `rand`, `serde`, nor `proptest`, so
+//! these substrates are implemented here from scratch (DESIGN.md §4.5) and
+//! unit/property-tested like any other module.
+
+pub mod json;
+pub mod math;
+pub mod prop;
+pub mod rng;
+
+pub use json::JsonValue;
+pub use rng::Pcg32;

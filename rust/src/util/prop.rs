@@ -1,0 +1,84 @@
+//! A tiny property-testing harness (substitute for `proptest`, which is
+//! not in the offline crate set — DESIGN.md §4.5).
+//!
+//! `forall(seed, cases, |rng| { ...assert!... })` runs the closure for
+//! `cases` independently-seeded PRNGs; on failure it reports the case
+//! index and its seed so the exact case can be replayed with
+//! `replay(seed, index, f)`.
+
+use super::rng::Pcg32;
+
+/// Run `f` on `cases` independent random streams derived from `seed`.
+///
+/// Panics (propagating the assertion) with a replay banner when a case
+/// fails. This deliberately does not catch unwinds — the failing assert's
+/// own message plus the banner is what you debug from.
+pub fn forall<F: FnMut(&mut Pcg32)>(seed: u64, cases: usize, mut f: F) {
+    for idx in 0..cases {
+        let mut rng = case_rng(seed, idx);
+        let banner = CaseBanner { seed, idx };
+        f(&mut rng);
+        std::mem::forget(banner);
+    }
+}
+
+/// Re-run a single failing case from a `forall` report.
+pub fn replay<F: FnMut(&mut Pcg32)>(seed: u64, idx: usize, mut f: F) {
+    let mut rng = case_rng(seed, idx);
+    f(&mut rng);
+}
+
+fn case_rng(seed: u64, idx: usize) -> Pcg32 {
+    Pcg32::new(seed ^ (idx as u64).wrapping_mul(0x9E3779B97F4A7C15), idx as u64 + 1)
+}
+
+/// Prints the replay line if the test unwinds mid-case.
+struct CaseBanner {
+    seed: u64,
+    idx: usize,
+}
+
+impl Drop for CaseBanner {
+    fn drop(&mut self) {
+        eprintln!(
+            "property failed: case {} (replay with util::prop::replay({}, {}, f))",
+            self.idx, self.seed, self.idx
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_all_cases() {
+        let mut count = 0;
+        forall(1, 25, |_| count += 1);
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    fn cases_see_distinct_streams() {
+        let mut firsts = Vec::new();
+        forall(2, 20, |rng| firsts.push(rng.next_u32()));
+        firsts.sort_unstable();
+        firsts.dedup();
+        assert_eq!(firsts.len(), 20);
+    }
+
+    #[test]
+    fn replay_reproduces_case_stream() {
+        let mut captured = Vec::new();
+        forall(3, 10, |rng| captured.push(rng.next_u64()));
+        for (idx, &want) in captured.iter().enumerate() {
+            replay(3, idx, |rng| assert_eq!(rng.next_u64(), want));
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn failing_case_panics() {
+        forall(4, 10, |rng| assert!(rng.uniform() < 0.0));
+    }
+}

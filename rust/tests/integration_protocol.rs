@@ -1,0 +1,203 @@
+//! Cross-layer integration tests: Rust coordinator ↔ AOT artifacts.
+//!
+//! These exercise the real PJRT path (skipped when `make artifacts` has
+//! not run yet) and verify protocol-level invariants the unit tests
+//! cannot: clip behaviour through the artifact, Rust-vs-Pallas fusion
+//! equivalence, and learning progress through the full client/server
+//! round trip.
+
+use std::path::PathBuf;
+
+use supersfl::client::ClientState;
+use supersfl::config::TpgfMode;
+use supersfl::data::{ClientShard, Dataset, SyntheticSpec};
+use supersfl::runtime::Runtime;
+use supersfl::server::ServerState;
+use supersfl::tpgf;
+use supersfl::util::math;
+use supersfl::util::rng::Pcg32;
+
+fn runtime() -> Option<Runtime> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::load(&dir).unwrap())
+}
+
+fn small_data(rt: &Runtime, per_class: usize, seed: u64) -> Dataset {
+    let m = rt.model();
+    let spec = SyntheticSpec {
+        classes: 10,
+        image_size: m.image_size,
+        channels: m.channels,
+        noise: 0.4,
+        max_shift: 4,
+    };
+    Dataset::generate(&spec, per_class, &mut Pcg32::seeded(seed))
+}
+
+#[test]
+fn artifact_clip_matches_paper_tau() {
+    let Some(rt) = runtime() else { return };
+    let m = rt.model().clone();
+    let enc = rt.manifest.load_init("init_enc_c10").unwrap();
+    let clf = rt.manifest.load_init("init_clf_client_c10").unwrap();
+    let data = small_data(&rt, 8, 1);
+    let batch = data.gather(&(0..m.batch).collect::<Vec<_>>());
+    for depth in [1usize, 4, 7] {
+        let out = rt
+            .client_local(depth, 10, &enc[..m.enc_size(depth)], &clf, &batch.x, &batch.y)
+            .unwrap();
+        let norm = math::l2_norm(&out.g_enc);
+        assert!(norm <= 0.5 + 1e-4, "depth {depth}: clipped norm {norm}");
+        assert!(out.loss.is_finite() && out.loss > 0.0);
+    }
+}
+
+#[test]
+fn rust_fusion_equals_pallas_artifact() {
+    let Some(rt) = runtime() else { return };
+    let m = rt.model().clone();
+    let mut rng = Pcg32::seeded(3);
+    for depth in [2usize, 5] {
+        let n = m.enc_size(depth);
+        let theta: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let gc: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let gs: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let (lc, ls, lr) = (0.9f32, 1.7f32, 0.05f32);
+
+        let art = rt.tpgf_update(depth, &theta, &gc, &gs, lc, ls, lr).unwrap();
+        let mut rust = theta.clone();
+        tpgf::fuse_update(
+            &mut rust,
+            &gc,
+            &gs,
+            lc as f64,
+            ls as f64,
+            depth,
+            m.depth - depth,
+            lr as f64,
+            TpgfMode::Full,
+        );
+        let d = math::max_abs_diff(&art, &rust);
+        assert!(d < 1e-5, "depth {depth}: |Δ| = {d}");
+    }
+}
+
+#[test]
+fn server_gz_chain_reduces_end_to_end_loss() {
+    // One TPGF round trip on a fixed batch must reduce the *server* loss
+    // on that batch — the gradients flowing through the split are real.
+    let Some(rt) = runtime() else { return };
+    let m = rt.model().clone();
+    let depth = 3;
+    let data = small_data(&rt, 8, 2);
+    let batch = data.gather(&(0..m.batch).collect::<Vec<_>>());
+
+    let mut server = ServerState::new(&rt, 10, 0.1).unwrap();
+    let shard = ClientShard::new((0..data.len()).collect(), Pcg32::seeded(9));
+    let mut client =
+        ClientState::new_ssfl(&rt, 0, depth, 10, &server.enc, shard, 0.1).unwrap();
+
+    let mut losses = Vec::new();
+    for _ in 0..6 {
+        let local = client.phase1(&rt, 10, &batch).unwrap();
+        let out = server.process(&rt, depth, &local.z, &batch.y).unwrap();
+        losses.push(out.loss);
+        client
+            .phase2_phase3(
+                &rt,
+                &batch,
+                &local,
+                &out.g_z,
+                out.loss,
+                TpgfMode::Full,
+                false,
+                m.depth,
+            )
+            .unwrap();
+    }
+    assert!(
+        losses.last().unwrap() < losses.first().unwrap(),
+        "server loss did not fall: {losses:?}"
+    );
+}
+
+#[test]
+fn fallback_only_training_still_learns() {
+    // Alg. 3: with the server fully unreachable, the local classifier path
+    // must still reduce the client's local loss.
+    let Some(rt) = runtime() else { return };
+    let m = rt.model().clone();
+    let depth = 2;
+    let data = small_data(&rt, 8, 4);
+    let batch = data.gather(&(0..m.batch).collect::<Vec<_>>());
+    let server = ServerState::new(&rt, 10, 0.1).unwrap();
+    let shard = ClientShard::new((0..data.len()).collect(), Pcg32::seeded(5));
+    let mut client =
+        ClientState::new_ssfl(&rt, 0, depth, 10, &server.enc, shard, 0.2).unwrap();
+
+    let mut losses = Vec::new();
+    for _ in 0..10 {
+        let local = client.phase1(&rt, 10, &batch).unwrap();
+        losses.push(local.loss);
+        client.fallback_update(&local);
+    }
+    assert!(
+        losses.last().unwrap() < losses.first().unwrap(),
+        "fallback training did not reduce local loss: {losses:?}"
+    );
+}
+
+#[test]
+fn fuse_via_artifact_run_matches_rust_run() {
+    // The fuse_via_artifact config flag must not change the trajectory
+    // (same math, different executor).
+    let Some(rt) = runtime() else { return };
+    use supersfl::config::ExperimentConfig;
+    use supersfl::orchestrator::run_experiment;
+
+    let mut base = ExperimentConfig::default()
+        .with_clients(3)
+        .with_rounds(2)
+        .with_seed(11);
+    base.data.train_per_class = 20;
+    base.train.local_steps = 1;
+    base.train.eval_samples = 100;
+
+    let a = run_experiment(&rt, &base).unwrap();
+    let mut via = base.clone();
+    via.ssfl.fuse_via_artifact = true;
+    let b = run_experiment(&rt, &via).unwrap();
+    assert!(
+        (a.metrics.final_accuracy - b.metrics.final_accuracy).abs() < 1e-6,
+        "artifact fusion diverged: {} vs {}",
+        a.metrics.final_accuracy,
+        b.metrics.final_accuracy
+    );
+}
+
+#[test]
+fn eval_accuracy_improves_over_rounds_in_tiny_run() {
+    let Some(rt) = runtime() else { return };
+    use supersfl::config::ExperimentConfig;
+    use supersfl::orchestrator::run_experiment;
+
+    let mut cfg = ExperimentConfig::default()
+        .with_clients(4)
+        .with_rounds(8)
+        .with_seed(3);
+    cfg.data.train_per_class = 60;
+    cfg.data.noise = 0.4;
+    cfg.train.local_steps = 2;
+    cfg.train.eval_samples = 200;
+    let res = run_experiment(&rt, &cfg).unwrap();
+    let first = res.metrics.rounds.first().unwrap().accuracy;
+    let best = res.metrics.best_accuracy;
+    assert!(
+        best > first + 0.05 || best > 0.5,
+        "no learning signal: first {first}, best {best}"
+    );
+}
