@@ -20,7 +20,7 @@ use supersfl::config::ExperimentConfig;
 use supersfl::orchestrator::run_experiment;
 use supersfl::runtime::Runtime;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> supersfl::Result<()> {
     let quick = std::env::args().any(|a| a == "--quick");
     let mut cfg = ExperimentConfig::default()
         .with_name(if quick { "e2e_quick" } else { "e2e_train" })
@@ -85,10 +85,11 @@ fn main() -> anyhow::Result<()> {
     res.metrics.write_json(&out.join(format!("{}.json", cfg.name)))?;
     println!("trajectory written to results/{}.csv", cfg.name);
 
-    anyhow::ensure!(
-        res.metrics.best_accuracy > 1.5 / cfg.data.classes as f64,
-        "model failed to learn (best acc {:.3})",
-        res.metrics.best_accuracy
-    );
+    if res.metrics.best_accuracy <= 1.5 / cfg.data.classes as f64 {
+        return Err(supersfl::Error::Config(format!(
+            "model failed to learn (best acc {:.3})",
+            res.metrics.best_accuracy
+        )));
+    }
     Ok(())
 }

@@ -27,7 +27,7 @@ fn cfg(method: Method, availability: f64) -> ExperimentConfig {
     cfg
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> supersfl::Result<()> {
     let rt = Runtime::load(&ExperimentConfig::default().artifacts_dir)?;
 
     let mut table = Table::new(&[

@@ -29,7 +29,7 @@ fn base_cfg(method: Method) -> ExperimentConfig {
     cfg
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> supersfl::Result<()> {
     let rt = Runtime::load(&ExperimentConfig::default().artifacts_dir)?;
 
     println!("== fleet & allocation (Eq. 1) ==");

@@ -11,7 +11,7 @@ use supersfl::config::ExperimentConfig;
 use supersfl::orchestrator::run_experiment;
 use supersfl::runtime::Runtime;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> supersfl::Result<()> {
     let mut cfg = ExperimentConfig::default()
         .with_name("quickstart")
         .with_clients(8)

@@ -24,7 +24,7 @@ fn cfg(lambda: f64, seed: u64) -> ExperimentConfig {
     cfg
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> supersfl::Result<()> {
     let rt = Runtime::load(&ExperimentConfig::default().artifacts_dir)?;
     println!("== λ ablation (Eq. 8 consistency term) at 50% availability ==\n");
 

@@ -2,17 +2,66 @@
 //!
 //! The Fed server aggregates every client prefix each round; this measures
 //! the Rust hot loop at fleet sizes 10/50/100/200 over the real model
-//! geometry. Feeds EXPERIMENTS.md §Perf.
+//! geometry (or a synthetic 8-layer geometry when artifacts are absent, so
+//! the bench runs anywhere). Reports the fused in-place pass that ships in
+//! `fedserver::aggregate_weighted` against the scratch-buffer reference it
+//! replaced — the before/after of the zero-copy aggregation work. Feeds
+//! EXPERIMENTS.md §Perf.
 
 use supersfl::bench_util::{black_box, measure, report, throughput};
 use supersfl::config::ExperimentConfig;
-use supersfl::fedserver::{aggregate, ClientUpdate};
+use supersfl::fedserver::{aggregate, client_weights, ClientUpdate};
 use supersfl::runtime::Runtime;
+use supersfl::util::math;
 use supersfl::util::rng::Pcg32;
 
-fn main() -> anyhow::Result<()> {
-    let rt = Runtime::load(&ExperimentConfig::default().artifacts_dir)?;
-    let sizes = rt.model().enc_layer_sizes.clone();
+/// The pre-optimization reference: per-layer scratch accumulate, then a
+/// combine pass reading the server segment (one allocation + two passes).
+fn aggregate_scratch_reference(
+    global: &mut [f32],
+    layer_sizes: &[usize],
+    items: &[(usize, &[f32], f64)],
+    lambda: f64,
+) {
+    let mut scratch: Vec<f32> = Vec::new();
+    let mut off = 0usize;
+    for (layer, &len) in layer_sizes.iter().enumerate() {
+        let holders: Vec<usize> = items
+            .iter()
+            .enumerate()
+            .filter(|(_, (depth, _, _))| *depth > layer)
+            .map(|(i, _)| i)
+            .collect();
+        if holders.is_empty() {
+            off += len;
+            continue;
+        }
+        scratch.clear();
+        scratch.resize(len, 0.0);
+        let mut wsum = 0.0f64;
+        for &i in &holders {
+            let (_, params, w) = &items[i];
+            math::axpy(&mut scratch, &params[off..off + len], *w as f32);
+            wsum += *w;
+        }
+        let denom = (wsum + lambda) as f32;
+        for (g, s) in global[off..off + len].iter_mut().zip(scratch.iter()) {
+            *g = (s + lambda as f32 * *g) / denom;
+        }
+        off += len;
+    }
+}
+
+fn main() -> supersfl::Result<()> {
+    // Real model geometry when available, synthetic otherwise.
+    let sizes: Vec<usize> = match Runtime::load_if_available(&ExperimentConfig::default().artifacts_dir)
+    {
+        Some(rt) => rt.model().enc_layer_sizes.clone(),
+        None => {
+            eprintln!("using synthetic 8-layer geometry");
+            vec![18_432, 36_864, 36_864, 36_864, 36_864, 36_864, 36_864, 36_864]
+        }
+    };
     let total: usize = sizes.iter().sum();
     let depth = sizes.len();
     let mut rng = Pcg32::seeded(1);
@@ -32,8 +81,46 @@ fn main() -> anyhow::Result<()> {
             .collect();
         let losses: Vec<f64> = (0..n_clients).map(|_| rng.uniform_range(0.1, 3.0)).collect();
         let mut global: Vec<f32> = (0..total).map(|_| rng.normal() as f32).collect();
+        let touched: f64 = params.iter().map(|p| p.len() as f64).sum();
 
+        let updates: Vec<ClientUpdate<'_>> = (0..n_clients)
+            .map(|i| ClientUpdate {
+                client: i,
+                depth: depths[i],
+                params: &params[i],
+                loss: losses[i],
+            })
+            .collect();
+        let items: Vec<(usize, &[f32], f64)> = {
+            let w = client_weights(&updates, 1e-8);
+            (0..n_clients)
+                .map(|i| (depths[i], params[i].as_slice(), w[i]))
+                .collect()
+        };
+
+        // Before: scratch-buffer reference. Same precomputed `items` as
+        // the fused measurement so the comparison is symmetric — only the
+        // per-layer averaging pass differs between the two timings.
+        let s_ref = measure(2, 10, || {
+            aggregate_scratch_reference(&mut global, &sizes, &items, 0.01);
+            black_box(global.first().copied());
+        });
+        report(&format!("aggregate n={n_clients} (scratch ref)"), &s_ref);
+
+        // After: the fused in-place pass that ships.
         let s = measure(2, 10, || {
+            black_box(supersfl::fedserver::aggregate_weighted(
+                &mut global,
+                &sizes,
+                &items,
+                0.01,
+            ));
+        });
+        report(&format!("aggregate n={n_clients} (fused)"), &s);
+
+        // End-to-end Eq. 6–8 entry point (includes Eq. 6 weight
+        // computation + update assembly), reported separately.
+        let s_e2e = measure(2, 10, || {
             let updates: Vec<ClientUpdate<'_>> = (0..n_clients)
                 .map(|i| ClientUpdate {
                     client: i,
@@ -44,11 +131,11 @@ fn main() -> anyhow::Result<()> {
                 .collect();
             black_box(aggregate(&mut global, &sizes, &updates, 0.01, 1e-8));
         });
-        report(&format!("aggregate n={n_clients}"), &s);
-        let touched: f64 = params.iter().map(|p| p.len() as f64).sum();
+        report(&format!("aggregate n={n_clients} (e2e incl. Eq.6)"), &s_e2e);
         println!(
-            "    -> {:.2} Gparam/s weighted-averaged",
-            throughput(&s, touched) / 1e9
+            "    -> {:.2} Gparam/s weighted-averaged | fused {:.2}x vs scratch ref",
+            throughput(&s, touched) / 1e9,
+            s_ref.mean_s / s.mean_s.max(1e-12)
         );
     }
     Ok(())

@@ -12,7 +12,7 @@ use supersfl::tpgf;
 use supersfl::util::math;
 use supersfl::util::rng::Pcg32;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> supersfl::Result<()> {
     let rt = Runtime::load(&ExperimentConfig::default().artifacts_dir)?;
     let mut rng = Pcg32::seeded(2);
 

@@ -1,16 +1,24 @@
-//! Perf microbench: PJRT dispatch cost per protocol op (L3 hot path).
+//! Perf microbench: PJRT dispatch cost per protocol op (L3 hot path) plus
+//! the parallel round engine's host-time throughput at fleet scale.
 //!
-//! Measures each artifact call the coordinator makes per client step —
-//! client_local / server_step / client_bwd / tpgf_update / eval — plus the
-//! literal-marshalling overhead split reported by RuntimeStats. Feeds
-//! EXPERIMENTS.md §Perf.
+//! Part 1 measures each artifact call the coordinator makes per client
+//! step — client_local / server_step / client_bwd / tpgf_update / eval —
+//! plus the literal-marshalling overhead split reported by RuntimeStats.
+//!
+//! Part 2 runs whole simulated rounds at 10/50/100 clients with
+//! `threads = 1` (the old sequential behaviour) vs `threads = 0` (all
+//! cores) and reports host ms/round, client-branches/s and the speedup —
+//! the ISSUE's before/after number. Results are bit-identical across the
+//! two configurations (asserted here on final accuracy).
+//!
+//! Feeds EXPERIMENTS.md §Perf.
 
 use supersfl::bench_util::{black_box, measure, report, throughput};
 use supersfl::config::ExperimentConfig;
+use supersfl::orchestrator::run_experiment;
 use supersfl::runtime::Runtime;
 
-fn main() -> anyhow::Result<()> {
-    let rt = Runtime::load(&ExperimentConfig::default().artifacts_dir)?;
+fn per_op_section(rt: &Runtime) -> supersfl::Result<()> {
     let m = rt.model().clone();
     let enc = rt.manifest.load_init("init_enc_c10")?;
     let clf_c = rt.manifest.load_init("init_clf_client_c10")?;
@@ -62,10 +70,85 @@ fn main() -> anyhow::Result<()> {
         black_box(rt.eval_batch(10, &enc, &clf_s, &xe).unwrap());
     });
     report(&format!("eval_batch (B={})", m.eval_batch), &s);
+    Ok(())
+}
 
+fn engine_cfg(clients: usize, threads: usize, rounds: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default()
+        .with_name("bench_engine")
+        .with_clients(clients)
+        .with_rounds(rounds)
+        .with_seed(1234)
+        .with_threads(threads);
+    cfg.data.train_per_class = 20;
+    cfg.data.test_total = 200;
+    cfg.train.local_steps = 1;
+    cfg.train.eval_samples = 100;
+    cfg
+}
+
+/// Whole-round host throughput: sequential (threads=1) vs parallel
+/// (threads=0, all cores) at 10/50/100 clients.
+///
+/// Per-round time is measured *marginally* — wall(R rounds) − wall(1
+/// round), divided by R−1 — so the thread-count-independent cost of
+/// `Harness::prepare` (dataset synthesis, fleet sampling) does not dilute
+/// the reported speedup.
+fn engine_section(rt: &Runtime) -> supersfl::Result<()> {
+    const ROUNDS: usize = 5;
+    println!("\n== parallel round engine: marginal host time per round ==");
+    println!("clients  threads  ms/round  branches/s  speedup");
+    for &clients in &[10usize, 50, 100] {
+        let mut seq_ms = 0.0f64;
+        let mut seq_bits = 0u64;
+        for &threads in &[1usize, 0] {
+            let full_cfg = engine_cfg(clients, threads, ROUNDS);
+            // Warm the compile cache outside the measured runs.
+            run_experiment(rt, &full_cfg)?;
+            let base = run_experiment(rt, &engine_cfg(clients, threads, 1))?;
+            let full = run_experiment(rt, &full_cfg)?;
+            let marginal_s =
+                (full.metrics.host_wall_s - base.metrics.host_wall_s).max(0.0)
+                    / (ROUNDS - 1) as f64;
+            let ms_per_round = marginal_s * 1e3;
+            let branches_s = clients as f64 / marginal_s.max(1e-9);
+            if threads == 1 {
+                seq_ms = ms_per_round;
+                seq_bits = full.metrics.final_accuracy.to_bits();
+                println!(
+                    "{clients:>7}  {:>7}  {ms_per_round:>8.1}  {branches_s:>10.1}  baseline",
+                    "1"
+                );
+            } else {
+                println!(
+                    "{clients:>7}  {:>7}  {ms_per_round:>8.1}  {branches_s:>10.1}  {:.2}x",
+                    "auto",
+                    seq_ms / ms_per_round.max(1e-9)
+                );
+                // The engine's determinism contract: same bits either way.
+                assert_eq!(
+                    seq_bits,
+                    full.metrics.final_accuracy.to_bits(),
+                    "thread-count invariance violated at {clients} clients"
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+fn main() -> supersfl::Result<()> {
+    let Some(rt) = Runtime::load_if_available(&ExperimentConfig::default().artifacts_dir) else {
+        return Ok(());
+    };
+
+    per_op_section(&rt)?;
+
+    // Print the per-op marshal/exec split before the engine section so the
+    // stats describe Part 1 only (they accumulate process-wide).
     let st = rt.stats();
     println!(
-        "\nruntime stats: {} executions | exec {:.3}s | marshal {:.3}s ({:.1}% of exec) | {} compiles {:.2}s",
+        "\nruntime stats (per-op section): {} executions | exec {:.3}s | marshal {:.3}s ({:.1}% of exec) | {} compiles {:.2}s",
         st.executions,
         st.exec_time_s,
         st.marshal_time_s,
@@ -73,5 +156,7 @@ fn main() -> anyhow::Result<()> {
         st.compile_count,
         st.compile_time_s
     );
+
+    engine_section(&rt)?;
     Ok(())
 }

@@ -17,7 +17,7 @@ fn spark(series: &[f64]) -> String {
         .collect()
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> supersfl::Result<()> {
     let rt = Runtime::load(&ExperimentConfig::default().artifacts_dir)?;
     let scale = Scale::from_env();
     std::fs::create_dir_all("results")?;

@@ -15,7 +15,7 @@ fn bar(x: f64, unit: f64) -> String {
     "#".repeat(n)
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> supersfl::Result<()> {
     let rt = Runtime::load(&ExperimentConfig::default().artifacts_dir)?;
     let scale = Scale::from_env();
     println!("== Fig. 4: SSFL speed-up over SFL / DFL ==\n");

@@ -11,7 +11,7 @@ fn bar(x: f64, unit: f64) -> String {
     "#".repeat(((x / unit).round() as usize).clamp(1, 50))
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> supersfl::Result<()> {
     let rt = Runtime::load(&ExperimentConfig::default().artifacts_dir)?;
     let scale = Scale::from_env();
     println!("== Fig. 5: consumption-per-accuracy and carbon footprint ==\n");

@@ -22,7 +22,7 @@ fn cfg(mode: TpgfMode) -> ExperimentConfig {
     cfg
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> supersfl::Result<()> {
     let rt = Runtime::load(&ExperimentConfig::default().artifacts_dir)?;
     println!("== Fig. 6: TPGF fusion-rule ablation ==\n");
 

@@ -14,7 +14,7 @@ use supersfl::config::{ExperimentConfig, Method};
 use supersfl::metrics::Table;
 use supersfl::runtime::Runtime;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> supersfl::Result<()> {
     let rt = Runtime::load(&ExperimentConfig::default().artifacts_dir)?;
     let scale = Scale::from_env();
     println!(

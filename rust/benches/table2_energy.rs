@@ -11,7 +11,7 @@ use supersfl::metrics::Table;
 use supersfl::orchestrator::run_experiment;
 use supersfl::runtime::Runtime;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> supersfl::Result<()> {
     let rt = Runtime::load(&ExperimentConfig::default().artifacts_dir)?;
     let scale = Scale::from_env();
     println!("== Table II: accuracy / power / W-per-%, CO2 ==\n");

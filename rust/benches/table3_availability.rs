@@ -33,7 +33,7 @@ fn mode_label(avail: f64) -> &'static str {
     }
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> supersfl::Result<()> {
     let rt = Runtime::load(&ExperimentConfig::default().artifacts_dir)?;
     println!("== Table III: accuracy vs server gradient availability ==\n");
 

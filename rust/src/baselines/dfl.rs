@@ -18,11 +18,19 @@
 //!   round (the "frequent coordination" communication term).
 //! * No auxiliary classifier and no fault tolerance: clients learn from
 //!   server gradients only and **stall** when the server is unreachable.
+//!
+//! Parallel execution: the natural unit of independence in DFL is the
+//! **replica** — clients of one replica serialize on its backbone copy,
+//! but replicas never touch each other between coordination barriers. So
+//! the engine fans out one worker per replica; each worker walks its
+//! replica's clients in ascending id order, which keeps the per-replica
+//! update sequence identical to the sequential loop (clients of a replica
+//! were already visited in id order there).
 
 use crate::allocation;
-use crate::energy::PowerState;
-use crate::fedserver;
-use crate::network::DeviceProfile;
+use crate::client::ClientState;
+use crate::network::{DeviceProfile, NetLane};
+use crate::orchestrator::engine::{self, RoundLedger};
 use crate::orchestrator::Harness;
 use crate::runtime::Runtime;
 use crate::util::math;
@@ -46,21 +54,46 @@ fn jittered_profiles(
         .collect()
 }
 
+/// One client's context inside a replica worker.
+struct DflClientLane<'a> {
+    client: &'a mut ClientState,
+    profile: &'a DeviceProfile,
+    /// Prefix length of this client's current split (into the backbone).
+    cut: usize,
+    srv_time: f64,
+    net: NetLane,
+    ledger: RoundLedger,
+}
+
+/// One decentralized server replica + the clients it serves this round.
+struct DflReplicaLane<'a> {
+    enc: &'a mut [f32],
+    clf: &'a mut [f32],
+    members: Vec<DflClientLane<'a>>,
+}
+
 pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
     let classes = h.cfg.data.classes;
     let dim = rt.model().dim;
+    let batch_n = rt.model().batch;
     let local_steps = h.cfg.train.local_steps;
     let n = h.clients.len();
     let full_bytes = (h.server.enc.len() * 4) as u64;
     let total_layers = rt.model().depth;
     let lr_server = h.cfg.train.lr_server as f32;
+    let threads = h.cfg.threads;
+    let smashed = h.cost.smashed_bytes(dim);
     let mut profile_rng = Pcg32::new(h.cfg.train.seed, 0xDF1);
 
     // Decentralized server replicas: full backbone + classifier each.
     let r = h.cfg.dfl_replicas.clamp(1, n.max(1));
     let mut rep_enc: Vec<Vec<f32>> = vec![h.server.enc.clone(); r];
     let mut rep_clf: Vec<Vec<f32>> = vec![h.server.clf_s.clone(); r];
-    let replica_of = |client: usize| client % r;
+
+    // Reused coordination buffers (no per-round allocations).
+    let clf_len = h.server.clf_s.len();
+    let mut enc_avg = vec![0.0f32; h.server.enc.len()];
+    let mut clf_avg = vec![0.0f32; clf_len];
 
     for round in 1..=h.cfg.train.rounds {
         h.net.begin_round();
@@ -78,82 +111,131 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
                     // Split moved: the client takes over a different
                     // prefix of the (just-provisioned) global backbone.
                     let len: usize = h.server.layer_sizes()[..new_depth].iter().sum();
-                    h.clients[ci].depth = new_depth;
-                    h.clients[ci].enc = h.server.enc[..len].to_vec();
+                    let c = &mut h.clients[ci];
+                    c.depth = new_depth;
+                    c.enc.resize(len, 0.0);
+                    c.enc.copy_from_slice(&h.server.enc[..len]);
                 }
             }
         }
 
-        let mut busy = vec![0.0f64; n];
-        let mut branch = vec![0.0f64; n];
-        let mut stalled = 0usize;
-        let mut server_steps = 0usize;
+        // Depths may have moved above: refresh per-client server step
+        // times through the single shared helper.
+        let srv_times: Vec<f64> = h
+            .clients
+            .iter()
+            .map(|c| h.server_step_time(c.depth))
+            .collect();
 
-        for ci in 0..n {
-            h.clients[ci].begin_round();
-            let depth = h.clients[ci].depth;
-            let profile = h.profiles[ci].clone();
-            let smashed = h.cost.smashed_bytes(dim);
-            let srv_time = h.server_step_time(depth);
-            let rep = replica_of(ci);
-            let cut = h.server.prefix_len(depth);
+        // ---- Fan out: one worker per replica; clients of a replica run
+        // in id order on its private backbone copy ----
+        let ledgers: Vec<RoundLedger> = {
+            let Harness {
+                clients,
+                profiles,
+                net,
+                cost,
+                train,
+                server,
+                ..
+            } = h;
+            let cost = &*cost;
+            let train = &*train;
+            let server = &*server;
 
-            for _ in 0..local_steps {
-                let batch = h.clients[ci].shard.next_batch(&h.train, rt.model().batch);
-
-                let z = rt.client_fwd(depth, &h.clients[ci].enc, &batch.x)?;
-                let t_fwd = h.cost.time_s(h.cost.client_fwd_flops(depth), profile.flops);
-                h.meter.client(&profile, PowerState::Compute, t_fwd);
-                branch[ci] += t_fwd;
-                busy[ci] += t_fwd;
-
-                let ex = h.net.exchange(ci, smashed, smashed, srv_time);
-                branch[ci] += ex.time_s();
-                let tx = (ex.time_s() - srv_time).max(0.0);
-                h.meter.client(&profile, PowerState::Transmit, tx);
-                busy[ci] += tx;
-
-                if ex.is_ok() {
-                    h.meter.server_busy(srv_time);
-                    let out = rt.server_step(
-                        depth,
-                        classes,
-                        &rep_enc[rep][cut..],
-                        &rep_clf[rep],
-                        &z,
-                        &batch.y,
-                    )?;
-                    math::sgd_step(&mut rep_enc[rep][cut..], &out.g_srv, lr_server);
-                    math::sgd_step(&mut rep_clf[rep], &out.g_clf_s, lr_server);
-                    h.clients[ci].round_server_loss.push(out.loss as f64);
-
-                    let g_enc = rt.client_bwd(depth, &h.clients[ci].enc, &batch.x, &out.g_z)?;
-                    let lr = h.clients[ci].lr;
-                    math::sgd_step(&mut h.clients[ci].enc, &g_enc, lr);
-                    let t_bwd = h.cost.time_s(h.cost.client_bwd_flops(depth), profile.flops);
-                    h.meter.client(&profile, PowerState::Compute, t_bwd);
-                    branch[ci] += t_bwd;
-                    busy[ci] += t_bwd;
-                    server_steps += 1;
-                } else {
-                    // Server-dependent: no local supervision, step lost.
-                    stalled += 1;
-                }
+            let mut groups: Vec<DflReplicaLane<'_>> = rep_enc
+                .iter_mut()
+                .zip(rep_clf.iter_mut())
+                .map(|(enc, clf)| DflReplicaLane {
+                    enc,
+                    clf,
+                    members: Vec::new(),
+                })
+                .collect();
+            for (ci, client) in clients.iter_mut().enumerate() {
+                let depth = client.depth;
+                groups[ci % r].members.push(DflClientLane {
+                    profile: &profiles[ci],
+                    cut: server.prefix_len(depth),
+                    srv_time: srv_times[ci],
+                    net: net.lane(ci, round as u64),
+                    ledger: RoundLedger::new(ci),
+                    client,
+                });
             }
-        }
 
-        let round_dt = h.clock.advance_parallel(&branch);
+            engine::run_lanes(threads, &mut groups, |rep| {
+                for m in rep.members.iter_mut() {
+                    m.client.begin_round();
+                    let depth = m.client.depth;
+                    for _ in 0..local_steps {
+                        let batch = m.client.shard.next_batch(train, batch_n);
+
+                        let z = rt.client_fwd(depth, &m.client.enc, &batch.x)?;
+                        let t_fwd =
+                            cost.time_s(cost.client_fwd_flops(depth), m.profile.flops);
+                        m.ledger.work(m.profile, t_fwd);
+
+                        let ex = m.net.exchange(smashed, smashed, m.srv_time);
+                        m.ledger.exchange(m.profile, ex.time_s(), m.srv_time);
+
+                        if ex.is_ok() {
+                            let out = rt.server_step(
+                                depth,
+                                classes,
+                                &rep.enc[m.cut..],
+                                &*rep.clf,
+                                &z,
+                                &batch.y,
+                            )?;
+                            math::sgd_step(&mut rep.enc[m.cut..], &out.g_srv, lr_server);
+                            math::sgd_step(rep.clf, &out.g_clf_s, lr_server);
+                            m.client.round_server_loss.push(out.loss as f64);
+                            m.ledger.server_step(m.srv_time);
+
+                            let g_enc =
+                                rt.client_bwd(depth, &m.client.enc, &batch.x, &out.g_z)?;
+                            let lr = m.client.lr;
+                            math::sgd_step(&mut m.client.enc, &g_enc, lr);
+                            let t_bwd =
+                                cost.time_s(cost.client_bwd_flops(depth), m.profile.flops);
+                            m.ledger.work(m.profile, t_bwd);
+                        } else {
+                            // Server-dependent: no local supervision, step lost.
+                            m.ledger.fallback_steps += 1;
+                        }
+                    }
+                }
+                Ok(())
+            })?;
+
+            // Collect per-client results out of the replica groups and
+            // restore ascending client-id order for the merge.
+            let mut collected: Vec<(NetLane, RoundLedger)> = groups
+                .into_iter()
+                .flat_map(|g| g.members.into_iter().map(|m| (m.net, m.ledger)))
+                .collect();
+            collected.sort_by_key(|(_, l)| l.client);
+            collected
+                .into_iter()
+                .map(|(lane, ledger)| {
+                    net.absorb_lane(&lane);
+                    ledger
+                })
+                .collect()
+        };
+
+        let (round_dt, busy, stalled, server_steps) = h.absorb_ledgers(&ledgers);
 
         // ---- Replica coordination: ship every replica both ways and
         // average (the "frequent coordination" term), then layer-align
         // with the client prefixes. ----
-        let clf_len = h.server.clf_s.len();
         let fed_t = h
             .net
             .fed_link((full_bytes + (clf_len * 4) as u64) * r as u64 * 2);
         h.clock.advance(fed_t);
-        let mut enc_avg = vec![0.0f32; h.server.enc.len()];
-        let mut clf_avg = vec![0.0f32; clf_len];
+        enc_avg.fill(0.0);
+        clf_avg.fill(0.0);
         for rep in 0..r {
             math::axpy(&mut enc_avg, &rep_enc[rep], 1.0 / r as f32);
             math::axpy(&mut clf_avg, &rep_clf[rep], 1.0 / r as f32);
@@ -163,14 +245,9 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
         // on top of the replica average. ----
         let mut agg_branch = vec![0.0f64; n];
         for ci in 0..n {
-            agg_branch[ci] = h.net.bulk_up(ci, (h.clients[ci].enc.len() * 4) as u64);
+            agg_branch[ci] = h.net.bulk_up(ci, h.clients[ci].enc_bytes());
         }
-        let agg_dt = h.clock.advance_parallel(&agg_branch);
-        for (i, &t) in agg_branch.iter().enumerate() {
-            let p = h.profiles[i].clone();
-            h.meter.client(&p, PowerState::Transmit, t);
-            h.meter.client(&p, PowerState::Idle, (agg_dt - t).max(0.0));
-        }
+        h.charge_barrier_phase(&agg_branch);
         let total_samples: f64 = h.clients.iter().map(|c| c.shard.len() as f64).sum();
         {
             let items: Vec<(usize, &[f32], f64)> = h
@@ -184,13 +261,12 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
                     )
                 })
                 .collect();
-            let sizes = h.server.layer_sizes().to_vec();
             // λ = 1 against the replica average: layers trained by both
             // clients and replicas blend 50/50 (Σw_i = 1 for FedAvg
             // weights); client-only layers follow the clients, server-only
             // layers keep the replica average.
             h.server.enc.copy_from_slice(&enc_avg);
-            fedserver::aggregate_weighted(&mut h.server.enc, &sizes, &items, 1.0);
+            h.server.fedavg_prefixes(&items, 1.0);
         }
         h.server.clf_s.copy_from_slice(&clf_avg);
         for rep in 0..r {
@@ -199,18 +275,13 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
         }
 
         // ---- Full-backbone provisioning for the dynamic split ----
+        // Zero-copy: clients sync from the borrowed global encoder slice.
         let mut bc = vec![0.0f64; n];
         for ci in 0..n {
             bc[ci] = h.net.bulk_down(ci, full_bytes);
-            let g = h.server.enc.clone();
-            h.clients[ci].sync_from_global(&g);
+            h.clients[ci].sync_from_global(&h.server.enc);
         }
-        let bc_dt = h.clock.advance_parallel(&bc);
-        for (i, &t) in bc.iter().enumerate() {
-            let p = h.profiles[i].clone();
-            h.meter.client(&p, PowerState::Transmit, t);
-            h.meter.client(&p, PowerState::Idle, (bc_dt - t).max(0.0));
-        }
+        h.charge_barrier_phase(&bc);
 
         let acc = h.eval_global(rt)?;
         if h.finish_round(round, round_dt, &busy, acc, stalled, server_steps) {

@@ -9,21 +9,44 @@
 //! * clients depend entirely on server gradients: when the server is
 //!   unreachable the step **stalls** (the behaviour SuperSFL's fallback
 //!   removes — recorded in `fallback_steps` as stalled steps).
+//!
+//! The per-client server-side copies make SplitFed naturally lane
+//! friendly: each client branch (forward → exchange → server step on its
+//! own copy → backward) runs on a worker thread of the
+//! [`crate::orchestrator::engine`], with no cross-client state until the
+//! FedAvg barrier.
 
-use crate::energy::PowerState;
-use crate::fedserver;
+use crate::client::ClientState;
+use crate::network::{DeviceProfile, NetLane};
+use crate::orchestrator::engine::{self, RoundLedger};
 use crate::orchestrator::Harness;
 use crate::runtime::Runtime;
 use crate::util::math;
 use crate::Result;
 
+/// One SplitFed client's worker-thread context for a round.
+struct SflLane<'a> {
+    client: &'a mut ClientState,
+    profile: &'a DeviceProfile,
+    /// This client's private server-side suffix copy (SplitFed semantics).
+    srv: &'a mut [f32],
+    /// This client's private server-side classifier copy.
+    clf: &'a mut [f32],
+    net: NetLane,
+    ledger: RoundLedger,
+}
+
 pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
     let classes = h.cfg.data.classes;
     let depth = h.cfg.sfl_fixed_depth.clamp(1, rt.model().depth - 1);
     let dim = rt.model().dim;
+    let batch_n = rt.model().batch;
     let local_steps = h.cfg.train.local_steps;
     let lr_server = h.cfg.train.lr_server as f32;
+    let threads = h.cfg.threads;
     let suffix_len = h.server.suffix(depth).len();
+    let smashed = h.cost.smashed_bytes(dim);
+    let srv_time = h.server_step_time(depth);
 
     // Per-client server-side copies (suffix + classifier), SplitFed-style.
     let n = h.clients.len();
@@ -32,74 +55,86 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
 
     for round in 1..=h.cfg.train.rounds {
         h.net.begin_round();
-        let mut busy = vec![0.0f64; n];
-        let mut branch = vec![0.0f64; n];
-        let mut stalled = 0usize;
-        let mut server_steps = 0usize;
 
-        for ci in 0..n {
-            h.clients[ci].begin_round();
-            let profile = h.profiles[ci].clone();
-            let smashed = h.cost.smashed_bytes(dim);
-            let srv_time = h.server_step_time(depth);
+        // ---- Fan out: every client branch on a worker thread ----
+        let ledgers: Vec<RoundLedger> = {
+            let Harness {
+                clients,
+                profiles,
+                net,
+                cost,
+                train,
+                ..
+            } = h;
+            let cost = &*cost;
+            let train = &*train;
 
-            for _ in 0..local_steps {
-                let batch = h.clients[ci].shard.next_batch(&h.train, rt.model().batch);
-
-                let z = rt.client_fwd(depth, &h.clients[ci].enc, &batch.x)?;
-                let t_fwd = h.cost.time_s(h.cost.client_fwd_flops(depth), profile.flops);
-                h.meter.client(&profile, PowerState::Compute, t_fwd);
-                branch[ci] += t_fwd;
-                busy[ci] += t_fwd;
-
-                let ex = h.net.exchange(ci, smashed, smashed, srv_time);
-                branch[ci] += ex.time_s();
-                let tx = (ex.time_s() - srv_time).max(0.0);
-                h.meter.client(&profile, PowerState::Transmit, tx);
-                busy[ci] += tx;
-
-                if ex.is_ok() {
-                    h.meter.server_busy(srv_time);
-                    let out = rt.server_step(
-                        depth,
-                        classes,
-                        &srv_copies[ci],
-                        &clf_copies[ci],
-                        &z,
-                        &batch.y,
-                    )?;
-                    math::sgd_step(&mut srv_copies[ci], &out.g_srv, lr_server);
-                    math::sgd_step(&mut clf_copies[ci], &out.g_clf_s, lr_server);
-                    h.clients[ci].round_server_loss.push(out.loss as f64);
-
-                    let g_enc = rt.client_bwd(depth, &h.clients[ci].enc, &batch.x, &out.g_z)?;
-                    let lr = h.clients[ci].lr;
-                    math::sgd_step(&mut h.clients[ci].enc, &g_enc, lr);
-                    let t_bwd = h.cost.time_s(h.cost.client_bwd_flops(depth), profile.flops);
-                    h.meter.client(&profile, PowerState::Compute, t_bwd);
-                    branch[ci] += t_bwd;
-                    busy[ci] += t_bwd;
-                    server_steps += 1;
-                } else {
-                    // No fallback path in SplitFed: the step is lost.
-                    stalled += 1;
-                }
+            let mut lanes: Vec<SflLane<'_>> = Vec::with_capacity(n);
+            let mut srv_it = srv_copies.iter_mut();
+            let mut clf_it = clf_copies.iter_mut();
+            for (ci, client) in clients.iter_mut().enumerate() {
+                lanes.push(SflLane {
+                    client,
+                    profile: &profiles[ci],
+                    srv: srv_it.next().expect("copies sized to fleet"),
+                    clf: clf_it.next().expect("copies sized to fleet"),
+                    net: net.lane(ci, round as u64),
+                    ledger: RoundLedger::new(ci),
+                });
             }
-        }
 
-        let round_dt = h.clock.advance_parallel(&branch);
+            engine::run_lanes(threads, &mut lanes, |lane| {
+                lane.client.begin_round();
+                for _ in 0..local_steps {
+                    let batch = lane.client.shard.next_batch(train, batch_n);
+
+                    let z = rt.client_fwd(depth, &lane.client.enc, &batch.x)?;
+                    let t_fwd = cost.time_s(cost.client_fwd_flops(depth), lane.profile.flops);
+                    lane.ledger.work(lane.profile, t_fwd);
+
+                    let ex = lane.net.exchange(smashed, smashed, srv_time);
+                    lane.ledger.exchange(lane.profile, ex.time_s(), srv_time);
+
+                    if ex.is_ok() {
+                        let out =
+                            rt.server_step(depth, classes, &*lane.srv, &*lane.clf, &z, &batch.y)?;
+                        math::sgd_step(lane.srv, &out.g_srv, lr_server);
+                        math::sgd_step(lane.clf, &out.g_clf_s, lr_server);
+                        lane.client.round_server_loss.push(out.loss as f64);
+                        lane.ledger.server_step(srv_time);
+
+                        let g_enc =
+                            rt.client_bwd(depth, &lane.client.enc, &batch.x, &out.g_z)?;
+                        let lr = lane.client.lr;
+                        math::sgd_step(&mut lane.client.enc, &g_enc, lr);
+                        let t_bwd =
+                            cost.time_s(cost.client_bwd_flops(depth), lane.profile.flops);
+                        lane.ledger.work(lane.profile, t_bwd);
+                    } else {
+                        // No fallback path in SplitFed: the step is lost.
+                        lane.ledger.fallback_steps += 1;
+                    }
+                }
+                Ok(())
+            })?;
+
+            lanes
+                .into_iter()
+                .map(|lane| {
+                    net.absorb_lane(&lane.net);
+                    lane.ledger
+                })
+                .collect()
+        };
+
+        let (round_dt, busy, stalled, server_steps) = h.absorb_ledgers(&ledgers);
 
         // ---- FedAvg of client-side models (sample-count weights) ----
         let mut agg_branch = vec![0.0f64; n];
         for ci in 0..n {
-            agg_branch[ci] = h.net.bulk_up(ci, (h.clients[ci].enc.len() * 4) as u64);
+            agg_branch[ci] = h.net.bulk_up(ci, h.clients[ci].enc_bytes());
         }
-        let agg_dt = h.clock.advance_parallel(&agg_branch);
-        for (i, &t) in agg_branch.iter().enumerate() {
-            let p = h.profiles[i].clone();
-            h.meter.client(&p, PowerState::Transmit, t);
-            h.meter.client(&p, PowerState::Idle, (agg_dt - t).max(0.0));
-        }
+        h.charge_barrier_phase(&agg_branch);
         let total_samples: f64 = h.clients.iter().map(|c| c.shard.len() as f64).sum();
         {
             let items: Vec<(usize, &[f32], f64)> = h
@@ -113,8 +148,7 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
                     )
                 })
                 .collect();
-            let sizes = h.server.layer_sizes().to_vec();
-            fedserver::aggregate_weighted(&mut h.server.enc, &sizes, &items, 0.0);
+            h.server.fedavg_prefixes(&items, 0.0);
         }
 
         // ---- FedAvg of the per-client server-side copies (SplitFed) ----
@@ -138,18 +172,13 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
         }
 
         // ---- Broadcast the aggregated client-side model ----
+        // Zero-copy: clients sync from the borrowed global encoder slice.
         let mut bc = vec![0.0f64; n];
         for ci in 0..n {
-            bc[ci] = h.net.bulk_down(ci, (h.clients[ci].enc.len() * 4) as u64);
-            let g = h.server.enc.clone();
-            h.clients[ci].sync_from_global(&g);
+            bc[ci] = h.net.bulk_down(ci, h.clients[ci].enc_bytes());
+            h.clients[ci].sync_from_global(&h.server.enc);
         }
-        let bc_dt = h.clock.advance_parallel(&bc);
-        for (i, &t) in bc.iter().enumerate() {
-            let p = h.profiles[i].clone();
-            h.meter.client(&p, PowerState::Transmit, t);
-            h.meter.client(&p, PowerState::Idle, (bc_dt - t).max(0.0));
-        }
+        h.charge_barrier_phase(&bc);
 
         let acc = h.eval_global(rt)?;
         if h.finish_round(round, round_dt, &busy, acc, stalled, server_steps) {

@@ -112,10 +112,17 @@ impl ClientState {
         })
     }
 
-    /// Refresh θ_i from the aggregated global model (broadcast).
+    /// Refresh θ_i from the aggregated global model (broadcast). Takes a
+    /// borrowed slice of the shared encoder so the broadcast path never
+    /// clones θ per client — only the client's own prefix is memcpy'd.
     pub fn sync_from_global(&mut self, global_enc: &[f32]) {
         let n = self.enc.len();
         self.enc.copy_from_slice(&global_enc[..n]);
+    }
+
+    /// Wire size of this client's encoder prefix (f32 payload).
+    pub fn enc_bytes(&self) -> u64 {
+        (self.enc.len() * std::mem::size_of::<f32>()) as u64
     }
 
     /// Begin a new round: reset loss accumulators.
@@ -218,6 +225,31 @@ impl ClientState {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn client_state_is_send() {
+        // The parallel round engine moves `&mut ClientState` onto worker
+        // threads; keep the state plain data.
+        fn assert_send<T: Send>() {}
+        assert_send::<ClientState>();
+    }
+
+    #[test]
+    fn enc_bytes_counts_f32_payload() {
+        let mut c = ClientState {
+            id: 0,
+            depth: 1,
+            enc: vec![0.0; 7],
+            clf: None,
+            shard: ClientShard::new(vec![0], crate::util::rng::Pcg32::seeded(1)),
+            lr: 0.1,
+            round_local_loss: LossAcc::default(),
+            round_server_loss: LossAcc::default(),
+        };
+        assert_eq!(c.enc_bytes(), 28);
+        c.enc.push(0.0);
+        assert_eq!(c.enc_bytes(), 32);
+    }
 
     #[test]
     fn loss_acc_mean_and_reset() {

@@ -294,6 +294,10 @@ pub struct ExperimentConfig {
     /// paper's §III characterizes DFL as "frequent coordination across
     /// decentralized replicas"; SuperSFL hosts ONE central super-network).
     pub dfl_replicas: usize,
+    /// Host worker threads for the parallel round engine (0 = all cores).
+    /// Results are bit-identical for every value — see
+    /// `orchestrator::engine` for the determinism contract.
+    pub threads: usize,
     /// Where `make artifacts` put the HLO + manifest.
     pub artifacts_dir: PathBuf,
 }
@@ -312,6 +316,7 @@ impl Default for ExperimentConfig {
             ssfl: SuperSflConfig::default(),
             sfl_fixed_depth: 2,
             dfl_replicas: 2,
+            threads: 0,
             artifacts_dir: PathBuf::from("artifacts"),
         }
     }
@@ -346,6 +351,12 @@ impl ExperimentConfig {
 
     pub fn with_name(mut self, n: &str) -> Self {
         self.name = n.to_string();
+        self
+    }
+
+    /// Host worker threads for the round engine (0 = all cores).
+    pub fn with_threads(mut self, t: usize) -> Self {
+        self.threads = t;
         self
     }
 
@@ -406,6 +417,7 @@ impl ExperimentConfig {
             "method" => self.method = Method::parse(s(v, key)?)?,
             "sfl_fixed_depth" => self.sfl_fixed_depth = f(v)? as usize,
             "dfl_replicas" => self.dfl_replicas = (f(v)? as usize).max(1),
+            "threads" => self.threads = f(v)? as usize,
             "artifacts_dir" => self.artifacts_dir = PathBuf::from(s(v, key)?),
             "clients" => self.fleet.clients = f(v)? as usize,
             "mem_gb" => self.fleet.mem_gb = pair(v)?,
@@ -493,6 +505,7 @@ impl ExperimentConfig {
         o.set("lambda", n(self.ssfl.lambda));
         o.set("sfl_fixed_depth", n(self.sfl_fixed_depth as f64));
         o.set("dfl_replicas", n(self.dfl_replicas as f64));
+        o.set("threads", n(self.threads as f64));
         if let Some(t) = self.train.target_accuracy {
             o.set("target_accuracy", n(t));
         }
@@ -562,7 +575,8 @@ mod tests {
             .with_method(Method::Dfl)
             .with_clients(77)
             .with_classes(100)
-            .with_seed(9);
+            .with_seed(9)
+            .with_threads(4);
         c.ssfl.tpgf_mode = TpgfMode::NoDepth;
         let j = c.to_json();
         let mut c2 = ExperimentConfig::default();
@@ -571,6 +585,7 @@ mod tests {
         assert_eq!(c2.fleet.clients, 77);
         assert_eq!(c2.data.classes, 100);
         assert_eq!(c2.train.seed, 9);
+        assert_eq!(c2.threads, 4);
         assert_eq!(c2.ssfl.tpgf_mode, TpgfMode::NoDepth);
     }
 

@@ -42,14 +42,26 @@ impl EnergyMeter {
         }
     }
 
-    /// Charge a client interval in the given state.
-    pub fn client(&mut self, profile: &DeviceProfile, state: PowerState, dt: f64) {
-        let w = match state {
+    /// Power draw of a device in a state. Exposed so the parallel round
+    /// engine's per-client ledgers integrate energy with exactly the same
+    /// model, then merge via [`EnergyMeter::add_client_energy`].
+    pub fn device_power_w(profile: &DeviceProfile, state: PowerState) -> f64 {
+        match state {
             PowerState::Compute => profile.active_w,
             PowerState::Transmit => profile.tx_w,
             PowerState::Idle => profile.idle_w,
-        };
-        self.client_energy_j[profile.id] += w * dt.max(0.0);
+        }
+    }
+
+    /// Charge a client interval in the given state.
+    pub fn client(&mut self, profile: &DeviceProfile, state: PowerState, dt: f64) {
+        self.client_energy_j[profile.id] += Self::device_power_w(profile, state) * dt.max(0.0);
+    }
+
+    /// Merge pre-integrated client energy (a round ledger) into a device's
+    /// account. Called at the aggregation barrier in client-id order.
+    pub fn add_client_energy(&mut self, id: usize, joules: f64) {
+        self.client_energy_j[id] += joules.max(0.0);
     }
 
     /// Charge server busy time (compute on behalf of clients).
@@ -165,6 +177,20 @@ mod tests {
     fn power_per_acc_guards_zero() {
         let (m, _) = meter_and_fleet();
         assert!(m.power_per_acc(10.0, 0.0).is_infinite());
+    }
+
+    #[test]
+    fn ledger_merge_equals_direct_charging() {
+        let (mut direct, fleet) = meter_and_fleet();
+        direct.client(&fleet[1], PowerState::Compute, 3.0);
+        direct.client(&fleet[1], PowerState::Transmit, 1.5);
+
+        let (mut merged, _) = meter_and_fleet();
+        let joules = EnergyMeter::device_power_w(&fleet[1], PowerState::Compute) * 3.0
+            + EnergyMeter::device_power_w(&fleet[1], PowerState::Transmit) * 1.5;
+        merged.add_client_energy(1, joules);
+
+        assert_eq!(direct.client_energy_j(1), merged.client_energy_j(1));
     }
 
     #[test]

@@ -73,6 +73,13 @@ pub fn aggregate(
 /// (sample-count weights, λ = 0).
 ///
 /// `items` = `(depth, prefix_params, weight)`.
+///
+/// The pass is fused and fully in place: per layer the server segment is
+/// rescaled to carry the λ·θs term, each contributing prefix is
+/// accumulated with `axpy`, and one final rescale applies the 1/(Σw+λ)
+/// normalization. No per-layer scratch buffer and no holder index list —
+/// the only allocation per call is the returned contributor-count
+/// diagnostics Vec (one `usize` per layer, independent of fleet size).
 pub fn aggregate_weighted(
     global: &mut [f32],
     layer_sizes: &[usize],
@@ -95,39 +102,35 @@ pub fn aggregate_weighted(
     }
 
     let mut contributors = vec![0usize; layer_sizes.len()];
-    let mut scratch: Vec<f32> = Vec::new();
 
     let mut off = 0usize;
     for (layer, &len) in layer_sizes.iter().enumerate() {
-        let holders: Vec<usize> = items
-            .iter()
-            .enumerate()
-            .filter(|(_, (depth, _, _))| *depth > layer)
-            .map(|(i, _)| i)
-            .collect();
-        contributors[layer] = holders.len();
-        if holders.is_empty() {
+        let mut wsum = 0.0f64;
+        let mut holders = 0usize;
+        for (depth, _, w) in items {
+            if *depth > layer {
+                wsum += *w;
+                holders += 1;
+            }
+        }
+        contributors[layer] = holders;
+        if holders == 0 {
             // No client trained this layer: server copy stands (§II-D
             // "if only one source provides layer ℓ, used directly").
             off += len;
             continue;
         }
 
-        // θ̄ℓ = (Σ wᵢ θᵢℓ + λ θsℓ) / (Σ wᵢ + λ)   — closed form of Eq. 7.
-        scratch.clear();
-        scratch.resize(len, 0.0);
-        let mut wsum = 0.0f64;
-        for &i in &holders {
-            let (_, params, w) = &items[i];
-            let seg = &params[off..off + len];
-            math::axpy(&mut scratch, seg, *w as f32);
-            wsum += *w;
-        }
+        // θ̄ℓ = (Σ wᵢ θᵢℓ + λ θsℓ) / (Σ wᵢ + λ)   — closed form of Eq. 7,
+        // computed in place on the server segment.
         let g_seg = &mut global[off..off + len];
-        let denom = (wsum + lambda) as f32;
-        for (g, s) in g_seg.iter_mut().zip(scratch.iter()) {
-            *g = (s + lambda as f32 * *g) / denom;
+        math::scale(g_seg, lambda as f32);
+        for (depth, params, w) in items {
+            if *depth > layer {
+                math::axpy(g_seg, &params[off..off + len], *w as f32);
+            }
         }
+        math::scale(g_seg, 1.0 / (wsum + lambda) as f32);
         off += len;
     }
     contributors
@@ -315,5 +318,72 @@ mod tests {
         let contributors = aggregate(&mut global, &sizes(), &[], 0.01, EPS);
         assert!(global.iter().all(|&v| v == 1.25));
         assert_eq!(contributors, vec![0; 4]);
+    }
+
+    #[test]
+    fn client_weights_empty_update_set_is_empty() {
+        let w = client_weights(&[], EPS);
+        assert!(w.is_empty());
+    }
+
+    #[test]
+    fn client_weights_zero_total_depth_is_all_zero_and_finite() {
+        // Degenerate fleet where every client holds an empty prefix
+        // (depth 0): depth shares must collapse to zero, not NaN/inf,
+        // and aggregation must leave the global model untouched.
+        let empty: Vec<f32> = Vec::new();
+        let updates = vec![
+            ClientUpdate { client: 0, depth: 0, params: &empty, loss: 1.0 },
+            ClientUpdate { client: 1, depth: 0, params: &empty, loss: 0.2 },
+        ];
+        let w = client_weights(&updates, EPS);
+        assert!(w.iter().all(|&x| x == 0.0 && x.is_finite()), "{w:?}");
+
+        let mut global = vec![3.0f32; 12];
+        let contributors = aggregate(&mut global, &sizes(), &updates, 0.01, EPS);
+        assert_eq!(contributors, vec![0; 4]);
+        assert!(global.iter().all(|&v| v == 3.0));
+    }
+
+    #[test]
+    fn client_weights_equal_loss_fleet_sums_to_at_most_one() {
+        // All-equal-loss fleet: loss shares are exactly 1/n, so
+        // Σ wᵢ = Σ (dᵢ/Σd)·(1/n) = 1/n ≤ 1.
+        let n = 6usize;
+        let params: Vec<Vec<f32>> = (0..n).map(|i| prefix(0.0, 1 + i % 4)).collect();
+        let updates: Vec<ClientUpdate<'_>> = (0..n)
+            .map(|i| ClientUpdate {
+                client: i,
+                depth: 1 + i % 4,
+                params: &params[i],
+                loss: 0.7,
+            })
+            .collect();
+        let w = client_weights(&updates, EPS);
+        let sum: f64 = w.iter().sum();
+        assert!(sum <= 1.0 + 1e-12, "sum {sum}");
+        assert!((sum - 1.0 / n as f64).abs() < 1e-9, "sum {sum}");
+        assert!(w.iter().all(|&x| x > 0.0));
+    }
+
+    #[test]
+    fn client_weights_sum_at_most_one_always() {
+        // Σᵢ aᵢbᵢ ≤ max(b) ≤ 1 for normalized shares — property-check it.
+        forall(11, 50, |rng: &mut Pcg32| {
+            let n = 1 + rng.uniform_usize(12);
+            let params: Vec<Vec<f32>> = (0..n).map(|i| prefix(0.0, 1 + i % 4)).collect();
+            let updates: Vec<ClientUpdate<'_>> = (0..n)
+                .map(|i| ClientUpdate {
+                    client: i,
+                    depth: 1 + i % 4,
+                    params: &params[i],
+                    loss: rng.uniform_range(1e-3, 10.0),
+                })
+                .collect();
+            let w = client_weights(&updates, EPS);
+            let sum: f64 = w.iter().sum();
+            assert!(sum <= 1.0 + 1e-9, "sum {sum}");
+            assert!(w.iter().all(|&x| x.is_finite() && x >= 0.0));
+        });
     }
 }

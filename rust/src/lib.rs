@@ -29,6 +29,12 @@
 //! * [`baselines`] — SFL (SplitFed) and DFL comparators.
 //! * [`bench_util`] — the bench harness used by `cargo bench` targets.
 
+#[cfg(not(feature = "xla"))]
+compile_error!(
+    "supersfl requires the `xla` feature (enabled by default). It resolves to \
+     the bundled PJRT stub crate at rust/xla unless patched with real bindings."
+);
+
 pub mod allocation;
 pub mod baselines;
 pub mod bench_util;
@@ -48,26 +54,63 @@ pub mod util;
 pub use config::ExperimentConfig;
 pub use orchestrator::{run_experiment, RunResult};
 
-/// Crate-wide error type.
-#[derive(Debug, thiserror::Error)]
+/// Crate-wide error type (hand-rolled: the offline build has no
+/// `thiserror` either).
+#[derive(Debug)]
 pub enum Error {
-    #[error("xla: {0}")]
     Xla(String),
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("json: {0}")]
+    Io(std::io::Error),
     Json(String),
-    #[error("config: {0}")]
     Config(String),
-    #[error("manifest: {0}")]
     Manifest(String),
-    #[error("shape mismatch: {0}")]
     Shape(String),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Xla(e) => write!(f, "xla: {e}"),
+            Error::Io(e) => write!(f, "io: {e}"),
+            Error::Json(e) => write!(f, "json: {e}"),
+            Error::Config(e) => write!(f, "config: {e}"),
+            Error::Manifest(e) => write!(f, "manifest: {e}"),
+            Error::Shape(e) => write!(f, "shape mismatch: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e.to_string())
+    }
+}
+
+// CLI/config plumbing parses numbers from text; fold those into Config
+// errors so `--set`/flag handling can use `?` without a helper crate.
+impl From<std::num::ParseIntError> for Error {
+    fn from(e: std::num::ParseIntError) -> Self {
+        Error::Config(format!("invalid integer: {e}"))
+    }
+}
+
+impl From<std::num::ParseFloatError> for Error {
+    fn from(e: std::num::ParseFloatError) -> Self {
+        Error::Config(format!("invalid number: {e}"))
     }
 }
 

@@ -16,7 +16,7 @@ use supersfl::config::{ExperimentConfig, Method};
 use supersfl::metrics::Table;
 use supersfl::runtime::Runtime;
 use supersfl::util::json::{self, JsonValue};
-use supersfl::{allocation, network, orchestrator, util::rng::Pcg32};
+use supersfl::{allocation, network, orchestrator, util::rng::Pcg32, Error, Result};
 
 mod cli;
 
@@ -49,11 +49,12 @@ fn usage() {
     eprintln!(
         "usage: supersfl <train|allocate|inspect> [--method ssfl|sfl|dfl] \
          [--clients N] [--classes 10|100] [--rounds N] [--seed N] \
-         [--config file.json] [--set key=value]... [--artifacts DIR] [--out DIR]"
+         [--threads N] [--config file.json] [--set key=value]... \
+         [--artifacts DIR] [--out DIR]"
     );
 }
 
-fn build_config(args: &cli::Args) -> anyhow::Result<ExperimentConfig> {
+fn build_config(args: &cli::Args) -> Result<ExperimentConfig> {
     let mut cfg = ExperimentConfig::default();
     if let Some(path) = args.get("config") {
         cfg = ExperimentConfig::from_json_file(&PathBuf::from(path))?;
@@ -73,6 +74,9 @@ fn build_config(args: &cli::Args) -> anyhow::Result<ExperimentConfig> {
     if let Some(v) = args.get("seed") {
         cfg.train.seed = v.parse()?;
     }
+    if let Some(v) = args.get("threads") {
+        cfg.threads = v.parse()?;
+    }
     if let Some(v) = args.get("target") {
         cfg.train.target_accuracy = Some(v.parse()?);
     }
@@ -82,7 +86,7 @@ fn build_config(args: &cli::Args) -> anyhow::Result<ExperimentConfig> {
     for kv in args.get_all("set") {
         let (k, v) = kv
             .split_once('=')
-            .ok_or_else(|| anyhow::anyhow!("--set expects key=value, got '{kv}'"))?;
+            .ok_or_else(|| Error::Config(format!("--set expects key=value, got '{kv}'")))?;
         // Numbers and strings both arrive as text; try number first.
         let val = match v.parse::<f64>() {
             Ok(n) => JsonValue::Number(n),
@@ -100,20 +104,24 @@ fn build_config(args: &cli::Args) -> anyhow::Result<ExperimentConfig> {
     Ok(cfg)
 }
 
-fn cmd_train(args: &cli::Args) -> anyhow::Result<()> {
+fn cmd_train(args: &cli::Args) -> Result<()> {
     let cfg = build_config(args)?;
     println!(
-        "supersfl train: method={} clients={} classes={} rounds={} seed={}",
+        "supersfl train: method={} clients={} classes={} rounds={} seed={} threads={}",
         cfg.method.as_str(),
         cfg.fleet.clients,
         cfg.data.classes,
         cfg.train.rounds,
-        cfg.train.seed
+        cfg.train.seed,
+        if cfg.threads == 0 {
+            "auto".to_string()
+        } else {
+            cfg.threads.to_string()
+        }
     );
     let rt = Runtime::load(&cfg.artifacts_dir)?;
-    let t0 = std::time::Instant::now();
     let res = orchestrator::run_experiment(&rt, &cfg)?;
-    let wall = t0.elapsed().as_secs_f64();
+    let wall = res.metrics.host_wall_s;
 
     let mut table = Table::new(&["round", "acc", "loss(c)", "loss(s)", "comm MB", "sim t(s)", "fallback"]);
     for r in &res.metrics.rounds {
@@ -160,7 +168,7 @@ fn cmd_train(args: &cli::Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_allocate(args: &cli::Args) -> anyhow::Result<()> {
+fn cmd_allocate(args: &cli::Args) -> Result<()> {
     let cfg = build_config(args)?;
     let rt = Runtime::load(&cfg.artifacts_dir)?;
     let mut rng = Pcg32::new(cfg.train.seed, 0xD15EA5E).fork(3);
@@ -185,7 +193,7 @@ fn cmd_allocate(args: &cli::Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_inspect(args: &cli::Args) -> anyhow::Result<()> {
+fn cmd_inspect(args: &cli::Args) -> Result<()> {
     let dir = args
         .get("artifacts")
         .map(PathBuf::from)

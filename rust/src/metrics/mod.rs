@@ -48,6 +48,10 @@ pub struct RunMetrics {
     pub avg_power_w: f64,
     pub power_per_acc: f64,
     pub co2_g: f64,
+    /// Host wall-clock seconds the run took (perf reporting for the
+    /// parallel round engine; NOT simulated time). Filled in by the
+    /// orchestrator after construction.
+    pub host_wall_s: f64,
 }
 
 impl RunMetrics {
@@ -83,6 +87,7 @@ impl RunMetrics {
                 f64::INFINITY
             },
             co2_g,
+            host_wall_s: 0.0,
             rounds,
         }
     }
@@ -143,6 +148,7 @@ impl RunMetrics {
         o.set("avg_power_w", n(self.avg_power_w));
         o.set("power_per_acc", n(self.power_per_acc));
         o.set("co2_g", n(self.co2_g));
+        o.set("host_wall_s", n(self.host_wall_s));
         o
     }
 

@@ -55,11 +55,135 @@ impl Traffic {
     }
 }
 
+/// A client's effective link parameters (bandwidths already capped by the
+/// server NIC). Shared between [`NetworkSim`] and the per-client
+/// [`NetLane`] forks so both compute identical transfer times.
+#[derive(Clone, Copy, Debug)]
+pub struct LinkParams {
+    pub latency_s: f64,
+    pub up_bps: f64,
+    pub down_bps: f64,
+}
+
+impl LinkParams {
+    fn of(profile: &DeviceProfile, cfg: &NetConfig) -> LinkParams {
+        let cap = cfg.server_bandwidth_mbps * 1e6 / 8.0;
+        LinkParams {
+            latency_s: profile.latency_s,
+            up_bps: profile.uplink_bps.min(cap),
+            down_bps: profile.downlink_bps.min(cap),
+        }
+    }
+
+    /// Pure transfer-time model (no failure roll): one-way up.
+    pub fn up_time(&self, bytes: u64) -> f64 {
+        self.latency_s / 2.0 + bytes as f64 / self.up_bps
+    }
+
+    /// Pure transfer-time model: one-way down.
+    pub fn down_time(&self, bytes: u64) -> f64 {
+        self.latency_s / 2.0 + bytes as f64 / self.down_bps
+    }
+}
+
+/// Exchange logic shared by [`NetworkSim`] and [`NetLane`]. Uplink bytes
+/// are always charged (the client transmitted them before it could observe
+/// the failure); downlink bytes only on success.
+#[allow(clippy::too_many_arguments)]
+fn exchange_impl(
+    cfg: &NetConfig,
+    link: &LinkParams,
+    rng: &mut Pcg32,
+    traffic: &mut [&mut Traffic],
+    server_up: bool,
+    up_bytes: u64,
+    down_bytes: u64,
+    server_time_s: f64,
+) -> Exchange {
+    for t in traffic.iter_mut() {
+        t.up_bytes += up_bytes;
+    }
+    let dropped = rng.bernoulli(cfg.drop_prob);
+    if !server_up || dropped {
+        return Exchange::TimedOut {
+            time_s: cfg.timeout_s,
+        };
+    }
+    let t = link.up_time(up_bytes) + server_time_s + link.down_time(down_bytes);
+    if t > cfg.timeout_s {
+        // Link too slow for the timeout window: same observable behaviour
+        // as an outage (paper §II-C fallback trigger).
+        return Exchange::TimedOut {
+            time_s: cfg.timeout_s,
+        };
+    }
+    for tr in traffic.iter_mut() {
+        tr.down_bytes += down_bytes;
+    }
+    Exchange::Ok { time_s: t }
+}
+
+/// A single client's private view of the network for one round — the
+/// parallel round engine's fork of [`NetworkSim`].
+///
+/// Lanes own an independent PCG stream derived from `(run seed, round,
+/// client id)`, so the drop/timeout draws a client observes do not depend
+/// on how many worker threads the engine uses or on the order in which
+/// other clients execute. Byte accounting happens on the lane-local
+/// [`Traffic`] counter and is folded back into the simulator at the
+/// aggregation barrier via [`NetworkSim::absorb_lane`] in client-id order.
+#[derive(Clone, Debug)]
+pub struct NetLane {
+    cfg: NetConfig,
+    link: LinkParams,
+    server_up: bool,
+    rng: Pcg32,
+    pub traffic: Traffic,
+}
+
+impl NetLane {
+    pub fn server_available(&self) -> bool {
+        self.server_up
+    }
+
+    pub fn up_time(&self, bytes: u64) -> f64 {
+        self.link.up_time(bytes)
+    }
+
+    pub fn down_time(&self, bytes: u64) -> f64 {
+        self.link.down_time(bytes)
+    }
+
+    /// One request/response exchange with the server (paper Alg. 2
+    /// Phase 2), drawn from this lane's private stream.
+    ///
+    /// This is the only traffic source on a lane: the barrier-phase bulk
+    /// weight syncs (aggregation upload / broadcast download) happen after
+    /// the fan-out, on the simulator itself via [`NetworkSim::bulk_up`] /
+    /// [`NetworkSim::bulk_down`] — keeping exactly one accounting path for
+    /// each phase.
+    pub fn exchange(&mut self, up_bytes: u64, down_bytes: u64, server_time_s: f64) -> Exchange {
+        exchange_impl(
+            &self.cfg,
+            &self.link,
+            &mut self.rng,
+            &mut [&mut self.traffic],
+            self.server_up,
+            up_bytes,
+            down_bytes,
+            server_time_s,
+        )
+    }
+}
+
 /// The network simulator. One instance per experiment run.
 pub struct NetworkSim {
     cfg: NetConfig,
     profiles: Vec<DeviceProfile>,
+    links: Vec<LinkParams>,
     rng: Pcg32,
+    /// Base seed for the per-round per-client lane streams.
+    lane_seed: u64,
     /// Whether the server answers during the current round (Table III's
     /// "server gradient availability" is a per-round schedule).
     server_up_this_round: bool,
@@ -69,11 +193,15 @@ pub struct NetworkSim {
 }
 
 impl NetworkSim {
-    pub fn new(cfg: NetConfig, profiles: Vec<DeviceProfile>, rng: Pcg32) -> Self {
+    pub fn new(cfg: NetConfig, profiles: Vec<DeviceProfile>, mut rng: Pcg32) -> Self {
+        let links = profiles.iter().map(|p| LinkParams::of(p, &cfg)).collect();
+        let lane_seed = rng.next_u64();
         NetworkSim {
             cfg,
             profiles,
+            links,
             rng,
+            lane_seed,
             server_up_this_round: true,
             traffic: Traffic::default(),
             round_traffic: Traffic::default(),
@@ -95,35 +223,46 @@ impl NetworkSim {
         self.server_up_this_round
     }
 
-    fn up_bw(&self, client: usize) -> f64 {
-        self.profiles[client]
-            .uplink_bps
-            .min(self.cfg.server_bandwidth_mbps * 1e6 / 8.0)
+    /// Fork a per-client lane for the current round. The lane's stream is
+    /// a pure function of `(run seed, round, client)` — independent of the
+    /// order lanes are created or executed in, which is what makes the
+    /// parallel round engine bit-identical across thread counts.
+    pub fn lane(&self, client: usize, round: u64) -> NetLane {
+        let round_salt = round.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        NetLane {
+            cfg: self.cfg.clone(),
+            link: self.links[client],
+            server_up: self.server_up_this_round,
+            rng: Pcg32::new(self.lane_seed ^ round_salt, client as u64 + 1),
+            traffic: Traffic::default(),
+        }
     }
 
-    fn down_bw(&self, client: usize) -> f64 {
-        self.profiles[client]
-            .downlink_bps
-            .min(self.cfg.server_bandwidth_mbps * 1e6 / 8.0)
+    /// Fold a finished lane's byte counters back into the global and
+    /// per-round accounting (called at the barrier, in client-id order).
+    pub fn absorb_lane(&mut self, lane: &NetLane) {
+        self.traffic.up_bytes += lane.traffic.up_bytes;
+        self.traffic.down_bytes += lane.traffic.down_bytes;
+        self.round_traffic.up_bytes += lane.traffic.up_bytes;
+        self.round_traffic.down_bytes += lane.traffic.down_bytes;
     }
 
     /// Pure transfer-time model (no failure roll): one-way up.
     pub fn up_time(&self, client: usize, bytes: u64) -> f64 {
-        self.profiles[client].latency_s / 2.0 + bytes as f64 / self.up_bw(client)
+        self.links[client].up_time(bytes)
     }
 
     /// Pure transfer-time model: one-way down.
     pub fn down_time(&self, client: usize, bytes: u64) -> f64 {
-        self.profiles[client].latency_s / 2.0 + bytes as f64 / self.down_bw(client)
+        self.links[client].down_time(bytes)
     }
 
     /// One request/response exchange with the server (smashed data up,
     /// gradients down; paper Alg. 2 Phase 2). `server_time_s` is the
     /// simulated server-side compute time between receive and reply.
     ///
-    /// Accounting: uplink bytes are always charged (the client transmitted
-    /// them before it could observe the failure); downlink bytes only on
-    /// success.
+    /// Serial-path variant drawing from the simulator's own stream; the
+    /// round loops use [`NetworkSim::lane`] forks instead.
     pub fn exchange(
         &mut self,
         client: usize,
@@ -131,27 +270,16 @@ impl NetworkSim {
         down_bytes: u64,
         server_time_s: f64,
     ) -> Exchange {
-        self.traffic.up_bytes += up_bytes;
-        self.round_traffic.up_bytes += up_bytes;
-
-        let dropped = self.rng.bernoulli(self.cfg.drop_prob);
-        if !self.server_up_this_round || dropped {
-            return Exchange::TimedOut {
-                time_s: self.cfg.timeout_s,
-            };
-        }
-
-        let t = self.up_time(client, up_bytes) + server_time_s + self.down_time(client, down_bytes);
-        if t > self.cfg.timeout_s {
-            // Link too slow for the timeout window: same observable
-            // behaviour as an outage (paper §II-C fallback trigger).
-            return Exchange::TimedOut {
-                time_s: self.cfg.timeout_s,
-            };
-        }
-        self.traffic.down_bytes += down_bytes;
-        self.round_traffic.down_bytes += down_bytes;
-        Exchange::Ok { time_s: t }
+        exchange_impl(
+            &self.cfg,
+            &self.links[client],
+            &mut self.rng,
+            &mut [&mut self.traffic, &mut self.round_traffic],
+            self.server_up_this_round,
+            up_bytes,
+            down_bytes,
+            server_time_s,
+        )
     }
 
     /// A bulk weight sync (aggregation upload / broadcast download).
@@ -265,6 +393,58 @@ mod tests {
             .filter(|_| !s.exchange(0, 10, 10, 0.0).is_ok())
             .count();
         assert!((40..160).contains(&fails), "fails {fails}");
+    }
+
+    #[test]
+    fn lanes_are_pure_functions_of_round_and_client() {
+        let mut s = sim(1.0, 0.3);
+        s.begin_round();
+        // Same (round, client) → identical draw sequence, regardless of
+        // how many other lanes were created in between.
+        let mut a = s.lane(2, 7);
+        let _unrelated = (s.lane(0, 7), s.lane(1, 7), s.lane(3, 9));
+        let mut b = s.lane(2, 7);
+        for _ in 0..50 {
+            assert_eq!(
+                a.exchange(10, 10, 0.0).is_ok(),
+                b.exchange(10, 10, 0.0).is_ok()
+            );
+        }
+        // Different round or client → independent streams.
+        let mut c = s.lane(2, 8);
+        let flips = (0..64)
+            .filter(|_| a.exchange(1, 1, 0.0).is_ok() != c.exchange(1, 1, 0.0).is_ok())
+            .count();
+        assert!(flips > 0, "round salt must decorrelate lanes");
+    }
+
+    #[test]
+    fn lane_respects_round_availability_and_accounts_bytes() {
+        let mut s = sim(0.0, 0.0);
+        s.begin_round();
+        let mut lane = s.lane(1, 1);
+        assert!(!lane.server_available());
+        let e = lane.exchange(500, 700, 0.001);
+        assert!(!e.is_ok());
+        // Timeout charges uplink only (client transmitted before it could
+        // observe the failure).
+        assert_eq!(lane.traffic.up_bytes, 500);
+        assert_eq!(lane.traffic.down_bytes, 0);
+
+        // Absorbing the lane folds its bytes into both counters.
+        s.absorb_lane(&lane);
+        assert_eq!(s.traffic.up_bytes, 500);
+        assert_eq!(s.round_traffic.up_bytes, 500);
+        assert_eq!(s.round_traffic.down_bytes, 0);
+    }
+
+    #[test]
+    fn lane_times_match_simulator_times() {
+        let mut s = sim(1.0, 0.0);
+        s.begin_round();
+        let lane = s.lane(0, 1);
+        assert_eq!(lane.up_time(4096), s.up_time(0, 4096));
+        assert_eq!(lane.down_time(4096), s.down_time(0, 4096));
     }
 
     #[test]

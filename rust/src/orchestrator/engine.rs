@@ -1,0 +1,317 @@
+//! The parallel round-execution engine.
+//!
+//! # Why
+//!
+//! Simulated clients are independent between the round start and the
+//! aggregation barrier, yet the seed implementation walked them strictly
+//! sequentially, so host time grew superlinearly with fleet size. This
+//! module fans each client's per-round branch (Phase 1 → exchange →
+//! Phase 2/3 or fallback) out over OS worker threads (`std::thread::scope`
+//! — the offline crate set has no rayon) while keeping results
+//! **bit-identical regardless of thread count**.
+//!
+//! # Determinism contract
+//!
+//! Every source of nondeterminism is removed by construction, not by
+//! locking:
+//!
+//! 1. **Exclusive mutable state per lane.** A lane owns `&mut ClientState`
+//!    (its shard RNG and loss accumulators live there), a [`NetLane`]
+//!    fork of the network simulator, lane-local copies of the server-side
+//!    state it trains (suffix + classifier snapshots taken at round
+//!    start), and a [`RoundLedger`] for everything it would previously
+//!    have written into shared accounting (`EnergyMeter`, `NetworkSim`
+//!    byte counters, busy/branch arrays, step counts).
+//! 2. **Per-client PCG streams.** The only RNG a lane touches is either
+//!    already per-client (the shard loader) or derived as a pure function
+//!    of `(run seed, round, client id)` ([`NetworkSim::lane`]); no draw
+//!    order depends on scheduling.
+//! 3. **Deterministic merge order.** At the barrier, ledgers are absorbed
+//!    in ascending client-id order: energy into per-device slots, server
+//!    busy-seconds and step counts by id-ordered summation, traffic into
+//!    the byte counters, and lane server deltas onto the shared
+//!    super-network (`θ[ℓ] += θ_lane[ℓ] − θ_snapshot[ℓ]`, clients in id
+//!    order). Floating-point reduction order is therefore a constant of
+//!    the run configuration.
+//! 4. **Static partitioning.** [`run_lanes`] splits the lane array into
+//!    contiguous chunks, one per worker. Because lanes never communicate,
+//!    the partition shape cannot affect any lane's result — only the merge
+//!    (step 3) touches shared state, and it runs on the caller's thread.
+//!
+//! Consequently `threads = 1` and `threads = N` produce identical metrics
+//! bit for bit (`orchestrator::tests` asserts this end to end against the
+//! artifacts; the unit tests below assert it for the engine itself).
+//!
+//! # Server-state semantics under parallelism
+//!
+//! The sequential loop let client *i+1* observe the server-suffix updates
+//! made while serving client *i* within the same round. That implicit
+//! serialization is exactly what prevents parallelism, so the engine
+//! adopts the synchronous-parallel-server semantic instead: every client
+//! trains against the round-start snapshot of the shared suffix, and the
+//! per-lane deltas are summed into the super-network at the barrier
+//! (before Eq. 6–8 aggregation). This matches the paper's synchronized
+//! aggregation barrier; `deterministic_across_runs` still holds because
+//! the semantic is a function of the config alone. The SFL baseline keeps
+//! true per-client server copies (SplitFed semantics — already lane
+//! friendly); DFL parallelizes across server replicas, each worker
+//! walking its replica's clients in id order so the per-replica update
+//! sequence is unchanged.
+
+use crate::energy::{EnergyMeter, PowerState};
+use crate::network::DeviceProfile;
+use crate::Result;
+
+/// Per-client accounting for one round, merged deterministically at the
+/// aggregation barrier. One ledger per lane; no shared state is touched
+/// while workers run.
+#[derive(Clone, Debug, Default)]
+pub struct RoundLedger {
+    pub client: usize,
+    /// Critical-path time of this client's branch (gates the round via the
+    /// straggler max).
+    pub branch_s: f64,
+    /// Device-active time (compute + transmit) — the complement of idle.
+    pub busy_s: f64,
+    /// Pre-integrated device energy for the round, J.
+    pub energy_j: f64,
+    /// Server compute performed on behalf of this client, s.
+    pub server_busy_s: f64,
+    pub fallback_steps: usize,
+    pub server_steps: usize,
+}
+
+impl RoundLedger {
+    pub fn new(client: usize) -> RoundLedger {
+        RoundLedger {
+            client,
+            ..RoundLedger::default()
+        }
+    }
+
+    /// Charge device energy without touching time accounting.
+    pub fn charge(&mut self, profile: &DeviceProfile, state: PowerState, dt: f64) {
+        self.energy_j += EnergyMeter::device_power_w(profile, state) * dt.max(0.0);
+    }
+
+    /// On-critical-path compute: charges Compute energy and advances both
+    /// busy and branch time.
+    pub fn work(&mut self, profile: &DeviceProfile, dt: f64) {
+        self.charge(profile, PowerState::Compute, dt);
+        self.busy_s += dt;
+        self.branch_s += dt;
+    }
+
+    /// Account one client↔server exchange attempt: the whole round trip
+    /// sits on the branch; the client radio is active for the round trip
+    /// minus the server-compute window.
+    pub fn exchange(&mut self, profile: &DeviceProfile, total_s: f64, server_s: f64) {
+        self.branch_s += total_s;
+        let tx = (total_s - server_s).max(0.0);
+        self.charge(profile, PowerState::Transmit, tx);
+        self.busy_s += tx;
+    }
+
+    /// Record a successful server-supervised step.
+    pub fn server_step(&mut self, server_s: f64) {
+        self.server_busy_s += server_s;
+        self.server_steps += 1;
+    }
+}
+
+/// Resolve a configured thread count: `0` means "all available cores".
+pub fn resolve_threads(requested: usize) -> usize {
+    if requested > 0 {
+        requested
+    } else {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    }
+}
+
+/// Run `body` over every lane, fanned out across `threads` workers.
+///
+/// Lanes are split into balanced contiguous chunks — `n % threads`
+/// workers take `⌈n/threads⌉` lanes, the rest `⌊n/threads⌋` — so every
+/// requested worker is used (plain `chunks_mut(⌈n/threads⌉)` would leave
+/// workers idle at e.g. 17 lanes / 16 threads). Each worker walks its
+/// chunk in order. Because lanes are fully independent (see module docs),
+/// the partition shape cannot influence results — `threads = 1` executes
+/// the exact same per-lane instruction streams inline. The first error
+/// from any worker is propagated; worker panics resume on the caller.
+pub fn run_lanes<L, F>(threads: usize, lanes: &mut [L], body: F) -> Result<()>
+where
+    L: Send,
+    F: Fn(&mut L) -> Result<()> + Sync,
+{
+    let n = lanes.len();
+    if n == 0 {
+        return Ok(());
+    }
+    let threads = resolve_threads(threads).min(n);
+    if threads <= 1 {
+        for lane in lanes.iter_mut() {
+            body(lane)?;
+        }
+        return Ok(());
+    }
+
+    let (quot, rem) = (n / threads, n % threads);
+    std::thread::scope(|scope| {
+        let body = &body;
+        let mut rest: &mut [L] = lanes;
+        let mut handles = Vec::with_capacity(threads);
+        for w in 0..threads {
+            let take = quot + usize::from(w < rem);
+            let (slice, tail) = rest.split_at_mut(take);
+            rest = tail;
+            handles.push(scope.spawn(move || -> Result<()> {
+                for lane in slice.iter_mut() {
+                    body(lane)?;
+                }
+                Ok(())
+            }));
+        }
+        let mut first_err = None;
+        for handle in handles {
+            match handle.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+                Err(payload) => std::panic::resume_unwind(payload),
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+    use crate::Error;
+
+    /// A lane that exercises the same ingredients as the real ones:
+    /// a private RNG stream and float accumulation.
+    #[derive(Clone)]
+    struct TestLane {
+        id: usize,
+        rng: Pcg32,
+        sum: f64,
+        ledger: RoundLedger,
+    }
+
+    fn lanes(n: usize) -> Vec<TestLane> {
+        (0..n)
+            .map(|id| TestLane {
+                id,
+                rng: Pcg32::new(99, id as u64 + 1),
+                sum: 0.0,
+                ledger: RoundLedger::new(id),
+            })
+            .collect()
+    }
+
+    fn body(l: &mut TestLane) -> Result<()> {
+        for _ in 0..500 {
+            l.sum += l.rng.uniform();
+            l.ledger.branch_s += l.rng.uniform() * 1e-3;
+        }
+        l.ledger.server_steps = l.id;
+        Ok(())
+    }
+
+    #[test]
+    fn thread_count_invariance_is_bit_exact() {
+        let baseline = {
+            let mut ls = lanes(13);
+            run_lanes(1, &mut ls, body).unwrap();
+            ls
+        };
+        for threads in [2usize, 3, 4, 8, 32] {
+            let mut ls = lanes(13);
+            run_lanes(threads, &mut ls, body).unwrap();
+            for (a, b) in baseline.iter().zip(ls.iter()) {
+                assert_eq!(a.sum.to_bits(), b.sum.to_bits(), "threads={threads}");
+                assert_eq!(
+                    a.ledger.branch_s.to_bits(),
+                    b.ledger.branch_s.to_bits(),
+                    "threads={threads}"
+                );
+                assert_eq!(a.ledger.server_steps, b.ledger.server_steps);
+            }
+        }
+    }
+
+    #[test]
+    fn every_lane_runs_exactly_once() {
+        let mut ls = lanes(7);
+        run_lanes(3, &mut ls, |l| {
+            l.ledger.fallback_steps += 1;
+            Ok(())
+        })
+        .unwrap();
+        assert!(ls.iter().all(|l| l.ledger.fallback_steps == 1));
+    }
+
+    #[test]
+    fn errors_propagate_from_workers() {
+        let mut ls = lanes(6);
+        let err = run_lanes(4, &mut ls, |l| {
+            if l.id == 4 {
+                Err(Error::Config("lane 4 boom".into()))
+            } else {
+                Ok(())
+            }
+        })
+        .unwrap_err();
+        assert!(err.to_string().contains("lane 4 boom"));
+    }
+
+    #[test]
+    fn empty_and_oversubscribed_inputs_are_fine() {
+        let mut none: Vec<TestLane> = Vec::new();
+        run_lanes(8, &mut none, body).unwrap();
+        let mut two = lanes(2);
+        run_lanes(64, &mut two, body).unwrap(); // threads clamp to lane count
+    }
+
+    #[test]
+    fn resolve_threads_zero_means_auto() {
+        assert!(resolve_threads(0) >= 1);
+        assert_eq!(resolve_threads(5), 5);
+    }
+
+    #[test]
+    fn ledger_accounting_matches_meter_model() {
+        use crate::config::{EnergyConfig, FleetConfig};
+        use crate::network::sample_fleet;
+        let fleet = sample_fleet(
+            &FleetConfig {
+                clients: 1,
+                ..FleetConfig::default()
+            },
+            &EnergyConfig::default(),
+            &mut Pcg32::seeded(1),
+        );
+        let p = &fleet[0];
+        let mut l = RoundLedger::new(0);
+        l.work(p, 2.0);
+        l.exchange(p, 1.0, 0.25);
+        l.server_step(0.25);
+        assert!((l.branch_s - 3.0).abs() < 1e-12);
+        assert!((l.busy_s - 2.75).abs() < 1e-12);
+        let expect = EnergyMeter::device_power_w(p, PowerState::Compute) * 2.0
+            + EnergyMeter::device_power_w(p, PowerState::Transmit) * 0.75;
+        assert!((l.energy_j - expect).abs() < 1e-9);
+        assert_eq!(l.server_steps, 1);
+        assert!((l.server_busy_s - 0.25).abs() < 1e-12);
+    }
+}

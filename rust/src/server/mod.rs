@@ -9,6 +9,7 @@
 //! what keeps all subnetworks aggregation-compatible.
 
 use crate::data::Dataset;
+use crate::fedserver::{self, ClientUpdate};
 use crate::runtime::{Runtime, ServerStepOut};
 use crate::util::math;
 use crate::{Error, Result};
@@ -55,6 +56,28 @@ impl ServerState {
     /// The global prefix broadcast to a depth-`d` client after aggregation.
     pub fn prefix(&self, depth: usize) -> &[f32] {
         &self.enc[..self.prefix_len(depth)]
+    }
+
+    /// Collaborative aggregation (Eq. 6–8) into the super-network.
+    ///
+    /// Lives on `ServerState` so the encoder and the layer table — two
+    /// fields of the same struct — can be borrowed disjointly; callers
+    /// previously had to clone the layer table (`layer_sizes().to_vec()`)
+    /// to satisfy the borrow checker. Returns per-layer contributor counts.
+    pub fn aggregate_updates(
+        &mut self,
+        updates: &[ClientUpdate<'_>],
+        lambda: f64,
+        eps: f64,
+    ) -> Vec<usize> {
+        fedserver::aggregate(&mut self.enc, &self.layer_sizes, updates, lambda, eps)
+    }
+
+    /// Layer-aligned FedAvg with explicit weights (baseline aggregation),
+    /// same borrow-friendly shape as [`ServerState::aggregate_updates`].
+    /// `items` = `(depth, prefix_params, weight)`.
+    pub fn fedavg_prefixes(&mut self, items: &[(usize, &[f32], f64)], lambda: f64) -> Vec<usize> {
+        fedserver::aggregate_weighted(&mut self.enc, &self.layer_sizes, items, lambda)
     }
 
     /// TPGF Phase 2, server side (Alg. 2 lines 9–12): run the deep
@@ -114,11 +137,7 @@ mod tests {
 
     fn runtime() -> Option<Runtime> {
         let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-        if !dir.join("manifest.json").exists() {
-            eprintln!("skipping: artifacts not built");
-            return None;
-        }
-        Some(Runtime::load(&dir).unwrap())
+        Runtime::load_if_available(&dir)
     }
 
     #[test]

@@ -10,11 +10,7 @@ use supersfl::runtime::Runtime;
 
 fn runtime() -> Option<Runtime> {
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if !dir.join("manifest.json").exists() {
-        eprintln!("skipping: artifacts not built (run `make artifacts`)");
-        return None;
-    }
-    Some(Runtime::load(&dir).unwrap())
+    Runtime::load_if_available(&dir)
 }
 
 fn tiny(method: Method) -> ExperimentConfig {

@@ -19,11 +19,7 @@ use supersfl::util::rng::Pcg32;
 
 fn runtime() -> Option<Runtime> {
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if !dir.join("manifest.json").exists() {
-        eprintln!("skipping: artifacts not built (run `make artifacts`)");
-        return None;
-    }
-    Some(Runtime::load(&dir).unwrap())
+    Runtime::load_if_available(&dir)
 }
 
 fn small_data(rt: &Runtime, per_class: usize, seed: u64) -> Dataset {
