@@ -34,7 +34,7 @@ fn main() -> supersfl::Result<()> {
     cfg.net.server_availability = 0.95; // realistic intermittent outages
 
     println!("== SuperSFL end-to-end driver ==");
-    let rt = Runtime::load(&cfg.artifacts_dir)?;
+    let rt = Runtime::load_if_available(&cfg.artifacts_dir);
     let m = rt.model();
     println!(
         "model: {} encoder params over {} layers | {} clients | {} rounds | Dir({}) non-IID",

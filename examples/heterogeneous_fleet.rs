@@ -30,7 +30,7 @@ fn base_cfg(method: Method) -> ExperimentConfig {
 }
 
 fn main() -> supersfl::Result<()> {
-    let rt = Runtime::load(&ExperimentConfig::default().artifacts_dir)?;
+    let rt = Runtime::load_if_available(&ExperimentConfig::default().artifacts_dir);
 
     println!("== fleet & allocation (Eq. 1) ==");
     let probe = run_experiment(&rt, &base_cfg(Method::SuperSfl).with_rounds(1))?;

@@ -21,10 +21,10 @@ fn main() -> supersfl::Result<()> {
     cfg.train.local_steps = 2;
     cfg.train.eval_samples = 300;
 
-    println!("loading artifacts from {} ...", cfg.artifacts_dir.display());
-    let rt = Runtime::load(&cfg.artifacts_dir)?;
+    let rt = Runtime::load_if_available(&cfg.artifacts_dir);
     println!(
-        "model: {} params, {} layers, {} tokens",
+        "backend: {} | model: {} params, {} layers, {} tokens",
+        rt.backend_name(),
         rt.model().enc_full_size,
         rt.model().depth,
         rt.model().tokens

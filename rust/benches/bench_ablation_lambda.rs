@@ -25,7 +25,7 @@ fn cfg(lambda: f64, seed: u64) -> ExperimentConfig {
 }
 
 fn main() -> supersfl::Result<()> {
-    let rt = Runtime::load(&ExperimentConfig::default().artifacts_dir)?;
+    let rt = Runtime::load_if_available(&ExperimentConfig::default().artifacts_dir);
     println!("== λ ablation (Eq. 8 consistency term) at 50% availability ==\n");
 
     let mut table = Table::new(&["lambda", "best acc %", "final acc %"]);

@@ -1,9 +1,9 @@
 //! Perf microbench: layer-aligned aggregation throughput (Eq. 6–8).
 //!
 //! The Fed server aggregates every client prefix each round; this measures
-//! the Rust hot loop at fleet sizes 10/50/100/200 over the real model
-//! geometry (or a synthetic 8-layer geometry when artifacts are absent, so
-//! the bench runs anywhere). Reports the fused in-place pass that ships in
+//! the Rust hot loop at fleet sizes 10/50/100/200 over the resolved
+//! backend's real model geometry (native fallback makes this run
+//! anywhere). Reports the fused in-place pass that ships in
 //! `fedserver::aggregate_weighted` against the scratch-buffer reference it
 //! replaced — the before/after of the zero-copy aggregation work. Feeds
 //! EXPERIMENTS.md §Perf.
@@ -53,15 +53,12 @@ fn aggregate_scratch_reference(
 }
 
 fn main() -> supersfl::Result<()> {
-    // Real model geometry when available, synthetic otherwise.
-    let sizes: Vec<usize> = match Runtime::load_if_available(&ExperimentConfig::default().artifacts_dir)
-    {
-        Some(rt) => rt.model().enc_layer_sizes.clone(),
-        None => {
-            eprintln!("using synthetic 8-layer geometry");
-            vec![18_432, 36_864, 36_864, 36_864, 36_864, 36_864, 36_864, 36_864]
-        }
-    };
+    // The resolved backend's real model geometry.
+    let sizes: Vec<usize> =
+        Runtime::load_if_available(&ExperimentConfig::default().artifacts_dir)
+            .model()
+            .enc_layer_sizes
+            .clone();
     let total: usize = sizes.iter().sum();
     let depth = sizes.len();
     let mut rng = Pcg32::seeded(1);

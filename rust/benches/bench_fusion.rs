@@ -13,7 +13,7 @@ use supersfl::util::math;
 use supersfl::util::rng::Pcg32;
 
 fn main() -> supersfl::Result<()> {
-    let rt = Runtime::load(&ExperimentConfig::default().artifacts_dir)?;
+    let rt = Runtime::load_if_available(&ExperimentConfig::default().artifacts_dir);
     let mut rng = Pcg32::seeded(2);
 
     println!("== bench_fusion: Rust loop vs Pallas artifact ==");

@@ -20,9 +20,9 @@ use supersfl::runtime::Runtime;
 
 fn per_op_section(rt: &Runtime) -> supersfl::Result<()> {
     let m = rt.model().clone();
-    let enc = rt.manifest.load_init("init_enc_c10")?;
-    let clf_c = rt.manifest.load_init("init_clf_client_c10")?;
-    let clf_s = rt.manifest.load_init("init_clf_s_c10")?;
+    let enc = rt.load_init("init_enc_c10")?;
+    let clf_c = rt.load_init("init_clf_client_c10")?;
+    let clf_s = rt.load_init("init_clf_s_c10")?;
     let x = vec![0.1f32; m.batch * m.image_elems()];
     let xe = vec![0.1f32; m.eval_batch * m.image_elems()];
     let y: Vec<i32> = (0..m.batch as i32).map(|i| i % 10).collect();
@@ -138,9 +138,8 @@ fn engine_section(rt: &Runtime) -> supersfl::Result<()> {
 }
 
 fn main() -> supersfl::Result<()> {
-    let Some(rt) = Runtime::load_if_available(&ExperimentConfig::default().artifacts_dir) else {
-        return Ok(());
-    };
+    let rt = Runtime::load_if_available(&ExperimentConfig::default().artifacts_dir);
+    println!("backend: {}", rt.backend_name());
 
     per_op_section(&rt)?;
 

@@ -12,7 +12,7 @@ fn bar(x: f64, unit: f64) -> String {
 }
 
 fn main() -> supersfl::Result<()> {
-    let rt = Runtime::load(&ExperimentConfig::default().artifacts_dir)?;
+    let rt = Runtime::load_if_available(&ExperimentConfig::default().artifacts_dir);
     let scale = Scale::from_env();
     println!("== Fig. 5: consumption-per-accuracy and carbon footprint ==\n");
 

@@ -23,7 +23,7 @@ fn cfg(mode: TpgfMode) -> ExperimentConfig {
 }
 
 fn main() -> supersfl::Result<()> {
-    let rt = Runtime::load(&ExperimentConfig::default().artifacts_dir)?;
+    let rt = Runtime::load_if_available(&ExperimentConfig::default().artifacts_dir);
     println!("== Fig. 6: TPGF fusion-rule ablation ==\n");
 
     let mut table = Table::new(&["fusion rule", "best acc %", "final acc %", "paper acc %"]);

@@ -15,7 +15,7 @@ use supersfl::metrics::Table;
 use supersfl::runtime::Runtime;
 
 fn main() -> supersfl::Result<()> {
-    let rt = Runtime::load(&ExperimentConfig::default().artifacts_dir)?;
+    let rt = Runtime::load_if_available(&ExperimentConfig::default().artifacts_dir);
     let scale = Scale::from_env();
     println!(
         "== Table I: rounds / comm / time to target (scaled fleet: {}→50, {}→100) ==\n",

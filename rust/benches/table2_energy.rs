@@ -12,7 +12,7 @@ use supersfl::orchestrator::run_experiment;
 use supersfl::runtime::Runtime;
 
 fn main() -> supersfl::Result<()> {
-    let rt = Runtime::load(&ExperimentConfig::default().artifacts_dir)?;
+    let rt = Runtime::load_if_available(&ExperimentConfig::default().artifacts_dir);
     let scale = Scale::from_env();
     println!("== Table II: accuracy / power / W-per-%, CO2 ==\n");
 

@@ -7,18 +7,19 @@ use supersfl::config::ExperimentConfig;
 use supersfl::metrics::Table;
 use supersfl::orchestrator::run_experiment;
 use supersfl::runtime::Runtime;
-use supersfl::bench_util::scenarios::paper_table3;
+use supersfl::bench_util::scenarios::{paper_table3, smoke};
 
 fn cfg(avail: f64, seed: u64) -> ExperimentConfig {
+    let rounds = if smoke() { 3 } else { 10 };
     let mut cfg = ExperimentConfig::default()
         .with_name(&format!("t3_a{:.0}", avail * 100.0))
         .with_clients(6)
-        .with_rounds(10)
+        .with_rounds(rounds)
         .with_seed(seed);
     cfg.net.server_availability = avail;
-    cfg.data.train_per_class = 100;
-    cfg.train.local_steps = 2;
-    cfg.train.eval_samples = 400;
+    cfg.data.train_per_class = if smoke() { 30 } else { 100 };
+    cfg.train.local_steps = if smoke() { 1 } else { 2 };
+    cfg.train.eval_samples = if smoke() { 100 } else { 400 };
     cfg
 }
 
@@ -34,10 +35,10 @@ fn mode_label(avail: f64) -> &'static str {
 }
 
 fn main() -> supersfl::Result<()> {
-    let rt = Runtime::load(&ExperimentConfig::default().artifacts_dir)?;
+    let rt = Runtime::load_if_available(&ExperimentConfig::default().artifacts_dir);
     println!("== Table III: accuracy vs server gradient availability ==\n");
 
-    let seeds = [42u64, 43];
+    let seeds: &[u64] = if smoke() { &[42] } else { &[42, 43] };
     let mut table = Table::new(&[
         "availability %", "training mode", "acc % (mean±std)", "fallback %", "paper acc %",
     ]);
@@ -47,7 +48,7 @@ fn main() -> supersfl::Result<()> {
         let avail = avail_pct / 100.0;
         let mut accs = Vec::new();
         let mut fb_frac = 0.0;
-        for &seed in &seeds {
+        for &seed in seeds {
             let m = run_experiment(&rt, &cfg(avail, seed))?.metrics;
             accs.push(m.best_accuracy * 100.0);
             let fb: usize = m.rounds.iter().map(|r| r.fallback_steps).sum();

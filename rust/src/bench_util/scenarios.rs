@@ -14,6 +14,13 @@ use crate::orchestrator::run_experiment;
 use crate::runtime::Runtime;
 use crate::Result;
 
+/// `SUPERSFL_SMOKE=1`: shrink bench grids to a CI-sized smoke run that
+/// still executes real training rounds (the CI leg asserts the benches no
+/// longer print "skipping").
+pub fn smoke() -> bool {
+    std::env::var("SUPERSFL_SMOKE").ok().as_deref() == Some("1")
+}
+
 /// Grid scale (env-controlled).
 #[derive(Clone, Copy, Debug)]
 pub struct Scale {
@@ -40,6 +47,18 @@ impl Scale {
                 local_steps: 3,
                 eval_samples: 1000,
             }
+        } else if smoke() {
+            // CI smoke tier: just prove the bench executes end to end on
+            // the resolved backend (a few real rounds, tiny fleet).
+            Scale {
+                clients_small: 4,
+                clients_large: 6,
+                rounds_cap: 4,
+                train_per_class_c10: 30,
+                train_per_class_c100: 5,
+                local_steps: 1,
+                eval_samples: 100,
+            }
         } else {
             Scale {
                 clients_small: 6,
@@ -52,6 +71,7 @@ impl Scale {
             }
         }
     }
+
 
     pub fn clients(&self, paper_clients: usize) -> usize {
         if paper_clients >= 100 {

@@ -75,9 +75,7 @@ impl ClientState {
         lr: f32,
     ) -> Result<ClientState> {
         let prefix_len: usize = rt.model().enc_layer_sizes[..depth].iter().sum();
-        let clf = rt
-            .manifest
-            .load_init(&format!("init_clf_client_c{classes}"))?;
+        let clf = rt.load_init(&format!("init_clf_client_c{classes}"))?;
         Ok(ClientState {
             id,
             depth,

@@ -41,6 +41,42 @@ impl Method {
     }
 }
 
+/// Which execution backend runs the model compute (DESIGN.md §3; see
+/// `crate::runtime` for the trait and the two implementations).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum BackendKind {
+    /// Prefer the PJRT artifact path when `artifacts/` is usable, fall
+    /// back to the native reference backend otherwise (the default — it
+    /// makes every test, bench and example runnable offline).
+    #[default]
+    Auto,
+    /// The pure-Rust deterministic reference backend (always available).
+    Native,
+    /// The AOT-artifact PJRT path only; fails hard when unavailable.
+    Pjrt,
+}
+
+impl BackendKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            BackendKind::Auto => "auto",
+            BackendKind::Native => "native",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<BackendKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Ok(BackendKind::Auto),
+            "native" => Ok(BackendKind::Native),
+            "pjrt" | "xla" => Ok(BackendKind::Pjrt),
+            _ => Err(Error::Config(format!(
+                "unknown backend '{s}' (expected auto|native|pjrt)"
+            ))),
+        }
+    }
+}
+
 /// TPGF fusion-rule variant (paper §IV ablation, Fig. 6).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum TpgfMode {
@@ -298,6 +334,10 @@ pub struct ExperimentConfig {
     /// Results are bit-identical for every value — see
     /// `orchestrator::engine` for the determinism contract.
     pub threads: usize,
+    /// Execution backend (`--backend auto|native|pjrt`). Results between
+    /// backends differ numerically (different model families); within one
+    /// backend every run is deterministic.
+    pub backend: BackendKind,
     /// Where `make artifacts` put the HLO + manifest.
     pub artifacts_dir: PathBuf,
 }
@@ -317,6 +357,7 @@ impl Default for ExperimentConfig {
             sfl_fixed_depth: 2,
             dfl_replicas: 2,
             threads: 0,
+            backend: BackendKind::Auto,
             artifacts_dir: PathBuf::from("artifacts"),
         }
     }
@@ -357,6 +398,12 @@ impl ExperimentConfig {
     /// Host worker threads for the round engine (0 = all cores).
     pub fn with_threads(mut self, t: usize) -> Self {
         self.threads = t;
+        self
+    }
+
+    /// Execution backend selection.
+    pub fn with_backend(mut self, b: BackendKind) -> Self {
+        self.backend = b;
         self
     }
 
@@ -418,6 +465,7 @@ impl ExperimentConfig {
             "sfl_fixed_depth" => self.sfl_fixed_depth = f(v)? as usize,
             "dfl_replicas" => self.dfl_replicas = (f(v)? as usize).max(1),
             "threads" => self.threads = f(v)? as usize,
+            "backend" => self.backend = BackendKind::parse(s(v, key)?)?,
             "artifacts_dir" => self.artifacts_dir = PathBuf::from(s(v, key)?),
             "clients" => self.fleet.clients = f(v)? as usize,
             "mem_gb" => self.fleet.mem_gb = pair(v)?,
@@ -506,6 +554,7 @@ impl ExperimentConfig {
         o.set("sfl_fixed_depth", n(self.sfl_fixed_depth as f64));
         o.set("dfl_replicas", n(self.dfl_replicas as f64));
         o.set("threads", n(self.threads as f64));
+        o.set("backend", JsonValue::String(self.backend.as_str().into()));
         if let Some(t) = self.train.target_accuracy {
             o.set("target_accuracy", n(t));
         }
@@ -587,6 +636,25 @@ mod tests {
         assert_eq!(c2.train.seed, 9);
         assert_eq!(c2.threads, 4);
         assert_eq!(c2.ssfl.tpgf_mode, TpgfMode::NoDepth);
+    }
+
+    #[test]
+    fn backend_parses_and_roundtrips() {
+        for (s, b) in [
+            ("auto", BackendKind::Auto),
+            ("native", BackendKind::Native),
+            ("pjrt", BackendKind::Pjrt),
+            ("XLA", BackendKind::Pjrt),
+        ] {
+            assert_eq!(BackendKind::parse(s).unwrap(), b);
+        }
+        assert!(BackendKind::parse("cuda").is_err());
+
+        let c = ExperimentConfig::default().with_backend(BackendKind::Native);
+        let j = c.to_json();
+        let mut c2 = ExperimentConfig::default();
+        c2.apply_json(&j).unwrap();
+        assert_eq!(c2.backend, BackendKind::Native);
     }
 
     #[test]

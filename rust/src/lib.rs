@@ -16,8 +16,11 @@
 //!   timeouts, byte accounting, and the simulated cluster clock.
 //! * [`energy`] — device power states, energy integration, CO₂ accounting.
 //! * [`metrics`] — round records, run summaries, CSV/JSON export.
-//! * [`runtime`] — PJRT artifact registry and executor (loads
-//!   `artifacts/*.hlo.txt` per the manifest; Python never runs here).
+//! * [`runtime`] — the execution backends behind one `Backend` trait:
+//!   the PJRT artifact executor (loads `artifacts/*.hlo.txt` per the
+//!   manifest; Python never runs here) and the always-available native
+//!   pure-Rust reference MLP that makes every end-to-end test, bench and
+//!   example run offline (`--backend auto|native|pjrt`).
 //! * [`allocation`] — resource-aware subnetwork allocation (paper Eq. 1).
 //! * [`tpgf`] — Three-Phase Gradient Fusion weighting + fused update
 //!   (paper Eq. 3–4), Rust SIMD-friendly loop and Pallas-artifact paths.

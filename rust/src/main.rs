@@ -12,7 +12,7 @@
 use std::path::PathBuf;
 use std::process::ExitCode;
 
-use supersfl::config::{ExperimentConfig, Method};
+use supersfl::config::{BackendKind, ExperimentConfig, Method};
 use supersfl::metrics::Table;
 use supersfl::runtime::Runtime;
 use supersfl::util::json::{self, JsonValue};
@@ -49,8 +49,8 @@ fn usage() {
     eprintln!(
         "usage: supersfl <train|allocate|inspect> [--method ssfl|sfl|dfl] \
          [--clients N] [--classes 10|100] [--rounds N] [--seed N] \
-         [--threads N] [--config file.json] [--set key=value]... \
-         [--artifacts DIR] [--out DIR]"
+         [--threads N] [--backend auto|native|pjrt] [--config file.json] \
+         [--set key=value]... [--artifacts DIR] [--out DIR]"
     );
 }
 
@@ -76,6 +76,9 @@ fn build_config(args: &cli::Args) -> Result<ExperimentConfig> {
     }
     if let Some(v) = args.get("threads") {
         cfg.threads = v.parse()?;
+    }
+    if let Some(v) = args.get("backend") {
+        cfg.backend = BackendKind::parse(v)?;
     }
     if let Some(v) = args.get("target") {
         cfg.train.target_accuracy = Some(v.parse()?);
@@ -119,7 +122,8 @@ fn cmd_train(args: &cli::Args) -> Result<()> {
             cfg.threads.to_string()
         }
     );
-    let rt = Runtime::load(&cfg.artifacts_dir)?;
+    let rt = Runtime::from_config(&cfg)?;
+    println!("backend: {}", rt.backend_name());
     let res = orchestrator::run_experiment(&rt, &cfg)?;
     let wall = res.metrics.host_wall_s;
 
@@ -150,9 +154,13 @@ fn cmd_train(args: &cli::Args) -> Result<()> {
     }
     let st = rt.stats();
     println!(
-        "runtime: {} executions, {:.2}s exec, {:.2}s marshal, {} compiles ({:.1}s), wall {:.1}s",
-        st.executions, st.exec_time_s, st.marshal_time_s, st.compile_count, st.compile_time_s, wall
+        "runtime[{}]: {} executions, {:.2}s exec, {:.2}s marshal, {} compiles ({:.1}s), wall {:.1}s",
+        st.backend, st.executions, st.exec_time_s, st.marshal_time_s, st.compile_count,
+        st.compile_time_s, wall
     );
+    if let Some(reason) = &st.fallback_reason {
+        println!("note: fell back to the native backend ({reason})");
+    }
 
     if let Some(out) = args.get("out") {
         let dir = PathBuf::from(out);
@@ -170,7 +178,7 @@ fn cmd_train(args: &cli::Args) -> Result<()> {
 
 fn cmd_allocate(args: &cli::Args) -> Result<()> {
     let cfg = build_config(args)?;
-    let rt = Runtime::load(&cfg.artifacts_dir)?;
+    let rt = Runtime::from_config(&cfg)?;
     let mut rng = Pcg32::new(cfg.train.seed, 0xD15EA5E).fork(3);
     let profiles = network::sample_fleet(&cfg.fleet, &cfg.energy, &mut rng);
     let assignments = allocation::allocate(&profiles, &cfg.alloc, rt.model().depth);
@@ -194,29 +202,34 @@ fn cmd_allocate(args: &cli::Args) -> Result<()> {
 }
 
 fn cmd_inspect(args: &cli::Args) -> Result<()> {
-    let dir = args
-        .get("artifacts")
-        .map(PathBuf::from)
-        .unwrap_or_else(|| PathBuf::from("artifacts"));
-    let manifest = json::parse_file(&dir.join("manifest.json"))?;
-    let rt = Runtime::load(&dir)?;
+    let cfg = build_config(args)?;
+    let dir = cfg.artifacts_dir.clone();
+    let rt = Runtime::from_config(&cfg)?;
     let m = rt.model();
-    println!("artifacts: {}", dir.display());
+    println!("backend: {}", rt.backend_name());
+    if let Some(reason) = rt.stats().fallback_reason {
+        println!("  (native fallback: {reason})");
+    }
     println!(
         "model: dim={} depth={} tokens={} batch={} eval_batch={} enc_params={}",
         m.dim, m.depth, m.tokens, m.batch, m.eval_batch, m.enc_full_size
     );
     println!("enc layer sizes: {:?}", m.enc_layer_sizes);
-    let names = rt.manifest.artifact_names();
+    let names = rt.artifact_names();
     println!("{} artifacts:", names.len());
     for n in names {
         println!("  {n}");
     }
-    let profile = manifest
-        .get("build")
-        .and_then(|b| b.get("profile"))
-        .and_then(|p| p.as_str())
-        .unwrap_or("?");
-    println!("build profile: {profile}");
+    // Build metadata only exists for the AOT-artifact path.
+    if rt.backend_name() == "pjrt" {
+        let manifest = json::parse_file(&dir.join("manifest.json"))?;
+        let profile = manifest
+            .get("build")
+            .and_then(|b| b.get("profile"))
+            .and_then(|p| p.as_str())
+            .unwrap_or("?");
+        println!("artifacts dir: {}", dir.display());
+        println!("build profile: {profile}");
+    }
     Ok(())
 }

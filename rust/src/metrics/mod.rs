@@ -30,6 +30,26 @@ pub struct RoundRecord {
     pub server_steps: usize,
 }
 
+impl RoundRecord {
+    /// One round as a JSON object (used by the run summary and the
+    /// golden-metrics snapshot test).
+    pub fn to_json(&self) -> JsonValue {
+        let n = JsonValue::Number;
+        let mut o = JsonValue::object();
+        o.set("round", n(self.round as f64));
+        o.set("sim_time_s", n(self.sim_time_s));
+        o.set("accuracy", n(self.accuracy));
+        o.set("mean_client_loss", n(self.mean_client_loss));
+        o.set("mean_server_loss", n(self.mean_server_loss));
+        o.set("comm_mb", n(self.comm_mb));
+        o.set("cum_comm_mb", n(self.cum_comm_mb));
+        o.set("energy_j", n(self.energy_j));
+        o.set("fallback_steps", n(self.fallback_steps as f64));
+        o.set("server_steps", n(self.server_steps as f64));
+        o
+    }
+}
+
 /// Whole-run result + the per-round trajectory.
 #[derive(Clone, Debug)]
 pub struct RunMetrics {
@@ -149,6 +169,10 @@ impl RunMetrics {
         o.set("power_per_acc", n(self.power_per_acc));
         o.set("co2_g", n(self.co2_g));
         o.set("host_wall_s", n(self.host_wall_s));
+        o.set(
+            "rounds",
+            JsonValue::Array(self.rounds.iter().map(|r| r.to_json()).collect()),
+        );
         o
     }
 
@@ -274,9 +298,14 @@ mod tests {
             "total_comm_mb",
             "power_per_acc",
             "co2_g",
+            "rounds",
         ] {
             assert!(j.get(key).is_some(), "missing {key}");
         }
+        let rounds = j.get("rounds").and_then(|r| r.as_array()).unwrap();
+        assert_eq!(rounds.len(), 5);
+        assert!(rounds[0].get("accuracy").is_some());
+        assert!(rounds[0].get("server_steps").is_some());
     }
 
     #[test]

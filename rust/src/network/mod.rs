@@ -418,6 +418,66 @@ mod tests {
         assert!(flips > 0, "round salt must decorrelate lanes");
     }
 
+    /// Property: a lane is a pure function of `(run seed, round, client)`
+    /// — re-forking the same triple replays the exact same delay/drop
+    /// sequence, including the timed-out/ok pattern AND the simulated
+    /// round-trip times, for any draw count and payload size.
+    #[test]
+    fn prop_lane_fork_is_deterministic_per_triple() {
+        use crate::util::prop::forall;
+        forall(0xA11CE, 40, |rng| {
+            let mut sim = sim(0.8, 0.2);
+            sim.begin_round();
+            let client = rng.uniform_usize(4);
+            let round = rng.next_u64() % 1000;
+            let draws = 1 + rng.uniform_usize(30);
+            let bytes = 1 + rng.uniform_usize(100_000) as u64;
+            let mut a = sim.lane(client, round);
+            // Interleave unrelated forks + draws: they must not perturb
+            // the (client, round) stream.
+            let mut noise = sim.lane((client + 1) % 4, round);
+            noise.exchange(1, 1, 0.0);
+            let mut b = sim.lane(client, round);
+            for _ in 0..draws {
+                let ea = a.exchange(bytes, bytes, 1e-3);
+                let eb = b.exchange(bytes, bytes, 1e-3);
+                assert_eq!(ea.is_ok(), eb.is_ok());
+                assert_eq!(ea.time_s().to_bits(), eb.time_s().to_bits());
+            }
+            assert_eq!(a.traffic.up_bytes, b.traffic.up_bytes);
+            assert_eq!(a.traffic.down_bytes, b.traffic.down_bytes);
+        });
+    }
+
+    /// Property: disjoint clients (and disjoint rounds) get independent
+    /// streams — over enough draws their drop patterns must diverge.
+    #[test]
+    fn prop_disjoint_clients_have_independent_streams() {
+        use crate::util::prop::forall;
+        forall(0xB0B, 20, |rng| {
+            let mut sim = sim(1.0, 0.5);
+            sim.begin_round();
+            let round = 1 + rng.next_u64() % 500;
+            let c1 = rng.uniform_usize(4);
+            let c2 = (c1 + 1 + rng.uniform_usize(3)) % 4;
+            assert_ne!(c1, c2);
+            let mut a = sim.lane(c1, round);
+            let mut b = sim.lane(c2, round);
+            let diverged = (0..128)
+                .filter(|_| a.exchange(8, 8, 0.0).is_ok() != b.exchange(8, 8, 0.0).is_ok())
+                .count();
+            assert!(diverged > 0, "clients {c1}/{c2} round {round} correlated");
+
+            // Same client, different round: also independent.
+            let mut r1 = sim.lane(c1, round);
+            let mut r2 = sim.lane(c1, round + 1);
+            let diverged = (0..128)
+                .filter(|_| r1.exchange(8, 8, 0.0).is_ok() != r2.exchange(8, 8, 0.0).is_ok())
+                .count();
+            assert!(diverged > 0, "rounds {round}/{} correlated", round + 1);
+        });
+    }
+
     #[test]
     fn lane_respects_round_availability_and_accounts_bytes() {
         let mut s = sim(0.0, 0.0);

@@ -147,8 +147,8 @@ impl Harness {
             embed_size: m.embed_size,
             block_size: m.block_size,
             depth: m.depth,
-            clf_client_size: rt.manifest.clf_client_size(cfg.data.classes)?,
-            clf_server_size: rt.manifest.clf_server_size(cfg.data.classes)?,
+            clf_client_size: rt.clf_client_size(cfg.data.classes)?,
+            clf_server_size: rt.clf_server_size(cfg.data.classes)?,
         });
 
         let eval_n = cfg.train.eval_samples.min(test.len());
@@ -556,7 +556,7 @@ mod tests {
     use super::*;
     use std::path::PathBuf;
 
-    fn runtime() -> Option<Runtime> {
+    fn runtime() -> Runtime {
         let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
         Runtime::load_if_available(&dir)
     }
@@ -575,7 +575,7 @@ mod tests {
 
     #[test]
     fn prepare_builds_consistent_world() {
-        let Some(rt) = runtime() else { return };
+        let rt = runtime();
         let h = Harness::prepare(&rt, &tiny_cfg()).unwrap();
         assert_eq!(h.clients.len(), 4);
         assert_eq!(h.profiles.len(), 4);
@@ -592,7 +592,7 @@ mod tests {
 
     #[test]
     fn ssfl_two_rounds_produce_records() {
-        let Some(rt) = runtime() else { return };
+        let rt = runtime();
         let res = run_experiment(&rt, &tiny_cfg()).unwrap();
         assert_eq!(res.metrics.rounds.len(), 2);
         assert!(res.metrics.total_comm_mb > 0.0);
@@ -605,7 +605,7 @@ mod tests {
 
     #[test]
     fn deterministic_across_runs() {
-        let Some(rt) = runtime() else { return };
+        let rt = runtime();
         let a = run_experiment(&rt, &tiny_cfg()).unwrap();
         let b = run_experiment(&rt, &tiny_cfg()).unwrap();
         assert_eq!(a.metrics.final_accuracy, b.metrics.final_accuracy);
@@ -617,7 +617,7 @@ mod tests {
     /// produce bit-identical results, for every method.
     #[test]
     fn thread_count_invariance_end_to_end() {
-        let Some(rt) = runtime() else { return };
+        let rt = runtime();
         for method in [Method::SuperSfl, Method::Sfl, Method::Dfl] {
             let run = |threads: usize| {
                 let mut cfg = tiny_cfg().with_method(method);
@@ -656,7 +656,7 @@ mod tests {
 
     #[test]
     fn serverless_round_uses_fallback_everywhere() {
-        let Some(rt) = runtime() else { return };
+        let rt = runtime();
         let mut cfg = tiny_cfg();
         cfg.net.server_availability = 0.0;
         let res = run_experiment(&rt, &cfg).unwrap();
@@ -668,7 +668,7 @@ mod tests {
 
     #[test]
     fn target_accuracy_stops_early() {
-        let Some(rt) = runtime() else { return };
+        let rt = runtime();
         let mut cfg = tiny_cfg();
         cfg.train.rounds = 50;
         cfg.train.target_accuracy = Some(0.0); // trivially hit at round 1

@@ -1,31 +1,38 @@
-//! PJRT runtime: load AOT artifacts, compile once, execute on the hot path.
+//! The execution runtime: one dispatch surface, two backends.
 //!
-//! The Rust side of the three-layer architecture. At startup the runtime
-//! loads `artifacts/manifest.json`; each artifact's HLO text is parsed and
-//! compiled by the PJRT CPU client **lazily on first use** and cached for
-//! the rest of the process. Execution marshals flat `f32`/`i32` slices
-//! into `xla::Literal`s with the manifest shapes and unpacks the returned
-//! tuple back into `Vec<f32>` buffers.
+//! [`Runtime`] owns a boxed [`Backend`] and exposes the typed protocol
+//! ops (DESIGN.md §3 artifact table) the orchestrator, baselines and
+//! benches call. Two implementations exist:
 //!
-//! The runtime is `Sync`: the compile cache, stats and marshal-scratch
-//! pool sit behind mutexes so the parallel round engine can dispatch
-//! artifact executions from many worker threads at once. Locks are only
-//! held for cache lookups and counter bumps — never across an execution.
-//! Marshalling reuses pooled scratch buffers (the literal container and
-//! the dims vector) instead of fresh allocations per call.
+//! * [`pjrt::PjrtBackend`] — the AOT-artifact path: loads
+//!   `artifacts/manifest.json`, compiles HLO through the PJRT CPU client
+//!   lazily, executes on the hot path. Requires `make artifacts` and real
+//!   PJRT bindings (the bundled `xla` crate is a stub that fails at
+//!   client construction).
+//! * [`native::NativeBackend`] — a deterministic pure-Rust reference MLP
+//!   implementing the same exec surface. Always available, so every
+//!   end-to-end test, paper-figure bench and example runs offline.
 //!
-//! Python never runs here — the binary is self-contained given the
-//! `artifacts/` directory.
+//! Selection: `cfg.backend` / `--backend auto|native|pjrt` (or the
+//! `SUPERSFL_BACKEND` env var, which wins). `auto` — the default — tries
+//! the artifacts and **falls back to native instead of skipping**,
+//! recording why in [`RuntimeStats::fallback_reason`].
+//!
+//! The runtime is `Sync` and all backend state is behind mutexes, so the
+//! parallel round engine dispatches from many worker threads at once.
 
 pub mod manifest;
+pub mod native;
+pub mod pjrt;
 
 pub use manifest::{ArtifactSpec, Dtype, Manifest, ModelInfo, TensorSpec};
+pub use native::NativeBackend;
+pub use pjrt::PjrtBackend;
 
-use std::collections::HashMap;
 use std::path::Path;
-use std::sync::{Arc, Mutex};
 
-use crate::{Error, Result};
+use crate::config::{BackendKind, ExperimentConfig};
+use crate::Result;
 
 /// An argument for artifact execution.
 #[derive(Clone, Copy, Debug)]
@@ -37,7 +44,7 @@ pub enum Arg<'a> {
 }
 
 impl<'a> Arg<'a> {
-    fn elems(&self) -> usize {
+    pub(crate) fn elems(&self) -> usize {
         match self {
             Arg::F32(s) => s.len(),
             Arg::I32(s) => s.len(),
@@ -49,6 +56,13 @@ impl<'a> Arg<'a> {
 /// Cumulative execution statistics (profiling; see EXPERIMENTS.md §Perf).
 #[derive(Clone, Debug, Default)]
 pub struct RuntimeStats {
+    /// Which backend executed ("native" or "pjrt").
+    pub backend: String,
+    /// When backend selection was `auto` and the PJRT path was unusable:
+    /// the reason the runtime fell back to native (artifacts missing vs
+    /// stub/unusable backend). `None` when the selection was explicit or
+    /// the artifacts loaded.
+    pub fallback_reason: Option<String>,
     pub executions: u64,
     pub compile_count: u64,
     pub compile_time_s: f64,
@@ -56,197 +70,158 @@ pub struct RuntimeStats {
     pub marshal_time_s: f64,
 }
 
-/// Reusable marshalling buffers. Pooled on the runtime so the per-call
-/// literal container and dims vector keep their capacity across the
-/// millions of executions a large-fleet run performs.
-#[derive(Default)]
-struct MarshalScratch {
-    literals: Vec<xla::Literal>,
-    dims: Vec<i64>,
+/// The exec surface both backends implement. Object-safe: the runtime
+/// stores a `Box<dyn Backend>` and every protocol op goes through
+/// [`Backend::exec`] with a manifest-style artifact name.
+pub trait Backend: Send + Sync {
+    /// Short backend identifier ("pjrt" / "native").
+    fn name(&self) -> &'static str;
+    /// Model geometry (layer table, batch sizes, image shape).
+    fn model(&self) -> &ModelInfo;
+    fn clf_client_size(&self, classes: usize) -> Result<usize>;
+    fn clf_server_size(&self, classes: usize) -> Result<usize>;
+    /// Deterministic initial parameter blob for a tag
+    /// (`init_enc_c10`, `init_clf_client_c10`, `init_clf_s_c100`, ...).
+    fn load_init(&self, tag: &str) -> Result<Vec<f32>>;
+    /// Every artifact name this backend can execute.
+    fn artifact_names(&self) -> Vec<String>;
+    /// Execute one artifact; inputs validated against its signature.
+    fn exec(&self, name: &str, args: &[Arg<'_>]) -> Result<Vec<Vec<f32>>>;
+    fn stats(&self) -> RuntimeStats;
+    /// Pre-compile a set of artifacts (startup warm-up for serving
+    /// loops). No-op for backends without a compile step.
+    fn warm_up(&self, _names: &[&str]) -> Result<()> {
+        Ok(())
+    }
 }
 
-/// The artifact registry + PJRT client. One per process, shared across
-/// the round engine's worker threads.
+/// The backend registry + typed protocol ops. One per process, shared
+/// across the round engine's worker threads.
 pub struct Runtime {
-    client: xla::PjRtClient,
-    pub manifest: Manifest,
-    cache: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
-    stats: Mutex<RuntimeStats>,
-    scratch: Mutex<Vec<MarshalScratch>>,
+    backend: Box<dyn Backend>,
+    fallback_reason: Option<String>,
+}
+
+/// `SUPERSFL_BACKEND=auto|native|pjrt` overrides every other selection
+/// path (used by the CI matrix). An explicitly set but invalid value is
+/// a fail-fast panic — silently degrading a typo'd selection to `auto`
+/// would let e.g. a CI leg green-light the wrong backend.
+fn env_backend() -> Option<BackendKind> {
+    let v = std::env::var("SUPERSFL_BACKEND").ok()?;
+    match BackendKind::parse(&v) {
+        Ok(b) => Some(b),
+        Err(e) => panic!("invalid SUPERSFL_BACKEND value '{v}': {e}"),
+    }
 }
 
 impl Runtime {
-    /// Load the manifest and create the PJRT CPU client.
+    /// Load the PJRT artifact backend. Fails when the artifacts or the
+    /// PJRT bindings are unavailable — use [`Runtime::load_if_available`]
+    /// (or `auto` selection) for graceful native fallback.
     pub fn load(artifacts_dir: &Path) -> Result<Runtime> {
-        let manifest = Manifest::load(artifacts_dir)?;
-        let client = xla::PjRtClient::cpu()?;
         Ok(Runtime {
-            client,
-            manifest,
-            cache: Mutex::new(HashMap::new()),
-            stats: Mutex::new(RuntimeStats::default()),
-            scratch: Mutex::new(Vec::new()),
+            backend: Box::new(PjrtBackend::load(artifacts_dir)?),
+            fallback_reason: None,
         })
     }
 
+    /// The always-available native reference backend.
+    pub fn native() -> Runtime {
+        Runtime {
+            backend: Box::new(NativeBackend::new()),
+            fallback_reason: None,
+        }
+    }
+
+    /// Build the runtime a config asks for (`cfg.backend`, overridden by
+    /// `SUPERSFL_BACKEND`).
+    pub fn from_config(cfg: &ExperimentConfig) -> Result<Runtime> {
+        match env_backend().unwrap_or(cfg.backend) {
+            BackendKind::Pjrt => Runtime::load(&cfg.artifacts_dir),
+            BackendKind::Native => Ok(Runtime::native()),
+            BackendKind::Auto => Ok(Runtime::load_if_available(&cfg.artifacts_dir)),
+        }
+    }
+
+    /// The `auto` path: PJRT when the artifacts *and* an execution
+    /// backend are actually usable, native otherwise. This used to return
+    /// `Option` and make every artifact-dependent test/bench silently
+    /// skip; it now always yields a working runtime and records *why* it
+    /// fell back in [`RuntimeStats::fallback_reason`].
+    pub fn load_if_available(artifacts_dir: &Path) -> Runtime {
+        match env_backend() {
+            Some(BackendKind::Native) => return Runtime::native(),
+            // An explicit pjrt selection must fail hard, not silently
+            // fall back to native numbers.
+            Some(BackendKind::Pjrt) => {
+                return Runtime::load(artifacts_dir).unwrap_or_else(|e| {
+                    panic!("SUPERSFL_BACKEND=pjrt: PJRT backend required but unusable: {e}")
+                })
+            }
+            _ => {}
+        }
+        let reason = if !artifacts_dir.join("manifest.json").exists() {
+            format!(
+                "artifacts not built at {} (run `make artifacts`)",
+                artifacts_dir.display()
+            )
+        } else {
+            match Runtime::load(artifacts_dir) {
+                Ok(rt) => return rt,
+                // Artifacts exist but the backend cannot execute them
+                // (e.g. the bundled xla stub crate).
+                Err(e) => format!("artifacts present but backend unusable: {e}"),
+            }
+        };
+        eprintln!("runtime: using native reference backend ({reason})");
+        Runtime {
+            backend: Box::new(NativeBackend::new()),
+            fallback_reason: Some(reason),
+        }
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
     pub fn model(&self) -> &ModelInfo {
-        &self.manifest.model
+        self.backend.model()
+    }
+
+    pub fn clf_client_size(&self, classes: usize) -> Result<usize> {
+        self.backend.clf_client_size(classes)
+    }
+
+    pub fn clf_server_size(&self, classes: usize) -> Result<usize> {
+        self.backend.clf_server_size(classes)
+    }
+
+    /// Load a deterministic `init_*` parameter blob.
+    pub fn load_init(&self, tag: &str) -> Result<Vec<f32>> {
+        self.backend.load_init(tag)
+    }
+
+    pub fn artifact_names(&self) -> Vec<String> {
+        self.backend.artifact_names()
     }
 
     pub fn stats(&self) -> RuntimeStats {
-        self.stats.lock().expect("stats lock").clone()
-    }
-
-    /// Compile (or fetch from cache) an artifact's executable. The lock is
-    /// not held across compilation, so two threads racing on first use may
-    /// both compile; the first insert wins and the duplicate is dropped
-    /// (correctness is unaffected — compilation is pure).
-    fn ensure_compiled(&self, name: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
-        if let Some(exe) = self.cache.lock().expect("cache lock").get(name) {
-            return Ok(exe.clone());
-        }
-        let spec = self.manifest.artifact(name)?;
-        let t0 = std::time::Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(
-            spec.file
-                .to_str()
-                .ok_or_else(|| Error::Manifest("non-utf8 path".into()))?,
-        )?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp)?;
-        let dt = t0.elapsed().as_secs_f64();
-        {
-            let mut st = self.stats.lock().expect("stats lock");
-            st.compile_count += 1;
-            st.compile_time_s += dt;
-        }
-        let mut cache = self.cache.lock().expect("cache lock");
-        let entry = cache
-            .entry(name.to_string())
-            .or_insert_with(|| Arc::new(exe));
-        Ok(entry.clone())
-    }
-
-    /// Load only if the artifacts *and* an execution backend are actually
-    /// usable; logs the reason and returns `None` otherwise. This is the
-    /// single gating helper for artifact-dependent tests and benches —
-    /// missing artifacts and a stub/unavailable PJRT backend both skip
-    /// gracefully instead of panicking.
-    pub fn load_if_available(artifacts_dir: &Path) -> Option<Runtime> {
-        if !artifacts_dir.join("manifest.json").exists() {
-            eprintln!(
-                "skipping: artifacts not built at {} (run `make artifacts`)",
-                artifacts_dir.display()
-            );
-            return None;
-        }
-        match Runtime::load(artifacts_dir) {
-            Ok(rt) => Some(rt),
-            Err(e) => {
-                // Artifacts exist but the backend cannot execute them
-                // (e.g. the bundled xla stub crate).
-                eprintln!("skipping: runtime unavailable: {e}");
-                None
-            }
-        }
+        let mut st = self.backend.stats();
+        st.backend = self.backend.name().to_string();
+        st.fallback_reason = self.fallback_reason.clone();
+        st
     }
 
     /// Pre-compile a set of artifacts (startup warm-up for serving loops).
     pub fn warm_up(&self, names: &[&str]) -> Result<()> {
-        for n in names {
-            self.ensure_compiled(n)?;
-        }
-        Ok(())
+        self.backend.warm_up(names)
     }
 
-    /// Execute an artifact. Inputs are validated against the manifest
-    /// signature; outputs come back as flat `Vec<f32>` in manifest order.
-    ///
-    /// Thread-safe: the executable handle is cloned out of the cache and
-    /// no lock is held during execution, so independent client branches
-    /// dispatch concurrently.
+    /// Execute an artifact by name. Inputs are validated against the
+    /// backend's signature table; outputs come back as flat `Vec<f32>`
+    /// in signature order. Thread-safe.
     pub fn exec(&self, name: &str, args: &[Arg<'_>]) -> Result<Vec<Vec<f32>>> {
-        let mut scratch = self
-            .scratch
-            .lock()
-            .expect("scratch lock")
-            .pop()
-            .unwrap_or_default();
-        let out = self.exec_with_scratch(name, args, &mut scratch);
-        // Return the scratch buffers to the pool on every path (keeps
-        // their capacity warm even across error returns).
-        scratch.literals.clear();
-        self.scratch.lock().expect("scratch lock").push(scratch);
-        out
-    }
-
-    fn exec_with_scratch(
-        &self,
-        name: &str,
-        args: &[Arg<'_>],
-        scratch: &mut MarshalScratch,
-    ) -> Result<Vec<Vec<f32>>> {
-        let exe = self.ensure_compiled(name)?;
-        let spec = self.manifest.artifact(name)?;
-        if args.len() != spec.inputs.len() {
-            return Err(Error::Shape(format!(
-                "{name}: {} args, expected {}",
-                args.len(),
-                spec.inputs.len()
-            )));
-        }
-
-        let t0 = std::time::Instant::now();
-        scratch.literals.clear();
-        for (arg, input) in args.iter().zip(spec.inputs.iter()) {
-            if arg.elems() != input.elems() {
-                return Err(Error::Shape(format!(
-                    "{name}.{}: {} elements, expected {} (shape {:?})",
-                    input.name,
-                    arg.elems(),
-                    input.elems(),
-                    input.shape
-                )));
-            }
-            let lit = make_literal(arg, input, &mut scratch.dims)?;
-            scratch.literals.push(lit);
-        }
-        let marshal = t0.elapsed().as_secs_f64();
-
-        let t1 = std::time::Instant::now();
-        let result = exe.execute::<xla::Literal>(&scratch.literals)?[0][0].to_literal_sync()?;
-        let exec = t1.elapsed().as_secs_f64();
-
-        let t2 = std::time::Instant::now();
-        // aot.py lowers with return_tuple=True: unpack the tuple.
-        let parts = result.to_tuple()?;
-        if parts.len() != spec.outputs.len() {
-            return Err(Error::Shape(format!(
-                "{name}: {} outputs, expected {}",
-                parts.len(),
-                spec.outputs.len()
-            )));
-        }
-        let mut out = Vec::with_capacity(parts.len());
-        for (lit, ospec) in parts.into_iter().zip(spec.outputs.iter()) {
-            let v = lit.to_vec::<f32>()?;
-            if v.len() != ospec.elems() {
-                return Err(Error::Shape(format!(
-                    "{name}.{}: got {} elements, expected {}",
-                    ospec.name,
-                    v.len(),
-                    ospec.elems()
-                )));
-            }
-            out.push(v);
-        }
-        let unmarshal = t2.elapsed().as_secs_f64();
-
-        let mut st = self.stats.lock().expect("stats lock");
-        st.executions += 1;
-        st.exec_time_s += exec;
-        st.marshal_time_s += marshal + unmarshal;
-        Ok(out)
+        self.backend.exec(name, args)
     }
 
     // ---- typed protocol ops (DESIGN.md §3 artifact table) --------------
@@ -325,8 +300,8 @@ impl Runtime {
         })
     }
 
-    /// TPGF Phase 3 through the Pallas artifact: θ' (alternative to the
-    /// Rust loop in [`crate::tpgf::fuse_update`]).
+    /// TPGF Phase 3 through the backend: θ' (alternative to the Rust loop
+    /// in [`crate::tpgf::fuse_update`]).
     pub fn tpgf_update(
         &self,
         depth: usize,
@@ -373,7 +348,7 @@ impl Runtime {
 pub struct ClientLocalOut {
     pub z: Vec<f32>,
     pub loss: f32,
-    /// Encoder gradient, already τ-clipped inside the artifact.
+    /// Encoder gradient, already τ-clipped inside the backend.
     pub g_enc: Vec<f32>,
     pub g_clf: Vec<f32>,
 }
@@ -387,42 +362,16 @@ pub struct ServerStepOut {
     pub g_z: Vec<f32>,
 }
 
-fn make_literal(arg: &Arg<'_>, spec: &TensorSpec, dims: &mut Vec<i64>) -> Result<xla::Literal> {
-    dims.clear();
-    dims.extend(spec.shape.iter().map(|&d| d as i64));
-    let lit = match (arg, spec.dtype) {
-        (Arg::Scalar(v), Dtype::F32) => xla::Literal::scalar(*v),
-        (Arg::F32(s), Dtype::F32) => {
-            let l = xla::Literal::vec1(s);
-            if dims.is_empty() {
-                l.reshape(&[])?
-            } else {
-                l.reshape(dims)?
-            }
-        }
-        (Arg::I32(s), Dtype::I32) => {
-            let l = xla::Literal::vec1(s);
-            l.reshape(dims)?
-        }
-        _ => {
-            return Err(Error::Shape(format!(
-                "{}: dtype mismatch ({:?})",
-                spec.name, spec.dtype
-            )))
-        }
-    };
-    Ok(lit)
-}
-
 #[cfg(test)]
 mod tests {
-    //! Integration tests against the real artifacts (skipped when
-    //! `make artifacts` has not run). Heavier cross-module checks live in
-    //! rust/tests/.
+    //! Runtime-level tests against whichever backend `load_if_available`
+    //! resolves (native unless real artifacts are present). Heavier
+    //! cross-module checks live in rust/tests/.
     use super::*;
+    use crate::Error;
     use std::path::PathBuf;
 
-    fn runtime() -> Option<Runtime> {
+    fn runtime() -> Runtime {
         let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
         Runtime::load_if_available(&dir)
     }
@@ -430,14 +379,14 @@ mod tests {
     #[test]
     fn runtime_is_send_and_sync() {
         // The parallel round engine shares one `&Runtime` across worker
-        // threads; the compile cache / stats / scratch pool are mutexed.
+        // threads; all backend state is mutexed.
         fn assert_send_sync<T: Send + Sync>() {}
         assert_send_sync::<Runtime>();
     }
 
     #[test]
     fn exec_validates_arity_and_shapes() {
-        let Some(rt) = runtime() else { return };
+        let rt = runtime();
         let m = rt.model();
         let enc = vec![0.0f32; m.enc_size(1)];
         // Wrong arity.
@@ -457,9 +406,9 @@ mod tests {
 
     #[test]
     fn client_fwd_produces_smashed_shape() {
-        let Some(rt) = runtime() else { return };
+        let rt = runtime();
         let m = rt.model().clone();
-        let enc = rt.manifest.load_init("init_enc_c10").unwrap();
+        let enc = rt.load_init("init_enc_c10").unwrap();
         let x = vec![0.1f32; m.batch * m.image_elems()];
         let z = rt.client_fwd(2, &enc[..m.enc_size(2)], &x).unwrap();
         assert_eq!(z.len(), m.smashed_elems());
@@ -467,15 +416,94 @@ mod tests {
     }
 
     #[test]
-    fn compile_cache_hits_after_first_use() {
-        let Some(rt) = runtime() else { return };
+    fn stats_count_executions_and_identify_backend() {
+        let rt = runtime();
         let m = rt.model().clone();
-        let enc = rt.manifest.load_init("init_enc_c10").unwrap();
+        let enc = rt.load_init("init_enc_c10").unwrap();
         let x = vec![0.1f32; m.batch * m.image_elems()];
         rt.client_fwd(1, &enc[..m.enc_size(1)], &x).unwrap();
-        let c1 = rt.stats().compile_count;
         rt.client_fwd(1, &enc[..m.enc_size(1)], &x).unwrap();
-        assert_eq!(rt.stats().compile_count, c1);
-        assert_eq!(rt.stats().executions, 2);
+        let st = rt.stats();
+        assert_eq!(st.executions, 2);
+        assert_eq!(st.backend, rt.backend_name());
+        // Compiles happen at most once per artifact (the PJRT cache); the
+        // native backend has no compile step at all.
+        assert!(st.compile_count <= 1);
+    }
+
+    #[test]
+    fn warm_up_is_safe_on_every_backend() {
+        let rt = runtime();
+        rt.warm_up(&["client_fwd_d1"]).unwrap();
+    }
+
+    #[test]
+    fn auto_fallback_reports_missing_artifacts() {
+        if std::env::var("SUPERSFL_BACKEND").is_ok() {
+            return; // env override bypasses the probe being tested
+        }
+        let dir = std::env::temp_dir().join("supersfl_no_artifacts_here");
+        let rt = Runtime::load_if_available(&dir);
+        assert_eq!(rt.backend_name(), "native");
+        let st = rt.stats();
+        assert_eq!(st.backend, "native");
+        let reason = st.fallback_reason.expect("fallback must carry a reason");
+        assert!(reason.contains("artifacts not built"), "{reason}");
+    }
+
+    #[test]
+    fn auto_fallback_reports_unusable_backend() {
+        if std::env::var("SUPERSFL_BACKEND").is_ok() {
+            return;
+        }
+        // Artifacts *present* (a minimal well-formed manifest) but the
+        // execution backend is the bundled stub → the reason must name the
+        // backend, not the artifacts.
+        let dir = std::env::temp_dir().join("supersfl_stub_backend_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{
+              "build": {"image_size": 32, "channels": 3, "classes_variants": [10], "profile": "test"},
+              "model": {"tokens": 17, "dim": 64, "depth": 8, "batch": 32, "eval_batch": 64,
+                        "embed_size": 100, "block_size": 200, "enc_full_size": 1700,
+                        "enc_layer_sizes": [300, 200, 200, 200, 200, 200, 200, 200],
+                        "clf_client_sizes": {"10": 650}, "clf_server_sizes": {"10": 650}},
+              "artifacts": {},
+              "init": {}
+            }"#,
+        )
+        .unwrap();
+        let rt = Runtime::load_if_available(&dir);
+        std::fs::remove_dir_all(&dir).ok();
+        if rt.backend_name() == "pjrt" {
+            return; // real PJRT bindings are linked in this build
+        }
+        let reason = rt.stats().fallback_reason.expect("reason");
+        assert!(
+            reason.contains("backend unusable"),
+            "wrong fallback reason: {reason}"
+        );
+    }
+
+    #[test]
+    fn explicit_native_runtime_has_no_fallback_reason() {
+        let rt = Runtime::native();
+        assert_eq!(rt.backend_name(), "native");
+        assert_eq!(rt.stats().fallback_reason, None);
+    }
+
+    #[test]
+    fn from_config_honours_backend_selection() {
+        if std::env::var("SUPERSFL_BACKEND").is_ok() {
+            return;
+        }
+        let cfg = ExperimentConfig::default().with_backend(BackendKind::Native);
+        let rt = Runtime::from_config(&cfg).unwrap();
+        assert_eq!(rt.backend_name(), "native");
+
+        let mut cfg = cfg.with_backend(BackendKind::Pjrt);
+        cfg.artifacts_dir = std::env::temp_dir().join("supersfl_definitely_missing");
+        assert!(Runtime::from_config(&cfg).is_err());
     }
 }

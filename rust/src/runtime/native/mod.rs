@@ -1,0 +1,1093 @@
+//! The native pure-Rust reference backend.
+//!
+//! A deterministic f32 MLP implementing the **full exec surface** of the
+//! artifact protocol (`client_local`, `client_fwd`/`client_bwd`,
+//! `server_step`, `tpgf_update`, `eval_batch`) so every end-to-end test,
+//! bench and example runs real multi-round training offline — no PJRT
+//! bindings, no `make artifacts`.
+//!
+//! # Model
+//!
+//! A small ViT-shaped patch-MLP with the same weight-sharing depth
+//! slicing as the Pallas model:
+//!
+//! * **Patch embed** — the 32×32×3 image is cut into 16 non-overlapping
+//!   8×8 patches; each patch (192 values) maps linearly to a
+//!   `dim`-vector, giving `[tokens, dim]` token states.
+//! * **L = 8 residual MLP blocks** — per token:
+//!   `t' = t + W₂·relu(W₁·t + b₁) + b₂` with `hidden = 2·dim`. A depth-`d`
+//!   client owns the embed + the first `d` blocks (a contiguous prefix of
+//!   the flat parameter vector, exactly like the super-network); the
+//!   server suffix is blocks `d+1..L`.
+//! * **Classifier head** — mean-pool over tokens, then a linear map to
+//!   class logits; softmax cross-entropy loss. Client and server heads
+//!   share this geometry.
+//!
+//! Gradients are exact analytic backprop (verified against central
+//! differences in the tests below). Client-side encoder gradients are
+//! τ-clipped (τ = 0.5, paper §II-B) before they leave an op, matching
+//! the artifact contract; server-side gradients are returned raw.
+//!
+//! # Determinism
+//!
+//! Every op is a pure function of its inputs: fixed-order f32 loops, no
+//! threading, no hidden state. Two calls with the same inputs return
+//! bit-identical outputs on any thread — which is what lets the parallel
+//! round engine's `--threads N` invariance be asserted end to end.
+//!
+//! # What it does NOT model
+//!
+//! Attention, layer norm, Pallas kernel fusion, and the real artifact's
+//! numerics. Simulated time/energy/communication accounting is shared
+//! with the PJRT path (it derives from the geometry, which this backend
+//! reports through the same [`ModelInfo`]), so paper-*shape* claims are
+//! still meaningful; absolute accuracy numbers are not comparable across
+//! backends.
+
+use std::sync::Mutex;
+
+use super::manifest::ModelInfo;
+use super::{Arg, Backend, RuntimeStats};
+use crate::config::TpgfMode;
+use crate::tpgf;
+use crate::util::math;
+use crate::util::rng::Pcg32;
+use crate::{Error, Result};
+
+// Fixed geometry of the reference model. Small on purpose: one client
+// step is a few MFLOPs, so whole simulated experiments finish in seconds.
+const IMAGE: usize = 32;
+const CHANNELS: usize = 3;
+const PATCH: usize = 8;
+const GRID: usize = IMAGE / PATCH; // 4
+const TOKENS: usize = GRID * GRID; // 16
+const DIM: usize = 32;
+const HIDDEN: usize = 2 * DIM; // 64
+const DEPTH: usize = 8;
+const BATCH: usize = 8;
+const EVAL_BATCH: usize = 32;
+const PATCH_ELEMS: usize = PATCH * PATCH * CHANNELS; // 192
+const EMBED_SIZE: usize = PATCH_ELEMS * DIM + DIM; // 6176
+const BLOCK_SIZE: usize = DIM * HIDDEN + HIDDEN + HIDDEN * DIM + DIM; // 4192
+const IMG_ELEMS: usize = IMAGE * IMAGE * CHANNELS;
+/// Gradient-clipping threshold τ (paper §II-B).
+const TAU: f32 = 0.5;
+/// Seed base for the deterministic init blobs.
+const INIT_SEED: u64 = 0x5F5E_0001_5EED;
+
+/// The always-available reference backend.
+pub struct NativeBackend {
+    model: ModelInfo,
+    stats: Mutex<RuntimeStats>,
+}
+
+impl Default for NativeBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl NativeBackend {
+    pub fn new() -> NativeBackend {
+        let mut enc_layer_sizes = vec![EMBED_SIZE + BLOCK_SIZE];
+        enc_layer_sizes.extend(std::iter::repeat(BLOCK_SIZE).take(DEPTH - 1));
+        NativeBackend {
+            model: ModelInfo {
+                tokens: TOKENS,
+                dim: DIM,
+                depth: DEPTH,
+                batch: BATCH,
+                eval_batch: EVAL_BATCH,
+                embed_size: EMBED_SIZE,
+                block_size: BLOCK_SIZE,
+                enc_layer_sizes,
+                enc_full_size: EMBED_SIZE + DEPTH * BLOCK_SIZE,
+                image_size: IMAGE,
+                channels: CHANNELS,
+                classes_variants: vec![10, 100],
+            },
+            stats: Mutex::new(RuntimeStats::default()),
+        }
+    }
+
+    fn check_classes(&self, c: usize) -> Result<()> {
+        if self.model.classes_variants.contains(&c) {
+            Ok(())
+        } else {
+            Err(Error::Manifest(format!(
+                "no classifier variant for {c} classes"
+            )))
+        }
+    }
+
+    fn clf_size(c: usize) -> usize {
+        DIM * c + c
+    }
+}
+
+/// The ops of the artifact protocol, parsed from an artifact name.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Op {
+    ClientLocal { d: usize, c: usize },
+    ClientFwd { d: usize },
+    ClientBwd { d: usize },
+    ServerStep { d: usize, c: usize },
+    TpgfUpdate { d: usize },
+    Eval { c: usize },
+}
+
+fn parse_name(name: &str) -> Option<Op> {
+    fn d_only(s: &str) -> Option<usize> {
+        s.strip_prefix('d')?.parse().ok()
+    }
+    fn d_and_c(s: &str) -> Option<(usize, usize)> {
+        let (d, c) = s.split_once("_c")?;
+        Some((d_only(d)?, c.parse().ok()?))
+    }
+    if let Some(rest) = name.strip_prefix("client_local_") {
+        let (d, c) = d_and_c(rest)?;
+        Some(Op::ClientLocal { d, c })
+    } else if let Some(rest) = name.strip_prefix("client_fwd_") {
+        Some(Op::ClientFwd { d: d_only(rest)? })
+    } else if let Some(rest) = name.strip_prefix("client_bwd_") {
+        Some(Op::ClientBwd { d: d_only(rest)? })
+    } else if let Some(rest) = name.strip_prefix("server_step_") {
+        let (d, c) = d_and_c(rest)?;
+        Some(Op::ServerStep { d, c })
+    } else if let Some(rest) = name.strip_prefix("tpgf_update_") {
+        Some(Op::TpgfUpdate { d: d_only(rest)? })
+    } else if let Some(rest) = name.strip_prefix("eval_c") {
+        Some(Op::Eval { c: rest.parse().ok()? })
+    } else {
+        None
+    }
+}
+
+// ---- argument validation helpers (mirror the PJRT shape errors) --------
+
+fn want_f32<'a>(name: &str, label: &str, arg: &Arg<'a>, elems: usize) -> Result<&'a [f32]> {
+    match *arg {
+        Arg::F32(s) if s.len() == elems => Ok(s),
+        Arg::F32(s) => Err(Error::Shape(format!(
+            "{name}.{label}: {} elements, expected {elems}",
+            s.len()
+        ))),
+        _ => Err(Error::Shape(format!("{name}.{label}: dtype mismatch (F32)"))),
+    }
+}
+
+fn want_i32<'a>(name: &str, label: &str, arg: &Arg<'a>, elems: usize) -> Result<&'a [i32]> {
+    match *arg {
+        Arg::I32(s) if s.len() == elems => Ok(s),
+        Arg::I32(s) => Err(Error::Shape(format!(
+            "{name}.{label}: {} elements, expected {elems}",
+            s.len()
+        ))),
+        _ => Err(Error::Shape(format!("{name}.{label}: dtype mismatch (I32)"))),
+    }
+}
+
+fn want_scalar(name: &str, label: &str, arg: &Arg<'_>) -> Result<f32> {
+    match *arg {
+        Arg::Scalar(v) => Ok(v),
+        Arg::F32(s) if s.len() == 1 => Ok(s[0]),
+        _ => Err(Error::Shape(format!("{name}.{label}: expected f32 scalar"))),
+    }
+}
+
+fn check_arity(name: &str, args: &[Arg<'_>], expected: usize) -> Result<()> {
+    if args.len() != expected {
+        return Err(Error::Shape(format!(
+            "{name}: {} args, expected {expected}",
+            args.len()
+        )));
+    }
+    Ok(())
+}
+
+fn check_depth(name: &str, d: usize) -> Result<()> {
+    if (1..DEPTH).contains(&d) {
+        Ok(())
+    } else {
+        Err(Error::Manifest(format!(
+            "no artifact '{name}' (depth must be 1..={})",
+            DEPTH - 1
+        )))
+    }
+}
+
+// ---- model math --------------------------------------------------------
+
+/// Copy the 8×8 patch feeding token `t` of sample `s` out of the
+/// row-major `[n, H, W, C]` image tensor (order: y, x, channel).
+fn gather_patch(x: &[f32], s: usize, t: usize, out: &mut [f32; PATCH_ELEMS]) {
+    let (pi, pj) = (t / GRID, t % GRID);
+    let base = s * IMG_ELEMS;
+    let mut k = 0;
+    for py in 0..PATCH {
+        let gy = pi * PATCH + py;
+        let row = base + (gy * IMAGE + pj * PATCH) * CHANNELS;
+        out[k..k + PATCH * CHANNELS].copy_from_slice(&x[row..row + PATCH * CHANNELS]);
+        k += PATCH * CHANNELS;
+    }
+}
+
+/// Patch embedding forward: `[n]` images → `[n*T*D]` token states.
+fn embed_fwd(enc: &[f32], x: &[f32], n: usize, out: &mut Vec<f32>) {
+    let (w, b) = enc[..EMBED_SIZE].split_at(PATCH_ELEMS * DIM);
+    out.clear();
+    out.resize(n * TOKENS * DIM, 0.0);
+    let mut patch = [0.0f32; PATCH_ELEMS];
+    for s in 0..n {
+        for t in 0..TOKENS {
+            gather_patch(x, s, t, &mut patch);
+            let o = &mut out[(s * TOKENS + t) * DIM..][..DIM];
+            o.copy_from_slice(b);
+            for (p, &xv) in patch.iter().enumerate() {
+                let row = &w[p * DIM..][..DIM];
+                for j in 0..DIM {
+                    o[j] += xv * row[j];
+                }
+            }
+        }
+    }
+}
+
+/// Patch embedding backward: accumulate `∂L/∂(W_e, b_e)` into `g_embed`.
+fn embed_bwd(x: &[f32], d_tok: &[f32], n: usize, g_embed: &mut [f32]) {
+    let (gw, gb) = g_embed[..EMBED_SIZE].split_at_mut(PATCH_ELEMS * DIM);
+    let mut patch = [0.0f32; PATCH_ELEMS];
+    for s in 0..n {
+        for t in 0..TOKENS {
+            gather_patch(x, s, t, &mut patch);
+            let d = &d_tok[(s * TOKENS + t) * DIM..][..DIM];
+            for j in 0..DIM {
+                gb[j] += d[j];
+            }
+            for (p, &xv) in patch.iter().enumerate() {
+                let grow = &mut gw[p * DIM..][..DIM];
+                for j in 0..DIM {
+                    grow[j] += xv * d[j];
+                }
+            }
+        }
+    }
+}
+
+/// One residual MLP block forward over `rows = n·T` token rows. Stores the
+/// post-relu hidden activations (needed by the backward pass).
+fn block_fwd(w: &[f32], t_in: &[f32], rows: usize, t_out: &mut Vec<f32>, u_out: &mut Vec<f32>) {
+    let (w1, rest) = w.split_at(DIM * HIDDEN);
+    let (b1, rest) = rest.split_at(HIDDEN);
+    let (w2, b2) = rest.split_at(HIDDEN * DIM);
+    t_out.clear();
+    t_out.resize(rows * DIM, 0.0);
+    u_out.clear();
+    u_out.resize(rows * HIDDEN, 0.0);
+    for r in 0..rows {
+        let ti = &t_in[r * DIM..][..DIM];
+        let u = &mut u_out[r * HIDDEN..][..HIDDEN];
+        u.copy_from_slice(b1);
+        for (i, &tv) in ti.iter().enumerate() {
+            let row = &w1[i * HIDDEN..][..HIDDEN];
+            for h in 0..HIDDEN {
+                u[h] += tv * row[h];
+            }
+        }
+        for v in u.iter_mut() {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+        let to = &mut t_out[r * DIM..][..DIM];
+        for j in 0..DIM {
+            to[j] = ti[j] + b2[j];
+        }
+        for (h, &uv) in u.iter().enumerate() {
+            if uv != 0.0 {
+                let row = &w2[h * DIM..][..DIM];
+                for j in 0..DIM {
+                    to[j] += uv * row[j];
+                }
+            }
+        }
+    }
+}
+
+/// One block backward: given `∂L/∂t_out`, accumulate the block's parameter
+/// gradients into `g_w` (same layout as `w`) and produce `∂L/∂t_in`.
+fn block_bwd(
+    w: &[f32],
+    t_in: &[f32],
+    u: &[f32],
+    d_out: &[f32],
+    rows: usize,
+    g_w: &mut [f32],
+    d_in: &mut Vec<f32>,
+) {
+    let (w1, rest) = w.split_at(DIM * HIDDEN);
+    let (_b1, rest) = rest.split_at(HIDDEN);
+    let (w2, _b2) = rest.split_at(HIDDEN * DIM);
+    let (gw1, grest) = g_w.split_at_mut(DIM * HIDDEN);
+    let (gb1, grest) = grest.split_at_mut(HIDDEN);
+    let (gw2, gb2) = grest.split_at_mut(HIDDEN * DIM);
+    d_in.clear();
+    d_in.resize(rows * DIM, 0.0);
+    let mut da = [0.0f32; HIDDEN];
+    for r in 0..rows {
+        let dy = &d_out[r * DIM..][..DIM];
+        let ur = &u[r * HIDDEN..][..HIDDEN];
+        let ti = &t_in[r * DIM..][..DIM];
+        for j in 0..DIM {
+            gb2[j] += dy[j];
+        }
+        // du = dy·W2ᵀ, masked by relu; W2 grads in the same pass.
+        for (h, &uv) in ur.iter().enumerate() {
+            let row = &w2[h * DIM..][..DIM];
+            let grow = &mut gw2[h * DIM..][..DIM];
+            let mut du = 0.0f32;
+            for j in 0..DIM {
+                du += dy[j] * row[j];
+                grow[j] += uv * dy[j];
+            }
+            da[h] = if uv > 0.0 { du } else { 0.0 };
+        }
+        for h in 0..HIDDEN {
+            gb1[h] += da[h];
+        }
+        let di = &mut d_in[r * DIM..][..DIM];
+        for (i, &tv) in ti.iter().enumerate() {
+            let row = &w1[i * HIDDEN..][..HIDDEN];
+            let grow = &mut gw1[i * HIDDEN..][..HIDDEN];
+            let mut acc = dy[i]; // residual path
+            for h in 0..HIDDEN {
+                acc += da[h] * row[h];
+                grow[h] += tv * da[h];
+            }
+            di[i] = acc;
+        }
+    }
+}
+
+/// Classifier head forward: mean-pool tokens, linear map to logits.
+fn head_fwd(
+    clf: &[f32],
+    classes: usize,
+    tok: &[f32],
+    n: usize,
+    pooled: &mut Vec<f32>,
+    logits: &mut Vec<f32>,
+) {
+    let (w, b) = clf.split_at(DIM * classes);
+    pooled.clear();
+    pooled.resize(n * DIM, 0.0);
+    logits.clear();
+    logits.resize(n * classes, 0.0);
+    let inv = 1.0 / TOKENS as f32;
+    for s in 0..n {
+        let pr = &mut pooled[s * DIM..][..DIM];
+        for t in 0..TOKENS {
+            let tr = &tok[(s * TOKENS + t) * DIM..][..DIM];
+            for j in 0..DIM {
+                pr[j] += tr[j];
+            }
+        }
+        for v in pr.iter_mut() {
+            *v *= inv;
+        }
+        let lo = &mut logits[s * classes..][..classes];
+        lo.copy_from_slice(b);
+        for (i, &pv) in pr.iter().enumerate() {
+            let row = &w[i * classes..][..classes];
+            for k in 0..classes {
+                lo[k] += pv * row[k];
+            }
+        }
+    }
+}
+
+/// Softmax cross-entropy: mean loss over the batch + `∂L/∂logits`.
+fn softmax_xent(logits: &[f32], y: &[i32], classes: usize, n: usize) -> Result<(f32, Vec<f32>)> {
+    let mut d = vec![0.0f32; n * classes];
+    let mut loss = 0.0f32;
+    let inv_n = 1.0 / n as f32;
+    for s in 0..n {
+        let label = y[s];
+        if label < 0 || label as usize >= classes {
+            return Err(Error::Shape(format!(
+                "label {label} out of range for {classes} classes"
+            )));
+        }
+        let row = &logits[s * classes..][..classes];
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut zsum = 0.0f32;
+        let dr = &mut d[s * classes..][..classes];
+        for (k, &v) in row.iter().enumerate() {
+            let e = (v - m).exp();
+            dr[k] = e;
+            zsum += e;
+        }
+        loss += (zsum.ln() + m - row[label as usize]) * inv_n;
+        let inv_z = inv_n / zsum;
+        for v in dr.iter_mut() {
+            *v *= inv_z;
+        }
+        dr[label as usize] -= inv_n;
+    }
+    Ok((loss, d))
+}
+
+/// Classifier head backward: head parameter gradients + `∂L/∂tokens`
+/// (the mean-pool spreads `∂L/∂pooled` uniformly over the tokens).
+fn head_bwd(
+    clf: &[f32],
+    classes: usize,
+    pooled: &[f32],
+    dlogits: &[f32],
+    n: usize,
+    g_clf: &mut [f32],
+    d_tok: &mut Vec<f32>,
+) {
+    let (w, _b) = clf.split_at(DIM * classes);
+    let (gw, gb) = g_clf.split_at_mut(DIM * classes);
+    d_tok.clear();
+    d_tok.resize(n * TOKENS * DIM, 0.0);
+    let inv = 1.0 / TOKENS as f32;
+    for s in 0..n {
+        let dl = &dlogits[s * classes..][..classes];
+        for k in 0..classes {
+            gb[k] += dl[k];
+        }
+        let pr = &pooled[s * DIM..][..DIM];
+        let mut dp = [0.0f32; DIM];
+        for (i, &pv) in pr.iter().enumerate() {
+            let row = &w[i * classes..][..classes];
+            let grow = &mut gw[i * classes..][..classes];
+            let mut acc = 0.0f32;
+            for k in 0..classes {
+                acc += dl[k] * row[k];
+                grow[k] += pv * dl[k];
+            }
+            dp[i] = acc * inv;
+        }
+        for t in 0..TOKENS {
+            d_tok[(s * TOKENS + t) * DIM..][..DIM].copy_from_slice(&dp);
+        }
+    }
+}
+
+/// Activations kept for a backward pass: token states before each block
+/// (`acts[0]` is the block-chain input) plus each block's hidden layer.
+struct FwdState {
+    acts: Vec<Vec<f32>>,
+    hids: Vec<Vec<f32>>,
+}
+
+/// Forward through `nblocks` blocks of `params` (blocks only, starting at
+/// `params[offset]`), from pre-computed token states.
+fn blocks_fwd(params: &[f32], offset: usize, nblocks: usize, t0: Vec<f32>, rows: usize) -> FwdState {
+    let mut acts = Vec::with_capacity(nblocks + 1);
+    let mut hids = Vec::with_capacity(nblocks);
+    acts.push(t0);
+    for l in 0..nblocks {
+        let w = &params[offset + l * BLOCK_SIZE..][..BLOCK_SIZE];
+        let mut t_out = Vec::new();
+        let mut u = Vec::new();
+        block_fwd(w, &acts[l], rows, &mut t_out, &mut u);
+        acts.push(t_out);
+        hids.push(u);
+    }
+    FwdState { acts, hids }
+}
+
+/// Backward through the same blocks; accumulates into `g[offset..]` and
+/// returns `∂L/∂acts[0]`.
+fn blocks_bwd(
+    params: &[f32],
+    offset: usize,
+    nblocks: usize,
+    fwd: &FwdState,
+    d_top: Vec<f32>,
+    rows: usize,
+    g: &mut [f32],
+) -> Vec<f32> {
+    let mut d = d_top;
+    let mut d_next = Vec::new();
+    for l in (0..nblocks).rev() {
+        let w = &params[offset + l * BLOCK_SIZE..][..BLOCK_SIZE];
+        block_bwd(
+            w,
+            &fwd.acts[l],
+            &fwd.hids[l],
+            &d,
+            rows,
+            &mut g[offset + l * BLOCK_SIZE..][..BLOCK_SIZE],
+            &mut d_next,
+        );
+        std::mem::swap(&mut d, &mut d_next);
+    }
+    d
+}
+
+/// Client-side forward: embed + the first `depth` blocks of `enc`.
+fn client_forward(enc: &[f32], x: &[f32], n: usize, depth: usize) -> FwdState {
+    let mut t0 = Vec::new();
+    embed_fwd(enc, x, n, &mut t0);
+    blocks_fwd(enc, EMBED_SIZE, depth, t0, n * TOKENS)
+}
+
+/// Client-side backward from an upstream token gradient; returns the raw
+/// (unclipped) encoder gradient.
+fn client_backward(
+    enc: &[f32],
+    x: &[f32],
+    fwd: &FwdState,
+    d_top: Vec<f32>,
+    n: usize,
+    depth: usize,
+) -> Vec<f32> {
+    let mut g = vec![0.0f32; enc.len()];
+    let d0 = blocks_bwd(enc, EMBED_SIZE, depth, fwd, d_top, n * TOKENS, &mut g);
+    embed_bwd(x, &d0, n, &mut g);
+    g
+}
+
+// ---- op implementations ------------------------------------------------
+
+impl NativeBackend {
+    fn op_client_local(
+        &self,
+        name: &str,
+        d: usize,
+        c: usize,
+        args: &[Arg<'_>],
+    ) -> Result<Vec<Vec<f32>>> {
+        check_arity(name, args, 4)?;
+        let enc_len = self.model.enc_size(d);
+        let enc = want_f32(name, "enc", &args[0], enc_len)?;
+        let clf = want_f32(name, "clf", &args[1], Self::clf_size(c))?;
+        let x = want_f32(name, "x", &args[2], BATCH * IMG_ELEMS)?;
+        let y = want_i32(name, "y", &args[3], BATCH)?;
+
+        let fwd = client_forward(enc, x, BATCH, d);
+        let z = fwd.acts[d].clone();
+        let (mut pooled, mut logits) = (Vec::new(), Vec::new());
+        head_fwd(clf, c, &fwd.acts[d], BATCH, &mut pooled, &mut logits);
+        let (loss, dlog) = softmax_xent(&logits, y, c, BATCH)?;
+        let mut g_clf = vec![0.0f32; clf.len()];
+        let mut d_tok = Vec::new();
+        head_bwd(clf, c, &pooled, &dlog, BATCH, &mut g_clf, &mut d_tok);
+        let mut g_enc = client_backward(enc, x, &fwd, d_tok, BATCH, d);
+        math::clip_l2(&mut g_enc, TAU);
+        Ok(vec![z, vec![loss], g_enc, g_clf])
+    }
+
+    fn op_client_fwd(&self, name: &str, d: usize, args: &[Arg<'_>]) -> Result<Vec<Vec<f32>>> {
+        check_arity(name, args, 2)?;
+        let enc = want_f32(name, "enc", &args[0], self.model.enc_size(d))?;
+        let x = want_f32(name, "x", &args[1], BATCH * IMG_ELEMS)?;
+        let mut fwd = client_forward(enc, x, BATCH, d);
+        Ok(vec![fwd.acts.pop().expect("depth >= 1")])
+    }
+
+    fn op_client_bwd(&self, name: &str, d: usize, args: &[Arg<'_>]) -> Result<Vec<Vec<f32>>> {
+        check_arity(name, args, 3)?;
+        let enc = want_f32(name, "enc", &args[0], self.model.enc_size(d))?;
+        let x = want_f32(name, "x", &args[1], BATCH * IMG_ELEMS)?;
+        let g_z = want_f32(name, "g_z", &args[2], BATCH * TOKENS * DIM)?;
+        let fwd = client_forward(enc, x, BATCH, d);
+        let mut g_enc = client_backward(enc, x, &fwd, g_z.to_vec(), BATCH, d);
+        math::clip_l2(&mut g_enc, TAU);
+        Ok(vec![g_enc])
+    }
+
+    fn op_server_step(
+        &self,
+        name: &str,
+        d: usize,
+        c: usize,
+        args: &[Arg<'_>],
+    ) -> Result<Vec<Vec<f32>>> {
+        check_arity(name, args, 4)?;
+        let nblocks = DEPTH - d;
+        let srv = want_f32(name, "srv", &args[0], nblocks * BLOCK_SIZE)?;
+        let clf_s = want_f32(name, "clf_s", &args[1], Self::clf_size(c))?;
+        let z = want_f32(name, "z", &args[2], BATCH * TOKENS * DIM)?;
+        let y = want_i32(name, "y", &args[3], BATCH)?;
+
+        let fwd = blocks_fwd(srv, 0, nblocks, z.to_vec(), BATCH * TOKENS);
+        let (mut pooled, mut logits) = (Vec::new(), Vec::new());
+        head_fwd(clf_s, c, &fwd.acts[nblocks], BATCH, &mut pooled, &mut logits);
+        let (loss, dlog) = softmax_xent(&logits, y, c, BATCH)?;
+        let mut g_clf = vec![0.0f32; clf_s.len()];
+        let mut d_tok = Vec::new();
+        head_bwd(clf_s, c, &pooled, &dlog, BATCH, &mut g_clf, &mut d_tok);
+        let mut g_srv = vec![0.0f32; srv.len()];
+        let g_z = blocks_bwd(srv, 0, nblocks, &fwd, d_tok, BATCH * TOKENS, &mut g_srv);
+        Ok(vec![vec![loss], g_srv, g_clf, g_z])
+    }
+
+    fn op_tpgf_update(&self, name: &str, d: usize, args: &[Arg<'_>]) -> Result<Vec<Vec<f32>>> {
+        check_arity(name, args, 6)?;
+        let n = self.model.enc_size(d);
+        let theta = want_f32(name, "theta", &args[0], n)?;
+        let g_c = want_f32(name, "g_client", &args[1], n)?;
+        let g_s = want_f32(name, "g_server", &args[2], n)?;
+        let l_c = want_scalar(name, "l_client", &args[3])?;
+        let l_s = want_scalar(name, "l_server", &args[4])?;
+        let lr = want_scalar(name, "lr", &args[5])?;
+        let mut out = theta.to_vec();
+        // Eq. 3 Full mode, identical math to the Rust fuse path — the two
+        // executors are interchangeable by construction.
+        tpgf::fuse_update(
+            &mut out,
+            g_c,
+            g_s,
+            l_c as f64,
+            l_s as f64,
+            d,
+            DEPTH - d,
+            lr as f64,
+            TpgfMode::Full,
+        );
+        Ok(vec![out])
+    }
+
+    fn op_eval(&self, name: &str, c: usize, args: &[Arg<'_>]) -> Result<Vec<Vec<f32>>> {
+        check_arity(name, args, 3)?;
+        let enc = want_f32(name, "enc_full", &args[0], self.model.enc_full_size)?;
+        let clf_s = want_f32(name, "clf_s", &args[1], Self::clf_size(c))?;
+        let x = want_f32(name, "x", &args[2], EVAL_BATCH * IMG_ELEMS)?;
+        let fwd = client_forward(enc, x, EVAL_BATCH, DEPTH);
+        let (mut pooled, mut logits) = (Vec::new(), Vec::new());
+        head_fwd(clf_s, c, &fwd.acts[DEPTH], EVAL_BATCH, &mut pooled, &mut logits);
+        Ok(vec![logits])
+    }
+}
+
+// ---- deterministic init -------------------------------------------------
+
+fn tag_rng(tag: &str) -> Pcg32 {
+    // FNV-1a over the tag bytes keys the stream; every tag gets its own
+    // reproducible sequence.
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in tag.as_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    Pcg32::new(INIT_SEED ^ h, 0x1417)
+}
+
+/// Xavier-uniform fill for a `fan_in × fan_out` matrix.
+fn fill_xavier(rng: &mut Pcg32, out: &mut [f32], fan_in: usize, fan_out: usize) {
+    let s = (6.0 / (fan_in + fan_out) as f64).sqrt();
+    for v in out.iter_mut() {
+        *v = rng.uniform_range(-s, s) as f32;
+    }
+}
+
+fn init_encoder(tag: &str) -> Vec<f32> {
+    let mut rng = tag_rng(tag);
+    let mut enc = vec![0.0f32; EMBED_SIZE + DEPTH * BLOCK_SIZE];
+    fill_xavier(&mut rng, &mut enc[..PATCH_ELEMS * DIM], PATCH_ELEMS, DIM);
+    // Biases stay zero (the slice is already zeroed).
+    for l in 0..DEPTH {
+        let base = EMBED_SIZE + l * BLOCK_SIZE;
+        fill_xavier(&mut rng, &mut enc[base..base + DIM * HIDDEN], DIM, HIDDEN);
+        let w2 = base + DIM * HIDDEN + HIDDEN;
+        fill_xavier(&mut rng, &mut enc[w2..w2 + HIDDEN * DIM], HIDDEN, DIM);
+    }
+    enc
+}
+
+fn init_classifier(tag: &str, classes: usize) -> Vec<f32> {
+    let mut rng = tag_rng(tag);
+    let mut clf = vec![0.0f32; DIM * classes + classes];
+    fill_xavier(&mut rng, &mut clf[..DIM * classes], DIM, classes);
+    clf
+}
+
+// ---- the Backend impl ---------------------------------------------------
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn model(&self) -> &ModelInfo {
+        &self.model
+    }
+
+    fn clf_client_size(&self, classes: usize) -> Result<usize> {
+        self.check_classes(classes)?;
+        Ok(Self::clf_size(classes))
+    }
+
+    fn clf_server_size(&self, classes: usize) -> Result<usize> {
+        self.check_classes(classes)?;
+        Ok(Self::clf_size(classes))
+    }
+
+    fn load_init(&self, tag: &str) -> Result<Vec<f32>> {
+        if let Some(c) = tag.strip_prefix("init_enc_c") {
+            let c: usize = c.parse().map_err(|_| bad_tag(tag))?;
+            self.check_classes(c)?;
+            return Ok(init_encoder(tag));
+        }
+        for prefix in ["init_clf_client_c", "init_clf_s_c"] {
+            if let Some(c) = tag.strip_prefix(prefix) {
+                let c: usize = c.parse().map_err(|_| bad_tag(tag))?;
+                self.check_classes(c)?;
+                return Ok(init_classifier(tag, c));
+            }
+        }
+        Err(bad_tag(tag))
+    }
+
+    fn artifact_names(&self) -> Vec<String> {
+        let mut names = Vec::new();
+        for &c in &self.model.classes_variants {
+            for d in 1..DEPTH {
+                names.push(format!("client_local_d{d}_c{c}"));
+                names.push(format!("server_step_d{d}_c{c}"));
+            }
+            names.push(format!("eval_c{c}"));
+        }
+        for d in 1..DEPTH {
+            names.push(format!("client_fwd_d{d}"));
+            names.push(format!("client_bwd_d{d}"));
+            names.push(format!("tpgf_update_d{d}"));
+        }
+        names.sort();
+        names
+    }
+
+    fn stats(&self) -> RuntimeStats {
+        self.stats.lock().expect("stats lock").clone()
+    }
+
+    fn exec(&self, name: &str, args: &[Arg<'_>]) -> Result<Vec<Vec<f32>>> {
+        let op = parse_name(name).ok_or_else(|| Error::Manifest(format!("no artifact '{name}'")))?;
+        let t0 = std::time::Instant::now();
+        let out = match op {
+            Op::ClientLocal { d, c } => {
+                check_depth(name, d)?;
+                self.check_classes(c)?;
+                self.op_client_local(name, d, c, args)
+            }
+            Op::ClientFwd { d } => {
+                check_depth(name, d)?;
+                self.op_client_fwd(name, d, args)
+            }
+            Op::ClientBwd { d } => {
+                check_depth(name, d)?;
+                self.op_client_bwd(name, d, args)
+            }
+            Op::ServerStep { d, c } => {
+                check_depth(name, d)?;
+                self.check_classes(c)?;
+                self.op_server_step(name, d, c, args)
+            }
+            Op::TpgfUpdate { d } => {
+                check_depth(name, d)?;
+                self.op_tpgf_update(name, d, args)
+            }
+            Op::Eval { c } => {
+                self.check_classes(c)?;
+                self.op_eval(name, c, args)
+            }
+        }?;
+        let dt = t0.elapsed().as_secs_f64();
+        let mut st = self.stats.lock().expect("stats lock");
+        st.executions += 1;
+        st.exec_time_s += dt;
+        Ok(out)
+    }
+}
+
+fn bad_tag(tag: &str) -> Error {
+    Error::Manifest(format!("no init blob '{tag}'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn be() -> NativeBackend {
+        NativeBackend::new()
+    }
+
+    fn sample_batch(n: usize, classes: usize, seed: u64) -> (Vec<f32>, Vec<i32>) {
+        let mut rng = Pcg32::seeded(seed);
+        let x: Vec<f32> = (0..n * IMG_ELEMS).map(|_| rng.normal() as f32).collect();
+        let y: Vec<i32> = (0..n).map(|i| (i % classes) as i32).collect();
+        (x, y)
+    }
+
+    #[test]
+    fn geometry_is_self_consistent() {
+        let b = be();
+        let m = b.model();
+        assert_eq!(m.enc_layer_sizes.len(), m.depth);
+        assert_eq!(m.enc_layer_sizes.iter().sum::<usize>(), m.enc_full_size);
+        for d in 1..m.depth {
+            assert_eq!(m.enc_size(d) + m.srv_size(d), m.enc_full_size);
+        }
+        assert_eq!(m.smashed_elems(), BATCH * TOKENS * DIM);
+    }
+
+    #[test]
+    fn init_blobs_deterministic_and_sized() {
+        let b = be();
+        let enc = b.load_init("init_enc_c10").unwrap();
+        assert_eq!(enc.len(), b.model().enc_full_size);
+        assert!(enc.iter().all(|v| v.is_finite()));
+        assert_eq!(enc, b.load_init("init_enc_c10").unwrap());
+        let clf = b.load_init("init_clf_client_c10").unwrap();
+        assert_eq!(clf.len(), NativeBackend::clf_size(10));
+        // Distinct tags draw distinct streams.
+        let clf_s = b.load_init("init_clf_s_c10").unwrap();
+        assert!(math::max_abs_diff(&clf, &clf_s) > 0.0);
+        assert!(b.load_init("init_enc_c7").is_err());
+        assert!(b.load_init("bogus").is_err());
+    }
+
+    #[test]
+    fn ops_produce_expected_shapes_and_finite_values() {
+        let b = be();
+        let m = b.model().clone();
+        let enc = b.load_init("init_enc_c10").unwrap();
+        let clf = b.load_init("init_clf_client_c10").unwrap();
+        let clf_s = b.load_init("init_clf_s_c10").unwrap();
+        let (x, y) = sample_batch(BATCH, 10, 1);
+        for d in [1usize, 4, 7] {
+            let out = b
+                .exec(
+                    &format!("client_local_d{d}_c10"),
+                    &[
+                        Arg::F32(&enc[..m.enc_size(d)]),
+                        Arg::F32(&clf),
+                        Arg::F32(&x),
+                        Arg::I32(&y),
+                    ],
+                )
+                .unwrap();
+            assert_eq!(out[0].len(), m.smashed_elems());
+            assert_eq!(out[1].len(), 1);
+            assert!(out[1][0] > 0.0 && out[1][0].is_finite());
+            assert_eq!(out[2].len(), m.enc_size(d));
+            assert_eq!(out[3].len(), clf.len());
+            assert!(out.iter().flatten().all(|v| v.is_finite()));
+
+            let srv = b
+                .exec(
+                    &format!("server_step_d{d}_c10"),
+                    &[
+                        Arg::F32(&enc[m.enc_size(d)..]),
+                        Arg::F32(&clf_s),
+                        Arg::F32(&out[0]),
+                        Arg::I32(&y),
+                    ],
+                )
+                .unwrap();
+            assert_eq!(srv[1].len(), m.srv_size(d));
+            assert_eq!(srv[3].len(), m.smashed_elems());
+        }
+        let (xe, _) = sample_batch(EVAL_BATCH, 10, 2);
+        let logits = b
+            .exec(
+                "eval_c10",
+                &[Arg::F32(&enc), Arg::F32(&clf_s), Arg::F32(&xe)],
+            )
+            .unwrap();
+        assert_eq!(logits[0].len(), EVAL_BATCH * 10);
+    }
+
+    #[test]
+    fn exec_rejects_unknown_names_bad_arity_and_shapes() {
+        let b = be();
+        assert!(b.exec("nope", &[]).is_err());
+        assert!(b.exec("client_fwd_d0", &[]).is_err());
+        assert!(b.exec("client_fwd_d9", &[]).is_err());
+        assert!(b.exec("client_local_d3_c17", &[]).is_err());
+        let enc = vec![0.0f32; b.model().enc_size(1)];
+        assert!(matches!(
+            b.exec("client_fwd_d1", &[Arg::F32(&enc)]),
+            Err(Error::Shape(_))
+        ));
+        let bad_x = vec![0.0f32; 7];
+        assert!(matches!(
+            b.exec("client_fwd_d1", &[Arg::F32(&enc), Arg::F32(&bad_x)]),
+            Err(Error::Shape(_))
+        ));
+    }
+
+    #[test]
+    fn ops_are_bitwise_deterministic() {
+        let b = be();
+        let m = b.model().clone();
+        let enc = b.load_init("init_enc_c10").unwrap();
+        let clf = b.load_init("init_clf_client_c10").unwrap();
+        let (x, y) = sample_batch(BATCH, 10, 3);
+        let run = || {
+            b.exec(
+                "client_local_d3_c10",
+                &[
+                    Arg::F32(&enc[..m.enc_size(3)]),
+                    Arg::F32(&clf),
+                    Arg::F32(&x),
+                    Arg::I32(&y),
+                ],
+            )
+            .unwrap()
+        };
+        let (a, c) = (run(), run());
+        for (va, vc) in a.iter().flatten().zip(c.iter().flatten()) {
+            assert_eq!(va.to_bits(), vc.to_bits());
+        }
+    }
+
+    #[test]
+    fn client_gradients_are_tau_clipped() {
+        let b = be();
+        let m = b.model().clone();
+        // Scaled-up inputs force a large raw gradient so the clip engages.
+        let enc: Vec<f32> = b
+            .load_init("init_enc_c10")
+            .unwrap()
+            .iter()
+            .map(|v| v * 3.0)
+            .collect();
+        let clf: Vec<f32> = b
+            .load_init("init_clf_client_c10")
+            .unwrap()
+            .iter()
+            .map(|v| v * 5.0)
+            .collect();
+        let (x, y) = sample_batch(BATCH, 10, 4);
+        let x: Vec<f32> = x.iter().map(|v| v * 4.0).collect();
+        for d in [1usize, 4, 7] {
+            let out = b
+                .exec(
+                    &format!("client_local_d{d}_c10"),
+                    &[
+                        Arg::F32(&enc[..m.enc_size(d)]),
+                        Arg::F32(&clf),
+                        Arg::F32(&x),
+                        Arg::I32(&y),
+                    ],
+                )
+                .unwrap();
+            assert!(math::l2_norm(&out[2]) <= TAU + 1e-4);
+        }
+    }
+
+    /// Central-difference gradient check of the full backprop chain: the
+    /// server step's parameter and smashed-data gradients must match the
+    /// numerical derivative of its loss output.
+    #[test]
+    fn server_step_gradients_match_central_differences() {
+        let b = be();
+        let m = b.model().clone();
+        let d = 5;
+        let enc = b.load_init("init_enc_c10").unwrap();
+        let clf_s = b.load_init("init_clf_s_c10").unwrap();
+        let (x, y) = sample_batch(BATCH, 10, 5);
+        let z = b
+            .exec(
+                &format!("client_fwd_d{d}"),
+                &[Arg::F32(&enc[..m.enc_size(d)]), Arg::F32(&x)],
+            )
+            .unwrap()
+            .remove(0);
+        let srv = enc[m.enc_size(d)..].to_vec();
+
+        let loss_of = |srv: &[f32], clf: &[f32], z: &[f32]| -> f64 {
+            b.exec(
+                &format!("server_step_d{d}_c10"),
+                &[Arg::F32(srv), Arg::F32(clf), Arg::F32(z), Arg::I32(&y)],
+            )
+            .unwrap()[0][0] as f64
+        };
+        let out = b
+            .exec(
+                &format!("server_step_d{d}_c10"),
+                &[Arg::F32(&srv), Arg::F32(&clf_s), Arg::F32(&z), Arg::I32(&y)],
+            )
+            .unwrap();
+        let (g_srv, g_clf, g_z) = (&out[1], &out[2], &out[3]);
+
+        // Check the largest-magnitude coordinates of each gradient: their
+        // central differences rise well above f32 loss-rounding noise.
+        fn top_idx(v: &[f32], k: usize) -> Vec<usize> {
+            let mut idx: Vec<usize> = (0..v.len()).collect();
+            idx.sort_by(|&a, &b| v[b].abs().partial_cmp(&v[a].abs()).unwrap());
+            idx.truncate(k);
+            idx
+        }
+        let eps = 1e-3f32;
+        let mut checked = 0;
+        let mut check = |analytic: f32, numeric: f64| {
+            let a = analytic as f64;
+            let denom = a.abs().max(numeric.abs()).max(1e-3);
+            assert!(
+                (a - numeric).abs() / denom < 0.08,
+                "grad mismatch: analytic {a}, numeric {numeric}"
+            );
+            checked += 1;
+        };
+        for i in top_idx(g_srv, 3) {
+            let mut p = srv.clone();
+            p[i] += eps;
+            let up = loss_of(&p, &clf_s, &z);
+            p[i] -= 2.0 * eps;
+            let dn = loss_of(&p, &clf_s, &z);
+            check(g_srv[i], (up - dn) / (2.0 * eps as f64));
+        }
+        for i in top_idx(g_clf, 2) {
+            let mut p = clf_s.clone();
+            p[i] += eps;
+            let up = loss_of(&srv, &p, &z);
+            p[i] -= 2.0 * eps;
+            let dn = loss_of(&srv, &p, &z);
+            check(g_clf[i], (up - dn) / (2.0 * eps as f64));
+        }
+        for i in top_idx(g_z, 2) {
+            let mut p = z.clone();
+            p[i] += eps;
+            let up = loss_of(&srv, &clf_s, &p);
+            p[i] -= 2.0 * eps;
+            let dn = loss_of(&srv, &clf_s, &p);
+            check(g_z[i], (up - dn) / (2.0 * eps as f64));
+        }
+        assert_eq!(checked, 7);
+    }
+
+    #[test]
+    fn repeated_local_steps_reduce_loss() {
+        // The fault-tolerant fallback path must actually learn: repeated
+        // client_local + SGD on a fixed batch drives the local loss down.
+        let b = be();
+        let m = b.model().clone();
+        let d = 3;
+        let mut enc = b.load_init("init_enc_c10").unwrap()[..m.enc_size(d)].to_vec();
+        let mut clf = b.load_init("init_clf_client_c10").unwrap();
+        let (x, y) = sample_batch(BATCH, 10, 6);
+        let mut losses = Vec::new();
+        for _ in 0..12 {
+            let out = b
+                .exec(
+                    "client_local_d3_c10",
+                    &[Arg::F32(&enc), Arg::F32(&clf), Arg::F32(&x), Arg::I32(&y)],
+                )
+                .unwrap();
+            losses.push(out[1][0]);
+            math::sgd_step(&mut enc, &out[2], 0.2);
+            math::sgd_step(&mut clf, &out[3], 0.2);
+        }
+        assert!(
+            losses.last().unwrap() < losses.first().unwrap(),
+            "{losses:?}"
+        );
+    }
+}

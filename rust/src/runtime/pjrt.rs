@@ -1,0 +1,249 @@
+//! The PJRT artifact backend: load AOT artifacts, compile once, execute
+//! on the hot path.
+//!
+//! At construction the backend loads `artifacts/manifest.json`; each
+//! artifact's HLO text is parsed and compiled by the PJRT CPU client
+//! **lazily on first use** and cached for the rest of the process.
+//! Execution marshals flat `f32`/`i32` slices into `xla::Literal`s with
+//! the manifest shapes and unpacks the returned tuple back into
+//! `Vec<f32>` buffers.
+//!
+//! The backend is `Sync`: the compile cache, stats and marshal-scratch
+//! pool sit behind mutexes so the parallel round engine can dispatch
+//! artifact executions from many worker threads at once. Locks are only
+//! held for cache lookups and counter bumps — never across an execution.
+//! Marshalling reuses pooled scratch buffers (the literal container and
+//! the dims vector) instead of fresh allocations per call.
+//!
+//! Python never runs here — the binary is self-contained given the
+//! `artifacts/` directory.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use super::manifest::{Dtype, Manifest, ModelInfo, TensorSpec};
+use super::{Arg, Backend, RuntimeStats};
+use crate::{Error, Result};
+
+/// Reusable marshalling buffers. Pooled on the backend so the per-call
+/// literal container and dims vector keep their capacity across the
+/// millions of executions a large-fleet run performs.
+#[derive(Default)]
+struct MarshalScratch {
+    literals: Vec<xla::Literal>,
+    dims: Vec<i64>,
+}
+
+/// The artifact registry + PJRT client. One per process, shared across
+/// the round engine's worker threads.
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+    stats: Mutex<RuntimeStats>,
+    scratch: Mutex<Vec<MarshalScratch>>,
+}
+
+impl PjrtBackend {
+    /// Load the manifest and create the PJRT CPU client.
+    pub fn load(artifacts_dir: &Path) -> Result<PjrtBackend> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(PjrtBackend {
+            client,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+            stats: Mutex::new(RuntimeStats::default()),
+            scratch: Mutex::new(Vec::new()),
+        })
+    }
+
+    /// Compile (or fetch from cache) an artifact's executable. The lock is
+    /// not held across compilation, so two threads racing on first use may
+    /// both compile; the first insert wins and the duplicate is dropped
+    /// (correctness is unaffected — compilation is pure).
+    fn ensure_compiled(&self, name: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().expect("cache lock").get(name) {
+            return Ok(exe.clone());
+        }
+        let spec = self.manifest.artifact(name)?;
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            spec.file
+                .to_str()
+                .ok_or_else(|| Error::Manifest("non-utf8 path".into()))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let dt = t0.elapsed().as_secs_f64();
+        {
+            let mut st = self.stats.lock().expect("stats lock");
+            st.compile_count += 1;
+            st.compile_time_s += dt;
+        }
+        let mut cache = self.cache.lock().expect("cache lock");
+        let entry = cache
+            .entry(name.to_string())
+            .or_insert_with(|| Arc::new(exe));
+        Ok(entry.clone())
+    }
+
+    fn exec_with_scratch(
+        &self,
+        name: &str,
+        args: &[Arg<'_>],
+        scratch: &mut MarshalScratch,
+    ) -> Result<Vec<Vec<f32>>> {
+        let exe = self.ensure_compiled(name)?;
+        let spec = self.manifest.artifact(name)?;
+        if args.len() != spec.inputs.len() {
+            return Err(Error::Shape(format!(
+                "{name}: {} args, expected {}",
+                args.len(),
+                spec.inputs.len()
+            )));
+        }
+
+        let t0 = std::time::Instant::now();
+        scratch.literals.clear();
+        for (arg, input) in args.iter().zip(spec.inputs.iter()) {
+            if arg.elems() != input.elems() {
+                return Err(Error::Shape(format!(
+                    "{name}.{}: {} elements, expected {} (shape {:?})",
+                    input.name,
+                    arg.elems(),
+                    input.elems(),
+                    input.shape
+                )));
+            }
+            let lit = make_literal(arg, input, &mut scratch.dims)?;
+            scratch.literals.push(lit);
+        }
+        let marshal = t0.elapsed().as_secs_f64();
+
+        let t1 = std::time::Instant::now();
+        let result = exe.execute::<xla::Literal>(&scratch.literals)?[0][0].to_literal_sync()?;
+        let exec = t1.elapsed().as_secs_f64();
+
+        let t2 = std::time::Instant::now();
+        // aot.py lowers with return_tuple=True: unpack the tuple.
+        let parts = result.to_tuple()?;
+        if parts.len() != spec.outputs.len() {
+            return Err(Error::Shape(format!(
+                "{name}: {} outputs, expected {}",
+                parts.len(),
+                spec.outputs.len()
+            )));
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (lit, ospec) in parts.into_iter().zip(spec.outputs.iter()) {
+            let v = lit.to_vec::<f32>()?;
+            if v.len() != ospec.elems() {
+                return Err(Error::Shape(format!(
+                    "{name}.{}: got {} elements, expected {}",
+                    ospec.name,
+                    v.len(),
+                    ospec.elems()
+                )));
+            }
+            out.push(v);
+        }
+        let unmarshal = t2.elapsed().as_secs_f64();
+
+        let mut st = self.stats.lock().expect("stats lock");
+        st.executions += 1;
+        st.exec_time_s += exec;
+        st.marshal_time_s += marshal + unmarshal;
+        Ok(out)
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn model(&self) -> &ModelInfo {
+        &self.manifest.model
+    }
+
+    fn clf_client_size(&self, classes: usize) -> Result<usize> {
+        self.manifest.clf_client_size(classes)
+    }
+
+    fn clf_server_size(&self, classes: usize) -> Result<usize> {
+        self.manifest.clf_server_size(classes)
+    }
+
+    fn load_init(&self, tag: &str) -> Result<Vec<f32>> {
+        self.manifest.load_init(tag)
+    }
+
+    fn artifact_names(&self) -> Vec<String> {
+        self.manifest
+            .artifact_names()
+            .into_iter()
+            .map(|s| s.to_string())
+            .collect()
+    }
+
+    fn stats(&self) -> RuntimeStats {
+        self.stats.lock().expect("stats lock").clone()
+    }
+
+    fn warm_up(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.ensure_compiled(n)?;
+        }
+        Ok(())
+    }
+
+    /// Execute an artifact. Inputs are validated against the manifest
+    /// signature; outputs come back as flat `Vec<f32>` in manifest order.
+    ///
+    /// Thread-safe: the executable handle is cloned out of the cache and
+    /// no lock is held during execution, so independent client branches
+    /// dispatch concurrently.
+    fn exec(&self, name: &str, args: &[Arg<'_>]) -> Result<Vec<Vec<f32>>> {
+        let mut scratch = self
+            .scratch
+            .lock()
+            .expect("scratch lock")
+            .pop()
+            .unwrap_or_default();
+        let out = self.exec_with_scratch(name, args, &mut scratch);
+        // Return the scratch buffers to the pool on every path (keeps
+        // their capacity warm even across error returns).
+        scratch.literals.clear();
+        self.scratch.lock().expect("scratch lock").push(scratch);
+        out
+    }
+}
+
+fn make_literal(arg: &Arg<'_>, spec: &TensorSpec, dims: &mut Vec<i64>) -> Result<xla::Literal> {
+    dims.clear();
+    dims.extend(spec.shape.iter().map(|&d| d as i64));
+    let lit = match (arg, spec.dtype) {
+        (Arg::Scalar(v), Dtype::F32) => xla::Literal::scalar(*v),
+        (Arg::F32(s), Dtype::F32) => {
+            let l = xla::Literal::vec1(s);
+            if dims.is_empty() {
+                l.reshape(&[])?
+            } else {
+                l.reshape(dims)?
+            }
+        }
+        (Arg::I32(s), Dtype::I32) => {
+            let l = xla::Literal::vec1(s);
+            l.reshape(dims)?
+        }
+        _ => {
+            return Err(Error::Shape(format!(
+                "{}: dtype mismatch ({:?})",
+                spec.name, spec.dtype
+            )))
+        }
+    };
+    Ok(lit)
+}

@@ -28,8 +28,8 @@ pub struct ServerState {
 impl ServerState {
     /// Initialize from the deterministic `init_*.bin` blobs.
     pub fn new(rt: &Runtime, classes: usize, lr: f32) -> Result<ServerState> {
-        let enc = rt.manifest.load_init(&format!("init_enc_c{classes}"))?;
-        let clf_s = rt.manifest.load_init(&format!("init_clf_s_c{classes}"))?;
+        let enc = rt.load_init(&format!("init_enc_c{classes}"))?;
+        let clf_s = rt.load_init(&format!("init_clf_s_c{classes}"))?;
         Ok(ServerState {
             enc,
             clf_s,
@@ -135,14 +135,14 @@ mod tests {
     use super::*;
     use std::path::PathBuf;
 
-    fn runtime() -> Option<Runtime> {
+    fn runtime() -> Runtime {
         let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
         Runtime::load_if_available(&dir)
     }
 
     #[test]
     fn prefix_suffix_partition_encoder() {
-        let Some(rt) = runtime() else { return };
+        let rt = runtime();
         let s = ServerState::new(&rt, 10, 0.05).unwrap();
         for d in 1..rt.model().depth {
             assert_eq!(s.prefix(d).len() + s.suffix(d).len(), s.enc.len());
@@ -151,7 +151,7 @@ mod tests {
 
     #[test]
     fn process_updates_only_suffix() {
-        let Some(rt) = runtime() else { return };
+        let rt = runtime();
         let m = rt.model().clone();
         let mut s = ServerState::new(&rt, 10, 0.05).unwrap();
         let before = s.enc.clone();
@@ -171,7 +171,7 @@ mod tests {
 
     #[test]
     fn evaluate_on_random_data_near_chance() {
-        let Some(rt) = runtime() else { return };
+        let rt = runtime();
         use crate::data::{Dataset, SyntheticSpec};
         use crate::util::rng::Pcg32;
         let s = ServerState::new(&rt, 10, 0.05).unwrap();

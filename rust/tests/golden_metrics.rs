@@ -1,0 +1,140 @@
+//! Golden-metrics snapshot: a fixed-seed 3-round, 8-client SSFL run on
+//! the native backend, serialized through `RunMetrics::to_json` and
+//! compared field-by-field against a checked-in golden file. Catches
+//! silent numeric drift anywhere in the pipeline — data generation,
+//! model math, network/energy accounting, aggregation.
+//!
+//! Bless workflow:
+//! * `SUPERSFL_BLESS=1 cargo test --test golden_metrics` rewrites the
+//!   golden file from the current run.
+//! * If the golden file does not exist yet, the test writes it and
+//!   passes with a loud note to commit it (this container has no Rust
+//!   toolchain, so the file is born on the first toolchain-equipped run;
+//!   CI runs the test twice in separate processes, so run 2 compares
+//!   against run 1's bless even before the file is committed).
+
+use std::path::PathBuf;
+
+use supersfl::config::ExperimentConfig;
+use supersfl::orchestrator::run_experiment;
+use supersfl::runtime::Runtime;
+use supersfl::util::json::{self, JsonValue};
+
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests")
+        .join("golden")
+        .join("native_ssfl_3r8c.json")
+}
+
+fn golden_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default()
+        .with_name("golden_native")
+        .with_clients(8)
+        .with_rounds(3)
+        .with_seed(7)
+        .with_threads(2);
+    cfg.data.train_per_class = 20;
+    cfg.data.test_total = 200;
+    cfg.train.local_steps = 1;
+    cfg.train.eval_samples = 100;
+    cfg
+}
+
+/// Recursive comparison: numbers to 1e-9 relative tolerance (bitwise
+/// reproducibility is the expectation; the slack only absorbs decimal
+/// printing), everything else exact. `host_wall_s` is wall-clock and
+/// excluded.
+fn assert_json_eq(path: &str, golden: &JsonValue, got: &JsonValue, diffs: &mut Vec<String>) {
+    match (golden, got) {
+        (JsonValue::Number(a), JsonValue::Number(b)) => {
+            let tol = 1e-9 * a.abs().max(b.abs()).max(1.0);
+            if (a - b).abs() > tol {
+                diffs.push(format!("{path}: golden {a} vs got {b}"));
+            }
+        }
+        (JsonValue::Object(ga), JsonValue::Object(gb)) => {
+            for (k, va) in ga {
+                if k == "host_wall_s" {
+                    continue;
+                }
+                match gb.iter().find(|(kb, _)| kb == k) {
+                    Some((_, vb)) => assert_json_eq(&format!("{path}.{k}"), va, vb, diffs),
+                    None => diffs.push(format!("{path}.{k}: missing in current output")),
+                }
+            }
+            // Symmetric check: fields the current output has but the
+            // golden lacks mean the golden is stale (or truncated) and no
+            // longer pins them — that must fail too.
+            for (k, _) in gb {
+                if k != "host_wall_s" && !ga.iter().any(|(ka, _)| ka == k) {
+                    diffs.push(format!("{path}.{k}: present in output but not in golden"));
+                }
+            }
+        }
+        (JsonValue::Array(aa), JsonValue::Array(ab)) => {
+            if aa.len() != ab.len() {
+                diffs.push(format!("{path}: golden len {} vs got {}", aa.len(), ab.len()));
+                return;
+            }
+            for (i, (va, vb)) in aa.iter().zip(ab.iter()).enumerate() {
+                assert_json_eq(&format!("{path}[{i}]"), va, vb, diffs);
+            }
+        }
+        (a, b) => {
+            if a != b {
+                diffs.push(format!("{path}: golden {a:?} vs got {b:?}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn native_run_matches_golden_snapshot() {
+    let rt = Runtime::native();
+    let res = run_experiment(&rt, &golden_cfg()).unwrap();
+    assert_eq!(res.metrics.rounds.len(), 3);
+    let got = res.metrics.to_json();
+
+    let path = golden_path();
+    let bless = std::env::var("SUPERSFL_BLESS").ok().as_deref() == Some("1");
+    if bless || !path.exists() {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, got.to_string_pretty()).unwrap();
+        if !bless {
+            eprintln!(
+                "golden_metrics: golden file did not exist — wrote {} from this run; \
+                 commit it to pin the trajectory",
+                path.display()
+            );
+        }
+        return;
+    }
+
+    let golden = json::parse_file(&path).unwrap();
+    let mut diffs = Vec::new();
+    assert_json_eq("metrics", &golden, &got, &mut diffs);
+    assert!(
+        diffs.is_empty(),
+        "numeric drift against {} ({} fields):\n  {}\n(re-bless with SUPERSFL_BLESS=1 \
+         if the change is intentional)",
+        path.display(),
+        diffs.len(),
+        diffs.join("\n  ")
+    );
+}
+
+#[test]
+fn golden_run_is_reproducible_within_process() {
+    // The snapshot's foundation: the same config twice → identical JSON.
+    let rt = Runtime::native();
+    let a = run_experiment(&rt, &golden_cfg()).unwrap().metrics.to_json();
+    let rt2 = Runtime::native();
+    let b = run_experiment(&rt2, &golden_cfg())
+        .unwrap()
+        .metrics
+        .to_json();
+    let mut diffs = Vec::new();
+    assert_json_eq("metrics", &a, &b, &mut diffs);
+    assert!(diffs.is_empty(), "non-deterministic run: {diffs:?}");
+}

@@ -8,7 +8,7 @@ use supersfl::config::{ExperimentConfig, Method};
 use supersfl::orchestrator::run_experiment;
 use supersfl::runtime::Runtime;
 
-fn runtime() -> Option<Runtime> {
+fn runtime() -> Runtime {
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     Runtime::load_if_available(&dir)
 }
@@ -27,7 +27,7 @@ fn tiny(method: Method) -> ExperimentConfig {
 
 #[test]
 fn all_methods_run_and_respect_record_invariants() {
-    let Some(rt) = runtime() else { return };
+    let rt = runtime();
     for method in [Method::SuperSfl, Method::Sfl, Method::Dfl] {
         let res = run_experiment(&rt, &tiny(method)).unwrap();
         let m = &res.metrics;
@@ -54,7 +54,7 @@ fn all_methods_run_and_respect_record_invariants() {
 
 #[test]
 fn sfl_clients_share_one_depth_dfl_heterogeneous() {
-    let Some(rt) = runtime() else { return };
+    let rt = runtime();
     let sfl = run_experiment(&rt, &tiny(Method::Sfl)).unwrap();
     assert!(
         sfl.depths.iter().all(|&d| d == sfl.depths[0]),
@@ -79,7 +79,7 @@ fn per_round_comm_ordering_matches_paper_accounting() {
     // backbone + replica coordination (middle), SSFL syncs prefixes only
     // (smallest). Needs a 12-client fleet: below ~8 clients DFL's
     // fixed-cost replica sync outweighs SFL's per-client copies.
-    let Some(rt) = runtime() else { return };
+    let rt = runtime();
     let comm_of = |method| {
         let mut cfg = tiny(method);
         cfg.fleet.clients = 12;
@@ -102,7 +102,7 @@ fn per_round_comm_ordering_matches_paper_accounting() {
 
 #[test]
 fn baselines_stall_under_outage_ssfl_does_not() {
-    let Some(rt) = runtime() else { return };
+    let rt = runtime();
     let mut cfg = tiny(Method::Sfl);
     cfg.net.server_availability = 0.0;
     let sfl = run_experiment(&rt, &cfg).unwrap();
@@ -122,7 +122,7 @@ fn baselines_stall_under_outage_ssfl_does_not() {
 
 #[test]
 fn hundred_class_variant_runs() {
-    let Some(rt) = runtime() else { return };
+    let rt = runtime();
     let mut cfg = tiny(Method::SuperSfl).with_classes(100);
     cfg.data.train_per_class = 4;
     let res = run_experiment(&rt, &cfg).unwrap();
@@ -135,7 +135,7 @@ fn timeout_bound_respected_in_branch_times() {
     // With 0 availability, a round's simulated time is dominated by
     // timeouts: local compute + timeout per step, never more than the
     // straggler bound.
-    let Some(rt) = runtime() else { return };
+    let rt = runtime();
     let mut cfg = tiny(Method::SuperSfl);
     cfg.net.server_availability = 0.0;
     cfg.train.local_steps = 2;

@@ -17,7 +17,7 @@ use supersfl::tpgf;
 use supersfl::util::math;
 use supersfl::util::rng::Pcg32;
 
-fn runtime() -> Option<Runtime> {
+fn runtime() -> Runtime {
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     Runtime::load_if_available(&dir)
 }
@@ -36,10 +36,10 @@ fn small_data(rt: &Runtime, per_class: usize, seed: u64) -> Dataset {
 
 #[test]
 fn artifact_clip_matches_paper_tau() {
-    let Some(rt) = runtime() else { return };
+    let rt = runtime();
     let m = rt.model().clone();
-    let enc = rt.manifest.load_init("init_enc_c10").unwrap();
-    let clf = rt.manifest.load_init("init_clf_client_c10").unwrap();
+    let enc = rt.load_init("init_enc_c10").unwrap();
+    let clf = rt.load_init("init_clf_client_c10").unwrap();
     let data = small_data(&rt, 8, 1);
     let batch = data.gather(&(0..m.batch).collect::<Vec<_>>());
     for depth in [1usize, 4, 7] {
@@ -54,7 +54,7 @@ fn artifact_clip_matches_paper_tau() {
 
 #[test]
 fn rust_fusion_equals_pallas_artifact() {
-    let Some(rt) = runtime() else { return };
+    let rt = runtime();
     let m = rt.model().clone();
     let mut rng = Pcg32::seeded(3);
     for depth in [2usize, 5] {
@@ -86,7 +86,7 @@ fn rust_fusion_equals_pallas_artifact() {
 fn server_gz_chain_reduces_end_to_end_loss() {
     // One TPGF round trip on a fixed batch must reduce the *server* loss
     // on that batch — the gradients flowing through the split are real.
-    let Some(rt) = runtime() else { return };
+    let rt = runtime();
     let m = rt.model().clone();
     let depth = 3;
     let data = small_data(&rt, 8, 2);
@@ -125,7 +125,7 @@ fn server_gz_chain_reduces_end_to_end_loss() {
 fn fallback_only_training_still_learns() {
     // Alg. 3: with the server fully unreachable, the local classifier path
     // must still reduce the client's local loss.
-    let Some(rt) = runtime() else { return };
+    let rt = runtime();
     let m = rt.model().clone();
     let depth = 2;
     let data = small_data(&rt, 8, 4);
@@ -151,7 +151,7 @@ fn fallback_only_training_still_learns() {
 fn fuse_via_artifact_run_matches_rust_run() {
     // The fuse_via_artifact config flag must not change the trajectory
     // (same math, different executor).
-    let Some(rt) = runtime() else { return };
+    let rt = runtime();
     use supersfl::config::ExperimentConfig;
     use supersfl::orchestrator::run_experiment;
 
@@ -177,7 +177,7 @@ fn fuse_via_artifact_run_matches_rust_run() {
 
 #[test]
 fn eval_accuracy_improves_over_rounds_in_tiny_run() {
-    let Some(rt) = runtime() else { return };
+    let rt = runtime();
     use supersfl::config::ExperimentConfig;
     use supersfl::orchestrator::run_experiment;
 

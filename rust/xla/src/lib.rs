@@ -10,9 +10,10 @@
 //! The contract this preserves:
 //!
 //! * Everything downstream of `PjRtClient::cpu()` is unreachable when the
-//!   stub is active, because `Runtime::load` propagates the construction
-//!   error (and every artifact-dependent test already gates on the
-//!   presence of `artifacts/manifest.json`).
+//!   stub is active, because `PjrtBackend::load` propagates the
+//!   construction error — and the runtime's `auto` selection then falls
+//!   back to the always-available native reference backend, recording the
+//!   reason in `RuntimeStats::fallback_reason`.
 //! * All types are plain data (`Send + Sync`), so the coordinator's
 //!   parallel round engine can rely on `Runtime: Sync` regardless of
 //!   backend.
