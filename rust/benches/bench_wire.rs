@@ -1,0 +1,77 @@
+//! Wire-codec microbench: encode/decode throughput and round-trip error
+//! for every payload codec, on the two tensor shapes that dominate the
+//! protocol (the per-step smashed-activation tensor and a typical
+//! subnetwork upload). Always runs — pure CPU, no artifacts, no backend.
+//!
+//! `SUPERSFL_SMOKE=1` shrinks the iteration counts to a CI-sized run.
+
+use supersfl::bench_util::{black_box, measure, report, throughput};
+use supersfl::metrics::Table;
+use supersfl::util::rng::Pcg32;
+use supersfl::wire::{MsgType, Wire, WireCodecKind};
+
+fn main() {
+    let smoke = std::env::var("SUPERSFL_SMOKE").ok().as_deref() == Some("1");
+    let (warmup, iters) = if smoke { (1, 5) } else { (3, 40) };
+
+    let mut rng = Pcg32::seeded(0xBEEF);
+    // Native-model smashed tensor [8, 16, 32] and a depth-4 subnetwork
+    // upload (prefix + classifier) — representative, not load-bearing.
+    let shapes: &[(&str, MsgType, usize)] = &[
+        ("smashed[8x16x32]", MsgType::Smashed, 8 * 16 * 32),
+        ("upload[d4+clf]", MsgType::PrefixUpload, 18_752 + 330),
+    ];
+    let kinds = [
+        WireCodecKind::Fp32,
+        WireCodecKind::Fp16,
+        WireCodecKind::Int8,
+        WireCodecKind::TopK(10),
+    ];
+
+    println!("== wire codec throughput (frame encode + decode) ==\n");
+    let mut table = Table::new(&[
+        "codec", "tensor", "frame B", "ratio", "enc MB/s", "dec MB/s", "max |err|",
+    ]);
+
+    for &(label, msg, elems) in shapes {
+        let data: Vec<f32> = (0..elems).map(|_| rng.normal() as f32).collect();
+        let raw_bytes = (4 * elems) as f64;
+        for kind in kinds {
+            let wire = Wire::new(kind);
+            let frame = wire.encode(msg, &data, 0.0);
+            let frame_bytes = frame.len() as f64;
+
+            let enc = measure(warmup, iters, || {
+                black_box(wire.encode(msg, black_box(&data), 0.0));
+            });
+            let dec = measure(warmup, iters, || {
+                black_box(wire.decode(black_box(&frame)).unwrap());
+            });
+            report(&format!("encode/{}/{}", kind.label(), label), &enc);
+            report(&format!("decode/{}/{}", kind.label(), label), &dec);
+
+            let decoded = wire.decode(&frame).unwrap().data;
+            let max_err = data
+                .iter()
+                .zip(decoded.iter())
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+
+            table.row(&[
+                kind.label(),
+                label.to_string(),
+                format!("{}", frame.len()),
+                format!("{:.2}x", raw_bytes / frame_bytes),
+                format!("{:.0}", throughput(&enc, raw_bytes) / 1e6),
+                format!("{:.0}", throughput(&dec, raw_bytes) / 1e6),
+                format!("{max_err:.5}"),
+            ]);
+        }
+    }
+
+    println!("\n{}", table.render());
+    println!(
+        "ratio = analytic f32 bytes / encoded frame bytes; fp32 pays only the \
+         28-byte frame envelope, topk quantizes parameter frames to int8."
+    );
+}

@@ -8,11 +8,13 @@
 //! training time, and the gaps widen with client count / task difficulty.
 
 use supersfl::bench_util::scenarios::{
-    efficiency_grid, efficiency_numbers, paper_table1, run_cell, Scale,
+    cell_config, efficiency_grid, efficiency_numbers, paper_table1, run_cell, Scale,
 };
 use supersfl::config::{ExperimentConfig, Method};
 use supersfl::metrics::Table;
+use supersfl::orchestrator::run_experiment;
 use supersfl::runtime::Runtime;
+use supersfl::wire::WireCodecKind;
 
 fn main() -> supersfl::Result<()> {
     let rt = Runtime::load_if_available(&ExperimentConfig::default().artifacts_dir);
@@ -84,5 +86,57 @@ fn main() -> supersfl::Result<()> {
 
     println!("{}", table.render());
     println!("shape checks: SSFL rounds <= DFL <= SFL; SSFL comm lowest; SSFL time lowest.");
+
+    // ---- Communication cost vs accuracy per wire codec ----
+    // The headline 20× claim is about bytes on the link; with the wire
+    // layer the encoded bytes are measured, not assumed, so each codec's
+    // compression-vs-accuracy trade-off is a real end-to-end number.
+    let cell = efficiency_grid()[0];
+    println!(
+        "\n== SSFL comm cost vs accuracy per wire codec (C{}, {} clients) ==\n",
+        cell.classes,
+        scale.clients(cell.paper_clients)
+    );
+    // A SUPERSFL_WIRE override pins every run to one codec — sweeping the
+    // four kinds would just repeat the identical experiment four times.
+    let env_pinned = std::env::var("SUPERSFL_WIRE").is_ok();
+    if env_pinned {
+        println!("note: SUPERSFL_WIRE is set — running the pinned codec once\n");
+    }
+    let mut wt = Table::new(&[
+        "codec", "enc MB", "raw MB", "ratio", "best acc", "rounds→target",
+    ]);
+    for kind in [
+        WireCodecKind::Fp32,
+        WireCodecKind::Fp16,
+        WireCodecKind::Int8,
+        WireCodecKind::TopK(10),
+    ] {
+        let cfg = cell_config(&scale, &cell, Method::SuperSfl, 42).with_wire(kind);
+        let m = run_experiment(&rt, &cfg)?.metrics;
+        let (rounds, _, _) = efficiency_numbers(&m);
+        eprintln!(
+            "  ran wire={}: {:.1} MB encoded / {:.1} MB raw, best acc {:.3}",
+            m.wire_codec, m.total_comm_mb, m.total_raw_mb, m.best_accuracy
+        );
+        wt.row(&[
+            m.wire_codec.clone(),
+            format!("{:.1}", m.total_comm_mb),
+            format!("{:.1}", m.total_raw_mb),
+            format!("{:.2}x", m.compression),
+            format!("{:.3}", m.best_accuracy),
+            rounds.to_string(),
+        ]);
+        if env_pinned {
+            break;
+        }
+    }
+    println!("{}", wt.render());
+    if !env_pinned {
+        println!(
+            "shape checks: int8/topk cut encoded bytes >= 3x with accuracy close to fp32; \
+             fp32's ratio is just under 1x (frame overhead)."
+        );
+    }
     Ok(())
 }

@@ -29,12 +29,13 @@
 
 use crate::allocation;
 use crate::client::ClientState;
-use crate::network::{DeviceProfile, NetLane};
+use crate::network::{DeviceProfile, Framed, NetLane};
 use crate::orchestrator::engine::{self, RoundLedger};
 use crate::orchestrator::Harness;
 use crate::runtime::Runtime;
 use crate::util::math;
 use crate::util::rng::Pcg32;
+use crate::wire::MsgType;
 use crate::Result;
 
 /// One round of observed (jittered) resources, per client.
@@ -83,6 +84,8 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
     let lr_server = h.cfg.train.lr_server as f32;
     let threads = h.cfg.threads;
     let smashed = h.cost.smashed_bytes(dim);
+    let smashed_elems = rt.model().smashed_elems();
+    let gz_frame_len = h.wire.frame_len(MsgType::ActGrad, smashed_elems);
     let mut profile_rng = Pcg32::new(h.cfg.train.seed, 0xDF1);
 
     // Decentralized server replicas: full backbone + classifier each.
@@ -137,11 +140,13 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
                 cost,
                 train,
                 server,
+                wire,
                 ..
             } = h;
             let cost = &*cost;
             let train = &*train;
             let server = &*server;
+            let wire = &*wire;
 
             let mut groups: Vec<DflReplicaLane<'_>> = rep_enc
                 .iter_mut()
@@ -176,16 +181,29 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
                             cost.time_s(cost.client_fwd_flops(depth), m.profile.flops);
                         m.ledger.work(m.profile, t_fwd);
 
-                        let ex = m.net.exchange(smashed, smashed, m.srv_time);
+                        // Wire-framed exchange (see orchestrator docs).
+                        let up = wire.encode(MsgType::Smashed, &z, 0.0);
+                        let ex = m.net.exchange_framed(
+                            Framed {
+                                wire: up.len() as u64,
+                                raw: smashed,
+                            },
+                            Framed {
+                                wire: gz_frame_len,
+                                raw: smashed,
+                            },
+                            m.srv_time,
+                        );
                         m.ledger.exchange(m.profile, ex.time_s(), m.srv_time);
 
                         if ex.is_ok() {
+                            let z_server = wire.decode(&up)?.data;
                             let out = rt.server_step(
                                 depth,
                                 classes,
                                 &rep.enc[m.cut..],
                                 &*rep.clf,
-                                &z,
+                                &z_server,
                                 &batch.y,
                             )?;
                             math::sgd_step(&mut rep.enc[m.cut..], &out.g_srv, lr_server);
@@ -193,8 +211,10 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
                             m.client.round_server_loss.push(out.loss as f64);
                             m.ledger.server_step(m.srv_time);
 
+                            let down = wire.encode(MsgType::ActGrad, &out.g_z, 0.0);
+                            let g_z = wire.decode(&down)?.data;
                             let g_enc =
-                                rt.client_bwd(depth, &m.client.enc, &batch.x, &out.g_z)?;
+                                rt.client_bwd(depth, &m.client.enc, &batch.x, &g_z)?;
                             let lr = m.client.lr;
                             math::sgd_step(&mut m.client.enc, &g_enc, lr);
                             let t_bwd =
@@ -242,10 +262,22 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
         }
 
         // ---- Layer-aligned FedAvg of client prefixes (sample weights)
-        // on top of the replica average. ----
+        // on top of the replica average. Uploads travel as PrefixUpload
+        // frames (DFL clients train no auxiliary classifier) and the
+        // server averages the *decoded* prefixes. ----
         let mut agg_branch = vec![0.0f64; n];
+        let mut uploads: Vec<Vec<f32>> = Vec::with_capacity(n);
         for ci in 0..n {
-            agg_branch[ci] = h.net.bulk_up(ci, h.clients[ci].enc_bytes());
+            let payload = h.clients[ci].upload_payload();
+            let frame = h.wire.encode(MsgType::PrefixUpload, &payload, 0.0);
+            agg_branch[ci] = h.net.bulk_up_framed(
+                ci,
+                Framed {
+                    wire: frame.len() as u64,
+                    raw: (payload.len() * 4) as u64,
+                },
+            );
+            uploads.push(h.wire.decode(&frame)?.data);
         }
         h.charge_barrier_phase(&agg_branch);
         let total_samples: f64 = h.clients.iter().map(|c| c.shard.len() as f64).sum();
@@ -253,10 +285,11 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
             let items: Vec<(usize, &[f32], f64)> = h
                 .clients
                 .iter()
-                .map(|c| {
+                .zip(uploads.iter())
+                .map(|(c, data)| {
                     (
                         c.depth,
-                        c.enc.as_slice(),
+                        data.as_slice(),
                         c.shard.len() as f64 / total_samples.max(1.0),
                     )
                 })
@@ -275,11 +308,19 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
         }
 
         // ---- Full-backbone provisioning for the dynamic split ----
-        // Zero-copy: clients sync from the borrowed global encoder slice.
+        // Every client receives the same full backbone, so the Broadcast
+        // frame is encoded (and decoded) once and charged per client;
+        // clients sync from the decoded tensor.
+        let frame = h.wire.encode(MsgType::Broadcast, &h.server.enc, 0.0);
+        let bc_payload = h.wire.decode(&frame)?.data;
+        let bc_framed = Framed {
+            wire: frame.len() as u64,
+            raw: full_bytes,
+        };
         let mut bc = vec![0.0f64; n];
         for ci in 0..n {
-            bc[ci] = h.net.bulk_down(ci, full_bytes);
-            h.clients[ci].sync_from_global(&h.server.enc);
+            bc[ci] = h.net.bulk_down_framed(ci, bc_framed);
+            h.clients[ci].sync_from_global(&bc_payload);
         }
         h.charge_barrier_phase(&bc);
 

@@ -17,11 +17,12 @@
 //! FedAvg barrier.
 
 use crate::client::ClientState;
-use crate::network::{DeviceProfile, NetLane};
+use crate::network::{DeviceProfile, Framed, NetLane};
 use crate::orchestrator::engine::{self, RoundLedger};
 use crate::orchestrator::Harness;
 use crate::runtime::Runtime;
 use crate::util::math;
+use crate::wire::MsgType;
 use crate::Result;
 
 /// One SplitFed client's worker-thread context for a round.
@@ -46,6 +47,8 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
     let threads = h.cfg.threads;
     let suffix_len = h.server.suffix(depth).len();
     let smashed = h.cost.smashed_bytes(dim);
+    let smashed_elems = rt.model().smashed_elems();
+    let gz_frame_len = h.wire.frame_len(MsgType::ActGrad, smashed_elems);
     let srv_time = h.server_step_time(depth);
 
     // Per-client server-side copies (suffix + classifier), SplitFed-style.
@@ -64,10 +67,12 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
                 net,
                 cost,
                 train,
+                wire,
                 ..
             } = h;
             let cost = &*cost;
             let train = &*train;
+            let wire = &*wire;
 
             let mut lanes: Vec<SflLane<'_>> = Vec::with_capacity(n);
             let mut srv_it = srv_copies.iter_mut();
@@ -92,19 +97,41 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
                     let t_fwd = cost.time_s(cost.client_fwd_flops(depth), lane.profile.flops);
                     lane.ledger.work(lane.profile, t_fwd);
 
-                    let ex = lane.net.exchange(smashed, smashed, srv_time);
+                    // Wire-framed exchange: encoded bytes on the link,
+                    // analytic f32 count as raw (see orchestrator docs).
+                    let up = wire.encode(MsgType::Smashed, &z, 0.0);
+                    let ex = lane.net.exchange_framed(
+                        Framed {
+                            wire: up.len() as u64,
+                            raw: smashed,
+                        },
+                        Framed {
+                            wire: gz_frame_len,
+                            raw: smashed,
+                        },
+                        srv_time,
+                    );
                     lane.ledger.exchange(lane.profile, ex.time_s(), srv_time);
 
                     if ex.is_ok() {
-                        let out =
-                            rt.server_step(depth, classes, &*lane.srv, &*lane.clf, &z, &batch.y)?;
+                        let z_server = wire.decode(&up)?.data;
+                        let out = rt.server_step(
+                            depth,
+                            classes,
+                            &*lane.srv,
+                            &*lane.clf,
+                            &z_server,
+                            &batch.y,
+                        )?;
                         math::sgd_step(lane.srv, &out.g_srv, lr_server);
                         math::sgd_step(lane.clf, &out.g_clf_s, lr_server);
                         lane.client.round_server_loss.push(out.loss as f64);
                         lane.ledger.server_step(srv_time);
 
+                        let down = wire.encode(MsgType::ActGrad, &out.g_z, 0.0);
+                        let g_z = wire.decode(&down)?.data;
                         let g_enc =
-                            rt.client_bwd(depth, &lane.client.enc, &batch.x, &out.g_z)?;
+                            rt.client_bwd(depth, &lane.client.enc, &batch.x, &g_z)?;
                         let lr = lane.client.lr;
                         math::sgd_step(&mut lane.client.enc, &g_enc, lr);
                         let t_bwd =
@@ -130,9 +157,22 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
         let (round_dt, busy, stalled, server_steps) = h.absorb_ledgers(&ledgers);
 
         // ---- FedAvg of client-side models (sample-count weights) ----
+        // Uploads travel as PrefixUpload frames (SplitFed clients train
+        // no auxiliary classifier, so the payload is the prefix alone)
+        // and the server averages the *decoded* prefixes.
         let mut agg_branch = vec![0.0f64; n];
+        let mut uploads: Vec<Vec<f32>> = Vec::with_capacity(n);
         for ci in 0..n {
-            agg_branch[ci] = h.net.bulk_up(ci, h.clients[ci].enc_bytes());
+            let payload = h.clients[ci].upload_payload();
+            let frame = h.wire.encode(MsgType::PrefixUpload, &payload, 0.0);
+            agg_branch[ci] = h.net.bulk_up_framed(
+                ci,
+                Framed {
+                    wire: frame.len() as u64,
+                    raw: (payload.len() * 4) as u64,
+                },
+            );
+            uploads.push(h.wire.decode(&frame)?.data);
         }
         h.charge_barrier_phase(&agg_branch);
         let total_samples: f64 = h.clients.iter().map(|c| c.shard.len() as f64).sum();
@@ -140,10 +180,11 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
             let items: Vec<(usize, &[f32], f64)> = h
                 .clients
                 .iter()
-                .map(|c| {
+                .zip(uploads.iter())
+                .map(|(c, data)| {
                     (
                         depth,
-                        c.enc.as_slice(),
+                        data.as_slice(),
                         c.shard.len() as f64 / total_samples.max(1.0),
                     )
                 })
@@ -172,11 +213,19 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
         }
 
         // ---- Broadcast the aggregated client-side model ----
-        // Zero-copy: clients sync from the borrowed global encoder slice.
+        // One fixed split → every client receives the same prefix, so the
+        // Broadcast frame is encoded (and decoded) once and charged per
+        // client; clients sync from the decoded tensor.
+        let frame = h.wire.encode(MsgType::Broadcast, &h.server.enc[..cut], 0.0);
+        let bc_payload = h.wire.decode(&frame)?.data;
+        let bc_framed = Framed {
+            wire: frame.len() as u64,
+            raw: (cut * 4) as u64,
+        };
         let mut bc = vec![0.0f64; n];
         for ci in 0..n {
-            bc[ci] = h.net.bulk_down(ci, h.clients[ci].enc_bytes());
-            h.clients[ci].sync_from_global(&h.server.enc);
+            bc[ci] = h.net.bulk_down_framed(ci, bc_framed);
+            h.clients[ci].sync_from_global(&bc_payload);
         }
         h.charge_barrier_phase(&bc);
 

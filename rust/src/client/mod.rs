@@ -123,6 +123,31 @@ impl ClientState {
         (self.enc.len() * std::mem::size_of::<f32>()) as u64
     }
 
+    /// The flat tensor a client ships for collaborative aggregation: its
+    /// encoder prefix θ_i followed by the auxiliary classifier φ_i when
+    /// the method trains one. The client's trainable subnetwork is
+    /// prefix *plus* auxiliary head, and the whole subnetwork crosses
+    /// the uplink at the barrier — the seed implementation charged
+    /// `enc_bytes()` alone, silently under-counting every SSFL
+    /// aggregation upload by the classifier payload. (The Eq. 6 loss
+    /// rides in the frame header, not in this tensor.)
+    pub fn upload_payload(&self) -> Vec<f32> {
+        match &self.clf {
+            Some(clf) => {
+                let mut v = Vec::with_capacity(self.enc.len() + clf.len());
+                v.extend_from_slice(&self.enc);
+                v.extend_from_slice(clf);
+                v
+            }
+            None => self.enc.clone(),
+        }
+    }
+
+    /// Element count of [`ClientState::upload_payload`] without building it.
+    pub fn upload_elems(&self) -> usize {
+        self.enc.len() + self.clf.as_ref().map_or(0, |c| c.len())
+    }
+
     /// Begin a new round: reset loss accumulators.
     pub fn begin_round(&mut self) {
         self.round_local_loss.reset();
@@ -247,6 +272,26 @@ mod tests {
         assert_eq!(c.enc_bytes(), 28);
         c.enc.push(0.0);
         assert_eq!(c.enc_bytes(), 32);
+    }
+
+    #[test]
+    fn upload_payload_is_prefix_then_classifier() {
+        let mut c = ClientState {
+            id: 0,
+            depth: 1,
+            enc: vec![1.0, 2.0],
+            clf: Some(vec![3.0, 4.0, 5.0]),
+            shard: ClientShard::new(vec![0], crate::util::rng::Pcg32::seeded(1)),
+            lr: 0.1,
+            round_local_loss: LossAcc::default(),
+            round_server_loss: LossAcc::default(),
+        };
+        assert_eq!(c.upload_payload(), vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(c.upload_elems(), 5);
+        // Baseline clients (no φ) upload the prefix alone.
+        c.clf = None;
+        assert_eq!(c.upload_payload(), vec![1.0, 2.0]);
+        assert_eq!(c.upload_elems(), 2);
     }
 
     #[test]

@@ -8,6 +8,7 @@
 use std::path::{Path, PathBuf};
 
 use crate::util::json::{self, JsonValue};
+use crate::wire::WireCodecKind;
 use crate::{Error, Result};
 
 /// Which training method to run.
@@ -338,6 +339,11 @@ pub struct ExperimentConfig {
     /// backends differ numerically (different model families); within one
     /// backend every run is deterministic.
     pub backend: BackendKind,
+    /// Wire payload codec for every client↔server tensor exchange
+    /// (`--wire-codec fp32|fp16|int8|topk:<k>`; the `SUPERSFL_WIRE` env
+    /// var wins). `fp32` is bit-exact; lossy codecs shrink the encoded
+    /// frames and perturb training through the decode path.
+    pub wire: WireCodecKind,
     /// Where `make artifacts` put the HLO + manifest.
     pub artifacts_dir: PathBuf,
 }
@@ -358,6 +364,7 @@ impl Default for ExperimentConfig {
             dfl_replicas: 2,
             threads: 0,
             backend: BackendKind::Auto,
+            wire: WireCodecKind::Fp32,
             artifacts_dir: PathBuf::from("artifacts"),
         }
     }
@@ -404,6 +411,12 @@ impl ExperimentConfig {
     /// Execution backend selection.
     pub fn with_backend(mut self, b: BackendKind) -> Self {
         self.backend = b;
+        self
+    }
+
+    /// Wire payload codec selection.
+    pub fn with_wire(mut self, w: WireCodecKind) -> Self {
+        self.wire = w;
         self
     }
 
@@ -466,6 +479,7 @@ impl ExperimentConfig {
             "dfl_replicas" => self.dfl_replicas = (f(v)? as usize).max(1),
             "threads" => self.threads = f(v)? as usize,
             "backend" => self.backend = BackendKind::parse(s(v, key)?)?,
+            "wire_codec" => self.wire = WireCodecKind::parse(s(v, key)?)?,
             "artifacts_dir" => self.artifacts_dir = PathBuf::from(s(v, key)?),
             "clients" => self.fleet.clients = f(v)? as usize,
             "mem_gb" => self.fleet.mem_gb = pair(v)?,
@@ -555,6 +569,7 @@ impl ExperimentConfig {
         o.set("dfl_replicas", n(self.dfl_replicas as f64));
         o.set("threads", n(self.threads as f64));
         o.set("backend", JsonValue::String(self.backend.as_str().into()));
+        o.set("wire_codec", JsonValue::String(self.wire.label()));
         if let Some(t) = self.train.target_accuracy {
             o.set("target_accuracy", n(t));
         }
@@ -655,6 +670,24 @@ mod tests {
         let mut c2 = ExperimentConfig::default();
         c2.apply_json(&j).unwrap();
         assert_eq!(c2.backend, BackendKind::Native);
+    }
+
+    #[test]
+    fn wire_codec_parses_and_roundtrips() {
+        let mut c = ExperimentConfig::default();
+        assert_eq!(c.wire, WireCodecKind::Fp32);
+        let v = json::parse(r#"{"wire_codec": "topk:15"}"#).unwrap();
+        c.apply_json(&v).unwrap();
+        assert_eq!(c.wire, WireCodecKind::TopK(15));
+
+        let c = ExperimentConfig::default().with_wire(WireCodecKind::Int8);
+        let j = c.to_json();
+        let mut c2 = ExperimentConfig::default();
+        c2.apply_json(&j).unwrap();
+        assert_eq!(c2.wire, WireCodecKind::Int8);
+
+        let v = json::parse(r#"{"wire_codec": "zstd"}"#).unwrap();
+        assert!(ExperimentConfig::default().apply_json(&v).is_err());
     }
 
     #[test]

@@ -14,6 +14,10 @@
 //! * [`data`] — synthetic CIFAR-like dataset + Dirichlet non-IID partitioner.
 //! * [`network`] — simulated edge network: latency, bandwidth, failures,
 //!   timeouts, byte accounting, and the simulated cluster clock.
+//! * [`wire`] — the framed binary codec layer: every client↔server
+//!   tensor exchange is serialized through a checksummed frame with a
+//!   selectable payload codec (`fp32|fp16|int8|topk:<k>`), and the
+//!   network is charged with the actual encoded bytes.
 //! * [`energy`] — device power states, energy integration, CO₂ accounting.
 //! * [`metrics`] — round records, run summaries, CSV/JSON export.
 //! * [`runtime`] — the execution backends behind one `Backend` trait:
@@ -53,6 +57,7 @@ pub mod runtime;
 pub mod server;
 pub mod tpgf;
 pub mod util;
+pub mod wire;
 
 pub use config::ExperimentConfig;
 pub use orchestrator::{run_experiment, RunResult};
@@ -67,6 +72,9 @@ pub enum Error {
     Config(String),
     Manifest(String),
     Shape(String),
+    /// Wire-frame errors: truncated/corrupted frames, version or codec
+    /// mismatches, malformed payloads (`crate::wire`).
+    Wire(String),
 }
 
 impl std::fmt::Display for Error {
@@ -78,6 +86,7 @@ impl std::fmt::Display for Error {
             Error::Config(e) => write!(f, "config: {e}"),
             Error::Manifest(e) => write!(f, "manifest: {e}"),
             Error::Shape(e) => write!(f, "shape mismatch: {e}"),
+            Error::Wire(e) => write!(f, "wire: {e}"),
         }
     }
 }

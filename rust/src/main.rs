@@ -16,6 +16,7 @@ use supersfl::config::{BackendKind, ExperimentConfig, Method};
 use supersfl::metrics::Table;
 use supersfl::runtime::Runtime;
 use supersfl::util::json::{self, JsonValue};
+use supersfl::wire::WireCodecKind;
 use supersfl::{allocation, network, orchestrator, util::rng::Pcg32, Error, Result};
 
 mod cli;
@@ -49,7 +50,8 @@ fn usage() {
     eprintln!(
         "usage: supersfl <train|allocate|inspect> [--method ssfl|sfl|dfl] \
          [--clients N] [--classes 10|100] [--rounds N] [--seed N] \
-         [--threads N] [--backend auto|native|pjrt] [--config file.json] \
+         [--threads N] [--backend auto|native|pjrt] \
+         [--wire-codec fp32|fp16|int8|topk:<k>] [--config file.json] \
          [--set key=value]... [--artifacts DIR] [--out DIR]"
     );
 }
@@ -79,6 +81,9 @@ fn build_config(args: &cli::Args) -> Result<ExperimentConfig> {
     }
     if let Some(v) = args.get("backend") {
         cfg.backend = BackendKind::parse(v)?;
+    }
+    if let Some(v) = args.get("wire-codec") {
+        cfg.wire = WireCodecKind::parse(v)?;
     }
     if let Some(v) = args.get("target") {
         cfg.train.target_accuracy = Some(v.parse()?);
@@ -110,7 +115,7 @@ fn build_config(args: &cli::Args) -> Result<ExperimentConfig> {
 fn cmd_train(args: &cli::Args) -> Result<()> {
     let cfg = build_config(args)?;
     println!(
-        "supersfl train: method={} clients={} classes={} rounds={} seed={} threads={}",
+        "supersfl train: method={} clients={} classes={} rounds={} seed={} threads={} wire={}",
         cfg.method.as_str(),
         cfg.fleet.clients,
         cfg.data.classes,
@@ -120,7 +125,8 @@ fn cmd_train(args: &cli::Args) -> Result<()> {
             "auto".to_string()
         } else {
             cfg.threads.to_string()
-        }
+        },
+        cfg.wire.label()
     );
     let rt = Runtime::from_config(&cfg)?;
     println!("backend: {}", rt.backend_name());
@@ -148,6 +154,13 @@ fn cmd_train(args: &cli::Args) -> Result<()> {
         res.metrics.total_sim_time_s,
         res.metrics.avg_power_w,
         res.metrics.co2_g
+    );
+    println!(
+        "wire[{}]: {:.1} MB on the link for {:.1} MB raw ({:.2}x compression)",
+        res.metrics.wire_codec,
+        res.metrics.total_comm_mb,
+        res.metrics.total_raw_mb,
+        res.metrics.compression
     );
     if let Some(r) = res.metrics.rounds_to_target {
         println!("target reached at round {r}");

@@ -18,10 +18,18 @@ pub struct RoundRecord {
     pub mean_client_loss: f64,
     /// Mean server-side loss over the round (when server was reachable).
     pub mean_server_loss: f64,
-    /// Bytes moved this round (both directions), MB.
+    /// Encoded bytes on the link this round (both directions), MB —
+    /// actual wire-frame sizes under the run's `--wire-codec`.
     pub comm_mb: f64,
-    /// Cumulative communication, MB.
+    /// Cumulative communication, MB (encoded).
     pub cum_comm_mb: f64,
+    /// Analytic uncompressed size of the same transfers (4 B/f32), MB.
+    pub raw_mb: f64,
+    /// Cumulative raw communication, MB.
+    pub cum_raw_mb: f64,
+    /// Per-round compression ratio raw/encoded (1.0 when nothing moved;
+    /// slightly below 1.0 for `fp32`, which pays frame overhead).
+    pub compression: f64,
     /// Cumulative energy, J.
     pub energy_j: f64,
     /// Client steps that fell back to local-only training this round.
@@ -43,6 +51,9 @@ impl RoundRecord {
         o.set("mean_server_loss", n(self.mean_server_loss));
         o.set("comm_mb", n(self.comm_mb));
         o.set("cum_comm_mb", n(self.cum_comm_mb));
+        o.set("raw_mb", n(self.raw_mb));
+        o.set("cum_raw_mb", n(self.cum_raw_mb));
+        o.set("compression", n(self.compression));
         o.set("energy_j", n(self.energy_j));
         o.set("fallback_steps", n(self.fallback_steps as f64));
         o.set("server_steps", n(self.server_steps as f64));
@@ -62,7 +73,15 @@ pub struct RunMetrics {
     pub rounds_to_target: Option<usize>,
     pub comm_mb_to_target: Option<f64>,
     pub sim_time_to_target: Option<f64>,
+    /// Total encoded bytes on the link, MB.
     pub total_comm_mb: f64,
+    /// Total analytic uncompressed bytes of the same transfers, MB.
+    pub total_raw_mb: f64,
+    /// Whole-run compression ratio raw/encoded.
+    pub compression: f64,
+    /// The wire codec the run shipped its tensors with (`cfg.wire`
+    /// label; filled in by the orchestrator after construction).
+    pub wire_codec: String,
     pub total_sim_time_s: f64,
     pub total_energy_j: f64,
     pub avg_power_w: f64,
@@ -87,6 +106,7 @@ impl RunMetrics {
         let best = rounds.iter().map(|r| r.accuracy).fold(0.0, f64::max);
         let fin = rounds.last().map(|r| r.accuracy).unwrap_or(0.0);
         let total_comm = rounds.last().map(|r| r.cum_comm_mb).unwrap_or(0.0);
+        let total_raw = rounds.last().map(|r| r.cum_raw_mb).unwrap_or(0.0);
         let total_time = rounds.last().map(|r| r.sim_time_s).unwrap_or(0.0);
         let hit = target.and_then(|t| rounds.iter().find(|r| r.accuracy >= t));
         RunMetrics {
@@ -98,6 +118,13 @@ impl RunMetrics {
             final_accuracy: fin,
             best_accuracy: best,
             total_comm_mb: total_comm,
+            total_raw_mb: total_raw,
+            compression: if total_comm > 0.0 {
+                total_raw / total_comm
+            } else {
+                1.0
+            },
+            wire_codec: String::new(),
             total_sim_time_s: total_time,
             total_energy_j,
             avg_power_w,
@@ -120,12 +147,12 @@ impl RunMetrics {
         let mut f = std::fs::File::create(path)?;
         writeln!(
             f,
-            "round,sim_time_s,accuracy,mean_client_loss,mean_server_loss,comm_mb,cum_comm_mb,energy_j,fallback_steps,server_steps"
+            "round,sim_time_s,accuracy,mean_client_loss,mean_server_loss,comm_mb,cum_comm_mb,raw_mb,cum_raw_mb,compression,energy_j,fallback_steps,server_steps"
         )?;
         for r in &self.rounds {
             writeln!(
                 f,
-                "{},{:.3},{:.4},{:.4},{:.4},{:.3},{:.3},{:.1},{},{}",
+                "{},{:.3},{:.4},{:.4},{:.4},{:.3},{:.3},{:.3},{:.3},{:.3},{:.1},{},{}",
                 r.round,
                 r.sim_time_s,
                 r.accuracy,
@@ -133,6 +160,9 @@ impl RunMetrics {
                 r.mean_server_loss,
                 r.comm_mb,
                 r.cum_comm_mb,
+                r.raw_mb,
+                r.cum_raw_mb,
+                r.compression,
                 r.energy_j,
                 r.fallback_steps,
                 r.server_steps
@@ -163,6 +193,9 @@ impl RunMetrics {
             None => o.set("sim_time_to_target", JsonValue::Null),
         }
         o.set("total_comm_mb", n(self.total_comm_mb));
+        o.set("total_raw_mb", n(self.total_raw_mb));
+        o.set("compression", n(self.compression));
+        o.set("wire_codec", JsonValue::String(self.wire_codec.clone()));
         o.set("total_sim_time_s", n(self.total_sim_time_s));
         o.set("total_energy_j", n(self.total_energy_j));
         o.set("avg_power_w", n(self.avg_power_w));
@@ -273,6 +306,27 @@ mod tests {
         assert!((m.final_accuracy - 0.8).abs() < 1e-12);
         assert!((m.best_accuracy - 0.8).abs() < 1e-12);
         assert!((m.power_per_acc - 20.0 / 80.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn raw_vs_encoded_accounting_rolls_up() {
+        let mut rs = rounds();
+        for r in &mut rs {
+            r.raw_mb = 20.0;
+            r.cum_raw_mb = 20.0 * r.round as f64;
+            r.compression = 4.0;
+        }
+        let m = RunMetrics::from_rounds("t", "ssfl", rs, None, 1.0, 1.0, 1.0);
+        assert_eq!(m.total_raw_mb, 100.0);
+        // 100 raw MB over 25 encoded MB → 4× end-to-end.
+        assert!((m.compression - 4.0).abs() < 1e-12);
+        let j = m.to_json();
+        assert!(j.get("total_raw_mb").is_some());
+        assert!(j.get("compression").is_some());
+        assert!(j.get("wire_codec").is_some());
+        let rounds = j.get("rounds").and_then(|r| r.as_array()).unwrap();
+        assert!(rounds[0].get("raw_mb").is_some());
+        assert!(rounds[0].get("compression").is_some());
     }
 
     #[test]

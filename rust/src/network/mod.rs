@@ -50,8 +50,41 @@ pub struct Traffic {
 }
 
 impl Traffic {
+    pub fn total_bytes(&self) -> u64 {
+        self.up_bytes + self.down_bytes
+    }
+
     pub fn total_mb(&self) -> f64 {
-        (self.up_bytes + self.down_bytes) as f64 / 1e6
+        self.total_bytes() as f64 / 1e6
+    }
+
+    fn add(&mut self, other: &Traffic) {
+        self.up_bytes += other.up_bytes;
+        self.down_bytes += other.down_bytes;
+    }
+}
+
+/// One transfer's size under the wire layer: the encoded frame bytes
+/// that actually cross the link (and drive transfer times / timeouts)
+/// next to the analytic `4·n` f32 count they replaced. Their per-round
+/// quotient is the compression ratio reported in
+/// [`crate::metrics::RoundRecord`].
+#[derive(Clone, Copy, Debug)]
+pub struct Framed {
+    /// Encoded frame bytes on the link (header + payload + checksum).
+    pub wire: u64,
+    /// Analytic uncompressed size of the tensor (4 bytes per f32).
+    pub raw: u64,
+}
+
+impl Framed {
+    /// An uncoded transfer: wire bytes == raw bytes (pre-wire-layer
+    /// paths such as the main↔Fed server link).
+    pub fn uncoded(bytes: u64) -> Framed {
+        Framed {
+            wire: bytes,
+            raw: bytes,
+        }
     }
 }
 
@@ -88,20 +121,24 @@ impl LinkParams {
 
 /// Exchange logic shared by [`NetworkSim`] and [`NetLane`]. Uplink bytes
 /// are always charged (the client transmitted them before it could observe
-/// the failure); downlink bytes only on success.
+/// the failure); downlink bytes only on success. Each charged counter is
+/// an `(encoded, raw)` pair; transfer times — and therefore the timeout
+/// behaviour — follow the **encoded** frame bytes, which is how a lossy
+/// wire codec widens the effective timeout window on slow links.
 #[allow(clippy::too_many_arguments)]
 fn exchange_impl(
     cfg: &NetConfig,
     link: &LinkParams,
     rng: &mut Pcg32,
-    traffic: &mut [&mut Traffic],
+    traffic: &mut [(&mut Traffic, &mut Traffic)],
     server_up: bool,
-    up_bytes: u64,
-    down_bytes: u64,
+    up: Framed,
+    down: Framed,
     server_time_s: f64,
 ) -> Exchange {
-    for t in traffic.iter_mut() {
-        t.up_bytes += up_bytes;
+    for (t, raw) in traffic.iter_mut() {
+        t.up_bytes += up.wire;
+        raw.up_bytes += up.raw;
     }
     let dropped = rng.bernoulli(cfg.drop_prob);
     if !server_up || dropped {
@@ -109,7 +146,7 @@ fn exchange_impl(
             time_s: cfg.timeout_s,
         };
     }
-    let t = link.up_time(up_bytes) + server_time_s + link.down_time(down_bytes);
+    let t = link.up_time(up.wire) + server_time_s + link.down_time(down.wire);
     if t > cfg.timeout_s {
         // Link too slow for the timeout window: same observable behaviour
         // as an outage (paper §II-C fallback trigger).
@@ -117,8 +154,9 @@ fn exchange_impl(
             time_s: cfg.timeout_s,
         };
     }
-    for tr in traffic.iter_mut() {
-        tr.down_bytes += down_bytes;
+    for (tr, raw) in traffic.iter_mut() {
+        tr.down_bytes += down.wire;
+        raw.down_bytes += down.raw;
     }
     Exchange::Ok { time_s: t }
 }
@@ -138,7 +176,10 @@ pub struct NetLane {
     link: LinkParams,
     server_up: bool,
     rng: Pcg32,
+    /// Encoded (on-the-link) frame bytes this lane moved.
     pub traffic: Traffic,
+    /// Analytic uncompressed bytes of the same transfers.
+    pub raw_traffic: Traffic,
 }
 
 impl NetLane {
@@ -162,15 +203,31 @@ impl NetLane {
     /// the fan-out, on the simulator itself via [`NetworkSim::bulk_up`] /
     /// [`NetworkSim::bulk_down`] — keeping exactly one accounting path for
     /// each phase.
+    ///
+    /// Uncoded convenience form: wire bytes == raw bytes. The round loops
+    /// go through [`NetLane::exchange_framed`] with real frame sizes.
     pub fn exchange(&mut self, up_bytes: u64, down_bytes: u64, server_time_s: f64) -> Exchange {
+        self.exchange_framed(
+            Framed::uncoded(up_bytes),
+            Framed::uncoded(down_bytes),
+            server_time_s,
+        )
+    }
+
+    /// The wire-layer exchange: encoded frame bytes drive transfer times
+    /// and the timeout roll; the analytic raw sizes ride along for the
+    /// compression accounting. Draw sequence is identical to
+    /// [`NetLane::exchange`] (one Bernoulli per call), so switching codecs
+    /// never desynchronizes the lane's PCG stream.
+    pub fn exchange_framed(&mut self, up: Framed, down: Framed, server_time_s: f64) -> Exchange {
         exchange_impl(
             &self.cfg,
             &self.link,
             &mut self.rng,
-            &mut [&mut self.traffic],
+            &mut [(&mut self.traffic, &mut self.raw_traffic)],
             self.server_up,
-            up_bytes,
-            down_bytes,
+            up,
+            down,
             server_time_s,
         )
     }
@@ -187,9 +244,14 @@ pub struct NetworkSim {
     /// Whether the server answers during the current round (Table III's
     /// "server gradient availability" is a per-round schedule).
     server_up_this_round: bool,
+    /// Encoded (on-the-link) frame bytes, whole run.
     pub traffic: Traffic,
     /// Traffic accumulated during the current round only.
     pub round_traffic: Traffic,
+    /// Analytic uncompressed bytes of the same transfers, whole run.
+    pub raw_traffic: Traffic,
+    /// Raw counterpart of [`NetworkSim::round_traffic`].
+    pub round_raw_traffic: Traffic,
 }
 
 impl NetworkSim {
@@ -205,6 +267,8 @@ impl NetworkSim {
             server_up_this_round: true,
             traffic: Traffic::default(),
             round_traffic: Traffic::default(),
+            raw_traffic: Traffic::default(),
+            round_raw_traffic: Traffic::default(),
         }
     }
 
@@ -217,6 +281,7 @@ impl NetworkSim {
     pub fn begin_round(&mut self) {
         self.server_up_this_round = self.rng.bernoulli(self.cfg.server_availability);
         self.round_traffic = Traffic::default();
+        self.round_raw_traffic = Traffic::default();
     }
 
     pub fn server_available(&self) -> bool {
@@ -235,16 +300,17 @@ impl NetworkSim {
             server_up: self.server_up_this_round,
             rng: Pcg32::new(self.lane_seed ^ round_salt, client as u64 + 1),
             traffic: Traffic::default(),
+            raw_traffic: Traffic::default(),
         }
     }
 
     /// Fold a finished lane's byte counters back into the global and
     /// per-round accounting (called at the barrier, in client-id order).
     pub fn absorb_lane(&mut self, lane: &NetLane) {
-        self.traffic.up_bytes += lane.traffic.up_bytes;
-        self.traffic.down_bytes += lane.traffic.down_bytes;
-        self.round_traffic.up_bytes += lane.traffic.up_bytes;
-        self.round_traffic.down_bytes += lane.traffic.down_bytes;
+        self.traffic.add(&lane.traffic);
+        self.round_traffic.add(&lane.traffic);
+        self.raw_traffic.add(&lane.raw_traffic);
+        self.round_raw_traffic.add(&lane.raw_traffic);
     }
 
     /// Pure transfer-time model (no failure roll): one-way up.
@@ -274,35 +340,58 @@ impl NetworkSim {
             &self.cfg,
             &self.links[client],
             &mut self.rng,
-            &mut [&mut self.traffic, &mut self.round_traffic],
+            &mut [
+                (&mut self.traffic, &mut self.raw_traffic),
+                (&mut self.round_traffic, &mut self.round_raw_traffic),
+            ],
             self.server_up_this_round,
-            up_bytes,
-            down_bytes,
+            Framed::uncoded(up_bytes),
+            Framed::uncoded(down_bytes),
             server_time_s,
         )
     }
 
     /// A bulk weight sync (aggregation upload / broadcast download).
-    /// Returns the transfer time; bytes are always charged.
+    /// Returns the transfer time; bytes are always charged. Uncoded
+    /// convenience form — the round loops charge real frame sizes via
+    /// [`NetworkSim::bulk_up_framed`].
     pub fn bulk_up(&mut self, client: usize, bytes: u64) -> f64 {
-        self.traffic.up_bytes += bytes;
-        self.round_traffic.up_bytes += bytes;
-        self.up_time(client, bytes)
+        self.bulk_up_framed(client, Framed::uncoded(bytes))
     }
 
     pub fn bulk_down(&mut self, client: usize, bytes: u64) -> f64 {
-        self.traffic.down_bytes += bytes;
-        self.round_traffic.down_bytes += bytes;
-        self.down_time(client, bytes)
+        self.bulk_down_framed(client, Framed::uncoded(bytes))
+    }
+
+    /// Bulk weight sync charged with actual encoded frame bytes; the
+    /// transfer time follows the wire size.
+    pub fn bulk_up_framed(&mut self, client: usize, f: Framed) -> f64 {
+        self.traffic.up_bytes += f.wire;
+        self.round_traffic.up_bytes += f.wire;
+        self.raw_traffic.up_bytes += f.raw;
+        self.round_raw_traffic.up_bytes += f.raw;
+        self.up_time(client, f.wire)
+    }
+
+    pub fn bulk_down_framed(&mut self, client: usize, f: Framed) -> f64 {
+        self.traffic.down_bytes += f.wire;
+        self.round_traffic.down_bytes += f.wire;
+        self.raw_traffic.down_bytes += f.raw;
+        self.round_raw_traffic.down_bytes += f.raw;
+        self.down_time(client, f.wire)
     }
 
     /// Main-server ↔ Fed-server bulk transfer (Fig. 2 of the paper; used
     /// heavily by the SplitFed baseline, which ships every per-client
     /// server-side model copy to the Fed server each round). Charged as
-    /// uplink traffic over the server NIC.
+    /// uplink traffic over the server NIC. This is a datacenter-internal
+    /// link, not a client↔server exchange, so it bypasses the wire codec
+    /// (wire == raw in the compression accounting).
     pub fn fed_link(&mut self, bytes: u64) -> f64 {
         self.traffic.up_bytes += bytes;
         self.round_traffic.up_bytes += bytes;
+        self.raw_traffic.up_bytes += bytes;
+        self.round_raw_traffic.up_bytes += bytes;
         bytes as f64 / (self.cfg.server_bandwidth_mbps * 1e6 / 8.0)
     }
 }
@@ -505,6 +594,72 @@ mod tests {
         let lane = s.lane(0, 1);
         assert_eq!(lane.up_time(4096), s.up_time(0, 4096));
         assert_eq!(lane.down_time(4096), s.down_time(0, 4096));
+    }
+
+    #[test]
+    fn framed_transfers_split_wire_and_raw_accounting() {
+        let mut s = sim(1.0, 0.0);
+        s.begin_round();
+        // Bulk: 1000 wire bytes standing in for 4000 raw.
+        let t = s.bulk_up_framed(0, Framed { wire: 1000, raw: 4000 });
+        assert!(t > 0.0);
+        assert_eq!(s.traffic.up_bytes, 1000);
+        assert_eq!(s.raw_traffic.up_bytes, 4000);
+        assert_eq!(s.round_raw_traffic.up_bytes, 4000);
+        // Transfer time follows the wire bytes, not the raw size.
+        assert!(s.up_time(0, 1000) < s.up_time(0, 4000));
+
+        // Lane exchange: uplink raw charged even on success; downlink on
+        // success only.
+        let mut lane = s.lane(0, 1);
+        let e = lane.exchange_framed(
+            Framed { wire: 500, raw: 2000 },
+            Framed { wire: 250, raw: 1000 },
+            0.001,
+        );
+        assert!(e.is_ok());
+        assert_eq!(lane.traffic.up_bytes, 500);
+        assert_eq!(lane.traffic.down_bytes, 250);
+        assert_eq!(lane.raw_traffic.up_bytes, 2000);
+        assert_eq!(lane.raw_traffic.down_bytes, 1000);
+        s.absorb_lane(&lane);
+        assert_eq!(s.round_traffic.up_bytes, 1500);
+        assert_eq!(s.round_raw_traffic.down_bytes, 1000);
+
+        // Round reset clears the raw counter too; the totals persist.
+        s.begin_round();
+        assert_eq!(s.round_raw_traffic.up_bytes, 0);
+        assert_eq!(s.raw_traffic.up_bytes, 6000);
+    }
+
+    #[test]
+    fn framed_timeout_charges_raw_uplink_only() {
+        let mut s = sim(0.0, 0.0);
+        s.begin_round();
+        let mut lane = s.lane(2, 3);
+        let e = lane.exchange_framed(
+            Framed { wire: 100, raw: 400 },
+            Framed { wire: 100, raw: 400 },
+            0.0,
+        );
+        assert!(!e.is_ok());
+        assert_eq!(lane.raw_traffic.up_bytes, 400);
+        assert_eq!(lane.raw_traffic.down_bytes, 0);
+    }
+
+    #[test]
+    fn framed_and_uncoded_exchanges_share_one_draw_sequence() {
+        // Switching codecs must not desynchronize a lane's PCG stream:
+        // both forms burn exactly one Bernoulli per call.
+        let mut s = sim(1.0, 0.4);
+        s.begin_round();
+        let mut a = s.lane(1, 5);
+        let mut b = s.lane(1, 5);
+        for i in 0..100 {
+            let ea = a.exchange(64, 64, 0.0);
+            let eb = b.exchange_framed(Framed::uncoded(64), Framed::uncoded(64), 0.0);
+            assert_eq!(ea.is_ok(), eb.is_ok(), "draw {i}");
+        }
     }
 
     #[test]

@@ -25,7 +25,10 @@
 //! 2. **Per-client PCG streams.** The only RNG a lane touches is either
 //!    already per-client (the shard loader) or derived as a pure function
 //!    of `(run seed, round, client id)` ([`NetworkSim::lane`]); no draw
-//!    order depends on scheduling.
+//!    order depends on scheduling. The wire layer keeps this intact: every
+//!    payload codec ([`crate::wire`]) is a deterministic pure function, and
+//!    lanes encode/decode their own frames locally, so lossy codecs
+//!    perturb training identically for every thread count.
 //! 3. **Deterministic merge order.** At the barrier, ledgers are absorbed
 //!    in ascending client-id order: energy into per-device slots, server
 //!    busy-seconds and step counts by id-ordered summation, traffic into

@@ -18,11 +18,20 @@
 //! synchronized-round setting. Results are bit-identical for any
 //! `cfg.threads` value.
 //!
-//! The hot path is allocation-free where it matters: the refreshed global
-//! prefix is broadcast to clients from a single borrowed slice of the
-//! server encoder (no per-client clone of θ), aggregation runs as a fused
-//! in-place per-layer pass (no scratch buffer), and lane snapshots reuse
-//! their buffers across rounds.
+//! The hot path is allocation-free where it matters: aggregation runs as
+//! a fused in-place per-layer pass (no scratch buffer) and lane snapshots
+//! reuse their buffers across rounds.
+//!
+//! Every client↔server tensor exchange is serialized through the
+//! [`crate::wire`] layer: smashed activations and activation gradients as
+//! per-step frames inside each lane, the subnetwork upload (prefix θ_i +
+//! auxiliary classifier φ_i, with the Eq. 6 loss in the frame header) and
+//! the refreshed-prefix broadcast as barrier frames. The network is
+//! charged with the **actual encoded frame bytes** (the analytic `4·n`
+//! counts ride along as "raw" for the compression ratio), and the
+//! receiving side always trains on the *decoded* tensors — so lossy
+//! codecs (`--wire-codec fp16|int8|topk:<k>`) genuinely perturb training,
+//! while `fp32` remains bit-identical to never serializing at all.
 
 pub mod engine;
 
@@ -34,11 +43,12 @@ use crate::data::{dirichlet_partition, ClientShard, Dataset, SyntheticSpec, Synt
 use crate::energy::{cost::ModelGeometry, CostModel, EnergyMeter, PowerState};
 use crate::fedserver::ClientUpdate;
 use crate::metrics::{RoundRecord, RunMetrics};
-use crate::network::{sample_fleet, DeviceProfile, NetLane, NetworkSim, SimClock};
+use crate::network::{sample_fleet, DeviceProfile, Framed, NetLane, NetworkSim, SimClock};
 use crate::runtime::Runtime;
 use crate::server::ServerState;
 use crate::util::math;
 use crate::util::rng::Pcg32;
+use crate::wire::{MsgType, Wire, WireCodecKind};
 use crate::Result;
 
 use engine::RoundLedger;
@@ -54,6 +64,9 @@ pub struct Harness {
     pub meter: EnergyMeter,
     pub clock: SimClock,
     pub cost: CostModel,
+    /// Wire codec policy for every client↔server tensor exchange
+    /// (`cfg.wire`, overridden by `SUPERSFL_WIRE`).
+    pub wire: Wire,
     pub train: Dataset,
     pub test: Dataset,
     /// Fixed test subset evaluated every round.
@@ -164,6 +177,7 @@ impl Harness {
             meter,
             clock: SimClock::new(),
             cost,
+            wire: Wire::new(WireCodecKind::from_env_or(cfg.wire)),
             train,
             test,
             eval_indices,
@@ -261,7 +275,8 @@ impl Harness {
             .iter()
             .filter_map(|c| c.round_server_loss.mean())
             .collect();
-        let cum_comm = self.net.traffic.total_mb();
+        let round_wire = self.net.round_traffic.total_bytes();
+        let round_raw = self.net.round_raw_traffic.total_bytes();
         let rec = RoundRecord {
             round,
             sim_time_s: self.clock.now(),
@@ -269,7 +284,14 @@ impl Harness {
             mean_client_loss: mean(local_losses),
             mean_server_loss: mean(server_losses),
             comm_mb: self.net.round_traffic.total_mb(),
-            cum_comm_mb: cum_comm,
+            cum_comm_mb: self.net.traffic.total_mb(),
+            raw_mb: self.net.round_raw_traffic.total_mb(),
+            cum_raw_mb: self.net.raw_traffic.total_mb(),
+            compression: if round_wire > 0 {
+                round_raw as f64 / round_wire as f64
+            } else {
+                1.0
+            },
             energy_j: self.meter.total_energy_j(),
             fallback_steps,
             server_steps,
@@ -295,6 +317,7 @@ impl Harness {
             self.meter.co2_g(),
         );
         metrics.host_wall_s = self.host_t0.elapsed().as_secs_f64();
+        metrics.wire_codec = self.wire.label();
         RunResult {
             metrics,
             depths: self.clients.iter().map(|c| c.depth).collect(),
@@ -344,6 +367,11 @@ fn run_ssfl(rt: &Runtime, h: &mut Harness) -> Result<()> {
     let enc_len = h.server.enc.len();
     let clf_len = h.server.clf_s.len();
     let smashed = h.cost.smashed_bytes(dim);
+    let smashed_elems = rt.model().smashed_elems();
+    // g_z has the smashed-data shape, so its frame size is known before
+    // the server computes it — the exchange timeout roll prices both
+    // directions up front.
+    let gz_frame_len = h.wire.frame_len(MsgType::ActGrad, smashed_elems);
     // SSFL depths are fixed for the run: precompute the per-client server
     // step times through the single shared helper.
     let srv_times: Vec<f64> = h
@@ -391,10 +419,12 @@ fn run_ssfl(rt: &Runtime, h: &mut Harness) -> Result<()> {
                 net,
                 cost,
                 train,
+                wire,
                 ..
             } = h;
             let cost = &*cost;
             let train = &*train;
+            let wire = &*wire;
 
             let mut lanes: Vec<SsflLane<'_>> = Vec::with_capacity(n);
             let mut srv_it = lane_srv.iter_mut();
@@ -423,31 +453,55 @@ fn run_ssfl(rt: &Runtime, h: &mut Harness) -> Result<()> {
                     let t1 = cost.time_s(cost.client_local_flops(depth), lane.profile.flops);
                     lane.ledger.work(lane.profile, t1);
 
-                    // Phase 2 attempt: smashed data up, g_z down.
-                    let ex = lane.net.exchange(smashed, smashed, srv_time);
+                    // Phase 2 attempt: smashed activations up, g_z down,
+                    // both as wire frames — the link is charged with the
+                    // encoded bytes, the analytic f32 count rides along
+                    // as raw. The uplink frame is built (and charged)
+                    // even when the exchange times out: the client
+                    // transmitted before it could observe the failure.
+                    let up = wire.encode(MsgType::Smashed, &local.z, 0.0);
+                    let ex = lane.net.exchange_framed(
+                        Framed {
+                            wire: up.len() as u64,
+                            raw: smashed,
+                        },
+                        Framed {
+                            wire: gz_frame_len,
+                            raw: smashed,
+                        },
+                        srv_time,
+                    );
                     lane.ledger.exchange(lane.profile, ex.time_s(), srv_time);
 
                     if ex.is_ok() {
                         // Lane-local server step against the round-start
-                        // suffix snapshot (merged at the barrier).
+                        // suffix snapshot (merged at the barrier), on the
+                        // server's *decoded* view of the activations.
+                        let z_server = wire.decode(&up)?.data;
                         let out = rt.server_step(
                             depth,
                             classes,
                             &*lane.srv,
                             &*lane.clf,
-                            &local.z,
+                            &z_server,
                             &batch.y,
                         )?;
                         math::sgd_step(lane.srv, &out.g_srv, lr_server);
                         math::sgd_step(lane.clf, &out.g_clf_s, lr_server);
                         lane.ledger.server_step(srv_time);
 
+                        // The activation gradient comes back as a frame
+                        // too; the client backprops the decoded tensor.
+                        let down = wire.encode(MsgType::ActGrad, &out.g_z, 0.0);
+                        debug_assert_eq!(down.len() as u64, gz_frame_len);
+                        let g_z = wire.decode(&down)?.data;
+
                         // Phase 2 client backprop + Phase 3 fusion.
                         lane.client.phase2_phase3(
                             rt,
                             &batch,
                             &local,
-                            &out.g_z,
+                            &g_z,
                             out.loss,
                             tpgf_mode,
                             fuse_via_artifact,
@@ -504,9 +558,30 @@ fn run_ssfl(rt: &Runtime, h: &mut Harness) -> Result<()> {
         }
 
         // ---- Collaborative aggregation (Eq. 6–8) ----
+        // Each client uploads its whole subnetwork — encoder prefix θ_i
+        // plus auxiliary classifier φ_i — as one PrefixUpload frame, with
+        // the Eq. 6 loss in the frame header (raw f64 bits: exact under
+        // every codec). The server aggregates the *decoded* prefixes, so
+        // lossy codecs perturb aggregation end to end. The uplink is
+        // charged with the actual frame bytes, classifier included (the
+        // seed accounting charged `enc_bytes()` alone).
         let mut agg_branch = vec![0.0f64; n];
+        // (prefix elems, decoded payload, header loss) per client.
+        let mut uploads: Vec<(usize, Vec<f32>, f64)> = Vec::with_capacity(n);
         for ci in 0..n {
-            agg_branch[ci] = h.net.bulk_up(ci, h.clients[ci].enc_bytes());
+            let c = &h.clients[ci];
+            let payload = c.upload_payload();
+            let loss = c.aggregation_loss(tpgf_mode, total_layers).unwrap_or(1.0);
+            let frame = h.wire.encode(MsgType::PrefixUpload, &payload, loss);
+            agg_branch[ci] = h.net.bulk_up_framed(
+                ci,
+                Framed {
+                    wire: frame.len() as u64,
+                    raw: (payload.len() * 4) as u64,
+                },
+            );
+            let dec = h.wire.decode(&frame)?;
+            uploads.push((c.enc.len(), dec.data, dec.aux));
         }
         h.charge_barrier_phase(&agg_branch);
 
@@ -514,13 +589,12 @@ fn run_ssfl(rt: &Runtime, h: &mut Harness) -> Result<()> {
             let updates: Vec<ClientUpdate<'_>> = h
                 .clients
                 .iter()
-                .map(|c| ClientUpdate {
+                .zip(uploads.iter())
+                .map(|(c, (prefix_elems, data, loss))| ClientUpdate {
                     client: c.id,
                     depth: c.depth,
-                    params: &c.enc,
-                    loss: c
-                        .aggregation_loss(tpgf_mode, total_layers)
-                        .unwrap_or(1.0),
+                    params: &data[..*prefix_elems],
+                    loss: *loss,
                 })
                 .collect();
             h.server
@@ -532,12 +606,37 @@ fn run_ssfl(rt: &Runtime, h: &mut Harness) -> Result<()> {
         h.clock.advance(agg_compute);
 
         // ---- Broadcast the refreshed prefixes ----
-        // Zero-copy: every client syncs straight from the borrowed global
-        // encoder slice (no per-client clone of θ).
+        // One Broadcast frame per client; the client syncs from the
+        // *decoded* tensor. Under fp32 this is bit-identical to syncing
+        // from the borrowed global slice; lossy codecs perturb the
+        // client's round-start weights here. Clients sharing a depth
+        // receive byte-identical frames, so encode/decode once per
+        // distinct prefix length and charge each client its copy.
         let mut bc_branch = vec![0.0f64; n];
+        // (prefix elems, frame bytes, decoded tensor) per distinct depth.
+        let mut bc_cache: Vec<(usize, u64, Vec<f32>)> = Vec::new();
         for ci in 0..n {
-            bc_branch[ci] = h.net.bulk_down(ci, h.clients[ci].enc_bytes());
-            h.clients[ci].sync_from_global(&h.server.enc);
+            let prefix_elems = h.clients[ci].enc.len();
+            let slot = match bc_cache.iter().position(|(e, _, _)| *e == prefix_elems) {
+                Some(i) => i,
+                None => {
+                    let frame = h
+                        .wire
+                        .encode(MsgType::Broadcast, &h.server.enc[..prefix_elems], 0.0);
+                    let dec = h.wire.decode(&frame)?;
+                    bc_cache.push((prefix_elems, frame.len() as u64, dec.data));
+                    bc_cache.len() - 1
+                }
+            };
+            let (_, frame_bytes, decoded) = &bc_cache[slot];
+            bc_branch[ci] = h.net.bulk_down_framed(
+                ci,
+                Framed {
+                    wire: *frame_bytes,
+                    raw: (prefix_elems * 4) as u64,
+                },
+            );
+            h.clients[ci].sync_from_global(decoded);
         }
         h.charge_barrier_phase(&bc_branch);
 
@@ -596,6 +695,9 @@ mod tests {
         let res = run_experiment(&rt, &tiny_cfg()).unwrap();
         assert_eq!(res.metrics.rounds.len(), 2);
         assert!(res.metrics.total_comm_mb > 0.0);
+        assert!(res.metrics.total_raw_mb > 0.0);
+        assert!(res.metrics.rounds[0].compression > 0.0);
+        assert!(!res.metrics.wire_codec.is_empty());
         assert!(res.metrics.total_sim_time_s > 0.0);
         assert!(res.metrics.total_energy_j > 0.0);
         assert!(res.metrics.rounds[0].server_steps > 0);
@@ -652,6 +754,180 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// Satellite regression for the aggregation/broadcast accounting fix:
+    /// with the fp32 codec and a failure-free network, every round's byte
+    /// total must equal exact frame arithmetic — per step one Smashed +
+    /// one ActGrad frame, per barrier one PrefixUpload frame (prefix
+    /// **plus client classifier**) up and one Broadcast frame (prefix)
+    /// down per client. Pins both the encoded and the raw ledgers.
+    #[test]
+    fn ssfl_round_bytes_match_frame_arithmetic() {
+        if std::env::var("SUPERSFL_WIRE").is_ok() {
+            return; // the env override changes the frame sizes pinned here
+        }
+        let rt = runtime();
+        let cfg = tiny_cfg();
+        let h = Harness::prepare(&rt, &cfg).unwrap();
+        let wire = Wire::new(WireCodecKind::Fp32);
+        let se = rt.model().smashed_elems();
+        let steps = cfg.train.local_steps as u64;
+
+        let mut wire_bytes = 0u64;
+        let mut raw_bytes = 0u64;
+        let mut wire_bytes_without_clf = 0u64;
+        for c in &h.clients {
+            wire_bytes += steps
+                * (wire.frame_len(MsgType::Smashed, se) + wire.frame_len(MsgType::ActGrad, se))
+                + wire.frame_len(MsgType::PrefixUpload, c.upload_elems())
+                + wire.frame_len(MsgType::Broadcast, c.enc.len());
+            raw_bytes += steps * 2 * (4 * se as u64)
+                + (c.upload_elems() * 4) as u64
+                + (c.enc.len() * 4) as u64;
+            wire_bytes_without_clf += steps
+                * (wire.frame_len(MsgType::Smashed, se) + wire.frame_len(MsgType::ActGrad, se))
+                + wire.frame_len(MsgType::PrefixUpload, c.enc.len())
+                + wire.frame_len(MsgType::Broadcast, c.enc.len());
+        }
+        // The uplink must actually include the classifier payload.
+        assert!(wire_bytes > wire_bytes_without_clf);
+
+        let res = run_experiment(&rt, &cfg).unwrap();
+        let expect_mb = wire_bytes as f64 / 1e6;
+        let expect_raw_mb = raw_bytes as f64 / 1e6;
+        for r in &res.metrics.rounds {
+            assert_eq!(
+                r.comm_mb.to_bits(),
+                expect_mb.to_bits(),
+                "round {} encoded bytes drifted from frame arithmetic",
+                r.round
+            );
+            assert_eq!(
+                r.raw_mb.to_bits(),
+                expect_raw_mb.to_bits(),
+                "round {} raw bytes drifted from the analytic 4·n count",
+                r.round
+            );
+        }
+    }
+
+    /// Acceptance: on the 3-round/8-client native scenario the lossy
+    /// codecs must cut encoded bytes ≥ 3× while training stays sane, and
+    /// fp32 itself must pay only frame overhead (ratio just under 1).
+    ///
+    /// On accuracy closeness: a numpy port of this exact loop (native
+    /// geometry, seed-7 fleet depths, same protocol math) measured int8's
+    /// post-round loss within < 1% of fp32's, but *final accuracies* of a
+    /// 3-round run cluster at near-chance levels where run-to-run gaps of
+    /// ±10+ points are pure noise (topk's sparser updates shift the
+    /// trajectory wholesale). A "final accuracy within N points" assert
+    /// would therefore flake without detecting anything; instead this
+    /// test pins the robust invariants — compression, codec-independent
+    /// raw ledgers, int8's early-dynamics closeness via the round-2 mean
+    /// client loss — and the exact int8 trajectory is pinned bit-for-bit
+    /// by the `native_ssfl_3r8c_int8.json` golden snapshot, which is the
+    /// stronger drift detector.
+    #[test]
+    fn lossy_codecs_compress_3x_and_keep_training_sane() {
+        if std::env::var("SUPERSFL_WIRE").is_ok() {
+            return; // the env override would pin every run to one codec
+        }
+        let rt = runtime();
+        let mut base = ExperimentConfig::default()
+            .with_clients(8)
+            .with_rounds(3)
+            .with_seed(7);
+        base.data.train_per_class = 20;
+        base.data.test_total = 400;
+        base.train.local_steps = 1;
+        base.train.eval_samples = 200;
+
+        let run = |w: WireCodecKind| {
+            let cfg = base.clone().with_wire(w);
+            run_experiment(&rt, &cfg).unwrap().metrics
+        };
+
+        let fp32 = run(WireCodecKind::Fp32);
+        assert_eq!(fp32.wire_codec, "fp32");
+        assert!(
+            fp32.compression > 0.99 && fp32.compression <= 1.0,
+            "fp32 pays only frame overhead, got ratio {}",
+            fp32.compression
+        );
+
+        for kind in [WireCodecKind::Int8, WireCodecKind::TopK(10)] {
+            let m = run(kind);
+            assert_eq!(m.wire_codec, kind.label());
+            assert!(
+                m.compression >= 3.0,
+                "{}: raw {:.3} MB / encoded {:.3} MB = {:.2}× (< 3×)",
+                m.wire_codec,
+                m.total_raw_mb,
+                m.total_comm_mb,
+                m.compression
+            );
+            // Raw traffic is codec-independent: same protocol, same bytes.
+            assert_eq!(
+                m.total_raw_mb.to_bits(),
+                fp32.total_raw_mb.to_bits(),
+                "{}: raw ledger must not depend on the codec",
+                m.wire_codec
+            );
+            // Training must stay sane under lossy exchange.
+            for r in &m.rounds {
+                assert!((0.0..=1.0).contains(&r.accuracy), "{}", m.wire_codec);
+                assert!(
+                    r.mean_client_loss.is_finite() && r.mean_client_loss > 0.0,
+                    "{}: round {} client loss {}",
+                    m.wire_codec,
+                    r.round,
+                    r.mean_client_loss
+                );
+            }
+            if kind == WireCodecKind::Int8 {
+                // One full round of int8-quantized exchanges must leave the
+                // next round's mean client loss close to fp32's (quantizer
+                // error is ≤ (max−min)/510 per element; the numpy port
+                // measured < 1% drift here — 15% is a wide safety margin).
+                let l_fp32 = fp32.rounds[1].mean_client_loss;
+                let l_int8 = m.rounds[1].mean_client_loss;
+                assert!(
+                    (l_int8 / l_fp32 - 1.0).abs() <= 0.15,
+                    "int8 round-2 loss {l_int8:.4} drifted > 15% from fp32 {l_fp32:.4}"
+                );
+            }
+        }
+    }
+
+    /// Codecs are pure functions, so the engine's bit-identity contract
+    /// must survive lossy encoding: an int8 run is thread-invariant too.
+    #[test]
+    fn lossy_codec_runs_are_thread_invariant() {
+        if std::env::var("SUPERSFL_WIRE").is_ok() {
+            return;
+        }
+        let rt = runtime();
+        let run = |threads: usize| {
+            let mut cfg = tiny_cfg().with_wire(WireCodecKind::Int8);
+            cfg.fleet.clients = 5;
+            cfg.threads = threads;
+            run_experiment(&rt, &cfg).unwrap()
+        };
+        let a = run(1);
+        let b = run(4);
+        assert_eq!(
+            a.metrics.final_accuracy.to_bits(),
+            b.metrics.final_accuracy.to_bits()
+        );
+        assert_eq!(
+            a.metrics.total_comm_mb.to_bits(),
+            b.metrics.total_comm_mb.to_bits()
+        );
+        assert_eq!(
+            a.metrics.total_raw_mb.to_bits(),
+            b.metrics.total_raw_mb.to_bits()
+        );
     }
 
     #[test]

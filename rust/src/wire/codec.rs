@@ -1,0 +1,643 @@
+//! Payload codecs: how a flat `f32` tensor becomes wire bytes.
+//!
+//! Every codec is a pure, deterministic function of its input — no RNG,
+//! no global state — so the parallel round engine can encode/decode on
+//! any worker thread with bit-identical results for every `--threads N`
+//! (the same contract as the rest of the hot path). The encoded size is
+//! a pure function of the element count ([`PayloadCodec::encoded_len`]),
+//! which lets the network simulator price a response frame before the
+//! response tensor exists (the timeout roll needs both directions up
+//! front).
+//!
+//! | codec        | id | bytes/elem      | loss                         |
+//! |--------------|----|-----------------|------------------------------|
+//! | [`Fp32Raw`]  | 0  | 4               | none (bit-exact)             |
+//! | [`Fp16`]     | 1  | 2               | round-to-nearest-even half   |
+//! | [`Int8Affine`]| 2 | 1 (+8 header)   | ≤ (max−min)/510 per element  |
+//! | [`TopK`]     | 3  | 8·k% (+4)       | drops all but top-k% by |x|  |
+
+use crate::{Error, Result};
+
+/// Codec ids as stored in the frame header.
+pub const CODEC_FP32: u8 = 0;
+pub const CODEC_FP16: u8 = 1;
+pub const CODEC_INT8: u8 = 2;
+pub const CODEC_TOPK: u8 = 3;
+
+/// A deterministic tensor payload codec. Object-safe: the wire policy
+/// stores `Box<dyn PayloadCodec>` per message class.
+pub trait PayloadCodec: Send + Sync {
+    /// Frame-header codec id.
+    fn id(&self) -> u8;
+    /// Human-readable name ("fp32", "int8", "topk:10", …).
+    fn label(&self) -> String;
+    /// Exact payload size for a tensor of `elems` f32s — a pure function
+    /// of the element count, independent of the values.
+    fn encoded_len(&self, elems: usize) -> usize;
+    /// Append the encoded payload to `out`.
+    fn encode_into(&self, data: &[f32], out: &mut Vec<u8>);
+    /// Decode a payload back to `elems` f32s. Validates the payload
+    /// shape; returns [`Error::Wire`] (never panics) on malformed input.
+    fn decode(&self, payload: &[u8], elems: usize) -> Result<Vec<f32>>;
+}
+
+/// Dispatch a decode on the frame's self-describing codec id (the
+/// receiver does not need to know the sender's policy or TopK ratio).
+pub fn decode_by_id(codec_id: u8, payload: &[u8], elems: usize) -> Result<Vec<f32>> {
+    match codec_id {
+        CODEC_FP32 => Fp32Raw.decode(payload, elems),
+        CODEC_FP16 => Fp16.decode(payload, elems),
+        CODEC_INT8 => Int8Affine.decode(payload, elems),
+        CODEC_TOPK => TopK { percent: 1 }.decode(payload, elems), // ratio is encode-side only
+        other => Err(Error::Wire(format!("unknown payload codec id {other}"))),
+    }
+}
+
+// ---------------------------------------------------------------- fp32
+
+/// Raw little-endian f32 — the identity codec. Bit-exact, including NaN
+/// payloads and signed zeros, so an `fp32` run's training trajectory is
+/// indistinguishable from never serializing at all.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Fp32Raw;
+
+impl PayloadCodec for Fp32Raw {
+    fn id(&self) -> u8 {
+        CODEC_FP32
+    }
+
+    fn label(&self) -> String {
+        "fp32".into()
+    }
+
+    fn encoded_len(&self, elems: usize) -> usize {
+        4 * elems
+    }
+
+    fn encode_into(&self, data: &[f32], out: &mut Vec<u8>) {
+        out.reserve(4 * data.len());
+        for v in data {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    fn decode(&self, payload: &[u8], elems: usize) -> Result<Vec<f32>> {
+        if payload.len() != 4 * elems {
+            return Err(Error::Wire(format!(
+                "fp32 payload is {} bytes, expected {} for {elems} elems",
+                payload.len(),
+                4 * elems
+            )));
+        }
+        let mut out = Vec::with_capacity(elems);
+        for c in payload.chunks_exact(4) {
+            out.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+        }
+        Ok(out)
+    }
+}
+
+// ---------------------------------------------------------------- fp16
+
+/// IEEE 754 binary16 with round-to-nearest-even (hand-rolled — the
+/// offline crate set has no `half`). Overflow saturates to ±∞, NaN maps
+/// to the canonical quiet NaN, subnormals and signed zeros are exact.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Fp16;
+
+/// f32 → binary16 bits, round-to-nearest-even.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let b = x.to_bits();
+    let sign = ((b >> 16) & 0x8000) as u16;
+    let exp = ((b >> 23) & 0xFF) as i32;
+    let man = b & 0x007F_FFFF;
+    if exp == 255 {
+        // Inf stays inf; every NaN becomes the canonical quiet NaN.
+        return if man == 0 { sign | 0x7C00 } else { sign | 0x7E00 };
+    }
+    let unbiased = exp - 127;
+    if unbiased > 15 {
+        return sign | 0x7C00; // overflow → ±inf
+    }
+    if unbiased >= -14 {
+        // Normal half: 13 mantissa bits shift out with RNE.
+        let mant = man >> 13;
+        let rem = man & 0x1FFF;
+        let mut h = (((unbiased + 15) as u32) << 10) | mant;
+        if rem > 0x1000 || (rem == 0x1000 && (mant & 1) == 1) {
+            h += 1; // carry may roll into the exponent (correct: → inf)
+        }
+        return sign | h as u16;
+    }
+    if unbiased < -25 {
+        return sign; // underflows to ±0 even after rounding
+    }
+    // Subnormal half: shift the full 24-bit significand down with RNE.
+    let full = man | 0x0080_0000;
+    let shift = (13 - 14 - unbiased) as u32; // in [14, 24]
+    let m = full >> shift;
+    let rem = full & ((1u32 << shift) - 1);
+    let half = 1u32 << (shift - 1);
+    let m = if rem > half || (rem == half && (m & 1) == 1) {
+        m + 1 // may roll into the smallest normal — still the right bits
+    } else {
+        m
+    };
+    sign | m as u16
+}
+
+/// binary16 bits → f32 (exact widening).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h as u32) & 0x8000) << 16;
+    let exp = (h >> 10) & 0x1F;
+    let man = (h & 0x03FF) as u32;
+    match exp {
+        0 => {
+            // ±0 and subnormals: man · 2⁻²⁴ (exactly representable).
+            let mag = man as f32 * f32::from_bits(0x3380_0000); // 2^-24
+            if sign != 0 {
+                -mag
+            } else {
+                mag
+            }
+        }
+        31 => f32::from_bits(sign | 0x7F80_0000 | (man << 13)),
+        e => f32::from_bits(sign | ((e as u32 + 112) << 23) | (man << 13)),
+    }
+}
+
+impl PayloadCodec for Fp16 {
+    fn id(&self) -> u8 {
+        CODEC_FP16
+    }
+
+    fn label(&self) -> String {
+        "fp16".into()
+    }
+
+    fn encoded_len(&self, elems: usize) -> usize {
+        2 * elems
+    }
+
+    fn encode_into(&self, data: &[f32], out: &mut Vec<u8>) {
+        out.reserve(2 * data.len());
+        for &v in data {
+            out.extend_from_slice(&f32_to_f16_bits(v).to_le_bytes());
+        }
+    }
+
+    fn decode(&self, payload: &[u8], elems: usize) -> Result<Vec<f32>> {
+        if payload.len() != 2 * elems {
+            return Err(Error::Wire(format!(
+                "fp16 payload is {} bytes, expected {} for {elems} elems",
+                payload.len(),
+                2 * elems
+            )));
+        }
+        let mut out = Vec::with_capacity(elems);
+        for c in payload.chunks_exact(2) {
+            out.push(f16_bits_to_f32(u16::from_le_bytes([c[0], c[1]])));
+        }
+        Ok(out)
+    }
+}
+
+// ---------------------------------------------------------------- int8
+
+/// Per-tensor affine 8-bit quantization: `x ≈ min + q·scale` with
+/// `scale = (max−min)/255` over the tensor's finite values and
+/// `q = round((x−min)/scale)` clamped to `[0, 255]`. Payload:
+/// `[f32 scale][f32 min][u8 q; elems]`. Worst-case per-element error for
+/// finite inputs is `scale/2 = (max−min)/510`; non-finite inputs clamp
+/// to the range ends (+∞ → max, −∞/NaN → min), keeping the decode
+/// finite and deterministic.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Int8Affine;
+
+impl PayloadCodec for Int8Affine {
+    fn id(&self) -> u8 {
+        CODEC_INT8
+    }
+
+    fn label(&self) -> String {
+        "int8".into()
+    }
+
+    fn encoded_len(&self, elems: usize) -> usize {
+        8 + elems
+    }
+
+    fn encode_into(&self, data: &[f32], out: &mut Vec<u8>) {
+        let mut mn = f32::INFINITY;
+        let mut mx = f32::NEG_INFINITY;
+        for &v in data {
+            if v.is_finite() {
+                if v < mn {
+                    mn = v;
+                }
+                if v > mx {
+                    mx = v;
+                }
+            }
+        }
+        if mn > mx {
+            // Empty tensor or no finite values: a degenerate zero range.
+            mn = 0.0;
+            mx = 0.0;
+        }
+        // Range arithmetic in f64 so a tensor spanning most of the f32
+        // range (a diverging run) cannot overflow the scale to +inf —
+        // which the decoder would rightly reject, aborting the whole run
+        // instead of degrading like any other lossy tensor.
+        let scale64 = ((mx as f64 - mn as f64) / 255.0).min(f32::MAX as f64);
+        let scale = scale64 as f32;
+        out.reserve(8 + data.len());
+        out.extend_from_slice(&scale.to_le_bytes());
+        out.extend_from_slice(&mn.to_le_bytes());
+        for &v in data {
+            let q = if scale > 0.0 {
+                // NaN falls through both clamp bounds and casts to 0.
+                ((v as f64 - mn as f64) / scale as f64).round().clamp(0.0, 255.0) as u8
+            } else {
+                0
+            };
+            out.push(q);
+        }
+    }
+
+    fn decode(&self, payload: &[u8], elems: usize) -> Result<Vec<f32>> {
+        if payload.len() != 8 + elems {
+            return Err(Error::Wire(format!(
+                "int8 payload is {} bytes, expected {} for {elems} elems",
+                payload.len(),
+                8 + elems
+            )));
+        }
+        let scale = f32::from_le_bytes([payload[0], payload[1], payload[2], payload[3]]);
+        let mn = f32::from_le_bytes([payload[4], payload[5], payload[6], payload[7]]);
+        if !scale.is_finite() || !mn.is_finite() || scale < 0.0 {
+            return Err(Error::Wire(format!(
+                "int8 header is not a valid affine map: scale {scale}, min {mn}"
+            )));
+        }
+        Ok(payload[8..]
+            .iter()
+            .map(|&q| mn + q as f32 * scale)
+            .collect())
+    }
+}
+
+// ---------------------------------------------------------------- topk
+
+/// Magnitude top-k sparsification: keep the `percent`% largest-|x|
+/// entries (at least one), drop the rest to zero. Ties break toward the
+/// lower index, so selection is fully deterministic. Payload:
+/// `[u32 count][u32 index; count][f32 value; count]` with indices
+/// strictly ascending. Values are shipped in full f32 precision — the
+/// loss is the dropped mass, not quantization.
+///
+/// Meaningful for activation/gradient tensors only; the wire policy
+/// never applies it to parameter frames (zeroing 1−k% of raw weights
+/// would destroy the model, not compress it — see [`super::Wire`]).
+#[derive(Clone, Copy, Debug)]
+pub struct TopK {
+    /// Kept fraction in percent, clamped to [1, 100] by the parser.
+    pub percent: u8,
+}
+
+impl TopK {
+    /// Entries kept for a tensor of `elems` values.
+    pub fn count(&self, elems: usize) -> usize {
+        if elems == 0 {
+            0
+        } else {
+            (elems * self.percent as usize / 100).max(1)
+        }
+    }
+}
+
+impl PayloadCodec for TopK {
+    fn id(&self) -> u8 {
+        CODEC_TOPK
+    }
+
+    fn label(&self) -> String {
+        format!("topk:{}", self.percent)
+    }
+
+    fn encoded_len(&self, elems: usize) -> usize {
+        4 + 8 * self.count(elems)
+    }
+
+    fn encode_into(&self, data: &[f32], out: &mut Vec<u8>) {
+        let n = data.len();
+        let k = self.count(n);
+        let mut order: Vec<u32> = (0..n as u32).collect();
+        if k < n {
+            // Total order: |x| descending, index ascending on ties — the
+            // same selection on every thread and every run.
+            let by_mag = |&i: &u32, &j: &u32| {
+                data[j as usize]
+                    .abs()
+                    .total_cmp(&data[i as usize].abs())
+                    .then(i.cmp(&j))
+            };
+            order.select_nth_unstable_by(k - 1, by_mag);
+            order.truncate(k);
+        }
+        order.sort_unstable(); // ascending index for locality + determinism
+        out.reserve(4 + 8 * k);
+        out.extend_from_slice(&(k as u32).to_le_bytes());
+        for &i in &order {
+            out.extend_from_slice(&i.to_le_bytes());
+        }
+        for &i in &order {
+            out.extend_from_slice(&data[i as usize].to_le_bytes());
+        }
+    }
+
+    fn decode(&self, payload: &[u8], elems: usize) -> Result<Vec<f32>> {
+        if payload.len() < 4 {
+            return Err(Error::Wire("topk payload shorter than its count".into()));
+        }
+        let count = u32::from_le_bytes([payload[0], payload[1], payload[2], payload[3]]) as usize;
+        if payload.len() != 4 + 8 * count {
+            return Err(Error::Wire(format!(
+                "topk payload is {} bytes, expected {} for count {count}",
+                payload.len(),
+                4 + 8 * count
+            )));
+        }
+        if count > elems {
+            return Err(Error::Wire(format!(
+                "topk count {count} exceeds tensor size {elems}"
+            )));
+        }
+        let idx_bytes = &payload[4..4 + 4 * count];
+        let val_bytes = &payload[4 + 4 * count..];
+        let mut out = vec![0.0f32; elems];
+        let mut prev: Option<u32> = None;
+        for (ib, vb) in idx_bytes.chunks_exact(4).zip(val_bytes.chunks_exact(4)) {
+            let i = u32::from_le_bytes([ib[0], ib[1], ib[2], ib[3]]);
+            if i as usize >= elems {
+                return Err(Error::Wire(format!(
+                    "topk index {i} out of range for {elems} elems"
+                )));
+            }
+            if let Some(p) = prev {
+                if i <= p {
+                    return Err(Error::Wire(format!(
+                        "topk indices not strictly ascending ({p} then {i})"
+                    )));
+                }
+            }
+            prev = Some(i);
+            out[i as usize] = f32::from_le_bytes([vb[0], vb[1], vb[2], vb[3]]);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+    use crate::util::rng::Pcg32;
+
+    fn random_tensor(rng: &mut Pcg32, n: usize, scale: f64) -> Vec<f32> {
+        (0..n).map(|_| (rng.normal() * scale) as f32).collect()
+    }
+
+    fn roundtrip(codec: &dyn PayloadCodec, data: &[f32]) -> Vec<f32> {
+        let mut payload = Vec::new();
+        codec.encode_into(data, &mut payload);
+        assert_eq!(
+            payload.len(),
+            codec.encoded_len(data.len()),
+            "{} encoded_len must match the actual encoding",
+            codec.label()
+        );
+        codec.decode(&payload, data.len()).unwrap()
+    }
+
+    // ---- fp32 ----
+
+    #[test]
+    fn prop_fp32_roundtrip_is_bit_exact() {
+        forall(0xF32, 40, |rng| {
+            let n = rng.uniform_usize(300);
+            let mut data = random_tensor(rng, n, 100.0);
+            if n > 2 {
+                data[0] = f32::NAN;
+                data[1] = f32::NEG_INFINITY;
+                data[2] = -0.0;
+            }
+            let dec = roundtrip(&Fp32Raw, &data);
+            for (a, b) in data.iter().zip(dec.iter()) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        });
+    }
+
+    // ---- fp16 ----
+
+    #[test]
+    fn f16_known_values() {
+        assert_eq!(f32_to_f16_bits(0.0), 0x0000);
+        assert_eq!(f32_to_f16_bits(-0.0), 0x8000);
+        assert_eq!(f32_to_f16_bits(1.0), 0x3C00);
+        assert_eq!(f32_to_f16_bits(-2.0), 0xC000);
+        assert_eq!(f32_to_f16_bits(65504.0), 0x7BFF); // max finite half
+        assert_eq!(f32_to_f16_bits(65520.0), 0x7C00); // rounds to inf
+        assert_eq!(f32_to_f16_bits(1e9), 0x7C00); // saturates
+        assert_eq!(f32_to_f16_bits(f32::INFINITY), 0x7C00);
+        assert_eq!(f32_to_f16_bits(f32::NEG_INFINITY), 0xFC00);
+        assert_eq!(f32_to_f16_bits(6.103_515_6e-5), 0x0400); // min normal
+        assert_eq!(f32_to_f16_bits(5.960_464_5e-8), 0x0001); // min subnormal
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+    }
+
+    /// Half → single → half is the identity for every one of the 65536
+    /// bit patterns (NaNs map to NaN). The strongest possible exactness
+    /// check for both conversion directions.
+    #[test]
+    fn f16_exhaustive_widening_roundtrip() {
+        for h in 0..=u16::MAX {
+            let x = f16_bits_to_f32(h);
+            let back = f32_to_f16_bits(x);
+            if x.is_nan() {
+                assert!(f16_bits_to_f32(back).is_nan(), "bits {h:#06x}");
+            } else {
+                assert_eq!(back, h, "bits {h:#06x} → {x} → {back:#06x}");
+            }
+        }
+    }
+
+    #[test]
+    fn prop_fp16_roundtrip_within_half_ulp() {
+        forall(0xF16, 60, |rng| {
+            let n = 1 + rng.uniform_usize(200);
+            let scale = 10f64.powf(rng.uniform_range(-3.0, 3.0));
+            let data = random_tensor(rng, n, scale);
+            let dec = roundtrip(&Fp16, &data);
+            for (&x, &d) in data.iter().zip(dec.iter()) {
+                // RNE half: relative error ≤ 2⁻¹¹ in the normal range,
+                // absolute ≤ 2⁻²⁵ in the subnormal range.
+                let bound = (x.abs() as f64 * 2f64.powi(-11)).max(2f64.powi(-25));
+                assert!(
+                    ((d - x) as f64).abs() <= bound,
+                    "x {x} dec {d} bound {bound}"
+                );
+            }
+        });
+    }
+
+    // ---- int8 ----
+
+    #[test]
+    fn prop_int8_roundtrip_within_analytic_bound() {
+        forall(0x18, 60, |rng| {
+            let n = 1 + rng.uniform_usize(300);
+            let data = random_tensor(rng, n, 10f64.powf(rng.uniform_range(-2.0, 2.0)));
+            let mn = data.iter().cloned().fold(f32::INFINITY, f32::min);
+            let mx = data.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let scale = (mx - mn) / 255.0;
+            let dec = roundtrip(&Int8Affine, &data);
+            // Worst case is half a quantization step; the small slack
+            // absorbs the fp arithmetic of the map itself (a near-tie in
+            // the round can land a hair past scale/2).
+            let bound = 0.5 * scale + scale * 1e-3 + 1e-12;
+            for (&x, &d) in data.iter().zip(dec.iter()) {
+                assert!((d - x).abs() <= bound, "x {x} dec {d} bound {bound}");
+            }
+        });
+    }
+
+    #[test]
+    fn int8_degenerate_and_nonfinite_inputs() {
+        // Constant tensor → zero range → decodes to the constant.
+        let dec = roundtrip(&Int8Affine, &[3.5; 9]);
+        assert!(dec.iter().all(|&v| v == 3.5));
+        // Empty tensor.
+        assert!(roundtrip(&Int8Affine, &[]).is_empty());
+        // Non-finite values clamp into the finite range; decode is finite.
+        let data = [1.0, f32::NAN, f32::INFINITY, f32::NEG_INFINITY, -1.0];
+        let dec = roundtrip(&Int8Affine, &data);
+        assert!(dec.iter().all(|v| v.is_finite()));
+        assert!((dec[2] - 1.0).abs() < 1e-2); // +inf → max
+        assert!((dec[3] + 1.0).abs() < 1e-2); // −inf → min
+        // A finite range spanning most of f32 must still produce a frame
+        // the decoder accepts (scale saturates instead of overflowing).
+        let wide = [-3.0e38f32, 3.0e38, 0.0];
+        let dec = roundtrip(&Int8Affine, &wide);
+        assert!(dec.iter().all(|v| v.is_finite()));
+    }
+
+    // ---- topk ----
+
+    #[test]
+    fn prop_topk_keeps_the_k_largest_magnitudes() {
+        forall(0x70, 60, |rng| {
+            let n = 1 + rng.uniform_usize(400);
+            let percent = 1 + rng.uniform_usize(50) as u8;
+            let codec = TopK { percent };
+            let data = random_tensor(rng, n, 1.0);
+            let dec = roundtrip(&codec, &data);
+
+            // Reference selection: |x| desc, index asc on ties.
+            let mut order: Vec<usize> = (0..n).collect();
+            order.sort_by(|&i, &j| data[j].abs().total_cmp(&data[i].abs()).then(i.cmp(&j)));
+            let k = codec.count(n);
+            let keep: std::collections::HashSet<usize> = order[..k].iter().copied().collect();
+
+            for (i, (&x, &d)) in data.iter().zip(dec.iter()).enumerate() {
+                if keep.contains(&i) {
+                    assert_eq!(x.to_bits(), d.to_bits(), "kept entry {i} must be exact");
+                } else {
+                    assert_eq!(d, 0.0, "dropped entry {i} must be zero");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn topk_count_floor_is_one() {
+        let c = TopK { percent: 10 };
+        assert_eq!(c.count(0), 0);
+        assert_eq!(c.count(1), 1);
+        assert_eq!(c.count(5), 1); // 0.5 floors, then max(1)
+        assert_eq!(c.count(40), 4);
+        assert_eq!(TopK { percent: 100 }.count(7), 7);
+    }
+
+    #[test]
+    fn topk_rejects_malformed_payloads() {
+        let codec = TopK { percent: 25 };
+        let mut payload = Vec::new();
+        codec.encode_into(&[1.0, -5.0, 2.0, 0.5], &mut payload);
+        // Valid baseline.
+        assert!(codec.decode(&payload, 4).is_ok());
+        // Count beyond the tensor.
+        assert!(codec.decode(&payload, 0).is_err());
+        // Truncated at every prefix.
+        for cut in 0..payload.len() {
+            assert!(codec.decode(&payload[..cut], 4).is_err());
+        }
+        // Out-of-range index.
+        let mut bad = payload.clone();
+        bad[4..8].copy_from_slice(&99u32.to_le_bytes());
+        assert!(codec.decode(&bad, 4).is_err());
+    }
+
+    #[test]
+    fn topk_duplicate_indices_rejected() {
+        // Hand-build a payload with a repeated index.
+        let mut p = Vec::new();
+        p.extend_from_slice(&2u32.to_le_bytes());
+        p.extend_from_slice(&1u32.to_le_bytes());
+        p.extend_from_slice(&1u32.to_le_bytes());
+        p.extend_from_slice(&1.0f32.to_le_bytes());
+        p.extend_from_slice(&2.0f32.to_le_bytes());
+        assert!(TopK { percent: 50 }.decode(&p, 4).is_err());
+    }
+
+    // ---- cross-codec ----
+
+    #[test]
+    fn decode_by_id_dispatches_every_codec() {
+        let data = [0.5f32, -1.5, 2.0, 0.25];
+        for codec in [
+            &Fp32Raw as &dyn PayloadCodec,
+            &Fp16,
+            &Int8Affine,
+            &TopK { percent: 50 },
+        ] {
+            let mut payload = Vec::new();
+            codec.encode_into(&data, &mut payload);
+            let dec = decode_by_id(codec.id(), &payload, data.len()).unwrap();
+            assert_eq!(dec.len(), data.len());
+        }
+        assert!(decode_by_id(99, &[], 0).is_err());
+    }
+
+    #[test]
+    fn encoded_len_is_value_independent() {
+        forall(0x1E4, 20, |rng| {
+            let n = rng.uniform_usize(200);
+            let a = random_tensor(rng, n, 1.0);
+            let b = random_tensor(rng, n, 1000.0);
+            for codec in [
+                &Fp32Raw as &dyn PayloadCodec,
+                &Fp16,
+                &Int8Affine,
+                &TopK { percent: 7 },
+            ] {
+                let (mut pa, mut pb) = (Vec::new(), Vec::new());
+                codec.encode_into(&a, &mut pa);
+                codec.encode_into(&b, &mut pb);
+                assert_eq!(pa.len(), pb.len());
+                assert_eq!(pa.len(), codec.encoded_len(n));
+            }
+        });
+    }
+}

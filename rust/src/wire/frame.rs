@@ -1,0 +1,293 @@
+//! The SuperSFL wire frame: a versioned, length-prefixed, checksummed
+//! binary envelope around one encoded tensor payload.
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic  b"SSFW"
+//! 4       1     format version (currently 1)
+//! 5       1     message type (MsgType)
+//! 6       1     payload codec id (wire::codec)
+//! 7       1     flags (reserved, must be 0)
+//! 8       4     u32: element count of the original f32 tensor
+//! 12      4     u32: payload byte length
+//! 16      8     f64: aux scalar (aggregation loss on PrefixUpload frames;
+//!               0 otherwise). Raw bits — never routed through the payload
+//!               codec, so it is exact under every codec.
+//! 24      …     payload (codec-specific encoding of the tensor)
+//! 24+len  4     u32: CRC-32 (IEEE) over every preceding byte
+//! ```
+//!
+//! Decoding is defensive by construction: every read is preceded by an
+//! explicit length check and every header field is validated before the
+//! payload is touched, so truncated or corrupted frames surface as
+//! [`crate::Error::Wire`] — never as a panic. The CRC detects any
+//! single-byte corruption of header or payload.
+
+use crate::{Error, Result};
+
+/// Frame magic: "SuperSFL Wire Frame".
+pub const MAGIC: [u8; 4] = *b"SSFW";
+/// Current frame format version.
+pub const VERSION: u8 = 1;
+/// Fixed header bytes before the payload.
+pub const HEADER_LEN: usize = 24;
+/// CRC trailer bytes after the payload.
+pub const TRAILER_LEN: usize = 4;
+/// Total framing overhead on top of the encoded payload.
+pub const OVERHEAD: usize = HEADER_LEN + TRAILER_LEN;
+
+/// The four SuperSFL client↔server exchanges (paper Alg. 2 + §II-D).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MsgType {
+    /// Phase-2 uplink: smashed activations `z` (client → server).
+    Smashed = 1,
+    /// Phase-2 downlink: activation gradient `g_z` (server → client).
+    ActGrad = 2,
+    /// Aggregation uplink: the client subnetwork — encoder prefix θ_i
+    /// followed by the auxiliary classifier φ_i when the method trains
+    /// one — with the Eq. 6 aggregation loss in the aux field.
+    PrefixUpload = 3,
+    /// Post-aggregation downlink: the refreshed parameter broadcast
+    /// (prefix for SSFL/SFL, the full backbone for DFL provisioning).
+    Broadcast = 4,
+}
+
+impl MsgType {
+    pub fn from_u8(v: u8) -> Result<MsgType> {
+        match v {
+            1 => Ok(MsgType::Smashed),
+            2 => Ok(MsgType::ActGrad),
+            3 => Ok(MsgType::PrefixUpload),
+            4 => Ok(MsgType::Broadcast),
+            other => Err(Error::Wire(format!("unknown message type {other}"))),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            MsgType::Smashed => "smashed",
+            MsgType::ActGrad => "act_grad",
+            MsgType::PrefixUpload => "prefix_upload",
+            MsgType::Broadcast => "broadcast",
+        }
+    }
+
+    /// Whether the payload is a parameter tensor (weights) rather than a
+    /// per-step activation/gradient tensor. Codec policies split on this:
+    /// sparsification is meaningful for activations and gradients but
+    /// zeroes most of the model if applied to raw weights.
+    pub fn is_params(&self) -> bool {
+        matches!(self, MsgType::PrefixUpload | MsgType::Broadcast)
+    }
+}
+
+/// CRC-32 (IEEE 802.3, reflected, init/xorout `!0`) — the ubiquitous
+/// variant (`zlib`, Ethernet, PNG). Table generated at compile time.
+const CRC_TABLE: [u32; 256] = crc_table();
+
+const fn crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+/// CRC-32 of a byte slice.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = !0u32;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+/// A decoded frame header (payload still encoded).
+#[derive(Clone, Debug)]
+pub struct FrameHeader {
+    pub msg: MsgType,
+    pub codec_id: u8,
+    pub elems: usize,
+    pub payload_len: usize,
+    pub aux: f64,
+}
+
+/// Serialize a frame around an already-encoded payload.
+pub fn write_frame(msg: MsgType, codec_id: u8, elems: usize, aux: f64, payload: &[u8]) -> Vec<u8> {
+    debug_assert!(elems <= u32::MAX as usize, "tensor too large for the frame format");
+    debug_assert!(payload.len() <= u32::MAX as usize);
+    let mut buf = Vec::with_capacity(OVERHEAD + payload.len());
+    buf.extend_from_slice(&MAGIC);
+    buf.push(VERSION);
+    buf.push(msg as u8);
+    buf.push(codec_id);
+    buf.push(0); // flags
+    buf.extend_from_slice(&(elems as u32).to_le_bytes());
+    buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    buf.extend_from_slice(&aux.to_le_bytes());
+    buf.extend_from_slice(payload);
+    let crc = crc32(&buf);
+    buf.extend_from_slice(&crc.to_le_bytes());
+    buf
+}
+
+fn read_u32(buf: &[u8], at: usize) -> u32 {
+    // Callers have already bounds-checked; the explicit copy keeps the
+    // read panic-free even if they have not.
+    let mut b = [0u8; 4];
+    b.copy_from_slice(&buf[at..at + 4]);
+    u32::from_le_bytes(b)
+}
+
+/// Validate the envelope and return the header + the payload slice.
+/// Rejects (never panics on) truncated, oversized, corrupted, or
+/// version-mismatched frames.
+pub fn read_frame(buf: &[u8]) -> Result<(FrameHeader, &[u8])> {
+    if buf.len() < OVERHEAD {
+        return Err(Error::Wire(format!(
+            "truncated frame: {} bytes < minimum {OVERHEAD}",
+            buf.len()
+        )));
+    }
+    if buf[..4] != MAGIC {
+        return Err(Error::Wire("bad magic (not a SuperSFL wire frame)".into()));
+    }
+    if buf[4] != VERSION {
+        return Err(Error::Wire(format!(
+            "unsupported frame version {} (this build speaks {VERSION})",
+            buf[4]
+        )));
+    }
+    let msg = MsgType::from_u8(buf[5])?;
+    let codec_id = buf[6];
+    if buf[7] != 0 {
+        return Err(Error::Wire(format!("unknown flags 0x{:02x}", buf[7])));
+    }
+    let elems = read_u32(buf, 8) as usize;
+    let payload_len = read_u32(buf, 12) as usize;
+    if buf.len() != OVERHEAD + payload_len {
+        return Err(Error::Wire(format!(
+            "length mismatch: frame is {} bytes but header declares a {payload_len}-byte payload",
+            buf.len()
+        )));
+    }
+    let body_end = HEADER_LEN + payload_len;
+    let declared_crc = read_u32(buf, body_end);
+    let actual_crc = crc32(&buf[..body_end]);
+    if declared_crc != actual_crc {
+        return Err(Error::Wire(format!(
+            "checksum mismatch: frame says {declared_crc:#010x}, computed {actual_crc:#010x}"
+        )));
+    }
+    let mut aux_b = [0u8; 8];
+    aux_b.copy_from_slice(&buf[16..24]);
+    let aux = f64::from_le_bytes(aux_b);
+    Ok((
+        FrameHeader {
+            msg,
+            codec_id,
+            elems,
+            payload_len,
+            aux,
+        },
+        &buf[HEADER_LEN..body_end],
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_known_vectors() {
+        // Standard IEEE CRC-32 check values.
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b"The quick brown fox jumps over the lazy dog"), 0x414F_A339);
+    }
+
+    #[test]
+    fn frame_roundtrip_preserves_header_and_payload() {
+        let payload = [1u8, 2, 3, 4, 5];
+        let buf = write_frame(MsgType::PrefixUpload, 2, 99, -1.25, &payload);
+        assert_eq!(buf.len(), OVERHEAD + payload.len());
+        let (h, p) = read_frame(&buf).unwrap();
+        assert_eq!(h.msg, MsgType::PrefixUpload);
+        assert_eq!(h.codec_id, 2);
+        assert_eq!(h.elems, 99);
+        assert_eq!(h.payload_len, 5);
+        assert_eq!(h.aux, -1.25);
+        assert_eq!(p, payload);
+    }
+
+    #[test]
+    fn aux_scalar_is_bit_exact() {
+        // The aux field bypasses the payload codec: arbitrary f64 bit
+        // patterns must survive exactly.
+        for v in [0.0, -0.0, 1.0 / 3.0, f64::MIN_POSITIVE, 1e308] {
+            let buf = write_frame(MsgType::Smashed, 0, 0, v, &[]);
+            let (h, _) = read_frame(&buf).unwrap();
+            assert_eq!(h.aux.to_bits(), v.to_bits());
+        }
+    }
+
+    #[test]
+    fn truncation_at_every_length_is_rejected_not_panicking() {
+        let buf = write_frame(MsgType::Broadcast, 1, 8, 0.0, &[9u8; 16]);
+        for cut in 0..buf.len() {
+            assert!(read_frame(&buf[..cut]).is_err(), "cut at {cut} must fail");
+        }
+    }
+
+    #[test]
+    fn every_single_byte_corruption_is_rejected() {
+        let buf = write_frame(MsgType::ActGrad, 3, 4, 2.0, &[7u8; 32]);
+        for i in 0..buf.len() {
+            let mut bad = buf.clone();
+            bad[i] ^= 0x5A;
+            assert!(read_frame(&bad).is_err(), "flip at byte {i} must fail");
+        }
+    }
+
+    #[test]
+    fn version_and_msg_type_validation() {
+        let mut buf = write_frame(MsgType::Smashed, 0, 1, 0.0, &[0, 0, 0, 0]);
+        buf[4] = 9; // future version
+        assert!(matches!(read_frame(&buf), Err(crate::Error::Wire(_))));
+        assert!(MsgType::from_u8(0).is_err());
+        assert!(MsgType::from_u8(5).is_err());
+        for m in [
+            MsgType::Smashed,
+            MsgType::ActGrad,
+            MsgType::PrefixUpload,
+            MsgType::Broadcast,
+        ] {
+            assert_eq!(MsgType::from_u8(m as u8).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn params_classification() {
+        assert!(!MsgType::Smashed.is_params());
+        assert!(!MsgType::ActGrad.is_params());
+        assert!(MsgType::PrefixUpload.is_params());
+        assert!(MsgType::Broadcast.is_params());
+    }
+
+    #[test]
+    fn appended_garbage_is_rejected() {
+        let mut buf = write_frame(MsgType::Smashed, 1, 1, 0.0, &[1, 2]);
+        buf.push(0xFF);
+        assert!(read_frame(&buf).is_err());
+    }
+}

@@ -1,0 +1,335 @@
+//! The wire subsystem: what actually crosses the simulated network.
+//!
+//! Before this module existed the repo *modeled* communication
+//! analytically — `4·n` bytes per f32 tensor, nothing ever serialized —
+//! so compression could not be studied and the Table I communication
+//! numbers could never diverge from the formula. Now every client↔server
+//! tensor exchange is routed through a real encode→decode pass:
+//!
+//! * [`frame`] — the versioned, length-prefixed, checksummed binary
+//!   envelope with one [`frame::MsgType`] per SuperSFL exchange
+//!   (smashed activations, activation gradients, encoder-prefix upload,
+//!   prefix/classifier broadcast);
+//! * [`codec`] — the [`codec::PayloadCodec`] implementations
+//!   (`fp32`/`fp16`/`int8`/`topk:<k>`), all deterministic pure functions;
+//! * [`Wire`] — the per-run policy mapping message classes to codecs and
+//!   the encode/decode entry points the orchestrator and baselines use.
+//!
+//! The network simulator is charged with the **actual frame bytes**
+//! (header + encoded payload + checksum), while the analytic `4·n` count
+//! is tracked alongside as "raw" traffic — the per-round compression
+//! ratio in [`crate::metrics::RoundRecord`] is their quotient. Lossy
+//! codecs feed the *decoded* tensors back into training, so the
+//! accuracy-vs-compression trade-off is measurable end to end.
+//!
+//! Selection: `cfg.wire` / `--wire-codec fp32|fp16|int8|topk:<k>`, with
+//! the `SUPERSFL_WIRE` env var winning over both (CI matrix legs pin it).
+//! `fp32` is the default and is bit-exact: an `fp32` run's training
+//! trajectory is identical to never serializing at all.
+
+pub mod codec;
+pub mod frame;
+
+pub use codec::{decode_by_id, Fp16, Fp32Raw, Int8Affine, PayloadCodec, TopK};
+pub use frame::{crc32, read_frame, write_frame, FrameHeader, MsgType, OVERHEAD};
+
+use crate::{Error, Result};
+
+/// Which payload codec a run ships its tensors with (`cfg.wire`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum WireCodecKind {
+    /// Raw little-endian f32 (bit-exact; the default).
+    #[default]
+    Fp32,
+    /// IEEE binary16, round-to-nearest-even (2× smaller, ~3 decimal
+    /// digits).
+    Fp16,
+    /// Per-tensor affine 8-bit quantization (~4× smaller).
+    Int8,
+    /// Keep the top `k`% of entries by magnitude on activation/gradient
+    /// frames; parameter frames fall back to [`Int8Affine`] (sparsifying
+    /// raw weights would zero most of the model rather than compress it).
+    TopK(u8),
+}
+
+impl WireCodecKind {
+    /// Parse `fp32|fp16|int8|topk[:<k>]` (k in percent, 1–100; bare
+    /// `topk` means `topk:10`).
+    pub fn parse(s: &str) -> Result<WireCodecKind> {
+        let lower = s.to_ascii_lowercase();
+        match lower.as_str() {
+            "fp32" | "f32" | "raw" => Ok(WireCodecKind::Fp32),
+            "fp16" | "f16" => Ok(WireCodecKind::Fp16),
+            "int8" | "q8" => Ok(WireCodecKind::Int8),
+            "topk" => Ok(WireCodecKind::TopK(10)),
+            _ => {
+                if let Some(k) = lower.strip_prefix("topk:") {
+                    let k: u8 = k.parse().map_err(|_| {
+                        Error::Config(format!("invalid topk ratio '{k}' (expected 1-100)"))
+                    })?;
+                    if !(1..=100).contains(&k) {
+                        return Err(Error::Config(format!(
+                            "topk ratio {k} out of range (expected 1-100 percent)"
+                        )));
+                    }
+                    Ok(WireCodecKind::TopK(k))
+                } else {
+                    Err(Error::Config(format!(
+                        "unknown wire codec '{s}' (expected fp32|fp16|int8|topk:<k>)"
+                    )))
+                }
+            }
+        }
+    }
+
+    /// Canonical string form (round-trips through [`WireCodecKind::parse`]).
+    pub fn label(&self) -> String {
+        match self {
+            WireCodecKind::Fp32 => "fp32".into(),
+            WireCodecKind::Fp16 => "fp16".into(),
+            WireCodecKind::Int8 => "int8".into(),
+            WireCodecKind::TopK(k) => format!("topk:{k}"),
+        }
+    }
+
+    /// `SUPERSFL_WIRE` overrides every other selection path (used by the
+    /// CI matrix). An explicitly set but invalid value fails fast — a
+    /// typo'd env var must not silently run the wrong codec.
+    pub fn from_env_or(fallback: WireCodecKind) -> WireCodecKind {
+        match std::env::var("SUPERSFL_WIRE") {
+            Ok(v) => match WireCodecKind::parse(&v) {
+                Ok(k) => k,
+                Err(e) => panic!("invalid SUPERSFL_WIRE value '{v}': {e}"),
+            },
+            Err(_) => fallback,
+        }
+    }
+}
+
+/// The per-run wire policy: which codec encodes which message class,
+/// plus the frame encode/decode entry points. Stateless and `Sync` — the
+/// parallel round engine shares one `&Wire` across all worker lanes.
+pub struct Wire {
+    kind: WireCodecKind,
+    /// Codec for activation/gradient frames (Smashed, ActGrad).
+    act: Box<dyn PayloadCodec>,
+    /// Codec for parameter frames (PrefixUpload, Broadcast).
+    params: Box<dyn PayloadCodec>,
+}
+
+impl Wire {
+    pub fn new(kind: WireCodecKind) -> Wire {
+        let (act, params): (Box<dyn PayloadCodec>, Box<dyn PayloadCodec>) = match kind {
+            WireCodecKind::Fp32 => (Box::new(Fp32Raw), Box::new(Fp32Raw)),
+            WireCodecKind::Fp16 => (Box::new(Fp16), Box::new(Fp16)),
+            WireCodecKind::Int8 => (Box::new(Int8Affine), Box::new(Int8Affine)),
+            // Sparsification only makes sense where small-magnitude
+            // entries are noise (activations, gradients); weight frames
+            // quantize instead.
+            WireCodecKind::TopK(percent) => (Box::new(TopK { percent }), Box::new(Int8Affine)),
+        };
+        Wire { kind, act, params }
+    }
+
+    pub fn kind(&self) -> WireCodecKind {
+        self.kind
+    }
+
+    pub fn label(&self) -> String {
+        self.kind.label()
+    }
+
+    fn codec_for(&self, msg: MsgType) -> &dyn PayloadCodec {
+        if msg.is_params() {
+            &*self.params
+        } else {
+            &*self.act
+        }
+    }
+
+    /// Exact frame size for a tensor of `elems` f32s — a pure function
+    /// of the element count, so response frames can be priced before the
+    /// response exists (the exchange timeout roll needs both directions
+    /// up front).
+    pub fn frame_len(&self, msg: MsgType, elems: usize) -> u64 {
+        (OVERHEAD + self.codec_for(msg).encoded_len(elems)) as u64
+    }
+
+    /// Encode one tensor into a complete frame. `aux` rides in the
+    /// header as raw f64 bits (used for the Eq. 6 aggregation loss on
+    /// [`MsgType::PrefixUpload`]) and is exact under every codec.
+    pub fn encode(&self, msg: MsgType, data: &[f32], aux: f64) -> Vec<u8> {
+        let codec = self.codec_for(msg);
+        let mut payload = Vec::new();
+        codec.encode_into(data, &mut payload);
+        let buf = frame::write_frame(msg, codec.id(), data.len(), aux, &payload);
+        debug_assert_eq!(buf.len() as u64, self.frame_len(msg, data.len()));
+        buf
+    }
+
+    /// Validate + decode a frame. Codec dispatch is self-describing (the
+    /// frame header names its codec), so a receiver needs no knowledge
+    /// of the sender's policy.
+    pub fn decode(&self, buf: &[u8]) -> Result<DecodedFrame> {
+        let (h, payload) = frame::read_frame(buf)?;
+        let data = codec::decode_by_id(h.codec_id, payload, h.elems)?;
+        Ok(DecodedFrame {
+            msg: h.msg,
+            codec_id: h.codec_id,
+            aux: h.aux,
+            data,
+        })
+    }
+}
+
+/// A fully decoded frame: the receiver-side view of one exchange.
+#[derive(Clone, Debug)]
+pub struct DecodedFrame {
+    pub msg: MsgType,
+    pub codec_id: u8,
+    /// Header-carried scalar (aggregation loss on PrefixUpload frames).
+    pub aux: f64,
+    /// The decoded tensor — what the receiver trains on. Bit-identical
+    /// to the sender's tensor under `fp32`, perturbed under lossy codecs.
+    pub data: Vec<f32>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn kind_parses_and_roundtrips_labels() {
+        for (s, k) in [
+            ("fp32", WireCodecKind::Fp32),
+            ("FP16", WireCodecKind::Fp16),
+            ("int8", WireCodecKind::Int8),
+            ("topk", WireCodecKind::TopK(10)),
+            ("topk:25", WireCodecKind::TopK(25)),
+            ("TOPK:3", WireCodecKind::TopK(3)),
+        ] {
+            assert_eq!(WireCodecKind::parse(s).unwrap(), k);
+        }
+        for k in [
+            WireCodecKind::Fp32,
+            WireCodecKind::Fp16,
+            WireCodecKind::Int8,
+            WireCodecKind::TopK(7),
+        ] {
+            assert_eq!(WireCodecKind::parse(&k.label()).unwrap(), k);
+        }
+        assert!(WireCodecKind::parse("gzip").is_err());
+        assert!(WireCodecKind::parse("topk:0").is_err());
+        assert!(WireCodecKind::parse("topk:101").is_err());
+        assert!(WireCodecKind::parse("topk:x").is_err());
+    }
+
+    #[test]
+    fn fp32_wire_roundtrip_is_bit_exact_per_message_type() {
+        let w = Wire::new(WireCodecKind::Fp32);
+        let mut rng = Pcg32::seeded(11);
+        let data: Vec<f32> = (0..257).map(|_| rng.normal() as f32).collect();
+        for msg in [
+            MsgType::Smashed,
+            MsgType::ActGrad,
+            MsgType::PrefixUpload,
+            MsgType::Broadcast,
+        ] {
+            let buf = w.encode(msg, &data, 0.5);
+            assert_eq!(buf.len() as u64, w.frame_len(msg, data.len()));
+            let dec = w.decode(&buf).unwrap();
+            assert_eq!(dec.msg, msg);
+            assert_eq!(dec.aux, 0.5);
+            for (a, b) in data.iter().zip(dec.data.iter()) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn topk_policy_quantizes_parameter_frames() {
+        let w = Wire::new(WireCodecKind::TopK(10));
+        let data = vec![1.0f32; 100];
+        // Activation frame: sparsified (8·k% + count word + overhead).
+        let act = w.encode(MsgType::Smashed, &data, 0.0);
+        assert_eq!(act.len(), OVERHEAD + 4 + 8 * 10);
+        // Parameter frame: int8, never topk — a weight tensor must not
+        // be zeroed.
+        let par = w.encode(MsgType::Broadcast, &data, 0.0);
+        assert_eq!(par.len(), OVERHEAD + 8 + 100);
+        let dec = w.decode(&par).unwrap();
+        assert!(dec.data.iter().all(|&v| (v - 1.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn lossy_frame_lens_beat_fp32_by_the_expected_factors() {
+        let n = 4096;
+        let fp32 = Wire::new(WireCodecKind::Fp32).frame_len(MsgType::Smashed, n) as f64;
+        let fp16 = Wire::new(WireCodecKind::Fp16).frame_len(MsgType::Smashed, n) as f64;
+        let int8 = Wire::new(WireCodecKind::Int8).frame_len(MsgType::Smashed, n) as f64;
+        let topk = Wire::new(WireCodecKind::TopK(10)).frame_len(MsgType::Smashed, n) as f64;
+        assert!(fp32 / fp16 > 1.9);
+        assert!(fp32 / int8 > 3.8);
+        assert!(fp32 / topk > 4.5);
+    }
+
+    /// Determinism contract: encoding the same tensor twice — on any
+    /// thread, in any order — yields byte-identical frames.
+    #[test]
+    fn prop_encode_is_a_pure_function() {
+        forall(0xDE7, 20, |rng| {
+            let kind = match rng.uniform_usize(4) {
+                0 => WireCodecKind::Fp32,
+                1 => WireCodecKind::Fp16,
+                2 => WireCodecKind::Int8,
+                _ => WireCodecKind::TopK(1 + rng.uniform_usize(50) as u8),
+            };
+            let n = 1 + rng.uniform_usize(500);
+            let data: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let w1 = Wire::new(kind);
+            let w2 = Wire::new(kind);
+            let a = w1.encode(MsgType::ActGrad, &data, 1.5);
+            let b = w2.encode(MsgType::ActGrad, &data, 1.5);
+            assert_eq!(a, b);
+            // And decode(encode(x)) is stable: re-decoding gives the
+            // same tensor bit for bit.
+            let d1 = w1.decode(&a).unwrap().data;
+            let d2 = w2.decode(&b).unwrap().data;
+            for (x, y) in d1.iter().zip(d2.iter()) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        });
+    }
+
+    #[test]
+    fn decode_rejects_fuzzed_frames_without_panicking() {
+        let w = Wire::new(WireCodecKind::Int8);
+        let data: Vec<f32> = (0..64).map(|i| i as f32).collect();
+        let good = w.encode(MsgType::PrefixUpload, &data, 0.0);
+        forall(0xF5, 60, |rng| {
+            let mut bad = good.clone();
+            match rng.uniform_usize(3) {
+                0 => {
+                    // Truncate at a random point.
+                    let cut = rng.uniform_usize(bad.len());
+                    bad.truncate(cut);
+                }
+                1 => {
+                    // Flip a random byte.
+                    let i = rng.uniform_usize(bad.len());
+                    bad[i] ^= 1 + rng.uniform_usize(255) as u8;
+                }
+                _ => {
+                    // Replace with random garbage of random length.
+                    let n = rng.uniform_usize(128);
+                    bad = (0..n).map(|_| rng.uniform_usize(256) as u8).collect();
+                }
+            }
+            if bad != good {
+                assert!(w.decode(&bad).is_err());
+            }
+        });
+    }
+}

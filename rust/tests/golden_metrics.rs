@@ -1,17 +1,28 @@
-//! Golden-metrics snapshot: a fixed-seed 3-round, 8-client SSFL run on
+//! Golden-metrics snapshots: fixed-seed 3-round, 8-client SSFL runs on
 //! the native backend, serialized through `RunMetrics::to_json` and
-//! compared field-by-field against a checked-in golden file. Catches
+//! compared field-by-field against checked-in golden files. Catches
 //! silent numeric drift anywhere in the pipeline — data generation,
-//! model math, network/energy accounting, aggregation.
+//! model math, wire codecs, network/energy accounting, aggregation.
+//!
+//! Two trajectories are pinned:
+//! * `native_ssfl_3r8c.json` — the default (fp32 wire codec) run;
+//! * `native_ssfl_3r8c_int8.json` — the same run under `--wire-codec
+//!   int8`, so drift in the lossy codec path (quantization math, frame
+//!   sizes, byte accounting) is caught just like fp32 drift.
 //!
 //! Bless workflow:
 //! * `SUPERSFL_BLESS=1 cargo test --test golden_metrics` rewrites the
-//!   golden file from the current run.
-//! * If the golden file does not exist yet, the test writes it and
+//!   golden files from the current run.
+//! * If a golden file does not exist yet, its test writes it and
 //!   passes with a loud note to commit it (this container has no Rust
-//!   toolchain, so the file is born on the first toolchain-equipped run;
-//!   CI runs the test twice in separate processes, so run 2 compares
-//!   against run 1's bless even before the file is committed).
+//!   toolchain, so the files are born on the first toolchain-equipped
+//!   run; CI runs the test twice in separate processes, so run 2
+//!   compares against run 1's bless even before the files are
+//!   committed).
+//!
+//! A `SUPERSFL_WIRE` env override changes the codec under test, so each
+//! snapshot test runs only when the env selection (if any) matches the
+//! codec it pins.
 
 use std::path::PathBuf;
 
@@ -19,12 +30,29 @@ use supersfl::config::ExperimentConfig;
 use supersfl::orchestrator::run_experiment;
 use supersfl::runtime::Runtime;
 use supersfl::util::json::{self, JsonValue};
+use supersfl::wire::WireCodecKind;
 
 fn golden_path() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR"))
         .join("tests")
         .join("golden")
         .join("native_ssfl_3r8c.json")
+}
+
+fn golden_int8_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests")
+        .join("golden")
+        .join("native_ssfl_3r8c_int8.json")
+}
+
+/// Whether `SUPERSFL_WIRE` (which overrides `cfg.wire`) permits a test
+/// that pins the given codec label.
+fn env_wire_allows(label: &str) -> bool {
+    match std::env::var("SUPERSFL_WIRE") {
+        Ok(v) => matches!(WireCodecKind::parse(&v), Ok(k) if k.label() == label),
+        Err(_) => true,
+    }
 }
 
 fn golden_cfg() -> ExperimentConfig {
@@ -89,18 +117,22 @@ fn assert_json_eq(path: &str, golden: &JsonValue, got: &JsonValue, diffs: &mut V
     }
 }
 
-#[test]
-fn native_run_matches_golden_snapshot() {
+/// Run the golden config, compare against (or bless) a snapshot file.
+fn run_against_snapshot(cfg: &ExperimentConfig, path: &std::path::Path) {
     let rt = Runtime::native();
-    let res = run_experiment(&rt, &golden_cfg()).unwrap();
+    let res = run_experiment(&rt, cfg).unwrap();
     assert_eq!(res.metrics.rounds.len(), 3);
     let got = res.metrics.to_json();
 
-    let path = golden_path();
     let bless = std::env::var("SUPERSFL_BLESS").ok().as_deref() == Some("1");
     if bless || !path.exists() {
         std::fs::create_dir_all(path.parent().unwrap()).unwrap();
-        std::fs::write(&path, got.to_string_pretty()).unwrap();
+        // Write-then-rename so the file appears atomically: other golden
+        // tests in this binary run on parallel threads and may probe
+        // `path.exists()` + parse while a plain write is still in flight.
+        let tmp = path.with_extension(format!("tmp.{}", std::process::id()));
+        std::fs::write(&tmp, got.to_string_pretty()).unwrap();
+        std::fs::rename(&tmp, path).unwrap();
         if !bless {
             eprintln!(
                 "golden_metrics: golden file did not exist — wrote {} from this run; \
@@ -111,7 +143,7 @@ fn native_run_matches_golden_snapshot() {
         return;
     }
 
-    let golden = json::parse_file(&path).unwrap();
+    let golden = json::parse_file(path).unwrap();
     let mut diffs = Vec::new();
     assert_json_eq("metrics", &golden, &got, &mut diffs);
     assert!(
@@ -122,6 +154,66 @@ fn native_run_matches_golden_snapshot() {
         diffs.len(),
         diffs.join("\n  ")
     );
+}
+
+#[test]
+fn native_run_matches_golden_snapshot() {
+    if !env_wire_allows("fp32") {
+        return; // env override pins a lossy codec; this snapshot is fp32
+    }
+    run_against_snapshot(&golden_cfg(), &golden_path());
+}
+
+/// Wire-layer golden coverage, fp32 leg: a run with `--wire-codec fp32`
+/// set *explicitly* must reproduce the default golden trajectory — the
+/// fp32 codec is bit-exact, so routing every exchange through
+/// encode→decode cannot move a single metric. Compares two in-process
+/// runs (explicit vs default), and the default run is itself pinned to
+/// `native_ssfl_3r8c.json` by `native_run_matches_golden_snapshot`, so
+/// transitively the explicit-fp32 run reproduces the golden file. (This
+/// test never writes the file — one writer avoids bless races between
+/// concurrently running tests.)
+#[test]
+fn explicit_fp32_wire_codec_matches_default_golden() {
+    if !env_wire_allows("fp32") {
+        return;
+    }
+    let rt = Runtime::native();
+    let default_run = run_experiment(&rt, &golden_cfg()).unwrap().metrics.to_json();
+    let explicit_cfg = golden_cfg().with_wire(WireCodecKind::Fp32);
+    let explicit_run = run_experiment(&rt, &explicit_cfg).unwrap().metrics.to_json();
+    let mut diffs = Vec::new();
+    assert_json_eq("metrics", &default_run, &explicit_run, &mut diffs);
+    assert!(
+        diffs.is_empty(),
+        "explicit --wire-codec fp32 drifted from the default run: {diffs:?}"
+    );
+
+    // When the golden file already exists, also compare directly.
+    let path = golden_path();
+    if path.exists() {
+        let golden = json::parse_file(&path).unwrap();
+        let mut diffs = Vec::new();
+        assert_json_eq("metrics", &golden, &explicit_run, &mut diffs);
+        assert!(
+            diffs.is_empty(),
+            "explicit --wire-codec fp32 drifted from {}: {diffs:?}",
+            path.display()
+        );
+    }
+}
+
+/// Wire-layer golden coverage, lossy leg: the same scenario under
+/// `--wire-codec int8` gets its own self-blessing snapshot, so drift in
+/// the quantizer (or anything it feeds) is caught exactly like fp32
+/// drift.
+#[test]
+fn native_int8_run_matches_golden_snapshot() {
+    if !env_wire_allows("int8") {
+        return; // env override pins a different codec than this snapshot
+    }
+    let cfg = golden_cfg().with_wire(WireCodecKind::Int8);
+    run_against_snapshot(&cfg, &golden_int8_path());
 }
 
 #[test]
