@@ -1,0 +1,282 @@
+//! Perf microbench for the native backend's kernel core (the offline
+//! compute path every e2e test, paper-figure bench and example runs on).
+//!
+//! Three sections:
+//! 1. **Per-kernel GFLOP/s + naive-vs-tiled before/after** — the tiled
+//!    kernels (`gemm_bias`, `block_fwd`/`block_bwd`) against the
+//!    pre-kernel-core naive reference implementations they replaced,
+//!    bit-identity asserted before timing. The ISSUE acceptance number
+//!    is the block fwd+bwd pair at n = 64 (1024 token rows).
+//! 2. **End-to-end exec-call latency** — client_local / server_step /
+//!    client_bwd / eval through the real backend, plus the kernel-time
+//!    fraction and scratch-arena stats from RuntimeStats.
+//! 3. **Round throughput at 10/50/100 clients** — marginal host
+//!    ms/round of whole simulated SSFL rounds (prepare cost excluded).
+//!
+//! Results are also written to `BENCH_native.json` at the repository
+//! root (machine-readable, seeds the perf trajectory across PRs). Runs
+//! everywhere — the native backend needs no artifacts — so the CI smoke
+//! leg (`SUPERSFL_SMOKE=1`) asserts it never prints "skipping".
+
+use std::path::PathBuf;
+
+use supersfl::bench_util::scenarios::smoke;
+use supersfl::bench_util::{black_box, measure, report, Sample};
+use supersfl::config::ExperimentConfig;
+use supersfl::orchestrator::run_experiment;
+use supersfl::runtime::native::kernels::{self, reference};
+use supersfl::runtime::Runtime;
+use supersfl::util::json::JsonValue;
+use supersfl::util::rng::Pcg32;
+
+const DIM: usize = 32;
+const HIDDEN: usize = 64;
+const PATCH_ELEMS: usize = 192;
+const TOKENS: usize = 16;
+const BLOCK_W: usize = DIM * HIDDEN + HIDDEN + HIDDEN * DIM + DIM;
+
+fn n(v: f64) -> JsonValue {
+    JsonValue::Number(v)
+}
+
+fn randv(rng: &mut Pcg32, len: usize) -> Vec<f32> {
+    (0..len).map(|_| rng.normal() as f32).collect()
+}
+
+fn gflops(flops: f64, s: &Sample) -> f64 {
+    flops / s.mean_s / 1e9
+}
+
+fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}");
+    for (x, y) in a.iter().zip(b.iter()) {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: tiled kernels drifted from naive");
+    }
+}
+
+/// Section 1: per-kernel GFLOP/s and the naive-vs-tiled speedups.
+fn kernel_section(out: &mut JsonValue, warmup: usize, iters: usize) {
+    let mut rng = Pcg32::seeded(42);
+
+    // -- embed-shaped GEMM: [rows, 192] · [192, 32] + bias --
+    let rows_embed = 8 * TOKENS; // one training batch of patch rows
+    let a = randv(&mut rng, rows_embed * PATCH_ELEMS);
+    let w = randv(&mut rng, PATCH_ELEMS * DIM);
+    let bias = randv(&mut rng, DIM);
+    let mut c_tiled = vec![0.0f32; rows_embed * DIM];
+    let mut c_naive = vec![0.0f32; rows_embed * DIM];
+    kernels::gemm_bias(&a, &w, &bias, rows_embed, PATCH_ELEMS, DIM, &mut c_tiled);
+    reference::gemm_bias(&a, &w, &bias, rows_embed, PATCH_ELEMS, DIM, &mut c_naive);
+    assert_bits_eq(&c_tiled, &c_naive, "gemm_bias embed shape");
+    let flops = 2.0 * (rows_embed * PATCH_ELEMS * DIM) as f64;
+    let s_t = measure(warmup, iters, || {
+        kernels::gemm_bias(&a, &w, &bias, rows_embed, PATCH_ELEMS, DIM, &mut c_tiled);
+        black_box(c_tiled[0]);
+    });
+    report("gemm_bias [128x192x32] tiled", &s_t);
+    println!("    -> {:.2} GFLOP/s", gflops(flops, &s_t));
+    let s_n = measure(warmup, iters, || {
+        reference::gemm_bias(&a, &w, &bias, rows_embed, PATCH_ELEMS, DIM, &mut c_naive);
+        black_box(c_naive[0]);
+    });
+    report("gemm_bias [128x192x32] naive", &s_n);
+    out.set("gemm_bias_embed_gflops", n(gflops(flops, &s_t)));
+    out.set("gemm_bias_embed_speedup", n(s_n.mean_s / s_t.mean_s));
+
+    // -- the acceptance pair: block fwd+bwd at n = 64 (1024 rows) --
+    let rows = 64 * TOKENS;
+    let wb = randv(&mut rng, BLOCK_W);
+    let t_in = randv(&mut rng, rows * DIM);
+    let d_out = randv(&mut rng, rows * DIM);
+    let mut t_out = vec![0.0f32; rows * DIM];
+    let mut u = vec![0.0f32; rows * HIDDEN];
+    let mut g_w = vec![0.0f32; BLOCK_W];
+    let mut d_in = vec![0.0f32; rows * DIM];
+    let mut du = vec![0.0f32; rows * HIDDEN];
+
+    // Bit-identity of the pair before timing it.
+    kernels::block_fwd(&wb, &t_in, rows, DIM, HIDDEN, &mut t_out, &mut u);
+    kernels::block_bwd(&wb, &t_in, &u, &d_out, rows, DIM, HIDDEN, &mut g_w, &mut d_in, &mut du);
+    {
+        let mut t_ref = vec![0.0f32; rows * DIM];
+        let mut u_ref = vec![0.0f32; rows * HIDDEN];
+        let mut g_ref = vec![0.0f32; BLOCK_W];
+        let mut d_ref = vec![0.0f32; rows * DIM];
+        reference::block_fwd(&wb, &t_in, rows, DIM, HIDDEN, &mut t_ref, &mut u_ref);
+        reference::block_bwd(&wb, &t_in, &u_ref, &d_out, rows, DIM, HIDDEN, &mut g_ref, &mut d_ref);
+        assert_bits_eq(&t_out, &t_ref, "block_fwd.t");
+        assert_bits_eq(&u, &u_ref, "block_fwd.u");
+        assert_bits_eq(&g_w, &g_ref, "block_bwd.g_w");
+        assert_bits_eq(&d_in, &d_ref, "block_bwd.d_in");
+    }
+
+    // fwd ≈ 4·R·D·H flops (two matmuls), bwd ≈ 8·R·D·H (four).
+    let pair_flops = 12.0 * (rows * DIM * HIDDEN) as f64;
+    let s_tiled = measure(warmup, iters, || {
+        kernels::block_fwd(&wb, &t_in, rows, DIM, HIDDEN, &mut t_out, &mut u);
+        g_w.fill(0.0);
+        kernels::block_bwd(&wb, &t_in, &u, &d_out, rows, DIM, HIDDEN, &mut g_w, &mut d_in, &mut du);
+        black_box(d_in[0]);
+    });
+    report("block fwd+bwd pair n=64 tiled", &s_tiled);
+    println!("    -> {:.2} GFLOP/s", gflops(pair_flops, &s_tiled));
+    let s_naive = measure(warmup, iters, || {
+        reference::block_fwd(&wb, &t_in, rows, DIM, HIDDEN, &mut t_out, &mut u);
+        g_w.fill(0.0);
+        reference::block_bwd(&wb, &t_in, &u, &d_out, rows, DIM, HIDDEN, &mut g_w, &mut d_in);
+        black_box(d_in[0]);
+    });
+    report("block fwd+bwd pair n=64 naive", &s_naive);
+    let speedup = s_naive.mean_s / s_tiled.mean_s;
+    println!(
+        "block fwd+bwd pair n=64: naive {:.3} ms -> tiled {:.3} ms = {speedup:.2}x speedup (acceptance target >= 3x)",
+        s_naive.mean_s * 1e3,
+        s_tiled.mean_s * 1e3,
+    );
+    out.set("block_fwd_bwd_n64_naive_ms", n(s_naive.mean_s * 1e3));
+    out.set("block_fwd_bwd_n64_tiled_ms", n(s_tiled.mean_s * 1e3));
+    out.set("block_fwd_bwd_n64_speedup", n(speedup));
+    out.set("block_fwd_bwd_n64_gflops", n(gflops(pair_flops, &s_tiled)));
+
+    // -- im2col batched gather (vs its cost being paid twice per op) --
+    let imgs = randv(&mut rng, 8 * 32 * 32 * 3);
+    let mut patches = vec![0.0f32; 8 * TOKENS * PATCH_ELEMS];
+    let s_i = measure(warmup, iters, || {
+        kernels::im2col(&imgs, 8, 32, 8, 3, &mut patches);
+        black_box(patches[0]);
+    });
+    report("im2col [8x32x32x3]", &s_i);
+    out.set("im2col_batch8_us", n(s_i.mean_s * 1e6));
+}
+
+/// Section 2: end-to-end exec-call latency on the real backend.
+fn exec_section(rt: &Runtime, out: &mut JsonValue, warmup: usize, iters: usize) -> supersfl::Result<()> {
+    let m = rt.model().clone();
+    let enc = rt.load_init("init_enc_c10")?;
+    let clf_c = rt.load_init("init_clf_client_c10")?;
+    let clf_s = rt.load_init("init_clf_s_c10")?;
+    let mut rng = Pcg32::seeded(7);
+    let x = randv(&mut rng, m.batch * m.image_elems());
+    let xe = randv(&mut rng, m.eval_batch * m.image_elems());
+    let y: Vec<i32> = (0..m.batch as i32).map(|i| i % 10).collect();
+    let depth = 4;
+    let ne = m.enc_size(depth);
+
+    println!("\n== end-to-end exec-call latency (native backend) ==");
+    let s = measure(warmup, iters, || {
+        black_box(rt.client_local(depth, 10, &enc[..ne], &clf_c, &x, &y).unwrap());
+    });
+    report("client_local_d4", &s);
+    out.set("client_local_d4_us", n(s.mean_s * 1e6));
+
+    let local = rt.client_local(depth, 10, &enc[..ne], &clf_c, &x, &y)?;
+    let s = measure(warmup, iters, || {
+        black_box(rt.server_step(depth, 10, &enc[ne..], &clf_s, &local.z, &y).unwrap());
+    });
+    report("server_step_d4", &s);
+    out.set("server_step_d4_us", n(s.mean_s * 1e6));
+
+    let srv_out = rt.server_step(depth, 10, &enc[ne..], &clf_s, &local.z, &y)?;
+    let s = measure(warmup, iters, || {
+        black_box(rt.client_bwd(depth, &enc[..ne], &x, &srv_out.g_z).unwrap());
+    });
+    report("client_bwd_d4", &s);
+    out.set("client_bwd_d4_us", n(s.mean_s * 1e6));
+
+    let s = measure(warmup, iters.min(8), || {
+        black_box(rt.eval_batch(10, &enc, &clf_s, &xe).unwrap());
+    });
+    report("eval_batch", &s);
+    out.set("eval_batch_us", n(s.mean_s * 1e6));
+
+    let st = rt.stats();
+    let frac = st.kernel_time_s / st.exec_time_s.max(1e-12);
+    println!(
+        "runtime stats: {} executions | exec {:.3}s | kernel {:.3}s ({:.1}% of exec) | arena hwm {} bytes, {} alloc events",
+        st.executions,
+        st.exec_time_s,
+        st.kernel_time_s,
+        100.0 * frac,
+        st.arena_hwm_bytes,
+        st.arena_allocs
+    );
+    out.set("kernel_time_fraction", n(frac));
+    out.set("arena_hwm_bytes", n(st.arena_hwm_bytes as f64));
+    out.set("arena_allocs", n(st.arena_allocs as f64));
+    Ok(())
+}
+
+fn round_cfg(clients: usize, rounds: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default()
+        .with_name("bench_native_kernels")
+        .with_clients(clients)
+        .with_rounds(rounds)
+        .with_seed(1234)
+        .with_threads(0);
+    cfg.data.train_per_class = 20;
+    cfg.data.test_total = 200;
+    cfg.train.local_steps = 1;
+    cfg.train.eval_samples = 100;
+    cfg
+}
+
+/// Section 3: whole-round host throughput at fleet scale. Marginal
+/// measurement (wall(R) − wall(1)) / (R−1) excludes `Harness::prepare`.
+fn round_section(rt: &Runtime, out: &mut JsonValue, rounds: usize) -> supersfl::Result<()> {
+    println!("\n== round throughput (native backend, threads=auto) ==");
+    println!("clients  ms/round  rounds/s  branches/s");
+    let mut arr = Vec::new();
+    for &clients in &[10usize, 50, 100] {
+        // Warm pass (compile caches, allocator, arena) outside timing.
+        run_experiment(rt, &round_cfg(clients, 1))?;
+        let base = run_experiment(rt, &round_cfg(clients, 1))?;
+        let full = run_experiment(rt, &round_cfg(clients, rounds))?;
+        let marginal_s = (full.metrics.host_wall_s - base.metrics.host_wall_s).max(1e-9)
+            / (rounds - 1) as f64;
+        let rps = 1.0 / marginal_s;
+        println!(
+            "{clients:>7}  {:>8.2}  {rps:>8.2}  {:>10.1}",
+            marginal_s * 1e3,
+            clients as f64 * rps
+        );
+        let mut cell = JsonValue::object();
+        cell.set("clients", n(clients as f64));
+        cell.set("ms_per_round", n(marginal_s * 1e3));
+        cell.set("rounds_per_s", n(rps));
+        cell.set("client_branches_per_s", n(clients as f64 * rps));
+        arr.push(cell);
+    }
+    out.set("rounds", JsonValue::Array(arr));
+    Ok(())
+}
+
+fn main() -> supersfl::Result<()> {
+    let is_smoke = smoke();
+    let (warmup, iters, rounds) = if is_smoke { (1, 3, 2) } else { (3, 20, 5) };
+    // The kernel core is the native backend's — bench it directly, no
+    // artifacts needed anywhere.
+    let rt = Runtime::native();
+    println!("backend: {} (smoke: {is_smoke})", rt.backend_name());
+    println!("== native kernel core: naive vs tiled ==");
+
+    let mut root = JsonValue::object();
+    root.set("bench", JsonValue::String("bench_native_kernels".into()));
+    root.set(
+        "mode",
+        JsonValue::String(if is_smoke { "smoke" } else { "full" }.into()),
+    );
+    let mut kern = JsonValue::object();
+    kernel_section(&mut kern, warmup, iters);
+    root.set("kernels", kern);
+    let mut exec = JsonValue::object();
+    exec_section(&rt, &mut exec, warmup, iters)?;
+    root.set("exec", exec);
+    round_section(&rt, &mut root, rounds)?;
+
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_native.json");
+    std::fs::write(&path, root.to_string_pretty())?;
+    println!("\nwrote {}", path.display());
+    Ok(())
+}

@@ -35,7 +35,7 @@ use crate::orchestrator::Harness;
 use crate::runtime::Runtime;
 use crate::util::math;
 use crate::util::rng::Pcg32;
-use crate::wire::MsgType;
+use crate::wire::{MsgType, WireScratch};
 use crate::Result;
 
 /// One round of observed (jittered) resources, per client.
@@ -97,6 +97,10 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
     let clf_len = h.server.clf_s.len();
     let mut enc_avg = vec![0.0f32; h.server.enc.len()];
     let mut clf_avg = vec![0.0f32; clf_len];
+    // Reusable encode/decode buffers for the barrier frames (the
+    // per-step frames inside the fan-out use each member's own lane
+    // scratch).
+    let mut bar_scratch = WireScratch::default();
 
     for round in 1..=h.cfg.train.rounds {
         h.net.begin_round();
@@ -182,10 +186,14 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
                         m.ledger.work(m.profile, t_fwd);
 
                         // Wire-framed exchange (see orchestrator docs).
-                        let up = wire.encode(MsgType::Smashed, &z, 0.0);
+                        // Frames stage in the member's reusable lane
+                        // scratch — identical bytes, no per-frame Vec.
+                        let up_len = wire
+                            .encode_to(MsgType::Smashed, &z, 0.0, &mut m.net.scratch)
+                            .len() as u64;
                         let ex = m.net.exchange_framed(
                             Framed {
-                                wire: up.len() as u64,
+                                wire: up_len,
                                 raw: smashed,
                             },
                             Framed {
@@ -197,13 +205,13 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
                         m.ledger.exchange(m.profile, ex.time_s(), m.srv_time);
 
                         if ex.is_ok() {
-                            let z_server = wire.decode(&up)?.data;
+                            wire.decode_into(&m.net.scratch.frame, &mut m.net.scratch.decoded)?;
                             let out = rt.server_step(
                                 depth,
                                 classes,
                                 &rep.enc[m.cut..],
                                 &*rep.clf,
-                                &z_server,
+                                &m.net.scratch.decoded,
                                 &batch.y,
                             )?;
                             math::sgd_step(&mut rep.enc[m.cut..], &out.g_srv, lr_server);
@@ -211,10 +219,10 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
                             m.client.round_server_loss.push(out.loss as f64);
                             m.ledger.server_step(m.srv_time);
 
-                            let down = wire.encode(MsgType::ActGrad, &out.g_z, 0.0);
-                            let g_z = wire.decode(&down)?.data;
+                            wire.encode_to(MsgType::ActGrad, &out.g_z, 0.0, &mut m.net.scratch);
+                            wire.decode_into(&m.net.scratch.frame, &mut m.net.scratch.decoded)?;
                             let g_enc =
-                                rt.client_bwd(depth, &m.client.enc, &batch.x, &g_z)?;
+                                rt.client_bwd(depth, &m.client.enc, &batch.x, &m.net.scratch.decoded)?;
                             let lr = m.client.lr;
                             math::sgd_step(&mut m.client.enc, &g_enc, lr);
                             let t_bwd =
@@ -269,15 +277,18 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
         let mut uploads: Vec<Vec<f32>> = Vec::with_capacity(n);
         for ci in 0..n {
             let payload = h.clients[ci].upload_payload();
-            let frame = h.wire.encode(MsgType::PrefixUpload, &payload, 0.0);
+            let frame_len = h
+                .wire
+                .encode_to(MsgType::PrefixUpload, &payload, 0.0, &mut bar_scratch)
+                .len() as u64;
             agg_branch[ci] = h.net.bulk_up_framed(
                 ci,
                 Framed {
-                    wire: frame.len() as u64,
+                    wire: frame_len,
                     raw: (payload.len() * 4) as u64,
                 },
             );
-            uploads.push(h.wire.decode(&frame)?.data);
+            uploads.push(h.wire.decode(&bar_scratch.frame)?.data);
         }
         h.charge_barrier_phase(&agg_branch);
         let total_samples: f64 = h.clients.iter().map(|c| c.shard.len() as f64).sum();
@@ -311,10 +322,13 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
         // Every client receives the same full backbone, so the Broadcast
         // frame is encoded (and decoded) once and charged per client;
         // clients sync from the decoded tensor.
-        let frame = h.wire.encode(MsgType::Broadcast, &h.server.enc, 0.0);
-        let bc_payload = h.wire.decode(&frame)?.data;
+        let frame_len = h
+            .wire
+            .encode_to(MsgType::Broadcast, &h.server.enc, 0.0, &mut bar_scratch)
+            .len() as u64;
+        let bc_payload = h.wire.decode(&bar_scratch.frame)?.data;
         let bc_framed = Framed {
-            wire: frame.len() as u64,
+            wire: frame_len,
             raw: full_bytes,
         };
         let mut bc = vec![0.0f64; n];

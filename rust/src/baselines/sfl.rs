@@ -22,7 +22,7 @@ use crate::orchestrator::engine::{self, RoundLedger};
 use crate::orchestrator::Harness;
 use crate::runtime::Runtime;
 use crate::util::math;
-use crate::wire::MsgType;
+use crate::wire::{MsgType, WireScratch};
 use crate::Result;
 
 /// One SplitFed client's worker-thread context for a round.
@@ -55,6 +55,9 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
     let n = h.clients.len();
     let mut srv_copies: Vec<Vec<f32>> = vec![h.server.suffix(depth).to_vec(); n];
     let mut clf_copies: Vec<Vec<f32>> = vec![h.server.clf_s.clone(); n];
+    // Reusable encode/decode buffers for the barrier frames (the
+    // per-step frames inside the fan-out use each lane's own scratch).
+    let mut bar_scratch = WireScratch::default();
 
     for round in 1..=h.cfg.train.rounds {
         h.net.begin_round();
@@ -99,10 +102,14 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
 
                     // Wire-framed exchange: encoded bytes on the link,
                     // analytic f32 count as raw (see orchestrator docs).
-                    let up = wire.encode(MsgType::Smashed, &z, 0.0);
+                    // Frames stage in the lane's reusable scratch —
+                    // identical bytes, zero per-frame allocations.
+                    let up_len = wire
+                        .encode_to(MsgType::Smashed, &z, 0.0, &mut lane.net.scratch)
+                        .len() as u64;
                     let ex = lane.net.exchange_framed(
                         Framed {
-                            wire: up.len() as u64,
+                            wire: up_len,
                             raw: smashed,
                         },
                         Framed {
@@ -114,13 +121,13 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
                     lane.ledger.exchange(lane.profile, ex.time_s(), srv_time);
 
                     if ex.is_ok() {
-                        let z_server = wire.decode(&up)?.data;
+                        wire.decode_into(&lane.net.scratch.frame, &mut lane.net.scratch.decoded)?;
                         let out = rt.server_step(
                             depth,
                             classes,
                             &*lane.srv,
                             &*lane.clf,
-                            &z_server,
+                            &lane.net.scratch.decoded,
                             &batch.y,
                         )?;
                         math::sgd_step(lane.srv, &out.g_srv, lr_server);
@@ -128,10 +135,10 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
                         lane.client.round_server_loss.push(out.loss as f64);
                         lane.ledger.server_step(srv_time);
 
-                        let down = wire.encode(MsgType::ActGrad, &out.g_z, 0.0);
-                        let g_z = wire.decode(&down)?.data;
+                        wire.encode_to(MsgType::ActGrad, &out.g_z, 0.0, &mut lane.net.scratch);
+                        wire.decode_into(&lane.net.scratch.frame, &mut lane.net.scratch.decoded)?;
                         let g_enc =
-                            rt.client_bwd(depth, &lane.client.enc, &batch.x, &g_z)?;
+                            rt.client_bwd(depth, &lane.client.enc, &batch.x, &lane.net.scratch.decoded)?;
                         let lr = lane.client.lr;
                         math::sgd_step(&mut lane.client.enc, &g_enc, lr);
                         let t_bwd =
@@ -164,15 +171,18 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
         let mut uploads: Vec<Vec<f32>> = Vec::with_capacity(n);
         for ci in 0..n {
             let payload = h.clients[ci].upload_payload();
-            let frame = h.wire.encode(MsgType::PrefixUpload, &payload, 0.0);
+            let frame_len = h
+                .wire
+                .encode_to(MsgType::PrefixUpload, &payload, 0.0, &mut bar_scratch)
+                .len() as u64;
             agg_branch[ci] = h.net.bulk_up_framed(
                 ci,
                 Framed {
-                    wire: frame.len() as u64,
+                    wire: frame_len,
                     raw: (payload.len() * 4) as u64,
                 },
             );
-            uploads.push(h.wire.decode(&frame)?.data);
+            uploads.push(h.wire.decode(&bar_scratch.frame)?.data);
         }
         h.charge_barrier_phase(&agg_branch);
         let total_samples: f64 = h.clients.iter().map(|c| c.shard.len() as f64).sum();
@@ -216,10 +226,13 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
         // One fixed split → every client receives the same prefix, so the
         // Broadcast frame is encoded (and decoded) once and charged per
         // client; clients sync from the decoded tensor.
-        let frame = h.wire.encode(MsgType::Broadcast, &h.server.enc[..cut], 0.0);
-        let bc_payload = h.wire.decode(&frame)?.data;
+        let frame_len = h
+            .wire
+            .encode_to(MsgType::Broadcast, &h.server.enc[..cut], 0.0, &mut bar_scratch)
+            .len() as u64;
+        let bc_payload = h.wire.decode(&bar_scratch.frame)?.data;
         let bc_framed = Framed {
-            wire: frame.len() as u64,
+            wire: frame_len,
             raw: (cut * 4) as u64,
         };
         let mut bc = vec![0.0f64; n];

@@ -18,6 +18,7 @@ pub use fleet::{sample_fleet, DeviceProfile};
 
 use crate::config::NetConfig;
 use crate::util::rng::Pcg32;
+use crate::wire::WireScratch;
 
 /// Outcome of one client↔server exchange attempt.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -180,6 +181,12 @@ pub struct NetLane {
     pub traffic: Traffic,
     /// Analytic uncompressed bytes of the same transfers.
     pub raw_traffic: Traffic,
+    /// Reusable wire encode/decode buffers for this lane's per-step
+    /// frames: the round loops encode into (and decode out of) these
+    /// instead of building a fresh `Vec` per frame. Purely a perf
+    /// vehicle — the bytes on the wire are identical (see
+    /// [`crate::wire::WireScratch`]).
+    pub scratch: WireScratch,
 }
 
 impl NetLane {
@@ -301,6 +308,7 @@ impl NetworkSim {
             rng: Pcg32::new(self.lane_seed ^ round_salt, client as u64 + 1),
             traffic: Traffic::default(),
             raw_traffic: Traffic::default(),
+            scratch: WireScratch::default(),
         }
     }
 

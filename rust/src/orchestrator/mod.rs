@@ -48,7 +48,7 @@ use crate::runtime::Runtime;
 use crate::server::ServerState;
 use crate::util::math;
 use crate::util::rng::Pcg32;
-use crate::wire::{MsgType, Wire, WireCodecKind};
+use crate::wire::{MsgType, Wire, WireCodecKind, WireScratch};
 use crate::Result;
 
 use engine::RoundLedger;
@@ -391,6 +391,10 @@ fn run_ssfl(rt: &Runtime, h: &mut Harness) -> Result<()> {
     let mut lane_clf: Vec<Vec<f32>> = vec![vec![0.0f32; clf_len]; n];
     let mut enc_snapshot = vec![0.0f32; enc_len];
     let mut clf_snapshot = vec![0.0f32; clf_len];
+    // Reusable encode/decode buffers for the barrier frames (aggregation
+    // uploads + broadcasts run on the main thread; the per-step frames
+    // inside the fan-out use each lane's own scratch).
+    let mut bar_scratch = WireScratch::default();
 
     for round in 1..=h.cfg.train.rounds {
         h.net.begin_round();
@@ -459,10 +463,14 @@ fn run_ssfl(rt: &Runtime, h: &mut Harness) -> Result<()> {
                     // as raw. The uplink frame is built (and charged)
                     // even when the exchange times out: the client
                     // transmitted before it could observe the failure.
-                    let up = wire.encode(MsgType::Smashed, &local.z, 0.0);
+                    // Frames are staged in the lane's reusable scratch —
+                    // identical bytes, zero per-frame allocations.
+                    let up_len = wire
+                        .encode_to(MsgType::Smashed, &local.z, 0.0, &mut lane.net.scratch)
+                        .len() as u64;
                     let ex = lane.net.exchange_framed(
                         Framed {
-                            wire: up.len() as u64,
+                            wire: up_len,
                             raw: smashed,
                         },
                         Framed {
@@ -477,13 +485,13 @@ fn run_ssfl(rt: &Runtime, h: &mut Harness) -> Result<()> {
                         // Lane-local server step against the round-start
                         // suffix snapshot (merged at the barrier), on the
                         // server's *decoded* view of the activations.
-                        let z_server = wire.decode(&up)?.data;
+                        wire.decode_into(&lane.net.scratch.frame, &mut lane.net.scratch.decoded)?;
                         let out = rt.server_step(
                             depth,
                             classes,
                             &*lane.srv,
                             &*lane.clf,
-                            &z_server,
+                            &lane.net.scratch.decoded,
                             &batch.y,
                         )?;
                         math::sgd_step(lane.srv, &out.g_srv, lr_server);
@@ -492,16 +500,19 @@ fn run_ssfl(rt: &Runtime, h: &mut Harness) -> Result<()> {
 
                         // The activation gradient comes back as a frame
                         // too; the client backprops the decoded tensor.
-                        let down = wire.encode(MsgType::ActGrad, &out.g_z, 0.0);
-                        debug_assert_eq!(down.len() as u64, gz_frame_len);
-                        let g_z = wire.decode(&down)?.data;
+                        let down_len = wire
+                            .encode_to(MsgType::ActGrad, &out.g_z, 0.0, &mut lane.net.scratch)
+                            .len() as u64;
+                        debug_assert_eq!(down_len, gz_frame_len);
+                        let _ = down_len;
+                        wire.decode_into(&lane.net.scratch.frame, &mut lane.net.scratch.decoded)?;
 
                         // Phase 2 client backprop + Phase 3 fusion.
                         lane.client.phase2_phase3(
                             rt,
                             &batch,
                             &local,
-                            &g_z,
+                            &lane.net.scratch.decoded,
                             out.loss,
                             tpgf_mode,
                             fuse_via_artifact,
@@ -572,15 +583,18 @@ fn run_ssfl(rt: &Runtime, h: &mut Harness) -> Result<()> {
             let c = &h.clients[ci];
             let payload = c.upload_payload();
             let loss = c.aggregation_loss(tpgf_mode, total_layers).unwrap_or(1.0);
-            let frame = h.wire.encode(MsgType::PrefixUpload, &payload, loss);
+            let frame_len = h
+                .wire
+                .encode_to(MsgType::PrefixUpload, &payload, loss, &mut bar_scratch)
+                .len() as u64;
             agg_branch[ci] = h.net.bulk_up_framed(
                 ci,
                 Framed {
-                    wire: frame.len() as u64,
+                    wire: frame_len,
                     raw: (payload.len() * 4) as u64,
                 },
             );
-            let dec = h.wire.decode(&frame)?;
+            let dec = h.wire.decode(&bar_scratch.frame)?;
             uploads.push((c.enc.len(), dec.data, dec.aux));
         }
         h.charge_barrier_phase(&agg_branch);
@@ -620,11 +634,17 @@ fn run_ssfl(rt: &Runtime, h: &mut Harness) -> Result<()> {
             let slot = match bc_cache.iter().position(|(e, _, _)| *e == prefix_elems) {
                 Some(i) => i,
                 None => {
-                    let frame = h
+                    let frame_len = h
                         .wire
-                        .encode(MsgType::Broadcast, &h.server.enc[..prefix_elems], 0.0);
-                    let dec = h.wire.decode(&frame)?;
-                    bc_cache.push((prefix_elems, frame.len() as u64, dec.data));
+                        .encode_to(
+                            MsgType::Broadcast,
+                            &h.server.enc[..prefix_elems],
+                            0.0,
+                            &mut bar_scratch,
+                        )
+                        .len() as u64;
+                    let dec = h.wire.decode(&bar_scratch.frame)?;
+                    bc_cache.push((prefix_elems, frame_len, dec.data));
                     bc_cache.len() - 1
                 }
             };

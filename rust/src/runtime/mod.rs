@@ -68,6 +68,17 @@ pub struct RuntimeStats {
     pub compile_time_s: f64,
     pub exec_time_s: f64,
     pub marshal_time_s: f64,
+    /// Time spent inside the native backend's kernel core (compute past
+    /// the argument boundary; a subset of `exec_time_s`). Zero on the
+    /// PJRT path, where the accelerator owns this split.
+    pub kernel_time_s: f64,
+    /// High-water mark (bytes) of the native backend's scratch arena.
+    /// Stabilizes after the first pass of each op shape — the zero
+    /// steady-state-allocation invariant of the exec hot path.
+    pub arena_hwm_bytes: u64,
+    /// Cumulative scratch-arena allocation/regrow events (flat once the
+    /// pool is warm).
+    pub arena_allocs: u64,
 }
 
 /// The exec surface both backends implement. Object-safe: the runtime
@@ -429,6 +440,20 @@ mod tests {
         // Compiles happen at most once per artifact (the PJRT cache); the
         // native backend has no compile step at all.
         assert!(st.compile_count <= 1);
+    }
+
+    #[test]
+    fn native_stats_report_kernel_time_and_arena_use() {
+        let rt = Runtime::native();
+        let m = rt.model().clone();
+        let enc = rt.load_init("init_enc_c10").unwrap();
+        let x = vec![0.1f32; m.batch * m.image_elems()];
+        rt.client_fwd(1, &enc[..m.enc_size(1)], &x).unwrap();
+        let st = rt.stats();
+        assert!(st.kernel_time_s > 0.0, "kernel core time must be tracked");
+        assert!(st.exec_time_s >= st.kernel_time_s, "kernel time nests inside exec time");
+        assert!(st.arena_hwm_bytes > 0, "scratch must come from the arena");
+        assert!(st.arena_allocs > 0);
     }
 
     #[test]

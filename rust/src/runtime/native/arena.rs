@@ -1,0 +1,212 @@
+//! A reusable scratch-buffer arena for the native backend's exec calls.
+//!
+//! Before the kernel core, every exec call allocated a fresh `Vec` per
+//! activation layer, hidden layer and gradient staging buffer — a dozen
+//! heap allocations per `client_local` and an O(depth) pile per
+//! `eval_batch`, repeated for every client step of every round. The
+//! arena turns that into a warm pool: buffers are checked out at the top
+//! of an op, fully overwritten by the kernels, and checked back in at
+//! the end, so the steady-state hot path performs **zero scratch
+//! allocations** — the pool's high-water mark stabilizes after the first
+//! round of each op shape (asserted in the backend's tests and surfaced
+//! through `RuntimeStats::{arena_hwm_bytes, arena_allocs}`).
+//!
+//! Checkout is **best-fit**: the smallest pooled buffer whose capacity
+//! covers the request wins, so large (eval-sized) buffers are not burned
+//! on small (batch-sized) requests. Best-fit has the classic stability
+//! property that makes the high-water mark converge: once a pass of
+//! every op shape has run, each later request finds a fitting buffer and
+//! nothing regrows. Returned buffers are zero-filled on checkout —
+//! contents therefore never depend on which pooled buffer serves a
+//! request, keeping exec bit-deterministic under any thread interleaving
+//! of the parallel round engine (the backend holds the arena behind a
+//! mutex; compute happens outside the lock).
+
+/// The pool. One per [`super::NativeBackend`], shared by all worker
+/// threads through a mutex; locks are held only for checkout/checkin,
+/// never during kernel execution.
+#[derive(Debug, Default)]
+pub struct ScratchArena {
+    /// Idle buffers, any order (checkout scans for best fit).
+    free: Vec<Vec<f32>>,
+    /// Total capacity (bytes) of every arena-managed buffer, idle or
+    /// checked out.
+    total_bytes: u64,
+    /// Peak of `total_bytes` over the arena's lifetime.
+    hwm_bytes: u64,
+    /// Allocation events: new buffers plus capacity regrows. Stops
+    /// moving once the pool is warm — the "zero steady-state heap
+    /// allocations" invariant, asserted in tests.
+    allocs: u64,
+}
+
+impl ScratchArena {
+    pub fn new() -> ScratchArena {
+        ScratchArena::default()
+    }
+
+    /// Check out a zero-filled buffer of exactly `elems` elements,
+    /// reusing (or, on a cold path, growing) a pooled allocation.
+    pub fn take(&mut self, elems: usize) -> Vec<f32> {
+        if elems == 0 {
+            return Vec::new();
+        }
+        let mut best_fit: Option<(usize, usize)> = None; // (idx, cap), min cap ≥ elems
+        let mut largest: Option<(usize, usize)> = None; // (idx, cap), max cap
+        for (i, b) in self.free.iter().enumerate() {
+            let cap = b.capacity();
+            if cap >= elems {
+                match best_fit {
+                    Some((_, c)) if c <= cap => {}
+                    _ => best_fit = Some((i, cap)),
+                }
+            }
+            match largest {
+                Some((_, c)) if c >= cap => {}
+                _ => largest = Some((i, cap)),
+            }
+        }
+        let mut buf = match best_fit.or(largest) {
+            Some((i, _)) => self.free.swap_remove(i),
+            None => Vec::new(),
+        };
+        let before = buf.capacity();
+        buf.clear();
+        buf.resize(elems, 0.0);
+        let after = buf.capacity();
+        if after > before {
+            self.allocs += 1;
+            self.total_bytes += ((after - before) * std::mem::size_of::<f32>()) as u64;
+            self.hwm_bytes = self.hwm_bytes.max(self.total_bytes);
+        }
+        buf
+    }
+
+    /// Return a buffer to the pool. Zero-capacity buffers (the `take(0)`
+    /// placeholders) are dropped rather than pooled.
+    pub fn put(&mut self, mut buf: Vec<f32>) {
+        if buf.capacity() == 0 {
+            return;
+        }
+        buf.clear();
+        self.free.push(buf);
+    }
+
+    /// Peak bytes ever held across all arena buffers.
+    pub fn hwm_bytes(&self) -> u64 {
+        self.hwm_bytes
+    }
+
+    /// Cumulative allocation/regrow events (stable once warm).
+    pub fn alloc_events(&self) -> u64 {
+        self.allocs
+    }
+
+    /// Buffers currently idle in the pool.
+    pub fn pooled(&self) -> usize {
+        self.free.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_zero_is_free_and_unpooled() {
+        let mut a = ScratchArena::new();
+        let b = a.take(0);
+        assert_eq!(b.capacity(), 0);
+        a.put(b);
+        assert_eq!(a.pooled(), 0);
+        assert_eq!(a.alloc_events(), 0);
+        assert_eq!(a.hwm_bytes(), 0);
+    }
+
+    #[test]
+    fn smaller_request_reuses_without_allocating() {
+        let mut a = ScratchArena::new();
+        let b = a.take(100);
+        assert_eq!(b.len(), 100);
+        assert_eq!(a.alloc_events(), 1);
+        a.put(b);
+        // A second exec shape with smaller n: same buffer, no new alloc.
+        let b = a.take(50);
+        assert_eq!(b.len(), 50);
+        assert!(b.capacity() >= 100);
+        assert_eq!(a.alloc_events(), 1);
+        assert!(a.hwm_bytes() >= 400);
+        a.put(b);
+    }
+
+    #[test]
+    fn larger_request_regrows_and_raises_the_water_mark() {
+        let mut a = ScratchArena::new();
+        a.put(a.take(100));
+        let hwm1 = a.hwm_bytes();
+        let b = a.take(300);
+        assert_eq!(b.len(), 300);
+        assert_eq!(a.alloc_events(), 2, "regrow is an allocation event");
+        assert!(a.hwm_bytes() > hwm1);
+        a.put(b);
+        // Third pass at the large size: warm, no further events.
+        let hwm2 = a.hwm_bytes();
+        a.put(a.take(300));
+        assert_eq!(a.alloc_events(), 2);
+        assert_eq!(a.hwm_bytes(), hwm2);
+    }
+
+    #[test]
+    fn best_fit_spares_large_buffers_for_large_requests() {
+        let mut a = ScratchArena::new();
+        let big = a.take(1000);
+        let small = a.take(10);
+        a.put(big);
+        a.put(small);
+        let events = a.alloc_events();
+        // The small request must take the 10-cap buffer, leaving the
+        // 1000-cap one for the big request — no regrow either way.
+        let s = a.take(8);
+        let b = a.take(900);
+        assert!(s.capacity() < 1000);
+        assert!(b.capacity() >= 1000);
+        assert_eq!(a.alloc_events(), events);
+        a.put(s);
+        a.put(b);
+    }
+
+    #[test]
+    fn checkout_is_zero_filled_regardless_of_history() {
+        let mut a = ScratchArena::new();
+        let mut b = a.take(64);
+        for v in b.iter_mut() {
+            *v = 7.0;
+        }
+        a.put(b);
+        let b = a.take(64);
+        assert!(b.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn interleaved_shapes_stabilize_after_one_full_pass() {
+        // Two "ops" with different buffer shapes, alternating — the
+        // arena must stop allocating after each shape has run once.
+        let mut a = ScratchArena::new();
+        let mut pass = |a: &mut ScratchArena, sizes: &[usize]| {
+            let bufs: Vec<_> = sizes.iter().map(|&s| a.take(s)).collect();
+            for b in bufs {
+                a.put(b);
+            }
+        };
+        pass(&mut a, &[128, 512, 64]);
+        pass(&mut a, &[1024, 32, 256]);
+        let warm_events = a.alloc_events();
+        let warm_hwm = a.hwm_bytes();
+        for _ in 0..10 {
+            pass(&mut a, &[128, 512, 64]);
+            pass(&mut a, &[1024, 32, 256]);
+        }
+        assert_eq!(a.alloc_events(), warm_events);
+        assert_eq!(a.hwm_bytes(), warm_hwm);
+    }
+}

@@ -1,0 +1,969 @@
+//! The native backend's kernel core: cache-tiled, register-blocked f32
+//! compute primitives that are **bit-identical** to the naive per-row
+//! loops they replaced.
+//!
+//! # The bit-identity contract
+//!
+//! f32 addition is not associative, so a kernel is free to re-tile the
+//! independent output dimensions (M = rows, N = output features) but must
+//! never reorder the reduction: for every output element, the
+//! K-accumulation is a single sequential fold in the exact index order
+//! of the original scalar loops. Concretely:
+//!
+//! * axpy-form kernels ([`gemm_bias`], [`residual_mlp2`]) keep K as the
+//!   outer loop — each output cell receives its `a[r,κ]·w[κ,j]` terms in
+//!   ascending κ, just like the old row-at-a-time code — and win their
+//!   speed from 4-row register blocking (the `w` row is streamed once per
+//!   row block) plus hoisted slices that drop per-iteration bounds checks.
+//! * reduction-form kernels ([`gemm_bt`]) keep each output element a
+//!   single scalar accumulator folded in ascending κ, and win their speed
+//!   by computing **four independent output chains at once**: the naive
+//!   loop was latency-bound on one serial FMA chain, four chains fill the
+//!   FPU pipeline without touching any chain's order.
+//! * accumulation kernels ([`ger_acc_rows`], [`col_sum_acc`]) add their
+//!   per-row contributions in ascending row order per element — the same
+//!   order the old code produced by updating parameter gradients inside
+//!   its row loop — with row-blocked passes that stream the (large)
+//!   gradient buffer once per block instead of once per row.
+//!
+//! Every kernel is a pure function of its inputs (no threading, no hidden
+//! state), so the parallel round engine's `--threads N` bit-identity is
+//! preserved by construction. The [`reference`] module keeps the original
+//! naive implementations; property tests below assert bitwise equality on
+//! awkward shapes (rows not a multiple of the block, n below the ILP
+//! width, n ∈ {1, 3, 5, 8} batches), and `bench_native_kernels` measures
+//! the naive-vs-tiled speedup from the same pair.
+
+/// Rows processed per register block in the axpy-form kernels.
+const MR: usize = 4;
+/// Independent output chains per pass in the reduction-form kernels.
+const NC: usize = 4;
+
+/// `out[r,:] = bias + Σ_κ a[r,κ]·w[κ,:]` for `r < m` — row-major `a`
+/// `[m,k]`, `w` `[k,n]`. K-outer axpy form, [`MR`]-row register blocks;
+/// per-element terms arrive in ascending κ (bit-identical to the naive
+/// per-row loop).
+pub fn gemm_bias(a: &[f32], w: &[f32], bias: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(w.len(), k * n);
+    assert_eq!(bias.len(), n);
+    assert_eq!(out.len(), m * n);
+    let mut r0 = 0;
+    while r0 + MR <= m {
+        let block = &mut out[r0 * n..(r0 + MR) * n];
+        for row in block.chunks_exact_mut(n) {
+            row.copy_from_slice(bias);
+        }
+        let a_blk = &a[r0 * k..(r0 + MR) * k];
+        for kk in 0..k {
+            let wrow = &w[kk * n..kk * n + n];
+            let a0 = a_blk[kk];
+            let a1 = a_blk[k + kk];
+            let a2 = a_blk[2 * k + kk];
+            let a3 = a_blk[3 * k + kk];
+            let (b01, b23) = block.split_at_mut(2 * n);
+            let (b0, b1) = b01.split_at_mut(n);
+            let (b2, b3) = b23.split_at_mut(n);
+            for j in 0..n {
+                b0[j] += a0 * wrow[j];
+                b1[j] += a1 * wrow[j];
+                b2[j] += a2 * wrow[j];
+                b3[j] += a3 * wrow[j];
+            }
+        }
+        r0 += MR;
+    }
+    for r in r0..m {
+        let row = &mut out[r * n..r * n + n];
+        row.copy_from_slice(bias);
+        let ar = &a[r * k..r * k + k];
+        for (kk, &av) in ar.iter().enumerate() {
+            let wrow = &w[kk * n..kk * n + n];
+            for j in 0..n {
+                row[j] += av * wrow[j];
+            }
+        }
+    }
+}
+
+/// `out[r,j] = seed[r,j] + Σ_κ a[r,κ]·b[j,κ]` — `b` row-major `[n,k]`
+/// used as Bᵀ (`seed = None` starts each fold at 0). Each element is one
+/// sequential κ-ascending fold; [`NC`] independent output chains run per
+/// pass for instruction-level parallelism.
+pub fn gemm_bt(a: &[f32], b: &[f32], seed: Option<&[f32]>, m: usize, k: usize, n: usize, out: &mut [f32]) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), n * k);
+    assert_eq!(out.len(), m * n);
+    if let Some(s) = seed {
+        assert_eq!(s.len(), m * n);
+    }
+    for r in 0..m {
+        let ar = &a[r * k..r * k + k];
+        let orow = &mut out[r * n..r * n + n];
+        let srow = seed.map(|s| &s[r * n..r * n + n]);
+        let mut j = 0;
+        while j + NC <= n {
+            let b0 = &b[j * k..j * k + k];
+            let b1 = &b[(j + 1) * k..(j + 1) * k + k];
+            let b2 = &b[(j + 2) * k..(j + 2) * k + k];
+            let b3 = &b[(j + 3) * k..(j + 3) * k + k];
+            let (mut s0, mut s1, mut s2, mut s3) = match srow {
+                Some(s) => (s[j], s[j + 1], s[j + 2], s[j + 3]),
+                None => (0.0f32, 0.0, 0.0, 0.0),
+            };
+            for kk in 0..k {
+                let av = ar[kk];
+                s0 += av * b0[kk];
+                s1 += av * b1[kk];
+                s2 += av * b2[kk];
+                s3 += av * b3[kk];
+            }
+            orow[j] = s0;
+            orow[j + 1] = s1;
+            orow[j + 2] = s2;
+            orow[j + 3] = s3;
+            j += NC;
+        }
+        while j < n {
+            let brow = &b[j * k..j * k + k];
+            let mut s = match srow {
+                Some(s) => s[j],
+                None => 0.0f32,
+            };
+            for kk in 0..k {
+                s += ar[kk] * brow[kk];
+            }
+            orow[j] = s;
+            j += 1;
+        }
+    }
+}
+
+/// Rank-`rows` update `g[i,j] += Σ_r x[r,i]·y[r,j]`, rows folded in
+/// ascending order per element (`x` `[rows,m]`, `y` `[rows,n]`, `g`
+/// `[m,n]`). Four-row blocks stream `g` once per block instead of once
+/// per row; within a block the four terms are added sequentially, so the
+/// per-element row order is untouched.
+pub fn ger_acc_rows(g: &mut [f32], x: &[f32], y: &[f32], rows: usize, m: usize, n: usize) {
+    assert_eq!(g.len(), m * n);
+    assert_eq!(x.len(), rows * m);
+    assert_eq!(y.len(), rows * n);
+    let mut r0 = 0;
+    while r0 + MR <= rows {
+        let x0 = &x[r0 * m..r0 * m + m];
+        let x1 = &x[(r0 + 1) * m..(r0 + 1) * m + m];
+        let x2 = &x[(r0 + 2) * m..(r0 + 2) * m + m];
+        let x3 = &x[(r0 + 3) * m..(r0 + 3) * m + m];
+        let y0 = &y[r0 * n..r0 * n + n];
+        let y1 = &y[(r0 + 1) * n..(r0 + 1) * n + n];
+        let y2 = &y[(r0 + 2) * n..(r0 + 2) * n + n];
+        let y3 = &y[(r0 + 3) * n..(r0 + 3) * n + n];
+        for i in 0..m {
+            let grow = &mut g[i * n..i * n + n];
+            let (v0, v1, v2, v3) = (x0[i], x1[i], x2[i], x3[i]);
+            for j in 0..n {
+                let mut acc = grow[j];
+                acc += v0 * y0[j];
+                acc += v1 * y1[j];
+                acc += v2 * y2[j];
+                acc += v3 * y3[j];
+                grow[j] = acc;
+            }
+        }
+        r0 += MR;
+    }
+    for r in r0..rows {
+        let xr = &x[r * m..r * m + m];
+        let yr = &y[r * n..r * n + n];
+        for (i, &xv) in xr.iter().enumerate() {
+            let grow = &mut g[i * n..i * n + n];
+            for j in 0..n {
+                grow[j] += xv * yr[j];
+            }
+        }
+    }
+}
+
+/// Column sums `acc[j] += Σ_r mat[r,j]` in ascending row order per
+/// column (the bias-gradient reduction).
+pub fn col_sum_acc(acc: &mut [f32], mat: &[f32], rows: usize, n: usize) {
+    assert_eq!(acc.len(), n);
+    assert_eq!(mat.len(), rows * n);
+    for row in mat.chunks_exact(n) {
+        for j in 0..n {
+            acc[j] += row[j];
+        }
+    }
+}
+
+/// In-place ReLU — byte-for-byte the original epilogue (`-0.0` and NaN
+/// pass through untouched, exactly like `if v < 0.0 { 0.0 }`).
+pub fn relu_inplace(buf: &mut [f32]) {
+    for v in buf.iter_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// ReLU backward mask, in place on `du`: keep `du` where the forward
+/// activation was strictly positive, zero elsewhere (NaN activations
+/// zero the gradient — same as the original `if uv > 0.0` select).
+pub fn relu_mask(du: &mut [f32], u: &[f32]) {
+    assert_eq!(du.len(), u.len());
+    for (d, &uv) in du.iter_mut().zip(u.iter()) {
+        *d = if uv > 0.0 { *d } else { 0.0 };
+    }
+}
+
+/// Fused second-matmul + residual epilogue of one MLP block:
+/// `out[r,:] = t_in[r,:] + b2 + Σ_{h: u[r,h] ≠ 0} u[r,h]·w2[h,:]`,
+/// h ascending. The zero-skip is part of the numeric contract (it is how
+/// the original loop exploited ReLU sparsity), so it is preserved —
+/// skipping a `+0.0` term is only observable through performance.
+#[allow(clippy::too_many_arguments)]
+pub fn residual_mlp2(
+    u: &[f32],
+    w2: &[f32],
+    b2: &[f32],
+    t_in: &[f32],
+    rows: usize,
+    hidden: usize,
+    dim: usize,
+    out: &mut [f32],
+) {
+    assert_eq!(u.len(), rows * hidden);
+    assert_eq!(w2.len(), hidden * dim);
+    assert_eq!(b2.len(), dim);
+    assert_eq!(t_in.len(), rows * dim);
+    assert_eq!(out.len(), rows * dim);
+    for r in 0..rows {
+        let ti = &t_in[r * dim..r * dim + dim];
+        let ur = &u[r * hidden..r * hidden + hidden];
+        let o = &mut out[r * dim..r * dim + dim];
+        for j in 0..dim {
+            o[j] = ti[j] + b2[j];
+        }
+        for (h, &uv) in ur.iter().enumerate() {
+            if uv != 0.0 {
+                let wrow = &w2[h * dim..h * dim + dim];
+                for j in 0..dim {
+                    o[j] += uv * wrow[j];
+                }
+            }
+        }
+    }
+}
+
+/// Batched patch gather (im2col): the `[n,H,W,C]` image tensor becomes
+/// `[n·tokens, patch·patch·channels]` patch rows — row `(s,t)` holds
+/// exactly the bytes the old per-(s,t) `gather_patch` produced, but each
+/// is gathered once per exec call instead of once for the forward and
+/// once again for the backward pass.
+pub fn im2col(x: &[f32], n: usize, image: usize, patch: usize, channels: usize, out: &mut [f32]) {
+    let grid = image / patch;
+    let tokens = grid * grid;
+    let pe = patch * patch * channels;
+    let img_elems = image * image * channels;
+    assert_eq!(x.len(), n * img_elems);
+    assert_eq!(out.len(), n * tokens * pe);
+    let span = patch * channels;
+    for s in 0..n {
+        let base = s * img_elems;
+        for t in 0..tokens {
+            let (pi, pj) = (t / grid, t % grid);
+            let orow = &mut out[(s * tokens + t) * pe..(s * tokens + t) * pe + pe];
+            let mut k = 0;
+            for py in 0..patch {
+                let gy = pi * patch + py;
+                let row = base + (gy * image + pj * patch) * channels;
+                orow[k..k + span].copy_from_slice(&x[row..row + span]);
+                k += span;
+            }
+        }
+    }
+}
+
+/// Token mean-pool: `out[s,:] = (Σ_t tok[s·T+t,:]) / T`, tokens folded in
+/// ascending order, one final scale — the original head-forward order.
+pub fn mean_pool(tok: &[f32], n: usize, tokens: usize, dim: usize, out: &mut [f32]) {
+    assert_eq!(tok.len(), n * tokens * dim);
+    assert_eq!(out.len(), n * dim);
+    let inv = 1.0 / tokens as f32;
+    for s in 0..n {
+        let pr = &mut out[s * dim..s * dim + dim];
+        pr.fill(0.0);
+        for t in 0..tokens {
+            let tr = &tok[(s * tokens + t) * dim..(s * tokens + t) * dim + dim];
+            for j in 0..dim {
+                pr[j] += tr[j];
+            }
+        }
+        for v in pr.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+/// One residual MLP block forward over `rows` token rows, whole-batch:
+/// `u = relu(t_in·W₁ + b₁)` (kept for the backward pass), then the fused
+/// residual epilogue. Bit-identical to [`reference::block_fwd`].
+pub fn block_fwd(
+    w: &[f32],
+    t_in: &[f32],
+    rows: usize,
+    dim: usize,
+    hidden: usize,
+    t_out: &mut [f32],
+    u_out: &mut [f32],
+) {
+    let (w1, rest) = w.split_at(dim * hidden);
+    let (b1, rest) = rest.split_at(hidden);
+    let (w2, b2) = rest.split_at(hidden * dim);
+    gemm_bias(t_in, w1, b1, rows, dim, hidden, u_out);
+    relu_inplace(u_out);
+    residual_mlp2(u_out, w2, b2, t_in, rows, hidden, dim, t_out);
+}
+
+/// One block backward, whole-batch: given `∂L/∂t_out`, accumulate the
+/// block's parameter gradients into `g_w` (same layout as `w`) and write
+/// `∂L/∂t_in` into `d_in`. `du` is a `[rows·hidden]` scratch buffer
+/// (overwritten). Bit-identical to [`reference::block_bwd`]: every
+/// per-element reduction folds in the original (κ-ascending, then
+/// row-ascending) order.
+#[allow(clippy::too_many_arguments)]
+pub fn block_bwd(
+    w: &[f32],
+    t_in: &[f32],
+    u: &[f32],
+    d_out: &[f32],
+    rows: usize,
+    dim: usize,
+    hidden: usize,
+    g_w: &mut [f32],
+    d_in: &mut [f32],
+    du: &mut [f32],
+) {
+    let (w1, rest) = w.split_at(dim * hidden);
+    let (_b1, rest) = rest.split_at(hidden);
+    let (w2, _b2) = rest.split_at(hidden * dim);
+    let (gw1, grest) = g_w.split_at_mut(dim * hidden);
+    let (gb1, grest) = grest.split_at_mut(hidden);
+    let (gw2, gb2) = grest.split_at_mut(hidden * dim);
+    // ∂b₂: column sums of the upstream gradient, rows in order.
+    col_sum_acc(gb2, d_out, rows, dim);
+    // du[r,h] = Σ_j d_out[r,j]·w2[h,j] — the hidden-layer gradient before
+    // the ReLU mask (the original loop computed it unmasked too).
+    gemm_bt(d_out, w2, None, rows, dim, hidden, du);
+    // ∂W₂ += uᵀ·d_out, rows in order (zero activations contribute their
+    // +0.0 terms exactly as the original unconditional update did).
+    ger_acc_rows(gw2, u, d_out, rows, hidden, dim);
+    // da = du masked by the forward activations.
+    relu_mask(du, u);
+    // ∂b₁: column sums of da, rows in order.
+    col_sum_acc(gb1, du, rows, hidden);
+    // ∂t_in[r,i] = d_out[r,i] (residual path) + Σ_h da[r,h]·w1[i,h].
+    gemm_bt(du, w1, Some(d_out), rows, hidden, dim, d_in);
+    // ∂W₁ += t_inᵀ·da, rows in order.
+    ger_acc_rows(gw1, t_in, du, rows, dim, hidden);
+}
+
+/// Classifier head forward, whole-batch: mean-pool + linear map.
+#[allow(clippy::too_many_arguments)]
+pub fn head_fwd(
+    clf: &[f32],
+    classes: usize,
+    tok: &[f32],
+    n: usize,
+    tokens: usize,
+    dim: usize,
+    pooled: &mut [f32],
+    logits: &mut [f32],
+) {
+    let (w, b) = clf.split_at(dim * classes);
+    mean_pool(tok, n, tokens, dim, pooled);
+    gemm_bias(pooled, w, b, n, dim, classes, logits);
+}
+
+/// Classifier head backward, whole-batch: head parameter gradients plus
+/// `∂L/∂tokens` (the mean-pool spreads `∂L/∂pooled` uniformly). `dp` is
+/// an `[n·dim]` scratch buffer (overwritten).
+#[allow(clippy::too_many_arguments)]
+pub fn head_bwd(
+    clf: &[f32],
+    classes: usize,
+    pooled: &[f32],
+    dlogits: &[f32],
+    n: usize,
+    tokens: usize,
+    dim: usize,
+    g_clf: &mut [f32],
+    dp: &mut [f32],
+    d_tok: &mut [f32],
+) {
+    let (w, _b) = clf.split_at(dim * classes);
+    let (gw, gb) = g_clf.split_at_mut(dim * classes);
+    assert_eq!(dp.len(), n * dim);
+    assert_eq!(d_tok.len(), n * tokens * dim);
+    // ∂b: column sums of ∂logits, samples in order.
+    col_sum_acc(gb, dlogits, n, classes);
+    // ∂W += pooledᵀ·∂logits, samples in order.
+    ger_acc_rows(gw, pooled, dlogits, n, dim, classes);
+    // ∂pooled[s,i] = (Σ_k ∂logits[s,k]·w[i,k]) / T — fold first, one
+    // final scale, exactly like the original `acc * inv`.
+    gemm_bt(dlogits, w, None, n, classes, dim, dp);
+    let inv = 1.0 / tokens as f32;
+    for v in dp.iter_mut() {
+        *v *= inv;
+    }
+    for s in 0..n {
+        let dpr = &dp[s * dim..s * dim + dim];
+        for t in 0..tokens {
+            d_tok[(s * tokens + t) * dim..(s * tokens + t) * dim + dim].copy_from_slice(dpr);
+        }
+    }
+}
+
+/// Softmax cross-entropy: mean loss over the batch, `∂L/∂logits` written
+/// into `d` (fully overwritten). Labels must be pre-validated against
+/// `classes` (the backend checks them at the argument boundary).
+pub fn softmax_xent(logits: &[f32], y: &[i32], classes: usize, n: usize, d: &mut [f32]) -> f32 {
+    assert_eq!(logits.len(), n * classes);
+    assert_eq!(y.len(), n);
+    assert_eq!(d.len(), n * classes);
+    let mut loss = 0.0f32;
+    let inv_n = 1.0 / n as f32;
+    for s in 0..n {
+        let label = y[s];
+        debug_assert!(label >= 0 && (label as usize) < classes, "unvalidated label");
+        let row = &logits[s * classes..s * classes + classes];
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut zsum = 0.0f32;
+        let dr = &mut d[s * classes..s * classes + classes];
+        for (k, &v) in row.iter().enumerate() {
+            let e = (v - m).exp();
+            dr[k] = e;
+            zsum += e;
+        }
+        loss += (zsum.ln() + m - row[label as usize]) * inv_n;
+        let inv_z = inv_n / zsum;
+        for v in dr.iter_mut() {
+            *v *= inv_z;
+        }
+        dr[label as usize] -= inv_n;
+    }
+    loss
+}
+
+/// The pre-kernel-core scalar implementations, kept verbatim (made
+/// dimension-generic) as the bit-identity oracle. Used by the property
+/// tests below and by `bench_native_kernels` for the naive-vs-tiled
+/// before/after sections — which is why the module is compiled (but
+/// doc-hidden) rather than `#[cfg(test)]`-gated.
+#[doc(hidden)]
+pub mod reference {
+    /// Row-at-a-time `out[r,:] = bias + Σ_κ a[r,κ]·w[κ,:]`.
+    pub fn gemm_bias(
+        a: &[f32],
+        w: &[f32],
+        bias: &[f32],
+        m: usize,
+        k: usize,
+        n: usize,
+        out: &mut [f32],
+    ) {
+        for r in 0..m {
+            let row = &mut out[r * n..][..n];
+            row.copy_from_slice(bias);
+            for (kk, &av) in a[r * k..][..k].iter().enumerate() {
+                let wrow = &w[kk * n..][..n];
+                for j in 0..n {
+                    row[j] += av * wrow[j];
+                }
+            }
+        }
+    }
+
+    /// Copy the patch feeding token `t` of sample `s` out of the
+    /// row-major `[n,H,W,C]` image tensor (order: y, x, channel).
+    pub fn gather_patch(
+        x: &[f32],
+        s: usize,
+        t: usize,
+        image: usize,
+        patch: usize,
+        channels: usize,
+        out: &mut [f32],
+    ) {
+        let grid = image / patch;
+        let (pi, pj) = (t / grid, t % grid);
+        let base = s * image * image * channels;
+        let span = patch * channels;
+        let mut k = 0;
+        for py in 0..patch {
+            let gy = pi * patch + py;
+            let row = base + (gy * image + pj * patch) * channels;
+            out[k..k + span].copy_from_slice(&x[row..row + span]);
+            k += span;
+        }
+    }
+
+    /// Patch embedding forward, one (s,t) gather + axpy at a time.
+    #[allow(clippy::too_many_arguments)]
+    pub fn embed_fwd(
+        w: &[f32],
+        b: &[f32],
+        x: &[f32],
+        n: usize,
+        image: usize,
+        patch: usize,
+        channels: usize,
+        dim: usize,
+        out: &mut [f32],
+    ) {
+        let grid = image / patch;
+        let tokens = grid * grid;
+        let pe = patch * patch * channels;
+        let mut pbuf = vec![0.0f32; pe];
+        for s in 0..n {
+            for t in 0..tokens {
+                gather_patch(x, s, t, image, patch, channels, &mut pbuf);
+                let o = &mut out[(s * tokens + t) * dim..][..dim];
+                o.copy_from_slice(b);
+                for (p, &xv) in pbuf.iter().enumerate() {
+                    let row = &w[p * dim..][..dim];
+                    for j in 0..dim {
+                        o[j] += xv * row[j];
+                    }
+                }
+            }
+        }
+    }
+
+    /// Patch embedding backward, one (s,t) re-gather at a time.
+    #[allow(clippy::too_many_arguments)]
+    pub fn embed_bwd(
+        x: &[f32],
+        d_tok: &[f32],
+        n: usize,
+        image: usize,
+        patch: usize,
+        channels: usize,
+        dim: usize,
+        gw: &mut [f32],
+        gb: &mut [f32],
+    ) {
+        let grid = image / patch;
+        let tokens = grid * grid;
+        let pe = patch * patch * channels;
+        let mut pbuf = vec![0.0f32; pe];
+        for s in 0..n {
+            for t in 0..tokens {
+                gather_patch(x, s, t, image, patch, channels, &mut pbuf);
+                let d = &d_tok[(s * tokens + t) * dim..][..dim];
+                for j in 0..dim {
+                    gb[j] += d[j];
+                }
+                for (p, &xv) in pbuf.iter().enumerate() {
+                    let grow = &mut gw[p * dim..][..dim];
+                    for j in 0..dim {
+                        grow[j] += xv * d[j];
+                    }
+                }
+            }
+        }
+    }
+
+    /// One residual MLP block forward, row at a time.
+    pub fn block_fwd(
+        w: &[f32],
+        t_in: &[f32],
+        rows: usize,
+        dim: usize,
+        hidden: usize,
+        t_out: &mut [f32],
+        u_out: &mut [f32],
+    ) {
+        let (w1, rest) = w.split_at(dim * hidden);
+        let (b1, rest) = rest.split_at(hidden);
+        let (w2, b2) = rest.split_at(hidden * dim);
+        for r in 0..rows {
+            let ti = &t_in[r * dim..][..dim];
+            let u = &mut u_out[r * hidden..][..hidden];
+            u.copy_from_slice(b1);
+            for (i, &tv) in ti.iter().enumerate() {
+                let row = &w1[i * hidden..][..hidden];
+                for h in 0..hidden {
+                    u[h] += tv * row[h];
+                }
+            }
+            for v in u.iter_mut() {
+                if *v < 0.0 {
+                    *v = 0.0;
+                }
+            }
+            let to = &mut t_out[r * dim..][..dim];
+            for j in 0..dim {
+                to[j] = ti[j] + b2[j];
+            }
+            for (h, &uv) in u.iter().enumerate() {
+                if uv != 0.0 {
+                    let row = &w2[h * dim..][..dim];
+                    for j in 0..dim {
+                        to[j] += uv * row[j];
+                    }
+                }
+            }
+        }
+    }
+
+    /// One block backward, row at a time with the interleaved du/∂W₂ and
+    /// ∂t_in/∂W₁ loops of the original implementation.
+    #[allow(clippy::too_many_arguments)]
+    pub fn block_bwd(
+        w: &[f32],
+        t_in: &[f32],
+        u: &[f32],
+        d_out: &[f32],
+        rows: usize,
+        dim: usize,
+        hidden: usize,
+        g_w: &mut [f32],
+        d_in: &mut [f32],
+    ) {
+        let (w1, rest) = w.split_at(dim * hidden);
+        let (_b1, rest) = rest.split_at(hidden);
+        let (w2, _b2) = rest.split_at(hidden * dim);
+        let (gw1, grest) = g_w.split_at_mut(dim * hidden);
+        let (gb1, grest) = grest.split_at_mut(hidden);
+        let (gw2, gb2) = grest.split_at_mut(hidden * dim);
+        let mut da = vec![0.0f32; hidden];
+        for r in 0..rows {
+            let dy = &d_out[r * dim..][..dim];
+            let ur = &u[r * hidden..][..hidden];
+            let ti = &t_in[r * dim..][..dim];
+            for j in 0..dim {
+                gb2[j] += dy[j];
+            }
+            for (h, &uv) in ur.iter().enumerate() {
+                let row = &w2[h * dim..][..dim];
+                let grow = &mut gw2[h * dim..][..dim];
+                let mut du = 0.0f32;
+                for j in 0..dim {
+                    du += dy[j] * row[j];
+                    grow[j] += uv * dy[j];
+                }
+                da[h] = if uv > 0.0 { du } else { 0.0 };
+            }
+            for h in 0..hidden {
+                gb1[h] += da[h];
+            }
+            let di = &mut d_in[r * dim..][..dim];
+            for (i, &tv) in ti.iter().enumerate() {
+                let row = &w1[i * hidden..][..hidden];
+                let grow = &mut gw1[i * hidden..][..hidden];
+                let mut acc = dy[i]; // residual path
+                for h in 0..hidden {
+                    acc += da[h] * row[h];
+                    grow[h] += tv * da[h];
+                }
+                di[i] = acc;
+            }
+        }
+    }
+
+    /// Classifier head forward, sample at a time.
+    #[allow(clippy::too_many_arguments)]
+    pub fn head_fwd(
+        clf: &[f32],
+        classes: usize,
+        tok: &[f32],
+        n: usize,
+        tokens: usize,
+        dim: usize,
+        pooled: &mut [f32],
+        logits: &mut [f32],
+    ) {
+        let (w, b) = clf.split_at(dim * classes);
+        let inv = 1.0 / tokens as f32;
+        for s in 0..n {
+            let pr = &mut pooled[s * dim..][..dim];
+            pr.fill(0.0);
+            for t in 0..tokens {
+                let tr = &tok[(s * tokens + t) * dim..][..dim];
+                for j in 0..dim {
+                    pr[j] += tr[j];
+                }
+            }
+            for v in pr.iter_mut() {
+                *v *= inv;
+            }
+            let lo = &mut logits[s * classes..][..classes];
+            lo.copy_from_slice(b);
+            for (i, &pv) in pr.iter().enumerate() {
+                let row = &w[i * classes..][..classes];
+                for k in 0..classes {
+                    lo[k] += pv * row[k];
+                }
+            }
+        }
+    }
+
+    /// Classifier head backward, sample at a time.
+    #[allow(clippy::too_many_arguments)]
+    pub fn head_bwd(
+        clf: &[f32],
+        classes: usize,
+        pooled: &[f32],
+        dlogits: &[f32],
+        n: usize,
+        tokens: usize,
+        dim: usize,
+        g_clf: &mut [f32],
+        d_tok: &mut [f32],
+    ) {
+        let (w, _b) = clf.split_at(dim * classes);
+        let (gw, gb) = g_clf.split_at_mut(dim * classes);
+        let inv = 1.0 / tokens as f32;
+        let mut dp = vec![0.0f32; dim];
+        for s in 0..n {
+            let dl = &dlogits[s * classes..][..classes];
+            for k in 0..classes {
+                gb[k] += dl[k];
+            }
+            let pr = &pooled[s * dim..][..dim];
+            for (i, &pv) in pr.iter().enumerate() {
+                let row = &w[i * classes..][..classes];
+                let grow = &mut gw[i * classes..][..classes];
+                let mut acc = 0.0f32;
+                for k in 0..classes {
+                    acc += dl[k] * row[k];
+                    grow[k] += pv * dl[k];
+                }
+                dp[i] = acc * inv;
+            }
+            for t in 0..tokens {
+                d_tok[(s * tokens + t) * dim..][..dim].copy_from_slice(&dp);
+            }
+        }
+    }
+
+    /// Softmax cross-entropy, allocating form.
+    pub fn softmax_xent(logits: &[f32], y: &[i32], classes: usize, n: usize) -> (f32, Vec<f32>) {
+        let mut d = vec![0.0f32; n * classes];
+        let loss = super::softmax_xent(logits, y, classes, n, &mut d);
+        (loss, d)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+    use crate::util::rng::Pcg32;
+
+    fn randv(rng: &mut Pcg32, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+        assert_eq!(a.len(), b.len(), "{what}: length");
+        for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what}[{i}]: {x} vs {y}");
+        }
+    }
+
+    /// Awkward row counts: below, at, straddling and off the 4-row block.
+    const ROWS: [usize; 6] = [1, 3, 4, 5, 13, 16];
+
+    #[test]
+    fn prop_gemm_bias_bitwise_matches_reference() {
+        forall(0x6E11, 40, |rng| {
+            let m = ROWS[rng.uniform_usize(ROWS.len())];
+            let k = 1 + rng.uniform_usize(48);
+            let n = 1 + rng.uniform_usize(40); // includes n < 4 (ILP remainder)
+            let a = randv(rng, m * k);
+            let w = randv(rng, k * n);
+            let bias = randv(rng, n);
+            let mut tiled = vec![0.0f32; m * n];
+            let mut naive = vec![0.0f32; m * n];
+            gemm_bias(&a, &w, &bias, m, k, n, &mut tiled);
+            reference::gemm_bias(&a, &w, &bias, m, k, n, &mut naive);
+            assert_bits_eq(&tiled, &naive, "gemm_bias");
+        });
+    }
+
+    #[test]
+    fn prop_block_fwd_bitwise_matches_reference() {
+        forall(0xB10C, 30, |rng| {
+            // n ∈ {1,3,5,8} batches of 16 tokens, plus off-block rows.
+            let rows = match rng.uniform_usize(6) {
+                0 => 16,     // n = 1
+                1 => 48,     // n = 3
+                2 => 80,     // n = 5
+                3 => 128,    // n = 8
+                4 => 7,      // off the 4-row block
+                _ => 1 + rng.uniform_usize(33),
+            };
+            let dim = 8 + rng.uniform_usize(12);
+            let hidden = 2 * dim;
+            let w = randv(rng, dim * hidden + hidden + hidden * dim + dim);
+            let t_in = randv(rng, rows * dim);
+            let mut t_a = vec![0.0f32; rows * dim];
+            let mut u_a = vec![0.0f32; rows * hidden];
+            let mut t_b = vec![0.0f32; rows * dim];
+            let mut u_b = vec![0.0f32; rows * hidden];
+            block_fwd(&w, &t_in, rows, dim, hidden, &mut t_a, &mut u_a);
+            reference::block_fwd(&w, &t_in, rows, dim, hidden, &mut t_b, &mut u_b);
+            assert_bits_eq(&u_a, &u_b, "block_fwd.u");
+            assert_bits_eq(&t_a, &t_b, "block_fwd.t");
+        });
+    }
+
+    #[test]
+    fn prop_block_bwd_bitwise_matches_reference() {
+        forall(0xB30D, 30, |rng| {
+            let rows = [16usize, 48, 80, 128, 7, 1, 5][rng.uniform_usize(7)];
+            let dim = 8 + rng.uniform_usize(12);
+            let hidden = 2 * dim;
+            let wlen = dim * hidden + hidden + hidden * dim + dim;
+            let w = randv(rng, wlen);
+            let t_in = randv(rng, rows * dim);
+            // Run a real forward so `u` carries genuine ReLU zeros (the
+            // skip/mask paths are the order-sensitive part).
+            let mut t_out = vec![0.0f32; rows * dim];
+            let mut u = vec![0.0f32; rows * hidden];
+            block_fwd(&w, &t_in, rows, dim, hidden, &mut t_out, &mut u);
+            let d_out = randv(rng, rows * dim);
+            // Non-zero gradient accumulators: the kernels must *add to*
+            // existing values exactly like the originals.
+            let g0 = randv(rng, wlen);
+            let mut g_a = g0.clone();
+            let mut g_b = g0;
+            let mut d_a = vec![0.0f32; rows * dim];
+            let mut d_b = vec![0.0f32; rows * dim];
+            let mut du = vec![0.0f32; rows * hidden];
+            block_bwd(&w, &t_in, &u, &d_out, rows, dim, hidden, &mut g_a, &mut d_a, &mut du);
+            reference::block_bwd(&w, &t_in, &u, &d_out, rows, dim, hidden, &mut g_b, &mut d_b);
+            assert_bits_eq(&g_a, &g_b, "block_bwd.g_w");
+            assert_bits_eq(&d_a, &d_b, "block_bwd.d_in");
+        });
+    }
+
+    #[test]
+    fn prop_embed_pair_bitwise_matches_reference() {
+        forall(0xE3BD, 20, |rng| {
+            let n = [1usize, 3, 5, 8][rng.uniform_usize(4)];
+            let (image, patch, channels, dim) = (16usize, 4usize, 3usize, 8 + rng.uniform_usize(9));
+            let grid = image / patch;
+            let tokens = grid * grid;
+            let pe = patch * patch * channels;
+            let x = randv(rng, n * image * image * channels);
+            let w = randv(rng, pe * dim);
+            let b = randv(rng, dim);
+            let rows = n * tokens;
+
+            // Forward: im2col + gemm_bias vs per-(s,t) gather.
+            let mut patches = vec![0.0f32; rows * pe];
+            im2col(&x, n, image, patch, channels, &mut patches);
+            let mut fwd_a = vec![0.0f32; rows * dim];
+            gemm_bias(&patches, &w, &b, rows, pe, dim, &mut fwd_a);
+            let mut fwd_b = vec![0.0f32; rows * dim];
+            reference::embed_fwd(&w, &b, &x, n, image, patch, channels, dim, &mut fwd_b);
+            assert_bits_eq(&fwd_a, &fwd_b, "embed_fwd");
+
+            // Backward: col_sum + ger over patch rows vs per-(s,t) re-gather.
+            let d_tok = randv(rng, rows * dim);
+            let gw0 = randv(rng, pe * dim);
+            let gb0 = randv(rng, dim);
+            let (mut gw_a, mut gb_a) = (gw0.clone(), gb0.clone());
+            let (mut gw_b, mut gb_b) = (gw0, gb0);
+            col_sum_acc(&mut gb_a, &d_tok, rows, dim);
+            ger_acc_rows(&mut gw_a, &patches, &d_tok, rows, pe, dim);
+            reference::embed_bwd(&x, &d_tok, n, image, patch, channels, dim, &mut gw_b, &mut gb_b);
+            assert_bits_eq(&gw_a, &gw_b, "embed_bwd.gw");
+            assert_bits_eq(&gb_a, &gb_b, "embed_bwd.gb");
+        });
+    }
+
+    #[test]
+    fn prop_head_pair_bitwise_matches_reference() {
+        forall(0x4EAD, 30, |rng| {
+            let n = [1usize, 3, 5, 8][rng.uniform_usize(4)];
+            let tokens = 1 + rng.uniform_usize(16);
+            let dim = 4 + rng.uniform_usize(29);
+            // Below/at/off the 4-chain ILP width, plus 10/100-class shapes.
+            let classes = [1usize, 2, 3, 4, 10, 100][rng.uniform_usize(6)];
+            let clf = randv(rng, dim * classes + classes);
+            let tok = randv(rng, n * tokens * dim);
+
+            let mut pooled_a = vec![0.0f32; n * dim];
+            let mut logits_a = vec![0.0f32; n * classes];
+            head_fwd(&clf, classes, &tok, n, tokens, dim, &mut pooled_a, &mut logits_a);
+            let mut pooled_b = vec![0.0f32; n * dim];
+            let mut logits_b = vec![0.0f32; n * classes];
+            reference::head_fwd(&clf, classes, &tok, n, tokens, dim, &mut pooled_b, &mut logits_b);
+            assert_bits_eq(&pooled_a, &pooled_b, "head_fwd.pooled");
+            assert_bits_eq(&logits_a, &logits_b, "head_fwd.logits");
+
+            let y: Vec<i32> = (0..n).map(|i| (i % classes) as i32).collect();
+            let mut dlog_a = vec![0.0f32; n * classes];
+            let loss_a = softmax_xent(&logits_a, &y, classes, n, &mut dlog_a);
+            let (loss_b, dlog_b) = reference::softmax_xent(&logits_b, &y, classes, n);
+            assert_eq!(loss_a.to_bits(), loss_b.to_bits(), "xent loss");
+            assert_bits_eq(&dlog_a, &dlog_b, "xent d");
+
+            let g0 = randv(rng, dim * classes + classes);
+            let mut g_a = g0.clone();
+            let mut g_b = g0;
+            let mut dp = vec![0.0f32; n * dim];
+            let mut dt_a = vec![0.0f32; n * tokens * dim];
+            let mut dt_b = vec![0.0f32; n * tokens * dim];
+            head_bwd(&clf, classes, &pooled_a, &dlog_a, n, tokens, dim, &mut g_a, &mut dp, &mut dt_a);
+            reference::head_bwd(&clf, classes, &pooled_b, &dlog_b, n, tokens, dim, &mut g_b, &mut dt_b);
+            assert_bits_eq(&g_a, &g_b, "head_bwd.g_clf");
+            assert_bits_eq(&dt_a, &dt_b, "head_bwd.d_tok");
+        });
+    }
+
+    #[test]
+    fn prop_gemm_bt_seed_and_remainders() {
+        forall(0x6EB7, 40, |rng| {
+            let m = 1 + rng.uniform_usize(17);
+            let k = 1 + rng.uniform_usize(48);
+            let n = 1 + rng.uniform_usize(11); // exercises the < NC tail
+            let a = randv(rng, m * k);
+            let b = randv(rng, n * k);
+            let seed = randv(rng, m * n);
+            let use_seed = rng.bernoulli(0.5);
+            let mut got = vec![0.0f32; m * n];
+            let seed_arg: Option<&[f32]> = if use_seed { Some(&seed) } else { None };
+            gemm_bt(&a, &b, seed_arg, m, k, n, &mut got);
+            // Scalar oracle: one fold per element, κ ascending.
+            for r in 0..m {
+                for j in 0..n {
+                    let mut s = if use_seed { seed[r * n + j] } else { 0.0f32 };
+                    for kk in 0..k {
+                        s += a[r * k + kk] * b[j * k + kk];
+                    }
+                    assert_eq!(got[r * n + j].to_bits(), s.to_bits(), "gemm_bt[{r},{j}]");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn relu_kernels_preserve_signed_zero_and_nan_semantics() {
+        let mut v = vec![-1.0f32, -0.0, 0.0, 2.0, f32::NAN];
+        relu_inplace(&mut v);
+        assert_eq!(v[0].to_bits(), 0.0f32.to_bits());
+        assert_eq!(v[1].to_bits(), (-0.0f32).to_bits(), "-0.0 is not < 0.0");
+        assert_eq!(v[3], 2.0);
+        assert!(v[4].is_nan(), "NaN is not < 0.0");
+
+        let u = vec![1.0f32, 0.0, -0.0, f32::NAN];
+        let mut du = vec![5.0f32, 6.0, 7.0, 8.0];
+        relu_mask(&mut du, &u);
+        assert_eq!(du, vec![5.0, 0.0, 0.0, 0.0]);
+    }
+}

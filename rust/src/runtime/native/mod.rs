@@ -28,12 +28,36 @@
 //! τ-clipped (τ = 0.5, paper §II-B) before they leave an op, matching
 //! the artifact contract; server-side gradients are returned raw.
 //!
+//! # Compute core
+//!
+//! All math runs on the [`kernels`] module: a cache-tiled,
+//! register-blocked GEMM/GEMV family plus an im2col batched patch gather
+//! and fused bias/ReLU/residual epilogues, executing each op as
+//! whole-batch matrix passes over all `n·tokens` rows instead of
+//! row-at-a-time dot products. Scratch memory (activations, hidden
+//! layers, gradient staging) comes from a per-backend [`arena`]
+//! checkout, so steady-state exec calls perform **zero scratch
+//! allocations** — only the returned output tensors are freshly
+//! allocated (they leave through the `Vec<Vec<f32>>` exec contract and
+//! cannot be pooled). `RuntimeStats` reports the time spent inside the
+//! kernel core (`kernel_time_s`) and the arena's high-water mark /
+//! allocation count; the latter stabilizes after the first pass of each
+//! op shape, asserted in the tests below.
+//!
 //! # Determinism
 //!
 //! Every op is a pure function of its inputs: fixed-order f32 loops, no
-//! threading, no hidden state. Two calls with the same inputs return
-//! bit-identical outputs on any thread — which is what lets the parallel
-//! round engine's `--threads N` invariance be asserted end to end.
+//! threading, no hidden state, and the tiled kernels keep every
+//! per-output-element reduction in the exact fold order of the original
+//! scalar loops (see the [`kernels`] module docs), so outputs are
+//! **bit-identical** to the pre-kernel-core backend — the fp32 golden
+//! snapshots pin this. Arena buffers are zero-filled on checkout and
+//! fully overwritten by the kernels, so results never depend on buffer
+//! reuse history; two calls with the same inputs return bit-identical
+//! outputs on any thread — which is what lets the parallel round
+//! engine's `--threads N` invariance be asserted end to end. Per-client
+//! kernel work stays single-threaded, composing with the engine's
+//! per-client worker threads.
 //!
 //! # What it does NOT model
 //!
@@ -44,7 +68,12 @@
 //! still meaningful; absolute accuracy numbers are not comparable across
 //! backends.
 
+pub mod kernels;
+
+mod arena;
+
 use std::sync::Mutex;
+use std::time::Instant;
 
 use super::manifest::ModelInfo;
 use super::{Arg, Backend, RuntimeStats};
@@ -53,6 +82,8 @@ use crate::tpgf;
 use crate::util::math;
 use crate::util::rng::Pcg32;
 use crate::{Error, Result};
+
+use arena::ScratchArena;
 
 // Fixed geometry of the reference model. Small on purpose: one client
 // step is a few MFLOPs, so whole simulated experiments finish in seconds.
@@ -79,6 +110,8 @@ const INIT_SEED: u64 = 0x5F5E_0001_5EED;
 pub struct NativeBackend {
     model: ModelInfo,
     stats: Mutex<RuntimeStats>,
+    /// Reusable scratch buffers for the exec hot path (module docs).
+    arena: Mutex<ScratchArena>,
 }
 
 impl Default for NativeBackend {
@@ -107,6 +140,7 @@ impl NativeBackend {
                 classes_variants: vec![10, 100],
             },
             stats: Mutex::new(RuntimeStats::default()),
+            arena: Mutex::new(ScratchArena::new()),
         }
     }
 
@@ -187,6 +221,27 @@ fn want_i32<'a>(name: &str, label: &str, arg: &Arg<'a>, elems: usize) -> Result<
     }
 }
 
+/// Labels: shape-checked AND range-checked up front, so the kernel path
+/// below the argument boundary is infallible (arena buffers always flow
+/// back to the pool — no early return can strand them).
+fn want_labels<'a>(
+    name: &str,
+    label: &str,
+    arg: &Arg<'a>,
+    elems: usize,
+    classes: usize,
+) -> Result<&'a [i32]> {
+    let y = want_i32(name, label, arg, elems)?;
+    for &v in y {
+        if v < 0 || v as usize >= classes {
+            return Err(Error::Shape(format!(
+                "label {v} out of range for {classes} classes"
+            )));
+        }
+    }
+    Ok(y)
+}
+
 fn want_scalar(name: &str, label: &str, arg: &Arg<'_>) -> Result<f32> {
     match *arg {
         Arg::Scalar(v) => Ok(v),
@@ -216,340 +271,152 @@ fn check_depth(name: &str, d: usize) -> Result<()> {
     }
 }
 
-// ---- model math --------------------------------------------------------
+// ---- model math on the kernel core -------------------------------------
 
-/// Copy the 8×8 patch feeding token `t` of sample `s` out of the
-/// row-major `[n, H, W, C]` image tensor (order: y, x, channel).
-fn gather_patch(x: &[f32], s: usize, t: usize, out: &mut [f32; PATCH_ELEMS]) {
-    let (pi, pj) = (t / GRID, t % GRID);
-    let base = s * IMG_ELEMS;
-    let mut k = 0;
-    for py in 0..PATCH {
-        let gy = pi * PATCH + py;
-        let row = base + (gy * IMAGE + pj * PATCH) * CHANNELS;
-        out[k..k + PATCH * CHANNELS].copy_from_slice(&x[row..row + PATCH * CHANNELS]);
-        k += PATCH * CHANNELS;
+/// Per-exec scratch checked out from the arena. Every buffer is either
+/// zero-length (unused by this op shape) or fully overwritten by the
+/// kernels before it is read.
+struct Ws {
+    /// im2col patch matrix `[n·tokens, PATCH_ELEMS]`.
+    patches: Vec<f32>,
+    /// Token states before/after each block: `(nblocks+1) · rows · DIM`,
+    /// layer `l` at `[l·rows·DIM ..][.. rows·DIM]`.
+    acts: Vec<f32>,
+    /// Post-ReLU hidden activations per block: `nblocks · rows · HIDDEN`.
+    hids: Vec<f32>,
+    pooled: Vec<f32>,
+    logits: Vec<f32>,
+    dlog: Vec<f32>,
+    /// `∂L/∂pooled` staging for the head backward.
+    dp: Vec<f32>,
+    /// Token-gradient ping/pong buffers for the block backward chain.
+    d_cur: Vec<f32>,
+    d_tmp: Vec<f32>,
+    /// Hidden-layer gradient staging `[rows · HIDDEN]`.
+    du: Vec<f32>,
+}
+
+impl NativeBackend {
+    /// Check out the buffer set for one op shape. The take order is
+    /// fixed (struct field order), so pool warm-up is deterministic per
+    /// op type.
+    fn checkout(&self, n: usize, nblocks: usize, classes: usize, head: bool, bwd: bool, patches: bool) -> Ws {
+        let rows = n * TOKENS;
+        let mut a = self.arena.lock().expect("arena lock");
+        Ws {
+            patches: a.take(if patches { rows * PATCH_ELEMS } else { 0 }),
+            acts: a.take((nblocks + 1) * rows * DIM),
+            hids: a.take(nblocks * rows * HIDDEN),
+            pooled: a.take(if head { n * DIM } else { 0 }),
+            logits: a.take(if head { n * classes } else { 0 }),
+            dlog: a.take(if head && bwd { n * classes } else { 0 }),
+            dp: a.take(if head && bwd { n * DIM } else { 0 }),
+            d_cur: a.take(if bwd { rows * DIM } else { 0 }),
+            d_tmp: a.take(if bwd { rows * DIM } else { 0 }),
+            du: a.take(if bwd { rows * HIDDEN } else { 0 }),
+        }
+    }
+
+    fn checkin(&self, ws: Ws) {
+        let mut a = self.arena.lock().expect("arena lock");
+        a.put(ws.patches);
+        a.put(ws.acts);
+        a.put(ws.hids);
+        a.put(ws.pooled);
+        a.put(ws.logits);
+        a.put(ws.dlog);
+        a.put(ws.dp);
+        a.put(ws.d_cur);
+        a.put(ws.d_tmp);
+        a.put(ws.du);
+    }
+
+    /// Account compute time spent past the argument boundary (kernels +
+    /// arena checkout — the part an accelerator would own).
+    fn note_kernel_time(&self, t0: Instant) {
+        let dt = t0.elapsed().as_secs_f64();
+        self.stats.lock().expect("stats lock").kernel_time_s += dt;
     }
 }
 
-/// Patch embedding forward: `[n]` images → `[n*T*D]` token states.
-fn embed_fwd(enc: &[f32], x: &[f32], n: usize, out: &mut Vec<f32>) {
-    let (w, b) = enc[..EMBED_SIZE].split_at(PATCH_ELEMS * DIM);
-    out.clear();
-    out.resize(n * TOKENS * DIM, 0.0);
-    let mut patch = [0.0f32; PATCH_ELEMS];
-    for s in 0..n {
-        for t in 0..TOKENS {
-            gather_patch(x, s, t, &mut patch);
-            let o = &mut out[(s * TOKENS + t) * DIM..][..DIM];
-            o.copy_from_slice(b);
-            for (p, &xv) in patch.iter().enumerate() {
-                let row = &w[p * DIM..][..DIM];
-                for j in 0..DIM {
-                    o[j] += xv * row[j];
-                }
-            }
-        }
-    }
+/// Embed + the first `nblocks` blocks, whole-batch: fills `ws.patches`,
+/// `ws.acts[0..=nblocks]` and `ws.hids`.
+fn forward_from_images(enc: &[f32], x: &[f32], n: usize, nblocks: usize, ws: &mut Ws) {
+    let rows = n * TOKENS;
+    kernels::im2col(x, n, IMAGE, PATCH, CHANNELS, &mut ws.patches);
+    let (w_e, b_e) = enc[..EMBED_SIZE].split_at(PATCH_ELEMS * DIM);
+    kernels::gemm_bias(
+        &ws.patches,
+        w_e,
+        b_e,
+        rows,
+        PATCH_ELEMS,
+        DIM,
+        &mut ws.acts[..rows * DIM],
+    );
+    blocks_forward(enc, EMBED_SIZE, nblocks, rows, &mut ws.acts, &mut ws.hids);
 }
 
-/// Patch embedding backward: accumulate `∂L/∂(W_e, b_e)` into `g_embed`.
-fn embed_bwd(x: &[f32], d_tok: &[f32], n: usize, g_embed: &mut [f32]) {
-    let (gw, gb) = g_embed[..EMBED_SIZE].split_at_mut(PATCH_ELEMS * DIM);
-    let mut patch = [0.0f32; PATCH_ELEMS];
-    for s in 0..n {
-        for t in 0..TOKENS {
-            gather_patch(x, s, t, &mut patch);
-            let d = &d_tok[(s * TOKENS + t) * DIM..][..DIM];
-            for j in 0..DIM {
-                gb[j] += d[j];
-            }
-            for (p, &xv) in patch.iter().enumerate() {
-                let grow = &mut gw[p * DIM..][..DIM];
-                for j in 0..DIM {
-                    grow[j] += xv * d[j];
-                }
-            }
-        }
-    }
-}
-
-/// One residual MLP block forward over `rows = n·T` token rows. Stores the
-/// post-relu hidden activations (needed by the backward pass).
-fn block_fwd(w: &[f32], t_in: &[f32], rows: usize, t_out: &mut Vec<f32>, u_out: &mut Vec<f32>) {
-    let (w1, rest) = w.split_at(DIM * HIDDEN);
-    let (b1, rest) = rest.split_at(HIDDEN);
-    let (w2, b2) = rest.split_at(HIDDEN * DIM);
-    t_out.clear();
-    t_out.resize(rows * DIM, 0.0);
-    u_out.clear();
-    u_out.resize(rows * HIDDEN, 0.0);
-    for r in 0..rows {
-        let ti = &t_in[r * DIM..][..DIM];
-        let u = &mut u_out[r * HIDDEN..][..HIDDEN];
-        u.copy_from_slice(b1);
-        for (i, &tv) in ti.iter().enumerate() {
-            let row = &w1[i * HIDDEN..][..HIDDEN];
-            for h in 0..HIDDEN {
-                u[h] += tv * row[h];
-            }
-        }
-        for v in u.iter_mut() {
-            if *v < 0.0 {
-                *v = 0.0;
-            }
-        }
-        let to = &mut t_out[r * DIM..][..DIM];
-        for j in 0..DIM {
-            to[j] = ti[j] + b2[j];
-        }
-        for (h, &uv) in u.iter().enumerate() {
-            if uv != 0.0 {
-                let row = &w2[h * DIM..][..DIM];
-                for j in 0..DIM {
-                    to[j] += uv * row[j];
-                }
-            }
-        }
-    }
-}
-
-/// One block backward: given `∂L/∂t_out`, accumulate the block's parameter
-/// gradients into `g_w` (same layout as `w`) and produce `∂L/∂t_in`.
-fn block_bwd(
-    w: &[f32],
-    t_in: &[f32],
-    u: &[f32],
-    d_out: &[f32],
-    rows: usize,
-    g_w: &mut [f32],
-    d_in: &mut Vec<f32>,
-) {
-    let (w1, rest) = w.split_at(DIM * HIDDEN);
-    let (_b1, rest) = rest.split_at(HIDDEN);
-    let (w2, _b2) = rest.split_at(HIDDEN * DIM);
-    let (gw1, grest) = g_w.split_at_mut(DIM * HIDDEN);
-    let (gb1, grest) = grest.split_at_mut(HIDDEN);
-    let (gw2, gb2) = grest.split_at_mut(HIDDEN * DIM);
-    d_in.clear();
-    d_in.resize(rows * DIM, 0.0);
-    let mut da = [0.0f32; HIDDEN];
-    for r in 0..rows {
-        let dy = &d_out[r * DIM..][..DIM];
-        let ur = &u[r * HIDDEN..][..HIDDEN];
-        let ti = &t_in[r * DIM..][..DIM];
-        for j in 0..DIM {
-            gb2[j] += dy[j];
-        }
-        // du = dy·W2ᵀ, masked by relu; W2 grads in the same pass.
-        for (h, &uv) in ur.iter().enumerate() {
-            let row = &w2[h * DIM..][..DIM];
-            let grow = &mut gw2[h * DIM..][..DIM];
-            let mut du = 0.0f32;
-            for j in 0..DIM {
-                du += dy[j] * row[j];
-                grow[j] += uv * dy[j];
-            }
-            da[h] = if uv > 0.0 { du } else { 0.0 };
-        }
-        for h in 0..HIDDEN {
-            gb1[h] += da[h];
-        }
-        let di = &mut d_in[r * DIM..][..DIM];
-        for (i, &tv) in ti.iter().enumerate() {
-            let row = &w1[i * HIDDEN..][..HIDDEN];
-            let grow = &mut gw1[i * HIDDEN..][..HIDDEN];
-            let mut acc = dy[i]; // residual path
-            for h in 0..HIDDEN {
-                acc += da[h] * row[h];
-                grow[h] += tv * da[h];
-            }
-            di[i] = acc;
-        }
-    }
-}
-
-/// Classifier head forward: mean-pool tokens, linear map to logits.
-fn head_fwd(
-    clf: &[f32],
-    classes: usize,
-    tok: &[f32],
-    n: usize,
-    pooled: &mut Vec<f32>,
-    logits: &mut Vec<f32>,
-) {
-    let (w, b) = clf.split_at(DIM * classes);
-    pooled.clear();
-    pooled.resize(n * DIM, 0.0);
-    logits.clear();
-    logits.resize(n * classes, 0.0);
-    let inv = 1.0 / TOKENS as f32;
-    for s in 0..n {
-        let pr = &mut pooled[s * DIM..][..DIM];
-        for t in 0..TOKENS {
-            let tr = &tok[(s * TOKENS + t) * DIM..][..DIM];
-            for j in 0..DIM {
-                pr[j] += tr[j];
-            }
-        }
-        for v in pr.iter_mut() {
-            *v *= inv;
-        }
-        let lo = &mut logits[s * classes..][..classes];
-        lo.copy_from_slice(b);
-        for (i, &pv) in pr.iter().enumerate() {
-            let row = &w[i * classes..][..classes];
-            for k in 0..classes {
-                lo[k] += pv * row[k];
-            }
-        }
-    }
-}
-
-/// Softmax cross-entropy: mean loss over the batch + `∂L/∂logits`.
-fn softmax_xent(logits: &[f32], y: &[i32], classes: usize, n: usize) -> Result<(f32, Vec<f32>)> {
-    let mut d = vec![0.0f32; n * classes];
-    let mut loss = 0.0f32;
-    let inv_n = 1.0 / n as f32;
-    for s in 0..n {
-        let label = y[s];
-        if label < 0 || label as usize >= classes {
-            return Err(Error::Shape(format!(
-                "label {label} out of range for {classes} classes"
-            )));
-        }
-        let row = &logits[s * classes..][..classes];
-        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-        let mut zsum = 0.0f32;
-        let dr = &mut d[s * classes..][..classes];
-        for (k, &v) in row.iter().enumerate() {
-            let e = (v - m).exp();
-            dr[k] = e;
-            zsum += e;
-        }
-        loss += (zsum.ln() + m - row[label as usize]) * inv_n;
-        let inv_z = inv_n / zsum;
-        for v in dr.iter_mut() {
-            *v *= inv_z;
-        }
-        dr[label as usize] -= inv_n;
-    }
-    Ok((loss, d))
-}
-
-/// Classifier head backward: head parameter gradients + `∂L/∂tokens`
-/// (the mean-pool spreads `∂L/∂pooled` uniformly over the tokens).
-fn head_bwd(
-    clf: &[f32],
-    classes: usize,
-    pooled: &[f32],
-    dlogits: &[f32],
-    n: usize,
-    g_clf: &mut [f32],
-    d_tok: &mut Vec<f32>,
-) {
-    let (w, _b) = clf.split_at(DIM * classes);
-    let (gw, gb) = g_clf.split_at_mut(DIM * classes);
-    d_tok.clear();
-    d_tok.resize(n * TOKENS * DIM, 0.0);
-    let inv = 1.0 / TOKENS as f32;
-    for s in 0..n {
-        let dl = &dlogits[s * classes..][..classes];
-        for k in 0..classes {
-            gb[k] += dl[k];
-        }
-        let pr = &pooled[s * DIM..][..DIM];
-        let mut dp = [0.0f32; DIM];
-        for (i, &pv) in pr.iter().enumerate() {
-            let row = &w[i * classes..][..classes];
-            let grow = &mut gw[i * classes..][..classes];
-            let mut acc = 0.0f32;
-            for k in 0..classes {
-                acc += dl[k] * row[k];
-                grow[k] += pv * dl[k];
-            }
-            dp[i] = acc * inv;
-        }
-        for t in 0..TOKENS {
-            d_tok[(s * TOKENS + t) * DIM..][..DIM].copy_from_slice(&dp);
-        }
-    }
-}
-
-/// Activations kept for a backward pass: token states before each block
-/// (`acts[0]` is the block-chain input) plus each block's hidden layer.
-struct FwdState {
-    acts: Vec<Vec<f32>>,
-    hids: Vec<Vec<f32>>,
-}
-
-/// Forward through `nblocks` blocks of `params` (blocks only, starting at
-/// `params[offset]`), from pre-computed token states.
-fn blocks_fwd(params: &[f32], offset: usize, nblocks: usize, t0: Vec<f32>, rows: usize) -> FwdState {
-    let mut acts = Vec::with_capacity(nblocks + 1);
-    let mut hids = Vec::with_capacity(nblocks);
-    acts.push(t0);
-    for l in 0..nblocks {
-        let w = &params[offset + l * BLOCK_SIZE..][..BLOCK_SIZE];
-        let mut t_out = Vec::new();
-        let mut u = Vec::new();
-        block_fwd(w, &acts[l], rows, &mut t_out, &mut u);
-        acts.push(t_out);
-        hids.push(u);
-    }
-    FwdState { acts, hids }
-}
-
-/// Backward through the same blocks; accumulates into `g[offset..]` and
-/// returns `∂L/∂acts[0]`.
-fn blocks_bwd(
+/// Forward through `nblocks` blocks of `params` (starting at `offset`),
+/// from the token states already in `acts[0]`.
+fn blocks_forward(
     params: &[f32],
     offset: usize,
     nblocks: usize,
-    fwd: &FwdState,
-    d_top: Vec<f32>,
     rows: usize,
+    acts: &mut [f32],
+    hids: &mut [f32],
+) {
+    for l in 0..nblocks {
+        let w = &params[offset + l * BLOCK_SIZE..][..BLOCK_SIZE];
+        let (lo, hi) = acts.split_at_mut((l + 1) * rows * DIM);
+        let t_in = &lo[l * rows * DIM..];
+        let t_out = &mut hi[..rows * DIM];
+        let u = &mut hids[l * rows * HIDDEN..][..rows * HIDDEN];
+        kernels::block_fwd(w, t_in, rows, DIM, HIDDEN, t_out, u);
+    }
+}
+
+/// Backward through the same blocks; accumulates into `g[offset..]`. On
+/// entry `d` holds `∂L/∂acts[nblocks]`; on return it holds
+/// `∂L/∂acts[0]` (`tmp` and `du` are scratch).
+#[allow(clippy::too_many_arguments)]
+fn blocks_backward(
+    params: &[f32],
+    offset: usize,
+    nblocks: usize,
+    rows: usize,
+    acts: &[f32],
+    hids: &[f32],
+    d: &mut Vec<f32>,
+    tmp: &mut Vec<f32>,
+    du: &mut [f32],
     g: &mut [f32],
-) -> Vec<f32> {
-    let mut d = d_top;
-    let mut d_next = Vec::new();
+) {
     for l in (0..nblocks).rev() {
         let w = &params[offset + l * BLOCK_SIZE..][..BLOCK_SIZE];
-        block_bwd(
+        kernels::block_bwd(
             w,
-            &fwd.acts[l],
-            &fwd.hids[l],
-            &d,
+            &acts[l * rows * DIM..][..rows * DIM],
+            &hids[l * rows * HIDDEN..][..rows * HIDDEN],
+            &d[..],
             rows,
+            DIM,
+            HIDDEN,
             &mut g[offset + l * BLOCK_SIZE..][..BLOCK_SIZE],
-            &mut d_next,
+            &mut tmp[..],
+            du,
         );
-        std::mem::swap(&mut d, &mut d_next);
+        std::mem::swap(d, tmp);
     }
-    d
 }
 
-/// Client-side forward: embed + the first `depth` blocks of `enc`.
-fn client_forward(enc: &[f32], x: &[f32], n: usize, depth: usize) -> FwdState {
-    let mut t0 = Vec::new();
-    embed_fwd(enc, x, n, &mut t0);
-    blocks_fwd(enc, EMBED_SIZE, depth, t0, n * TOKENS)
-}
-
-/// Client-side backward from an upstream token gradient; returns the raw
-/// (unclipped) encoder gradient.
-fn client_backward(
-    enc: &[f32],
-    x: &[f32],
-    fwd: &FwdState,
-    d_top: Vec<f32>,
-    n: usize,
-    depth: usize,
-) -> Vec<f32> {
-    let mut g = vec![0.0f32; enc.len()];
-    let d0 = blocks_bwd(enc, EMBED_SIZE, depth, fwd, d_top, n * TOKENS, &mut g);
-    embed_bwd(x, &d0, n, &mut g);
-    g
+/// Patch-embed backward from the im2col matrix built in the forward pass
+/// (no per-(s,t) re-gather).
+fn embed_backward(patches: &[f32], d_tok: &[f32], rows: usize, g_embed: &mut [f32]) {
+    let (gw, gb) = g_embed[..EMBED_SIZE].split_at_mut(PATCH_ELEMS * DIM);
+    kernels::col_sum_acc(gb, d_tok, rows, DIM);
+    kernels::ger_acc_rows(gw, patches, d_tok, rows, PATCH_ELEMS, DIM);
 }
 
 // ---- op implementations ------------------------------------------------
@@ -567,18 +434,54 @@ impl NativeBackend {
         let enc = want_f32(name, "enc", &args[0], enc_len)?;
         let clf = want_f32(name, "clf", &args[1], Self::clf_size(c))?;
         let x = want_f32(name, "x", &args[2], BATCH * IMG_ELEMS)?;
-        let y = want_i32(name, "y", &args[3], BATCH)?;
+        let y = want_labels(name, "y", &args[3], BATCH, c)?;
 
-        let fwd = client_forward(enc, x, BATCH, d);
-        let z = fwd.acts[d].clone();
-        let (mut pooled, mut logits) = (Vec::new(), Vec::new());
-        head_fwd(clf, c, &fwd.acts[d], BATCH, &mut pooled, &mut logits);
-        let (loss, dlog) = softmax_xent(&logits, y, c, BATCH)?;
+        let t_k = Instant::now();
+        let rows = BATCH * TOKENS;
+        let mut ws = self.checkout(BATCH, d, c, true, true, true);
+        forward_from_images(enc, x, BATCH, d, &mut ws);
+        let z = ws.acts[d * rows * DIM..][..rows * DIM].to_vec();
+        kernels::head_fwd(
+            clf,
+            c,
+            &ws.acts[d * rows * DIM..][..rows * DIM],
+            BATCH,
+            TOKENS,
+            DIM,
+            &mut ws.pooled,
+            &mut ws.logits,
+        );
+        let loss = kernels::softmax_xent(&ws.logits, y, c, BATCH, &mut ws.dlog);
         let mut g_clf = vec![0.0f32; clf.len()];
-        let mut d_tok = Vec::new();
-        head_bwd(clf, c, &pooled, &dlog, BATCH, &mut g_clf, &mut d_tok);
-        let mut g_enc = client_backward(enc, x, &fwd, d_tok, BATCH, d);
+        kernels::head_bwd(
+            clf,
+            c,
+            &ws.pooled,
+            &ws.dlog,
+            BATCH,
+            TOKENS,
+            DIM,
+            &mut g_clf,
+            &mut ws.dp,
+            &mut ws.d_cur,
+        );
+        let mut g_enc = vec![0.0f32; enc.len()];
+        blocks_backward(
+            enc,
+            EMBED_SIZE,
+            d,
+            rows,
+            &ws.acts,
+            &ws.hids,
+            &mut ws.d_cur,
+            &mut ws.d_tmp,
+            &mut ws.du,
+            &mut g_enc,
+        );
+        embed_backward(&ws.patches, &ws.d_cur, rows, &mut g_enc);
         math::clip_l2(&mut g_enc, TAU);
+        self.checkin(ws);
+        self.note_kernel_time(t_k);
         Ok(vec![z, vec![loss], g_enc, g_clf])
     }
 
@@ -586,8 +489,14 @@ impl NativeBackend {
         check_arity(name, args, 2)?;
         let enc = want_f32(name, "enc", &args[0], self.model.enc_size(d))?;
         let x = want_f32(name, "x", &args[1], BATCH * IMG_ELEMS)?;
-        let mut fwd = client_forward(enc, x, BATCH, d);
-        Ok(vec![fwd.acts.pop().expect("depth >= 1")])
+        let t_k = Instant::now();
+        let rows = BATCH * TOKENS;
+        let mut ws = self.checkout(BATCH, d, 0, false, false, true);
+        forward_from_images(enc, x, BATCH, d, &mut ws);
+        let z = ws.acts[d * rows * DIM..][..rows * DIM].to_vec();
+        self.checkin(ws);
+        self.note_kernel_time(t_k);
+        Ok(vec![z])
     }
 
     fn op_client_bwd(&self, name: &str, d: usize, args: &[Arg<'_>]) -> Result<Vec<Vec<f32>>> {
@@ -595,9 +504,28 @@ impl NativeBackend {
         let enc = want_f32(name, "enc", &args[0], self.model.enc_size(d))?;
         let x = want_f32(name, "x", &args[1], BATCH * IMG_ELEMS)?;
         let g_z = want_f32(name, "g_z", &args[2], BATCH * TOKENS * DIM)?;
-        let fwd = client_forward(enc, x, BATCH, d);
-        let mut g_enc = client_backward(enc, x, &fwd, g_z.to_vec(), BATCH, d);
+        let t_k = Instant::now();
+        let rows = BATCH * TOKENS;
+        let mut ws = self.checkout(BATCH, d, 0, false, true, true);
+        forward_from_images(enc, x, BATCH, d, &mut ws);
+        ws.d_cur.copy_from_slice(g_z);
+        let mut g_enc = vec![0.0f32; enc.len()];
+        blocks_backward(
+            enc,
+            EMBED_SIZE,
+            d,
+            rows,
+            &ws.acts,
+            &ws.hids,
+            &mut ws.d_cur,
+            &mut ws.d_tmp,
+            &mut ws.du,
+            &mut g_enc,
+        );
+        embed_backward(&ws.patches, &ws.d_cur, rows, &mut g_enc);
         math::clip_l2(&mut g_enc, TAU);
+        self.checkin(ws);
+        self.note_kernel_time(t_k);
         Ok(vec![g_enc])
     }
 
@@ -613,17 +541,53 @@ impl NativeBackend {
         let srv = want_f32(name, "srv", &args[0], nblocks * BLOCK_SIZE)?;
         let clf_s = want_f32(name, "clf_s", &args[1], Self::clf_size(c))?;
         let z = want_f32(name, "z", &args[2], BATCH * TOKENS * DIM)?;
-        let y = want_i32(name, "y", &args[3], BATCH)?;
+        let y = want_labels(name, "y", &args[3], BATCH, c)?;
 
-        let fwd = blocks_fwd(srv, 0, nblocks, z.to_vec(), BATCH * TOKENS);
-        let (mut pooled, mut logits) = (Vec::new(), Vec::new());
-        head_fwd(clf_s, c, &fwd.acts[nblocks], BATCH, &mut pooled, &mut logits);
-        let (loss, dlog) = softmax_xent(&logits, y, c, BATCH)?;
+        let t_k = Instant::now();
+        let rows = BATCH * TOKENS;
+        let mut ws = self.checkout(BATCH, nblocks, c, true, true, false);
+        ws.acts[..rows * DIM].copy_from_slice(z);
+        blocks_forward(srv, 0, nblocks, rows, &mut ws.acts, &mut ws.hids);
+        kernels::head_fwd(
+            clf_s,
+            c,
+            &ws.acts[nblocks * rows * DIM..][..rows * DIM],
+            BATCH,
+            TOKENS,
+            DIM,
+            &mut ws.pooled,
+            &mut ws.logits,
+        );
+        let loss = kernels::softmax_xent(&ws.logits, y, c, BATCH, &mut ws.dlog);
         let mut g_clf = vec![0.0f32; clf_s.len()];
-        let mut d_tok = Vec::new();
-        head_bwd(clf_s, c, &pooled, &dlog, BATCH, &mut g_clf, &mut d_tok);
+        kernels::head_bwd(
+            clf_s,
+            c,
+            &ws.pooled,
+            &ws.dlog,
+            BATCH,
+            TOKENS,
+            DIM,
+            &mut g_clf,
+            &mut ws.dp,
+            &mut ws.d_cur,
+        );
         let mut g_srv = vec![0.0f32; srv.len()];
-        let g_z = blocks_bwd(srv, 0, nblocks, &fwd, d_tok, BATCH * TOKENS, &mut g_srv);
+        blocks_backward(
+            srv,
+            0,
+            nblocks,
+            rows,
+            &ws.acts,
+            &ws.hids,
+            &mut ws.d_cur,
+            &mut ws.d_tmp,
+            &mut ws.du,
+            &mut g_srv,
+        );
+        let g_z = ws.d_cur[..].to_vec();
+        self.checkin(ws);
+        self.note_kernel_time(t_k);
         Ok(vec![vec![loss], g_srv, g_clf, g_z])
     }
 
@@ -636,6 +600,9 @@ impl NativeBackend {
         let l_c = want_scalar(name, "l_client", &args[3])?;
         let l_s = want_scalar(name, "l_server", &args[4])?;
         let lr = want_scalar(name, "lr", &args[5])?;
+        let t_k = Instant::now();
+        // The returned tensor is this op's only allocation — the fused
+        // update itself runs in place, so there is no scratch to pool.
         let mut out = theta.to_vec();
         // Eq. 3 Full mode, identical math to the Rust fuse path — the two
         // executors are interchangeable by construction.
@@ -650,6 +617,7 @@ impl NativeBackend {
             lr as f64,
             TpgfMode::Full,
         );
+        self.note_kernel_time(t_k);
         Ok(vec![out])
     }
 
@@ -658,9 +626,23 @@ impl NativeBackend {
         let enc = want_f32(name, "enc_full", &args[0], self.model.enc_full_size)?;
         let clf_s = want_f32(name, "clf_s", &args[1], Self::clf_size(c))?;
         let x = want_f32(name, "x", &args[2], EVAL_BATCH * IMG_ELEMS)?;
-        let fwd = client_forward(enc, x, EVAL_BATCH, DEPTH);
-        let (mut pooled, mut logits) = (Vec::new(), Vec::new());
-        head_fwd(clf_s, c, &fwd.acts[DEPTH], EVAL_BATCH, &mut pooled, &mut logits);
+        let t_k = Instant::now();
+        let rows = EVAL_BATCH * TOKENS;
+        let mut ws = self.checkout(EVAL_BATCH, DEPTH, c, true, false, true);
+        forward_from_images(enc, x, EVAL_BATCH, DEPTH, &mut ws);
+        kernels::head_fwd(
+            clf_s,
+            c,
+            &ws.acts[DEPTH * rows * DIM..][..rows * DIM],
+            EVAL_BATCH,
+            TOKENS,
+            DIM,
+            &mut ws.pooled,
+            &mut ws.logits,
+        );
+        let logits = ws.logits[..].to_vec();
+        self.checkin(ws);
+        self.note_kernel_time(t_k);
         Ok(vec![logits])
     }
 }
@@ -768,7 +750,7 @@ impl Backend for NativeBackend {
 
     fn exec(&self, name: &str, args: &[Arg<'_>]) -> Result<Vec<Vec<f32>>> {
         let op = parse_name(name).ok_or_else(|| Error::Manifest(format!("no artifact '{name}'")))?;
-        let t0 = std::time::Instant::now();
+        let t0 = Instant::now();
         let out = match op {
             Op::ClientLocal { d, c } => {
                 check_depth(name, d)?;
@@ -798,9 +780,15 @@ impl Backend for NativeBackend {
             }
         }?;
         let dt = t0.elapsed().as_secs_f64();
+        let (hwm, allocs) = {
+            let a = self.arena.lock().expect("arena lock");
+            (a.hwm_bytes(), a.alloc_events())
+        };
         let mut st = self.stats.lock().expect("stats lock");
         st.executions += 1;
         st.exec_time_s += dt;
+        st.arena_hwm_bytes = hwm;
+        st.arena_allocs = allocs;
         Ok(out)
     }
 }
@@ -811,6 +799,7 @@ fn bad_tag(tag: &str) -> Error {
 
 #[cfg(test)]
 mod tests {
+    use super::kernels::reference;
     use super::*;
 
     fn be() -> NativeBackend {
@@ -923,6 +912,27 @@ mod tests {
     }
 
     #[test]
+    fn exec_rejects_out_of_range_labels_at_the_argument_boundary() {
+        let b = be();
+        let m = b.model().clone();
+        let enc = b.load_init("init_enc_c10").unwrap();
+        let clf = b.load_init("init_clf_client_c10").unwrap();
+        let (x, _) = sample_batch(BATCH, 10, 1);
+        for bad in [vec![10i32; BATCH], vec![-1i32; BATCH]] {
+            let err = b.exec(
+                "client_local_d3_c10",
+                &[
+                    Arg::F32(&enc[..m.enc_size(3)]),
+                    Arg::F32(&clf),
+                    Arg::F32(&x),
+                    Arg::I32(&bad),
+                ],
+            );
+            assert!(matches!(err, Err(Error::Shape(_))), "{err:?}");
+        }
+    }
+
+    #[test]
     fn ops_are_bitwise_deterministic() {
         let b = be();
         let m = b.model().clone();
@@ -945,6 +955,237 @@ mod tests {
         for (va, vc) in a.iter().flatten().zip(c.iter().flatten()) {
             assert_eq!(va.to_bits(), vc.to_bits());
         }
+    }
+
+    /// The tentpole's bit-identity contract, end to end: every exec op
+    /// must reproduce — bit for bit — the composition of the pre-kernel
+    /// naive reference implementations it replaced (im2col+GEMM vs
+    /// per-(s,t) gathers, whole-batch tiled blocks vs row-at-a-time
+    /// loops, pooled scratch vs fresh `Vec`s).
+    #[test]
+    fn tiled_ops_match_naive_reference_composition_bitwise() {
+        let b = be();
+        let m = b.model().clone();
+        let enc = b.load_init("init_enc_c10").unwrap();
+        let clf = b.load_init("init_clf_client_c10").unwrap();
+        let clf_s = b.load_init("init_clf_s_c10").unwrap();
+        let (x, y) = sample_batch(BATCH, 10, 9);
+        let c = 10usize;
+        let rows = BATCH * TOKENS;
+
+        // Reference forward: per-(s,t) embed + row-at-a-time blocks.
+        fn ref_forward(
+            params: &[f32],
+            from_images: bool,
+            t0: Vec<f32>,
+            nblocks: usize,
+            offset: usize,
+            n: usize,
+        ) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
+            let rows = n * TOKENS;
+            let mut acts: Vec<Vec<f32>> = Vec::with_capacity(nblocks + 1);
+            let mut hids: Vec<Vec<f32>> = Vec::new();
+            if from_images {
+                let (w_e, b_e) = params[..EMBED_SIZE].split_at(PATCH_ELEMS * DIM);
+                let mut a0 = vec![0.0f32; rows * DIM];
+                reference::embed_fwd(w_e, b_e, &t0, n, IMAGE, PATCH, CHANNELS, DIM, &mut a0);
+                acts.push(a0);
+            } else {
+                acts.push(t0);
+            }
+            for l in 0..nblocks {
+                let w = &params[offset + l * BLOCK_SIZE..][..BLOCK_SIZE];
+                let mut t_out = vec![0.0f32; rows * DIM];
+                let mut u = vec![0.0f32; rows * HIDDEN];
+                reference::block_fwd(w, &acts[l], rows, DIM, HIDDEN, &mut t_out, &mut u);
+                acts.push(t_out);
+                hids.push(u);
+            }
+            (acts, hids)
+        }
+        // Reference backward through blocks (+ optional embed).
+        #[allow(clippy::too_many_arguments)]
+        fn ref_backward(
+            params: &[f32],
+            offset: usize,
+            nblocks: usize,
+            acts: &[Vec<f32>],
+            hids: &[Vec<f32>],
+            d_top: Vec<f32>,
+            g: &mut [f32],
+            n: usize,
+        ) -> Vec<f32> {
+            let rows = n * TOKENS;
+            let mut d = d_top;
+            let mut d_next = vec![0.0f32; rows * DIM];
+            for l in (0..nblocks).rev() {
+                let w = &params[offset + l * BLOCK_SIZE..][..BLOCK_SIZE];
+                reference::block_bwd(
+                    w,
+                    &acts[l],
+                    &hids[l],
+                    &d,
+                    rows,
+                    DIM,
+                    HIDDEN,
+                    &mut g[offset + l * BLOCK_SIZE..][..BLOCK_SIZE],
+                    &mut d_next,
+                );
+                std::mem::swap(&mut d, &mut d_next);
+            }
+            d
+        }
+
+        for d in [1usize, 4, 7] {
+            let enc_d = &enc[..m.enc_size(d)];
+            // --- client_local ---
+            let got = b
+                .exec(
+                    &format!("client_local_d{d}_c10"),
+                    &[Arg::F32(enc_d), Arg::F32(&clf), Arg::F32(&x), Arg::I32(&y)],
+                )
+                .unwrap();
+            let (acts, hids) = ref_forward(enc_d, true, x.clone(), d, EMBED_SIZE, BATCH);
+            let mut pooled = vec![0.0f32; BATCH * DIM];
+            let mut logits = vec![0.0f32; BATCH * c];
+            reference::head_fwd(&clf, c, &acts[d], BATCH, TOKENS, DIM, &mut pooled, &mut logits);
+            let (loss, dlog) = reference::softmax_xent(&logits, &y, c, BATCH);
+            let mut g_clf = vec![0.0f32; clf.len()];
+            let mut d_tok = vec![0.0f32; rows * DIM];
+            reference::head_bwd(&clf, c, &pooled, &dlog, BATCH, TOKENS, DIM, &mut g_clf, &mut d_tok);
+            let mut g_enc = vec![0.0f32; enc_d.len()];
+            let d0 = ref_backward(enc_d, EMBED_SIZE, d, &acts, &hids, d_tok, &mut g_enc, BATCH);
+            {
+                let (gw, gb) = g_enc[..EMBED_SIZE].split_at_mut(PATCH_ELEMS * DIM);
+                reference::embed_bwd(&x, &d0, BATCH, IMAGE, PATCH, CHANNELS, DIM, gw, gb);
+            }
+            math::clip_l2(&mut g_enc, TAU);
+            let expect = [acts[d].clone(), vec![loss], g_enc, g_clf];
+            for (i, (gv, ev)) in got.iter().flatten().zip(expect.iter().flatten()).enumerate() {
+                assert_eq!(gv.to_bits(), ev.to_bits(), "client_local_d{d} elem {i}");
+            }
+
+            // --- server_step on the reference smashed data ---
+            let srv = &enc[m.enc_size(d)..];
+            let nblocks = DEPTH - d;
+            let z = got[0].clone();
+            let got_s = b
+                .exec(
+                    &format!("server_step_d{d}_c10"),
+                    &[Arg::F32(srv), Arg::F32(&clf_s), Arg::F32(&z), Arg::I32(&y)],
+                )
+                .unwrap();
+            let (acts_s, hids_s) = ref_forward(srv, false, z, nblocks, 0, BATCH);
+            let mut pooled_s = vec![0.0f32; BATCH * DIM];
+            let mut logits_s = vec![0.0f32; BATCH * c];
+            reference::head_fwd(&clf_s, c, &acts_s[nblocks], BATCH, TOKENS, DIM, &mut pooled_s, &mut logits_s);
+            let (loss_s, dlog_s) = reference::softmax_xent(&logits_s, &y, c, BATCH);
+            let mut g_clf_s = vec![0.0f32; clf_s.len()];
+            let mut d_tok_s = vec![0.0f32; rows * DIM];
+            reference::head_bwd(&clf_s, c, &pooled_s, &dlog_s, BATCH, TOKENS, DIM, &mut g_clf_s, &mut d_tok_s);
+            let mut g_srv = vec![0.0f32; srv.len()];
+            let g_z = ref_backward(srv, 0, nblocks, &acts_s, &hids_s, d_tok_s, &mut g_srv, BATCH);
+            let expect_s = [vec![loss_s], g_srv, g_clf_s, g_z];
+            for (i, (gv, ev)) in got_s.iter().flatten().zip(expect_s.iter().flatten()).enumerate() {
+                assert_eq!(gv.to_bits(), ev.to_bits(), "server_step_d{d} elem {i}");
+            }
+        }
+
+        // --- eval on the full backbone ---
+        let (xe, _) = sample_batch(EVAL_BATCH, 10, 11);
+        let got_e = b
+            .exec("eval_c10", &[Arg::F32(&enc), Arg::F32(&clf_s), Arg::F32(&xe)])
+            .unwrap();
+        let (acts_e, _) = ref_forward(&enc, true, xe, DEPTH, EMBED_SIZE, EVAL_BATCH);
+        let mut pooled_e = vec![0.0f32; EVAL_BATCH * DIM];
+        let mut logits_e = vec![0.0f32; EVAL_BATCH * c];
+        reference::head_fwd(&clf_s, c, &acts_e[DEPTH], EVAL_BATCH, TOKENS, DIM, &mut pooled_e, &mut logits_e);
+        for (i, (gv, ev)) in got_e[0].iter().zip(logits_e.iter()).enumerate() {
+            assert_eq!(gv.to_bits(), ev.to_bits(), "eval elem {i}");
+        }
+    }
+
+    /// The arena's zero-steady-state-allocation contract, through the
+    /// real exec surface: after one warm-up pass of every op shape
+    /// (including the eval shape, whose row count differs from the
+    /// training batch), further exec calls must not allocate or grow a
+    /// single scratch buffer, and the high-water mark must hold still.
+    #[test]
+    fn steady_state_execs_stop_allocating_and_hwm_stabilizes() {
+        let b = be();
+        let m = b.model().clone();
+        let enc = b.load_init("init_enc_c10").unwrap();
+        let clf = b.load_init("init_clf_client_c10").unwrap();
+        let clf_s = b.load_init("init_clf_s_c10").unwrap();
+        let (x, y) = sample_batch(BATCH, 10, 5);
+        let (xe, _) = sample_batch(EVAL_BATCH, 10, 6);
+        let g_z = vec![0.01f32; m.smashed_elems()];
+
+        let pass = |d: usize| {
+            let enc_d = &enc[..m.enc_size(d)];
+            let out = b
+                .exec(
+                    &format!("client_local_d{d}_c10"),
+                    &[Arg::F32(enc_d), Arg::F32(&clf), Arg::F32(&x), Arg::I32(&y)],
+                )
+                .unwrap();
+            b.exec(
+                &format!("server_step_d{d}_c10"),
+                &[
+                    Arg::F32(&enc[m.enc_size(d)..]),
+                    Arg::F32(&clf_s),
+                    Arg::F32(&out[0]),
+                    Arg::I32(&y),
+                ],
+            )
+            .unwrap();
+            b.exec(&format!("client_fwd_d{d}"), &[Arg::F32(enc_d), Arg::F32(&x)])
+                .unwrap();
+            b.exec(
+                &format!("client_bwd_d{d}"),
+                &[Arg::F32(enc_d), Arg::F32(&x), Arg::F32(&g_z)],
+            )
+            .unwrap();
+            b.exec(
+                &format!("tpgf_update_d{d}"),
+                &[
+                    Arg::F32(enc_d),
+                    Arg::F32(&out[2]),
+                    Arg::F32(&out[2]),
+                    Arg::Scalar(1.0),
+                    Arg::Scalar(1.0),
+                    Arg::Scalar(0.05),
+                ],
+            )
+            .unwrap();
+            b.exec(
+                "eval_c10",
+                &[Arg::F32(&enc), Arg::F32(&clf_s), Arg::F32(&xe)],
+            )
+            .unwrap();
+        };
+
+        // Warm-up round: every op at two depths + the eval shape.
+        pass(3);
+        pass(6);
+        let warm = b.stats();
+        assert!(warm.arena_hwm_bytes > 0, "arena must be in use");
+        assert!(warm.arena_allocs > 0);
+
+        // Steady state: shapes repeat (different n per op is exercised by
+        // the BATCH-vs-EVAL_BATCH mix) — zero new allocations, flat HWM.
+        for _ in 0..3 {
+            pass(3);
+            pass(6);
+        }
+        let steady = b.stats();
+        assert_eq!(
+            steady.arena_allocs, warm.arena_allocs,
+            "steady-state exec calls must not allocate scratch"
+        );
+        assert_eq!(steady.arena_hwm_bytes, warm.arena_hwm_bytes);
+        assert!(steady.kernel_time_s > 0.0);
+        assert!(steady.exec_time_s >= steady.kernel_time_s);
     }
 
     #[test]

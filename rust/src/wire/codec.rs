@@ -36,21 +36,43 @@ pub trait PayloadCodec: Send + Sync {
     fn encoded_len(&self, elems: usize) -> usize;
     /// Append the encoded payload to `out`.
     fn encode_into(&self, data: &[f32], out: &mut Vec<u8>);
-    /// Decode a payload back to `elems` f32s. Validates the payload
-    /// shape; returns [`Error::Wire`] (never panics) on malformed input.
-    fn decode(&self, payload: &[u8], elems: usize) -> Result<Vec<f32>>;
+    /// Decode a payload back to `elems` f32s into a reusable buffer
+    /// (cleared first; contents are unspecified on error). Validates the
+    /// payload shape; returns [`Error::Wire`] (never panics) on
+    /// malformed input.
+    fn decode_into(&self, payload: &[u8], elems: usize, out: &mut Vec<f32>) -> Result<()>;
+    /// Allocating convenience form of [`PayloadCodec::decode_into`].
+    fn decode(&self, payload: &[u8], elems: usize) -> Result<Vec<f32>> {
+        let mut out = Vec::with_capacity(elems);
+        self.decode_into(payload, elems, &mut out)?;
+        Ok(out)
+    }
 }
 
 /// Dispatch a decode on the frame's self-describing codec id (the
-/// receiver does not need to know the sender's policy or TopK ratio).
-pub fn decode_by_id(codec_id: u8, payload: &[u8], elems: usize) -> Result<Vec<f32>> {
+/// receiver does not need to know the sender's policy or TopK ratio),
+/// into a reusable buffer.
+pub fn decode_by_id_into(
+    codec_id: u8,
+    payload: &[u8],
+    elems: usize,
+    out: &mut Vec<f32>,
+) -> Result<()> {
     match codec_id {
-        CODEC_FP32 => Fp32Raw.decode(payload, elems),
-        CODEC_FP16 => Fp16.decode(payload, elems),
-        CODEC_INT8 => Int8Affine.decode(payload, elems),
-        CODEC_TOPK => TopK { percent: 1 }.decode(payload, elems), // ratio is encode-side only
+        CODEC_FP32 => Fp32Raw.decode_into(payload, elems, out),
+        CODEC_FP16 => Fp16.decode_into(payload, elems, out),
+        CODEC_INT8 => Int8Affine.decode_into(payload, elems, out),
+        // The TopK ratio is encode-side only.
+        CODEC_TOPK => TopK { percent: 1 }.decode_into(payload, elems, out),
         other => Err(Error::Wire(format!("unknown payload codec id {other}"))),
     }
+}
+
+/// Allocating convenience form of [`decode_by_id_into`].
+pub fn decode_by_id(codec_id: u8, payload: &[u8], elems: usize) -> Result<Vec<f32>> {
+    let mut out = Vec::with_capacity(elems);
+    decode_by_id_into(codec_id, payload, elems, &mut out)?;
+    Ok(out)
 }
 
 // ---------------------------------------------------------------- fp32
@@ -81,7 +103,7 @@ impl PayloadCodec for Fp32Raw {
         }
     }
 
-    fn decode(&self, payload: &[u8], elems: usize) -> Result<Vec<f32>> {
+    fn decode_into(&self, payload: &[u8], elems: usize, out: &mut Vec<f32>) -> Result<()> {
         if payload.len() != 4 * elems {
             return Err(Error::Wire(format!(
                 "fp32 payload is {} bytes, expected {} for {elems} elems",
@@ -89,11 +111,12 @@ impl PayloadCodec for Fp32Raw {
                 4 * elems
             )));
         }
-        let mut out = Vec::with_capacity(elems);
+        out.clear();
+        out.reserve(elems);
         for c in payload.chunks_exact(4) {
             out.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
         }
-        Ok(out)
+        Ok(())
     }
 }
 
@@ -186,7 +209,7 @@ impl PayloadCodec for Fp16 {
         }
     }
 
-    fn decode(&self, payload: &[u8], elems: usize) -> Result<Vec<f32>> {
+    fn decode_into(&self, payload: &[u8], elems: usize, out: &mut Vec<f32>) -> Result<()> {
         if payload.len() != 2 * elems {
             return Err(Error::Wire(format!(
                 "fp16 payload is {} bytes, expected {} for {elems} elems",
@@ -194,11 +217,12 @@ impl PayloadCodec for Fp16 {
                 2 * elems
             )));
         }
-        let mut out = Vec::with_capacity(elems);
+        out.clear();
+        out.reserve(elems);
         for c in payload.chunks_exact(2) {
             out.push(f16_bits_to_f32(u16::from_le_bytes([c[0], c[1]])));
         }
-        Ok(out)
+        Ok(())
     }
 }
 
@@ -265,7 +289,7 @@ impl PayloadCodec for Int8Affine {
         }
     }
 
-    fn decode(&self, payload: &[u8], elems: usize) -> Result<Vec<f32>> {
+    fn decode_into(&self, payload: &[u8], elems: usize, out: &mut Vec<f32>) -> Result<()> {
         if payload.len() != 8 + elems {
             return Err(Error::Wire(format!(
                 "int8 payload is {} bytes, expected {} for {elems} elems",
@@ -280,10 +304,10 @@ impl PayloadCodec for Int8Affine {
                 "int8 header is not a valid affine map: scale {scale}, min {mn}"
             )));
         }
-        Ok(payload[8..]
-            .iter()
-            .map(|&q| mn + q as f32 * scale)
-            .collect())
+        out.clear();
+        out.reserve(elems);
+        out.extend(payload[8..].iter().map(|&q| mn + q as f32 * scale));
+        Ok(())
     }
 }
 
@@ -356,7 +380,7 @@ impl PayloadCodec for TopK {
         }
     }
 
-    fn decode(&self, payload: &[u8], elems: usize) -> Result<Vec<f32>> {
+    fn decode_into(&self, payload: &[u8], elems: usize, out: &mut Vec<f32>) -> Result<()> {
         if payload.len() < 4 {
             return Err(Error::Wire("topk payload shorter than its count".into()));
         }
@@ -375,7 +399,8 @@ impl PayloadCodec for TopK {
         }
         let idx_bytes = &payload[4..4 + 4 * count];
         let val_bytes = &payload[4 + 4 * count..];
-        let mut out = vec![0.0f32; elems];
+        out.clear();
+        out.resize(elems, 0.0);
         let mut prev: Option<u32> = None;
         for (ib, vb) in idx_bytes.chunks_exact(4).zip(val_bytes.chunks_exact(4)) {
             let i = u32::from_le_bytes([ib[0], ib[1], ib[2], ib[3]]);
@@ -394,7 +419,7 @@ impl PayloadCodec for TopK {
             prev = Some(i);
             out[i as usize] = f32::from_le_bytes([vb[0], vb[1], vb[2], vb[3]]);
         }
-        Ok(out)
+        Ok(())
     }
 }
 
@@ -418,6 +443,31 @@ mod tests {
             codec.label()
         );
         codec.decode(&payload, data.len()).unwrap()
+    }
+
+    /// The scratch-buffer decode path must be bit-identical to the
+    /// allocating one, including when the reused buffer previously held
+    /// a *larger* tensor (stale-tail truncation) under every codec id.
+    #[test]
+    fn prop_decode_into_reuse_matches_decode_bitwise() {
+        forall(0xD2C0, 30, |rng| {
+            let codecs: [&dyn PayloadCodec; 4] =
+                [&Fp32Raw, &Fp16, &Int8Affine, &TopK { percent: 25 }];
+            let codec = codecs[rng.uniform_usize(4)];
+            let big = random_tensor(rng, 64 + rng.uniform_usize(200), 10.0);
+            let small = random_tensor(rng, 1 + rng.uniform_usize(60), 10.0);
+            let mut out = Vec::new();
+            for data in [&big, &small] {
+                let mut payload = Vec::new();
+                codec.encode_into(data, &mut payload);
+                decode_by_id_into(codec.id(), &payload, data.len(), &mut out).unwrap();
+                let fresh = codec.decode(&payload, data.len()).unwrap();
+                assert_eq!(out.len(), fresh.len(), "{}", codec.label());
+                for (a, b) in out.iter().zip(fresh.iter()) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{}", codec.label());
+                }
+            }
+        });
     }
 
     // ---- fp32 ----

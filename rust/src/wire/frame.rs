@@ -124,9 +124,26 @@ pub struct FrameHeader {
 
 /// Serialize a frame around an already-encoded payload.
 pub fn write_frame(msg: MsgType, codec_id: u8, elems: usize, aux: f64, payload: &[u8]) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(OVERHEAD + payload.len());
+    write_frame_into(msg, codec_id, elems, aux, payload, &mut buf);
+    buf
+}
+
+/// Serialize a frame into a reusable buffer (cleared first). Produces
+/// byte-identical frames to [`write_frame`] — the scratch-buffer form
+/// the per-lane hot path uses to avoid a fresh allocation per frame.
+pub fn write_frame_into(
+    msg: MsgType,
+    codec_id: u8,
+    elems: usize,
+    aux: f64,
+    payload: &[u8],
+    buf: &mut Vec<u8>,
+) {
     debug_assert!(elems <= u32::MAX as usize, "tensor too large for the frame format");
     debug_assert!(payload.len() <= u32::MAX as usize);
-    let mut buf = Vec::with_capacity(OVERHEAD + payload.len());
+    buf.clear();
+    buf.reserve(OVERHEAD + payload.len());
     buf.extend_from_slice(&MAGIC);
     buf.push(VERSION);
     buf.push(msg as u8);
@@ -136,9 +153,8 @@ pub fn write_frame(msg: MsgType, codec_id: u8, elems: usize, aux: f64, payload: 
     buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
     buf.extend_from_slice(&aux.to_le_bytes());
     buf.extend_from_slice(payload);
-    let crc = crc32(&buf);
+    let crc = crc32(buf);
     buf.extend_from_slice(&crc.to_le_bytes());
-    buf
 }
 
 fn read_u32(buf: &[u8], at: usize) -> u32 {
@@ -282,6 +298,23 @@ mod tests {
         assert!(!MsgType::ActGrad.is_params());
         assert!(MsgType::PrefixUpload.is_params());
         assert!(MsgType::Broadcast.is_params());
+    }
+
+    #[test]
+    fn write_frame_into_reuses_buffers_without_stale_bytes() {
+        let mut buf = Vec::new();
+        // First use: a large frame fills the buffer...
+        write_frame_into(MsgType::Smashed, 0, 64, 1.0, &[0xAB; 256], &mut buf);
+        assert_eq!(buf, write_frame(MsgType::Smashed, 0, 64, 1.0, &[0xAB; 256]));
+        let cap = buf.capacity();
+        // ...then a smaller frame must truncate cleanly (no stale tail)
+        // and reuse the allocation.
+        write_frame_into(MsgType::ActGrad, 2, 3, -0.5, &[1, 2, 3], &mut buf);
+        assert_eq!(buf, write_frame(MsgType::ActGrad, 2, 3, -0.5, &[1, 2, 3]));
+        assert_eq!(buf.capacity(), cap, "reuse must not reallocate");
+        let (h, p) = read_frame(&buf).unwrap();
+        assert_eq!(h.msg, MsgType::ActGrad);
+        assert_eq!(p, &[1, 2, 3]);
     }
 
     #[test]

@@ -30,8 +30,8 @@
 pub mod codec;
 pub mod frame;
 
-pub use codec::{decode_by_id, Fp16, Fp32Raw, Int8Affine, PayloadCodec, TopK};
-pub use frame::{crc32, read_frame, write_frame, FrameHeader, MsgType, OVERHEAD};
+pub use codec::{decode_by_id, decode_by_id_into, Fp16, Fp32Raw, Int8Affine, PayloadCodec, TopK};
+pub use frame::{crc32, read_frame, write_frame, write_frame_into, FrameHeader, MsgType, OVERHEAD};
 
 use crate::{Error, Result};
 
@@ -159,12 +159,35 @@ impl Wire {
     /// header as raw f64 bits (used for the Eq. 6 aggregation loss on
     /// [`MsgType::PrefixUpload`]) and is exact under every codec.
     pub fn encode(&self, msg: MsgType, data: &[f32], aux: f64) -> Vec<u8> {
+        let mut scratch = WireScratch::default();
+        self.encode_to(msg, data, aux, &mut scratch);
+        scratch.frame
+    }
+
+    /// Encode one tensor into `scratch.frame` (reusing the scratch's
+    /// payload staging buffer) and return the frame bytes. Byte-identical
+    /// to [`Wire::encode`] — the per-lane round loops use this form so
+    /// the steady-state encode path allocates nothing.
+    pub fn encode_to<'a>(
+        &self,
+        msg: MsgType,
+        data: &[f32],
+        aux: f64,
+        scratch: &'a mut WireScratch,
+    ) -> &'a [u8] {
         let codec = self.codec_for(msg);
-        let mut payload = Vec::new();
-        codec.encode_into(data, &mut payload);
-        let buf = frame::write_frame(msg, codec.id(), data.len(), aux, &payload);
-        debug_assert_eq!(buf.len() as u64, self.frame_len(msg, data.len()));
-        buf
+        scratch.payload.clear();
+        codec.encode_into(data, &mut scratch.payload);
+        frame::write_frame_into(
+            msg,
+            codec.id(),
+            data.len(),
+            aux,
+            &scratch.payload,
+            &mut scratch.frame,
+        );
+        debug_assert_eq!(scratch.frame.len() as u64, self.frame_len(msg, data.len()));
+        &scratch.frame
     }
 
     /// Validate + decode a frame. Codec dispatch is self-describing (the
@@ -180,6 +203,33 @@ impl Wire {
             data,
         })
     }
+
+    /// Validate + decode a frame into a reusable tensor buffer (cleared
+    /// first), returning the frame header. Bit-identical to
+    /// [`Wire::decode`]; the per-lane round loops decode into
+    /// [`WireScratch::decoded`] so the receive path allocates nothing
+    /// either.
+    pub fn decode_into(&self, buf: &[u8], out: &mut Vec<f32>) -> Result<FrameHeader> {
+        let (h, payload) = frame::read_frame(buf)?;
+        codec::decode_by_id_into(h.codec_id, payload, h.elems, out)?;
+        Ok(h)
+    }
+}
+
+/// Reusable per-lane encode/decode buffers. Each [`crate::network::NetLane`]
+/// carries one, so the per-step frame traffic of a round (smashed
+/// activations up, activation gradients down) reuses three allocations
+/// for the whole round instead of building a fresh `Vec` per frame. The
+/// bytes on the wire are identical either way (pinned by the frame
+/// round-trip tests and the e2e frame-arithmetic test).
+#[derive(Clone, Debug, Default)]
+pub struct WireScratch {
+    /// The most recently encoded frame (header + payload + CRC).
+    pub frame: Vec<u8>,
+    /// Codec payload staging area.
+    payload: Vec<u8>,
+    /// The most recently decoded tensor ([`Wire::decode_into`] target).
+    pub decoded: Vec<f32>,
 }
 
 /// A fully decoded frame: the receiver-side view of one exchange.
@@ -299,6 +349,44 @@ mod tests {
             let d2 = w2.decode(&b).unwrap().data;
             for (x, y) in d1.iter().zip(d2.iter()) {
                 assert_eq!(x.to_bits(), y.to_bits());
+            }
+        });
+    }
+
+    /// The per-lane scratch path (encode_to / decode_into) must produce
+    /// byte- and bit-identical results to the allocating path, including
+    /// when the reused buffers previously held larger frames/tensors —
+    /// this is what lets the round loops reuse one scratch per lane
+    /// without changing a single wire byte.
+    #[test]
+    fn prop_scratch_encode_decode_matches_allocating_path() {
+        forall(0x5C8A, 30, |rng| {
+            let kind = match rng.uniform_usize(4) {
+                0 => WireCodecKind::Fp32,
+                1 => WireCodecKind::Fp16,
+                2 => WireCodecKind::Int8,
+                _ => WireCodecKind::TopK(1 + rng.uniform_usize(50) as u8),
+            };
+            let w = Wire::new(kind);
+            let mut scratch = WireScratch::default();
+            let big: Vec<f32> = (0..128 + rng.uniform_usize(300)).map(|_| rng.normal() as f32).collect();
+            let small: Vec<f32> = (0..1 + rng.uniform_usize(100)).map(|_| rng.normal() as f32).collect();
+            for msg in [MsgType::Smashed, MsgType::PrefixUpload] {
+                // Big first, then small: the second frame must truncate
+                // the reused buffers cleanly.
+                for data in [&big, &small] {
+                    let fresh = w.encode(msg, data, 2.5);
+                    let reused = w.encode_to(msg, data, 2.5, &mut scratch).to_vec();
+                    assert_eq!(fresh, reused, "{} frame bytes drifted", w.label());
+                    let dec = w.decode(&fresh).unwrap();
+                    let h = w.decode_into(&scratch.frame, &mut scratch.decoded).unwrap();
+                    assert_eq!(h.msg, dec.msg);
+                    assert_eq!(h.aux.to_bits(), dec.aux.to_bits());
+                    assert_eq!(scratch.decoded.len(), dec.data.len());
+                    for (a, b) in scratch.decoded.iter().zip(dec.data.iter()) {
+                        assert_eq!(a.to_bits(), b.to_bits());
+                    }
+                }
             }
         });
     }
