@@ -1,16 +1,20 @@
 //! Perf microbench for the native backend's kernel core (the offline
 //! compute path every e2e test, paper-figure bench and example runs on).
 //!
-//! Three sections:
+//! Four sections:
 //! 1. **Per-kernel GFLOP/s + naive-vs-tiled before/after** — the tiled
 //!    kernels (`gemm_bias`, `block_fwd`/`block_bwd`) against the
 //!    pre-kernel-core naive reference implementations they replaced,
-//!    bit-identity asserted before timing. The ISSUE acceptance number
-//!    is the block fwd+bwd pair at n = 64 (1024 token rows).
-//! 2. **End-to-end exec-call latency** — client_local / server_step /
+//!    bit-identity asserted before timing.
+//! 2. **Intra-client parallel kernels, 1-vs-N** — the deterministic
+//!    shard reduction at kernel-threads 2/4 against 1, per kernel and
+//!    for one end-to-end client step, bit-identity asserted across
+//!    thread counts before timing. The acceptance number is the n = 64
+//!    block fwd+bwd pair at kernel-threads 4 (target ≥ 1.5×).
+//! 3. **End-to-end exec-call latency** — client_local / server_step /
 //!    client_bwd / eval through the real backend, plus the kernel-time
 //!    fraction and scratch-arena stats from RuntimeStats.
-//! 3. **Round throughput at 10/50/100 clients** — marginal host
+//! 4. **Round throughput at 10/50/100 clients** — marginal host
 //!    ms/round of whole simulated SSFL rounds (prepare cost excluded).
 //!
 //! Results are also written to `BENCH_native.json` at the repository
@@ -24,7 +28,8 @@ use supersfl::bench_util::scenarios::smoke;
 use supersfl::bench_util::{black_box, measure, report, Sample};
 use supersfl::config::ExperimentConfig;
 use supersfl::orchestrator::run_experiment;
-use supersfl::runtime::native::kernels::{self, reference};
+use supersfl::runtime::native::kernels::{self, reference, ShardPlan};
+use supersfl::runtime::native::pool::ShardPool;
 use supersfl::runtime::Runtime;
 use supersfl::util::json::JsonValue;
 use supersfl::util::rng::Pcg32;
@@ -206,6 +211,260 @@ fn exec_section(rt: &Runtime, out: &mut JsonValue, warmup: usize, iters: usize) 
     Ok(())
 }
 
+/// Time one kernel under the 1-thread and 4-thread pools (the caller
+/// has already run a warm pass per pool and asserted bit-identity) and
+/// report + record the speedup under `key`.
+fn one_vs_four(
+    out: &mut JsonValue,
+    key: &str,
+    label: &str,
+    warmup: usize,
+    iters: usize,
+    t1: impl FnMut(),
+    t4: impl FnMut(),
+) {
+    let s1 = measure(warmup, iters, t1);
+    let s4 = measure(warmup, iters, t4);
+    println!(
+        "{label}: t1 {:.3} ms -> t4 {:.3} ms = {:.2}x",
+        s1.mean_s * 1e3,
+        s4.mean_s * 1e3,
+        s1.mean_s / s4.mean_s
+    );
+    out.set(key, n(s1.mean_s / s4.mean_s));
+}
+
+/// Section: intra-client parallel kernels — the 1-vs-N speedups of the
+/// deterministic shard reduction, per kernel and end to end. Bit-identity
+/// between every thread count is asserted before anything is timed; the
+/// ISSUE acceptance number is the n = 64 block fwd+bwd pair at
+/// `--kernel-threads 4` (target ≥ 1.5×).
+fn parallel_section(out: &mut JsonValue, warmup: usize, iters: usize) -> supersfl::Result<()> {
+    println!("\n== intra-client parallel kernels: 1-vs-N (deterministic shard reduction) ==");
+    let mut rng = Pcg32::seeded(99);
+    let rows = 64 * TOKENS;
+    let plan = ShardPlan::of(rows);
+    let wb = randv(&mut rng, BLOCK_W);
+    let t_in = randv(&mut rng, rows * DIM);
+    let d_out = randv(&mut rng, rows * DIM);
+    let pool1 = ShardPool::new(1);
+
+    // Baseline buffers (threads = 1).
+    let mut t1 = vec![0.0f32; rows * DIM];
+    let mut u1 = vec![0.0f32; rows * HIDDEN];
+    let mut g1 = vec![0.0f32; BLOCK_W];
+    let mut d1 = vec![0.0f32; rows * DIM];
+    let mut du1 = vec![0.0f32; rows * HIDDEN];
+    let mut gpart = vec![0.0f32; plan.nshards() * BLOCK_W];
+
+    let pair = |pool: &ShardPool,
+                t: &mut Vec<f32>,
+                u: &mut Vec<f32>,
+                g: &mut Vec<f32>,
+                d: &mut Vec<f32>,
+                du: &mut Vec<f32>,
+                gpart: &mut Vec<f32>| {
+        kernels::block_fwd_sharded(pool, plan, &wb, &t_in, rows, DIM, HIDDEN, t, u);
+        g.fill(0.0);
+        kernels::block_bwd_sharded(
+            pool, plan, &wb, &t_in, u, &d_out, rows, DIM, HIDDEN, g, d, du, gpart,
+        );
+    };
+    pair(&pool1, &mut t1, &mut u1, &mut g1, &mut d1, &mut du1, &mut gpart);
+
+    let s_1 = measure(warmup, iters, || {
+        pair(&pool1, &mut t1, &mut u1, &mut g1, &mut d1, &mut du1, &mut gpart);
+        black_box(d1[0]);
+    });
+    report("block pair n=64 sharded, kernel-threads 1", &s_1);
+
+    let mut cells = Vec::new();
+    let mut cell1 = JsonValue::object();
+    cell1.set("threads", n(1.0));
+    cell1.set("ms", n(s_1.mean_s * 1e3));
+    cell1.set("speedup", n(1.0));
+    cells.push(cell1);
+    let mut t4_speedup = 0.0f64;
+    for threads in [2usize, 4] {
+        let pool_n = ShardPool::new(threads);
+        let mut tn = vec![0.0f32; rows * DIM];
+        let mut un = vec![0.0f32; rows * HIDDEN];
+        let mut gn = vec![0.0f32; BLOCK_W];
+        let mut dn = vec![0.0f32; rows * DIM];
+        let mut dun = vec![0.0f32; rows * HIDDEN];
+        let mut gpn = vec![0.0f32; plan.nshards() * BLOCK_W];
+        // Bit-identity across thread counts before timing.
+        pair(&pool_n, &mut tn, &mut un, &mut gn, &mut dn, &mut dun, &mut gpn);
+        assert_bits_eq(&tn, &t1, "parallel block_fwd.t");
+        assert_bits_eq(&un, &u1, "parallel block_fwd.u");
+        assert_bits_eq(&gn, &g1, "parallel block_bwd.g_w");
+        assert_bits_eq(&dn, &d1, "parallel block_bwd.d_in");
+        let s_n = measure(warmup, iters, || {
+            pair(&pool_n, &mut tn, &mut un, &mut gn, &mut dn, &mut dun, &mut gpn);
+            black_box(dn[0]);
+        });
+        let speedup = s_1.mean_s / s_n.mean_s;
+        report(&format!("block pair n=64 sharded, kernel-threads {threads}"), &s_n);
+        println!("    -> {speedup:.2}x vs kernel-threads 1");
+        if threads == 4 {
+            t4_speedup = speedup;
+        }
+        let mut cell = JsonValue::object();
+        cell.set("threads", n(threads as f64));
+        cell.set("ms", n(s_n.mean_s * 1e3));
+        cell.set("speedup", n(speedup));
+        cells.push(cell);
+    }
+    println!(
+        "block fwd+bwd pair n=64 at kernel-threads 4: {t4_speedup:.2}x (acceptance target >= 1.5x)"
+    );
+    out.set("block_pair_n64", JsonValue::Array(cells));
+    out.set("block_pair_n64_speedup_t4", n(t4_speedup));
+
+    // Per-kernel 1-vs-4 on the remaining sharded hot kernels. Each
+    // caller runs one warm pass per pool and asserts bit-identity
+    // before handing the timed closures to `one_vs_four`.
+    let pool4 = ShardPool::new(4);
+    {
+        let a = randv(&mut rng, rows * PATCH_ELEMS);
+        let w = randv(&mut rng, PATCH_ELEMS * DIM);
+        let bias = randv(&mut rng, DIM);
+        let mut c1 = vec![0.0f32; rows * DIM];
+        let mut c4 = vec![0.0f32; rows * DIM];
+        kernels::gemm_bias_sharded(&pool1, plan, &a, &w, &bias, rows, PATCH_ELEMS, DIM, &mut c1);
+        kernels::gemm_bias_sharded(&pool4, plan, &a, &w, &bias, rows, PATCH_ELEMS, DIM, &mut c4);
+        assert_bits_eq(&c1, &c4, "parallel gemm_bias");
+        one_vs_four(
+            out,
+            "gemm_bias_speedup_t4",
+            "gemm_bias [1024x192x32]",
+            warmup,
+            iters,
+            || {
+                kernels::gemm_bias_sharded(&pool1, plan, &a, &w, &bias, rows, PATCH_ELEMS, DIM, &mut c1);
+                black_box(c1[0]);
+            },
+            || {
+                kernels::gemm_bias_sharded(&pool4, plan, &a, &w, &bias, rows, PATCH_ELEMS, DIM, &mut c4);
+                black_box(c4[0]);
+            },
+        );
+
+        // gemm_bt at the block-backward du shape: [rows,32]·[64,32]ᵀ.
+        let d_up = randv(&mut rng, rows * DIM);
+        let w2 = randv(&mut rng, HIDDEN * DIM);
+        let mut b1 = vec![0.0f32; rows * HIDDEN];
+        let mut b4 = vec![0.0f32; rows * HIDDEN];
+        kernels::gemm_bt_sharded(&pool1, plan, &d_up, &w2, None, rows, DIM, HIDDEN, &mut b1);
+        kernels::gemm_bt_sharded(&pool4, plan, &d_up, &w2, None, rows, DIM, HIDDEN, &mut b4);
+        assert_bits_eq(&b1, &b4, "parallel gemm_bt");
+        one_vs_four(
+            out,
+            "gemm_bt_speedup_t4",
+            "gemm_bt [1024x32x64]",
+            warmup,
+            iters,
+            || {
+                kernels::gemm_bt_sharded(&pool1, plan, &d_up, &w2, None, rows, DIM, HIDDEN, &mut b1);
+                black_box(b1[0]);
+            },
+            || {
+                kernels::gemm_bt_sharded(&pool4, plan, &d_up, &w2, None, rows, DIM, HIDDEN, &mut b4);
+                black_box(b4[0]);
+            },
+        );
+
+        let mut g1g = randv(&mut rng, PATCH_ELEMS * DIM);
+        let mut g4g = g1g.clone();
+        let y = randv(&mut rng, rows * DIM);
+        let mut part1 = vec![0.0f32; plan.nshards() * PATCH_ELEMS * DIM];
+        let mut part4 = part1.clone();
+        kernels::ger_acc_rows_sharded(&pool1, plan, &mut g1g, &a, &y, rows, PATCH_ELEMS, DIM, &mut part1);
+        kernels::ger_acc_rows_sharded(&pool4, plan, &mut g4g, &a, &y, rows, PATCH_ELEMS, DIM, &mut part4);
+        // (accumulators drift apart after repeated timing passes, so
+        // bit-identity is asserted on this single warm pass only)
+        assert_bits_eq(&g1g, &g4g, "parallel ger_acc_rows");
+        one_vs_four(
+            out,
+            "ger_acc_rows_speedup_t4",
+            "ger_acc_rows [1024x192x32]",
+            warmup,
+            iters,
+            || {
+                kernels::ger_acc_rows_sharded(&pool1, plan, &mut g1g, &a, &y, rows, PATCH_ELEMS, DIM, &mut part1);
+                black_box(g1g[0]);
+            },
+            || {
+                kernels::ger_acc_rows_sharded(&pool4, plan, &mut g4g, &a, &y, rows, PATCH_ELEMS, DIM, &mut part4);
+                black_box(g4g[0]);
+            },
+        );
+    }
+    {
+        let imgs = randv(&mut rng, 64 * 32 * 32 * 3);
+        let mut p1 = vec![0.0f32; rows * PATCH_ELEMS];
+        let mut p4 = vec![0.0f32; rows * PATCH_ELEMS];
+        kernels::im2col_sharded(&pool1, plan, &imgs, 64, 32, 8, 3, &mut p1);
+        kernels::im2col_sharded(&pool4, plan, &imgs, 64, 32, 8, 3, &mut p4);
+        assert_bits_eq(&p1, &p4, "parallel im2col");
+        one_vs_four(
+            out,
+            "im2col_speedup_t4",
+            "im2col [64x32x32x3]",
+            warmup,
+            iters,
+            || {
+                kernels::im2col_sharded(&pool1, plan, &imgs, 64, 32, 8, 3, &mut p1);
+                black_box(p1[0]);
+            },
+            || {
+                kernels::im2col_sharded(&pool4, plan, &imgs, 64, 32, 8, 3, &mut p4);
+                black_box(p4[0]);
+            },
+        );
+    }
+
+    // End to end: one client step (client_local + server_step) through
+    // backends pinned to 1 vs 4 kernel threads, outputs asserted
+    // bitwise identical first.
+    let rt1 = Runtime::native_with_kernel_threads(1);
+    let rt4 = Runtime::native_with_kernel_threads(4);
+    let m = rt1.model().clone();
+    let enc = rt1.load_init("init_enc_c10")?;
+    let clf_c = rt1.load_init("init_clf_client_c10")?;
+    let clf_s = rt1.load_init("init_clf_s_c10")?;
+    let x = randv(&mut rng, m.batch * m.image_elems());
+    let y: Vec<i32> = (0..m.batch as i32).map(|i| i % 10).collect();
+    let depth = 4;
+    let ne = m.enc_size(depth);
+    let step = |rt: &Runtime| {
+        let local = rt.client_local(depth, 10, &enc[..ne], &clf_c, &x, &y).unwrap();
+        let srv = rt.server_step(depth, 10, &enc[ne..], &clf_s, &local.z, &y).unwrap();
+        (local, srv)
+    };
+    let (l1, s1o) = step(&rt1);
+    let (l4, s4o) = step(&rt4);
+    assert_bits_eq(&l1.g_enc, &l4.g_enc, "e2e client_local.g_enc");
+    assert_bits_eq(&s1o.g_srv, &s4o.g_srv, "e2e server_step.g_srv");
+    assert_bits_eq(&s1o.g_z, &s4o.g_z, "e2e server_step.g_z");
+    let e1 = measure(warmup, iters, || {
+        black_box(step(&rt1).1.loss);
+    });
+    let e4 = measure(warmup, iters, || {
+        black_box(step(&rt4).1.loss);
+    });
+    let speedup = e1.mean_s / e4.mean_s;
+    println!(
+        "single-client step (local+server, d=4): kernel-threads 1 {:.3} ms -> 4 {:.3} ms = {speedup:.2}x",
+        e1.mean_s * 1e3,
+        e4.mean_s * 1e3
+    );
+    out.set("client_step_t1_us", n(e1.mean_s * 1e6));
+    out.set("client_step_t4_us", n(e4.mean_s * 1e6));
+    out.set("client_step_speedup_t4", n(speedup));
+    Ok(())
+}
+
 fn round_cfg(clients: usize, rounds: usize) -> ExperimentConfig {
     let mut cfg = ExperimentConfig::default()
         .with_name("bench_native_kernels")
@@ -268,6 +527,9 @@ fn main() -> supersfl::Result<()> {
     let mut kern = JsonValue::object();
     kernel_section(&mut kern, warmup, iters);
     root.set("kernels", kern);
+    let mut par = JsonValue::object();
+    parallel_section(&mut par, warmup, iters)?;
+    root.set("kernel_parallel", par);
     let mut exec = JsonValue::object();
     exec_section(&rt, &mut exec, warmup, iters)?;
     root.set("exec", exec);

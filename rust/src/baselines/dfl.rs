@@ -258,9 +258,11 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
         // ---- Replica coordination: ship every replica both ways and
         // average (the "frequent coordination" term), then layer-align
         // with the client prefixes. ----
+        // One logical transfer per replica per direction, each paying
+        // the fed-link half-RTT.
         let fed_t = h
             .net
-            .fed_link((full_bytes + (clf_len * 4) as u64) * r as u64 * 2);
+            .fed_link((full_bytes + (clf_len * 4) as u64) * r as u64 * 2, r as u64 * 2);
         h.clock.advance(fed_t);
         enc_avg.fill(0.0);
         clf_avg.fill(0.0);

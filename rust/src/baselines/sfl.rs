@@ -205,7 +205,9 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
         // ---- FedAvg of the per-client server-side copies (SplitFed) ----
         // Every copy crosses the main↔Fed server link, both directions.
         let copy_bytes = ((suffix_len + h.server.clf_s.len()) * 4) as u64;
-        let fed_t = h.net.fed_link(copy_bytes * n as u64 * 2);
+        // One logical transfer per client copy per direction, each
+        // paying the fed-link half-RTT.
+        let fed_t = h.net.fed_link(copy_bytes * n as u64 * 2, n as u64 * 2);
         h.clock.advance(fed_t);
         let mut srv_avg = vec![0.0f32; suffix_len];
         let mut clf_avg = vec![0.0f32; h.server.clf_s.len()];

@@ -78,6 +78,34 @@ impl BackendKind {
     }
 }
 
+/// Sanity ceiling for an explicit `--kernel-threads` value. Far above
+/// any real core count; its job is to turn a typo'd huge number into a
+/// clean config error instead of an OS-thread-exhausting pool spawn.
+pub const MAX_KERNEL_THREADS: usize = 1024;
+
+/// Parse a `--kernel-threads` value: `auto` (or `0`) means "all cores"
+/// (returned as 0, resolved at backend construction), an integer in
+/// `1..=`[`MAX_KERNEL_THREADS`] pins the pool size. Fail-fast on
+/// anything else — a typo'd value must not silently run a different
+/// pool size than the operator asked for (even though results are
+/// bit-identical either way, perf comparisons are not).
+pub fn parse_kernel_threads(s: &str) -> Result<usize> {
+    if s.eq_ignore_ascii_case("auto") {
+        return Ok(0);
+    }
+    let n: usize = s.parse().map_err(|_| {
+        Error::Config(format!(
+            "invalid kernel-threads '{s}' (expected auto or a non-negative integer)"
+        ))
+    })?;
+    if n > MAX_KERNEL_THREADS {
+        return Err(Error::Config(format!(
+            "kernel-threads {n} exceeds the sanity cap of {MAX_KERNEL_THREADS}"
+        )));
+    }
+    Ok(n)
+}
+
 /// TPGF fusion-rule variant (paper §IV ablation, Fig. 6).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum TpgfMode {
@@ -185,6 +213,11 @@ pub struct NetConfig {
     pub drop_prob: f64,
     /// Server NIC bandwidth, Mbit/s (shared across concurrent clients).
     pub server_bandwidth_mbps: f64,
+    /// Round-trip latency of the datacenter-internal main↔Fed server
+    /// link, ms. Every transfer on that link pays half of it — the same
+    /// half-RTT model every client↔server transfer uses (the seed
+    /// charged this link bandwidth only).
+    pub fed_latency_ms: f64,
 }
 
 impl Default for NetConfig {
@@ -194,6 +227,7 @@ impl Default for NetConfig {
             server_availability: 1.0,
             drop_prob: 0.0,
             server_bandwidth_mbps: 10_000.0,
+            fed_latency_ms: 1.0,
         }
     }
 }
@@ -335,6 +369,14 @@ pub struct ExperimentConfig {
     /// Results are bit-identical for every value — see
     /// `orchestrator::engine` for the determinism contract.
     pub threads: usize,
+    /// Cores the native backend's sharded kernels apply *inside* one
+    /// client step (`--kernel-threads auto|N`; 0 = auto = all cores;
+    /// the `SUPERSFL_KERNEL_THREADS` env var wins). Composes with
+    /// `threads`: the kernel pool runs one job at a time and busy
+    /// callers fall back inline, so saturating round-engine lanes are
+    /// never serialized. Results are bit-identical for every value —
+    /// see `runtime::native::kernels` for the shard-reduction contract.
+    pub kernel_threads: usize,
     /// Execution backend (`--backend auto|native|pjrt`). Results between
     /// backends differ numerically (different model families); within one
     /// backend every run is deterministic.
@@ -363,6 +405,7 @@ impl Default for ExperimentConfig {
             sfl_fixed_depth: 2,
             dfl_replicas: 2,
             threads: 0,
+            kernel_threads: 0,
             backend: BackendKind::Auto,
             wire: WireCodecKind::Fp32,
             artifacts_dir: PathBuf::from("artifacts"),
@@ -405,6 +448,12 @@ impl ExperimentConfig {
     /// Host worker threads for the round engine (0 = all cores).
     pub fn with_threads(mut self, t: usize) -> Self {
         self.threads = t;
+        self
+    }
+
+    /// Intra-client kernel threads (0 = auto).
+    pub fn with_kernel_threads(mut self, t: usize) -> Self {
+        self.kernel_threads = t;
         self
     }
 
@@ -478,6 +527,25 @@ impl ExperimentConfig {
             "sfl_fixed_depth" => self.sfl_fixed_depth = f(v)? as usize,
             "dfl_replicas" => self.dfl_replicas = (f(v)? as usize).max(1),
             "threads" => self.threads = f(v)? as usize,
+            // Accepts a number or the string "auto" (the CLI form).
+            // The numeric form gets the same fail-fast validation as
+            // the string form: a negative or fractional value must not
+            // silently saturate into "auto"/some other pool size.
+            "kernel_threads" => {
+                self.kernel_threads = match v.as_str() {
+                    Some(sv) => parse_kernel_threads(sv)?,
+                    None => {
+                        let num = f(v)?;
+                        if num < 0.0 || num.fract() != 0.0 || num > MAX_KERNEL_THREADS as f64 {
+                            return Err(Error::Config(format!(
+                                "kernel_threads must be 'auto' or an integer in \
+                                 0..={MAX_KERNEL_THREADS}, got {num}"
+                            )));
+                        }
+                        num as usize
+                    }
+                }
+            }
             "backend" => self.backend = BackendKind::parse(s(v, key)?)?,
             "wire_codec" => self.wire = WireCodecKind::parse(s(v, key)?)?,
             "artifacts_dir" => self.artifacts_dir = PathBuf::from(s(v, key)?),
@@ -495,6 +563,7 @@ impl ExperimentConfig {
             "server_availability" => self.net.server_availability = f(v)?,
             "drop_prob" => self.net.drop_prob = f(v)?,
             "server_bandwidth_mbps" => self.net.server_bandwidth_mbps = f(v)?,
+            "fed_latency_ms" => self.net.fed_latency_ms = f(v)?,
             "client_active_w" => self.energy.client_active_w = pair(v)?,
             "client_idle_w" => self.energy.client_idle_w = f(v)?,
             "client_tx_w" => self.energy.client_tx_w = f(v)?,
@@ -568,6 +637,8 @@ impl ExperimentConfig {
         o.set("sfl_fixed_depth", n(self.sfl_fixed_depth as f64));
         o.set("dfl_replicas", n(self.dfl_replicas as f64));
         o.set("threads", n(self.threads as f64));
+        o.set("kernel_threads", n(self.kernel_threads as f64));
+        o.set("fed_latency_ms", n(self.net.fed_latency_ms));
         o.set("backend", JsonValue::String(self.backend.as_str().into()));
         o.set("wire_codec", JsonValue::String(self.wire.label()));
         if let Some(t) = self.train.target_accuracy {
@@ -640,8 +711,10 @@ mod tests {
             .with_clients(77)
             .with_classes(100)
             .with_seed(9)
-            .with_threads(4);
+            .with_threads(4)
+            .with_kernel_threads(3);
         c.ssfl.tpgf_mode = TpgfMode::NoDepth;
+        c.net.fed_latency_ms = 2.5;
         let j = c.to_json();
         let mut c2 = ExperimentConfig::default();
         c2.apply_json(&j).unwrap();
@@ -650,7 +723,44 @@ mod tests {
         assert_eq!(c2.data.classes, 100);
         assert_eq!(c2.train.seed, 9);
         assert_eq!(c2.threads, 4);
+        assert_eq!(c2.kernel_threads, 3);
+        assert_eq!(c2.net.fed_latency_ms, 2.5);
         assert_eq!(c2.ssfl.tpgf_mode, TpgfMode::NoDepth);
+    }
+
+    #[test]
+    fn kernel_threads_parse_and_config_forms() {
+        assert_eq!(parse_kernel_threads("auto").unwrap(), 0);
+        assert_eq!(parse_kernel_threads("AUTO").unwrap(), 0);
+        assert_eq!(parse_kernel_threads("0").unwrap(), 0);
+        assert_eq!(parse_kernel_threads("4").unwrap(), 4);
+        assert_eq!(parse_kernel_threads("1024").unwrap(), MAX_KERNEL_THREADS);
+        assert!(parse_kernel_threads("-1").is_err());
+        assert!(parse_kernel_threads("many").is_err());
+        // A typo'd huge value must fail cleanly, not spawn a pool.
+        assert!(parse_kernel_threads("999999999").is_err());
+
+        // Config accepts both the numeric and the "auto" string form.
+        let mut c = ExperimentConfig::default();
+        c.apply_json(&json::parse(r#"{"kernel_threads": 3}"#).unwrap()).unwrap();
+        assert_eq!(c.kernel_threads, 3);
+        c.apply_json(&json::parse(r#"{"kernel_threads": "auto"}"#).unwrap()).unwrap();
+        assert_eq!(c.kernel_threads, 0);
+        assert!(c
+            .apply_json(&json::parse(r#"{"kernel_threads": "lots"}"#).unwrap())
+            .is_err());
+        // The numeric form fail-fasts too: negatives and fractions must
+        // not silently saturate into a different pool size.
+        assert!(c
+            .apply_json(&json::parse(r#"{"kernel_threads": -4}"#).unwrap())
+            .is_err());
+        assert!(c
+            .apply_json(&json::parse(r#"{"kernel_threads": 2.5}"#).unwrap())
+            .is_err());
+        assert!(c
+            .apply_json(&json::parse(r#"{"kernel_threads": 1e12}"#).unwrap())
+            .is_err());
+        assert_eq!(c.kernel_threads, 0, "failed overrides must not apply");
     }
 
     #[test]

@@ -50,7 +50,7 @@ fn usage() {
     eprintln!(
         "usage: supersfl <train|allocate|inspect> [--method ssfl|sfl|dfl] \
          [--clients N] [--classes 10|100] [--rounds N] [--seed N] \
-         [--threads N] [--backend auto|native|pjrt] \
+         [--threads N] [--kernel-threads auto|N] [--backend auto|native|pjrt] \
          [--wire-codec fp32|fp16|int8|topk:<k>] [--config file.json] \
          [--set key=value]... [--artifacts DIR] [--out DIR]"
     );
@@ -78,6 +78,9 @@ fn build_config(args: &cli::Args) -> Result<ExperimentConfig> {
     }
     if let Some(v) = args.get("threads") {
         cfg.threads = v.parse()?;
+    }
+    if let Some(v) = args.get("kernel-threads") {
+        cfg.kernel_threads = supersfl::config::parse_kernel_threads(v)?;
     }
     if let Some(v) = args.get("backend") {
         cfg.backend = BackendKind::parse(v)?;
@@ -171,6 +174,12 @@ fn cmd_train(args: &cli::Args) -> Result<()> {
         st.backend, st.executions, st.exec_time_s, st.marshal_time_s, st.compile_count,
         st.compile_time_s, wall
     );
+    if st.kernel_threads > 0 {
+        println!(
+            "kernels[{} threads]: {:.2}s in the kernel core, {:.3}s in shard merges",
+            st.kernel_threads, st.kernel_time_s, st.shard_merge_time_s
+        );
+    }
     if let Some(reason) = &st.fallback_reason {
         println!("note: fell back to the native backend ({reason})");
     }

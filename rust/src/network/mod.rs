@@ -395,12 +395,22 @@ impl NetworkSim {
     /// uplink traffic over the server NIC. This is a datacenter-internal
     /// link, not a client↔server exchange, so it bypasses the wire codec
     /// (wire == raw in the compression accounting).
-    pub fn fed_link(&mut self, bytes: u64) -> f64 {
+    ///
+    /// `bytes` is the round's total payload over the link and
+    /// `transfers` the number of logical transfers it comprises (e.g.
+    /// one per model copy per direction). Time = `transfers` half-RTTs
+    /// + bytes/bandwidth — the same one-way model every other transfer
+    /// pays ([`LinkParams::up_time`]), applied per transfer; the seed
+    /// charged bandwidth only, silently giving the Fed link a free
+    /// latency pass (a tiny SFL/DFL-only simulated-time undercount —
+    /// SSFL never touches this link).
+    pub fn fed_link(&mut self, bytes: u64, transfers: u64) -> f64 {
         self.traffic.up_bytes += bytes;
         self.round_traffic.up_bytes += bytes;
         self.raw_traffic.up_bytes += bytes;
         self.round_raw_traffic.up_bytes += bytes;
-        bytes as f64 / (self.cfg.server_bandwidth_mbps * 1e6 / 8.0)
+        transfers as f64 * self.cfg.fed_latency_ms * 1e-3 / 2.0
+            + bytes as f64 / (self.cfg.server_bandwidth_mbps * 1e6 / 8.0)
     }
 }
 
@@ -461,6 +471,35 @@ mod tests {
             }
         }
         assert!((60..140).contains(&ups), "ups {ups}");
+    }
+
+    #[test]
+    fn fed_link_pays_half_rtt_per_transfer_plus_bandwidth_and_charges_all_ledgers() {
+        let mut s = sim(1.0, 0.0);
+        s.begin_round();
+        let bytes = 4_000_000u64;
+        let t = s.fed_link(bytes, 1);
+        let cfg = NetConfig::default();
+        let half_rtt = cfg.fed_latency_ms * 1e-3 / 2.0;
+        let want = half_rtt + bytes as f64 / (cfg.server_bandwidth_mbps * 1e6 / 8.0);
+        assert!((t - want).abs() < 1e-15, "fed_link time {t} != {want}");
+        // The latency term must actually be there: even a zero-byte
+        // transfer takes the half-RTT (the seed returned 0.0 here).
+        assert!(s.fed_link(0, 1) >= half_rtt - 1e-15);
+        // A bulk of k logical transfers pays k half-RTTs (the SFL round
+        // ships one copy per client per direction in one call).
+        let t16 = s.fed_link(bytes, 16);
+        assert!(
+            (t16 - (16.0 * half_rtt + bytes as f64 / (cfg.server_bandwidth_mbps * 1e6 / 8.0)))
+                .abs()
+                < 1e-15,
+            "per-transfer latency collapsed: {t16}"
+        );
+        // Bytes land on all four ledgers (uplink, wire == raw).
+        assert_eq!(s.traffic.up_bytes, 2 * bytes);
+        assert_eq!(s.round_traffic.up_bytes, 2 * bytes);
+        assert_eq!(s.raw_traffic.up_bytes, 2 * bytes);
+        assert_eq!(s.round_raw_traffic.up_bytes, 2 * bytes);
     }
 
     #[test]

@@ -33,9 +33,11 @@
 //!    in ascending client-id order: energy into per-device slots, server
 //!    busy-seconds and step counts by id-ordered summation, traffic into
 //!    the byte counters, and lane server deltas onto the shared
-//!    super-network (`θ[ℓ] += θ_lane[ℓ] − θ_snapshot[ℓ]`, clients in id
-//!    order). Floating-point reduction order is therefore a constant of
-//!    the run configuration.
+//!    super-network (`θ[ℓ] += (θ_lane[ℓ] − θ_snapshot[ℓ]) / n`, clients
+//!    in id order — participant-normalized so the shared suffix trains
+//!    at the configured lr_server instead of n× it; see the merge
+//!    comment in `run_ssfl`). Floating-point reduction order is
+//!    therefore a constant of the run configuration.
 //! 4. **Static partitioning.** [`run_lanes`] splits the lane array into
 //!    contiguous chunks, one per worker. Because lanes never communicate,
 //!    the partition shape cannot affect any lane's result — only the merge
@@ -52,8 +54,10 @@
 //! serialization is exactly what prevents parallelism, so the engine
 //! adopts the synchronous-parallel-server semantic instead: every client
 //! trains against the round-start snapshot of the shared suffix, and the
-//! per-lane deltas are summed into the super-network at the barrier
-//! (before Eq. 6–8 aggregation). This matches the paper's synchronized
+//! per-lane deltas are averaged into the super-network at the barrier
+//! (before Eq. 6–8 aggregation; participant-normalized so the suffix
+//! trains at the configured lr_server — raw summation applied n× it and
+//! diverged at the default lr). This matches the paper's synchronized
 //! aggregation barrier; `deterministic_across_runs` still holds because
 //! the semantic is a function of the config alone. The SFL baseline keeps
 //! true per-client server copies (SplitFed semantics — already lane

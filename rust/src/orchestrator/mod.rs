@@ -500,11 +500,26 @@ fn run_ssfl(rt: &Runtime, h: &mut Harness) -> Result<()> {
 
                         // The activation gradient comes back as a frame
                         // too; the client backprops the decoded tensor.
+                        // The exchange above already charged the link
+                        // `gz_frame_len` for this response (priced from
+                        // the element count before the tensor existed —
+                        // wire::Wire::frame_len is a pure function of
+                        // (msg type, elems), pinned by the wire tests),
+                        // so a mismatch here means the billed bytes and
+                        // the shipped bytes diverged: fail loudly in
+                        // every build, not just debug (the seed's
+                        // debug_assert silently vanished in release).
                         let down_len = wire
                             .encode_to(MsgType::ActGrad, &out.g_z, 0.0, &mut lane.net.scratch)
                             .len() as u64;
-                        debug_assert_eq!(down_len, gz_frame_len);
-                        let _ = down_len;
+                        if down_len != gz_frame_len {
+                            return Err(crate::Error::Wire(format!(
+                                "ActGrad frame is {down_len} bytes but the exchange \
+                                 was charged {gz_frame_len} ({smashed_elems} elems, \
+                                 codec {}) — frame pricing drifted from encoding",
+                                wire.label()
+                            )));
+                        }
                         wire.decode_into(&lane.net.scratch.frame, &mut lane.net.scratch.decoded)?;
 
                         // Phase 2 client backprop + Phase 3 fusion.
@@ -545,16 +560,38 @@ fn run_ssfl(rt: &Runtime, h: &mut Harness) -> Result<()> {
         let (round_dt, busy, fallback_steps, server_steps) = h.absorb_ledgers(&ledgers);
 
         // ---- Merge lane server deltas into the shared super-network ----
-        // (id order; θ[ℓ] += θ_lane[ℓ] − θ_snapshot[ℓ]; all-zero and
-        // skipped when the server was down this round)
+        // (id order; θ[ℓ] += (θ_lane[ℓ] − θ_snapshot[ℓ]) / n; all-zero
+        // and skipped when the server was down this round)
+        //
+        // The deltas are **fleet-normalized**: every lane trains the
+        // same round-start snapshot, so summing raw deltas applies n×
+        // the configured lr_server to the fully-shared suffix layers
+        // and the classifier in one stale-gradient step — the
+        // amplification behind the server-path divergence at the
+        // default lr (the other half of the fix is the τ-clip inside
+        // `server_step`; see the native backend docs § server-path
+        // stability). With the fixed 1/n factor a layer trained by k
+        // lanes moves by (k/n)·mean-of-its-trainers: fully-shared deep
+        // layers and the classifier train at exactly lr_server, while
+        // shallow suffix layers (held by few lanes under heterogeneous
+        // depths) and rounds with timed-out exchanges (zero deltas)
+        // are proportionally attenuated — deliberate conservatism:
+        // those layers' main training signal is the client-side Eq. 6–8
+        // aggregation below, and a lone non-IID trainer should not move
+        // a shared layer at full step size. (A per-layer 1/k holder
+        // count is the sharper alternative; the validated-stable
+        // trajectory uses 1/n.) Deterministic and thread-invariant
+        // exactly like the sum was (fixed factor, id-order fold on
+        // this thread).
         if server_up {
+            let inv_n = 1.0f32 / n as f32;
             for (ci, srv) in lane_srv.iter().enumerate() {
                 let off = enc_len - srv.len();
                 let dst = &mut h.server.enc[off..];
                 for ((d, &l), &p) in
                     dst.iter_mut().zip(srv.iter()).zip(enc_snapshot[off..].iter())
                 {
-                    *d += l - p;
+                    *d += (l - p) * inv_n;
                 }
                 for ((d, &l), &p) in h
                     .server
@@ -563,7 +600,7 @@ fn run_ssfl(rt: &Runtime, h: &mut Harness) -> Result<()> {
                     .zip(lane_clf[ci].iter())
                     .zip(clf_snapshot.iter())
                 {
-                    *d += l - p;
+                    *d += (l - p) * inv_n;
                 }
             }
         }
@@ -832,24 +869,25 @@ mod tests {
         }
     }
 
-    /// Acceptance: on the 3-round/8-client native scenario the lossy
-    /// codecs must cut encoded bytes ≥ 3× while training stays sane, and
-    /// fp32 itself must pay only frame overhead (ratio just under 1).
+    /// Acceptance: on the stabilized 3-round/8-client native scenario
+    /// (the golden scenario — server-suffix τ-clip + participant-
+    /// normalized merge, noise 0.4, 8 local steps) the lossy codecs must
+    /// cut encoded bytes ≥ 3× while training stays sane, fp32 itself
+    /// must pay only frame overhead (ratio just under 1), and int8 must
+    /// land a **final accuracy within 10 points of fp32**.
     ///
-    /// On accuracy closeness: a numpy port of this exact loop (native
-    /// geometry, seed-7 fleet depths, same protocol math) measured int8's
-    /// post-round loss within < 1% of fp32's, but *final accuracies* of a
-    /// 3-round run cluster at near-chance levels where run-to-run gaps of
-    /// ±10+ points are pure noise (topk's sparser updates shift the
-    /// trajectory wholesale). A "final accuracy within N points" assert
-    /// would therefore flake without detecting anything; instead this
-    /// test pins the robust invariants — compression, codec-independent
-    /// raw ledgers, int8's early-dynamics closeness via the round-2 mean
-    /// client loss — and the exact int8 trajectory is pinned bit-for-bit
-    /// by the `native_ssfl_3r8c_int8.json` golden snapshot, which is the
-    /// stronger drift detector.
+    /// The final-metric criterion was weakened to "round-2 loss within
+    /// 15%" while the native server path diverged at the default
+    /// lr_server (pre-fix final accuracies were near-chance with ±10 pt
+    /// noise, so any final-accuracy assert was a coin flip). With the
+    /// divergence fixed the trajectory is stable — a numpy port of this
+    /// exact loop measured fp32 finals of 0.43–0.71 across init
+    /// perturbations with |int8 − fp32| ≤ 0.03 — so the real criterion
+    /// is restored (10 pts ≥ 3× the observed worst gap), with the exact
+    /// int8 trajectory still pinned bit-for-bit by the
+    /// `native_ssfl_3r8c_int8.json` golden snapshot.
     #[test]
-    fn lossy_codecs_compress_3x_and_keep_training_sane() {
+    fn lossy_codecs_compress_3x_and_int8_matches_fp32_final_metrics() {
         if std::env::var("SUPERSFL_WIRE").is_ok() {
             return; // the env override would pin every run to one codec
         }
@@ -860,7 +898,8 @@ mod tests {
             .with_seed(7);
         base.data.train_per_class = 20;
         base.data.test_total = 400;
-        base.train.local_steps = 1;
+        base.data.noise = 0.4;
+        base.train.local_steps = 8;
         base.train.eval_samples = 200;
 
         let run = |w: WireCodecKind| {
@@ -906,15 +945,18 @@ mod tests {
                 );
             }
             if kind == WireCodecKind::Int8 {
-                // One full round of int8-quantized exchanges must leave the
-                // next round's mean client loss close to fp32's (quantizer
-                // error is ≤ (max−min)/510 per element; the numpy port
-                // measured < 1% drift here — 15% is a wide safety margin).
-                let l_fp32 = fp32.rounds[1].mean_client_loss;
-                let l_int8 = m.rounds[1].mean_client_loss;
+                // The restored final-metric criterion (docs above).
+                assert!(
+                    (m.final_accuracy - fp32.final_accuracy).abs() <= 0.10,
+                    "int8 final accuracy {:.3} drifted > 10 pts from fp32 {:.3}",
+                    m.final_accuracy,
+                    fp32.final_accuracy
+                );
+                let l_fp32 = fp32.rounds.last().unwrap().mean_client_loss;
+                let l_int8 = m.rounds.last().unwrap().mean_client_loss;
                 assert!(
                     (l_int8 / l_fp32 - 1.0).abs() <= 0.15,
-                    "int8 round-2 loss {l_int8:.4} drifted > 15% from fp32 {l_fp32:.4}"
+                    "int8 final loss {l_int8:.4} drifted > 15% from fp32 {l_fp32:.4}"
                 );
             }
         }

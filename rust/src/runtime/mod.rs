@@ -72,6 +72,15 @@ pub struct RuntimeStats {
     /// the argument boundary; a subset of `exec_time_s`). Zero on the
     /// PJRT path, where the accelerator owns this split.
     pub kernel_time_s: f64,
+    /// Cores the native backend's sharded kernels apply per exec call
+    /// (`--kernel-threads` / `SUPERSFL_KERNEL_THREADS`, resolved).
+    /// Results are bit-identical for every value; this is pure
+    /// throughput. Zero on the PJRT path.
+    pub kernel_threads: usize,
+    /// Host seconds spent in the fixed-order merges of per-shard
+    /// parameter-gradient partials (a subset of `kernel_time_s` — the
+    /// determinism tax of intra-client parallelism).
+    pub shard_merge_time_s: f64,
     /// High-water mark (bytes) of the native backend's scratch arena.
     /// Stabilizes after the first pass of each op shape — the zero
     /// steady-state-allocation invariant of the exec hot path.
@@ -136,7 +145,8 @@ impl Runtime {
         })
     }
 
-    /// The always-available native reference backend.
+    /// The always-available native reference backend (kernel-thread
+    /// count from `SUPERSFL_KERNEL_THREADS`, else all cores).
     pub fn native() -> Runtime {
         Runtime {
             backend: Box::new(NativeBackend::new()),
@@ -144,13 +154,25 @@ impl Runtime {
         }
     }
 
+    /// Native backend with an explicit kernel-thread count (bypasses the
+    /// env override; the 1-vs-N invariance tests and benches pin pools
+    /// this way). Results are bit-identical for every value.
+    pub fn native_with_kernel_threads(threads: usize) -> Runtime {
+        Runtime {
+            backend: Box::new(NativeBackend::with_kernel_threads(threads)),
+            fallback_reason: None,
+        }
+    }
+
     /// Build the runtime a config asks for (`cfg.backend`, overridden by
-    /// `SUPERSFL_BACKEND`).
+    /// `SUPERSFL_BACKEND`; `cfg.kernel_threads`, overridden by
+    /// `SUPERSFL_KERNEL_THREADS`).
     pub fn from_config(cfg: &ExperimentConfig) -> Result<Runtime> {
+        let kt = native::resolve_kernel_threads(cfg.kernel_threads);
         match env_backend().unwrap_or(cfg.backend) {
             BackendKind::Pjrt => Runtime::load(&cfg.artifacts_dir),
-            BackendKind::Native => Ok(Runtime::native()),
-            BackendKind::Auto => Ok(Runtime::load_if_available(&cfg.artifacts_dir)),
+            BackendKind::Native => Ok(Runtime::native_with_kernel_threads(kt)),
+            BackendKind::Auto => Ok(Runtime::load_if_available_kt(&cfg.artifacts_dir, kt)),
         }
     }
 
@@ -160,8 +182,14 @@ impl Runtime {
     /// skip; it now always yields a working runtime and records *why* it
     /// fell back in [`RuntimeStats::fallback_reason`].
     pub fn load_if_available(artifacts_dir: &Path) -> Runtime {
+        Runtime::load_if_available_kt(artifacts_dir, native::resolve_kernel_threads(0))
+    }
+
+    /// [`Runtime::load_if_available`] with an explicit (already resolved)
+    /// kernel-thread count for the native fallback.
+    fn load_if_available_kt(artifacts_dir: &Path, kernel_threads: usize) -> Runtime {
         match env_backend() {
-            Some(BackendKind::Native) => return Runtime::native(),
+            Some(BackendKind::Native) => return Runtime::native_with_kernel_threads(kernel_threads),
             // An explicit pjrt selection must fail hard, not silently
             // fall back to native numbers.
             Some(BackendKind::Pjrt) => {
@@ -186,7 +214,7 @@ impl Runtime {
         };
         eprintln!("runtime: using native reference backend ({reason})");
         Runtime {
-            backend: Box::new(NativeBackend::new()),
+            backend: Box::new(NativeBackend::with_kernel_threads(kernel_threads)),
             fallback_reason: Some(reason),
         }
     }
@@ -454,6 +482,25 @@ mod tests {
         assert!(st.exec_time_s >= st.kernel_time_s, "kernel time nests inside exec time");
         assert!(st.arena_hwm_bytes > 0, "scratch must come from the arena");
         assert!(st.arena_allocs > 0);
+        assert!(st.kernel_threads >= 1, "native stats must report the pool size");
+        assert!(st.shard_merge_time_s >= 0.0);
+        assert!(st.shard_merge_time_s <= st.kernel_time_s, "merge time nests inside kernel time");
+    }
+
+    #[test]
+    fn explicit_kernel_thread_counts_are_reported_and_bit_identical() {
+        let m = Runtime::native().model().clone();
+        let enc = Runtime::native().load_init("init_enc_c10").unwrap();
+        let x = vec![0.1f32; m.batch * m.image_elems()];
+        let one = Runtime::native_with_kernel_threads(1);
+        let four = Runtime::native_with_kernel_threads(4);
+        assert_eq!(one.stats().kernel_threads, 1);
+        assert_eq!(four.stats().kernel_threads, 4);
+        let a = one.client_fwd(3, &enc[..m.enc_size(3)], &x).unwrap();
+        let b = four.client_fwd(3, &enc[..m.enc_size(3)], &x).unwrap();
+        for (x1, x2) in a.iter().zip(b.iter()) {
+            assert_eq!(x1.to_bits(), x2.to_bits());
+        }
     }
 
     #[test]

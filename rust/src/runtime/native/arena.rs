@@ -11,6 +11,12 @@
 //! round of each op shape (asserted in the backend's tests and surfaced
 //! through `RuntimeStats::{arena_hwm_bytes, arena_allocs}`).
 //!
+//! The sharded backward kernels draw their per-shard parameter-gradient
+//! partial buffers from the same pool (one `nshards · layer-size`
+//! checkout per exec, sized by the shard plan — a pure function of the
+//! op shape), so intra-client parallelism adds no steady-state
+//! allocations either.
+//!
 //! Checkout is **best-fit**: the smallest pooled buffer whose capacity
 //! covers the request wins, so large (eval-sized) buffers are not burned
 //! on small (batch-sized) requests. Best-fit has the classic stability

@@ -33,6 +33,38 @@
 //! awkward shapes (rows not a multiple of the block, n below the ILP
 //! width, n ∈ {1, 3, 5, 8} batches), and `bench_native_kernels` measures
 //! the naive-vs-tiled speedup from the same pair.
+//!
+//! # Deterministic shard reduction (`--kernel-threads N`)
+//!
+//! The `*_sharded` family parallelizes *inside* one kernel call without
+//! touching the bit-identity contract. The rules:
+//!
+//! * **Fixed row-range shards.** [`ShardPlan`] cuts the row dimension
+//!   into [`SHARD_ROWS`]-row ranges — a pure function of the shape,
+//!   never of the worker count — so the decomposition is identical for
+//!   every `--kernel-threads N` (including 1, which executes the same
+//!   shards inline in ascending order).
+//! * **Row-disjoint kernels shard transparently.** [`gemm_bias`],
+//!   [`gemm_bt`], [`im2col`] and the fused [`block_fwd`] epilogues
+//!   compute each output row independently, so their sharded variants
+//!   are **bitwise identical to the direct kernels** for every plan —
+//!   no merge exists to reorder.
+//! * **Accumulation kernels merge partials in fixed shard order.**
+//!   [`ger_acc_rows`], [`col_sum_acc`] and the parameter-gradient half
+//!   of [`block_bwd`] fold *across* rows, so each shard folds its own
+//!   row range into a zeroed partial buffer (checked out from the
+//!   arena) and the partials are added into the accumulator **in
+//!   ascending shard index on the caller's thread** after the pool
+//!   drains. The per-element fold order is therefore a pure function of
+//!   the plan — the same fold-order argument that made the tiled
+//!   kernels bit-identical to the naive loops — and single-shard plans
+//!   degenerate to the direct kernels (no partial, no merge).
+//!
+//! Consequently every sharded kernel is bitwise invariant across
+//! `--kernel-threads` values (property-tested below for awkward shapes
+//! and thread counts, and end to end by the golden-trajectory
+//! invariance test), and only the *plan* — not the thread count — is
+//! part of the numeric contract.
 
 /// Rows processed per register block in the axpy-form kernels.
 const MR: usize = 4;
@@ -264,24 +296,11 @@ pub fn im2col(x: &[f32], n: usize, image: usize, patch: usize, channels: usize, 
     let grid = image / patch;
     let tokens = grid * grid;
     let pe = patch * patch * channels;
-    let img_elems = image * image * channels;
-    assert_eq!(x.len(), n * img_elems);
+    assert_eq!(x.len(), n * image * image * channels);
     assert_eq!(out.len(), n * tokens * pe);
-    let span = patch * channels;
-    for s in 0..n {
-        let base = s * img_elems;
-        for t in 0..tokens {
-            let (pi, pj) = (t / grid, t % grid);
-            let orow = &mut out[(s * tokens + t) * pe..(s * tokens + t) * pe + pe];
-            let mut k = 0;
-            for py in 0..patch {
-                let gy = pi * patch + py;
-                let row = base + (gy * image + pj * patch) * channels;
-                orow[k..k + span].copy_from_slice(&x[row..row + span]);
-                k += span;
-            }
-        }
-    }
+    // One source of truth for the gather: the full tensor is the
+    // [0, n·tokens) row range of the shardable form below.
+    im2col_rows(x, 0, n * tokens, image, patch, channels, out);
 }
 
 /// Token mean-pool: `out[s,:] = (Σ_t tok[s·T+t,:]) / T`, tokens folded in
@@ -453,6 +472,392 @@ pub fn softmax_xent(logits: &[f32], y: &[i32], classes: usize, n: usize, d: &mut
         dr[label as usize] -= inv_n;
     }
     loss
+}
+
+// ---- deterministic shard reduction (module docs § kernel-threads) ------
+
+use super::pool::ShardPool;
+use std::time::Instant;
+
+/// Rows per shard of the default plan. A pure constant: shard boundaries
+/// must never depend on the worker count. 32 rows = two training samples
+/// (16 tokens each) — big enough that the pool dispatch overhead is
+/// amortized, small enough that a 128-row training batch still yields 4
+/// shards and the 512-row eval batch 16.
+pub const SHARD_ROWS: usize = 32;
+
+/// A fixed row-range decomposition: shard `s` covers rows
+/// `[s·shard_rows, min(rows, (s+1)·shard_rows))`. Pure function of the
+/// row count (the worker count is *not* an input), so the decomposition —
+/// and with it every merge order — is identical for every
+/// `--kernel-threads N`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardPlan {
+    rows: usize,
+    shard_rows: usize,
+}
+
+impl ShardPlan {
+    /// The default plan for a row count ([`SHARD_ROWS`]-row ranges).
+    pub fn of(rows: usize) -> ShardPlan {
+        ShardPlan::with_shard_rows(rows, SHARD_ROWS)
+    }
+
+    /// A plan with an explicit shard height (property tests exercise
+    /// awkward heights — 1, off the register block, larger than `rows`).
+    pub fn with_shard_rows(rows: usize, shard_rows: usize) -> ShardPlan {
+        ShardPlan {
+            rows,
+            shard_rows: shard_rows.max(1),
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn nshards(&self) -> usize {
+        self.rows / self.shard_rows + usize::from(self.rows % self.shard_rows != 0)
+    }
+
+    /// Row range `[lo, hi)` of shard `s`.
+    pub fn range(&self, s: usize) -> (usize, usize) {
+        let lo = s * self.shard_rows;
+        (lo, self.rows.min(lo + self.shard_rows))
+    }
+}
+
+/// A `Send + Sync` raw-pointer wrapper for handing *disjoint* row ranges
+/// of one output buffer to pool workers. Every `unsafe` block slicing
+/// through it relies on the same invariant: [`ShardPlan::range`] ranges
+/// are pairwise disjoint, so no two shards ever alias.
+#[derive(Clone, Copy)]
+struct SendMut(*mut f32);
+
+// SAFETY: shards write pairwise-disjoint ranges (ShardPlan geometry) and
+// the pool joins every shard before the owning call returns.
+unsafe impl Send for SendMut {}
+unsafe impl Sync for SendMut {}
+
+/// Slice `len` elements starting `offset` into a [`SendMut`] buffer.
+///
+/// # Safety
+/// The `[offset, offset+len)` ranges of concurrent calls must be
+/// pairwise disjoint and inside the original buffer.
+#[inline]
+unsafe fn sub_mut<'a>(p: SendMut, offset: usize, len: usize) -> &'a mut [f32] {
+    std::slice::from_raw_parts_mut(p.0.add(offset), len)
+}
+
+/// Row-sharded [`gemm_bias`] — bitwise identical to the direct kernel
+/// for every plan and thread count (each output row's fold is untouched;
+/// shards write disjoint row ranges).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_bias_sharded(
+    pool: &ShardPool,
+    plan: ShardPlan,
+    a: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    assert_eq!(plan.rows(), m);
+    assert_eq!(a.len(), m * k);
+    assert_eq!(out.len(), m * n);
+    if plan.nshards() <= 1 {
+        return gemm_bias(a, w, bias, m, k, n, out);
+    }
+    let op = SendMut(out.as_mut_ptr());
+    pool.run(plan.nshards(), &|s| {
+        let (lo, hi) = plan.range(s);
+        // SAFETY: plan ranges are disjoint (sub_mut contract).
+        let orows = unsafe { sub_mut(op, lo * n, (hi - lo) * n) };
+        gemm_bias(&a[lo * k..hi * k], w, bias, hi - lo, k, n, orows);
+    });
+}
+
+/// Row-sharded [`gemm_bt`] — bitwise identical to the direct kernel
+/// (per-element folds are row-local).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_bt_sharded(
+    pool: &ShardPool,
+    plan: ShardPlan,
+    a: &[f32],
+    b: &[f32],
+    seed: Option<&[f32]>,
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    assert_eq!(plan.rows(), m);
+    assert_eq!(a.len(), m * k);
+    assert_eq!(out.len(), m * n);
+    if let Some(s) = seed {
+        assert_eq!(s.len(), m * n);
+    }
+    if plan.nshards() <= 1 {
+        return gemm_bt(a, b, seed, m, k, n, out);
+    }
+    let op = SendMut(out.as_mut_ptr());
+    pool.run(plan.nshards(), &|s| {
+        let (lo, hi) = plan.range(s);
+        // SAFETY: plan ranges are disjoint (sub_mut contract).
+        let orows = unsafe { sub_mut(op, lo * n, (hi - lo) * n) };
+        let seed_rows = seed.map(|sd| &sd[lo * n..hi * n]);
+        gemm_bt(&a[lo * k..hi * k], b, seed_rows, hi - lo, k, n, orows);
+    });
+}
+
+/// Patch-row range `[lo, hi)` of the im2col gather (row `r` feeds token
+/// `r % tokens` of sample `r / tokens`). The per-row bytes are exactly
+/// [`im2col`]'s — pure copies, so sharding is bitwise transparent.
+fn im2col_rows(
+    x: &[f32],
+    lo: usize,
+    hi: usize,
+    image: usize,
+    patch: usize,
+    channels: usize,
+    out_rows: &mut [f32],
+) {
+    let grid = image / patch;
+    let tokens = grid * grid;
+    let pe = patch * patch * channels;
+    let img_elems = image * image * channels;
+    let span = patch * channels;
+    for (i, r) in (lo..hi).enumerate() {
+        let (s, t) = (r / tokens, r % tokens);
+        let base = s * img_elems;
+        let (pi, pj) = (t / grid, t % grid);
+        let orow = &mut out_rows[i * pe..i * pe + pe];
+        let mut k = 0;
+        for py in 0..patch {
+            let gy = pi * patch + py;
+            let row = base + (gy * image + pj * patch) * channels;
+            orow[k..k + span].copy_from_slice(&x[row..row + span]);
+            k += span;
+        }
+    }
+}
+
+/// Row-sharded [`im2col`] over the `n·tokens` patch rows — bitwise
+/// identical to the direct gather for every plan.
+#[allow(clippy::too_many_arguments)]
+pub fn im2col_sharded(
+    pool: &ShardPool,
+    plan: ShardPlan,
+    x: &[f32],
+    n: usize,
+    image: usize,
+    patch: usize,
+    channels: usize,
+    out: &mut [f32],
+) {
+    let grid = image / patch;
+    let tokens = grid * grid;
+    let pe = patch * patch * channels;
+    assert_eq!(plan.rows(), n * tokens);
+    assert_eq!(x.len(), n * image * image * channels);
+    assert_eq!(out.len(), n * tokens * pe);
+    if plan.nshards() <= 1 {
+        return im2col(x, n, image, patch, channels, out);
+    }
+    let op = SendMut(out.as_mut_ptr());
+    pool.run(plan.nshards(), &|s| {
+        let (lo, hi) = plan.range(s);
+        // SAFETY: plan ranges are disjoint (sub_mut contract).
+        let orows = unsafe { sub_mut(op, lo * pe, (hi - lo) * pe) };
+        im2col_rows(x, lo, hi, image, patch, channels, orows);
+    });
+}
+
+/// Row-sharded [`block_fwd`] — each shard runs the full fused
+/// gemm→ReLU→residual chain on its token rows. Bitwise identical to the
+/// direct kernel (all three stages are row-disjoint).
+#[allow(clippy::too_many_arguments)]
+pub fn block_fwd_sharded(
+    pool: &ShardPool,
+    plan: ShardPlan,
+    w: &[f32],
+    t_in: &[f32],
+    rows: usize,
+    dim: usize,
+    hidden: usize,
+    t_out: &mut [f32],
+    u_out: &mut [f32],
+) {
+    assert_eq!(plan.rows(), rows);
+    assert_eq!(t_in.len(), rows * dim);
+    assert_eq!(t_out.len(), rows * dim);
+    assert_eq!(u_out.len(), rows * hidden);
+    if plan.nshards() <= 1 {
+        return block_fwd(w, t_in, rows, dim, hidden, t_out, u_out);
+    }
+    let tp = SendMut(t_out.as_mut_ptr());
+    let up = SendMut(u_out.as_mut_ptr());
+    pool.run(plan.nshards(), &|s| {
+        let (lo, hi) = plan.range(s);
+        let r = hi - lo;
+        // SAFETY: plan ranges are disjoint (sub_mut contract).
+        let (t_sl, u_sl) = unsafe { (sub_mut(tp, lo * dim, r * dim), sub_mut(up, lo * hidden, r * hidden)) };
+        block_fwd(w, &t_in[lo * dim..hi * dim], r, dim, hidden, t_sl, u_sl);
+    });
+}
+
+/// Merge per-shard partial accumulators into `acc` in ascending shard
+/// index — the fixed-order reduction every sharded accumulation kernel
+/// ends with. Returns the host seconds spent merging (reported through
+/// `RuntimeStats::shard_merge_time_s`).
+fn merge_partials(acc: &mut [f32], partials: &[f32], nshards: usize) -> f64 {
+    let len = acc.len();
+    assert!(partials.len() >= nshards * len);
+    let t0 = Instant::now();
+    for part in partials[..nshards * len].chunks_exact(len) {
+        for (a, p) in acc.iter_mut().zip(part.iter()) {
+            *a += *p;
+        }
+    }
+    t0.elapsed().as_secs_f64()
+}
+
+/// Row-sharded [`col_sum_acc`]: each shard folds its row range (rows
+/// ascending) into a zeroed partial, partials merge in shard order.
+/// `part` is scratch for `nshards · n` partial elements (zeroed here).
+/// Returns merge seconds. Single-shard plans degenerate to the direct
+/// kernel (no partial — bitwise the pre-shard behaviour).
+pub fn col_sum_acc_sharded(
+    pool: &ShardPool,
+    plan: ShardPlan,
+    acc: &mut [f32],
+    mat: &[f32],
+    rows: usize,
+    n: usize,
+    part: &mut [f32],
+) -> f64 {
+    assert_eq!(plan.rows(), rows);
+    assert_eq!(acc.len(), n);
+    assert_eq!(mat.len(), rows * n);
+    let ns = plan.nshards();
+    if ns <= 1 {
+        col_sum_acc(acc, mat, rows, n);
+        return 0.0;
+    }
+    let part = &mut part[..ns * n];
+    part.fill(0.0);
+    let pp = SendMut(part.as_mut_ptr());
+    pool.run(ns, &|s| {
+        let (lo, hi) = plan.range(s);
+        // SAFETY: shard `s` owns partial slot `s` exclusively.
+        let p = unsafe { sub_mut(pp, s * n, n) };
+        col_sum_acc(p, &mat[lo * n..hi * n], hi - lo, n);
+    });
+    merge_partials(acc, part, ns)
+}
+
+/// Row-sharded [`ger_acc_rows`]: per-shard rank-`r` partials (rows
+/// ascending within a shard), merged in shard order. `part` is scratch
+/// for `nshards · m · n` elements. Returns merge seconds.
+#[allow(clippy::too_many_arguments)]
+pub fn ger_acc_rows_sharded(
+    pool: &ShardPool,
+    plan: ShardPlan,
+    g: &mut [f32],
+    x: &[f32],
+    y: &[f32],
+    rows: usize,
+    m: usize,
+    n: usize,
+    part: &mut [f32],
+) -> f64 {
+    assert_eq!(plan.rows(), rows);
+    assert_eq!(g.len(), m * n);
+    assert_eq!(x.len(), rows * m);
+    assert_eq!(y.len(), rows * n);
+    let ns = plan.nshards();
+    if ns <= 1 {
+        ger_acc_rows(g, x, y, rows, m, n);
+        return 0.0;
+    }
+    let part = &mut part[..ns * m * n];
+    part.fill(0.0);
+    let pp = SendMut(part.as_mut_ptr());
+    pool.run(ns, &|s| {
+        let (lo, hi) = plan.range(s);
+        // SAFETY: shard `s` owns partial slot `s` exclusively.
+        let p = unsafe { sub_mut(pp, s * m * n, m * n) };
+        ger_acc_rows(p, &x[lo * m..hi * m], &y[lo * n..hi * n], hi - lo, m, n);
+    });
+    merge_partials(g, part, ns)
+}
+
+/// Row-sharded [`block_bwd`]: the token-gradient outputs (`d_in`, `du`)
+/// are row-disjoint and written directly; the parameter gradients fold
+/// into per-shard partials (zeroed slices of `gpart`, layout identical
+/// to `g_w`) merged into `g_w` in ascending shard index. `gpart` must
+/// hold at least `nshards · g_w.len()` elements. Returns merge seconds.
+#[allow(clippy::too_many_arguments)]
+pub fn block_bwd_sharded(
+    pool: &ShardPool,
+    plan: ShardPlan,
+    w: &[f32],
+    t_in: &[f32],
+    u: &[f32],
+    d_out: &[f32],
+    rows: usize,
+    dim: usize,
+    hidden: usize,
+    g_w: &mut [f32],
+    d_in: &mut [f32],
+    du: &mut [f32],
+    gpart: &mut [f32],
+) -> f64 {
+    assert_eq!(plan.rows(), rows);
+    assert_eq!(t_in.len(), rows * dim);
+    assert_eq!(u.len(), rows * hidden);
+    assert_eq!(d_out.len(), rows * dim);
+    assert_eq!(d_in.len(), rows * dim);
+    assert_eq!(du.len(), rows * hidden);
+    let ns = plan.nshards();
+    if ns <= 1 {
+        block_bwd(w, t_in, u, d_out, rows, dim, hidden, g_w, d_in, du);
+        return 0.0;
+    }
+    let wlen = g_w.len();
+    let gpart = &mut gpart[..ns * wlen];
+    gpart.fill(0.0);
+    let gp = SendMut(gpart.as_mut_ptr());
+    let dp = SendMut(d_in.as_mut_ptr());
+    let dup = SendMut(du.as_mut_ptr());
+    pool.run(ns, &|s| {
+        let (lo, hi) = plan.range(s);
+        let r = hi - lo;
+        // SAFETY: shard `s` owns partial slot `s` and row range
+        // `[lo, hi)` of d_in/du exclusively (sub_mut contract).
+        let (g_s, d_s, du_s) = unsafe {
+            (
+                sub_mut(gp, s * wlen, wlen),
+                sub_mut(dp, lo * dim, r * dim),
+                sub_mut(dup, lo * hidden, r * hidden),
+            )
+        };
+        block_bwd(
+            w,
+            &t_in[lo * dim..hi * dim],
+            &u[lo * hidden..hi * hidden],
+            &d_out[lo * dim..hi * dim],
+            r,
+            dim,
+            hidden,
+            g_s,
+            d_s,
+            du_s,
+        );
+    });
+    merge_partials(g_w, gpart, ns)
 }
 
 /// The pre-kernel-core scalar implementations, kept verbatim (made
@@ -947,6 +1352,248 @@ mod tests {
                         s += a[r * k + kk] * b[j * k + kk];
                     }
                     assert_eq!(got[r * n + j].to_bits(), s.to_bits(), "gemm_bt[{r},{j}]");
+                }
+            }
+        });
+    }
+
+    // ---- sharded-kernel invariance (tentpole test tier) ----------------
+
+    /// Pools shared across the property iterations (spawning threads per
+    /// forall case would dominate the test's runtime).
+    fn pools() -> Vec<ShardPool> {
+        // 1, 2, 3 and an "auto"-like count: every path (inline, fanned,
+        // more workers than shards) gets exercised.
+        [1usize, 2, 3, 8].iter().map(|&t| ShardPool::new(t)).collect()
+    }
+
+    /// Awkward plans: shard height 1, off the register block, equal to
+    /// the default, larger than any test row count (single shard).
+    const SHARD_HEIGHTS: [usize; 5] = [1, 3, 5, SHARD_ROWS, 10_000];
+
+    #[test]
+    fn plan_geometry_covers_rows_exactly_once() {
+        for rows in [0usize, 1, 3, 31, 32, 33, 128, 1024] {
+            for sh in SHARD_HEIGHTS {
+                let plan = ShardPlan::with_shard_rows(rows, sh);
+                let mut covered = 0;
+                for s in 0..plan.nshards() {
+                    let (lo, hi) = plan.range(s);
+                    assert_eq!(lo, covered, "ranges must be contiguous");
+                    assert!(hi > lo, "empty shard in plan rows={rows} sh={sh}");
+                    covered = hi;
+                }
+                assert_eq!(covered, rows, "plan must cover every row");
+                // Never more shards than rows.
+                assert!(plan.nshards() <= rows.max(1));
+            }
+        }
+        // The default plan is a pure function of the row count alone.
+        assert_eq!(ShardPlan::of(128).nshards(), 128 / SHARD_ROWS);
+        assert_eq!(ShardPlan::of(1), ShardPlan::of(1));
+    }
+
+    /// Row-disjoint kernels: sharded == direct, bitwise, for every plan
+    /// and every pool size — including n ∈ {1,3,5,8} batches, rows not
+    /// divisible by the shard height, and shard heights above the row
+    /// count (the "more shards than rows" degenerate collapses to 1).
+    #[test]
+    fn prop_sharded_row_disjoint_kernels_bitwise_match_direct() {
+        let pools = pools();
+        forall(0x5AD0, 12, |rng| {
+            let n = [1usize, 3, 5, 8][rng.uniform_usize(4)];
+            let tokens = 16usize;
+            let rows = n * tokens + rng.uniform_usize(3); // off the sample boundary too
+            let dim = 8 + rng.uniform_usize(12);
+            let hidden = 2 * dim;
+            let k = 1 + rng.uniform_usize(40);
+
+            let a = randv(rng, rows * k);
+            let w = randv(rng, k * dim);
+            let bias = randv(rng, dim);
+            let b_t = randv(rng, dim * k);
+            let seed = randv(rng, rows * dim);
+            let wb = randv(rng, dim * hidden + hidden + hidden * dim + dim);
+            let t_in = randv(rng, rows * dim);
+
+            let mut direct = vec![0.0f32; rows * dim];
+            gemm_bias(&a, &w, &bias, rows, k, dim, &mut direct);
+            let mut direct_bt = vec![0.0f32; rows * dim];
+            gemm_bt(&a, &b_t, Some(&seed), rows, k, dim, &mut direct_bt);
+            let mut dt = vec![0.0f32; rows * dim];
+            let mut dur = vec![0.0f32; rows * hidden];
+            block_fwd(&wb, &t_in, rows, dim, hidden, &mut dt, &mut dur);
+
+            for sh in SHARD_HEIGHTS {
+                let plan = ShardPlan::with_shard_rows(rows, sh);
+                for pool in &pools {
+                    let mut got = vec![0.0f32; rows * dim];
+                    gemm_bias_sharded(pool, plan, &a, &w, &bias, rows, k, dim, &mut got);
+                    assert_bits_eq(&got, &direct, "gemm_bias_sharded");
+
+                    let mut got = vec![0.0f32; rows * dim];
+                    gemm_bt_sharded(pool, plan, &a, &b_t, Some(&seed), rows, k, dim, &mut got);
+                    assert_bits_eq(&got, &direct_bt, "gemm_bt_sharded");
+
+                    let mut gt = vec![0.0f32; rows * dim];
+                    let mut gu = vec![0.0f32; rows * hidden];
+                    block_fwd_sharded(pool, plan, &wb, &t_in, rows, dim, hidden, &mut gt, &mut gu);
+                    assert_bits_eq(&gt, &dt, "block_fwd_sharded.t");
+                    assert_bits_eq(&gu, &dur, "block_fwd_sharded.u");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn prop_sharded_im2col_bitwise_matches_direct() {
+        let pools = pools();
+        forall(0x12C0, 8, |rng| {
+            let n = [1usize, 3, 5, 8][rng.uniform_usize(4)];
+            let (image, patch, channels) = (16usize, 4usize, 3usize);
+            let tokens = (image / patch) * (image / patch);
+            let pe = patch * patch * channels;
+            let x = randv(rng, n * image * image * channels);
+            let mut direct = vec![0.0f32; n * tokens * pe];
+            im2col(&x, n, image, patch, channels, &mut direct);
+            for sh in [1usize, 5, SHARD_ROWS, 10_000] {
+                let plan = ShardPlan::with_shard_rows(n * tokens, sh);
+                for pool in &pools {
+                    let mut got = vec![0.0f32; n * tokens * pe];
+                    im2col_sharded(pool, plan, &x, n, image, patch, channels, &mut got);
+                    assert_bits_eq(&got, &direct, "im2col_sharded");
+                }
+            }
+        });
+    }
+
+    /// Oracle for the sharded accumulators: fold each shard's row range
+    /// into a zeroed partial with the *direct* kernels (themselves
+    /// bitwise-pinned to the naive loops by the property tests above),
+    /// then add the partials in ascending shard order — exactly the
+    /// documented reduction. Every pool size must reproduce it bitwise,
+    /// which is the `--kernel-threads N ≡ 1` contract at the kernel
+    /// level.
+    #[test]
+    fn prop_sharded_accumulators_match_ordered_shard_fold_for_every_pool() {
+        let pools = pools();
+        forall(0xACC5, 10, |rng| {
+            let rows = 1 + rng.uniform_usize(140);
+            let m = 1 + rng.uniform_usize(24);
+            let n = 1 + rng.uniform_usize(20);
+            let x = randv(rng, rows * m);
+            let y = randv(rng, rows * n);
+            let g0 = randv(rng, m * n);
+            let acc0 = randv(rng, n);
+
+            for sh in SHARD_HEIGHTS {
+                let plan = ShardPlan::with_shard_rows(rows, sh);
+                let ns = plan.nshards();
+
+                // Ordered shard-fold oracle (scalar loops, rows ascending
+                // within a shard — same per-element order as the naive
+                // reference kernels).
+                let mut want_g = g0.clone();
+                let mut want_acc = acc0.clone();
+                if ns <= 1 {
+                    // Single-shard plans degenerate to the direct kernels.
+                    ger_acc_rows(&mut want_g, &x, &y, rows, m, n);
+                    col_sum_acc(&mut want_acc, &y, rows, n);
+                } else {
+                    for s in 0..ns {
+                        let (lo, hi) = plan.range(s);
+                        let mut pg = vec![0.0f32; m * n];
+                        ger_acc_rows(&mut pg, &x[lo * m..hi * m], &y[lo * n..hi * n], hi - lo, m, n);
+                        for (a, p) in want_g.iter_mut().zip(pg.iter()) {
+                            *a += *p;
+                        }
+                        let mut pa = vec![0.0f32; n];
+                        col_sum_acc(&mut pa, &y[lo * n..hi * n], hi - lo, n);
+                        for (a, p) in want_acc.iter_mut().zip(pa.iter()) {
+                            *a += *p;
+                        }
+                    }
+                }
+
+                let mut part = vec![0.0f32; ns.max(1) * m * n];
+                for pool in &pools {
+                    let mut got_g = g0.clone();
+                    ger_acc_rows_sharded(pool, plan, &mut got_g, &x, &y, rows, m, n, &mut part);
+                    assert_bits_eq(&got_g, &want_g, "ger_acc_rows_sharded");
+
+                    let mut got_acc = acc0.clone();
+                    col_sum_acc_sharded(pool, plan, &mut got_acc, &y, rows, n, &mut part);
+                    assert_bits_eq(&got_acc, &want_acc, "col_sum_acc_sharded");
+                }
+            }
+        });
+    }
+
+    /// The full block backward under sharding: token gradients are
+    /// bitwise the direct kernel's (row-disjoint); parameter gradients
+    /// match the ordered per-shard reference fold; and every pool size
+    /// agrees bitwise with every other.
+    #[test]
+    fn prop_sharded_block_bwd_matches_ordered_shard_fold() {
+        let pools = pools();
+        forall(0xB4D5, 8, |rng| {
+            let rows = [16usize, 48, 80, 128, 7, 33][rng.uniform_usize(6)];
+            let dim = 8 + rng.uniform_usize(8);
+            let hidden = 2 * dim;
+            let wlen = dim * hidden + hidden + hidden * dim + dim;
+            let w = randv(rng, wlen);
+            let t_in = randv(rng, rows * dim);
+            let mut t_out = vec![0.0f32; rows * dim];
+            let mut u = vec![0.0f32; rows * hidden];
+            block_fwd(&w, &t_in, rows, dim, hidden, &mut t_out, &mut u);
+            let d_out = randv(rng, rows * dim);
+            let g0 = randv(rng, wlen);
+
+            for sh in [1usize, 5, SHARD_ROWS, 10_000] {
+                let plan = ShardPlan::with_shard_rows(rows, sh);
+                let ns = plan.nshards();
+
+                // Ordered shard-fold oracle on the direct kernel.
+                let mut want_g = g0.clone();
+                let mut want_d = vec![0.0f32; rows * dim];
+                let mut du = vec![0.0f32; rows * hidden];
+                if ns <= 1 {
+                    block_bwd(&w, &t_in, &u, &d_out, rows, dim, hidden, &mut want_g, &mut want_d, &mut du);
+                } else {
+                    for s in 0..ns {
+                        let (lo, hi) = plan.range(s);
+                        let r = hi - lo;
+                        let mut pg = vec![0.0f32; wlen];
+                        let mut pdu = vec![0.0f32; r * hidden];
+                        block_bwd(
+                            &w,
+                            &t_in[lo * dim..hi * dim],
+                            &u[lo * hidden..hi * hidden],
+                            &d_out[lo * dim..hi * dim],
+                            r,
+                            dim,
+                            hidden,
+                            &mut pg,
+                            &mut want_d[lo * dim..hi * dim],
+                            &mut pdu,
+                        );
+                        for (a, p) in want_g.iter_mut().zip(pg.iter()) {
+                            *a += *p;
+                        }
+                    }
+                }
+
+                let mut gpart = vec![0.0f32; ns.max(1) * wlen];
+                for pool in &pools {
+                    let mut got_g = g0.clone();
+                    let mut got_d = vec![0.0f32; rows * dim];
+                    let mut got_du = vec![0.0f32; rows * hidden];
+                    block_bwd_sharded(
+                        pool, plan, &w, &t_in, &u, &d_out, rows, dim, hidden,
+                        &mut got_g, &mut got_d, &mut got_du, &mut gpart,
+                    );
+                    assert_bits_eq(&got_g, &want_g, "block_bwd_sharded.g_w");
+                    assert_bits_eq(&got_d, &want_d, "block_bwd_sharded.d_in");
                 }
             }
         });

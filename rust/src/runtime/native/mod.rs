@@ -24,9 +24,11 @@
 //!   share this geometry.
 //!
 //! Gradients are exact analytic backprop (verified against central
-//! differences in the tests below). Client-side encoder gradients are
-//! τ-clipped (τ = 0.5, paper §II-B) before they leave an op, matching
-//! the artifact contract; server-side gradients are returned raw.
+//! differences in the tests below). Client-side encoder gradients and
+//! the server-suffix gradient are τ-clipped (τ = 0.5, paper §II-B)
+//! before they leave an op, matching the artifact contract; classifier
+//! gradients and the activation gradient `g_z` are returned raw (see
+//! § Server-path stability below).
 //!
 //! # Compute core
 //!
@@ -47,17 +49,39 @@
 //! # Determinism
 //!
 //! Every op is a pure function of its inputs: fixed-order f32 loops, no
-//! threading, no hidden state, and the tiled kernels keep every
-//! per-output-element reduction in the exact fold order of the original
-//! scalar loops (see the [`kernels`] module docs), so outputs are
-//! **bit-identical** to the pre-kernel-core backend — the fp32 golden
-//! snapshots pin this. Arena buffers are zero-filled on checkout and
-//! fully overwritten by the kernels, so results never depend on buffer
-//! reuse history; two calls with the same inputs return bit-identical
-//! outputs on any thread — which is what lets the parallel round
-//! engine's `--threads N` invariance be asserted end to end. Per-client
-//! kernel work stays single-threaded, composing with the engine's
-//! per-client worker threads.
+//! hidden state, and the tiled kernels keep every per-output-element
+//! reduction in a fold order that is a pure function of the shape (see
+//! the [`kernels`] module docs). Arena buffers are zero-filled on
+//! checkout and fully overwritten by the kernels, so results never
+//! depend on buffer reuse history; two calls with the same inputs
+//! return bit-identical outputs on any thread — which is what lets the
+//! parallel round engine's `--threads N` invariance be asserted end to
+//! end.
+//!
+//! Intra-client parallelism (`--kernel-threads N` /
+//! `SUPERSFL_KERNEL_THREADS`) runs each hot kernel as fixed row-range
+//! shards on a per-backend [`pool::ShardPool`], with parameter-gradient
+//! partials merged in fixed shard-index order — so every op is
+//! **bitwise identical for every kernel-thread count** (the shard plan
+//! depends on the shape alone, never on the worker count). This
+//! composes with the round engine: the pool runs one job at a time and
+//! a busy pool makes the caller run its shards inline, so lanes never
+//! serialize on each other and `--threads`' bit-identity is untouched.
+//!
+//! # Server-path stability (τ on both sides)
+//!
+//! `client_local`/`client_bwd` τ-clip the encoder gradient before it
+//! leaves the op (τ = 0.5, paper §II-B). `server_step` applies the
+//! *same* clip to the server-suffix gradient: the residual blocks
+//! amplify unnormalized activations, and at the default
+//! `lr_server = 0.05` the unclipped suffix diverges within a few
+//! rounds (loss → 1e20; the pre-fix golden trajectories were
+//! near-chance noise). The server *classifier* gradient is returned
+//! raw — symmetric with the client's own raw `g_clf` — because the
+//! linear head does not self-amplify; its stability at fleet scale
+//! comes from the orchestrator's participant-normalized lane-delta
+//! merge (the "equivalent per-layer gradient scale" half of the fix —
+//! see `orchestrator::run_ssfl`).
 //!
 //! # What it does NOT model
 //!
@@ -69,6 +93,7 @@
 //! backends.
 
 pub mod kernels;
+pub mod pool;
 
 mod arena;
 
@@ -84,6 +109,8 @@ use crate::util::rng::Pcg32;
 use crate::{Error, Result};
 
 use arena::ScratchArena;
+use kernels::ShardPlan;
+use pool::ShardPool;
 
 // Fixed geometry of the reference model. Small on purpose: one client
 // step is a few MFLOPs, so whole simulated experiments finish in seconds.
@@ -112,6 +139,8 @@ pub struct NativeBackend {
     stats: Mutex<RuntimeStats>,
     /// Reusable scratch buffers for the exec hot path (module docs).
     arena: Mutex<ScratchArena>,
+    /// Worker pool for the sharded kernels (`--kernel-threads`).
+    pool: ShardPool,
 }
 
 impl Default for NativeBackend {
@@ -120,8 +149,40 @@ impl Default for NativeBackend {
     }
 }
 
+/// Resolve a `--kernel-threads` request to a concrete pool size: the
+/// `SUPERSFL_KERNEL_THREADS` env var wins (CI matrix legs pin it; an
+/// invalid value is a fail-fast panic, like the backend/wire overrides),
+/// then the config value; `0`/`auto` means all available cores. Results
+/// are bit-identical for every resolved value — this knob is pure
+/// throughput.
+pub fn resolve_kernel_threads(requested: usize) -> usize {
+    let requested = match std::env::var("SUPERSFL_KERNEL_THREADS") {
+        Ok(v) => match crate::config::parse_kernel_threads(&v) {
+            Ok(n) => n,
+            Err(e) => panic!("invalid SUPERSFL_KERNEL_THREADS value '{v}': {e}"),
+        },
+        Err(_) => requested,
+    };
+    if requested > 0 {
+        requested
+    } else {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    }
+}
+
 impl NativeBackend {
+    /// Default backend: kernel-thread count from `SUPERSFL_KERNEL_THREADS`
+    /// or all cores ([`resolve_kernel_threads`]).
     pub fn new() -> NativeBackend {
+        NativeBackend::with_kernel_threads(resolve_kernel_threads(0))
+    }
+
+    /// A backend with an explicit kernel-thread count (bypasses the env
+    /// override — the bit-identity tests pin 1-vs-N backends this way).
+    pub fn with_kernel_threads(threads: usize) -> NativeBackend {
+        let threads = threads.max(1);
         let mut enc_layer_sizes = vec![EMBED_SIZE + BLOCK_SIZE];
         enc_layer_sizes.extend(std::iter::repeat(BLOCK_SIZE).take(DEPTH - 1));
         NativeBackend {
@@ -139,9 +200,18 @@ impl NativeBackend {
                 channels: CHANNELS,
                 classes_variants: vec![10, 100],
             },
-            stats: Mutex::new(RuntimeStats::default()),
+            stats: Mutex::new(RuntimeStats {
+                kernel_threads: threads,
+                ..RuntimeStats::default()
+            }),
             arena: Mutex::new(ScratchArena::new()),
+            pool: ShardPool::new(threads),
         }
+    }
+
+    /// Cores the sharded kernels apply per exec call.
+    pub fn kernel_threads(&self) -> usize {
+        self.pool.threads()
     }
 
     fn check_classes(&self, c: usize) -> Result<()> {
@@ -294,6 +364,12 @@ struct Ws {
     d_tmp: Vec<f32>,
     /// Hidden-layer gradient staging `[rows · HIDDEN]`.
     du: Vec<f32>,
+    /// Per-shard parameter-gradient partials for the sharded backward
+    /// kernels: `nshards ·` (the largest per-layer gradient this op
+    /// accumulates — embed when the op owns one, else a block). Sized
+    /// by the shard plan, which is a pure function of the op shape, so
+    /// the arena's steady-state-zero-alloc contract is untouched.
+    gpart: Vec<f32>,
 }
 
 impl NativeBackend {
@@ -302,6 +378,8 @@ impl NativeBackend {
     /// op type.
     fn checkout(&self, n: usize, nblocks: usize, classes: usize, head: bool, bwd: bool, patches: bool) -> Ws {
         let rows = n * TOKENS;
+        let nshards = ShardPlan::of(rows).nshards();
+        let part_elems = if patches { EMBED_SIZE.max(BLOCK_SIZE) } else { BLOCK_SIZE };
         let mut a = self.arena.lock().expect("arena lock");
         Ws {
             patches: a.take(if patches { rows * PATCH_ELEMS } else { 0 }),
@@ -314,6 +392,7 @@ impl NativeBackend {
             d_cur: a.take(if bwd { rows * DIM } else { 0 }),
             d_tmp: a.take(if bwd { rows * DIM } else { 0 }),
             du: a.take(if bwd { rows * HIDDEN } else { 0 }),
+            gpart: a.take(if bwd { nshards * part_elems } else { 0 }),
         }
     }
 
@@ -329,23 +408,30 @@ impl NativeBackend {
         a.put(ws.d_cur);
         a.put(ws.d_tmp);
         a.put(ws.du);
+        a.put(ws.gpart);
     }
 
     /// Account compute time spent past the argument boundary (kernels +
-    /// arena checkout — the part an accelerator would own).
-    fn note_kernel_time(&self, t0: Instant) {
+    /// arena checkout — the part an accelerator would own) plus the
+    /// ordered shard-merge seconds this op accumulated.
+    fn note_kernel_time(&self, t0: Instant, merge_s: f64) {
         let dt = t0.elapsed().as_secs_f64();
-        self.stats.lock().expect("stats lock").kernel_time_s += dt;
+        let mut st = self.stats.lock().expect("stats lock");
+        st.kernel_time_s += dt;
+        st.shard_merge_time_s += merge_s;
     }
 }
 
-/// Embed + the first `nblocks` blocks, whole-batch: fills `ws.patches`,
-/// `ws.acts[0..=nblocks]` and `ws.hids`.
-fn forward_from_images(enc: &[f32], x: &[f32], n: usize, nblocks: usize, ws: &mut Ws) {
+/// Embed + the first `nblocks` blocks, whole-batch on the sharded
+/// kernels: fills `ws.patches`, `ws.acts[0..=nblocks]` and `ws.hids`.
+fn forward_from_images(pool: &ShardPool, enc: &[f32], x: &[f32], n: usize, nblocks: usize, ws: &mut Ws) {
     let rows = n * TOKENS;
-    kernels::im2col(x, n, IMAGE, PATCH, CHANNELS, &mut ws.patches);
+    let plan = ShardPlan::of(rows);
+    kernels::im2col_sharded(pool, plan, x, n, IMAGE, PATCH, CHANNELS, &mut ws.patches);
     let (w_e, b_e) = enc[..EMBED_SIZE].split_at(PATCH_ELEMS * DIM);
-    kernels::gemm_bias(
+    kernels::gemm_bias_sharded(
+        pool,
+        plan,
         &ws.patches,
         w_e,
         b_e,
@@ -354,12 +440,14 @@ fn forward_from_images(enc: &[f32], x: &[f32], n: usize, nblocks: usize, ws: &mu
         DIM,
         &mut ws.acts[..rows * DIM],
     );
-    blocks_forward(enc, EMBED_SIZE, nblocks, rows, &mut ws.acts, &mut ws.hids);
+    blocks_forward(pool, enc, EMBED_SIZE, nblocks, rows, &mut ws.acts, &mut ws.hids);
 }
 
 /// Forward through `nblocks` blocks of `params` (starting at `offset`),
-/// from the token states already in `acts[0]`.
+/// from the token states already in `acts[0]`. Row-sharded — bitwise
+/// identical to the unsharded pass for every kernel-thread count.
 fn blocks_forward(
+    pool: &ShardPool,
     params: &[f32],
     offset: usize,
     nblocks: usize,
@@ -367,21 +455,25 @@ fn blocks_forward(
     acts: &mut [f32],
     hids: &mut [f32],
 ) {
+    let plan = ShardPlan::of(rows);
     for l in 0..nblocks {
         let w = &params[offset + l * BLOCK_SIZE..][..BLOCK_SIZE];
         let (lo, hi) = acts.split_at_mut((l + 1) * rows * DIM);
         let t_in = &lo[l * rows * DIM..];
         let t_out = &mut hi[..rows * DIM];
         let u = &mut hids[l * rows * HIDDEN..][..rows * HIDDEN];
-        kernels::block_fwd(w, t_in, rows, DIM, HIDDEN, t_out, u);
+        kernels::block_fwd_sharded(pool, plan, w, t_in, rows, DIM, HIDDEN, t_out, u);
     }
 }
 
-/// Backward through the same blocks; accumulates into `g[offset..]`. On
+/// Backward through the same blocks; accumulates into `g[offset..]`
+/// through per-shard partials (`gpart`) merged in fixed shard order. On
 /// entry `d` holds `∂L/∂acts[nblocks]`; on return it holds
-/// `∂L/∂acts[0]` (`tmp` and `du` are scratch).
+/// `∂L/∂acts[0]` (`tmp` and `du` are scratch). Adds merge seconds into
+/// `merge_s`.
 #[allow(clippy::too_many_arguments)]
 fn blocks_backward(
+    pool: &ShardPool,
     params: &[f32],
     offset: usize,
     nblocks: usize,
@@ -392,10 +484,15 @@ fn blocks_backward(
     tmp: &mut Vec<f32>,
     du: &mut [f32],
     g: &mut [f32],
+    gpart: &mut [f32],
+    merge_s: &mut f64,
 ) {
+    let plan = ShardPlan::of(rows);
     for l in (0..nblocks).rev() {
         let w = &params[offset + l * BLOCK_SIZE..][..BLOCK_SIZE];
-        kernels::block_bwd(
+        *merge_s += kernels::block_bwd_sharded(
+            pool,
+            plan,
             w,
             &acts[l * rows * DIM..][..rows * DIM],
             &hids[l * rows * HIDDEN..][..rows * HIDDEN],
@@ -406,17 +503,28 @@ fn blocks_backward(
             &mut g[offset + l * BLOCK_SIZE..][..BLOCK_SIZE],
             &mut tmp[..],
             du,
+            gpart,
         );
         std::mem::swap(d, tmp);
     }
 }
 
 /// Patch-embed backward from the im2col matrix built in the forward pass
-/// (no per-(s,t) re-gather).
-fn embed_backward(patches: &[f32], d_tok: &[f32], rows: usize, g_embed: &mut [f32]) {
+/// (no per-(s,t) re-gather), sharded with ordered partial merges. Adds
+/// merge seconds into `merge_s`.
+fn embed_backward(
+    pool: &ShardPool,
+    patches: &[f32],
+    d_tok: &[f32],
+    rows: usize,
+    g_embed: &mut [f32],
+    gpart: &mut [f32],
+    merge_s: &mut f64,
+) {
+    let plan = ShardPlan::of(rows);
     let (gw, gb) = g_embed[..EMBED_SIZE].split_at_mut(PATCH_ELEMS * DIM);
-    kernels::col_sum_acc(gb, d_tok, rows, DIM);
-    kernels::ger_acc_rows(gw, patches, d_tok, rows, PATCH_ELEMS, DIM);
+    *merge_s += kernels::col_sum_acc_sharded(pool, plan, gb, d_tok, rows, DIM, gpart);
+    *merge_s += kernels::ger_acc_rows_sharded(pool, plan, gw, patches, d_tok, rows, PATCH_ELEMS, DIM, gpart);
 }
 
 // ---- op implementations ------------------------------------------------
@@ -438,9 +546,12 @@ impl NativeBackend {
 
         let t_k = Instant::now();
         let rows = BATCH * TOKENS;
+        let mut merge_s = 0.0f64;
         let mut ws = self.checkout(BATCH, d, c, true, true, true);
-        forward_from_images(enc, x, BATCH, d, &mut ws);
+        forward_from_images(&self.pool, enc, x, BATCH, d, &mut ws);
         let z = ws.acts[d * rows * DIM..][..rows * DIM].to_vec();
+        // Head ops stay unsharded: their row count is the batch (8/32),
+        // below any useful shard height.
         kernels::head_fwd(
             clf,
             c,
@@ -467,6 +578,7 @@ impl NativeBackend {
         );
         let mut g_enc = vec![0.0f32; enc.len()];
         blocks_backward(
+            &self.pool,
             enc,
             EMBED_SIZE,
             d,
@@ -477,11 +589,13 @@ impl NativeBackend {
             &mut ws.d_tmp,
             &mut ws.du,
             &mut g_enc,
+            &mut ws.gpart,
+            &mut merge_s,
         );
-        embed_backward(&ws.patches, &ws.d_cur, rows, &mut g_enc);
+        embed_backward(&self.pool, &ws.patches, &ws.d_cur, rows, &mut g_enc, &mut ws.gpart, &mut merge_s);
         math::clip_l2(&mut g_enc, TAU);
         self.checkin(ws);
-        self.note_kernel_time(t_k);
+        self.note_kernel_time(t_k, merge_s);
         Ok(vec![z, vec![loss], g_enc, g_clf])
     }
 
@@ -492,10 +606,10 @@ impl NativeBackend {
         let t_k = Instant::now();
         let rows = BATCH * TOKENS;
         let mut ws = self.checkout(BATCH, d, 0, false, false, true);
-        forward_from_images(enc, x, BATCH, d, &mut ws);
+        forward_from_images(&self.pool, enc, x, BATCH, d, &mut ws);
         let z = ws.acts[d * rows * DIM..][..rows * DIM].to_vec();
         self.checkin(ws);
-        self.note_kernel_time(t_k);
+        self.note_kernel_time(t_k, 0.0);
         Ok(vec![z])
     }
 
@@ -506,11 +620,13 @@ impl NativeBackend {
         let g_z = want_f32(name, "g_z", &args[2], BATCH * TOKENS * DIM)?;
         let t_k = Instant::now();
         let rows = BATCH * TOKENS;
+        let mut merge_s = 0.0f64;
         let mut ws = self.checkout(BATCH, d, 0, false, true, true);
-        forward_from_images(enc, x, BATCH, d, &mut ws);
+        forward_from_images(&self.pool, enc, x, BATCH, d, &mut ws);
         ws.d_cur.copy_from_slice(g_z);
         let mut g_enc = vec![0.0f32; enc.len()];
         blocks_backward(
+            &self.pool,
             enc,
             EMBED_SIZE,
             d,
@@ -521,11 +637,13 @@ impl NativeBackend {
             &mut ws.d_tmp,
             &mut ws.du,
             &mut g_enc,
+            &mut ws.gpart,
+            &mut merge_s,
         );
-        embed_backward(&ws.patches, &ws.d_cur, rows, &mut g_enc);
+        embed_backward(&self.pool, &ws.patches, &ws.d_cur, rows, &mut g_enc, &mut ws.gpart, &mut merge_s);
         math::clip_l2(&mut g_enc, TAU);
         self.checkin(ws);
-        self.note_kernel_time(t_k);
+        self.note_kernel_time(t_k, merge_s);
         Ok(vec![g_enc])
     }
 
@@ -545,9 +663,10 @@ impl NativeBackend {
 
         let t_k = Instant::now();
         let rows = BATCH * TOKENS;
+        let mut merge_s = 0.0f64;
         let mut ws = self.checkout(BATCH, nblocks, c, true, true, false);
         ws.acts[..rows * DIM].copy_from_slice(z);
-        blocks_forward(srv, 0, nblocks, rows, &mut ws.acts, &mut ws.hids);
+        blocks_forward(&self.pool, srv, 0, nblocks, rows, &mut ws.acts, &mut ws.hids);
         kernels::head_fwd(
             clf_s,
             c,
@@ -574,6 +693,7 @@ impl NativeBackend {
         );
         let mut g_srv = vec![0.0f32; srv.len()];
         blocks_backward(
+            &self.pool,
             srv,
             0,
             nblocks,
@@ -584,10 +704,19 @@ impl NativeBackend {
             &mut ws.d_tmp,
             &mut ws.du,
             &mut g_srv,
+            &mut ws.gpart,
+            &mut merge_s,
         );
+        // The server-suffix gradient gets the same τ-clip as the client
+        // encoder gradient (module docs § server-path stability): the
+        // residual suffix diverges within rounds at the default
+        // lr_server without it. `g_clf` stays raw (linear head, no
+        // self-amplification — symmetric with the client's raw g_clf);
+        // `g_z` stays raw because the client clips its own backprop.
+        math::clip_l2(&mut g_srv, TAU);
         let g_z = ws.d_cur[..].to_vec();
         self.checkin(ws);
-        self.note_kernel_time(t_k);
+        self.note_kernel_time(t_k, merge_s);
         Ok(vec![vec![loss], g_srv, g_clf, g_z])
     }
 
@@ -617,7 +746,7 @@ impl NativeBackend {
             lr as f64,
             TpgfMode::Full,
         );
-        self.note_kernel_time(t_k);
+        self.note_kernel_time(t_k, 0.0);
         Ok(vec![out])
     }
 
@@ -629,7 +758,7 @@ impl NativeBackend {
         let t_k = Instant::now();
         let rows = EVAL_BATCH * TOKENS;
         let mut ws = self.checkout(EVAL_BATCH, DEPTH, c, true, false, true);
-        forward_from_images(enc, x, EVAL_BATCH, DEPTH, &mut ws);
+        forward_from_images(&self.pool, enc, x, EVAL_BATCH, DEPTH, &mut ws);
         kernels::head_fwd(
             clf_s,
             c,
@@ -642,7 +771,7 @@ impl NativeBackend {
         );
         let logits = ws.logits[..].to_vec();
         self.checkin(ws);
-        self.note_kernel_time(t_k);
+        self.note_kernel_time(t_k, 0.0);
         Ok(vec![logits])
     }
 }
@@ -957,11 +1086,14 @@ mod tests {
         }
     }
 
-    /// The tentpole's bit-identity contract, end to end: every exec op
-    /// must reproduce — bit for bit — the composition of the pre-kernel
-    /// naive reference implementations it replaced (im2col+GEMM vs
-    /// per-(s,t) gathers, whole-batch tiled blocks vs row-at-a-time
-    /// loops, pooled scratch vs fresh `Vec`s).
+    /// The bit-identity contract, end to end: every exec op must
+    /// reproduce — bit for bit — the composition of the naive reference
+    /// implementations under the documented numeric semantics
+    /// (im2col+GEMM vs per-(s,t) gathers, whole-batch tiled blocks vs
+    /// row-at-a-time loops, pooled scratch vs fresh `Vec`s, and — since
+    /// the shard-reduction tentpole — parameter gradients folded per
+    /// fixed row-range shard and merged in ascending shard index, with
+    /// the server-suffix gradient τ-clipped on the way out).
     #[test]
     fn tiled_ops_match_naive_reference_composition_bitwise() {
         let b = be();
@@ -1003,7 +1135,12 @@ mod tests {
             }
             (acts, hids)
         }
-        // Reference backward through blocks (+ optional embed).
+        // Reference backward through blocks (+ optional embed), under
+        // the documented shard reduction: each shard's parameter
+        // gradients fold into a zeroed partial with the *naive*
+        // reference kernel, partials merge in ascending shard index.
+        // Single-shard plans degenerate to direct accumulation — both
+        // exactly what the sharded tiled kernels do.
         #[allow(clippy::too_many_arguments)]
         fn ref_backward(
             params: &[f32],
@@ -1016,24 +1153,75 @@ mod tests {
             n: usize,
         ) -> Vec<f32> {
             let rows = n * TOKENS;
+            let plan = kernels::ShardPlan::of(rows);
+            let ns = plan.nshards();
             let mut d = d_top;
             let mut d_next = vec![0.0f32; rows * DIM];
             for l in (0..nblocks).rev() {
                 let w = &params[offset + l * BLOCK_SIZE..][..BLOCK_SIZE];
-                reference::block_bwd(
-                    w,
-                    &acts[l],
-                    &hids[l],
-                    &d,
-                    rows,
-                    DIM,
-                    HIDDEN,
-                    &mut g[offset + l * BLOCK_SIZE..][..BLOCK_SIZE],
-                    &mut d_next,
-                );
+                let g_l = &mut g[offset + l * BLOCK_SIZE..][..BLOCK_SIZE];
+                if ns <= 1 {
+                    reference::block_bwd(w, &acts[l], &hids[l], &d, rows, DIM, HIDDEN, g_l, &mut d_next);
+                } else {
+                    for s in 0..ns {
+                        let (lo, hi) = plan.range(s);
+                        let mut pg = vec![0.0f32; BLOCK_SIZE];
+                        reference::block_bwd(
+                            w,
+                            &acts[l][lo * DIM..hi * DIM],
+                            &hids[l][lo * HIDDEN..hi * HIDDEN],
+                            &d[lo * DIM..hi * DIM],
+                            hi - lo,
+                            DIM,
+                            HIDDEN,
+                            &mut pg,
+                            &mut d_next[lo * DIM..hi * DIM],
+                        );
+                        for (a, p) in g_l.iter_mut().zip(pg.iter()) {
+                            *a += *p;
+                        }
+                    }
+                }
                 std::mem::swap(&mut d, &mut d_next);
             }
             d
+        }
+
+        // Embed backward under the same shard reduction. Shards of the
+        // default plan are sample-aligned (SHARD_ROWS is a multiple of
+        // TOKENS), so the per-(s,t) reference gather serves per shard.
+        fn ref_embed_bwd_sharded(x: &[f32], d0: &[f32], n: usize, g_enc: &mut [f32]) {
+            let rows = n * TOKENS;
+            let plan = kernels::ShardPlan::of(rows);
+            let ns = plan.nshards();
+            if ns <= 1 {
+                let (gw, gb) = g_enc[..EMBED_SIZE].split_at_mut(PATCH_ELEMS * DIM);
+                reference::embed_bwd(x, d0, n, IMAGE, PATCH, CHANNELS, DIM, gw, gb);
+                return;
+            }
+            assert_eq!(kernels::SHARD_ROWS % TOKENS, 0, "oracle needs sample-aligned shards");
+            for s in 0..ns {
+                let (lo, hi) = plan.range(s);
+                let (s_lo, s_hi) = (lo / TOKENS, hi / TOKENS);
+                let mut pg = vec![0.0f32; EMBED_SIZE];
+                {
+                    let (gw, gb) = pg.split_at_mut(PATCH_ELEMS * DIM);
+                    reference::embed_bwd(
+                        &x[s_lo * IMG_ELEMS..s_hi * IMG_ELEMS],
+                        &d0[lo * DIM..hi * DIM],
+                        s_hi - s_lo,
+                        IMAGE,
+                        PATCH,
+                        CHANNELS,
+                        DIM,
+                        gw,
+                        gb,
+                    );
+                }
+                for (a, p) in g_enc[..EMBED_SIZE].iter_mut().zip(pg.iter()) {
+                    *a += *p;
+                }
+            }
         }
 
         for d in [1usize, 4, 7] {
@@ -1055,10 +1243,7 @@ mod tests {
             reference::head_bwd(&clf, c, &pooled, &dlog, BATCH, TOKENS, DIM, &mut g_clf, &mut d_tok);
             let mut g_enc = vec![0.0f32; enc_d.len()];
             let d0 = ref_backward(enc_d, EMBED_SIZE, d, &acts, &hids, d_tok, &mut g_enc, BATCH);
-            {
-                let (gw, gb) = g_enc[..EMBED_SIZE].split_at_mut(PATCH_ELEMS * DIM);
-                reference::embed_bwd(&x, &d0, BATCH, IMAGE, PATCH, CHANNELS, DIM, gw, gb);
-            }
+            ref_embed_bwd_sharded(&x, &d0, BATCH, &mut g_enc);
             math::clip_l2(&mut g_enc, TAU);
             let expect = [acts[d].clone(), vec![loss], g_enc, g_clf];
             for (i, (gv, ev)) in got.iter().flatten().zip(expect.iter().flatten()).enumerate() {
@@ -1085,6 +1270,8 @@ mod tests {
             reference::head_bwd(&clf_s, c, &pooled_s, &dlog_s, BATCH, TOKENS, DIM, &mut g_clf_s, &mut d_tok_s);
             let mut g_srv = vec![0.0f32; srv.len()];
             let g_z = ref_backward(srv, 0, nblocks, &acts_s, &hids_s, d_tok_s, &mut g_srv, BATCH);
+            // The op τ-clips the suffix gradient on the way out.
+            math::clip_l2(&mut g_srv, TAU);
             let expect_s = [vec![loss_s], g_srv, g_clf_s, g_z];
             for (i, (gv, ev)) in got_s.iter().flatten().zip(expect_s.iter().flatten()).enumerate() {
                 assert_eq!(gv.to_bits(), ev.to_bits(), "server_step_d{d} elem {i}");
@@ -1268,6 +1455,41 @@ mod tests {
         }
         let eps = 1e-3f32;
         let mut checked = 0;
+        // g_srv is τ-clipped on the way out: the analytic coordinates
+        // are the raw gradient (which the central differences measure)
+        // scaled by one common factor s = min(1, τ/‖g_raw‖). Verify the
+        // proportionality — a single consistent s ∈ (0, 1] across
+        // coordinates — instead of raw equality, and pin s ≈ 1 when the
+        // clip provably did not engage (returned norm strictly inside
+        // the τ-ball).
+        let mut scales = Vec::new();
+        for i in top_idx(g_srv, 3) {
+            let mut p = srv.clone();
+            p[i] += eps;
+            let up = loss_of(&p, &clf_s, &z);
+            p[i] -= 2.0 * eps;
+            let dn = loss_of(&p, &clf_s, &z);
+            let numeric = (up - dn) / (2.0 * eps as f64);
+            assert!(numeric.abs() > 1e-6, "picked a degenerate coordinate");
+            scales.push(g_srv[i] as f64 / numeric);
+        }
+        for &s in &scales {
+            // ≤ 1 up to the central-difference noise (≈ the same 8%
+            // tolerance the raw comparisons use).
+            assert!(s > 0.0 && s <= 1.08, "clip scale out of range: {s} ({scales:?})");
+        }
+        let (smin, smax) = scales
+            .iter()
+            .fold((f64::INFINITY, 0.0f64), |(lo, hi), &s| (lo.min(s), hi.max(s)));
+        assert!(
+            (smax - smin) / smax < 0.08,
+            "clip must scale every coordinate identically: {scales:?}"
+        );
+        if math::l2_norm(g_srv) < TAU * 0.999 {
+            assert!((smax - 1.0).abs() < 0.08, "no clip ⇒ scale 1, got {scales:?}");
+        }
+        checked += scales.len();
+        // g_clf_s and g_z leave the op raw: direct comparison.
         let mut check = |analytic: f32, numeric: f64| {
             let a = analytic as f64;
             let denom = a.abs().max(numeric.abs()).max(1e-3);
@@ -1277,14 +1499,6 @@ mod tests {
             );
             checked += 1;
         };
-        for i in top_idx(g_srv, 3) {
-            let mut p = srv.clone();
-            p[i] += eps;
-            let up = loss_of(&p, &clf_s, &z);
-            p[i] -= 2.0 * eps;
-            let dn = loss_of(&p, &clf_s, &z);
-            check(g_srv[i], (up - dn) / (2.0 * eps as f64));
-        }
         for i in top_idx(g_clf, 2) {
             let mut p = clf_s.clone();
             p[i] += eps;
@@ -1302,6 +1516,136 @@ mod tests {
             check(g_z[i], (up - dn) / (2.0 * eps as f64));
         }
         assert_eq!(checked, 7);
+    }
+
+    /// The headline server-path fix: the suffix gradient must respect
+    /// the same τ-ball the client encoder gradient does, while the
+    /// (linear, non-amplifying) server classifier gradient stays raw —
+    /// large inputs prove the clip engages and that the classifier is
+    /// deliberately not throttled by it.
+    #[test]
+    fn server_suffix_gradient_is_tau_clipped_classifier_stays_raw() {
+        let b = be();
+        let m = b.model().clone();
+        let enc: Vec<f32> = b
+            .load_init("init_enc_c10")
+            .unwrap()
+            .iter()
+            .map(|v| v * 3.0)
+            .collect();
+        let clf_s: Vec<f32> = b
+            .load_init("init_clf_s_c10")
+            .unwrap()
+            .iter()
+            .map(|v| v * 5.0)
+            .collect();
+        let (x, y) = sample_batch(BATCH, 10, 4);
+        let x: Vec<f32> = x.iter().map(|v| v * 4.0).collect();
+        for d in [1usize, 4, 7] {
+            let z = b
+                .exec(
+                    &format!("client_fwd_d{d}"),
+                    &[Arg::F32(&enc[..m.enc_size(d)]), Arg::F32(&x)],
+                )
+                .unwrap()
+                .remove(0);
+            let out = b
+                .exec(
+                    &format!("server_step_d{d}_c10"),
+                    &[
+                        Arg::F32(&enc[m.enc_size(d)..]),
+                        Arg::F32(&clf_s),
+                        Arg::F32(&z),
+                        Arg::I32(&y),
+                    ],
+                )
+                .unwrap();
+            assert!(
+                math::l2_norm(&out[1]) <= TAU + 1e-4,
+                "d={d}: suffix gradient escaped the τ-ball"
+            );
+            assert!(
+                math::l2_norm(&out[2]) > TAU,
+                "d={d}: scaled-up inputs must drive the raw classifier gradient \
+                 past τ — if this fails the clip was wrongly applied to it"
+            );
+        }
+    }
+
+    /// The tentpole's end-to-end contract at the backend boundary: every
+    /// exec op must be bitwise identical across kernel-thread counts
+    /// (the shard plan is a pure function of the shape, so the worker
+    /// count can only move work, never results).
+    #[test]
+    fn exec_outputs_bitwise_invariant_across_kernel_thread_counts() {
+        let base = NativeBackend::with_kernel_threads(1);
+        let m = base.model().clone();
+        let enc = base.load_init("init_enc_c10").unwrap();
+        let clf = base.load_init("init_clf_client_c10").unwrap();
+        let clf_s = base.load_init("init_clf_s_c10").unwrap();
+        let (x, y) = sample_batch(BATCH, 10, 8);
+        let (xe, _) = sample_batch(EVAL_BATCH, 10, 9);
+        let run_all = |b: &NativeBackend| -> Vec<Vec<Vec<f32>>> {
+            let mut outs = Vec::new();
+            for d in [1usize, 4, 7] {
+                let local = b
+                    .exec(
+                        &format!("client_local_d{d}_c10"),
+                        &[
+                            Arg::F32(&enc[..m.enc_size(d)]),
+                            Arg::F32(&clf),
+                            Arg::F32(&x),
+                            Arg::I32(&y),
+                        ],
+                    )
+                    .unwrap();
+                let srv = b
+                    .exec(
+                        &format!("server_step_d{d}_c10"),
+                        &[
+                            Arg::F32(&enc[m.enc_size(d)..]),
+                            Arg::F32(&clf_s),
+                            Arg::F32(&local[0]),
+                            Arg::I32(&y),
+                        ],
+                    )
+                    .unwrap();
+                let bwd = b
+                    .exec(
+                        &format!("client_bwd_d{d}"),
+                        &[
+                            Arg::F32(&enc[..m.enc_size(d)]),
+                            Arg::F32(&x),
+                            Arg::F32(&srv[3]),
+                        ],
+                    )
+                    .unwrap();
+                outs.push(local);
+                outs.push(srv);
+                outs.push(bwd);
+            }
+            outs.push(
+                b.exec("eval_c10", &[Arg::F32(&enc), Arg::F32(&clf_s), Arg::F32(&xe)])
+                    .unwrap(),
+            );
+            outs
+        };
+        let want = run_all(&base);
+        for threads in [2usize, 3, 8] {
+            let b = NativeBackend::with_kernel_threads(threads);
+            let got = run_all(&b);
+            for (op, (w, g)) in want.iter().zip(got.iter()).enumerate() {
+                for (t, (wv, gv)) in w.iter().zip(g.iter()).enumerate() {
+                    for (i, (a, c)) in wv.iter().zip(gv.iter()).enumerate() {
+                        assert_eq!(
+                            a.to_bits(),
+                            c.to_bits(),
+                            "kernel_threads={threads} op#{op} tensor#{t} elem {i}"
+                        );
+                    }
+                }
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,353 @@
+//! A small persistent worker pool for the native backend's sharded
+//! kernels.
+//!
+//! # Why not `std::thread::scope` per kernel call?
+//!
+//! A sharded kernel call is tens-to-hundreds of microseconds of work;
+//! spawning OS threads per call would eat the speedup. The pool keeps
+//! `threads − 1` workers parked on a condvar and hands them one *job*
+//! (a shard-indexed closure) at a time; the calling thread participates
+//! in the same shard-claim loop, so a pool of size N applies N cores to
+//! a job.
+//!
+//! # Determinism
+//!
+//! The pool never influences results. A job is a set of independent
+//! shards (fixed row ranges — see [`super::kernels::ShardPlan`]); which
+//! thread executes which shard is scheduling noise, and every ordered
+//! reduction (the partial-buffer merges) happens on the caller's thread
+//! *after* [`ShardPool::run`] returns. `--kernel-threads 1` executes the
+//! same shards inline in ascending order — bit-identical by
+//! construction, asserted by the kernel property tests and the e2e
+//! golden invariance test.
+//!
+//! # Composition with the round engine
+//!
+//! One pool is owned per backend and shared by every round-engine lane.
+//! The pool runs **one job at a time**: if a lane calls [`ShardPool::run`]
+//! while another lane's job is in flight, the caller simply executes all
+//! of its shards inline — identical results, no cross-lane
+//! serialization, no queueing. When `--threads` already saturates the
+//! host with client lanes the pool therefore degrades gracefully to the
+//! old single-threaded-per-client behaviour, and the 1-client /
+//! eval-heavy paths (where only one lane is active) get the full pool.
+//!
+//! # Allocation
+//!
+//! The hot path ([`ShardPool::run`]) performs zero heap allocations —
+//! the job slot is a fixed-size `Option` behind the pool mutex and the
+//! task closure is passed by reference — preserving the arena's
+//! zero-steady-state-allocation contract.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// One in-flight job: a type-erased borrow of the caller's shard closure
+/// plus the claim/completion counters. The raw pointer is what lets a
+/// stack-borrowed closure cross into long-lived worker threads; see the
+/// safety argument on [`ShardPool::run`].
+struct Job {
+    task: *const (dyn Fn(usize) + Sync),
+    /// Next shard index to claim.
+    next: usize,
+    nshards: usize,
+    /// Shards fully executed (incremented strictly after the shard's
+    /// closure call returns).
+    done: usize,
+    /// A shard closure panicked (re-raised on the caller).
+    panicked: bool,
+}
+
+// SAFETY: the pointee is `Sync` (shared-reference calls from any thread
+// are fine) and `ShardPool::run` does not return until `done == nshards`,
+// i.e. until every dereference of `task` has happened-before (via the
+// pool mutex) the caller's return — so the borrow never outlives the
+// closure it points to. Workers copy the pointer but never dereference
+// it outside their claimed shard's execution window.
+unsafe impl Send for Job {}
+
+#[derive(Default)]
+struct State {
+    job: Option<Job>,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Workers park here waiting for a job with unclaimed shards.
+    work: Condvar,
+    /// The caller parks here waiting for `done == nshards`.
+    idle: Condvar,
+}
+
+/// The per-backend worker pool (module docs). `new(1)` spawns no workers
+/// and runs every job inline.
+pub struct ShardPool {
+    threads: usize,
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ShardPool {
+    /// A pool applying `threads` cores per job (the calling thread plus
+    /// `threads − 1` spawned workers). `threads` is clamped to ≥ 1.
+    pub fn new(threads: usize) -> ShardPool {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State::default()),
+            work: Condvar::new(),
+            idle: Condvar::new(),
+        });
+        let workers = (1..threads)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("ssfl-kernel-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawn kernel worker")
+            })
+            .collect();
+        ShardPool {
+            threads,
+            shared,
+            workers,
+        }
+    }
+
+    /// Cores this pool applies per job (the `--kernel-threads` value).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Execute `task(s)` for every shard `s < nshards`, fanned across the
+    /// pool. Returns only after every shard has finished. Shards must be
+    /// independent (they are: fixed disjoint row ranges); execution order
+    /// is unspecified and must not affect results.
+    ///
+    /// Runs inline (ascending order, caller thread) when the pool has no
+    /// workers, the job is a single shard, or another job is already in
+    /// flight — all three produce bit-identical results to the fanned-out
+    /// path because shards never communicate.
+    ///
+    /// Panics from shard closures are caught on the worker and re-raised
+    /// here once the job has fully drained, so a panicking kernel can
+    /// never leave the pool wedged.
+    pub fn run(&self, nshards: usize, task: &(dyn Fn(usize) + Sync)) {
+        if nshards == 0 {
+            return;
+        }
+        if self.workers.is_empty() || nshards == 1 {
+            for s in 0..nshards {
+                task(s);
+            }
+            return;
+        }
+        {
+            let mut st = self.shared.state.lock().expect("pool lock");
+            if st.job.is_some() {
+                // Another lane's job is in flight: run inline (module
+                // docs — graceful degradation under the round engine).
+                drop(st);
+                for s in 0..nshards {
+                    task(s);
+                }
+                return;
+            }
+            // SAFETY: lifetime erasure of `task` into the job slot. The
+            // loop below does not leave this function until
+            // `done == nshards`, which (through the mutex) happens after
+            // every worker's final use of the pointer — the borrow is
+            // live for every dereference. See `unsafe impl Send for Job`.
+            st.job = Some(Job {
+                task: task as *const (dyn Fn(usize) + Sync),
+                next: 0,
+                nshards,
+                done: 0,
+                panicked: false,
+            });
+            self.shared.work.notify_all();
+        }
+        // Participate in the claim loop, then wait for stragglers.
+        let panicked = loop {
+            let mut st = self.shared.state.lock().expect("pool lock");
+            let job = st.job.as_mut().expect("job in flight");
+            if job.next < job.nshards {
+                let s = job.next;
+                job.next += 1;
+                drop(st);
+                let r = catch_unwind(AssertUnwindSafe(|| task(s)));
+                let mut st = self.shared.state.lock().expect("pool lock");
+                let job = st.job.as_mut().expect("job in flight");
+                job.done += 1;
+                if r.is_err() {
+                    job.panicked = true;
+                }
+                continue;
+            }
+            while st.job.as_ref().expect("job in flight").done < nshards {
+                st = self.shared.idle.wait(st).expect("pool lock");
+            }
+            let panicked = st.job.as_ref().expect("job in flight").panicked;
+            st.job = None;
+            break panicked;
+        };
+        if panicked {
+            panic!("a sharded-kernel worker panicked (see stderr for the shard's panic)");
+        }
+    }
+}
+
+impl Drop for ShardPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().expect("pool lock");
+            st.shutdown = true;
+            self.shared.work.notify_all();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    loop {
+        let (task, s) = {
+            let mut st = shared.state.lock().expect("pool lock");
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                // Claim in a scope of its own so the job borrow is dead
+                // before the guard is moved into `Condvar::wait`.
+                let claim = match st.job.as_mut() {
+                    Some(job) if job.next < job.nshards => {
+                        let s = job.next;
+                        job.next += 1;
+                        Some((job.task, s))
+                    }
+                    _ => None,
+                };
+                match claim {
+                    Some(c) => break c,
+                    None => st = shared.work.wait(st).expect("pool lock"),
+                }
+            }
+        };
+        // SAFETY: `task` points at the closure borrowed by the `run`
+        // call that installed this job; `run` cannot return before this
+        // shard's `done` increment below (mutex-ordered), so the
+        // reference is live for the whole call.
+        let task_ref: &(dyn Fn(usize) + Sync) = unsafe { &*task };
+        let r = catch_unwind(AssertUnwindSafe(|| task_ref(s)));
+        let mut st = shared.state.lock().expect("pool lock");
+        let job = st
+            .job
+            .as_mut()
+            .expect("job cleared while its shards were running");
+        job.done += 1;
+        if r.is_err() {
+            job.panicked = true;
+        }
+        if job.done == job.nshards {
+            shared.idle.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn every_shard_runs_exactly_once_for_any_thread_count() {
+        for threads in [1usize, 2, 3, 8] {
+            let pool = ShardPool::new(threads);
+            for nshards in [0usize, 1, 2, 7, 64] {
+                let hits: Vec<AtomicUsize> =
+                    (0..nshards).map(|_| AtomicUsize::new(0)).collect();
+                pool.run(nshards, &|s| {
+                    hits[s].fetch_add(1, Ordering::SeqCst);
+                });
+                assert!(
+                    hits.iter().all(|h| h.load(Ordering::SeqCst) == 1),
+                    "threads={threads} nshards={nshards}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn nested_run_from_a_shard_falls_back_inline_without_deadlock() {
+        let pool = ShardPool::new(3);
+        let outer = AtomicUsize::new(0);
+        let inner = AtomicUsize::new(0);
+        pool.run(4, &|_| {
+            outer.fetch_add(1, Ordering::SeqCst);
+            // The pool's job slot is occupied by the outer job, so this
+            // must run inline on the current thread.
+            pool.run(5, &|_| {
+                inner.fetch_add(1, Ordering::SeqCst);
+            });
+        });
+        assert_eq!(outer.load(Ordering::SeqCst), 4);
+        assert_eq!(inner.load(Ordering::SeqCst), 20);
+    }
+
+    #[test]
+    fn concurrent_callers_both_complete() {
+        let pool = ShardPool::new(4);
+        let a = AtomicUsize::new(0);
+        let b = AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            scope.spawn(|| {
+                for _ in 0..50 {
+                    pool.run(8, &|_| {
+                        a.fetch_add(1, Ordering::SeqCst);
+                    });
+                }
+            });
+            scope.spawn(|| {
+                for _ in 0..50 {
+                    pool.run(8, &|_| {
+                        b.fetch_add(1, Ordering::SeqCst);
+                    });
+                }
+            });
+        });
+        assert_eq!(a.load(Ordering::SeqCst), 400);
+        assert_eq!(b.load(Ordering::SeqCst), 400);
+    }
+
+    #[test]
+    fn shard_panic_propagates_and_pool_stays_usable() {
+        let pool = ShardPool::new(3);
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run(6, &|s| {
+                if s == 3 {
+                    panic!("shard 3 boom");
+                }
+            });
+        }));
+        assert!(r.is_err(), "shard panic must re-raise on the caller");
+        // The pool must have drained the job and still work.
+        let ok = AtomicUsize::new(0);
+        pool.run(6, &|_| {
+            ok.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(ok.load(Ordering::SeqCst), 6);
+    }
+
+    #[test]
+    fn threads_clamp_to_at_least_one() {
+        let pool = ShardPool::new(0);
+        assert_eq!(pool.threads(), 1);
+        let n = AtomicUsize::new(0);
+        pool.run(3, &|_| {
+            n.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(n.load(Ordering::SeqCst), 3);
+    }
+}

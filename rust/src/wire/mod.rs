@@ -313,6 +313,83 @@ mod tests {
         assert!(dec.data.iter().all(|&v| (v - 1.0).abs() < 1e-6));
     }
 
+    /// The orchestrator prices a response frame **before the response
+    /// tensor exists** (`frame_len(msg, elems)` feeds the exchange
+    /// timeout roll, and the round loop now fails loudly if the encoded
+    /// ActGrad frame deviates from the priced size). That is only sound
+    /// if the frame length is a pure function of `(msg type, elems)` —
+    /// never of the tensor's values. Pinned here for fp32/fp16/int8
+    /// across all message types and randomized value distributions
+    /// (zeros, huge magnitudes, duplicates — anything a size-adaptive
+    /// encoding would latch onto).
+    ///
+    /// topk is covered too, with one documented exemption: its length
+    /// is still value-independent — the kept-entry count is
+    /// `max(1, ⌊n·k/100⌋)`, a function of `n` alone, *not* of how many
+    /// entries are nonzero — but unlike the other codecs it is **not**
+    /// message-type-independent: the policy sparsifies activation
+    /// frames while parameter frames fall back to int8, so
+    /// `frame_len(Smashed, n) ≠ frame_len(Broadcast, n)`. The msg type
+    /// must therefore stay part of the pricing key (which is exactly
+    /// the signature `frame_len` has).
+    #[test]
+    fn frame_len_is_a_pure_function_of_msg_type_and_elems() {
+        let msgs = [
+            MsgType::Smashed,
+            MsgType::ActGrad,
+            MsgType::PrefixUpload,
+            MsgType::Broadcast,
+        ];
+        forall(0xF1E7, 25, |rng| {
+            let n = 1 + rng.uniform_usize(400);
+            // Three adversarial value distributions of the same length.
+            let plain: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let huge: Vec<f32> = (0..n).map(|_| (rng.normal() * 1e30) as f32).collect();
+            let sparse: Vec<f32> = (0..n)
+                .map(|i| if i % 7 == 0 { rng.normal() as f32 } else { 0.0 })
+                .collect();
+            for kind in [WireCodecKind::Fp32, WireCodecKind::Fp16, WireCodecKind::Int8] {
+                let w = Wire::new(kind);
+                for &msg in &msgs {
+                    let want = w.frame_len(msg, n);
+                    for data in [&plain, &huge, &sparse] {
+                        assert_eq!(
+                            w.encode(msg, data, 0.0).len() as u64,
+                            want,
+                            "{}: frame length must not depend on values",
+                            w.label()
+                        );
+                    }
+                    // These codecs are also message-class-independent:
+                    // the same codec serves activations and parameters.
+                    assert_eq!(want, w.frame_len(MsgType::Smashed, n), "{}", w.label());
+                }
+            }
+            // topk: value-independent per message type (the count word is
+            // a function of n alone)…
+            let w = Wire::new(WireCodecKind::TopK(10));
+            for &msg in &msgs {
+                let want = w.frame_len(msg, n);
+                for data in [&plain, &huge, &sparse] {
+                    assert_eq!(w.encode(msg, data, 0.0).len() as u64, want, "topk");
+                }
+            }
+            // …but NOT message-class-independent (the documented
+            // exemption): activation frames sparsify, parameter frames
+            // quantize, so the same n prices differently per class.
+            // (n = 4 is the one accidental coincidence: a 1-entry topk
+            // payload (4+8 bytes) equals an int8 one (8+4 bytes).)
+            if n != 4 {
+                assert_ne!(
+                    w.frame_len(MsgType::Smashed, n),
+                    w.frame_len(MsgType::Broadcast, n),
+                    "topk act/param frame lengths coincided at n={n} — the \
+                     msg type must stay part of the pricing key"
+                );
+            }
+        });
+    }
+
     #[test]
     fn lossy_frame_lens_beat_fp32_by_the_expected_factors() {
         let n = 4096;

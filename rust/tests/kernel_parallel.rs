@@ -1,0 +1,77 @@
+//! End-to-end bit-identity of intra-client kernel parallelism: a full
+//! multi-round SSFL run must produce identical metrics — bit for bit —
+//! for every `--kernel-threads` value, because the shard plan is a pure
+//! function of each kernel's shape and partial merges happen in fixed
+//! shard order (see `runtime::native::kernels`). This is the e2e leg of
+//! the tentpole's test tier; the kernel-level property tests live next
+//! to the kernels, and CI additionally cross-checks the golden snapshot
+//! between `SUPERSFL_KERNEL_THREADS=1` and `=3` legs.
+
+use supersfl::config::ExperimentConfig;
+use supersfl::orchestrator::run_experiment;
+use supersfl::runtime::Runtime;
+use supersfl::util::json::JsonValue;
+
+fn cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default()
+        .with_name("kernel_parallel")
+        .with_clients(5)
+        .with_rounds(2)
+        .with_seed(7)
+        .with_threads(2);
+    cfg.data.train_per_class = 20;
+    cfg.data.test_total = 100;
+    cfg.data.noise = 0.4;
+    cfg.train.local_steps = 2;
+    cfg.train.eval_samples = 100;
+    cfg
+}
+
+/// Strip the wall-clock field (the only legitimately nondeterministic
+/// one) and render; everything left must match byte for byte.
+fn canonical(mut v: JsonValue) -> String {
+    if let JsonValue::Object(entries) = &mut v {
+        entries.retain(|(k, _)| k != "host_wall_s");
+    }
+    v.to_string_pretty()
+}
+
+#[test]
+fn golden_trajectory_is_invariant_across_kernel_thread_counts() {
+    let run = |threads: usize| {
+        let rt = Runtime::native_with_kernel_threads(threads);
+        let res = run_experiment(&rt, &cfg()).unwrap();
+        (canonical(res.metrics.to_json()), res.depths, rt.stats())
+    };
+    let (want, want_depths, st1) = run(1);
+    assert_eq!(st1.kernel_threads, 1);
+    for threads in [2usize, 3, 8] {
+        let (got, depths, st) = run(threads);
+        assert_eq!(st.kernel_threads, threads);
+        assert_eq!(depths, want_depths, "threads={threads}");
+        assert_eq!(
+            got, want,
+            "kernel_threads={threads} moved the golden trajectory — the shard \
+             reduction leaked thread-count dependence"
+        );
+    }
+}
+
+/// `--kernel-threads` composes with the round engine's `--threads`: the
+/// cross product must still be one trajectory.
+#[test]
+fn kernel_threads_compose_with_engine_threads() {
+    let run = |engine: usize, kernel: usize| {
+        let rt = Runtime::native_with_kernel_threads(kernel);
+        let c = cfg().with_threads(engine);
+        canonical(run_experiment(&rt, &c).unwrap().metrics.to_json())
+    };
+    let want = run(1, 1);
+    for (engine, kernel) in [(1, 3), (4, 1), (4, 3), (3, 8)] {
+        assert_eq!(
+            run(engine, kernel),
+            want,
+            "threads={engine} × kernel_threads={kernel} diverged"
+        );
+    }
+}
