@@ -62,6 +62,8 @@ struct DflClientLane<'a> {
     /// Prefix length of this client's current split (into the backbone).
     cut: usize,
     srv_time: f64,
+    /// Local steps this round (truncated by a mid-round crash).
+    steps: usize,
     net: NetLane,
     ledger: RoundLedger,
 }
@@ -101,9 +103,50 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
     // per-step frames inside the fan-out use each member's own lane
     // scratch).
     let mut bar_scratch = WireScratch::default();
+    // Identical fault schedule to SuperSFL (shared lane streams + churn
+    // windows); DFL has no quorum concept or local fallback.
+    let fc = h.cfg.net.faults.clone();
 
     for round in 1..=h.cfg.train.rounds {
+        let round_u = round as u64;
         h.net.begin_round();
+
+        // ---- Churn: dead clients sit out; rejoiners resync first ----
+        let mut resync_t = vec![0.0f64; n];
+        let mut any_resync = false;
+        for ci in 0..n {
+            if fc.is_down(round_u, ci) {
+                h.clients[ci].begin_round();
+                h.clients[ci].missed_rounds += 1;
+                continue;
+            }
+            if h.clients[ci].missed_rounds > 0 {
+                let prefix_elems = h.clients[ci].enc.len();
+                let frame_len = h
+                    .wire
+                    .encode_to(
+                        MsgType::Broadcast,
+                        &h.server.enc[..prefix_elems],
+                        0.0,
+                        &mut bar_scratch,
+                    )
+                    .len() as u64;
+                let dec = h.wire.decode(&bar_scratch.frame)?;
+                resync_t[ci] = h.net.bulk_down_framed(
+                    ci,
+                    Framed {
+                        wire: frame_len,
+                        raw: (prefix_elems * 4) as u64,
+                    },
+                );
+                h.clients[ci].sync_from_global(&dec.data);
+                h.clients[ci].missed_rounds = 0;
+                any_resync = true;
+            }
+        }
+        if any_resync {
+            h.charge_barrier_phase(&resync_t);
+        }
 
         // ---- Dynamic re-profiling: resources moved, so do the splits ----
         // (round 1 keeps the initial allocation; re-profiling starts once
@@ -113,6 +156,12 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
                 jittered_profiles(&h.profiles, h.cfg.fleet.resource_jitter, &mut profile_rng);
             let new_assign = allocation::allocate(&observed, &h.cfg.alloc, total_layers);
             for ci in 0..n {
+                // Down clients can't be re-profiled (moving their split
+                // would hand them fresh global weights for free — the
+                // rejoin path pays for that via the charged resync).
+                if fc.is_down(round_u, ci) {
+                    continue;
+                }
                 let new_depth = new_assign[ci].depth;
                 if new_depth != h.clients[ci].depth {
                     // Split moved: the client takes over a different
@@ -162,12 +211,20 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
                 })
                 .collect();
             for (ci, client) in clients.iter_mut().enumerate() {
+                if fc.is_down(round_u, ci) {
+                    continue;
+                }
                 let depth = client.depth;
+                let steps = fc
+                    .crash_at(round_u, ci)
+                    .map(|c| c.step.min(local_steps))
+                    .unwrap_or(local_steps);
                 groups[ci % r].members.push(DflClientLane {
                     profile: &profiles[ci],
                     cut: server.prefix_len(depth),
                     srv_time: srv_times[ci],
-                    net: net.lane(ci, round as u64),
+                    steps,
+                    net: net.lane(ci, round_u),
                     ledger: RoundLedger::new(ci),
                     client,
                 });
@@ -177,7 +234,7 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
                 for m in rep.members.iter_mut() {
                     m.client.begin_round();
                     let depth = m.client.depth;
-                    for _ in 0..local_steps {
+                    for _ in 0..m.steps {
                         let batch = m.client.shard.next_batch(train, batch_n);
 
                         let z = rt.client_fwd(depth, &m.client.enc, &batch.x)?;
@@ -205,7 +262,16 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
                         m.ledger.exchange(m.profile, ex.time_s(), m.srv_time);
 
                         if ex.is_ok() {
-                            wire.decode_into(&m.net.scratch.frame, &mut m.net.scratch.decoded)?;
+                            // CRC/decode failure = exchange fault: count
+                            // and stall the step, don't abort the run.
+                            if wire
+                                .decode_into(&m.net.scratch.frame, &mut m.net.scratch.decoded)
+                                .is_err()
+                            {
+                                m.net.faults.corruptions += 1;
+                                m.ledger.fallback_steps += 1;
+                                continue;
+                            }
                             let out = rt.server_step(
                                 depth,
                                 classes,
@@ -220,7 +286,14 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
                             m.ledger.server_step(m.srv_time);
 
                             wire.encode_to(MsgType::ActGrad, &out.g_z, 0.0, &mut m.net.scratch);
-                            wire.decode_into(&m.net.scratch.frame, &mut m.net.scratch.decoded)?;
+                            if wire
+                                .decode_into(&m.net.scratch.frame, &mut m.net.scratch.decoded)
+                                .is_err()
+                            {
+                                m.net.faults.corruptions += 1;
+                                m.ledger.fallback_steps += 1;
+                                continue;
+                            }
                             let g_enc =
                                 rt.client_bwd(depth, &m.client.enc, &batch.x, &m.net.scratch.decoded)?;
                             let lr = m.client.lr;
@@ -248,12 +321,17 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
                 .into_iter()
                 .map(|(lane, ledger)| {
                     net.absorb_lane(&lane);
+                    let mut ledger = ledger;
+                    ledger.faults.add(&lane.faults);
+                    if fc.crash_at(round_u, ledger.client).is_some() {
+                        ledger.faults.crashes += 1;
+                    }
                     ledger
                 })
                 .collect()
         };
 
-        let (round_dt, busy, stalled, server_steps) = h.absorb_ledgers(&ledgers);
+        let (round_dt, busy, stalled, server_steps, faults) = h.absorb_ledgers(&ledgers);
 
         // ---- Replica coordination: ship every replica both ways and
         // average (the "frequent coordination" term), then layer-align
@@ -275,9 +353,16 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
         // on top of the replica average. Uploads travel as PrefixUpload
         // frames (DFL clients train no auxiliary classifier) and the
         // server averages the *decoded* prefixes. ----
+        // Dead and mid-round-crashed clients skip the barrier; FedAvg
+        // weights renormalize over the actual participants.
+        let participates =
+            |ci: usize| !fc.is_down(round_u, ci) && fc.crash_at(round_u, ci).is_none();
         let mut agg_branch = vec![0.0f64; n];
-        let mut uploads: Vec<Vec<f32>> = Vec::with_capacity(n);
+        let mut uploads: Vec<(usize, Vec<f32>)> = Vec::with_capacity(n);
         for ci in 0..n {
+            if !participates(ci) {
+                continue;
+            }
             let payload = h.clients[ci].upload_payload();
             let frame_len = h
                 .wire
@@ -290,16 +375,18 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
                     raw: (payload.len() * 4) as u64,
                 },
             );
-            uploads.push(h.wire.decode(&bar_scratch.frame)?.data);
+            uploads.push((ci, h.wire.decode(&bar_scratch.frame)?.data));
         }
         h.charge_barrier_phase(&agg_branch);
-        let total_samples: f64 = h.clients.iter().map(|c| c.shard.len() as f64).sum();
+        let total_samples: f64 = uploads
+            .iter()
+            .map(|(ci, _)| h.clients[*ci].shard.len() as f64)
+            .sum();
         {
-            let items: Vec<(usize, &[f32], f64)> = h
-                .clients
+            let items: Vec<(usize, &[f32], f64)> = uploads
                 .iter()
-                .zip(uploads.iter())
-                .map(|(c, data)| {
+                .map(|(ci, data)| {
+                    let c = &h.clients[*ci];
                     (
                         c.depth,
                         data.as_slice(),
@@ -335,13 +422,16 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
         };
         let mut bc = vec![0.0f64; n];
         for ci in 0..n {
+            if !participates(ci) {
+                continue; // absentees catch up via the charged resync
+            }
             bc[ci] = h.net.bulk_down_framed(ci, bc_framed);
             h.clients[ci].sync_from_global(&bc_payload);
         }
         h.charge_barrier_phase(&bc);
 
         let acc = h.eval_global(rt)?;
-        if h.finish_round(round, round_dt, &busy, acc, stalled, server_steps) {
+        if h.finish_round(round, round_dt, &busy, acc, stalled, server_steps, faults) {
             break;
         }
     }

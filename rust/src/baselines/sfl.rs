@@ -33,6 +33,8 @@ struct SflLane<'a> {
     srv: &'a mut [f32],
     /// This client's private server-side classifier copy.
     clf: &'a mut [f32],
+    /// Local steps this round (truncated by a mid-round crash).
+    steps: usize,
     net: NetLane,
     ledger: RoundLedger,
 }
@@ -58,9 +60,52 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
     // Reusable encode/decode buffers for the barrier frames (the
     // per-step frames inside the fan-out use each lane's own scratch).
     let mut bar_scratch = WireScratch::default();
+    // The baselines face the *identical* fault schedule SuperSFL does
+    // (same lane streams, same churn windows) so robustness comparisons
+    // are apples to apples. SplitFed has no quorum concept — the fault
+    // surface here is churn, bursty links, outages and corruption.
+    let fc = h.cfg.net.faults.clone();
 
     for round in 1..=h.cfg.train.rounds {
+        let round_u = round as u64;
         h.net.begin_round();
+
+        // ---- Churn: dead clients sit out; rejoiners resync first ----
+        let mut resync_t = vec![0.0f64; n];
+        let mut any_resync = false;
+        for ci in 0..n {
+            if fc.is_down(round_u, ci) {
+                h.clients[ci].begin_round();
+                h.clients[ci].missed_rounds += 1;
+                continue;
+            }
+            if h.clients[ci].missed_rounds > 0 {
+                let prefix_elems = h.clients[ci].enc.len();
+                let frame_len = h
+                    .wire
+                    .encode_to(
+                        MsgType::Broadcast,
+                        &h.server.enc[..prefix_elems],
+                        0.0,
+                        &mut bar_scratch,
+                    )
+                    .len() as u64;
+                let dec = h.wire.decode(&bar_scratch.frame)?;
+                resync_t[ci] = h.net.bulk_down_framed(
+                    ci,
+                    Framed {
+                        wire: frame_len,
+                        raw: (prefix_elems * 4) as u64,
+                    },
+                );
+                h.clients[ci].sync_from_global(&dec.data);
+                h.clients[ci].missed_rounds = 0;
+                any_resync = true;
+            }
+        }
+        if any_resync {
+            h.charge_barrier_phase(&resync_t);
+        }
 
         // ---- Fan out: every client branch on a worker thread ----
         let ledgers: Vec<RoundLedger> = {
@@ -81,19 +126,29 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
             let mut srv_it = srv_copies.iter_mut();
             let mut clf_it = clf_copies.iter_mut();
             for (ci, client) in clients.iter_mut().enumerate() {
+                let srv = srv_it.next().expect("copies sized to fleet");
+                let clf = clf_it.next().expect("copies sized to fleet");
+                if fc.is_down(round_u, ci) {
+                    continue;
+                }
+                let steps = fc
+                    .crash_at(round_u, ci)
+                    .map(|c| c.step.min(local_steps))
+                    .unwrap_or(local_steps);
                 lanes.push(SflLane {
                     client,
                     profile: &profiles[ci],
-                    srv: srv_it.next().expect("copies sized to fleet"),
-                    clf: clf_it.next().expect("copies sized to fleet"),
-                    net: net.lane(ci, round as u64),
+                    srv,
+                    clf,
+                    steps,
+                    net: net.lane(ci, round_u),
                     ledger: RoundLedger::new(ci),
                 });
             }
 
             engine::run_lanes(threads, &mut lanes, |lane| {
                 lane.client.begin_round();
-                for _ in 0..local_steps {
+                for _ in 0..lane.steps {
                     let batch = lane.client.shard.next_batch(train, batch_n);
 
                     let z = rt.client_fwd(depth, &lane.client.enc, &batch.x)?;
@@ -121,7 +176,17 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
                     lane.ledger.exchange(lane.profile, ex.time_s(), srv_time);
 
                     if ex.is_ok() {
-                        wire.decode_into(&lane.net.scratch.frame, &mut lane.net.scratch.decoded)?;
+                        // CRC/decode failure is an exchange fault: count
+                        // it and stall the step (SplitFed has no local
+                        // fallback), don't abort the run.
+                        if wire
+                            .decode_into(&lane.net.scratch.frame, &mut lane.net.scratch.decoded)
+                            .is_err()
+                        {
+                            lane.net.faults.corruptions += 1;
+                            lane.ledger.fallback_steps += 1;
+                            continue;
+                        }
                         let out = rt.server_step(
                             depth,
                             classes,
@@ -136,7 +201,14 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
                         lane.ledger.server_step(srv_time);
 
                         wire.encode_to(MsgType::ActGrad, &out.g_z, 0.0, &mut lane.net.scratch);
-                        wire.decode_into(&lane.net.scratch.frame, &mut lane.net.scratch.decoded)?;
+                        if wire
+                            .decode_into(&lane.net.scratch.frame, &mut lane.net.scratch.decoded)
+                            .is_err()
+                        {
+                            lane.net.faults.corruptions += 1;
+                            lane.ledger.fallback_steps += 1;
+                            continue;
+                        }
                         let g_enc =
                             rt.client_bwd(depth, &lane.client.enc, &batch.x, &lane.net.scratch.decoded)?;
                         let lr = lane.client.lr;
@@ -156,20 +228,32 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
                 .into_iter()
                 .map(|lane| {
                     net.absorb_lane(&lane.net);
-                    lane.ledger
+                    let mut ledger = lane.ledger;
+                    ledger.faults.add(&lane.net.faults);
+                    if fc.crash_at(round_u, ledger.client).is_some() {
+                        ledger.faults.crashes += 1;
+                    }
+                    ledger
                 })
                 .collect()
         };
 
-        let (round_dt, busy, stalled, server_steps) = h.absorb_ledgers(&ledgers);
+        let (round_dt, busy, stalled, server_steps, faults) = h.absorb_ledgers(&ledgers);
 
         // ---- FedAvg of client-side models (sample-count weights) ----
         // Uploads travel as PrefixUpload frames (SplitFed clients train
         // no auxiliary classifier, so the payload is the prefix alone)
         // and the server averages the *decoded* prefixes.
+        // Dead and mid-round-crashed clients skip the barrier; FedAvg
+        // weights renormalize over the actual participants.
+        let participates =
+            |ci: usize| !fc.is_down(round_u, ci) && fc.crash_at(round_u, ci).is_none();
         let mut agg_branch = vec![0.0f64; n];
-        let mut uploads: Vec<Vec<f32>> = Vec::with_capacity(n);
+        let mut uploads: Vec<(usize, Vec<f32>)> = Vec::with_capacity(n);
         for ci in 0..n {
+            if !participates(ci) {
+                continue;
+            }
             let payload = h.clients[ci].upload_payload();
             let frame_len = h
                 .wire
@@ -182,20 +266,21 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
                     raw: (payload.len() * 4) as u64,
                 },
             );
-            uploads.push(h.wire.decode(&bar_scratch.frame)?.data);
+            uploads.push((ci, h.wire.decode(&bar_scratch.frame)?.data));
         }
         h.charge_barrier_phase(&agg_branch);
-        let total_samples: f64 = h.clients.iter().map(|c| c.shard.len() as f64).sum();
-        {
-            let items: Vec<(usize, &[f32], f64)> = h
-                .clients
+        let total_samples: f64 = uploads
+            .iter()
+            .map(|(ci, _)| h.clients[*ci].shard.len() as f64)
+            .sum();
+        if !uploads.is_empty() {
+            let items: Vec<(usize, &[f32], f64)> = uploads
                 .iter()
-                .zip(uploads.iter())
-                .map(|(c, data)| {
+                .map(|(ci, data)| {
                     (
                         depth,
                         data.as_slice(),
-                        c.shard.len() as f64 / total_samples.max(1.0),
+                        h.clients[*ci].shard.len() as f64 / total_samples.max(1.0),
                     )
                 })
                 .collect();
@@ -203,25 +288,31 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
         }
 
         // ---- FedAvg of the per-client server-side copies (SplitFed) ----
-        // Every copy crosses the main↔Fed server link, both directions.
+        // Only participating clients' copies cross the main↔Fed server
+        // link (and enter the average); afterwards every copy — absent
+        // clients' included — is reset to the fresh average server-side
+        // (a server-internal memcpy, no wire charge).
+        let n_par = uploads.len() as u64;
         let copy_bytes = ((suffix_len + h.server.clf_s.len()) * 4) as u64;
-        // One logical transfer per client copy per direction, each
-        // paying the fed-link half-RTT.
-        let fed_t = h.net.fed_link(copy_bytes * n as u64 * 2, n as u64 * 2);
+        // One logical transfer per participating copy per direction,
+        // each paying the fed-link half-RTT.
+        let fed_t = h.net.fed_link(copy_bytes * n_par * 2, n_par * 2);
         h.clock.advance(fed_t);
         let mut srv_avg = vec![0.0f32; suffix_len];
         let mut clf_avg = vec![0.0f32; h.server.clf_s.len()];
-        for ci in 0..n {
-            let w = (h.clients[ci].shard.len() as f64 / total_samples.max(1.0)) as f32;
-            math::axpy(&mut srv_avg, &srv_copies[ci], w);
-            math::axpy(&mut clf_avg, &clf_copies[ci], w);
+        for (ci, _) in &uploads {
+            let w = (h.clients[*ci].shard.len() as f64 / total_samples.max(1.0)) as f32;
+            math::axpy(&mut srv_avg, &srv_copies[*ci], w);
+            math::axpy(&mut clf_avg, &clf_copies[*ci], w);
         }
         let cut = h.server.prefix_len(depth);
-        h.server.enc[cut..].copy_from_slice(&srv_avg);
-        h.server.clf_s.copy_from_slice(&clf_avg);
-        for ci in 0..n {
-            srv_copies[ci].copy_from_slice(&srv_avg);
-            clf_copies[ci].copy_from_slice(&clf_avg);
+        if !uploads.is_empty() {
+            h.server.enc[cut..].copy_from_slice(&srv_avg);
+            h.server.clf_s.copy_from_slice(&clf_avg);
+            for ci in 0..n {
+                srv_copies[ci].copy_from_slice(&srv_avg);
+                clf_copies[ci].copy_from_slice(&clf_avg);
+            }
         }
 
         // ---- Broadcast the aggregated client-side model ----
@@ -239,13 +330,16 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
         };
         let mut bc = vec![0.0f64; n];
         for ci in 0..n {
+            if !participates(ci) {
+                continue; // absentees catch up via the charged resync
+            }
             bc[ci] = h.net.bulk_down_framed(ci, bc_framed);
             h.clients[ci].sync_from_global(&bc_payload);
         }
         h.charge_barrier_phase(&bc);
 
         let acc = h.eval_global(rt)?;
-        if h.finish_round(round, round_dt, &busy, acc, stalled, server_steps) {
+        if h.finish_round(round, round_dt, &busy, acc, stalled, server_steps, faults) {
             break;
         }
     }

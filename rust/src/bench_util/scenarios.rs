@@ -10,6 +10,7 @@
 
 use crate::config::{ExperimentConfig, Method};
 use crate::metrics::RunMetrics;
+use crate::network::FaultConfig;
 use crate::orchestrator::run_experiment;
 use crate::runtime::Runtime;
 use crate::Result;
@@ -209,6 +210,41 @@ pub fn paper_table2(classes: usize, clients: usize) -> [(f64, f64, f64, f64); 3]
     }
 }
 
+/// Attach a parsed `--faults` spec to a bench config. Panics on an
+/// invalid spec: bench grids are static strings, so a parse failure is
+/// a build bug, not a data error.
+pub fn with_faults(mut cfg: ExperimentConfig, spec: &str) -> ExperimentConfig {
+    cfg.net.faults = FaultConfig::parse(spec)
+        .unwrap_or_else(|e| panic!("bad bench fault spec {spec:?}: {e}"));
+    cfg
+}
+
+/// Bursty-link severity ladder for the Table III extension:
+/// `(label, --faults spec)`. Both the stationary bad-state probability
+/// π_bad = p_gb/(p_gb+p_bg) and the mean burst length 1/p_bg rise down
+/// the ladder; every rung keeps a retry budget so the bench exercises
+/// the recovery path, not just the drop accounting.
+pub fn ge_ladder() -> [(&'static str, &'static str); 3] {
+    [
+        ("mild (pi_bad 9%, burst 2)", "ge=0.05:0.5,retry=1:0.02:2:0.5"),
+        ("moderate (pi_bad 24%, burst 4)", "ge=0.08:0.25:1:0,retry=2:0.02:2:0.5"),
+        ("severe (pi_bad 57%, burst 3.3)", "ge=0.4:0.3,retry=2:0.02:2:0.5"),
+    ]
+}
+
+/// Quorum fractions for the merge-barrier sweep.
+pub fn quorum_ladder() -> [f64; 3] {
+    [0.25, 0.5, 0.9]
+}
+
+/// The churn schedule every quorum rung runs under: bursty links plus
+/// one mid-round crash (client 1 dies at round 1, misses round 2,
+/// rejoins via a charged resync) — so the quorum barrier actually has
+/// absences to arbitrate at any round count ≥ 3.
+pub fn quorum_churn_spec(quorum: f64) -> String {
+    format!("ge=0.08:0.25:1:0,retry=1:0.02:2:0.5,crash=1:1:0:1,quorum={quorum}")
+}
+
 /// Paper Table III: availability % → accuracy % (±std).
 pub fn paper_table3() -> [(f64, f64, f64); 6] {
     [
@@ -264,6 +300,22 @@ mod tests {
             assert!(t1[2].0 < t1[0].0);
             // ...and less communication.
             assert!(t1[2].1 < t1[0].1);
+        }
+    }
+
+    #[test]
+    fn fault_ladders_parse_and_validate() {
+        for (_, spec) in ge_ladder() {
+            let cfg = with_faults(ExperimentConfig::default(), spec);
+            cfg.net.faults.validate().unwrap();
+            assert!(cfg.net.faults.ge_enabled(), "{spec}");
+            assert!(cfg.net.faults.retries > 0, "{spec}");
+        }
+        for q in quorum_ladder() {
+            let cfg = with_faults(ExperimentConfig::default(), &quorum_churn_spec(q));
+            cfg.net.faults.validate().unwrap();
+            assert_eq!(cfg.net.faults.quorum, q);
+            assert_eq!(cfg.net.faults.crashes.len(), 1);
         }
     }
 

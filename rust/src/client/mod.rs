@@ -35,6 +35,13 @@ pub struct ClientState {
     /// Round-scoped loss accumulators (for Eq. 6 aggregation weights).
     pub round_local_loss: LossAcc,
     pub round_server_loss: LossAcc,
+    /// Rounds missed since the client's last crash (churn). Nonzero means
+    /// the prefix is stale relative to the global model: the orchestrator
+    /// must resync it via a charged Broadcast before the client rejoins
+    /// (the reconnect-with-resume semantics the TCP transport inherits).
+    /// φ_i deliberately survives the outage — it is the client's own
+    /// head and is what lets a rejoining client keep training (Alg. 3).
+    pub missed_rounds: usize,
 }
 
 /// Streaming mean accumulator.
@@ -85,6 +92,7 @@ impl ClientState {
             lr,
             round_local_loss: LossAcc::default(),
             round_server_loss: LossAcc::default(),
+            missed_rounds: 0,
         })
     }
 
@@ -107,6 +115,7 @@ impl ClientState {
             lr,
             round_local_loss: LossAcc::default(),
             round_server_loss: LossAcc::default(),
+            missed_rounds: 0,
         })
     }
 
@@ -268,6 +277,7 @@ mod tests {
             lr: 0.1,
             round_local_loss: LossAcc::default(),
             round_server_loss: LossAcc::default(),
+            missed_rounds: 0,
         };
         assert_eq!(c.enc_bytes(), 28);
         c.enc.push(0.0);
@@ -285,6 +295,7 @@ mod tests {
             lr: 0.1,
             round_local_loss: LossAcc::default(),
             round_server_loss: LossAcc::default(),
+            missed_rounds: 0,
         };
         assert_eq!(c.upload_payload(), vec![1.0, 2.0, 3.0, 4.0, 5.0]);
         assert_eq!(c.upload_elems(), 5);

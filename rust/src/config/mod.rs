@@ -7,6 +7,7 @@
 
 use std::path::{Path, PathBuf};
 
+use crate::network::faults::FaultConfig;
 use crate::util::json::{self, JsonValue};
 use crate::wire::WireCodecKind;
 use crate::{Error, Result};
@@ -218,6 +219,11 @@ pub struct NetConfig {
     /// half-RTT model every client↔server transfer uses (the seed
     /// charged this link bandwidth only).
     pub fed_latency_ms: f64,
+    /// Composable fault schedule (bursty links, outage windows, crashes,
+    /// frame corruption, retry/backoff, merge quorum). The default is
+    /// inert — see [`crate::network::faults`]. Set via the `faults`
+    /// config key / `--faults` / `SUPERSFL_FAULTS`.
+    pub faults: FaultConfig,
 }
 
 impl Default for NetConfig {
@@ -228,6 +234,7 @@ impl Default for NetConfig {
             drop_prob: 0.0,
             server_bandwidth_mbps: 10_000.0,
             fed_latency_ms: 1.0,
+            faults: FaultConfig::default(),
         }
     }
 }
@@ -477,6 +484,7 @@ impl ExperimentConfig {
         if !(0.0..=1.0).contains(&self.net.server_availability) {
             return Err(Error::Config("net.server_availability must be in [0,1]".into()));
         }
+        self.net.faults.validate().map_err(Error::Config)?;
         if self.data.classes != 10 && self.data.classes != 100 {
             return Err(Error::Config(
                 "data.classes must be 10 or 100 (artifact variants)".into(),
@@ -562,6 +570,7 @@ impl ExperimentConfig {
             "timeout_s" => self.net.timeout_s = f(v)?,
             "server_availability" => self.net.server_availability = f(v)?,
             "drop_prob" => self.net.drop_prob = f(v)?,
+            "faults" => self.net.faults = FaultConfig::parse(s(v, key)?)?,
             "server_bandwidth_mbps" => self.net.server_bandwidth_mbps = f(v)?,
             "fed_latency_ms" => self.net.fed_latency_ms = f(v)?,
             "client_active_w" => self.energy.client_active_w = pair(v)?,
@@ -621,6 +630,7 @@ impl ExperimentConfig {
         o.set("timeout_s", n(self.net.timeout_s));
         o.set("server_availability", n(self.net.server_availability));
         o.set("drop_prob", n(self.net.drop_prob));
+        o.set("faults", JsonValue::String(self.net.faults.to_spec()));
         o.set("classes", n(self.data.classes as f64));
         o.set("train_per_class", n(self.data.train_per_class as f64));
         o.set("test_total", n(self.data.test_total as f64));
@@ -715,6 +725,7 @@ mod tests {
             .with_kernel_threads(3);
         c.ssfl.tpgf_mode = TpgfMode::NoDepth;
         c.net.fed_latency_ms = 2.5;
+        c.net.faults = FaultConfig::parse("ge=0.05:0.3,crash=2:1:4:1,quorum=0.5").unwrap();
         let j = c.to_json();
         let mut c2 = ExperimentConfig::default();
         c2.apply_json(&j).unwrap();
@@ -726,6 +737,26 @@ mod tests {
         assert_eq!(c2.kernel_threads, 3);
         assert_eq!(c2.net.fed_latency_ms, 2.5);
         assert_eq!(c2.ssfl.tpgf_mode, TpgfMode::NoDepth);
+        assert_eq!(c2.net.faults, c.net.faults);
+    }
+
+    #[test]
+    fn faults_key_parses_validates_and_roundtrips() {
+        let mut c = ExperimentConfig::default();
+        assert!(!c.net.faults.enabled());
+        let v = json::parse(r#"{"faults": "outage=3:2,retry=1:0.02:2:0.5"}"#).unwrap();
+        c.apply_json(&v).unwrap();
+        assert!(c.net.faults.in_outage(3));
+        assert_eq!(c.net.faults.retries, 1);
+        c.validate().unwrap();
+
+        // Malformed specs are rejected at apply time; a schedule made
+        // invalid after the fact is caught by validate().
+        let v = json::parse(r#"{"faults": "ge=0.5"}"#).unwrap();
+        assert!(ExperimentConfig::default().apply_json(&v).is_err());
+        let mut c = ExperimentConfig::default();
+        c.net.faults.quorum = 1.5;
+        assert!(c.validate().is_err());
     }
 
     #[test]

@@ -51,8 +51,9 @@ fn usage() {
         "usage: supersfl <train|allocate|inspect> [--method ssfl|sfl|dfl] \
          [--clients N] [--classes 10|100] [--rounds N] [--seed N] \
          [--threads N] [--kernel-threads auto|N] [--backend auto|native|pjrt] \
-         [--wire-codec fp32|fp16|int8|topk:<k>] [--config file.json] \
-         [--set key=value]... [--artifacts DIR] [--out DIR]"
+         [--wire-codec fp32|fp16|int8|topk:<k>] \
+         [--faults off|ge=..,outage=..,crash=..,corrupt=..,retry=..,quorum=..] \
+         [--config file.json] [--set key=value]... [--artifacts DIR] [--out DIR]"
     );
 }
 
@@ -87,6 +88,9 @@ fn build_config(args: &cli::Args) -> Result<ExperimentConfig> {
     }
     if let Some(v) = args.get("wire-codec") {
         cfg.wire = WireCodecKind::parse(v)?;
+    }
+    if let Some(v) = args.get("faults") {
+        cfg.net.faults = network::FaultConfig::parse(v)?;
     }
     if let Some(v) = args.get("target") {
         cfg.train.target_accuracy = Some(v.parse()?);
@@ -131,6 +135,9 @@ fn cmd_train(args: &cli::Args) -> Result<()> {
         },
         cfg.wire.label()
     );
+    if cfg.net.faults.enabled() {
+        println!("faults: {}", cfg.net.faults.to_spec());
+    }
     let rt = Runtime::from_config(&cfg)?;
     println!("backend: {}", rt.backend_name());
     let res = orchestrator::run_experiment(&rt, &cfg)?;

@@ -36,6 +36,16 @@ pub struct RoundRecord {
     pub fallback_steps: usize,
     /// Client steps with full server supervision this round.
     pub server_steps: usize,
+    /// Exchanges lost to server unavailability / slow links this round.
+    pub timeouts: u64,
+    /// Exchanges lost to transmission drops (Bernoulli or bursty-link).
+    pub drops: u64,
+    /// Frames whose CRC check failed at decode this round.
+    pub corruptions: u64,
+    /// Retry attempts spent (each recharged bytes + backoff time).
+    pub retries: u64,
+    /// Mid-round client crashes this round.
+    pub crashes: u64,
 }
 
 impl RoundRecord {
@@ -57,6 +67,11 @@ impl RoundRecord {
         o.set("energy_j", n(self.energy_j));
         o.set("fallback_steps", n(self.fallback_steps as f64));
         o.set("server_steps", n(self.server_steps as f64));
+        o.set("timeouts", n(self.timeouts as f64));
+        o.set("drops", n(self.drops as f64));
+        o.set("corruptions", n(self.corruptions as f64));
+        o.set("retries", n(self.retries as f64));
+        o.set("crashes", n(self.crashes as f64));
         o
     }
 }
@@ -91,6 +106,12 @@ pub struct RunMetrics {
     /// parallel round engine; NOT simulated time). Filled in by the
     /// orchestrator after construction.
     pub host_wall_s: f64,
+    /// Whole-run fault totals, summed over the per-round counters.
+    pub total_timeouts: u64,
+    pub total_drops: u64,
+    pub total_corruptions: u64,
+    pub total_retries: u64,
+    pub total_crashes: u64,
 }
 
 impl RunMetrics {
@@ -135,6 +156,11 @@ impl RunMetrics {
             },
             co2_g,
             host_wall_s: 0.0,
+            total_timeouts: rounds.iter().map(|r| r.timeouts).sum(),
+            total_drops: rounds.iter().map(|r| r.drops).sum(),
+            total_corruptions: rounds.iter().map(|r| r.corruptions).sum(),
+            total_retries: rounds.iter().map(|r| r.retries).sum(),
+            total_crashes: rounds.iter().map(|r| r.crashes).sum(),
             rounds,
         }
     }
@@ -147,12 +173,12 @@ impl RunMetrics {
         let mut f = std::fs::File::create(path)?;
         writeln!(
             f,
-            "round,sim_time_s,accuracy,mean_client_loss,mean_server_loss,comm_mb,cum_comm_mb,raw_mb,cum_raw_mb,compression,energy_j,fallback_steps,server_steps"
+            "round,sim_time_s,accuracy,mean_client_loss,mean_server_loss,comm_mb,cum_comm_mb,raw_mb,cum_raw_mb,compression,energy_j,fallback_steps,server_steps,timeouts,drops,corruptions,retries,crashes"
         )?;
         for r in &self.rounds {
             writeln!(
                 f,
-                "{},{:.3},{:.4},{:.4},{:.4},{:.3},{:.3},{:.3},{:.3},{:.3},{:.1},{},{}",
+                "{},{:.3},{:.4},{:.4},{:.4},{:.3},{:.3},{:.3},{:.3},{:.3},{:.1},{},{},{},{},{},{},{}",
                 r.round,
                 r.sim_time_s,
                 r.accuracy,
@@ -165,7 +191,12 @@ impl RunMetrics {
                 r.compression,
                 r.energy_j,
                 r.fallback_steps,
-                r.server_steps
+                r.server_steps,
+                r.timeouts,
+                r.drops,
+                r.corruptions,
+                r.retries,
+                r.crashes
             )?;
         }
         Ok(())
@@ -202,6 +233,11 @@ impl RunMetrics {
         o.set("power_per_acc", n(self.power_per_acc));
         o.set("co2_g", n(self.co2_g));
         o.set("host_wall_s", n(self.host_wall_s));
+        o.set("total_timeouts", n(self.total_timeouts as f64));
+        o.set("total_drops", n(self.total_drops as f64));
+        o.set("total_corruptions", n(self.total_corruptions as f64));
+        o.set("total_retries", n(self.total_retries as f64));
+        o.set("total_crashes", n(self.total_crashes as f64));
         o.set(
             "rounds",
             JsonValue::Array(self.rounds.iter().map(|r| r.to_json()).collect()),
@@ -360,6 +396,37 @@ mod tests {
         assert_eq!(rounds.len(), 5);
         assert!(rounds[0].get("accuracy").is_some());
         assert!(rounds[0].get("server_steps").is_some());
+        for key in ["timeouts", "drops", "corruptions", "retries", "crashes"] {
+            assert!(rounds[0].get(key).is_some(), "missing round key {key}");
+        }
+    }
+
+    #[test]
+    fn fault_counters_roll_up_and_export() {
+        let mut rs = rounds();
+        rs[1].timeouts = 3;
+        rs[1].drops = 2;
+        rs[2].corruptions = 1;
+        rs[2].retries = 5;
+        rs[3].crashes = 1;
+        let m = RunMetrics::from_rounds("t", "ssfl", rs, None, 1.0, 1.0, 1.0);
+        assert_eq!(m.total_timeouts, 3);
+        assert_eq!(m.total_drops, 2);
+        assert_eq!(m.total_corruptions, 1);
+        assert_eq!(m.total_retries, 5);
+        assert_eq!(m.total_crashes, 1);
+        let j = m.to_json();
+        assert_eq!(j.get("total_retries").and_then(|v| v.as_f64()), Some(5.0));
+
+        let tmp = std::env::temp_dir().join("supersfl_test_fault_metrics.csv");
+        m.write_csv(&tmp).unwrap();
+        let text = std::fs::read_to_string(&tmp).unwrap();
+        let header = text.lines().next().unwrap();
+        assert!(header.ends_with("timeouts,drops,corruptions,retries,crashes"));
+        // Round 2's row carries its cause-classified counts.
+        let row2: Vec<&str> = text.lines().nth(2).unwrap().split(',').collect();
+        assert_eq!(&row2[row2.len() - 5..], &["3", "2", "0", "0", "0"]);
+        std::fs::remove_file(&tmp).ok();
     }
 
     #[test]

@@ -1,0 +1,693 @@
+//! Deterministic fault-injection engine (paper §II-C stress surface).
+//!
+//! The seed repo modelled failure as a memoryless per-exchange Bernoulli
+//! plus an iid per-round server coin — the friendliest possible failure
+//! model. Real edge failures are bursty and correlated ("Optimizing Split
+//! Federated Learning with Unstable Client Participation", arXiv
+//! 2509.17398), so this module layers composable fault *processes* under
+//! the [`crate::network::NetLane`] exchange surface:
+//!
+//! * **Gilbert–Elliott bursty links** — a per-client two-state Markov
+//!   channel (good/bad) with configurable transition probabilities. All
+//!   draws come from the lane's existing `(seed, round, client)` PCG
+//!   stream, so `--threads N` bit-identity holds by construction.
+//! * **Server outage windows** — multi-round (optionally periodic)
+//!   outages layered on top of the iid availability coin.
+//! * **Mid-round crash / churn** — a client dies partway through its
+//!   local steps, misses ≥ 1 rounds, then rejoins and resyncs via a
+//!   charged full Broadcast (the reconnect-with-resume semantics the
+//!   future `TcpTransport` inherits).
+//! * **Frame corruption** — flips payload bytes of an otherwise
+//!   successful exchange so the wire layer's CRC path is exercised end
+//!   to end.
+//! * **Bounded retry with exponential backoff** — retries recharge real
+//!   frame bytes and backoff time; budget exhaustion surfaces as the
+//!   timeout that triggers the paper's Alg. 3 fallback.
+//!
+//! Every process is a pure function of the run seed and the schedule in
+//! [`FaultConfig`]; nothing here reads wall-clock time or OS entropy.
+
+use crate::util::rng::Pcg32;
+use crate::{Error, Result};
+
+/// One scheduled mid-round crash: `client` completes `step` local steps
+/// of round `round`, contributes nothing to that round's merge, stays
+/// dark for `down_rounds` full rounds, then rejoins (and is resynced via
+/// a charged Broadcast) at round `round + down_rounds + 1`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CrashSpec {
+    pub round: u64,
+    pub client: usize,
+    pub step: usize,
+    pub down_rounds: u64,
+}
+
+/// The composable fault schedule. `FaultConfig::default()` is inert:
+/// every process disabled, zero retries, quorum 0 — byte- and
+/// draw-identical to the pre-fault simulator.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultConfig {
+    /// Gilbert–Elliott good→bad transition probability (per exchange).
+    /// `0.0` disables the bursty-link process entirely.
+    pub ge_p_gb: f64,
+    /// Gilbert–Elliott bad→good transition probability (per exchange).
+    /// Mean burst length is `1 / ge_p_bg` exchanges.
+    pub ge_p_bg: f64,
+    /// Drop probability while the link is in the bad state.
+    pub ge_drop_bad: f64,
+    /// Drop probability while the link is in the good state.
+    pub ge_drop_good: f64,
+    /// First round (1-based) of the server outage window. `outage_len == 0`
+    /// disables outages.
+    pub outage_start: u64,
+    /// Number of consecutive rounds the server is dark per window.
+    pub outage_len: u64,
+    /// Window repeat period in rounds; `0` means a single window.
+    pub outage_period: u64,
+    /// Scheduled mid-round crashes (kept sorted by `(round, client)`).
+    pub crashes: Vec<CrashSpec>,
+    /// Probability that a *successful* exchange's uplink frame arrives
+    /// with a flipped payload byte (CRC failure at decode).
+    pub corrupt_prob: f64,
+    /// Retry budget per exchange (0 = no retries, seed behaviour).
+    pub retries: u32,
+    /// Backoff before retry k is `base · mult^(k-1)`, jittered.
+    pub backoff_base_s: f64,
+    pub backoff_mult: f64,
+    /// Relative jitter half-width: the backoff is scaled by a factor
+    /// uniform in `[1 - j/2, 1 + j/2)`, drawn from the lane stream.
+    pub backoff_jitter: f64,
+    /// Quorum fraction of live lanes that must report before the SSFL
+    /// merge proceeds. `0.0` means any number (seed behaviour).
+    pub quorum: f64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            ge_p_gb: 0.0,
+            ge_p_bg: 1.0,
+            ge_drop_bad: 1.0,
+            ge_drop_good: 0.0,
+            outage_start: 0,
+            outage_len: 0,
+            outage_period: 0,
+            crashes: Vec::new(),
+            corrupt_prob: 0.0,
+            retries: 0,
+            backoff_base_s: 0.05,
+            backoff_mult: 2.0,
+            backoff_jitter: 0.0,
+            quorum: 0.0,
+        }
+    }
+}
+
+impl FaultConfig {
+    /// True when any fault process differs from the inert default.
+    pub fn enabled(&self) -> bool {
+        *self != FaultConfig::default()
+    }
+
+    /// The Gilbert–Elliott process is active (lanes carry channel state
+    /// and burn two draws per exchange attempt instead of one).
+    pub fn ge_enabled(&self) -> bool {
+        self.ge_p_gb > 0.0
+    }
+
+    /// Stationary probability of the bad state, `p_gb / (p_gb + p_bg)`.
+    pub fn ge_stationary_bad(&self) -> f64 {
+        if self.ge_p_gb + self.ge_p_bg <= 0.0 {
+            return 0.0;
+        }
+        self.ge_p_gb / (self.ge_p_gb + self.ge_p_bg)
+    }
+
+    /// Is the server inside an outage window at `round` (1-based)?
+    pub fn in_outage(&self, round: u64) -> bool {
+        if self.outage_len == 0 || round < self.outage_start {
+            return false;
+        }
+        if self.outage_period == 0 {
+            round < self.outage_start + self.outage_len
+        } else {
+            (round - self.outage_start) % self.outage_period < self.outage_len
+        }
+    }
+
+    /// The crash scheduled to hit `client` *during* `round`, if any.
+    pub fn crash_at(&self, round: u64, client: usize) -> Option<&CrashSpec> {
+        self.crashes
+            .iter()
+            .find(|c| c.round == round && c.client == client)
+    }
+
+    /// Is `client` dark (crashed in an earlier round, not yet rejoined)
+    /// for the whole of `round`?
+    pub fn is_down(&self, round: u64, client: usize) -> bool {
+        self.crashes
+            .iter()
+            .any(|c| c.client == client && c.round < round && round <= c.round + c.down_rounds)
+    }
+
+    /// Number of clients participating at the start of `round` (the
+    /// participant-normalization denominator `n_live` of the quorum
+    /// merge; a client crashing *during* the round still counts — it was
+    /// live when the round began).
+    pub fn live_count(&self, round: u64, n: usize) -> usize {
+        (0..n).filter(|&c| !self.is_down(round, c)).count()
+    }
+
+    /// Quorum barrier: may the merge proceed with `reporting` of
+    /// `n_live` live lanes delivering server-coupled updates?
+    pub fn quorum_met(&self, reporting: usize, n_live: usize) -> bool {
+        reporting as f64 + 1e-9 >= self.quorum * n_live as f64
+    }
+
+    /// Backoff before retry `attempt` (1-based), optionally jittered
+    /// from the lane stream. Only draws from `rng` when jitter is
+    /// configured, so jitter-free schedules burn no extra randomness.
+    pub fn backoff_s(&self, attempt: u32, rng: &mut Pcg32) -> f64 {
+        let base = self.backoff_base_s * self.backoff_mult.powi(attempt as i32 - 1);
+        if self.backoff_jitter > 0.0 {
+            base * (1.0 + self.backoff_jitter * (rng.uniform() - 0.5))
+        } else {
+            base
+        }
+    }
+
+    /// Parse the comma-separated fault spec grammar:
+    ///
+    /// ```text
+    /// off                                   inert schedule (default)
+    /// ge=p_gb:p_bg[:drop_bad[:drop_good]]   Gilbert–Elliott bursty link
+    /// outage=start:len[:period]             server outage window(s)
+    /// crash=round:client:step:down          mid-round crash (repeatable)
+    /// corrupt=p                             frame-corruption probability
+    /// retry=n[:base[:mult[:jitter]]]        bounded retry + backoff
+    /// quorum=f                              merge quorum fraction
+    /// ```
+    pub fn parse(spec: &str) -> Result<FaultConfig> {
+        let mut fc = FaultConfig::default();
+        let spec = spec.trim();
+        if spec.is_empty() || spec == "off" {
+            return Ok(fc);
+        }
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (key, val) = part
+                .split_once('=')
+                .ok_or_else(|| bad(part, "expected key=value"))?;
+            let fields: Vec<&str> = val.split(':').collect();
+            match key {
+                "ge" => {
+                    if fields.len() < 2 || fields.len() > 4 {
+                        return Err(bad(part, "ge=p_gb:p_bg[:drop_bad[:drop_good]]"));
+                    }
+                    fc.ge_p_gb = num(fields[0], part)?;
+                    fc.ge_p_bg = num(fields[1], part)?;
+                    if let Some(f) = fields.get(2) {
+                        fc.ge_drop_bad = num(f, part)?;
+                    }
+                    if let Some(f) = fields.get(3) {
+                        fc.ge_drop_good = num(f, part)?;
+                    }
+                }
+                "outage" => {
+                    if fields.len() < 2 || fields.len() > 3 {
+                        return Err(bad(part, "outage=start:len[:period]"));
+                    }
+                    fc.outage_start = int(fields[0], part)?;
+                    fc.outage_len = int(fields[1], part)?;
+                    if let Some(f) = fields.get(2) {
+                        fc.outage_period = int(f, part)?;
+                    }
+                }
+                "crash" => {
+                    if fields.len() != 4 {
+                        return Err(bad(part, "crash=round:client:step:down"));
+                    }
+                    fc.crashes.push(CrashSpec {
+                        round: int(fields[0], part)?,
+                        client: int(fields[1], part)? as usize,
+                        step: int(fields[2], part)? as usize,
+                        down_rounds: int(fields[3], part)?,
+                    });
+                }
+                "corrupt" => {
+                    if fields.len() != 1 {
+                        return Err(bad(part, "corrupt=p"));
+                    }
+                    fc.corrupt_prob = num(fields[0], part)?;
+                }
+                "retry" => {
+                    if fields.is_empty() || fields.len() > 4 {
+                        return Err(bad(part, "retry=n[:base[:mult[:jitter]]]"));
+                    }
+                    fc.retries = int(fields[0], part)? as u32;
+                    if let Some(f) = fields.get(1) {
+                        fc.backoff_base_s = num(f, part)?;
+                    }
+                    if let Some(f) = fields.get(2) {
+                        fc.backoff_mult = num(f, part)?;
+                    }
+                    if let Some(f) = fields.get(3) {
+                        fc.backoff_jitter = num(f, part)?;
+                    }
+                }
+                "quorum" => {
+                    if fields.len() != 1 {
+                        return Err(bad(part, "quorum=f"));
+                    }
+                    fc.quorum = num(fields[0], part)?;
+                }
+                other => {
+                    return Err(Error::Config(format!(
+                        "unknown fault component '{other}' in '{part}' \
+                         (want ge|outage|crash|corrupt|retry|quorum|off)"
+                    )))
+                }
+            }
+        }
+        fc.crashes.sort_by_key(|c| (c.round, c.client));
+        fc.validate().map_err(Error::Config)?;
+        Ok(fc)
+    }
+
+    /// Resolve the schedule with the `SUPERSFL_FAULTS` env override
+    /// (mirrors `WireCodecKind::from_env_or`): the env var wins over the
+    /// config value; an invalid env spec is a hard panic because
+    /// silently training under the wrong fault schedule is worse than
+    /// crashing at startup.
+    pub fn from_env_or(fallback: FaultConfig) -> FaultConfig {
+        match std::env::var("SUPERSFL_FAULTS") {
+            Ok(s) => match FaultConfig::parse(&s) {
+                Ok(fc) => fc,
+                Err(e) => panic!("SUPERSFL_FAULTS={s}: {e}"),
+            },
+            Err(_) => fallback,
+        }
+    }
+
+    /// Canonical spec string: `FaultConfig::parse(c.to_spec()) == c`.
+    pub fn to_spec(&self) -> String {
+        if !self.enabled() {
+            return "off".to_string();
+        }
+        let d = FaultConfig::default();
+        let mut parts = Vec::new();
+        if self.ge_p_gb != d.ge_p_gb
+            || self.ge_p_bg != d.ge_p_bg
+            || self.ge_drop_bad != d.ge_drop_bad
+            || self.ge_drop_good != d.ge_drop_good
+        {
+            parts.push(format!(
+                "ge={}:{}:{}:{}",
+                self.ge_p_gb, self.ge_p_bg, self.ge_drop_bad, self.ge_drop_good
+            ));
+        }
+        if self.outage_len != 0 || self.outage_start != 0 || self.outage_period != 0 {
+            parts.push(format!(
+                "outage={}:{}:{}",
+                self.outage_start, self.outage_len, self.outage_period
+            ));
+        }
+        for c in &self.crashes {
+            parts.push(format!(
+                "crash={}:{}:{}:{}",
+                c.round, c.client, c.step, c.down_rounds
+            ));
+        }
+        if self.corrupt_prob != d.corrupt_prob {
+            parts.push(format!("corrupt={}", self.corrupt_prob));
+        }
+        if self.retries != d.retries
+            || self.backoff_base_s != d.backoff_base_s
+            || self.backoff_mult != d.backoff_mult
+            || self.backoff_jitter != d.backoff_jitter
+        {
+            parts.push(format!(
+                "retry={}:{}:{}:{}",
+                self.retries, self.backoff_base_s, self.backoff_mult, self.backoff_jitter
+            ));
+        }
+        if self.quorum != d.quorum {
+            parts.push(format!("quorum={}", self.quorum));
+        }
+        parts.join(",")
+    }
+
+    /// Structural validation (probabilities in range, schedules sane).
+    pub fn validate(&self) -> std::result::Result<(), String> {
+        for (name, p) in [
+            ("ge p_gb", self.ge_p_gb),
+            ("ge p_bg", self.ge_p_bg),
+            ("ge drop_bad", self.ge_drop_bad),
+            ("ge drop_good", self.ge_drop_good),
+            ("corrupt", self.corrupt_prob),
+            ("quorum", self.quorum),
+        ] {
+            if !(0.0..=1.0).contains(&p) {
+                return Err(format!("faults: {name} must be in [0,1], got {p}"));
+            }
+        }
+        if self.ge_enabled() && self.ge_p_bg <= 0.0 {
+            return Err("faults: ge p_bg must be > 0 when p_gb > 0 (bursts must end)".into());
+        }
+        if self.outage_len > 0 && self.outage_start == 0 {
+            return Err("faults: outage start round is 1-based, got 0".into());
+        }
+        if self.outage_period > 0 && self.outage_period < self.outage_len {
+            return Err(format!(
+                "faults: outage period {} shorter than window length {}",
+                self.outage_period, self.outage_len
+            ));
+        }
+        for c in &self.crashes {
+            if c.round == 0 {
+                return Err("faults: crash round is 1-based, got 0".into());
+            }
+            if c.down_rounds == 0 {
+                return Err("faults: crash down_rounds must be ≥ 1 (churn means missing a round)".into());
+            }
+        }
+        for i in 1..self.crashes.len() {
+            let (a, b) = (&self.crashes[i - 1], &self.crashes[i]);
+            if a.client == b.client && b.round <= a.round + a.down_rounds + 1 {
+                return Err(format!(
+                    "faults: client {} crashes at round {} before recovering from round {}",
+                    b.client, b.round, a.round
+                ));
+            }
+        }
+        if !(self.backoff_base_s > 0.0) || !(self.backoff_mult >= 1.0) {
+            return Err(format!(
+                "faults: backoff base must be > 0 and mult ≥ 1, got {}:{}",
+                self.backoff_base_s, self.backoff_mult
+            ));
+        }
+        if !(0.0..=1.0).contains(&self.backoff_jitter) {
+            return Err(format!(
+                "faults: backoff jitter must be in [0,1], got {}",
+                self.backoff_jitter
+            ));
+        }
+        Ok(())
+    }
+}
+
+fn bad(part: &str, want: &str) -> Error {
+    Error::Config(format!("bad fault component '{part}' (want {want})"))
+}
+
+fn num(s: &str, part: &str) -> Result<f64> {
+    s.parse::<f64>()
+        .map_err(|_| Error::Config(format!("bad number '{s}' in fault component '{part}'")))
+}
+
+fn int(s: &str, part: &str) -> Result<u64> {
+    s.parse::<u64>()
+        .map_err(|_| Error::Config(format!("bad integer '{s}' in fault component '{part}'")))
+}
+
+/// Per-lane Gilbert–Elliott channel state. Initialized from the lane's
+/// own `(seed, round, client)` stream by a stationary-distribution draw,
+/// so lanes stay pure functions of their triple: the chain effectively
+/// runs *within* a round and re-equilibrates each round, which keeps
+/// bursts spanning several consecutive exchanges (the paper-relevant
+/// regime: one round is `local_steps` exchanges) without threading
+/// mutable channel state across the parallel barrier.
+#[derive(Clone, Copy, Debug)]
+pub struct GeState {
+    bad: bool,
+}
+
+impl GeState {
+    /// Draw the initial state from the stationary distribution.
+    pub fn init(fc: &FaultConfig, rng: &mut Pcg32) -> GeState {
+        GeState {
+            bad: rng.bernoulli(fc.ge_stationary_bad()),
+        }
+    }
+
+    pub fn is_bad(&self) -> bool {
+        self.bad
+    }
+
+    /// One exchange attempt: roll the drop for the current state, then
+    /// advance the chain. Exactly two draws per call, always — the draw
+    /// count must not depend on the state or the outcome, or replaying a
+    /// lane would desynchronize.
+    pub fn roll(&mut self, fc: &FaultConfig, rng: &mut Pcg32) -> bool {
+        let p_drop = if self.bad {
+            fc.ge_drop_bad
+        } else {
+            fc.ge_drop_good
+        };
+        let dropped = rng.bernoulli(p_drop);
+        let p_flip = if self.bad { fc.ge_p_bg } else { fc.ge_p_gb };
+        if rng.bernoulli(p_flip) {
+            self.bad = !self.bad;
+        }
+        dropped
+    }
+}
+
+/// Cause-classified fault counters (satellite: a timed-out exchange used
+/// to record no distinguishable cause). Folded lane → ledger → round
+/// record, so availability tables report *why* fallbacks happened.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultCounters {
+    /// Server dark (outage / availability coin) or link slower than the
+    /// timeout window.
+    pub timeouts: u64,
+    /// Transmission lost while the server was up (Bernoulli or
+    /// Gilbert–Elliott drop).
+    pub drops: u64,
+    /// Frames whose CRC check failed at decode.
+    pub corruptions: u64,
+    /// Retry attempts spent (each recharged uplink bytes and backoff).
+    pub retries: u64,
+    /// Mid-round client crashes.
+    pub crashes: u64,
+}
+
+impl FaultCounters {
+    pub fn add(&mut self, other: &FaultCounters) {
+        self.timeouts += other.timeouts;
+        self.drops += other.drops;
+        self.corruptions += other.corruptions;
+        self.retries += other.retries;
+        self.crashes += other.crashes;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.timeouts + self.drops + self.corruptions + self.retries + self.crashes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn default_is_inert_and_spec_roundtrips_off() {
+        let fc = FaultConfig::default();
+        assert!(!fc.enabled());
+        assert!(!fc.ge_enabled());
+        assert_eq!(fc.to_spec(), "off");
+        assert_eq!(FaultConfig::parse("off").unwrap(), fc);
+        assert_eq!(FaultConfig::parse("").unwrap(), fc);
+        assert!(!fc.in_outage(1));
+        assert!(fc.crash_at(1, 0).is_none());
+        assert!(!fc.is_down(3, 0));
+        assert_eq!(fc.live_count(2, 8), 8);
+        assert!(fc.quorum_met(0, 8));
+    }
+
+    #[test]
+    fn parse_full_grammar_and_roundtrip() {
+        let spec = "ge=0.05:0.3,outage=4:2:10,crash=3:1:4:2,crash=5:0:0:1,\
+                    corrupt=0.01,retry=2:0.02:2:0.5,quorum=0.5";
+        let fc = FaultConfig::parse(spec).unwrap();
+        assert!(fc.enabled());
+        assert_eq!(fc.ge_p_gb, 0.05);
+        assert_eq!(fc.ge_p_bg, 0.3);
+        assert_eq!(fc.ge_drop_bad, 1.0);
+        assert_eq!(fc.ge_drop_good, 0.0);
+        assert_eq!((fc.outage_start, fc.outage_len, fc.outage_period), (4, 2, 10));
+        assert_eq!(fc.crashes.len(), 2);
+        // Sorted by (round, client) regardless of spec order.
+        assert_eq!(fc.crashes[0], CrashSpec { round: 3, client: 1, step: 4, down_rounds: 2 });
+        assert_eq!(fc.corrupt_prob, 0.01);
+        assert_eq!((fc.retries, fc.backoff_base_s, fc.backoff_mult, fc.backoff_jitter),
+                   (2, 0.02, 2.0, 0.5));
+        assert_eq!(fc.quorum, 0.5);
+        let rt = FaultConfig::parse(&fc.to_spec()).unwrap();
+        assert_eq!(rt, fc);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        for bad in [
+            "ge=0.5",             // missing p_bg
+            "ge=2:0.5",           // probability out of range
+            "ge=0.5:0",           // bursts never end
+            "outage=0:3",         // 1-based rounds
+            "outage=5:4:2",       // period shorter than window
+            "crash=1:0:2",        // missing down_rounds
+            "crash=0:0:0:1",      // 1-based rounds
+            "crash=1:0:0:0",      // must miss ≥ 1 round
+            "crash=1:2:0:2,crash=3:2:0:1", // overlaps the recovery window
+            "retry=1:0",          // backoff base must be positive
+            "retry=1:0.1:0.5",    // mult < 1 shrinks
+            "quorum=1.5",         // fraction
+            "nonsense=1",         // unknown key
+            "ge",                 // not key=value
+        ] {
+            assert!(FaultConfig::parse(bad).is_err(), "accepted '{bad}'");
+        }
+    }
+
+    #[test]
+    fn outage_windows_single_and_periodic() {
+        let one = FaultConfig::parse("outage=4:2").unwrap();
+        let down: Vec<u64> = (1..=10).filter(|&r| one.in_outage(r)).collect();
+        assert_eq!(down, vec![4, 5]);
+
+        let periodic = FaultConfig::parse("outage=2:1:3").unwrap();
+        let down: Vec<u64> = (1..=10).filter(|&r| periodic.in_outage(r)).collect();
+        assert_eq!(down, vec![2, 5, 8]);
+    }
+
+    #[test]
+    fn crash_schedule_down_and_rejoin_windows() {
+        let fc = FaultConfig::parse("crash=3:1:4:2").unwrap();
+        // Crash round: the client runs (truncated) but is not "down".
+        assert!(fc.crash_at(3, 1).is_some());
+        assert!(!fc.is_down(3, 1));
+        // Dark for the next two rounds, back at round 6.
+        assert!(fc.is_down(4, 1));
+        assert!(fc.is_down(5, 1));
+        assert!(!fc.is_down(6, 1));
+        // Other clients unaffected.
+        assert!(fc.crash_at(3, 0).is_none());
+        assert!(!fc.is_down(4, 0));
+        assert_eq!(fc.live_count(4, 4), 3);
+        assert_eq!(fc.live_count(3, 4), 4); // crash round still counts as live
+    }
+
+    #[test]
+    fn quorum_edges() {
+        let fc = FaultConfig::parse("quorum=0.5").unwrap();
+        assert!(fc.quorum_met(4, 8));
+        assert!(fc.quorum_met(5, 8));
+        assert!(!fc.quorum_met(3, 8));
+        assert!(fc.quorum_met(0, 0));
+        // quorum=1.0 needs everyone, exactly.
+        let all = FaultConfig::parse("quorum=1").unwrap();
+        assert!(all.quorum_met(8, 8));
+        assert!(!all.quorum_met(7, 8));
+    }
+
+    #[test]
+    fn backoff_is_exponential_and_jitter_free_without_config() {
+        let fc = FaultConfig::parse("retry=3:0.1:2").unwrap();
+        let mut rng = Pcg32::seeded(1);
+        let before = rng.clone().next_u32();
+        assert_eq!(fc.backoff_s(1, &mut rng), 0.1);
+        assert_eq!(fc.backoff_s(2, &mut rng), 0.2);
+        assert_eq!(fc.backoff_s(3, &mut rng), 0.4);
+        // No jitter configured → no draws burned.
+        assert_eq!(rng.next_u32(), before);
+    }
+
+    #[test]
+    fn backoff_jitter_is_bounded_and_draws_once() {
+        let fc = FaultConfig::parse("retry=2:0.1:2:0.5").unwrap();
+        forall(0xBAC0FF, 50, |rng| {
+            let b = fc.backoff_s(1, rng);
+            assert!((0.075..0.125).contains(&b), "jittered backoff {b}");
+        });
+    }
+
+    #[test]
+    fn ge_state_stationary_drop_rate() {
+        // π_bad = 0.05 / (0.05 + 0.20) = 0.2; drop_bad=1, drop_good=0
+        // → long-run drop rate 0.2.
+        let fc = FaultConfig::parse("ge=0.05:0.2").unwrap();
+        let mut rng = Pcg32::seeded(42);
+        let mut st = GeState::init(&fc, &mut rng);
+        let n = 200_000;
+        let drops = (0..n).filter(|_| st.roll(&fc, &mut rng)).count();
+        let rate = drops as f64 / n as f64;
+        let want = fc.ge_stationary_bad();
+        assert!((rate - want).abs() < 0.01, "drop rate {rate}, want {want}");
+    }
+
+    #[test]
+    fn ge_burst_lengths_are_geometric() {
+        // Mean burst length = 1/p_bg = 5; bursts are runs of consecutive
+        // drops with drop_bad = 1.
+        let fc = FaultConfig::parse("ge=0.02:0.2").unwrap();
+        let mut rng = Pcg32::seeded(7);
+        let mut st = GeState::init(&fc, &mut rng);
+        let mut bursts = Vec::new();
+        let mut run = 0u64;
+        for _ in 0..400_000 {
+            if st.roll(&fc, &mut rng) {
+                run += 1;
+            } else if run > 0 {
+                bursts.push(run);
+                run = 0;
+            }
+        }
+        assert!(bursts.len() > 1000, "only {} bursts", bursts.len());
+        let mean = bursts.iter().sum::<u64>() as f64 / bursts.len() as f64;
+        assert!((mean - 5.0).abs() < 0.4, "mean burst {mean}, want 5");
+        // Geometric shape: P(len > 2·mean) ≈ e^-2 ≈ 0.135 for the
+        // exponential tail; a fixed-length process would have none.
+        let long = bursts.iter().filter(|&&b| b as f64 > 2.0 * mean).count();
+        let frac = long as f64 / bursts.len() as f64;
+        assert!((0.08..0.20).contains(&frac), "tail fraction {frac}");
+    }
+
+    #[test]
+    fn ge_roll_burns_exactly_two_draws() {
+        let fc = FaultConfig::parse("ge=0.3:0.3").unwrap();
+        let mut a = Pcg32::seeded(9);
+        let mut b = Pcg32::seeded(9);
+        let mut st = GeState::init(&fc, &mut a);
+        let _ = b.next_u32(); // init draw
+        for _ in 0..100 {
+            st.roll(&fc, &mut a);
+            let _ = b.next_u32();
+            let _ = b.next_u32();
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+    }
+
+    #[test]
+    fn counters_add_and_total() {
+        let mut a = FaultCounters { timeouts: 1, drops: 2, corruptions: 3, retries: 4, crashes: 5 };
+        let b = FaultCounters { timeouts: 10, drops: 20, corruptions: 30, retries: 40, crashes: 50 };
+        a.add(&b);
+        assert_eq!(a.timeouts, 11);
+        assert_eq!(a.crashes, 55);
+        assert_eq!(a.total(), 11 + 22 + 33 + 44 + 55);
+    }
+
+    #[test]
+    fn env_override_wins() {
+        // from_env_or falls through to the fallback when unset (the env
+        // panic path is intentionally untested in-process).
+        if std::env::var("SUPERSFL_FAULTS").is_err() {
+            let fb = FaultConfig::parse("corrupt=0.5").unwrap();
+            assert_eq!(FaultConfig::from_env_or(fb.clone()), fb);
+        }
+    }
+}

@@ -11,13 +11,16 @@
 //!   wall-clock is not comparable to the paper's A100 testbed).
 
 pub mod clock;
+pub mod faults;
 pub mod fleet;
 
 pub use clock::SimClock;
+pub use faults::{CrashSpec, FaultConfig, FaultCounters, GeState};
 pub use fleet::{sample_fleet, DeviceProfile};
 
 use crate::config::NetConfig;
 use crate::util::rng::Pcg32;
+use crate::wire::frame::{HEADER_LEN, TRAILER_LEN};
 use crate::wire::WireScratch;
 
 /// Outcome of one client↔server exchange attempt.
@@ -126,40 +129,69 @@ impl LinkParams {
 /// an `(encoded, raw)` pair; transfer times — and therefore the timeout
 /// behaviour — follow the **encoded** frame bytes, which is how a lossy
 /// wire codec widens the effective timeout window on slow links.
+///
+/// With a [`FaultConfig`] retry budget, failed attempts recharge real
+/// uplink frame bytes plus exponential backoff time; the returned time is
+/// the sum over all attempts, and only exhausting the budget surfaces as
+/// `TimedOut` (the paper's Alg. 3 fallback trigger). The drop roll comes
+/// from the Gilbert–Elliott channel when one is attached, else from the
+/// legacy memoryless `drop_prob` Bernoulli. With the inert default
+/// schedule this reduces to exactly one Bernoulli per call and
+/// `0.0 + t` arithmetic, so times and draw streams are bit-identical to
+/// the pre-fault simulator.
 #[allow(clippy::too_many_arguments)]
 fn exchange_impl(
     cfg: &NetConfig,
     link: &LinkParams,
     rng: &mut Pcg32,
+    mut ge: Option<&mut GeState>,
+    counters: &mut FaultCounters,
     traffic: &mut [(&mut Traffic, &mut Traffic)],
     server_up: bool,
     up: Framed,
     down: Framed,
     server_time_s: f64,
 ) -> Exchange {
-    for (t, raw) in traffic.iter_mut() {
-        t.up_bytes += up.wire;
-        raw.up_bytes += up.raw;
-    }
-    let dropped = rng.bernoulli(cfg.drop_prob);
-    if !server_up || dropped {
-        return Exchange::TimedOut {
-            time_s: cfg.timeout_s,
+    let fc = &cfg.faults;
+    let mut total_s = 0.0f64;
+    for attempt in 0..=fc.retries {
+        if attempt > 0 {
+            counters.retries += 1;
+            total_s += fc.backoff_s(attempt, rng);
+        }
+        for (t, raw) in traffic.iter_mut() {
+            t.up_bytes += up.wire;
+            raw.up_bytes += up.raw;
+        }
+        let dropped = match ge {
+            Some(ref mut st) => st.roll(fc, rng),
+            None => rng.bernoulli(cfg.drop_prob),
         };
+        if !server_up || dropped {
+            if server_up {
+                counters.drops += 1;
+            } else {
+                counters.timeouts += 1;
+            }
+            total_s += cfg.timeout_s;
+            continue;
+        }
+        let t = link.up_time(up.wire) + server_time_s + link.down_time(down.wire);
+        if t > cfg.timeout_s {
+            // Link too slow for the timeout window: same observable
+            // behaviour as an outage (paper §II-C fallback trigger).
+            counters.timeouts += 1;
+            total_s += cfg.timeout_s;
+            continue;
+        }
+        for (tr, raw) in traffic.iter_mut() {
+            tr.down_bytes += down.wire;
+            raw.down_bytes += down.raw;
+        }
+        total_s += t;
+        return Exchange::Ok { time_s: total_s };
     }
-    let t = link.up_time(up.wire) + server_time_s + link.down_time(down.wire);
-    if t > cfg.timeout_s {
-        // Link too slow for the timeout window: same observable behaviour
-        // as an outage (paper §II-C fallback trigger).
-        return Exchange::TimedOut {
-            time_s: cfg.timeout_s,
-        };
-    }
-    for (tr, raw) in traffic.iter_mut() {
-        tr.down_bytes += down.wire;
-        raw.down_bytes += down.raw;
-    }
-    Exchange::Ok { time_s: t }
+    Exchange::TimedOut { time_s: total_s }
 }
 
 /// A single client's private view of the network for one round — the
@@ -177,6 +209,12 @@ pub struct NetLane {
     link: LinkParams,
     server_up: bool,
     rng: Pcg32,
+    /// Gilbert–Elliott channel state when the bursty-link process is
+    /// configured; `None` keeps the legacy memoryless drop roll.
+    ge: Option<GeState>,
+    /// Cause-classified fault counters, folded into the client's
+    /// [`crate::orchestrator::RoundLedger`] at the barrier.
+    pub faults: FaultCounters,
     /// Encoded (on-the-link) frame bytes this lane moved.
     pub traffic: Traffic,
     /// Analytic uncompressed bytes of the same transfers.
@@ -226,17 +264,37 @@ impl NetLane {
     /// compression accounting. Draw sequence is identical to
     /// [`NetLane::exchange`] (one Bernoulli per call), so switching codecs
     /// never desynchronizes the lane's PCG stream.
+    ///
+    /// When frame-corruption injection is configured, a successful
+    /// exchange may additionally flip one payload byte of the uplink
+    /// frame sitting in [`NetLane::scratch`] — the subsequent
+    /// `decode_into` then fails its CRC check, exercising the wire
+    /// layer's integrity path end to end. The corruption rolls draw from
+    /// this lane's private stream only when `corrupt_prob > 0`, so the
+    /// inert schedule burns no extra randomness.
     pub fn exchange_framed(&mut self, up: Framed, down: Framed, server_time_s: f64) -> Exchange {
-        exchange_impl(
+        let ex = exchange_impl(
             &self.cfg,
             &self.link,
             &mut self.rng,
+            self.ge.as_mut(),
+            &mut self.faults,
             &mut [(&mut self.traffic, &mut self.raw_traffic)],
             self.server_up,
             up,
             down,
             server_time_s,
-        )
+        );
+        let p = self.cfg.faults.corrupt_prob;
+        if ex.is_ok() && p > 0.0 && self.rng.bernoulli(p) {
+            let frame = &mut self.scratch.frame;
+            if frame.len() > HEADER_LEN + TRAILER_LEN {
+                let payload = frame.len() - HEADER_LEN - TRAILER_LEN;
+                let idx = HEADER_LEN + self.rng.uniform_usize(payload);
+                frame[idx] ^= 0xFF;
+            }
+        }
+        ex
     }
 }
 
@@ -248,9 +306,18 @@ pub struct NetworkSim {
     rng: Pcg32,
     /// Base seed for the per-round per-client lane streams.
     lane_seed: u64,
+    /// 1-based round counter (advanced by [`NetworkSim::begin_round`]);
+    /// drives the outage-window schedule.
+    round: u64,
+    /// Gilbert–Elliott state for the serial exchange path (the round
+    /// loops use per-lane states instead).
+    ge: Option<GeState>,
     /// Whether the server answers during the current round (Table III's
     /// "server gradient availability" is a per-round schedule).
     server_up_this_round: bool,
+    /// Fault counters for the serial path plus everything folded back
+    /// from lanes via [`NetworkSim::absorb_lane`].
+    pub faults: FaultCounters,
     /// Encoded (on-the-link) frame bytes, whole run.
     pub traffic: Traffic,
     /// Traffic accumulated during the current round only.
@@ -265,13 +332,21 @@ impl NetworkSim {
     pub fn new(cfg: NetConfig, profiles: Vec<DeviceProfile>, mut rng: Pcg32) -> Self {
         let links = profiles.iter().map(|p| LinkParams::of(p, &cfg)).collect();
         let lane_seed = rng.next_u64();
+        let ge = if cfg.faults.ge_enabled() {
+            Some(GeState::init(&cfg.faults, &mut rng))
+        } else {
+            None
+        };
         NetworkSim {
             cfg,
             profiles,
             links,
             rng,
             lane_seed,
+            round: 0,
+            ge,
             server_up_this_round: true,
+            faults: FaultCounters::default(),
             traffic: Traffic::default(),
             round_traffic: Traffic::default(),
             raw_traffic: Traffic::default(),
@@ -284,9 +359,13 @@ impl NetworkSim {
     }
 
     /// Draw the server-availability schedule for a new round and reset the
-    /// per-round byte counters.
+    /// per-round byte counters. The availability coin is drawn every round
+    /// regardless of the outage schedule so that configuring an outage
+    /// window never shifts the simulator's draw stream for other rounds.
     pub fn begin_round(&mut self) {
-        self.server_up_this_round = self.rng.bernoulli(self.cfg.server_availability);
+        self.round += 1;
+        let coin = self.rng.bernoulli(self.cfg.server_availability);
+        self.server_up_this_round = coin && !self.cfg.faults.in_outage(self.round);
         self.round_traffic = Traffic::default();
         self.round_raw_traffic = Traffic::default();
     }
@@ -301,20 +380,34 @@ impl NetworkSim {
     /// parallel round engine bit-identical across thread counts.
     pub fn lane(&self, client: usize, round: u64) -> NetLane {
         let round_salt = round.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Pcg32::new(self.lane_seed ^ round_salt, client as u64 + 1);
+        let ge = if self.cfg.faults.ge_enabled() {
+            // Channel state seeded from the lane's own stream by a
+            // stationary-distribution draw: the burst process lives
+            // within a round's `local_steps` exchanges, and the lane
+            // stays a pure function of (seed, round, client).
+            Some(GeState::init(&self.cfg.faults, &mut rng))
+        } else {
+            None
+        };
         NetLane {
             cfg: self.cfg.clone(),
             link: self.links[client],
             server_up: self.server_up_this_round,
-            rng: Pcg32::new(self.lane_seed ^ round_salt, client as u64 + 1),
+            rng,
+            ge,
+            faults: FaultCounters::default(),
             traffic: Traffic::default(),
             raw_traffic: Traffic::default(),
             scratch: WireScratch::default(),
         }
     }
 
-    /// Fold a finished lane's byte counters back into the global and
-    /// per-round accounting (called at the barrier, in client-id order).
+    /// Fold a finished lane's byte and fault counters back into the
+    /// global and per-round accounting (called at the barrier, in
+    /// client-id order).
     pub fn absorb_lane(&mut self, lane: &NetLane) {
+        self.faults.add(&lane.faults);
         self.traffic.add(&lane.traffic);
         self.round_traffic.add(&lane.traffic);
         self.raw_traffic.add(&lane.raw_traffic);
@@ -348,6 +441,8 @@ impl NetworkSim {
             &self.cfg,
             &self.links[client],
             &mut self.rng,
+            self.ge.as_mut(),
+            &mut self.faults,
             &mut [
                 (&mut self.traffic, &mut self.raw_traffic),
                 (&mut self.round_traffic, &mut self.round_raw_traffic),
@@ -707,6 +802,176 @@ mod tests {
             let eb = b.exchange_framed(Framed::uncoded(64), Framed::uncoded(64), 0.0);
             assert_eq!(ea.is_ok(), eb.is_ok(), "draw {i}");
         }
+    }
+
+    fn sim_faults(spec: &str, avail: f64, drop: f64) -> NetworkSim {
+        let fleet = FleetConfig {
+            clients: 4,
+            ..FleetConfig::default()
+        };
+        let profiles = sample_fleet(&fleet, &EnergyConfig::default(), &mut Pcg32::seeded(1));
+        let cfg = NetConfig {
+            server_availability: avail,
+            drop_prob: drop,
+            faults: FaultConfig::parse(spec).unwrap(),
+            ..NetConfig::default()
+        };
+        NetworkSim::new(cfg, profiles, Pcg32::seeded(2))
+    }
+
+    #[test]
+    fn retry_recharges_uplink_bytes_and_backoff_time() {
+        // Every attempt drops (p = 1): the budget is exhausted, each
+        // attempt recharges the uplink frame, and the elapsed time is
+        // three timeouts plus the 0.1 s and 0.2 s backoffs.
+        let mut s = sim_faults("retry=2:0.1:2", 1.0, 1.0);
+        s.begin_round();
+        let mut lane = s.lane(0, 1);
+        let e = lane.exchange(100, 100, 0.0);
+        assert!(!e.is_ok());
+        let want = 3.0 * s.cfg.timeout_s + 0.1 + 0.2;
+        assert!((e.time_s() - want).abs() < 1e-12, "time {}", e.time_s());
+        assert_eq!(lane.traffic.up_bytes, 300);
+        assert_eq!(lane.traffic.down_bytes, 0);
+        assert_eq!(lane.faults.retries, 2);
+        assert_eq!(lane.faults.drops, 3);
+        assert_eq!(lane.faults.timeouts, 0);
+
+        // Absorbing the lane folds the fault counters too.
+        s.absorb_lane(&lane);
+        assert_eq!(s.faults.drops, 3);
+        assert_eq!(s.faults.retries, 2);
+    }
+
+    #[test]
+    fn retry_recovers_from_transient_drops() {
+        // p = 0.5 with a generous budget: nearly every exchange should
+        // eventually succeed, and successes after a failed attempt carry
+        // the failed attempts' time.
+        let mut s = sim_faults("retry=6:0.01:2", 1.0, 0.5);
+        s.begin_round();
+        let mut lane = s.lane(1, 1);
+        let mut oks = 0;
+        let mut recovered = 0;
+        for _ in 0..200 {
+            let e = lane.exchange(10, 10, 0.0);
+            if e.is_ok() {
+                oks += 1;
+                if e.time_s() > s.cfg.timeout_s {
+                    recovered += 1;
+                }
+            }
+        }
+        assert!(oks > 190, "oks {oks}");
+        assert!(recovered > 30, "recovered {recovered}");
+        assert!(lane.faults.retries > 0);
+    }
+
+    #[test]
+    fn server_down_classifies_as_timeout_not_drop() {
+        let mut s = sim_faults("", 0.0, 0.0);
+        s.begin_round();
+        let mut lane = s.lane(0, 1);
+        assert!(!lane.exchange(10, 10, 0.0).is_ok());
+        assert_eq!(lane.faults.timeouts, 1);
+        assert_eq!(lane.faults.drops, 0);
+    }
+
+    #[test]
+    fn outage_windows_darken_scheduled_rounds() {
+        let mut s = sim_faults("outage=2:2", 1.0, 0.0);
+        let mut ups = Vec::new();
+        for _ in 1..=5 {
+            s.begin_round();
+            ups.push(s.server_available());
+        }
+        assert_eq!(ups, vec![true, false, false, true, true]);
+
+        // The availability coin is still drawn during outage rounds, so
+        // the outage window does not shift later rounds' draws: two sims
+        // differing only in the outage schedule agree on every round
+        // outside the windows.
+        let mut a = sim_faults("outage=2:2", 0.5, 0.0);
+        let mut b = sim_faults("", 0.5, 0.0);
+        for round in 1..=50u64 {
+            a.begin_round();
+            b.begin_round();
+            if !(2..=3).contains(&round) {
+                assert_eq!(a.server_available(), b.server_available(), "round {round}");
+            }
+        }
+    }
+
+    #[test]
+    fn ge_lanes_drop_in_bursts_at_the_stationary_rate() {
+        // π_bad = 0.05 / (0.05 + 0.25) = 1/6.
+        let mut s = sim_faults("ge=0.05:0.25", 1.0, 0.0);
+        s.begin_round();
+        let mut drops = 0usize;
+        let mut total = 0usize;
+        let mut longest_burst = 0usize;
+        for round in 1..=50u64 {
+            for client in 0..4 {
+                let mut lane = s.lane(client, round);
+                let mut run = 0usize;
+                for _ in 0..40 {
+                    total += 1;
+                    if !lane.exchange(10, 10, 0.0).is_ok() {
+                        drops += 1;
+                        run += 1;
+                        longest_burst = longest_burst.max(run);
+                    } else {
+                        run = 0;
+                    }
+                }
+            }
+        }
+        let rate = drops as f64 / total as f64;
+        assert!((rate - 1.0 / 6.0).abs() < 0.04, "drop rate {rate}");
+        // Mean burst length is 1/p_bg = 4 — long runs must exist, which
+        // a memoryless Bernoulli at the same rate would make vanishingly
+        // rare within 40-draw windows.
+        assert!(longest_burst >= 4, "longest burst {longest_burst}");
+
+        // GE lanes stay pure functions of (seed, round, client).
+        let mut a = s.lane(2, 7);
+        let mut b = s.lane(2, 7);
+        for _ in 0..50 {
+            let (ea, eb) = (a.exchange(10, 10, 0.0), b.exchange(10, 10, 0.0));
+            assert_eq!(ea.is_ok(), eb.is_ok());
+            assert_eq!(ea.time_s().to_bits(), eb.time_s().to_bits());
+        }
+    }
+
+    #[test]
+    fn corruption_flips_the_uplink_frame_so_decode_fails() {
+        use crate::wire::{MsgType, Wire, WireCodecKind};
+        let mut s = sim_faults("corrupt=1", 1.0, 0.0);
+        s.begin_round();
+        let w = Wire::new(WireCodecKind::Fp32);
+        let data: Vec<f32> = (0..64).map(|i| i as f32).collect();
+        let mut lane = s.lane(0, 1);
+        let len = w.encode_to(MsgType::Smashed, &data, 0.0, &mut lane.scratch).len() as u64;
+        let e = lane.exchange_framed(
+            Framed { wire: len, raw: 256 },
+            Framed { wire: len, raw: 256 },
+            0.001,
+        );
+        assert!(e.is_ok());
+        // corrupt=1 guarantees the hit; the CRC check must now fail.
+        let mut out = Vec::new();
+        assert!(w.decode_into(&lane.scratch.frame, &mut out).is_err());
+
+        // With corruption off, the same frame decodes fine and the lane
+        // burns no extra draws (pinned against the corrupt lane's drift).
+        let mut clean = sim_faults("", 1.0, 0.0).lane(0, 1);
+        let len = w.encode_to(MsgType::Smashed, &data, 0.0, &mut clean.scratch).len() as u64;
+        clean.exchange_framed(
+            Framed { wire: len, raw: 256 },
+            Framed { wire: len, raw: 256 },
+            0.001,
+        );
+        assert!(w.decode_into(&clean.scratch.frame, &mut out).is_ok());
     }
 
     #[test]

@@ -43,6 +43,14 @@
 //!    the partition shape cannot affect any lane's result — only the merge
 //!    (step 3) touches shared state, and it runs on the caller's thread.
 //!
+//! The fault engine ([`crate::network::faults`]) preserves the contract:
+//! every fault process (Gilbert–Elliott channel state, crash/churn
+//! schedule, outage windows, corruption and backoff-jitter rolls) is a
+//! pure function of `(run seed, round, client)` and the static
+//! `FaultConfig`, and the quorum decision at the barrier depends only on
+//! the id-ordered ledger set — so a hostile schedule is exactly as
+//! thread-invariant as a fault-free run.
+//!
 //! Consequently `threads = 1` and `threads = N` produce identical metrics
 //! bit for bit (`orchestrator::tests` asserts this end to end against the
 //! artifacts; the unit tests below assert it for the engine itself).
@@ -66,7 +74,7 @@
 //! sequence is unchanged.
 
 use crate::energy::{EnergyMeter, PowerState};
-use crate::network::DeviceProfile;
+use crate::network::{DeviceProfile, FaultCounters};
 use crate::Result;
 
 /// Per-client accounting for one round, merged deterministically at the
@@ -86,6 +94,11 @@ pub struct RoundLedger {
     pub server_busy_s: f64,
     pub fallback_steps: usize,
     pub server_steps: usize,
+    /// Cause-classified fault counts observed by this client's lane
+    /// (timeouts, drops, corruptions, retries, crashes) — folded into the
+    /// round record at the barrier so availability tables can report
+    /// *why* fallbacks happened.
+    pub faults: FaultCounters,
 }
 
 impl RoundLedger {

@@ -43,7 +43,9 @@ use crate::data::{dirichlet_partition, ClientShard, Dataset, SyntheticSpec, Synt
 use crate::energy::{cost::ModelGeometry, CostModel, EnergyMeter, PowerState};
 use crate::fedserver::ClientUpdate;
 use crate::metrics::{RoundRecord, RunMetrics};
-use crate::network::{sample_fleet, DeviceProfile, Framed, NetLane, NetworkSim, SimClock};
+use crate::network::{
+    sample_fleet, DeviceProfile, FaultConfig, FaultCounters, Framed, NetLane, NetworkSim, SimClock,
+};
 use crate::runtime::Runtime;
 use crate::server::ServerState;
 use crate::util::math;
@@ -86,6 +88,12 @@ pub struct RunResult {
 impl Harness {
     /// Build the simulated world for a config.
     pub fn prepare(rt: &Runtime, cfg: &ExperimentConfig) -> Result<Harness> {
+        // Resolve the fault schedule once, up front (`SUPERSFL_FAULTS`
+        // wins over the config — the CI chaos leg pins it), so the
+        // harness config and the network simulator always agree.
+        let mut cfg = cfg.clone();
+        cfg.net.faults = FaultConfig::from_env_or(cfg.net.faults.clone());
+        let cfg = &cfg;
         cfg.validate()?;
         let m = rt.model().clone();
         let mut root = Pcg32::new(cfg.train.seed, 0xD15EA5E);
@@ -208,13 +216,21 @@ impl Harness {
     /// Merge one round's lane ledgers into the shared accounting, in
     /// client-id order (the determinism contract's merge step), advance
     /// the clock by the straggler max, and return
-    /// `(round_dt, busy, fallback_steps, server_steps)`.
-    pub fn absorb_ledgers(&mut self, ledgers: &[RoundLedger]) -> (f64, Vec<f64>, usize, usize) {
+    /// `(round_dt, busy, fallback_steps, server_steps, faults)`.
+    ///
+    /// Ledgers for dead (churned-out) clients simply don't exist that
+    /// round: their busy/branch slots stay 0 and they contribute nothing
+    /// to the straggler max.
+    pub fn absorb_ledgers(
+        &mut self,
+        ledgers: &[RoundLedger],
+    ) -> (f64, Vec<f64>, usize, usize, FaultCounters) {
         let n = self.clients.len();
         let mut busy = vec![0.0f64; n];
         let mut branch = vec![0.0f64; n];
         let mut fallback_steps = 0usize;
         let mut server_steps = 0usize;
+        let mut faults = FaultCounters::default();
         for l in ledgers {
             busy[l.client] = l.busy_s;
             branch[l.client] = l.branch_s;
@@ -222,9 +238,10 @@ impl Harness {
             self.meter.server_busy(l.server_busy_s);
             fallback_steps += l.fallback_steps;
             server_steps += l.server_steps;
+            faults.add(&l.faults);
         }
         let round_dt = self.clock.advance_parallel(&branch);
-        (round_dt, busy, fallback_steps, server_steps)
+        (round_dt, busy, fallback_steps, server_steps, faults)
     }
 
     /// Charge a barrier phase (aggregation upload / broadcast download):
@@ -252,6 +269,7 @@ impl Harness {
         accuracy: f64,
         fallback_steps: usize,
         server_steps: usize,
+        faults: FaultCounters,
     ) -> bool {
         for (i, &b) in busy.iter().enumerate() {
             let idle = (round_dt - b).max(0.0);
@@ -295,6 +313,11 @@ impl Harness {
             energy_j: self.meter.total_energy_j(),
             fallback_steps,
             server_steps,
+            timeouts: faults.timeouts,
+            drops: faults.drops,
+            corruptions: faults.corruptions,
+            retries: faults.retries,
+            crashes: faults.crashes,
         };
         self.records.push(rec);
         match self.cfg.train.target_accuracy {
@@ -346,6 +369,10 @@ struct SsflLane<'a> {
     clf: &'a mut [f32],
     /// Simulated server compute per step for this client's depth.
     srv_time: f64,
+    /// Local steps this lane actually runs this round — truncated below
+    /// `cfg.train.local_steps` when the fault schedule crashes the
+    /// client mid-round.
+    steps: usize,
     net: NetLane,
     ledger: RoundLedger,
 }
@@ -395,14 +422,65 @@ fn run_ssfl(rt: &Runtime, h: &mut Harness) -> Result<()> {
     // uploads + broadcasts run on the main thread; the per-step frames
     // inside the fan-out use each lane's own scratch).
     let mut bar_scratch = WireScratch::default();
+    // The fault schedule (resolved once in `prepare`; inert by default).
+    // Aliveness, crash points and quorum are pure functions of
+    // (round, schedule), so every fault decision below is identical for
+    // any `--threads N`.
+    let fc = h.cfg.net.faults.clone();
 
     for round in 1..=h.cfg.train.rounds {
+        let round_u = round as u64;
         h.net.begin_round();
 
         // When the server is down for the whole round every exchange
         // times out before touching the lane server state, so the
         // O(clients × |θ|) snapshot refresh + delta merge can be skipped.
         let server_up = h.net.server_available();
+
+        // ---- Churn: dead clients sit out; rejoiners resync first ----
+        // A client whose crash window just ended holds a stale prefix:
+        // before it rejoins the round it downloads the current global
+        // prefix as one charged Broadcast frame (the reconnect-with-
+        // resume semantics a real TCP transport inherits). Its local
+        // classifier φ_i survived the outage, so training resumes
+        // immediately (Alg. 3's head is the client's own).
+        let mut resync_t = vec![0.0f64; n];
+        let mut any_resync = false;
+        for ci in 0..n {
+            if fc.is_down(round_u, ci) {
+                // Missed round: reset the loss accumulators so stale
+                // means never leak into this round's metrics.
+                h.clients[ci].begin_round();
+                h.clients[ci].missed_rounds += 1;
+                continue;
+            }
+            if h.clients[ci].missed_rounds > 0 {
+                let prefix_elems = h.clients[ci].enc.len();
+                let frame_len = h
+                    .wire
+                    .encode_to(
+                        MsgType::Broadcast,
+                        &h.server.enc[..prefix_elems],
+                        0.0,
+                        &mut bar_scratch,
+                    )
+                    .len() as u64;
+                let dec = h.wire.decode(&bar_scratch.frame)?;
+                resync_t[ci] = h.net.bulk_down_framed(
+                    ci,
+                    Framed {
+                        wire: frame_len,
+                        raw: (prefix_elems * 4) as u64,
+                    },
+                );
+                h.clients[ci].sync_from_global(&dec.data);
+                h.clients[ci].missed_rounds = 0;
+                any_resync = true;
+            }
+        }
+        if any_resync {
+            h.charge_barrier_phase(&resync_t);
+        }
 
         if server_up {
             // Round-start snapshots (reused buffers — no fresh allocations).
@@ -434,13 +512,26 @@ fn run_ssfl(rt: &Runtime, h: &mut Harness) -> Result<()> {
             let mut srv_it = lane_srv.iter_mut();
             let mut clf_it = lane_clf.iter_mut();
             for (ci, client) in clients.iter_mut().enumerate() {
+                let srv = srv_it.next().expect("lane buffers sized to fleet");
+                let clf = clf_it.next().expect("lane buffers sized to fleet");
+                // Dead (churned-out) clients get no lane this round; the
+                // lane set and every surviving lane's RNG stream stay
+                // pure functions of (seed, round, client).
+                if fc.is_down(round_u, ci) {
+                    continue;
+                }
+                let steps = fc
+                    .crash_at(round_u, ci)
+                    .map(|c| c.step.min(local_steps))
+                    .unwrap_or(local_steps);
                 lanes.push(SsflLane {
                     client,
                     profile: &profiles[ci],
-                    srv: srv_it.next().expect("lane buffers sized to fleet"),
-                    clf: clf_it.next().expect("lane buffers sized to fleet"),
+                    srv,
+                    clf,
                     srv_time: srv_times[ci],
-                    net: net.lane(ci, round as u64),
+                    steps,
+                    net: net.lane(ci, round_u),
                     ledger: RoundLedger::new(ci),
                 });
             }
@@ -449,7 +540,7 @@ fn run_ssfl(rt: &Runtime, h: &mut Harness) -> Result<()> {
                 let depth = lane.client.depth;
                 let srv_time = lane.srv_time;
                 lane.client.begin_round();
-                for _ in 0..local_steps {
+                for _ in 0..lane.steps {
                     let batch = lane.client.shard.next_batch(train, batch_n);
 
                     // Phase 1 (always; also the entire fallback step).
@@ -485,7 +576,21 @@ fn run_ssfl(rt: &Runtime, h: &mut Harness) -> Result<()> {
                         // Lane-local server step against the round-start
                         // suffix snapshot (merged at the barrier), on the
                         // server's *decoded* view of the activations.
-                        wire.decode_into(&lane.net.scratch.frame, &mut lane.net.scratch.decoded)?;
+                        //
+                        // A frame that fails the CRC/decode here is an
+                        // exchange fault, not a programming error: count
+                        // it on the ledger and take the Alg. 3 fallback
+                        // instead of aborting the run — the corruption
+                        // injector exercises this path end to end.
+                        if wire
+                            .decode_into(&lane.net.scratch.frame, &mut lane.net.scratch.decoded)
+                            .is_err()
+                        {
+                            lane.net.faults.corruptions += 1;
+                            lane.client.fallback_update(&local);
+                            lane.ledger.fallback_steps += 1;
+                            continue;
+                        }
                         let out = rt.server_step(
                             depth,
                             classes,
@@ -520,7 +625,18 @@ fn run_ssfl(rt: &Runtime, h: &mut Harness) -> Result<()> {
                                 wire.label()
                             )));
                         }
-                        wire.decode_into(&lane.net.scratch.frame, &mut lane.net.scratch.decoded)?;
+                        if wire
+                            .decode_into(&lane.net.scratch.frame, &mut lane.net.scratch.decoded)
+                            .is_err()
+                        {
+                            // The server stepped but the returned g_z
+                            // frame was unusable: the client falls back
+                            // to its local-only update for this step.
+                            lane.net.faults.corruptions += 1;
+                            lane.client.fallback_update(&local);
+                            lane.ledger.fallback_steps += 1;
+                            continue;
+                        }
 
                         // Phase 2 client backprop + Phase 3 fusion.
                         lane.client.phase2_phase3(
@@ -547,21 +663,28 @@ fn run_ssfl(rt: &Runtime, h: &mut Harness) -> Result<()> {
                 Ok(())
             })?;
 
-            // Barrier: fold lane traffic + hand the ledgers out, id order.
+            // Barrier: fold lane traffic + fault counters and hand the
+            // ledgers out, id order. Mid-round crashers get their crash
+            // stamped here, while the lane identity is still at hand.
             lanes
                 .into_iter()
                 .map(|lane| {
                     net.absorb_lane(&lane.net);
-                    lane.ledger
+                    let mut ledger = lane.ledger;
+                    ledger.faults.add(&lane.net.faults);
+                    if fc.crash_at(round_u, ledger.client).is_some() {
+                        ledger.faults.crashes += 1;
+                    }
+                    ledger
                 })
                 .collect()
         };
 
-        let (round_dt, busy, fallback_steps, server_steps) = h.absorb_ledgers(&ledgers);
+        let (round_dt, busy, fallback_steps, server_steps, faults) = h.absorb_ledgers(&ledgers);
 
         // ---- Merge lane server deltas into the shared super-network ----
-        // (id order; θ[ℓ] += (θ_lane[ℓ] − θ_snapshot[ℓ]) / n; all-zero
-        // and skipped when the server was down this round)
+        // (id order; θ[ℓ] += (θ_lane[ℓ] − θ_snapshot[ℓ]) / n_live;
+        // all-zero and skipped when the server was down this round)
         //
         // The deltas are **fleet-normalized**: every lane trains the
         // same round-start snapshot, so summing raw deltas applies n×
@@ -583,9 +706,26 @@ fn run_ssfl(rt: &Runtime, h: &mut Harness) -> Result<()> {
         // trajectory uses 1/n.) Deterministic and thread-invariant
         // exactly like the sum was (fixed factor, id-order fold on
         // this thread).
-        if server_up {
-            let inv_n = 1.0f32 / n as f32;
+        //
+        // Quorum barrier: the merge proceeds only once at least a
+        // `quorum` fraction of the round's *live* lanes reported a
+        // server-assisted step (mid-round crashers don't report; dead
+        // clients aren't live). Absence is participant-normalized —
+        // the divisor is n_live, not the fleet size — so a surviving
+        // cohort moves the shared layers at its own mean step size.
+        // With the inert default schedule quorum is 0 and n_live == n,
+        // making this bit-identical to the unconditional 1/n merge.
+        let n_live = fc.live_count(round_u, n);
+        let reporting = ledgers
+            .iter()
+            .filter(|l| l.server_steps > 0 && fc.crash_at(round_u, l.client).is_none())
+            .count();
+        if server_up && n_live > 0 && fc.quorum_met(reporting, n_live) {
+            let inv_n = 1.0f32 / n_live as f32;
             for (ci, srv) in lane_srv.iter().enumerate() {
+                if fc.is_down(round_u, ci) || fc.crash_at(round_u, ci).is_some() {
+                    continue;
+                }
                 let off = enc_len - srv.len();
                 let dst = &mut h.server.enc[off..];
                 for ((d, &l), &p) in
@@ -614,9 +754,15 @@ fn run_ssfl(rt: &Runtime, h: &mut Harness) -> Result<()> {
         // charged with the actual frame bytes, classifier included (the
         // seed accounting charged `enc_bytes()` alone).
         let mut agg_branch = vec![0.0f64; n];
-        // (prefix elems, decoded payload, header loss) per client.
-        let mut uploads: Vec<(usize, Vec<f32>, f64)> = Vec::with_capacity(n);
+        // (client id, prefix elems, decoded payload, header loss) per
+        // participant — dead and mid-round-crashed clients ship nothing
+        // this round (a crasher's next contribution comes after the
+        // charged resync on rejoin).
+        let mut uploads: Vec<(usize, usize, Vec<f32>, f64)> = Vec::with_capacity(n);
         for ci in 0..n {
+            if fc.is_down(round_u, ci) || fc.crash_at(round_u, ci).is_some() {
+                continue;
+            }
             let c = &h.clients[ci];
             let payload = c.upload_payload();
             let loss = c.aggregation_loss(tpgf_mode, total_layers).unwrap_or(1.0);
@@ -632,29 +778,30 @@ fn run_ssfl(rt: &Runtime, h: &mut Harness) -> Result<()> {
                 },
             );
             let dec = h.wire.decode(&bar_scratch.frame)?;
-            uploads.push((c.enc.len(), dec.data, dec.aux));
+            uploads.push((ci, c.enc.len(), dec.data, dec.aux));
         }
         h.charge_barrier_phase(&agg_branch);
 
-        {
-            let updates: Vec<ClientUpdate<'_>> = h
-                .clients
+        if !uploads.is_empty() {
+            let updates: Vec<ClientUpdate<'_>> = uploads
                 .iter()
-                .zip(uploads.iter())
-                .map(|(c, (prefix_elems, data, loss))| ClientUpdate {
-                    client: c.id,
-                    depth: c.depth,
-                    params: &data[..*prefix_elems],
-                    loss: *loss,
+                .map(|(ci, prefix_elems, data, loss)| {
+                    let c = &h.clients[*ci];
+                    ClientUpdate {
+                        client: c.id,
+                        depth: c.depth,
+                        params: &data[..*prefix_elems],
+                        loss: *loss,
+                    }
                 })
                 .collect();
             h.server
                 .aggregate_updates(&updates, h.cfg.ssfl.lambda, h.cfg.ssfl.eps);
+            // Aggregation itself: one pass over the encoder on the server.
+            let agg_compute = h.cost.time_s(2.0 * enc_len as f64, server_flops);
+            h.meter.server_busy(agg_compute);
+            h.clock.advance(agg_compute);
         }
-        // Aggregation itself: one pass over the encoder on the server.
-        let agg_compute = h.cost.time_s(2.0 * enc_len as f64, server_flops);
-        h.meter.server_busy(agg_compute);
-        h.clock.advance(agg_compute);
 
         // ---- Broadcast the refreshed prefixes ----
         // One Broadcast frame per client; the client syncs from the
@@ -667,6 +814,11 @@ fn run_ssfl(rt: &Runtime, h: &mut Harness) -> Result<()> {
         // (prefix elems, frame bytes, decoded tensor) per distinct depth.
         let mut bc_cache: Vec<(usize, u64, Vec<f32>)> = Vec::new();
         for ci in 0..n {
+            // Dead and mid-round-crashed clients receive no broadcast:
+            // they catch up through the charged resync when they rejoin.
+            if fc.is_down(round_u, ci) || fc.crash_at(round_u, ci).is_some() {
+                continue;
+            }
             let prefix_elems = h.clients[ci].enc.len();
             let slot = match bc_cache.iter().position(|(e, _, _)| *e == prefix_elems) {
                 Some(i) => i,
@@ -699,7 +851,7 @@ fn run_ssfl(rt: &Runtime, h: &mut Harness) -> Result<()> {
 
         // ---- Evaluate + record ----
         let acc = h.eval_global(rt)?;
-        let hit = h.finish_round(round, round_dt, &busy, acc, fallback_steps, server_steps);
+        let hit = h.finish_round(round, round_dt, &busy, acc, fallback_steps, server_steps, faults);
         if hit {
             break;
         }
@@ -757,7 +909,12 @@ mod tests {
         assert!(!res.metrics.wire_codec.is_empty());
         assert!(res.metrics.total_sim_time_s > 0.0);
         assert!(res.metrics.total_energy_j > 0.0);
-        assert!(res.metrics.rounds[0].server_steps > 0);
+        if std::env::var("SUPERSFL_FAULTS").is_err() {
+            // Under an injected chaos schedule a short run may lose any
+            // individual round's exchanges; only assert this baseline
+            // property on a clean network.
+            assert!(res.metrics.rounds[0].server_steps > 0);
+        }
         assert!(res.metrics.host_wall_s > 0.0);
         assert_eq!(res.depths.len(), 4);
     }
@@ -808,6 +965,11 @@ mod tests {
                     assert_eq!(ra.energy_j.to_bits(), rb.energy_j.to_bits());
                     assert_eq!(ra.fallback_steps, rb.fallback_steps);
                     assert_eq!(ra.server_steps, rb.server_steps);
+                    assert_eq!(ra.timeouts, rb.timeouts);
+                    assert_eq!(ra.drops, rb.drops);
+                    assert_eq!(ra.corruptions, rb.corruptions);
+                    assert_eq!(ra.retries, rb.retries);
+                    assert_eq!(ra.crashes, rb.crashes);
                 }
             }
         }
@@ -823,6 +985,10 @@ mod tests {
     fn ssfl_round_bytes_match_frame_arithmetic() {
         if std::env::var("SUPERSFL_WIRE").is_ok() {
             return; // the env override changes the frame sizes pinned here
+        }
+        if std::env::var("SUPERSFL_FAULTS").is_ok() {
+            return; // injected drops/retries re-charge frames; the clean
+                    // arithmetic below assumes a failure-free network
         }
         let rt = runtime();
         let cfg = tiny_cfg();
@@ -890,6 +1056,9 @@ mod tests {
     fn lossy_codecs_compress_3x_and_int8_matches_fp32_final_metrics() {
         if std::env::var("SUPERSFL_WIRE").is_ok() {
             return; // the env override would pin every run to one codec
+        }
+        if std::env::var("SUPERSFL_FAULTS").is_ok() {
+            return; // the codec-accuracy criteria assume a clean network
         }
         let rt = runtime();
         let mut base = ExperimentConfig::default()
@@ -1001,6 +1170,54 @@ mod tests {
         for r in &res.metrics.rounds {
             assert_eq!(r.server_steps, 0);
             assert!(r.fallback_steps > 0);
+        }
+    }
+
+    /// Satellite bugfix regression: a corrupted frame on the round hot
+    /// path must surface as an exchange fault (ledger count + Alg. 3
+    /// fallback), not abort the run. `corrupt=1` flips a payload byte of
+    /// every successful uplink frame, so every step either times out or
+    /// fails its CRC — and the run still completes all rounds.
+    #[test]
+    fn corrupted_frames_fall_back_instead_of_aborting() {
+        if std::env::var("SUPERSFL_FAULTS").is_ok() {
+            return; // this test pins its own schedule
+        }
+        let rt = runtime();
+        let mut cfg = tiny_cfg();
+        cfg.net.faults = FaultConfig::parse("corrupt=1").unwrap();
+        let res = run_experiment(&rt, &cfg).unwrap();
+        assert_eq!(res.metrics.rounds.len(), 2);
+        let fallback: usize = res.metrics.rounds.iter().map(|r| r.fallback_steps).sum();
+        let corruptions: u64 = res.metrics.rounds.iter().map(|r| r.corruptions).sum();
+        assert!(fallback > 0, "corrupted exchanges must take the fallback");
+        assert!(corruptions > 0, "CRC failures must be counted");
+        assert_eq!(res.metrics.total_corruptions, corruptions);
+        // No server step can survive a guaranteed-corrupt uplink.
+        assert!(res.metrics.rounds.iter().all(|r| r.server_steps == 0));
+    }
+
+    /// Mid-round crash + churn + quorum: the crashed client misses the
+    /// barrier, sits out its down window, rejoins via the charged resync,
+    /// and the run completes with the crash stamped exactly once.
+    #[test]
+    fn churn_crash_rejoin_and_quorum_complete_the_run() {
+        if std::env::var("SUPERSFL_FAULTS").is_ok() {
+            return; // this test pins its own schedule
+        }
+        let rt = runtime();
+        let mut cfg = tiny_cfg();
+        cfg.train.rounds = 4;
+        cfg.net.faults = FaultConfig::parse("crash=2:1:0:1,quorum=0.5").unwrap();
+        let res = run_experiment(&rt, &cfg).unwrap();
+        assert_eq!(res.metrics.rounds.len(), 4);
+        let crashes: u64 = res.metrics.rounds.iter().map(|r| r.crashes).sum();
+        assert_eq!(crashes, 1);
+        assert_eq!(res.metrics.total_crashes, 1);
+        assert_eq!(res.metrics.rounds[1].crashes, 1, "crash lands in round 2");
+        // Accuracy stays a probability through churn.
+        for r in &res.metrics.rounds {
+            assert!((0.0..=1.0).contains(&r.accuracy));
         }
     }
 

@@ -242,6 +242,11 @@ fn final_accuracy_is_well_above_chance() {
     if !(env_wire_allows("fp32") || env_wire_allows("int8")) {
         return;
     }
+    if std::env::var("SUPERSFL_FAULTS").is_ok() {
+        return; // an injected fault schedule changes the trajectory
+                // class; the hostile-schedule accuracy guard lives in
+                // tests/fault_injection.rs
+    }
     let rt = Runtime::native();
     let res = run_experiment(&rt, &golden_cfg()).unwrap();
     let m = res.metrics;
