@@ -2,22 +2,42 @@
 //! SSFL over SFL and DFL across the evaluation grid (bars in the paper;
 //! ASCII bars + a table here). Speed-up = baseline metric / SSFL metric
 //! at the same target accuracy.
+//!
+//! A second section runs the **fleet-size ladder**: sampled SuperSFL
+//! over 1k and 10k clients with a fixed cohort, asserting that per-round
+//! client state (pooled `ClientState`s + lane buffers) stays flat while
+//! the fleet grows 10× — the scaling claim behind `--sample`.
+//!
+//! Everything is also written to `BENCH_fig4.json` at the repository
+//! root so CI can accumulate the numbers across commits.
+
+use std::path::PathBuf;
 
 use supersfl::bench_util::scenarios::{
-    efficiency_grid, efficiency_numbers, paper_table1, run_cell, Scale,
+    efficiency_grid, efficiency_numbers, fleet_ladder, ladder_config, paper_table1, run_cell,
+    smoke, Scale,
 };
 use supersfl::config::{ExperimentConfig, Method};
 use supersfl::metrics::Table;
+use supersfl::orchestrator::run_experiment;
 use supersfl::runtime::Runtime;
+use supersfl::util::json::JsonValue;
 
 fn bar(x: f64, unit: f64) -> String {
     let n = ((x / unit).round() as usize).clamp(1, 60);
     "#".repeat(n)
 }
 
+fn num(x: f64) -> JsonValue {
+    JsonValue::Number(x)
+}
+
 fn main() -> supersfl::Result<()> {
     let rt = Runtime::load_if_available(&ExperimentConfig::default().artifacts_dir);
     let scale = Scale::from_env();
+    let mut root = JsonValue::object();
+    root.set("bench", JsonValue::String("fig4_speedup".into()));
+    root.set("smoke", JsonValue::Bool(smoke()));
     println!("== Fig. 4: SSFL speed-up over SFL / DFL ==\n");
 
     let mut table = Table::new(&[
@@ -30,6 +50,7 @@ fn main() -> supersfl::Result<()> {
         "paper time ×SFL",
     ]);
 
+    let mut speedup_rows = Vec::new();
     for cell in efficiency_grid().into_iter().filter(|c| c.classes == 10) {
         let sfl = efficiency_numbers(&run_cell(&rt, &scale, &cell, Method::Sfl, 42)?);
         let dfl = efficiency_numbers(&run_cell(&rt, &scale, &cell, Method::Dfl, 42)?);
@@ -43,6 +64,13 @@ fn main() -> supersfl::Result<()> {
         let t_sfl = sfl.2 / ssfl.2.max(1e-9);
         let t_dfl = dfl.2 / ssfl.2.max(1e-9);
         eprintln!("  {label} comm x{c_sfl:.1} |{}|", bar(c_sfl, 0.5));
+        let mut row = JsonValue::object();
+        row.set("setting", JsonValue::String(label.clone()));
+        row.set("comm_x_sfl", num(c_sfl));
+        row.set("comm_x_dfl", num(c_dfl));
+        row.set("time_x_sfl", num(t_sfl));
+        row.set("time_x_dfl", num(t_dfl));
+        speedup_rows.push(row);
         table.row(&[
             label,
             format!("{c_sfl:.1}"),
@@ -53,7 +81,65 @@ fn main() -> supersfl::Result<()> {
             format!("{p_time:.1}"),
         ]);
     }
+    root.set("speedup", JsonValue::Array(speedup_rows));
     println!("{}", table.render());
     println!("shape: every speed-up factor > 1; largest gains at 100 clients (paper: up to 20× comm, 13× time).");
+
+    // ---- Fleet-size ladder: sampled participation keeps memory flat ----
+    println!("\n== scaling: sampled participation (fixed cohort, growing fleet) ==\n");
+    let mut l_table = Table::new(&[
+        "fleet",
+        "cohort",
+        "max pooled clients",
+        "max pooled lane f32",
+        "final acc",
+        "sim time s",
+    ]);
+    let mut ladder_rows = Vec::new();
+    let mut high_water: Vec<usize> = Vec::new();
+    for (label, fleet, cohort) in fleet_ladder() {
+        let res = run_experiment(&rt, &ladder_config(&scale, fleet, cohort, 42))?;
+        // The scaling claim: pooled state is bounded by the cohort, not
+        // the fleet. A rung that materializes more than its cohort is a
+        // regression, full stop.
+        assert!(
+            res.pool.max_materialized <= cohort,
+            "{label}: {} clients materialized for a cohort of {cohort}",
+            res.pool.max_materialized
+        );
+        high_water.push(res.pool.max_materialized);
+        l_table.row(&[
+            label.to_string(),
+            format!("{cohort}"),
+            format!("{}", res.pool.max_materialized),
+            format!("{}", res.pool.max_lane_f32),
+            format!("{:.3}", res.metrics.final_accuracy),
+            format!("{:.1}", res.metrics.total_sim_time_s),
+        ]);
+        let mut row = JsonValue::object();
+        row.set("fleet", num(fleet as f64));
+        row.set("cohort", num(cohort as f64));
+        row.set("max_materialized", num(res.pool.max_materialized as f64));
+        row.set("max_lane_f32", num(res.pool.max_lane_f32 as f64));
+        row.set("final_accuracy", num(res.metrics.final_accuracy));
+        row.set("sim_time_s", num(res.metrics.total_sim_time_s));
+        ladder_rows.push(row);
+    }
+    // Flat means flat: the 10k rung must pool exactly as many clients as
+    // the 1k rung (both cohort-bounded), not merely "fewer than fleet".
+    assert_eq!(
+        high_water.first(),
+        high_water.last(),
+        "pooled client high-water must not grow with the fleet"
+    );
+    root.set("fleet_ladder", JsonValue::Array(ladder_rows));
+    println!("{}", l_table.render());
+    println!("shape: pooled state is cohort-bounded — the 10k-client rung pools no more than the 1k rung.");
+
+    let path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_fig4.json");
+    std::fs::write(&path, root.to_string_pretty())?;
+    println!("wrote {}", path.display());
     Ok(())
 }

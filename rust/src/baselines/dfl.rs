@@ -26,6 +26,14 @@
 //! replica's clients in ascending id order, which keeps the per-replica
 //! update sequence identical to the sequential loop (clients of a replica
 //! were already visited in id order there).
+//!
+//! Under sampled participation (`--sample`) the per-round re-profiling
+//! sweep is skipped: jittering a 100k-device fleet every round to move
+//! splits for a 100-client cohort is exactly the O(fleet) scan sampling
+//! exists to avoid, and a freshly materialized cohort member gets a
+//! current resource-aware split at materialization anyway. Splits are
+//! static per client within a sampled run; the replica topology (`ci %
+//! replicas`) is unchanged.
 
 use crate::allocation;
 use crate::client::ClientState;
@@ -46,7 +54,7 @@ fn jittered_profiles(
 ) -> Vec<DeviceProfile> {
     base.iter()
         .map(|p| {
-            let mut q = p.clone();
+            let mut q = *p;
             q.mem_gb = (p.mem_gb * (1.0 + jitter * (rng.uniform() * 2.0 - 1.0))).max(0.5);
             q.latency_s =
                 (p.latency_s * (1.0 + jitter * (rng.uniform() * 2.0 - 1.0))).max(1e-3);
@@ -58,7 +66,7 @@ fn jittered_profiles(
 /// One client's context inside a replica worker.
 struct DflClientLane<'a> {
     client: &'a mut ClientState,
-    profile: &'a DeviceProfile,
+    profile: DeviceProfile,
     /// Prefix length of this client's current split (into the backbone).
     cut: usize,
     srv_time: f64,
@@ -75,12 +83,23 @@ struct DflReplicaLane<'a> {
     members: Vec<DflClientLane<'a>>,
 }
 
+/// One entry of the round's lane roster (profile/split resolved up
+/// front so the fan-out borrow of the harness stays disjoint).
+#[derive(Clone, Copy)]
+struct DflSlot {
+    ci: usize,
+    profile: DeviceProfile,
+    cut: usize,
+    srv_time: f64,
+    steps: usize,
+}
+
 pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
     let classes = h.cfg.data.classes;
     let dim = rt.model().dim;
     let batch_n = rt.model().batch;
     let local_steps = h.cfg.train.local_steps;
-    let n = h.clients.len();
+    let n = h.cfg.fleet.clients;
     let full_bytes = (h.server.enc.len() * 4) as u64;
     let total_layers = rt.model().depth;
     let lr_server = h.cfg.train.lr_server as f32;
@@ -88,6 +107,7 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
     let smashed = h.cost.smashed_bytes(dim);
     let smashed_elems = rt.model().smashed_elems();
     let gz_frame_len = h.wire.frame_len(MsgType::ActGrad, smashed_elems);
+    let sampled = h.cohort_k.is_some();
     let mut profile_rng = Pcg32::new(h.cfg.train.seed, 0xDF1);
 
     // Decentralized server replicas: full backbone + classifier each.
@@ -109,49 +129,21 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
 
     for round in 1..=h.cfg.train.rounds {
         let round_u = round as u64;
+        let roster = h.roster(round);
+        h.materialize_cohort(rt, &roster)?;
         h.net.begin_round();
 
         // ---- Churn: dead clients sit out; rejoiners resync first ----
-        let mut resync_t = vec![0.0f64; n];
-        let mut any_resync = false;
-        for ci in 0..n {
-            if fc.is_down(round_u, ci) {
-                h.clients[ci].begin_round();
-                h.clients[ci].missed_rounds += 1;
-                continue;
-            }
-            if h.clients[ci].missed_rounds > 0 {
-                let prefix_elems = h.clients[ci].enc.len();
-                let frame_len = h
-                    .wire
-                    .encode_to(
-                        MsgType::Broadcast,
-                        &h.server.enc[..prefix_elems],
-                        0.0,
-                        &mut bar_scratch,
-                    )
-                    .len() as u64;
-                let dec = h.wire.decode(&bar_scratch.frame)?;
-                resync_t[ci] = h.net.bulk_down_framed(
-                    ci,
-                    Framed {
-                        wire: frame_len,
-                        raw: (prefix_elems * 4) as u64,
-                    },
-                );
-                h.clients[ci].sync_from_global(&dec.data);
-                h.clients[ci].missed_rounds = 0;
-                any_resync = true;
-            }
-        }
-        if any_resync {
-            h.charge_barrier_phase(&resync_t);
-        }
+        // Shared with the SSFL loop: the resync download rides the
+        // faulted exchange path, and a failed attempt keeps the client
+        // down for the round instead of aborting the run.
+        let (sitting_out, resync_faults) = h.resync_roster(round_u, &roster, &fc);
 
         // ---- Dynamic re-profiling: resources moved, so do the splits ----
         // (round 1 keeps the initial allocation; re-profiling starts once
-        // training is underway, as in the DFL protocol.)
-        if round > 1 && h.cfg.fleet.resource_jitter > 0.0 {
+        // training is underway, as in the DFL protocol. Sampled runs skip
+        // the sweep entirely — see module docs.)
+        if !sampled && round > 1 && h.cfg.fleet.resource_jitter > 0.0 {
             let observed =
                 jittered_profiles(&h.profiles, h.cfg.fleet.resource_jitter, &mut profile_rng);
             let new_assign = allocation::allocate(&observed, &h.cfg.alloc, total_layers);
@@ -175,31 +167,55 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
             }
         }
 
-        // Depths may have moved above: refresh per-client server step
-        // times through the single shared helper.
-        let srv_times: Vec<f64> = h
-            .clients
-            .iter()
-            .map(|c| h.server_step_time(c.depth))
-            .collect();
+        // ---- Lane roster: who actually runs a branch this round ----
+        // Depths may have moved above, so split cuts and server step
+        // times are resolved per slot through the shared helpers.
+        let mut slots: Vec<DflSlot> = Vec::with_capacity(roster.len());
+        for &ci in &roster {
+            if fc.is_down(round_u, ci) || sitting_out.binary_search(&ci).is_ok() {
+                continue;
+            }
+            let depth = {
+                let c = h.client(ci);
+                if c.shard.is_empty() {
+                    continue; // sampled past the dataset: no data, no lane
+                }
+                c.depth
+            };
+            let steps = fc
+                .crash_at(round_u, ci)
+                .map(|c| c.step.min(local_steps))
+                .unwrap_or(local_steps);
+            slots.push(DflSlot {
+                ci,
+                profile: h.profile(ci),
+                cut: h.server.prefix_len(depth),
+                srv_time: h.server_step_time(depth),
+                steps,
+            });
+        }
 
         // ---- Fan out: one worker per replica; clients of a replica run
         // in id order on its private backbone copy ----
         let ledgers: Vec<RoundLedger> = {
             let Harness {
                 clients,
-                profiles,
+                pool,
                 net,
                 cost,
                 train,
-                server,
                 wire,
                 ..
             } = h;
             let cost = &*cost;
             let train = &*train;
-            let server = &*server;
             let wire = &*wire;
+
+            let states: Box<dyn Iterator<Item = (usize, &mut ClientState)>> = if sampled {
+                Box::new(pool.iter_mut().map(|(id, c)| (*id, c)))
+            } else {
+                Box::new(clients.iter_mut().enumerate())
+            };
 
             let mut groups: Vec<DflReplicaLane<'_>> = rep_enc
                 .iter_mut()
@@ -210,25 +226,24 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
                     members: Vec::new(),
                 })
                 .collect();
-            for (ci, client) in clients.iter_mut().enumerate() {
-                if fc.is_down(round_u, ci) {
+            let mut slot_it = slots.iter().peekable();
+            for (ci, client) in states {
+                let Some(s) = slot_it.peek() else { break };
+                if s.ci != ci {
                     continue;
                 }
-                let depth = client.depth;
-                let steps = fc
-                    .crash_at(round_u, ci)
-                    .map(|c| c.step.min(local_steps))
-                    .unwrap_or(local_steps);
+                let s = *slot_it.next().expect("peeked");
                 groups[ci % r].members.push(DflClientLane {
-                    profile: &profiles[ci],
-                    cut: server.prefix_len(depth),
-                    srv_time: srv_times[ci],
-                    steps,
+                    profile: s.profile,
+                    cut: s.cut,
+                    srv_time: s.srv_time,
+                    steps: s.steps,
                     net: net.lane(ci, round_u),
                     ledger: RoundLedger::new(ci),
                     client,
                 });
             }
+            debug_assert!(slot_it.peek().is_none(), "every slot must get a lane");
 
             engine::run_lanes(threads, &mut groups, |rep| {
                 for m in rep.members.iter_mut() {
@@ -240,7 +255,7 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
                         let z = rt.client_fwd(depth, &m.client.enc, &batch.x)?;
                         let t_fwd =
                             cost.time_s(cost.client_fwd_flops(depth), m.profile.flops);
-                        m.ledger.work(m.profile, t_fwd);
+                        m.ledger.work(&m.profile, t_fwd);
 
                         // Wire-framed exchange (see orchestrator docs).
                         // Frames stage in the member's reusable lane
@@ -259,7 +274,7 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
                             },
                             m.srv_time,
                         );
-                        m.ledger.exchange(m.profile, ex.time_s(), m.srv_time);
+                        m.ledger.exchange(&m.profile, ex.time_s(), m.srv_time);
 
                         if ex.is_ok() {
                             // CRC/decode failure = exchange fault: count
@@ -300,7 +315,7 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
                             math::sgd_step(&mut m.client.enc, &g_enc, lr);
                             let t_bwd =
                                 cost.time_s(cost.client_bwd_flops(depth), m.profile.flops);
-                            m.ledger.work(m.profile, t_bwd);
+                            m.ledger.work(&m.profile, t_bwd);
                         } else {
                             // Server-dependent: no local supervision, step lost.
                             m.ledger.fallback_steps += 1;
@@ -331,7 +346,8 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
                 .collect()
         };
 
-        let (round_dt, busy, stalled, server_steps, faults) = h.absorb_ledgers(&ledgers);
+        let (round_dt, busy, stalled, server_steps, mut faults) = h.absorb_ledgers(&ledgers);
+        faults.add(&resync_faults);
 
         // ---- Replica coordination: ship every replica both ways and
         // average (the "frequent coordination" term), then layer-align
@@ -355,38 +371,40 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
         // server averages the *decoded* prefixes. ----
         // Dead and mid-round-crashed clients skip the barrier; FedAvg
         // weights renormalize over the actual participants.
-        let participates =
-            |ci: usize| !fc.is_down(round_u, ci) && fc.crash_at(round_u, ci).is_none();
-        let mut agg_branch = vec![0.0f64; n];
-        let mut uploads: Vec<(usize, Vec<f32>)> = Vec::with_capacity(n);
-        for ci in 0..n {
-            if !participates(ci) {
+        let mut agg_entries: Vec<(usize, f64)> = roster.iter().map(|&id| (id, 0.0)).collect();
+        let mut uploads: Vec<(usize, Vec<f32>)> = Vec::with_capacity(slots.len());
+        for s in &slots {
+            if fc.crash_at(round_u, s.ci).is_some() {
                 continue;
             }
-            let payload = h.clients[ci].upload_payload();
+            let payload = h.client(s.ci).upload_payload();
             let frame_len = h
                 .wire
                 .encode_to(MsgType::PrefixUpload, &payload, 0.0, &mut bar_scratch)
                 .len() as u64;
-            agg_branch[ci] = h.net.bulk_up_framed(
-                ci,
+            let t = h.net.bulk_up_framed(
+                s.ci,
                 Framed {
                     wire: frame_len,
                     raw: (payload.len() * 4) as u64,
                 },
             );
-            uploads.push((ci, h.wire.decode(&bar_scratch.frame)?.data));
+            let pos = roster
+                .binary_search(&s.ci)
+                .expect("slot drawn from roster");
+            agg_entries[pos].1 = t;
+            uploads.push((s.ci, h.wire.decode(&bar_scratch.frame)?.data));
         }
-        h.charge_barrier_phase(&agg_branch);
+        h.charge_barrier_phase(&agg_entries);
         let total_samples: f64 = uploads
             .iter()
-            .map(|(ci, _)| h.clients[*ci].shard.len() as f64)
+            .map(|(ci, _)| h.client(*ci).shard.len() as f64)
             .sum();
         {
             let items: Vec<(usize, &[f32], f64)> = uploads
                 .iter()
                 .map(|(ci, data)| {
-                    let c = &h.clients[*ci];
+                    let c = h.client(*ci);
                     (
                         c.depth,
                         data.as_slice(),
@@ -420,18 +438,30 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
             wire: frame_len,
             raw: full_bytes,
         };
-        let mut bc = vec![0.0f64; n];
-        for ci in 0..n {
-            if !participates(ci) {
+        let mut bc_entries: Vec<(usize, f64)> = roster.iter().map(|&id| (id, 0.0)).collect();
+        for s in &slots {
+            if fc.crash_at(round_u, s.ci).is_some() {
                 continue; // absentees catch up via the charged resync
             }
-            bc[ci] = h.net.bulk_down_framed(ci, bc_framed);
-            h.clients[ci].sync_from_global(&bc_payload);
+            let pos = roster
+                .binary_search(&s.ci)
+                .expect("slot drawn from roster");
+            bc_entries[pos].1 = h.net.bulk_down_framed(s.ci, bc_framed);
+            h.client_mut(s.ci).sync_from_global(&bc_payload);
         }
-        h.charge_barrier_phase(&bc);
+        h.charge_barrier_phase(&bc_entries);
 
         let acc = h.eval_global(rt)?;
-        if h.finish_round(round, round_dt, &busy, acc, stalled, server_steps, faults) {
+        if h.finish_round(
+            round,
+            round_dt,
+            &roster,
+            &busy,
+            acc,
+            stalled,
+            server_steps,
+            faults,
+        ) {
             break;
         }
     }

@@ -15,6 +15,14 @@
 //! own copy → backward) runs on a worker thread of the
 //! [`crate::orchestrator::engine`], with no cross-client state until the
 //! FedAvg barrier.
+//!
+//! Under sampled participation (`--sample`) the copies pool to the
+//! cohort instead of the fleet: each lane slot holds one copy, refreshed
+//! from the current server state at round start. That is semantically
+//! the reset SplitFed performs at every round end anyway (all copies —
+//! absent clients' included — snap back to the fresh average), so the
+//! pooled path trains the same values while keeping memory flat in the
+//! fleet size.
 
 use crate::client::ClientState;
 use crate::network::{DeviceProfile, Framed, NetLane};
@@ -28,7 +36,7 @@ use crate::Result;
 /// One SplitFed client's worker-thread context for a round.
 struct SflLane<'a> {
     client: &'a mut ClientState,
-    profile: &'a DeviceProfile,
+    profile: DeviceProfile,
     /// This client's private server-side suffix copy (SplitFed semantics).
     srv: &'a mut [f32],
     /// This client's private server-side classifier copy.
@@ -37,6 +45,20 @@ struct SflLane<'a> {
     steps: usize,
     net: NetLane,
     ledger: RoundLedger,
+}
+
+/// One entry of the round's lane roster: who runs a branch, with which
+/// profile, for how many steps, training which server-side copy.
+#[derive(Clone, Copy)]
+struct SflSlot {
+    ci: usize,
+    profile: DeviceProfile,
+    steps: usize,
+    /// Index into `srv_copies`/`clf_copies`: the client id when every
+    /// copy is eagerly allocated (full participation), the slot position
+    /// when copies pool to the cohort (sampled participation). Strictly
+    /// ascending across the slot list in both modes.
+    buf: usize,
 }
 
 pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
@@ -48,15 +70,28 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
     let lr_server = h.cfg.train.lr_server as f32;
     let threads = h.cfg.threads;
     let suffix_len = h.server.suffix(depth).len();
+    let clf_len = h.server.clf_s.len();
     let smashed = h.cost.smashed_bytes(dim);
     let smashed_elems = rt.model().smashed_elems();
     let gz_frame_len = h.wire.frame_len(MsgType::ActGrad, smashed_elems);
     let srv_time = h.server_step_time(depth);
+    let sampled = h.cohort_k.is_some();
+    let n = h.cfg.fleet.clients;
 
     // Per-client server-side copies (suffix + classifier), SplitFed-style.
-    let n = h.clients.len();
-    let mut srv_copies: Vec<Vec<f32>> = vec![h.server.suffix(depth).to_vec(); n];
-    let mut clf_copies: Vec<Vec<f32>> = vec![h.server.clf_s.clone(); n];
+    // Full participation allocates all of them up front — that O(fleet ×
+    // server-side) footprint *is* SplitFed's defining cost. Sampled runs
+    // start empty and pool to the cohort inside the round loop.
+    let mut srv_copies: Vec<Vec<f32>> = if sampled {
+        Vec::new()
+    } else {
+        vec![h.server.suffix(depth).to_vec(); n]
+    };
+    let mut clf_copies: Vec<Vec<f32>> = if sampled {
+        Vec::new()
+    } else {
+        vec![h.server.clf_s.clone(); n]
+    };
     // Reusable encode/decode buffers for the barrier frames (the
     // per-step frames inside the fan-out use each lane's own scratch).
     let mut bar_scratch = WireScratch::default();
@@ -68,50 +103,63 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
 
     for round in 1..=h.cfg.train.rounds {
         let round_u = round as u64;
+        let roster = h.roster(round);
+        h.materialize_cohort(rt, &roster)?;
         h.net.begin_round();
 
         // ---- Churn: dead clients sit out; rejoiners resync first ----
-        let mut resync_t = vec![0.0f64; n];
-        let mut any_resync = false;
-        for ci in 0..n {
-            if fc.is_down(round_u, ci) {
-                h.clients[ci].begin_round();
-                h.clients[ci].missed_rounds += 1;
+        // Shared with the SSFL loop: the resync download rides the
+        // faulted exchange path, and a failed attempt keeps the client
+        // down for the round instead of aborting the run.
+        let (sitting_out, resync_faults) = h.resync_roster(round_u, &roster, &fc);
+
+        // ---- Lane roster: who actually runs a branch this round ----
+        let mut slots: Vec<SflSlot> = Vec::with_capacity(roster.len());
+        for &ci in &roster {
+            if fc.is_down(round_u, ci) || sitting_out.binary_search(&ci).is_ok() {
                 continue;
             }
-            if h.clients[ci].missed_rounds > 0 {
-                let prefix_elems = h.clients[ci].enc.len();
-                let frame_len = h
-                    .wire
-                    .encode_to(
-                        MsgType::Broadcast,
-                        &h.server.enc[..prefix_elems],
-                        0.0,
-                        &mut bar_scratch,
-                    )
-                    .len() as u64;
-                let dec = h.wire.decode(&bar_scratch.frame)?;
-                resync_t[ci] = h.net.bulk_down_framed(
-                    ci,
-                    Framed {
-                        wire: frame_len,
-                        raw: (prefix_elems * 4) as u64,
-                    },
-                );
-                h.clients[ci].sync_from_global(&dec.data);
-                h.clients[ci].missed_rounds = 0;
-                any_resync = true;
+            if h.client(ci).shard.is_empty() {
+                continue; // sampled past the dataset: no data, no lane
             }
+            let steps = fc
+                .crash_at(round_u, ci)
+                .map(|c| c.step.min(local_steps))
+                .unwrap_or(local_steps);
+            let buf = if sampled { slots.len() } else { ci };
+            slots.push(SflSlot {
+                ci,
+                profile: h.profile(ci),
+                steps,
+                buf,
+            });
         }
-        if any_resync {
-            h.charge_barrier_phase(&resync_t);
+
+        // Pool the copies to the cohort: every slot trains a fresh image
+        // of the current server-side state (see module docs for why that
+        // matches the eager path's round-end reset).
+        if sampled {
+            if srv_copies.len() < slots.len() {
+                srv_copies.resize_with(slots.len(), Vec::new);
+                clf_copies.resize_with(slots.len(), Vec::new);
+            }
+            for s in &slots {
+                srv_copies[s.buf].resize(suffix_len, 0.0);
+                srv_copies[s.buf].copy_from_slice(h.server.suffix(depth));
+                clf_copies[s.buf].resize(clf_len, 0.0);
+                clf_copies[s.buf].copy_from_slice(&h.server.clf_s);
+            }
+            let pooled = srv_copies.len() * (suffix_len + clf_len);
+            if pooled > h.pool_stats.max_lane_f32 {
+                h.pool_stats.max_lane_f32 = pooled;
+            }
         }
 
         // ---- Fan out: every client branch on a worker thread ----
         let ledgers: Vec<RoundLedger> = {
             let Harness {
                 clients,
-                profiles,
+                pool,
                 net,
                 cost,
                 train,
@@ -122,29 +170,41 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
             let train = &*train;
             let wire = &*wire;
 
-            let mut lanes: Vec<SflLane<'_>> = Vec::with_capacity(n);
+            let states: Box<dyn Iterator<Item = (usize, &mut ClientState)>> = if sampled {
+                Box::new(pool.iter_mut().map(|(id, c)| (*id, c)))
+            } else {
+                Box::new(clients.iter_mut().enumerate())
+            };
+
+            let mut lanes: Vec<SflLane<'_>> = Vec::with_capacity(slots.len());
+            let mut slot_it = slots.iter().peekable();
             let mut srv_it = srv_copies.iter_mut();
             let mut clf_it = clf_copies.iter_mut();
-            for (ci, client) in clients.iter_mut().enumerate() {
-                let srv = srv_it.next().expect("copies sized to fleet");
-                let clf = clf_it.next().expect("copies sized to fleet");
-                if fc.is_down(round_u, ci) {
+            // `buf` indices are strictly ascending across the slot list,
+            // so the copy iterators advance monotonically — `next_buf`
+            // tracks the index they currently point at.
+            let mut next_buf = 0usize;
+            for (ci, client) in states {
+                let Some(s) = slot_it.peek() else { break };
+                if s.ci != ci {
                     continue;
                 }
-                let steps = fc
-                    .crash_at(round_u, ci)
-                    .map(|c| c.step.min(local_steps))
-                    .unwrap_or(local_steps);
+                let s = *slot_it.next().expect("peeked");
+                let skip = s.buf - next_buf;
+                let srv = srv_it.nth(skip).expect("copies sized to roster");
+                let clf = clf_it.nth(skip).expect("copies sized to roster");
+                next_buf = s.buf + 1;
                 lanes.push(SflLane {
                     client,
-                    profile: &profiles[ci],
+                    profile: s.profile,
                     srv,
                     clf,
-                    steps,
+                    steps: s.steps,
                     net: net.lane(ci, round_u),
                     ledger: RoundLedger::new(ci),
                 });
             }
+            debug_assert!(slot_it.peek().is_none(), "every slot must get a lane");
 
             engine::run_lanes(threads, &mut lanes, |lane| {
                 lane.client.begin_round();
@@ -153,7 +213,7 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
 
                     let z = rt.client_fwd(depth, &lane.client.enc, &batch.x)?;
                     let t_fwd = cost.time_s(cost.client_fwd_flops(depth), lane.profile.flops);
-                    lane.ledger.work(lane.profile, t_fwd);
+                    lane.ledger.work(&lane.profile, t_fwd);
 
                     // Wire-framed exchange: encoded bytes on the link,
                     // analytic f32 count as raw (see orchestrator docs).
@@ -173,7 +233,7 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
                         },
                         srv_time,
                     );
-                    lane.ledger.exchange(lane.profile, ex.time_s(), srv_time);
+                    lane.ledger.exchange(&lane.profile, ex.time_s(), srv_time);
 
                     if ex.is_ok() {
                         // CRC/decode failure is an exchange fault: count
@@ -215,7 +275,7 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
                         math::sgd_step(&mut lane.client.enc, &g_enc, lr);
                         let t_bwd =
                             cost.time_s(cost.client_bwd_flops(depth), lane.profile.flops);
-                        lane.ledger.work(lane.profile, t_bwd);
+                        lane.ledger.work(&lane.profile, t_bwd);
                     } else {
                         // No fallback path in SplitFed: the step is lost.
                         lane.ledger.fallback_steps += 1;
@@ -238,7 +298,8 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
                 .collect()
         };
 
-        let (round_dt, busy, stalled, server_steps, faults) = h.absorb_ledgers(&ledgers);
+        let (round_dt, busy, stalled, server_steps, mut faults) = h.absorb_ledgers(&ledgers);
+        faults.add(&resync_faults);
 
         // ---- FedAvg of client-side models (sample-count weights) ----
         // Uploads travel as PrefixUpload frames (SplitFed clients train
@@ -246,41 +307,43 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
         // and the server averages the *decoded* prefixes.
         // Dead and mid-round-crashed clients skip the barrier; FedAvg
         // weights renormalize over the actual participants.
-        let participates =
-            |ci: usize| !fc.is_down(round_u, ci) && fc.crash_at(round_u, ci).is_none();
-        let mut agg_branch = vec![0.0f64; n];
-        let mut uploads: Vec<(usize, Vec<f32>)> = Vec::with_capacity(n);
-        for ci in 0..n {
-            if !participates(ci) {
+        let mut agg_entries: Vec<(usize, f64)> = roster.iter().map(|&id| (id, 0.0)).collect();
+        let mut uploads: Vec<(usize, usize, Vec<f32>)> = Vec::with_capacity(slots.len());
+        for s in &slots {
+            if fc.crash_at(round_u, s.ci).is_some() {
                 continue;
             }
-            let payload = h.clients[ci].upload_payload();
+            let payload = h.client(s.ci).upload_payload();
             let frame_len = h
                 .wire
                 .encode_to(MsgType::PrefixUpload, &payload, 0.0, &mut bar_scratch)
                 .len() as u64;
-            agg_branch[ci] = h.net.bulk_up_framed(
-                ci,
+            let t = h.net.bulk_up_framed(
+                s.ci,
                 Framed {
                     wire: frame_len,
                     raw: (payload.len() * 4) as u64,
                 },
             );
-            uploads.push((ci, h.wire.decode(&bar_scratch.frame)?.data));
+            let pos = roster
+                .binary_search(&s.ci)
+                .expect("slot drawn from roster");
+            agg_entries[pos].1 = t;
+            uploads.push((s.ci, s.buf, h.wire.decode(&bar_scratch.frame)?.data));
         }
-        h.charge_barrier_phase(&agg_branch);
+        h.charge_barrier_phase(&agg_entries);
         let total_samples: f64 = uploads
             .iter()
-            .map(|(ci, _)| h.clients[*ci].shard.len() as f64)
+            .map(|(ci, _, _)| h.client(*ci).shard.len() as f64)
             .sum();
         if !uploads.is_empty() {
             let items: Vec<(usize, &[f32], f64)> = uploads
                 .iter()
-                .map(|(ci, data)| {
+                .map(|(ci, _, data)| {
                     (
                         depth,
                         data.as_slice(),
-                        h.clients[*ci].shard.len() as f64 / total_samples.max(1.0),
+                        h.client(*ci).shard.len() as f64 / total_samples.max(1.0),
                     )
                 })
                 .collect();
@@ -291,27 +354,31 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
         // Only participating clients' copies cross the main↔Fed server
         // link (and enter the average); afterwards every copy — absent
         // clients' included — is reset to the fresh average server-side
-        // (a server-internal memcpy, no wire charge).
+        // (a server-internal memcpy, no wire charge). Pooled copies skip
+        // the reset: next round's refresh reads the averaged server
+        // state and lands on the same values.
         let n_par = uploads.len() as u64;
-        let copy_bytes = ((suffix_len + h.server.clf_s.len()) * 4) as u64;
+        let copy_bytes = ((suffix_len + clf_len) * 4) as u64;
         // One logical transfer per participating copy per direction,
         // each paying the fed-link half-RTT.
         let fed_t = h.net.fed_link(copy_bytes * n_par * 2, n_par * 2);
         h.clock.advance(fed_t);
         let mut srv_avg = vec![0.0f32; suffix_len];
-        let mut clf_avg = vec![0.0f32; h.server.clf_s.len()];
-        for (ci, _) in &uploads {
-            let w = (h.clients[*ci].shard.len() as f64 / total_samples.max(1.0)) as f32;
-            math::axpy(&mut srv_avg, &srv_copies[*ci], w);
-            math::axpy(&mut clf_avg, &clf_copies[*ci], w);
+        let mut clf_avg = vec![0.0f32; clf_len];
+        for (ci, buf, _) in &uploads {
+            let w = (h.client(*ci).shard.len() as f64 / total_samples.max(1.0)) as f32;
+            math::axpy(&mut srv_avg, &srv_copies[*buf], w);
+            math::axpy(&mut clf_avg, &clf_copies[*buf], w);
         }
         let cut = h.server.prefix_len(depth);
         if !uploads.is_empty() {
             h.server.enc[cut..].copy_from_slice(&srv_avg);
             h.server.clf_s.copy_from_slice(&clf_avg);
-            for ci in 0..n {
-                srv_copies[ci].copy_from_slice(&srv_avg);
-                clf_copies[ci].copy_from_slice(&clf_avg);
+            if !sampled {
+                for ci in 0..n {
+                    srv_copies[ci].copy_from_slice(&srv_avg);
+                    clf_copies[ci].copy_from_slice(&clf_avg);
+                }
             }
         }
 
@@ -328,18 +395,30 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
             wire: frame_len,
             raw: (cut * 4) as u64,
         };
-        let mut bc = vec![0.0f64; n];
-        for ci in 0..n {
-            if !participates(ci) {
+        let mut bc_entries: Vec<(usize, f64)> = roster.iter().map(|&id| (id, 0.0)).collect();
+        for s in &slots {
+            if fc.crash_at(round_u, s.ci).is_some() {
                 continue; // absentees catch up via the charged resync
             }
-            bc[ci] = h.net.bulk_down_framed(ci, bc_framed);
-            h.clients[ci].sync_from_global(&bc_payload);
+            let pos = roster
+                .binary_search(&s.ci)
+                .expect("slot drawn from roster");
+            bc_entries[pos].1 = h.net.bulk_down_framed(s.ci, bc_framed);
+            h.client_mut(s.ci).sync_from_global(&bc_payload);
         }
-        h.charge_barrier_phase(&bc);
+        h.charge_barrier_phase(&bc_entries);
 
         let acc = h.eval_global(rt)?;
-        if h.finish_round(round, round_dt, &busy, acc, stalled, server_steps, faults) {
+        if h.finish_round(
+            round,
+            round_dt,
+            &roster,
+            &busy,
+            acc,
+            stalled,
+            server_steps,
+            faults,
+        ) {
             break;
         }
     }

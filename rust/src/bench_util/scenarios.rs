@@ -210,6 +210,35 @@ pub fn paper_table2(classes: usize, clients: usize) -> [(f64, f64, f64, f64); 3]
     }
 }
 
+/// Fleet-size ladder for the sampled-participation scaling section of
+/// Fig. 4: `(label, fleet size, cohort size)`. The cohort stays fixed
+/// while the fleet grows 10×, so per-round client state (PoolStats)
+/// must stay flat — that is the claim the ladder checks. Fleet sizes
+/// are *not* scaled down in smoke mode: lazy materialization is what
+/// makes 10k clients cheap, and the CI leg exists to prove it.
+pub fn fleet_ladder() -> [(&'static str, usize, usize); 2] {
+    [("fleet 1k", 1_000, 16), ("fleet 10k", 10_000, 16)]
+}
+
+/// Config for one fleet-ladder rung: a sampled SuperSFL run over a
+/// `fleet`-client fleet with a `cohort`-client per-round cohort.
+pub fn ladder_config(scale: &Scale, fleet: usize, cohort: usize, seed: u64) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default()
+        .with_name(&format!("ladder_n{fleet}_k{cohort}"))
+        .with_method(Method::SuperSfl)
+        .with_clients(fleet)
+        .with_rounds(if smoke() { 2 } else { 4 })
+        .with_seed(seed)
+        .with_sample(crate::config::SampleSpec::Count(cohort));
+    // The dataset stays test-sized: with fewer samples than clients most
+    // shards are empty (the partition repair stops at one sample per
+    // shard), which is exactly the regime a 10k-device fleet is in.
+    cfg.data.train_per_class = scale.train_per_class_c10;
+    cfg.train.local_steps = scale.local_steps;
+    cfg.train.eval_samples = scale.eval_samples;
+    cfg
+}
+
 /// Attach a parsed `--faults` spec to a bench config. Panics on an
 /// invalid spec: bench grids are static strings, so a parse failure is
 /// a build bug, not a data error.

@@ -107,6 +107,92 @@ pub fn parse_kernel_threads(s: &str) -> Result<usize> {
     Ok(n)
 }
 
+/// Per-round client participation sampling (`--sample <n|frac|off>`,
+/// the `sample` config key, or the `SUPERSFL_SAMPLE` env var — env
+/// wins, mirroring `SUPERSFL_FAULTS`/`SUPERSFL_WIRE`).
+///
+/// `Off` (the default) is full participation — every client owns a
+/// lane every round, byte- and draw-identical to the pre-sampling
+/// simulator. `Count(k)` draws `k` distinct clients per round;
+/// `Frac(f)` draws `⌈f·fleet⌉`. The cohort is a pure function of
+/// `(seed, round)` — never of thread count — so sampled runs stay
+/// bitwise identical for any `--threads`/`--kernel-threads`.
+#[derive(Clone, Copy, Debug, PartialEq, Default)]
+pub enum SampleSpec {
+    /// Full participation (seed behaviour).
+    #[default]
+    Off,
+    /// Exactly `n` participants per round (clamped to the fleet size).
+    Count(usize),
+    /// A fraction in (0, 1) of the fleet per round (rounded, ≥ 1).
+    Frac(f64),
+}
+
+impl SampleSpec {
+    pub fn is_off(&self) -> bool {
+        *self == SampleSpec::Off
+    }
+
+    /// Resolved cohort size for a fleet of `n`; `None` when off.
+    pub fn cohort_size(&self, fleet: usize) -> Option<usize> {
+        match *self {
+            SampleSpec::Off => None,
+            SampleSpec::Count(k) => Some(k.min(fleet).max(1)),
+            SampleSpec::Frac(f) => Some(((f * fleet as f64).round() as usize).clamp(1, fleet)),
+        }
+    }
+
+    /// Parse the CLI/config form: `off`, a positive integer count, or a
+    /// fraction in (0, 1). `0` is rejected (write `off`), as is `1.0`
+    /// (a fraction of exactly 1 is full participation — write `off` and
+    /// keep the sampling machinery out of the loop).
+    pub fn parse(s: &str) -> Result<SampleSpec> {
+        let s = s.trim();
+        if s.is_empty() || s.eq_ignore_ascii_case("off") {
+            return Ok(SampleSpec::Off);
+        }
+        if let Ok(n) = s.parse::<usize>() {
+            if n == 0 {
+                return Err(Error::Config(
+                    "sample count 0 is ambiguous — use 'off' for full participation".into(),
+                ));
+            }
+            return Ok(SampleSpec::Count(n));
+        }
+        match s.parse::<f64>() {
+            Ok(f) if f > 0.0 && f < 1.0 => Ok(SampleSpec::Frac(f)),
+            Ok(f) => Err(Error::Config(format!(
+                "sample fraction must be in (0, 1), got {f} (use 'off' or an integer count)"
+            ))),
+            Err(_) => Err(Error::Config(format!(
+                "invalid sample spec '{s}' (expected off, a count, or a fraction in (0,1))"
+            ))),
+        }
+    }
+
+    /// Canonical string form: `SampleSpec::parse(x.label()) == x`.
+    pub fn label(&self) -> String {
+        match self {
+            SampleSpec::Off => "off".to_string(),
+            SampleSpec::Count(n) => n.to_string(),
+            SampleSpec::Frac(f) => f.to_string(),
+        }
+    }
+
+    /// Resolve with the `SUPERSFL_SAMPLE` env override (env wins; an
+    /// invalid env value is a hard panic — silently training the wrong
+    /// cohort size is worse than crashing at startup).
+    pub fn from_env_or(fallback: SampleSpec) -> SampleSpec {
+        match std::env::var("SUPERSFL_SAMPLE") {
+            Ok(s) => match SampleSpec::parse(&s) {
+                Ok(sp) => sp,
+                Err(e) => panic!("SUPERSFL_SAMPLE={s}: {e}"),
+            },
+            Err(_) => fallback,
+        }
+    }
+}
+
 /// TPGF fusion-rule variant (paper §IV ablation, Fig. 6).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum TpgfMode {
@@ -393,6 +479,11 @@ pub struct ExperimentConfig {
     /// var wins). `fp32` is bit-exact; lossy codecs shrink the encoded
     /// frames and perturb training through the decode path.
     pub wire: WireCodecKind,
+    /// Per-round participation sampling (`--sample n|frac|off`; the
+    /// `SUPERSFL_SAMPLE` env var wins). `off` = full participation,
+    /// byte-identical to the pre-sampling simulator. The cohort is a
+    /// pure function of `(seed, round)` — see [`SampleSpec`].
+    pub sample: SampleSpec,
     /// Where `make artifacts` put the HLO + manifest.
     pub artifacts_dir: PathBuf,
 }
@@ -415,6 +506,7 @@ impl Default for ExperimentConfig {
             kernel_threads: 0,
             backend: BackendKind::Auto,
             wire: WireCodecKind::Fp32,
+            sample: SampleSpec::Off,
             artifacts_dir: PathBuf::from("artifacts"),
         }
     }
@@ -473,6 +565,12 @@ impl ExperimentConfig {
     /// Wire payload codec selection.
     pub fn with_wire(mut self, w: WireCodecKind) -> Self {
         self.wire = w;
+        self
+    }
+
+    /// Per-round participation sampling.
+    pub fn with_sample(mut self, s: SampleSpec) -> Self {
+        self.sample = s;
         self
     }
 
@@ -556,6 +654,15 @@ impl ExperimentConfig {
             }
             "backend" => self.backend = BackendKind::parse(s(v, key)?)?,
             "wire_codec" => self.wire = WireCodecKind::parse(s(v, key)?)?,
+            // Accepts a string ("off", "64", "0.1") or a bare number —
+            // an integer ≥ 1 is a count, a value in (0,1) a fraction;
+            // anything else fails fast, like kernel_threads.
+            "sample" => {
+                self.sample = match v.as_str() {
+                    Some(sv) => SampleSpec::parse(sv)?,
+                    None => SampleSpec::parse(&f(v)?.to_string())?,
+                }
+            }
             "artifacts_dir" => self.artifacts_dir = PathBuf::from(s(v, key)?),
             "clients" => self.fleet.clients = f(v)? as usize,
             "mem_gb" => self.fleet.mem_gb = pair(v)?,
@@ -651,6 +758,7 @@ impl ExperimentConfig {
         o.set("fed_latency_ms", n(self.net.fed_latency_ms));
         o.set("backend", JsonValue::String(self.backend.as_str().into()));
         o.set("wire_codec", JsonValue::String(self.wire.label()));
+        o.set("sample", JsonValue::String(self.sample.label()));
         if let Some(t) = self.train.target_accuracy {
             o.set("target_accuracy", n(t));
         }
@@ -829,6 +937,47 @@ mod tests {
 
         let v = json::parse(r#"{"wire_codec": "zstd"}"#).unwrap();
         assert!(ExperimentConfig::default().apply_json(&v).is_err());
+    }
+
+    #[test]
+    fn sample_spec_parses_resolves_and_roundtrips() {
+        assert_eq!(SampleSpec::parse("off").unwrap(), SampleSpec::Off);
+        assert_eq!(SampleSpec::parse("OFF").unwrap(), SampleSpec::Off);
+        assert_eq!(SampleSpec::parse("").unwrap(), SampleSpec::Off);
+        assert_eq!(SampleSpec::parse("64").unwrap(), SampleSpec::Count(64));
+        assert_eq!(SampleSpec::parse("0.1").unwrap(), SampleSpec::Frac(0.1));
+        assert!(SampleSpec::parse("0").is_err());
+        assert!(SampleSpec::parse("1.0").is_err());
+        assert!(SampleSpec::parse("-3").is_err());
+        assert!(SampleSpec::parse("half").is_err());
+
+        // Cohort-size resolution clamps into [1, fleet].
+        assert_eq!(SampleSpec::Off.cohort_size(100), None);
+        assert_eq!(SampleSpec::Count(64).cohort_size(100), Some(64));
+        assert_eq!(SampleSpec::Count(500).cohort_size(100), Some(100));
+        assert_eq!(SampleSpec::Frac(0.1).cohort_size(100), Some(10));
+        assert_eq!(SampleSpec::Frac(0.001).cohort_size(100), Some(1));
+
+        // Label round-trips through parse, and through the config JSON.
+        for sp in [SampleSpec::Off, SampleSpec::Count(7), SampleSpec::Frac(0.25)] {
+            assert_eq!(SampleSpec::parse(&sp.label()).unwrap(), sp);
+        }
+        let c = ExperimentConfig::default().with_sample(SampleSpec::Count(32));
+        let mut c2 = ExperimentConfig::default();
+        c2.apply_json(&c.to_json()).unwrap();
+        assert_eq!(c2.sample, SampleSpec::Count(32));
+
+        // Config accepts bare numbers too; bad values fail fast.
+        let mut c = ExperimentConfig::default();
+        c.apply_json(&json::parse(r#"{"sample": 16}"#).unwrap()).unwrap();
+        assert_eq!(c.sample, SampleSpec::Count(16));
+        c.apply_json(&json::parse(r#"{"sample": 0.5}"#).unwrap()).unwrap();
+        assert_eq!(c.sample, SampleSpec::Frac(0.5));
+        c.apply_json(&json::parse(r#"{"sample": "off"}"#).unwrap()).unwrap();
+        assert_eq!(c.sample, SampleSpec::Off);
+        assert!(c.apply_json(&json::parse(r#"{"sample": 0}"#).unwrap()).is_err());
+        assert!(c.apply_json(&json::parse(r#"{"sample": "most"}"#).unwrap()).is_err());
+        assert_eq!(c.sample, SampleSpec::Off, "failed overrides must not apply");
     }
 
     #[test]

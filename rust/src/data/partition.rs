@@ -54,7 +54,13 @@ pub fn dirichlet_partition(
         }
     }
 
-    // Guarantee non-empty shards: move one sample from the richest client.
+    // Guarantee non-empty shards: move one sample from the richest
+    // client. The sample is drawn at a seeded-random position — `pop()`
+    // always took the last-extended entry, which is a highest-class-id
+    // sample by construction (classes extend shards in ascending order),
+    // so every rescued client ended up single-class at the top class id.
+    // The draw only happens when a repair happens, so partitions that
+    // need no repair consume exactly the same RNG stream as before.
     loop {
         let empty = match shards.iter().position(|s| s.is_empty()) {
             Some(i) => i,
@@ -66,7 +72,8 @@ pub fn dirichlet_partition(
         if shards[richest].len() <= 1 {
             break; // fewer samples than clients: leave remaining empty
         }
-        let moved = shards[richest].pop().expect("richest non-empty");
+        let at = rng.uniform_usize(shards[richest].len());
+        let moved = shards[richest].swap_remove(at);
         shards[empty].push(moved);
     }
     shards
@@ -160,5 +167,111 @@ mod tests {
         let shards = dirichlet_partition(&l, 3, 1, 0.5, &mut Pcg32::seeded(6));
         assert_eq!(shards.len(), 1);
         assert_eq!(shards[0].len(), 30);
+    }
+
+    /// The empty-shard repair steals a seeded-random sample, not the
+    /// last-extended one. Pre-fix, `pop()` always took a sample of the
+    /// highest class id present on the richest shard (classes extend
+    /// shards in ascending order), so *every* rescued client was
+    /// single-class at the top class — a systematic skew in exactly the
+    /// shards the repair was meant to make trainable.
+    #[test]
+    fn repaired_shards_are_not_all_top_class() {
+        let classes = 10;
+        let l = labels(classes, 5); // 50 samples
+        forall(0x5EA1, 10, |rng| {
+            // 40 clients over 50 samples at α=0.05: many shards start
+            // empty and get rescued with a single stolen sample.
+            let shards = dirichlet_partition(&l, classes, 40, 0.05, rng);
+            let rescued: Vec<usize> = shards
+                .iter()
+                .filter(|s| s.len() == 1)
+                .map(|s| l[s[0]] as usize)
+                .collect();
+            assert!(rescued.len() >= 5, "scenario must exercise the repair");
+            let distinct: std::collections::BTreeSet<usize> =
+                rescued.iter().copied().collect();
+            assert!(
+                distinct.len() >= 2,
+                "rescued shards all landed on class(es) {distinct:?} — \
+                 the steal is systematic again"
+            );
+            let top = rescued.iter().filter(|&&c| c == classes - 1).count();
+            assert!(
+                top < rescued.len(),
+                "every rescued shard is top-class ({top}/{})",
+                rescued.len()
+            );
+        });
+    }
+
+    /// Golden safety: when no shard needs repair, the partition draws
+    /// exactly the per-class shuffle + Dirichlet stream and nothing
+    /// more — bit-identical output and RNG end-state to a repair-free
+    /// reference. (The repair draw must only fire when a repair fires.)
+    #[test]
+    fn no_repair_runs_are_draw_identical_to_the_apportionment_alone() {
+        // Reference: the apportionment loop with no repair pass at all.
+        fn apportion_only(
+            labels: &[i32],
+            classes: usize,
+            n_clients: usize,
+            alpha: f64,
+            rng: &mut Pcg32,
+        ) -> Vec<Vec<usize>> {
+            let mut shards: Vec<Vec<usize>> = vec![Vec::new(); n_clients];
+            for class in 0..classes {
+                let mut idx: Vec<usize> = labels
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, &l)| l as usize == class)
+                    .map(|(i, _)| i)
+                    .collect();
+                if idx.is_empty() {
+                    continue;
+                }
+                rng.shuffle(&mut idx);
+                let props = rng.dirichlet(alpha, n_clients);
+                let n = idx.len();
+                let mut take: Vec<usize> =
+                    props.iter().map(|p| (p * n as f64) as usize).collect();
+                let assigned: usize = take.iter().sum();
+                let mut rema: Vec<(f64, usize)> = props
+                    .iter()
+                    .enumerate()
+                    .map(|(i, p)| (p * n as f64 - take[i] as f64, i))
+                    .collect();
+                rema.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+                for k in 0..(n - assigned) {
+                    take[rema[k % n_clients].1] += 1;
+                }
+                let mut cursor = 0;
+                for (client, &t) in take.iter().enumerate() {
+                    shards[client].extend_from_slice(&idx[cursor..cursor + t]);
+                    cursor += t;
+                }
+            }
+            shards
+        }
+
+        let l = labels(10, 50); // 500 samples across 8 clients: ample
+        let mut checked = 0;
+        for seed in 0..20u64 {
+            let mut ra = Pcg32::seeded(seed);
+            let mut rb = Pcg32::seeded(seed);
+            let reference = apportion_only(&l, 10, 8, 0.5, &mut rb);
+            if reference.iter().any(|s| s.is_empty()) {
+                continue; // this seed would repair; skip it
+            }
+            let real = dirichlet_partition(&l, 10, 8, 0.5, &mut ra);
+            assert_eq!(real, reference, "seed {seed}: output drifted");
+            assert_eq!(
+                ra.next_u32(),
+                rb.next_u32(),
+                "seed {seed}: repair pass burned draws without repairing"
+            );
+            checked += 1;
+        }
+        assert!(checked >= 10, "only {checked} no-repair seeds — scenario too tight");
     }
 }

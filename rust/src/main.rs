@@ -53,6 +53,7 @@ fn usage() {
          [--threads N] [--kernel-threads auto|N] [--backend auto|native|pjrt] \
          [--wire-codec fp32|fp16|int8|topk:<k>] \
          [--faults off|ge=..,outage=..,crash=..,corrupt=..,retry=..,quorum=..] \
+         [--sample off|N|0.frac] \
          [--config file.json] [--set key=value]... [--artifacts DIR] [--out DIR]"
     );
 }
@@ -91,6 +92,9 @@ fn build_config(args: &cli::Args) -> Result<ExperimentConfig> {
     }
     if let Some(v) = args.get("faults") {
         cfg.net.faults = network::FaultConfig::parse(v)?;
+    }
+    if let Some(v) = args.get("sample") {
+        cfg.sample = supersfl::config::SampleSpec::parse(v)?;
     }
     if let Some(v) = args.get("target") {
         cfg.train.target_accuracy = Some(v.parse()?);
@@ -137,6 +141,9 @@ fn cmd_train(args: &cli::Args) -> Result<()> {
     );
     if cfg.net.faults.enabled() {
         println!("faults: {}", cfg.net.faults.to_spec());
+    }
+    if let Some(k) = cfg.sample.cohort_size(cfg.fleet.clients) {
+        println!("sampling: {k} of {} clients per round", cfg.fleet.clients);
     }
     let rt = Runtime::from_config(&cfg)?;
     println!("backend: {}", rt.backend_name());

@@ -36,6 +36,9 @@ pub struct RoundRecord {
     pub fallback_steps: usize,
     /// Client steps with full server supervision this round.
     pub server_steps: usize,
+    /// Clients that participated this round (the sampled cohort size,
+    /// or the whole fleet under `sample=off`).
+    pub participants: usize,
     /// Exchanges lost to server unavailability / slow links this round.
     pub timeouts: u64,
     /// Exchanges lost to transmission drops (Bernoulli or bursty-link).
@@ -67,6 +70,7 @@ impl RoundRecord {
         o.set("energy_j", n(self.energy_j));
         o.set("fallback_steps", n(self.fallback_steps as f64));
         o.set("server_steps", n(self.server_steps as f64));
+        o.set("participants", n(self.participants as f64));
         o.set("timeouts", n(self.timeouts as f64));
         o.set("drops", n(self.drops as f64));
         o.set("corruptions", n(self.corruptions as f64));
@@ -173,12 +177,12 @@ impl RunMetrics {
         let mut f = std::fs::File::create(path)?;
         writeln!(
             f,
-            "round,sim_time_s,accuracy,mean_client_loss,mean_server_loss,comm_mb,cum_comm_mb,raw_mb,cum_raw_mb,compression,energy_j,fallback_steps,server_steps,timeouts,drops,corruptions,retries,crashes"
+            "round,sim_time_s,accuracy,mean_client_loss,mean_server_loss,comm_mb,cum_comm_mb,raw_mb,cum_raw_mb,compression,energy_j,fallback_steps,server_steps,participants,timeouts,drops,corruptions,retries,crashes"
         )?;
         for r in &self.rounds {
             writeln!(
                 f,
-                "{},{:.3},{:.4},{:.4},{:.4},{:.3},{:.3},{:.3},{:.3},{:.3},{:.1},{},{},{},{},{},{},{}",
+                "{},{:.3},{:.4},{:.4},{:.4},{:.3},{:.3},{:.3},{:.3},{:.3},{:.1},{},{},{},{},{},{},{},{}",
                 r.round,
                 r.sim_time_s,
                 r.accuracy,
@@ -192,6 +196,7 @@ impl RunMetrics {
                 r.energy_j,
                 r.fallback_steps,
                 r.server_steps,
+                r.participants,
                 r.timeouts,
                 r.drops,
                 r.corruptions,
@@ -396,6 +401,7 @@ mod tests {
         assert_eq!(rounds.len(), 5);
         assert!(rounds[0].get("accuracy").is_some());
         assert!(rounds[0].get("server_steps").is_some());
+        assert!(rounds[0].get("participants").is_some());
         for key in ["timeouts", "drops", "corruptions", "retries", "crashes"] {
             assert!(rounds[0].get(key).is_some(), "missing round key {key}");
         }

@@ -33,6 +33,117 @@ impl SimClock {
         self.advance(dt);
         dt
     }
+
+    /// Jump forward to an absolute event time (no-op if `t` is in the
+    /// past — the clock only moves forward). Pure comparison, no
+    /// arithmetic: draining an [`EventQueue`] of `now + bᵢ` completions
+    /// lands on exactly the same bits as `advance_parallel(&[b...])`,
+    /// because f64 addition is monotone and the final jump is the same
+    /// `now + b_max` sum the barrier fold computed.
+    pub fn advance_to(&mut self, t: f64) {
+        debug_assert!(t.is_finite(), "non-finite event time {t}");
+        if t > self.t {
+            self.t = t;
+        }
+    }
+}
+
+/// What happened at a scheduled instant of simulated time.
+///
+/// The scheduler replaces O(fleet) per-client loops: a round only does
+/// work at *events* — a branch finishing, a fault schedule edge, a
+/// rejoin deadline — so idle non-cohort clients cost nothing.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Event {
+    /// Client's round branch (compute + transfers) hit the barrier.
+    BranchDone { client: usize },
+    /// Fault-schedule edge: the client goes down (`down`) or back up.
+    OutageEdge { client: usize, down: bool },
+    /// A rejoining client's resync download deadline.
+    RejoinDeadline { client: usize },
+}
+
+#[derive(Clone, Debug)]
+struct Scheduled {
+    t: f64,
+    seq: u64,
+    ev: Event,
+}
+
+// Min-heap order: earliest time first, insertion order on exact ties.
+// `total_cmp` keeps the ordering total (and deterministic) even if a
+// NaN ever slips in, rather than silently reordering the heap.
+impl PartialEq for Scheduled {
+    fn eq(&self, other: &Self) -> bool {
+        self.seq == other.seq
+    }
+}
+impl Eq for Scheduled {}
+impl PartialOrd for Scheduled {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Scheduled {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.t
+            .total_cmp(&other.t)
+            .then_with(|| self.seq.cmp(&other.seq))
+    }
+}
+
+/// Deterministic event-driven scheduler over simulated time.
+///
+/// Pop order is a pure function of the push sequence: a strict
+/// `(time, insertion-seq)` min-order with no hash state, so every
+/// thread count replays the identical event history. Shared by the
+/// SSFL orchestrator and the SFL/DFL baselines so scaled comparisons
+/// stay apples-to-apples.
+#[derive(Clone, Debug, Default)]
+pub struct EventQueue {
+    heap: std::collections::BinaryHeap<std::cmp::Reverse<Scheduled>>,
+    seq: u64,
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        EventQueue::default()
+    }
+
+    /// Schedule `ev` at absolute simulated time `t`.
+    pub fn schedule(&mut self, t: f64, ev: Event) {
+        debug_assert!(t.is_finite(), "non-finite event time {t}");
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(std::cmp::Reverse(Scheduled { t, seq, ev }));
+    }
+
+    /// Earliest pending event, removing it from the queue.
+    pub fn pop(&mut self) -> Option<(f64, Event)> {
+        self.heap.pop().map(|std::cmp::Reverse(s)| (s.t, s.ev))
+    }
+
+    /// Time of the earliest pending event, if any.
+    pub fn peek_time(&self) -> Option<f64> {
+        self.heap.peek().map(|std::cmp::Reverse(s)| s.t)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Drain every pending event in deterministic order, advancing
+    /// `clock` to each event's time before invoking `f`.
+    pub fn drain_into(&mut self, clock: &mut SimClock, mut f: impl FnMut(f64, Event)) {
+        while let Some((t, ev)) = self.pop() {
+            clock.advance_to(t);
+            f(t, ev);
+        }
+    }
 }
 
 /// Accumulator for one client's branch within a round.
@@ -82,5 +193,55 @@ mod tests {
         b.add(0.25);
         b.add(0.75);
         assert!((b.t - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn events_pop_in_time_order_with_insertion_tiebreak() {
+        let mut q = EventQueue::new();
+        q.schedule(2.0, Event::BranchDone { client: 2 });
+        q.schedule(1.0, Event::BranchDone { client: 1 });
+        q.schedule(1.0, Event::OutageEdge { client: 9, down: true });
+        q.schedule(0.5, Event::RejoinDeadline { client: 4 });
+        assert_eq!(q.peek_time(), Some(0.5));
+        let order: Vec<(f64, Event)> = std::iter::from_fn(|| q.pop()).collect();
+        assert_eq!(
+            order,
+            vec![
+                (0.5, Event::RejoinDeadline { client: 4 }),
+                (1.0, Event::BranchDone { client: 1 }),
+                (1.0, Event::OutageEdge { client: 9, down: true }),
+                (2.0, Event::BranchDone { client: 2 }),
+            ]
+        );
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn draining_branch_completions_matches_the_barrier_fold_bitwise() {
+        // The event-driven barrier must land on the same bits as the
+        // straggler-max fold for any completion set.
+        let branches = [0.371, 2.25e-3, 1.75, 0.0, 1.7499999];
+        let mut a = SimClock::new();
+        a.advance(5.5);
+        let mut b = a.clone();
+        a.advance_parallel(&branches);
+
+        let mut q = EventQueue::new();
+        let now = b.now();
+        for (i, dt) in branches.iter().enumerate() {
+            q.schedule(now + dt, Event::BranchDone { client: i });
+        }
+        let mut seen = 0;
+        q.drain_into(&mut b, |_, _| seen += 1);
+        assert_eq!(seen, branches.len());
+        assert_eq!(a.now().to_bits(), b.now().to_bits());
+    }
+
+    #[test]
+    fn advance_to_never_rewinds() {
+        let mut c = SimClock::new();
+        c.advance_to(3.0);
+        c.advance_to(1.0);
+        assert_eq!(c.now(), 3.0);
     }
 }

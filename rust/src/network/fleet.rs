@@ -10,7 +10,7 @@ use crate::util::rng::Pcg32;
 
 /// One client device's static resource profile — the `C_i = (m_i, lat_i)`
 /// of paper Eq. 1 plus simulator-side attributes.
-#[derive(Clone, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct DeviceProfile {
     pub id: usize,
     /// Memory capacity, GB (paper: reported via psutil//proc/meminfo).
@@ -32,6 +32,42 @@ pub struct DeviceProfile {
     pub tx_w: f64,
 }
 
+/// Uniform draws one profile consumes from the fleet stream, in fixed
+/// order: memory, latency, compute, uplink, downlink. Client `i`'s
+/// profile therefore depends only on stream positions `[5i, 5i+5)` —
+/// the invariant [`Fleet::profile`] jumps on.
+pub const PROFILE_DRAWS: u64 = 5;
+
+/// Draw one client profile from the fleet stream positioned at its
+/// 5-draw window.
+fn sample_one(
+    cfg: &FleetConfig,
+    energy: &EnergyConfig,
+    id: usize,
+    rng: &mut Pcg32,
+) -> DeviceProfile {
+    let mem_gb = rng.uniform_range(cfg.mem_gb.0, cfg.mem_gb.1);
+    let latency_s = rng.uniform_range(cfg.latency_ms.0, cfg.latency_ms.1) / 1e3;
+    let flops = rng.uniform_range(cfg.compute_gflops.0, cfg.compute_gflops.1) * 1e9;
+    // Power correlates with compute capability: faster devices are
+    // bigger SoCs. Map the compute draw linearly into the range.
+    let frac = (flops / 1e9 - cfg.compute_gflops.0)
+        / (cfg.compute_gflops.1 - cfg.compute_gflops.0).max(1e-9);
+    let active_w = energy.client_active_w.0
+        + frac * (energy.client_active_w.1 - energy.client_active_w.0);
+    DeviceProfile {
+        id,
+        mem_gb,
+        latency_s,
+        flops,
+        uplink_bps: rng.uniform_range(cfg.uplink_mbps.0, cfg.uplink_mbps.1) * 1e6 / 8.0,
+        downlink_bps: rng.uniform_range(cfg.downlink_mbps.0, cfg.downlink_mbps.1) * 1e6 / 8.0,
+        active_w,
+        idle_w: energy.client_idle_w,
+        tx_w: energy.client_tx_w,
+    }
+}
+
 /// Sample a fleet of `cfg.clients` profiles.
 pub fn sample_fleet(
     cfg: &FleetConfig,
@@ -39,32 +75,95 @@ pub fn sample_fleet(
     rng: &mut Pcg32,
 ) -> Vec<DeviceProfile> {
     (0..cfg.clients)
-        .map(|id| {
-            let mem_gb = rng.uniform_range(cfg.mem_gb.0, cfg.mem_gb.1);
-            let latency_s = rng.uniform_range(cfg.latency_ms.0, cfg.latency_ms.1) / 1e3;
-            let flops = rng.uniform_range(cfg.compute_gflops.0, cfg.compute_gflops.1) * 1e9;
-            // Power correlates with compute capability: faster devices are
-            // bigger SoCs. Map the compute draw linearly into the range.
-            let frac = (flops / 1e9 - cfg.compute_gflops.0)
-                / (cfg.compute_gflops.1 - cfg.compute_gflops.0).max(1e-9);
-            let active_w = energy.client_active_w.0
-                + frac * (energy.client_active_w.1 - energy.client_active_w.0);
-            DeviceProfile {
-                id,
-                mem_gb,
-                latency_s,
-                flops,
-                uplink_bps: rng.uniform_range(cfg.uplink_mbps.0, cfg.uplink_mbps.1) * 1e6
-                    / 8.0,
-                downlink_bps: rng.uniform_range(cfg.downlink_mbps.0, cfg.downlink_mbps.1)
-                    * 1e6
-                    / 8.0,
-                active_w,
-                idle_w: energy.client_idle_w,
-                tx_w: energy.client_tx_w,
-            }
-        })
+        .map(|id| sample_one(cfg, energy, id, rng))
         .collect()
+}
+
+/// A lazily-sampled device fleet: O(1) memory for any fleet size.
+///
+/// [`Fleet::profile`] reproduces exactly what [`sample_fleet`] would
+/// have drawn for the same stream, without materializing the other
+/// clients: each profile consumes [`PROFILE_DRAWS`] sequential uniforms,
+/// so client `i`'s profile is a pure function of `(fleet stream, i)` —
+/// the generator jumps to position `5·i` in O(log i) via
+/// [`Pcg32::advance`] and draws the 5-uniform window. Profiles are
+/// therefore **prefix-stable**: client `i` gets the identical profile
+/// whether the fleet holds 10 clients or a million, and regardless of
+/// which cohort a sampled round draws.
+#[derive(Clone, Debug)]
+pub struct Fleet {
+    cfg: FleetConfig,
+    energy: EnergyConfig,
+    base: Pcg32,
+}
+
+impl Fleet {
+    /// Wrap the fleet stream (`rng` at position 0, e.g. the harness's
+    /// `root.fork(3)`) for on-demand sampling.
+    pub fn new(cfg: FleetConfig, energy: EnergyConfig, rng: Pcg32) -> Fleet {
+        Fleet {
+            cfg,
+            energy,
+            base: rng,
+        }
+    }
+
+    /// Number of clients in the (virtual) fleet.
+    pub fn len(&self) -> usize {
+        self.cfg.clients
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cfg.clients == 0
+    }
+
+    /// Client `id`'s profile, generated on demand (id may exceed
+    /// `len()` — the window is position-defined for any index).
+    pub fn profile(&self, id: usize) -> DeviceProfile {
+        let mut rng = self.base.clone();
+        rng.advance(PROFILE_DRAWS * id as u64);
+        sample_one(&self.cfg, &self.energy, id, &mut rng)
+    }
+}
+
+/// Stream-selector salt for the per-round cohort draw. The cohort uses
+/// its own `(seed ^ salt, round)` PCG stream so drawing it perturbs no
+/// other stream in the run — `sample=off` trajectories stay bitwise
+/// identical to builds that never had sampling.
+const COHORT_SALT: u64 = 0xC0_0B17_5EED;
+
+/// Draw the round's participant cohort: `k` distinct client ids out of
+/// `fleet`, returned sorted ascending.
+///
+/// Determinism contract: the cohort is a pure function of
+/// `(seed, round, fleet, k)` — never of thread count, engine state, or
+/// which profiles were previously materialized — so sampled runs are
+/// bitwise identical for any `--threads`/`--kernel-threads`.
+///
+/// Memory: O(k) when `k` is a small fraction of the fleet (distinct-id
+/// rejection sampling; acceptance ≥ ½ while `2k ≤ fleet`), O(fleet)
+/// transiently otherwise (partial Fisher–Yates).
+pub fn sample_cohort(seed: u64, round: usize, fleet: usize, k: usize) -> Vec<usize> {
+    let k = k.min(fleet);
+    if k == fleet {
+        return (0..fleet).collect();
+    }
+    let mut rng = Pcg32::new(seed ^ COHORT_SALT, round as u64);
+    let mut picked: std::collections::BTreeSet<usize> = std::collections::BTreeSet::new();
+    if 2 * k <= fleet {
+        while picked.len() < k {
+            picked.insert(rng.uniform_usize(fleet));
+        }
+    } else {
+        // Dense cohort: partial Fisher–Yates over the full index range.
+        let mut ids: Vec<usize> = (0..fleet).collect();
+        for i in 0..k {
+            let j = i + rng.uniform_usize(fleet - i);
+            ids.swap(i, j);
+        }
+        picked.extend(ids[..k].iter().copied());
+    }
+    picked.into_iter().collect()
 }
 
 #[cfg(test)]
@@ -113,6 +212,82 @@ mod tests {
         for (i, p) in fleet.iter().enumerate() {
             assert_eq!(p.id, i);
         }
+    }
+
+    #[test]
+    fn lazy_fleet_reproduces_eager_sampling_exactly() {
+        let cfg = FleetConfig {
+            clients: 17,
+            ..FleetConfig::default()
+        };
+        let energy = EnergyConfig::default();
+        let eager = sample_fleet(&cfg, &energy, &mut Pcg32::seeded(9));
+        let lazy = Fleet::new(cfg, energy, Pcg32::seeded(9));
+        assert_eq!(lazy.len(), 17);
+        // Any access order, including repeated and reverse.
+        for &i in &[16usize, 0, 7, 7, 3, 16] {
+            assert_eq!(lazy.profile(i), eager[i], "client {i}");
+        }
+    }
+
+    #[test]
+    fn lazy_profiles_are_prefix_stable_across_fleet_sizes() {
+        // Client i's profile must not depend on how many clients exist:
+        // a 10-client fleet and a 10_000-client fleet drawn from the
+        // same stream agree on every shared prefix index.
+        let energy = EnergyConfig::default();
+        let small = Fleet::new(
+            FleetConfig { clients: 10, ..FleetConfig::default() },
+            energy.clone(),
+            Pcg32::seeded(21),
+        );
+        let big = Fleet::new(
+            FleetConfig { clients: 10_000, ..FleetConfig::default() },
+            energy,
+            Pcg32::seeded(21),
+        );
+        for i in 0..10 {
+            assert_eq!(small.profile(i), big.profile(i), "client {i}");
+        }
+        // And a deep index is reachable without drawing the prefix.
+        let p = big.profile(9_999);
+        assert_eq!(p.id, 9_999);
+        assert!((2.0..=16.0).contains(&p.mem_gb));
+    }
+
+    #[test]
+    fn cohort_is_a_pure_function_of_seed_and_round() {
+        let a = sample_cohort(42, 3, 10_000, 64);
+        let b = sample_cohort(42, 3, 10_000, 64);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 64);
+        assert!(a.windows(2).all(|w| w[0] < w[1]), "sorted + distinct");
+        assert!(a.iter().all(|&i| i < 10_000));
+        // Different rounds (and seeds) draw different cohorts.
+        assert_ne!(a, sample_cohort(42, 4, 10_000, 64));
+        assert_ne!(a, sample_cohort(43, 3, 10_000, 64));
+    }
+
+    #[test]
+    fn cohort_dense_and_full_paths() {
+        // Dense path (2k > fleet): still k distinct sorted ids.
+        let c = sample_cohort(7, 0, 10, 8);
+        assert_eq!(c.len(), 8);
+        assert!(c.windows(2).all(|w| w[0] < w[1]));
+        // k == fleet (and k > fleet) degenerate to full participation.
+        assert_eq!(sample_cohort(7, 5, 6, 6), vec![0, 1, 2, 3, 4, 5]);
+        assert_eq!(sample_cohort(7, 5, 6, 99), vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn cohorts_cover_the_fleet_over_rounds() {
+        // 20 rounds × 16-of-64 should touch most of the fleet; a biased
+        // sampler (e.g. always low ids) would fail this.
+        let mut seen = std::collections::BTreeSet::new();
+        for round in 0..20 {
+            seen.extend(sample_cohort(11, round, 64, 16));
+        }
+        assert!(seen.len() > 48, "only {} of 64 ids ever sampled", seen.len());
     }
 
     #[test]

@@ -14,9 +14,9 @@ pub mod clock;
 pub mod faults;
 pub mod fleet;
 
-pub use clock::SimClock;
+pub use clock::{Event, EventQueue, SimClock};
 pub use faults::{CrashSpec, FaultConfig, FaultCounters, GeState};
-pub use fleet::{sample_fleet, DeviceProfile};
+pub use fleet::{sample_cohort, sample_fleet, DeviceProfile, Fleet};
 
 use crate::config::NetConfig;
 use crate::util::rng::Pcg32;
@@ -296,13 +296,57 @@ impl NetLane {
         }
         ex
     }
+
+    /// A download-only faulted transfer: the rejoin-resync path (a
+    /// recovering client pulling the current global weights). Runs
+    /// through the same GE/drop/timeout/retry/backoff machinery as
+    /// [`NetLane::exchange_framed`] — the uplink is a zero-byte request,
+    /// so only the request half-RTT and the downlink frame are charged —
+    /// and rolls the same corruption flip against the frame sitting in
+    /// [`NetLane::scratch`] (the caller decodes from there; a flipped
+    /// byte then fails the CRC check exactly like a round-path frame).
+    pub fn faulted_download(&mut self, down: Framed, server_time_s: f64) -> Exchange {
+        let ex = exchange_impl(
+            &self.cfg,
+            &self.link,
+            &mut self.rng,
+            self.ge.as_mut(),
+            &mut self.faults,
+            &mut [(&mut self.traffic, &mut self.raw_traffic)],
+            self.server_up,
+            Framed { wire: 0, raw: 0 },
+            down,
+            server_time_s,
+        );
+        let p = self.cfg.faults.corrupt_prob;
+        if ex.is_ok() && p > 0.0 && self.rng.bernoulli(p) {
+            let frame = &mut self.scratch.frame;
+            if frame.len() > HEADER_LEN + TRAILER_LEN {
+                let payload = frame.len() - HEADER_LEN - TRAILER_LEN;
+                let idx = HEADER_LEN + self.rng.uniform_usize(payload);
+                frame[idx] ^= 0xFF;
+            }
+        }
+        ex
+    }
+}
+
+/// Stream-selector salt for [`NetworkSim::resync_lane`] forks.
+const RESYNC_SALT: u64 = 0x5EC0_4DC4_A81E_57A3;
+
+/// Where the per-client [`LinkParams`] come from. Small fleets keep the
+/// seed's eager vectors; scaled runs regenerate links on demand from the
+/// lazy [`Fleet`] stream so the simulator holds O(1) state in fleet size.
+/// Both sources produce bit-identical parameters for the same client.
+enum LinkSource {
+    Eager(Vec<DeviceProfile>, Vec<LinkParams>),
+    Lazy(Fleet),
 }
 
 /// The network simulator. One instance per experiment run.
 pub struct NetworkSim {
     cfg: NetConfig,
-    profiles: Vec<DeviceProfile>,
-    links: Vec<LinkParams>,
+    links: LinkSource,
     rng: Pcg32,
     /// Base seed for the per-round per-client lane streams.
     lane_seed: u64,
@@ -329,8 +373,21 @@ pub struct NetworkSim {
 }
 
 impl NetworkSim {
-    pub fn new(cfg: NetConfig, profiles: Vec<DeviceProfile>, mut rng: Pcg32) -> Self {
+    pub fn new(cfg: NetConfig, profiles: Vec<DeviceProfile>, rng: Pcg32) -> Self {
         let links = profiles.iter().map(|p| LinkParams::of(p, &cfg)).collect();
+        Self::with_links(cfg, LinkSource::Eager(profiles, links), rng)
+    }
+
+    /// Lazy-fleet constructor for scaled runs: link parameters are
+    /// regenerated on demand from the fleet stream (O(1) simulator state
+    /// in fleet size), bit-identical to the eager form for every client.
+    /// Consumes the same draws from `rng` as [`NetworkSim::new`], so the
+    /// two forms are interchangeable without perturbing any stream.
+    pub fn new_lazy(cfg: NetConfig, fleet: Fleet, rng: Pcg32) -> Self {
+        Self::with_links(cfg, LinkSource::Lazy(fleet), rng)
+    }
+
+    fn with_links(cfg: NetConfig, links: LinkSource, mut rng: Pcg32) -> Self {
         let lane_seed = rng.next_u64();
         let ge = if cfg.faults.ge_enabled() {
             Some(GeState::init(&cfg.faults, &mut rng))
@@ -339,7 +396,6 @@ impl NetworkSim {
         };
         NetworkSim {
             cfg,
-            profiles,
             links,
             rng,
             lane_seed,
@@ -354,8 +410,22 @@ impl NetworkSim {
         }
     }
 
+    /// Client `id`'s link parameters (indexed or regenerated on demand
+    /// depending on the link source).
+    fn link(&self, client: usize) -> LinkParams {
+        match &self.links {
+            LinkSource::Eager(_, links) => links[client],
+            LinkSource::Lazy(fleet) => LinkParams::of(&fleet.profile(client), &self.cfg),
+        }
+    }
+
+    /// The eager profile table (tests/diagnostics; panics on a lazy
+    /// simulator — scaled runs query [`Fleet::profile`] instead).
     pub fn profiles(&self) -> &[DeviceProfile] {
-        &self.profiles
+        match &self.links {
+            LinkSource::Eager(profiles, _) => profiles,
+            LinkSource::Lazy(_) => panic!("profiles(): lazy NetworkSim has no eager table"),
+        }
     }
 
     /// Draw the server-availability schedule for a new round and reset the
@@ -379,8 +449,21 @@ impl NetworkSim {
     /// order lanes are created or executed in, which is what makes the
     /// parallel round engine bit-identical across thread counts.
     pub fn lane(&self, client: usize, round: u64) -> NetLane {
+        self.lane_salted(client, round, 0)
+    }
+
+    /// A rejoin-resync lane for `(client, round)`: same purity contract
+    /// as [`NetworkSim::lane`], but on a salted stream so the resync
+    /// download's fault draws never correlate with (or perturb) the
+    /// client's regular round lane. Fault-free configs never resync, so
+    /// existing golden trajectories are untouched.
+    pub fn resync_lane(&self, client: usize, round: u64) -> NetLane {
+        self.lane_salted(client, round, RESYNC_SALT)
+    }
+
+    fn lane_salted(&self, client: usize, round: u64, salt: u64) -> NetLane {
         let round_salt = round.wrapping_mul(0x9E37_79B9_7F4A_7C15);
-        let mut rng = Pcg32::new(self.lane_seed ^ round_salt, client as u64 + 1);
+        let mut rng = Pcg32::new(self.lane_seed ^ round_salt ^ salt, client as u64 + 1);
         let ge = if self.cfg.faults.ge_enabled() {
             // Channel state seeded from the lane's own stream by a
             // stationary-distribution draw: the burst process lives
@@ -392,7 +475,7 @@ impl NetworkSim {
         };
         NetLane {
             cfg: self.cfg.clone(),
-            link: self.links[client],
+            link: self.link(client),
             server_up: self.server_up_this_round,
             rng,
             ge,
@@ -416,12 +499,12 @@ impl NetworkSim {
 
     /// Pure transfer-time model (no failure roll): one-way up.
     pub fn up_time(&self, client: usize, bytes: u64) -> f64 {
-        self.links[client].up_time(bytes)
+        self.link(client).up_time(bytes)
     }
 
     /// Pure transfer-time model: one-way down.
     pub fn down_time(&self, client: usize, bytes: u64) -> f64 {
-        self.links[client].down_time(bytes)
+        self.link(client).down_time(bytes)
     }
 
     /// One request/response exchange with the server (smashed data up,
@@ -439,7 +522,7 @@ impl NetworkSim {
     ) -> Exchange {
         exchange_impl(
             &self.cfg,
-            &self.links[client],
+            &self.link(client),
             &mut self.rng,
             self.ge.as_mut(),
             &mut self.faults,
@@ -972,6 +1055,108 @@ mod tests {
             0.001,
         );
         assert!(w.decode_into(&clean.scratch.frame, &mut out).is_ok());
+    }
+
+    #[test]
+    fn lazy_sim_is_bit_identical_to_eager() {
+        let fleet_cfg = FleetConfig {
+            clients: 4,
+            ..FleetConfig::default()
+        };
+        let energy = EnergyConfig::default();
+        let profiles = sample_fleet(&fleet_cfg, &energy, &mut Pcg32::seeded(1));
+        let cfg = NetConfig {
+            drop_prob: 0.3,
+            ..NetConfig::default()
+        };
+        let mut eager = NetworkSim::new(cfg.clone(), profiles, Pcg32::seeded(2));
+        let mut lazy = NetworkSim::new_lazy(
+            cfg,
+            Fleet::new(fleet_cfg, energy, Pcg32::seeded(1)),
+            Pcg32::seeded(2),
+        );
+        for round in 1..=5u64 {
+            eager.begin_round();
+            lazy.begin_round();
+            assert_eq!(eager.server_available(), lazy.server_available());
+            for client in 0..4 {
+                assert_eq!(
+                    eager.up_time(client, 4096).to_bits(),
+                    lazy.up_time(client, 4096).to_bits()
+                );
+                let mut a = eager.lane(client, round);
+                let mut b = lazy.lane(client, round);
+                for _ in 0..10 {
+                    let (ea, eb) = (a.exchange(64, 64, 1e-3), b.exchange(64, 64, 1e-3));
+                    assert_eq!(ea.is_ok(), eb.is_ok());
+                    assert_eq!(ea.time_s().to_bits(), eb.time_s().to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn resync_lane_is_deterministic_but_decorrelated_from_the_round_lane() {
+        let mut s = sim(1.0, 0.5);
+        s.begin_round();
+        // Pure function of (seed, round, client).
+        let mut a = s.resync_lane(2, 7);
+        let mut b = s.resync_lane(2, 7);
+        for _ in 0..32 {
+            assert_eq!(
+                a.exchange(8, 8, 0.0).is_ok(),
+                b.exchange(8, 8, 0.0).is_ok()
+            );
+        }
+        // ...but on a different stream than the regular round lane.
+        let mut r = s.lane(2, 7);
+        let mut q = s.resync_lane(2, 7);
+        let flips = (0..128)
+            .filter(|_| r.exchange(8, 8, 0.0).is_ok() != q.exchange(8, 8, 0.0).is_ok())
+            .count();
+        assert!(flips > 0, "resync salt must decorrelate the streams");
+    }
+
+    #[test]
+    fn faulted_download_charges_downlink_on_success_and_retries_on_drops() {
+        // Clean link: the download succeeds, charging downlink wire/raw
+        // and no uplink payload (the request is zero-byte).
+        let mut s = sim(1.0, 0.0);
+        s.begin_round();
+        let mut lane = s.resync_lane(0, 1);
+        let e = lane.faulted_download(Framed { wire: 900, raw: 3600 }, 1e-3);
+        assert!(e.is_ok());
+        assert_eq!(lane.traffic.up_bytes, 0);
+        assert_eq!(lane.traffic.down_bytes, 900);
+        assert_eq!(lane.raw_traffic.down_bytes, 3600);
+
+        // All-drop link with a retry budget: exhausts, counts, charges
+        // no downlink, and accumulates timeout + backoff time.
+        let mut s = sim_faults("retry=2:0.1:2", 1.0, 1.0);
+        s.begin_round();
+        let mut lane = s.resync_lane(0, 1);
+        let e = lane.faulted_download(Framed { wire: 900, raw: 3600 }, 1e-3);
+        assert!(!e.is_ok());
+        assert_eq!(lane.traffic.down_bytes, 0);
+        assert_eq!(lane.faults.drops, 3);
+        assert_eq!(lane.faults.retries, 2);
+        let want = 3.0 * s.cfg.timeout_s + 0.1 + 0.2;
+        assert!((e.time_s() - want).abs() < 1e-12, "time {}", e.time_s());
+    }
+
+    #[test]
+    fn faulted_download_corruption_flips_the_scratch_frame() {
+        use crate::wire::{MsgType, Wire, WireCodecKind};
+        let mut s = sim_faults("corrupt=1", 1.0, 0.0);
+        s.begin_round();
+        let w = Wire::new(WireCodecKind::Fp32);
+        let data: Vec<f32> = (0..64).map(|i| i as f32).collect();
+        let mut lane = s.resync_lane(0, 1);
+        let len = w.encode_to(MsgType::Broadcast, &data, 0.0, &mut lane.scratch).len() as u64;
+        let e = lane.faulted_download(Framed { wire: len, raw: 256 }, 1e-3);
+        assert!(e.is_ok());
+        let mut out = Vec::new();
+        assert!(w.decode_into(&lane.scratch.frame, &mut out).is_err());
     }
 
     #[test]

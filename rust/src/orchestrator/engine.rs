@@ -72,6 +72,25 @@
 //! friendly); DFL parallelizes across server replicas, each worker
 //! walking its replica's clients in id order so the per-replica update
 //! sequence is unchanged.
+//!
+//! # Sampled participation
+//!
+//! Per-round client sampling (`--sample`) composes with the contract
+//! rather than amending it: the cohort is a pure function of
+//! `(run seed, round)` drawn on its own salted stream
+//! ([`crate::network::sample_cohort`]), resolved on the caller's thread
+//! *before* the fan-out, so the lane set handed to [`run_lanes`] — and
+//! therefore every per-lane stream and the id-ordered merge — is
+//! identical for every thread count. Lazily materialized cohort state
+//! (profiles re-derived by stream jumps, shard RNGs re-derived by
+//! `advance`+`fork`) reproduces the eager construction draw for draw,
+//! which is what keeps `sample=off` bit-identical to the pre-sampling
+//! engine and sampled runs thread- and kernel-thread-invariant. The
+//! round barrier itself is the event-driven scheduler
+//! ([`crate::network::EventQueue`]): branch completions drain in strict
+//! `(time, insertion-seq)` order and the straggler max is a pure
+//! comparison fold, bitwise equal to the old `advance_parallel` array
+//! fold.
 
 use crate::energy::{EnergyMeter, PowerState};
 use crate::network::{DeviceProfile, FaultCounters};

@@ -32,19 +32,47 @@
 //! receiving side always trains on the *decoded* tensors — so lossy
 //! codecs (`--wire-codec fp16|int8|topk:<k>`) genuinely perturb training,
 //! while `fp32` remains bit-identical to never serializing at all.
+//!
+//! # Sampled participation (`--sample n|frac`)
+//!
+//! With `cfg.sample` off (the default) every client participates every
+//! round and the world is built eagerly, exactly as the seed did. With a
+//! sample spec, each round draws a cohort that is a pure function of
+//! `(seed, round)` ([`crate::network::sample_cohort`]) and the per-round
+//! cost — client state, lane buffers, barrier events — scales with the
+//! *cohort*, not the fleet:
+//!
+//! - device profiles come on demand from the lazy [`Fleet`] stream
+//!   (prefix-stable across fleet sizes, draw-identical to the eager
+//!   table);
+//! - cohort members are materialized into a pooled map at round start
+//!   (fresh φ_i, current global prefix, flagged stale so their first
+//!   participation pays the charged resync download any rejoiner pays)
+//!   and evicted when they rotate out, so memory stays flat per round;
+//! - barrier waits drain an [`EventQueue`] of per-participant completion
+//!   events instead of folding O(fleet) vectors — bit-identical to the
+//!   straggler-max fold, shared with the SFL/DFL baselines.
+//!
+//! Cohort draws live on their own salted stream and the event drain is
+//! comparison-only, so `sample=off` trajectories are bit-identical to
+//! the seed's (no golden re-bless) and sampled runs stay invariant
+//! across `--threads` / `--kernel-threads`.
 
 pub mod engine;
+
+use std::collections::BTreeMap;
 
 use crate::allocation::{self, Assignment};
 use crate::baselines;
 use crate::client::ClientState;
-use crate::config::{ExperimentConfig, Method};
+use crate::config::{ExperimentConfig, Method, SampleSpec};
 use crate::data::{dirichlet_partition, ClientShard, Dataset, SyntheticSpec, SyntheticTask};
 use crate::energy::{cost::ModelGeometry, CostModel, EnergyMeter, PowerState};
 use crate::fedserver::ClientUpdate;
 use crate::metrics::{RoundRecord, RunMetrics};
 use crate::network::{
-    sample_fleet, DeviceProfile, FaultConfig, FaultCounters, Framed, NetLane, NetworkSim, SimClock,
+    sample_cohort, sample_fleet, DeviceProfile, Event, EventQueue, FaultConfig, FaultCounters,
+    Fleet, Framed, NetLane, NetworkSim, SimClock,
 };
 use crate::runtime::Runtime;
 use crate::server::ServerState;
@@ -58,10 +86,19 @@ use engine::RoundLedger;
 /// Everything a method loop needs, pre-built by [`Harness::prepare`].
 pub struct Harness {
     pub cfg: ExperimentConfig,
+    /// Eager per-client training state (`sample=off`). Empty under
+    /// sampled participation — cohort members live in `pool` instead.
     pub clients: Vec<ClientState>,
     pub server: ServerState,
+    /// Eager profile table (`sample=off`). Empty under sampled
+    /// participation — use [`Harness::profile`], which serves both.
     pub profiles: Vec<DeviceProfile>,
+    /// Eager Eq. 1 assignment table (`sample=off` only).
     pub assignments: Vec<Assignment>,
+    /// Lazily sampled fleet (always present; the eager tables above are
+    /// drawn from the same stream, so either view yields the same
+    /// devices).
+    pub fleet: Fleet,
     pub net: NetworkSim,
     pub meter: EnergyMeter,
     pub clock: SimClock,
@@ -74,27 +111,65 @@ pub struct Harness {
     /// Fixed test subset evaluated every round.
     pub eval_indices: Vec<usize>,
     pub records: Vec<RoundRecord>,
+    /// Per-round cohort size under sampled participation; `None` = full
+    /// participation (the seed behaviour).
+    pub cohort_k: Option<usize>,
+    /// Materialized cohort state under sampled participation, keyed by
+    /// client id and evicted down to each round's roster — the fleet
+    /// never exists in memory at once.
+    pub pool: BTreeMap<usize, ClientState>,
+    /// High-water marks of the pooled state (flat-memory evidence).
+    pub pool_stats: PoolStats,
+    /// Per-client shard index lists, kept for on-demand materialization
+    /// (sampled mode only; eager mode moves them into `clients`).
+    shards: Vec<Vec<usize>>,
+    /// Base of the per-client shard-RNG stream (`root.fork(4)`): client
+    /// `i`'s generator is `clone → advance(2i) → fork(i)`, bit-equal to
+    /// the eager sequential forks.
+    shard_base: Pcg32,
+    /// Fleet-wide `(lat_min, lat_max)` for lazy Eq. 1 depth assignment.
+    lat_extremes: (f64, f64),
     /// Host wall-clock anchor (perf reporting, not simulation).
     host_t0: std::time::Instant,
+}
+
+/// High-water marks of the sampled-participation pools. Scaled runs
+/// assert on these: they must track the cohort size, never the fleet.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PoolStats {
+    /// Largest roster materialized in any round.
+    pub max_cohort: usize,
+    /// Most client states alive in the pool at once.
+    pub max_materialized: usize,
+    /// Most `f32`s held by the per-lane server/classifier buffers.
+    pub max_lane_f32: usize,
 }
 
 /// The result of one experiment run.
 pub struct RunResult {
     pub metrics: RunMetrics,
-    /// Depth assigned to each client (Eq. 1).
+    /// Depth assigned to each client (Eq. 1). Under sampled
+    /// participation: the depths of the final round's materialized
+    /// cohort (the fleet-wide table is never built).
     pub depths: Vec<usize>,
+    /// Pooled-state high-water marks (zeros under `sample=off`).
+    pub pool: PoolStats,
 }
 
 impl Harness {
     /// Build the simulated world for a config.
     pub fn prepare(rt: &Runtime, cfg: &ExperimentConfig) -> Result<Harness> {
-        // Resolve the fault schedule once, up front (`SUPERSFL_FAULTS`
-        // wins over the config — the CI chaos leg pins it), so the
-        // harness config and the network simulator always agree.
+        // Resolve the fault schedule and the participation spec once, up
+        // front (`SUPERSFL_FAULTS` / `SUPERSFL_SAMPLE` win over the
+        // config — the CI chaos and scale legs pin them), so the harness
+        // config, the network simulator and the round loops always agree.
         let mut cfg = cfg.clone();
         cfg.net.faults = FaultConfig::from_env_or(cfg.net.faults.clone());
+        cfg.sample = SampleSpec::from_env_or(cfg.sample);
         let cfg = &cfg;
         cfg.validate()?;
+        let cohort_k = cfg.sample.cohort_size(cfg.fleet.clients);
+        let sampled = cohort_k.is_some();
         let m = rt.model().clone();
         let mut root = Pcg32::new(cfg.train.seed, 0xD15EA5E);
 
@@ -123,44 +198,76 @@ impl Harness {
         );
 
         // Fleet + allocation (Eq. 1). Baselines override depths themselves.
+        // The lazy `Fleet` view is anchored at the *pre-draw* stream
+        // position, so `fleet.profile(i)` reproduces the eager table
+        // bit for bit in either mode.
         let mut fleet_rng = root.fork(3);
-        let profiles = sample_fleet(&cfg.fleet, &cfg.energy, &mut fleet_rng);
-        let assignments = allocation::allocate(&profiles, &cfg.alloc, m.depth);
+        let fleet = Fleet::new(cfg.fleet.clone(), cfg.energy.clone(), fleet_rng.clone());
+        let (profiles, assignments, lat_extremes) = if sampled {
+            // One streaming pass for the Eq. 1 latency extremes; the
+            // O(fleet) profile/assignment tables are never built.
+            let mut lo = f64::INFINITY;
+            let mut hi = f64::NEG_INFINITY;
+            for i in 0..fleet.len() {
+                let lat = fleet.profile(i).latency_s;
+                lo = lo.min(lat);
+                hi = hi.max(lat);
+            }
+            (Vec::new(), Vec::new(), (lo, hi))
+        } else {
+            let profiles = sample_fleet(&cfg.fleet, &cfg.energy, &mut fleet_rng);
+            let assignments = allocation::allocate(&profiles, &cfg.alloc, m.depth);
+            (profiles, assignments, (0.0, 0.0))
+        };
 
         let server = ServerState::new(rt, cfg.data.classes, cfg.train.lr_server as f32)?;
 
-        // Clients.
+        // Clients. Sampled mode defers construction to
+        // `materialize_cohort` and keeps only the shard index lists; the
+        // shard-RNG base is pinned here so lazy derivation
+        // (`advance(2i)` + `fork(i)`) replays the eager fork sequence.
         let mut shard_rng = root.fork(4);
-        let mut clients = Vec::with_capacity(cfg.fleet.clients);
-        for (i, shard_idx) in shards.into_iter().enumerate() {
-            let depth = match cfg.method {
-                Method::Sfl => cfg.sfl_fixed_depth.clamp(1, m.depth - 1),
-                _ => assignments[i].depth,
-            };
-            let shard = ClientShard::new(shard_idx, shard_rng.fork(i as u64));
-            let c = match cfg.method {
-                Method::SuperSfl => ClientState::new_ssfl(
-                    rt,
-                    i,
-                    depth,
-                    cfg.data.classes,
-                    &server.enc,
-                    shard,
-                    cfg.train.lr_client as f32,
-                )?,
-                _ => ClientState::new_baseline(
-                    rt,
-                    i,
-                    depth,
-                    &server.enc,
-                    shard,
-                    cfg.train.lr_client as f32,
-                )?,
-            };
-            clients.push(c);
+        let shard_base = shard_rng.clone();
+        let mut clients = Vec::new();
+        let mut kept_shards: Vec<Vec<usize>> = Vec::new();
+        if sampled {
+            kept_shards = shards;
+        } else {
+            clients.reserve(cfg.fleet.clients);
+            for (i, shard_idx) in shards.into_iter().enumerate() {
+                let depth = match cfg.method {
+                    Method::Sfl => cfg.sfl_fixed_depth.clamp(1, m.depth - 1),
+                    _ => assignments[i].depth,
+                };
+                let shard = ClientShard::new(shard_idx, shard_rng.fork(i as u64));
+                let c = match cfg.method {
+                    Method::SuperSfl => ClientState::new_ssfl(
+                        rt,
+                        i,
+                        depth,
+                        cfg.data.classes,
+                        &server.enc,
+                        shard,
+                        cfg.train.lr_client as f32,
+                    )?,
+                    _ => ClientState::new_baseline(
+                        rt,
+                        i,
+                        depth,
+                        &server.enc,
+                        shard,
+                        cfg.train.lr_client as f32,
+                    )?,
+                };
+                clients.push(c);
+            }
         }
 
-        let net = NetworkSim::new(cfg.net.clone(), profiles.clone(), root.fork(5));
+        let net = if sampled {
+            NetworkSim::new_lazy(cfg.net.clone(), fleet.clone(), root.fork(5))
+        } else {
+            NetworkSim::new(cfg.net.clone(), profiles.clone(), root.fork(5))
+        };
         let meter = EnergyMeter::new(cfg.fleet.clients, &cfg.energy);
         let cost = CostModel::new(ModelGeometry {
             tokens: m.tokens,
@@ -181,6 +288,7 @@ impl Harness {
             server,
             profiles,
             assignments,
+            fleet,
             net,
             meter,
             clock: SimClock::new(),
@@ -190,8 +298,122 @@ impl Harness {
             test,
             eval_indices,
             records: Vec::new(),
+            cohort_k,
+            pool: BTreeMap::new(),
+            pool_stats: PoolStats::default(),
+            shards: kept_shards,
+            shard_base,
+            lat_extremes,
             host_t0: std::time::Instant::now(),
         })
+    }
+
+    /// Client `id`'s device profile, independent of participation mode
+    /// (eager table or lazy fleet stream — same bits either way).
+    pub fn profile(&self, id: usize) -> DeviceProfile {
+        if self.profiles.is_empty() {
+            self.fleet.profile(id)
+        } else {
+            self.profiles[id]
+        }
+    }
+
+    /// The ids participating this round: the whole fleet under
+    /// `sample=off`, else the round's cohort — a pure function of
+    /// `(seed, round)`, sorted ascending. Never depends on thread
+    /// counts, fault history or prior rounds.
+    pub fn roster(&self, round: usize) -> Vec<usize> {
+        match self.cohort_k {
+            None => (0..self.cfg.fleet.clients).collect(),
+            Some(k) => sample_cohort(self.cfg.train.seed, round, self.cfg.fleet.clients, k),
+        }
+    }
+
+    /// Borrow client `id`'s live state (eager vector or materialized
+    /// pool entry).
+    pub fn client(&self, id: usize) -> &ClientState {
+        if self.cohort_k.is_none() {
+            &self.clients[id]
+        } else {
+            self.pool.get(&id).expect("roster member materialized")
+        }
+    }
+
+    /// Mutable sibling of [`Harness::client`].
+    pub fn client_mut(&mut self, id: usize) -> &mut ClientState {
+        if self.cohort_k.is_none() {
+            &mut self.clients[id]
+        } else {
+            self.pool.get_mut(&id).expect("roster member materialized")
+        }
+    }
+
+    /// Eq. 1 depth for client `id` without the eager assignment table.
+    fn depth_of(&self, id: usize, total_layers: usize) -> usize {
+        match self.cfg.method {
+            Method::Sfl => self.cfg.sfl_fixed_depth.clamp(1, total_layers - 1),
+            _ => {
+                let p = self.fleet.profile(id);
+                allocation::depth_for(
+                    p.mem_gb,
+                    p.latency_s,
+                    self.lat_extremes.0,
+                    self.lat_extremes.1,
+                    &self.cfg.alloc,
+                    total_layers,
+                )
+            }
+        }
+    }
+
+    /// Ensure every roster member has live training state. A no-op under
+    /// `sample=off` (all clients are eager). Under sampled participation,
+    /// members of the previous cohort that were not re-drawn are evicted
+    /// and new members are materialized — current global prefix, fresh
+    /// φ_i, and `missed_rounds = 1` so their first participation pays
+    /// the same charged (and fault-prone) resync download a crash
+    /// rejoiner pays. Live state therefore stays O(cohort) regardless of
+    /// the fleet size.
+    pub fn materialize_cohort(&mut self, rt: &Runtime, roster: &[usize]) -> Result<()> {
+        if self.cohort_k.is_none() {
+            return Ok(());
+        }
+        let total_layers = rt.model().depth;
+        self.pool.retain(|id, _| roster.binary_search(id).is_ok());
+        for &id in roster {
+            if self.pool.contains_key(&id) {
+                continue;
+            }
+            let depth = self.depth_of(id, total_layers);
+            let mut shard_rng = self.shard_base.clone();
+            shard_rng.advance(2 * id as u64);
+            let shard_rng = shard_rng.fork(id as u64);
+            let shard = ClientShard::new(self.shards[id].clone(), shard_rng);
+            let mut c = match self.cfg.method {
+                Method::SuperSfl => ClientState::new_ssfl(
+                    rt,
+                    id,
+                    depth,
+                    self.cfg.data.classes,
+                    &self.server.enc,
+                    shard,
+                    self.cfg.train.lr_client as f32,
+                )?,
+                _ => ClientState::new_baseline(
+                    rt,
+                    id,
+                    depth,
+                    &self.server.enc,
+                    shard,
+                    self.cfg.train.lr_client as f32,
+                )?,
+            };
+            c.missed_rounds = 1;
+            self.pool.insert(id, c);
+        }
+        self.pool_stats.max_cohort = self.pool_stats.max_cohort.max(roster.len());
+        self.pool_stats.max_materialized = self.pool_stats.max_materialized.max(self.pool.len());
+        Ok(())
     }
 
     /// Simulated server compute time for one suffix step of depth `d`.
@@ -213,68 +435,191 @@ impl Harness {
         Ok(acc)
     }
 
+    /// Churn barrier, shared by all three method loops: dead roster
+    /// members sit out (missed_rounds ticks); stale members — crash
+    /// rejoiners, or freshly sampled cohort members — download the
+    /// current global prefix as one Broadcast frame over the *faulted*
+    /// exchange path (retry/backoff, drops, timeouts, corruption all
+    /// apply, on a resync-salted lane stream so fault-free trajectories
+    /// draw nothing new). On success the client syncs and rejoins. If
+    /// the retry budget is exhausted or the frame arrives corrupt, the
+    /// client stays down one more round: `missed_rounds` keeps ticking,
+    /// the fault is counted, and it retries at its next roster
+    /// appearance.
+    ///
+    /// Returns the sorted ids that failed resync (they sit out this
+    /// round) and the fault counters the attempts accrued (fold these
+    /// into the round's counters before `finish_round`).
+    pub fn resync_roster(
+        &mut self,
+        round_u: u64,
+        roster: &[usize],
+        fc: &FaultConfig,
+    ) -> (Vec<usize>, FaultCounters) {
+        let mut entries: Vec<(usize, f64)> = roster.iter().map(|&id| (id, 0.0)).collect();
+        let mut any = false;
+        let mut faults = FaultCounters::default();
+        let mut sitting_out: Vec<usize> = Vec::new();
+        for (pos, &ci) in roster.iter().enumerate() {
+            if fc.is_down(round_u, ci) {
+                // Missed round: reset the loss accumulators so stale
+                // means never leak into this round's metrics.
+                let c = self.client_mut(ci);
+                c.begin_round();
+                c.missed_rounds += 1;
+                continue;
+            }
+            if self.client(ci).missed_rounds > 0 {
+                let prefix_elems = self.client(ci).enc.len();
+                let mut lane = self.net.resync_lane(ci, round_u);
+                let frame_len = self
+                    .wire
+                    .encode_to(
+                        MsgType::Broadcast,
+                        &self.server.enc[..prefix_elems],
+                        0.0,
+                        &mut lane.scratch,
+                    )
+                    .len() as u64;
+                let ex = lane.faulted_download(
+                    Framed {
+                        wire: frame_len,
+                        raw: (prefix_elems * 4) as u64,
+                    },
+                    0.0,
+                );
+                entries[pos].1 = ex.time_s();
+                let mut synced = false;
+                if ex.is_ok() {
+                    match self.wire.decode(&lane.scratch.frame) {
+                        Ok(dec) => {
+                            let c = self.client_mut(ci);
+                            c.sync_from_global(&dec.data);
+                            c.missed_rounds = 0;
+                            synced = true;
+                        }
+                        Err(_) => {
+                            // Delivered but failed the CRC/decode: an
+                            // exchange fault, not a programming error.
+                            lane.faults.corruptions += 1;
+                        }
+                    }
+                }
+                if !synced {
+                    let c = self.client_mut(ci);
+                    c.begin_round();
+                    c.missed_rounds += 1;
+                    sitting_out.push(ci);
+                }
+                faults.add(&lane.faults);
+                self.net.absorb_lane(&lane);
+                any = true;
+            }
+        }
+        if any {
+            self.charge_barrier_phase(&entries);
+        }
+        (sitting_out, faults)
+    }
+
+    /// Drain a queue of *round-relative* completion events and return the
+    /// barrier time (the straggler max). Comparison-only — f64 max over
+    /// non-negative times is order-free — so the result is bit-identical
+    /// to the seed's `advance_parallel` fold over the same times, while
+    /// the queue is sized by the round's participants, not the fleet.
+    fn drain_barrier(events: &mut EventQueue) -> f64 {
+        let mut dt = 0.0f64;
+        while let Some((t, _)) = events.pop() {
+            if t > dt {
+                dt = t;
+            }
+        }
+        dt
+    }
+
     /// Merge one round's lane ledgers into the shared accounting, in
     /// client-id order (the determinism contract's merge step), advance
     /// the clock by the straggler max, and return
-    /// `(round_dt, busy, fallback_steps, server_steps, faults)`.
+    /// `(round_dt, busy, fallback_steps, server_steps, faults)` with
+    /// `busy` as sorted `(client, busy_s)` pairs.
     ///
-    /// Ledgers for dead (churned-out) clients simply don't exist that
-    /// round: their busy/branch slots stay 0 and they contribute nothing
-    /// to the straggler max.
+    /// The barrier is event-driven: each ledger schedules one
+    /// `BranchDone` completion and the drain's comparison max gates the
+    /// round. Ledgers for dead (churned-out) or unsampled clients simply
+    /// don't exist, so they cost neither an event nor a vector slot.
     pub fn absorb_ledgers(
         &mut self,
         ledgers: &[RoundLedger],
-    ) -> (f64, Vec<f64>, usize, usize, FaultCounters) {
-        let n = self.clients.len();
-        let mut busy = vec![0.0f64; n];
-        let mut branch = vec![0.0f64; n];
+    ) -> (f64, Vec<(usize, f64)>, usize, usize, FaultCounters) {
+        let mut busy = Vec::with_capacity(ledgers.len());
         let mut fallback_steps = 0usize;
         let mut server_steps = 0usize;
         let mut faults = FaultCounters::default();
+        let mut events = EventQueue::new();
         for l in ledgers {
-            busy[l.client] = l.busy_s;
-            branch[l.client] = l.branch_s;
+            events.schedule(l.branch_s, Event::BranchDone { client: l.client });
+            busy.push((l.client, l.busy_s));
             self.meter.add_client_energy(l.client, l.energy_j);
             self.meter.server_busy(l.server_busy_s);
             fallback_steps += l.fallback_steps;
             server_steps += l.server_steps;
             faults.add(&l.faults);
         }
-        let round_dt = self.clock.advance_parallel(&branch);
+        let round_dt = Self::drain_barrier(&mut events);
+        self.clock.advance(round_dt);
         (round_dt, busy, fallback_steps, server_steps, faults)
     }
 
-    /// Charge a barrier phase (aggregation upload / broadcast download):
-    /// each client transmits for its transfer time and idles until the
-    /// slowest client finishes. Advances the clock; returns the phase dt.
-    pub fn charge_barrier_phase(&mut self, transfer_s: &[f64]) -> f64 {
-        let dt = self.clock.advance_parallel(transfer_s);
-        for (i, &t) in transfer_s.iter().enumerate() {
-            self.meter
-                .client(&self.profiles[i], PowerState::Transmit, t);
-            self.meter
-                .client(&self.profiles[i], PowerState::Idle, (dt - t).max(0.0));
+    /// Charge a barrier phase (resync / aggregation upload / broadcast
+    /// download): each listed client transmits for its transfer time and
+    /// idles until the slowest one finishes. Entries cover this round's
+    /// roster (zero transfer for members that shipped nothing — they
+    /// still idle at the barrier, as the eager accounting always did).
+    /// Advances the clock; returns the phase dt.
+    pub fn charge_barrier_phase(&mut self, entries: &[(usize, f64)]) -> f64 {
+        let mut events = EventQueue::new();
+        for &(id, t) in entries {
+            events.schedule(t, Event::BranchDone { client: id });
+        }
+        let dt = Self::drain_barrier(&mut events);
+        self.clock.advance(dt);
+        for &(id, t) in entries {
+            let p = self.profile(id);
+            self.meter.client(&p, PowerState::Transmit, t);
+            self.meter.client(&p, PowerState::Idle, (dt - t).max(0.0));
         }
         dt
     }
 
-    /// Close out a round: charge client idle, build + store the record,
-    /// and return whether the accuracy target was reached.
+    /// Close out a round: charge roster idle, build + store the record,
+    /// and return whether the accuracy target was reached. `busy` is the
+    /// sorted pairs from [`Harness::absorb_ledgers`]; roster members
+    /// without a pair (down, sitting out) idled the whole round.
     #[allow(clippy::too_many_arguments)]
     pub fn finish_round(
         &mut self,
         round: usize,
         round_dt: f64,
-        busy: &[f64],
+        roster: &[usize],
+        busy: &[(usize, f64)],
         accuracy: f64,
         fallback_steps: usize,
         server_steps: usize,
         faults: FaultCounters,
     ) -> bool {
-        for (i, &b) in busy.iter().enumerate() {
+        let mut bi = 0usize;
+        for &id in roster {
+            while bi < busy.len() && busy[bi].0 < id {
+                bi += 1;
+            }
+            let b = if bi < busy.len() && busy[bi].0 == id {
+                busy[bi].1
+            } else {
+                0.0
+            };
             let idle = (round_dt - b).max(0.0);
-            self.meter
-                .client(&self.profiles[i], PowerState::Idle, idle);
+            let p = self.profile(id);
+            self.meter.client(&p, PowerState::Idle, idle);
         }
         let mean = |xs: Vec<f64>| {
             if xs.is_empty() {
@@ -283,15 +628,13 @@ impl Harness {
                 xs.iter().sum::<f64>() / xs.len() as f64
             }
         };
-        let local_losses: Vec<f64> = self
-            .clients
+        let local_losses: Vec<f64> = roster
             .iter()
-            .filter_map(|c| c.round_local_loss.mean())
+            .filter_map(|&id| self.client(id).round_local_loss.mean())
             .collect();
-        let server_losses: Vec<f64> = self
-            .clients
+        let server_losses: Vec<f64> = roster
             .iter()
-            .filter_map(|c| c.round_server_loss.mean())
+            .filter_map(|&id| self.client(id).round_server_loss.mean())
             .collect();
         let round_wire = self.net.round_traffic.total_bytes();
         let round_raw = self.net.round_raw_traffic.total_bytes();
@@ -313,6 +656,7 @@ impl Harness {
             energy_j: self.meter.total_energy_j(),
             fallback_steps,
             server_steps,
+            participants: busy.len(),
             timeouts: faults.timeouts,
             drops: faults.drops,
             corruptions: faults.corruptions,
@@ -341,9 +685,15 @@ impl Harness {
         );
         metrics.host_wall_s = self.host_t0.elapsed().as_secs_f64();
         metrics.wire_codec = self.wire.label();
+        let depths = if self.cohort_k.is_none() {
+            self.clients.iter().map(|c| c.depth).collect()
+        } else {
+            self.pool.values().map(|c| c.depth).collect()
+        };
         RunResult {
             metrics,
-            depths: self.clients.iter().map(|c| c.depth).collect(),
+            depths,
+            pool: self.pool_stats,
         }
     }
 }
@@ -364,7 +714,7 @@ pub fn run_experiment(rt: &Runtime, cfg: &ExperimentConfig) -> Result<RunResult>
 /// suffix + classifier it trains, and the round ledger.
 struct SsflLane<'a> {
     client: &'a mut ClientState,
-    profile: &'a DeviceProfile,
+    profile: DeviceProfile,
     srv: &'a mut [f32],
     clf: &'a mut [f32],
     /// Simulated server compute per step for this client's depth.
@@ -375,6 +725,18 @@ struct SsflLane<'a> {
     steps: usize,
     net: NetLane,
     ledger: RoundLedger,
+}
+
+/// One round's lane roster entry, fixed before the fan-out: which client
+/// runs, its (Copy) profile, how many steps, and how big its lane-local
+/// server suffix is. A pure function of `(roster, fault schedule,
+/// resync outcomes)` — never of thread count.
+struct LaneSlot {
+    ci: usize,
+    profile: DeviceProfile,
+    srv_len: usize,
+    srv_time: f64,
+    steps: usize,
 }
 
 /// The SuperSFL round loop (paper Alg. 1–3 + §II-D aggregation), executed
@@ -390,7 +752,6 @@ fn run_ssfl(rt: &Runtime, h: &mut Harness) -> Result<()> {
     let lr_server = h.cfg.train.lr_server as f32;
     let server_flops = h.cfg.fleet.server_gflops * 1e9;
     let threads = h.cfg.threads;
-    let n = h.clients.len();
     let enc_len = h.server.enc.len();
     let clf_len = h.server.clf_s.len();
     let smashed = h.cost.smashed_bytes(dim);
@@ -399,23 +760,16 @@ fn run_ssfl(rt: &Runtime, h: &mut Harness) -> Result<()> {
     // the server computes it — the exchange timeout roll prices both
     // directions up front.
     let gz_frame_len = h.wire.frame_len(MsgType::ActGrad, smashed_elems);
-    // SSFL depths are fixed for the run: precompute the per-client server
-    // step times through the single shared helper.
-    let srv_times: Vec<f64> = h
-        .clients
-        .iter()
-        .map(|c| h.server_step_time(c.depth))
-        .collect();
+    let sampled = h.cohort_k.is_some();
 
-    // Persistent per-lane buffers, allocated once and refreshed per round:
-    // each lane trains the round-start snapshot of its suffix + classifier
-    // and the deltas are merged at the barrier (engine module docs).
-    let mut lane_srv: Vec<Vec<f32>> = h
-        .clients
-        .iter()
-        .map(|c| vec![0.0f32; enc_len - h.server.prefix_len(c.depth)])
-        .collect();
-    let mut lane_clf: Vec<Vec<f32>> = vec![vec![0.0f32; clf_len]; n];
+    // Persistent per-lane buffers, pooled to the live-lane count and
+    // refreshed per round: each lane trains the round-start snapshot of
+    // its suffix + classifier and the deltas are merged at the barrier
+    // (engine module docs). Under `sample=off` this settles at one
+    // buffer per client after round 1 — identical to the seed's eager
+    // tables; under sampling it never grows past the cohort.
+    let mut lane_srv: Vec<Vec<f32>> = Vec::new();
+    let mut lane_clf: Vec<Vec<f32>> = Vec::new();
     let mut enc_snapshot = vec![0.0f32; enc_len];
     let mut clf_snapshot = vec![0.0f32; clf_len];
     // Reusable encode/decode buffers for the barrier frames (aggregation
@@ -430,6 +784,10 @@ fn run_ssfl(rt: &Runtime, h: &mut Harness) -> Result<()> {
 
     for round in 1..=h.cfg.train.rounds {
         let round_u = round as u64;
+
+        // ---- Roster + cohort state (sampled mode materializes here) ----
+        let roster = h.roster(round);
+        h.materialize_cohort(rt, &roster)?;
         h.net.begin_round();
 
         // When the server is down for the whole round every exchange
@@ -438,66 +796,68 @@ fn run_ssfl(rt: &Runtime, h: &mut Harness) -> Result<()> {
         let server_up = h.net.server_available();
 
         // ---- Churn: dead clients sit out; rejoiners resync first ----
-        // A client whose crash window just ended holds a stale prefix:
-        // before it rejoins the round it downloads the current global
-        // prefix as one charged Broadcast frame (the reconnect-with-
-        // resume semantics a real TCP transport inherits). Its local
-        // classifier φ_i survived the outage, so training resumes
-        // immediately (Alg. 3's head is the client's own).
-        let mut resync_t = vec![0.0f64; n];
-        let mut any_resync = false;
-        for ci in 0..n {
-            if fc.is_down(round_u, ci) {
-                // Missed round: reset the loss accumulators so stale
-                // means never leak into this round's metrics.
-                h.clients[ci].begin_round();
-                h.clients[ci].missed_rounds += 1;
+        // On success the client syncs and rejoins (its local classifier
+        // φ_i survived the outage, so training resumes immediately —
+        // Alg. 3's head is the client's own); see
+        // [`Harness::resync_roster`] for the failure semantics.
+        let (sitting_out, resync_faults) = h.resync_roster(round_u, &roster, &fc);
+
+        // ---- Lane roster: who actually runs a branch this round ----
+        // Down clients, failed resyncs and (under sampling past the
+        // dataset size) clients with an empty shard get no lane; the
+        // lane set and every surviving lane's RNG stream stay pure
+        // functions of (seed, round, client).
+        let mut slots: Vec<LaneSlot> = Vec::with_capacity(roster.len());
+        for &ci in &roster {
+            if fc.is_down(round_u, ci) || sitting_out.binary_search(&ci).is_ok() {
                 continue;
             }
-            if h.clients[ci].missed_rounds > 0 {
-                let prefix_elems = h.clients[ci].enc.len();
-                let frame_len = h
-                    .wire
-                    .encode_to(
-                        MsgType::Broadcast,
-                        &h.server.enc[..prefix_elems],
-                        0.0,
-                        &mut bar_scratch,
-                    )
-                    .len() as u64;
-                let dec = h.wire.decode(&bar_scratch.frame)?;
-                resync_t[ci] = h.net.bulk_down_framed(
-                    ci,
-                    Framed {
-                        wire: frame_len,
-                        raw: (prefix_elems * 4) as u64,
-                    },
-                );
-                h.clients[ci].sync_from_global(&dec.data);
-                h.clients[ci].missed_rounds = 0;
-                any_resync = true;
+            let c = h.client(ci);
+            if c.shard.is_empty() {
+                continue;
             }
-        }
-        if any_resync {
-            h.charge_barrier_phase(&resync_t);
+            let steps = fc
+                .crash_at(round_u, ci)
+                .map(|cr| cr.step.min(local_steps))
+                .unwrap_or(local_steps);
+            slots.push(LaneSlot {
+                ci,
+                profile: h.profile(ci),
+                srv_len: enc_len - h.server.prefix_len(c.depth),
+                srv_time: h.server_step_time(c.depth),
+                steps,
+            });
         }
 
+        // Pool the lane buffers to the live-lane count and load the
+        // round-start snapshots (reused allocations — the resize is a
+        // no-op once sizes settle).
+        if lane_srv.len() < slots.len() {
+            lane_srv.resize_with(slots.len(), Vec::new);
+            lane_clf.resize_with(slots.len(), Vec::new);
+        }
+        for (j, s) in slots.iter().enumerate() {
+            lane_srv[j].resize(s.srv_len, 0.0);
+            lane_clf[j].resize(clf_len, 0.0);
+            if server_up {
+                lane_srv[j].copy_from_slice(&h.server.enc[enc_len - s.srv_len..]);
+                lane_clf[j].copy_from_slice(&h.server.clf_s);
+            }
+        }
+        let lane_f32: usize = lane_srv[..slots.len()].iter().map(|b| b.len()).sum::<usize>()
+            + lane_clf[..slots.len()].iter().map(|b| b.len()).sum::<usize>();
+        h.pool_stats.max_lane_f32 = h.pool_stats.max_lane_f32.max(lane_f32);
         if server_up {
             // Round-start snapshots (reused buffers — no fresh allocations).
             enc_snapshot.copy_from_slice(&h.server.enc);
             clf_snapshot.copy_from_slice(&h.server.clf_s);
-            for (srv, clf) in lane_srv.iter_mut().zip(lane_clf.iter_mut()) {
-                let off = enc_len - srv.len();
-                srv.copy_from_slice(&h.server.enc[off..]);
-                clf.copy_from_slice(&h.server.clf_s);
-            }
         }
 
-        // ---- Fan out: every client branch on a worker thread ----
+        // ---- Fan out: every roster branch on a worker thread ----
         let ledgers: Vec<RoundLedger> = {
             let Harness {
                 clients,
-                profiles,
+                pool,
                 net,
                 cost,
                 train,
@@ -508,33 +868,36 @@ fn run_ssfl(rt: &Runtime, h: &mut Harness) -> Result<()> {
             let train = &*train;
             let wire = &*wire;
 
-            let mut lanes: Vec<SsflLane<'_>> = Vec::with_capacity(n);
+            // Walk the live client states and the sorted slots together
+            // (both ascend by client id), pairing each slot with its
+            // exclusive `&mut ClientState` and a pooled lane buffer.
+            let states: Box<dyn Iterator<Item = (usize, &mut ClientState)>> = if sampled {
+                Box::new(pool.iter_mut().map(|(id, c)| (*id, c)))
+            } else {
+                Box::new(clients.iter_mut().enumerate())
+            };
+            let mut lanes: Vec<SsflLane<'_>> = Vec::with_capacity(slots.len());
             let mut srv_it = lane_srv.iter_mut();
             let mut clf_it = lane_clf.iter_mut();
-            for (ci, client) in clients.iter_mut().enumerate() {
-                let srv = srv_it.next().expect("lane buffers sized to fleet");
-                let clf = clf_it.next().expect("lane buffers sized to fleet");
-                // Dead (churned-out) clients get no lane this round; the
-                // lane set and every surviving lane's RNG stream stay
-                // pure functions of (seed, round, client).
-                if fc.is_down(round_u, ci) {
+            let mut slot_it = slots.iter().peekable();
+            for (ci, client) in states {
+                let Some(s) = slot_it.peek() else { break };
+                if s.ci != ci {
                     continue;
                 }
-                let steps = fc
-                    .crash_at(round_u, ci)
-                    .map(|c| c.step.min(local_steps))
-                    .unwrap_or(local_steps);
+                let s = slot_it.next().expect("peeked");
                 lanes.push(SsflLane {
                     client,
-                    profile: &profiles[ci],
-                    srv,
-                    clf,
-                    srv_time: srv_times[ci],
-                    steps,
+                    profile: s.profile,
+                    srv: srv_it.next().expect("lane buffers pooled to slots"),
+                    clf: clf_it.next().expect("lane buffers pooled to slots"),
+                    srv_time: s.srv_time,
+                    steps: s.steps,
                     net: net.lane(ci, round_u),
                     ledger: RoundLedger::new(ci),
                 });
             }
+            debug_assert!(slot_it.peek().is_none(), "every slot found its state");
 
             engine::run_lanes(threads, &mut lanes, |lane| {
                 let depth = lane.client.depth;
@@ -546,7 +909,7 @@ fn run_ssfl(rt: &Runtime, h: &mut Harness) -> Result<()> {
                     // Phase 1 (always; also the entire fallback step).
                     let local = lane.client.phase1(rt, classes, &batch)?;
                     let t1 = cost.time_s(cost.client_local_flops(depth), lane.profile.flops);
-                    lane.ledger.work(lane.profile, t1);
+                    lane.ledger.work(&lane.profile, t1);
 
                     // Phase 2 attempt: smashed activations up, g_z down,
                     // both as wire frames — the link is charged with the
@@ -570,7 +933,7 @@ fn run_ssfl(rt: &Runtime, h: &mut Harness) -> Result<()> {
                         },
                         srv_time,
                     );
-                    lane.ledger.exchange(lane.profile, ex.time_s(), srv_time);
+                    lane.ledger.exchange(&lane.profile, ex.time_s(), srv_time);
 
                     if ex.is_ok() {
                         // Lane-local server step against the round-start
@@ -653,7 +1016,7 @@ fn run_ssfl(rt: &Runtime, h: &mut Harness) -> Result<()> {
                             cost.client_bwd_flops(depth) + cost.tpgf_fuse_flops(depth),
                             lane.profile.flops,
                         );
-                        lane.ledger.work(lane.profile, t23);
+                        lane.ledger.work(&lane.profile, t23);
                     } else {
                         // Fault-tolerant fallback (Alg. 3): local-only update.
                         lane.client.fallback_update(&local);
@@ -680,7 +1043,9 @@ fn run_ssfl(rt: &Runtime, h: &mut Harness) -> Result<()> {
                 .collect()
         };
 
-        let (round_dt, busy, fallback_steps, server_steps, faults) = h.absorb_ledgers(&ledgers);
+        let (round_dt, busy, fallback_steps, server_steps, mut faults) =
+            h.absorb_ledgers(&ledgers);
+        faults.add(&resync_faults);
 
         // ---- Merge lane server deltas into the shared super-network ----
         // (id order; θ[ℓ] += (θ_lane[ℓ] − θ_snapshot[ℓ]) / n_live;
@@ -709,23 +1074,25 @@ fn run_ssfl(rt: &Runtime, h: &mut Harness) -> Result<()> {
         //
         // Quorum barrier: the merge proceeds only once at least a
         // `quorum` fraction of the round's *live* lanes reported a
-        // server-assisted step (mid-round crashers don't report; dead
-        // clients aren't live). Absence is participant-normalized —
-        // the divisor is n_live, not the fleet size — so a surviving
-        // cohort moves the shared layers at its own mean step size.
-        // With the inert default schedule quorum is 0 and n_live == n,
-        // making this bit-identical to the unconditional 1/n merge.
-        let n_live = fc.live_count(round_u, n);
+        // server-assisted step (mid-round crashers don't report; dead,
+        // sitting-out and unsampled clients have no lane). Absence is
+        // participant-normalized — the divisor is the live-lane count,
+        // not the fleet size — so a surviving cohort moves the shared
+        // layers at its own mean step size. With the inert default
+        // schedule and `sample=off` every client has a lane, making
+        // this bit-identical to the unconditional 1/n merge.
+        let n_live = slots.len();
         let reporting = ledgers
             .iter()
             .filter(|l| l.server_steps > 0 && fc.crash_at(round_u, l.client).is_none())
             .count();
         if server_up && n_live > 0 && fc.quorum_met(reporting, n_live) {
             let inv_n = 1.0f32 / n_live as f32;
-            for (ci, srv) in lane_srv.iter().enumerate() {
-                if fc.is_down(round_u, ci) || fc.crash_at(round_u, ci).is_some() {
+            for (j, s) in slots.iter().enumerate() {
+                if fc.crash_at(round_u, s.ci).is_some() {
                     continue;
                 }
+                let srv = &lane_srv[j];
                 let off = enc_len - srv.len();
                 let dst = &mut h.server.enc[off..];
                 for ((d, &l), &p) in
@@ -737,7 +1104,7 @@ fn run_ssfl(rt: &Runtime, h: &mut Harness) -> Result<()> {
                     .server
                     .clf_s
                     .iter_mut()
-                    .zip(lane_clf[ci].iter())
+                    .zip(lane_clf[j].iter())
                     .zip(clf_snapshot.iter())
                 {
                     *d += (l - p) * inv_n;
@@ -753,40 +1120,48 @@ fn run_ssfl(rt: &Runtime, h: &mut Harness) -> Result<()> {
         // lossy codecs perturb aggregation end to end. The uplink is
         // charged with the actual frame bytes, classifier included (the
         // seed accounting charged `enc_bytes()` alone).
-        let mut agg_branch = vec![0.0f64; n];
+        let mut agg_entries: Vec<(usize, f64)> = roster.iter().map(|&id| (id, 0.0)).collect();
         // (client id, prefix elems, decoded payload, header loss) per
-        // participant — dead and mid-round-crashed clients ship nothing
-        // this round (a crasher's next contribution comes after the
-        // charged resync on rejoin).
-        let mut uploads: Vec<(usize, usize, Vec<f32>, f64)> = Vec::with_capacity(n);
-        for ci in 0..n {
-            if fc.is_down(round_u, ci) || fc.crash_at(round_u, ci).is_some() {
+        // participant — dead, sitting-out and mid-round-crashed clients
+        // ship nothing this round (a crasher's next contribution comes
+        // after the charged resync on rejoin).
+        let mut uploads: Vec<(usize, usize, Vec<f32>, f64)> = Vec::with_capacity(slots.len());
+        for s in &slots {
+            let ci = s.ci;
+            if fc.crash_at(round_u, ci).is_some() {
                 continue;
             }
-            let c = &h.clients[ci];
-            let payload = c.upload_payload();
-            let loss = c.aggregation_loss(tpgf_mode, total_layers).unwrap_or(1.0);
+            let (payload, prefix_elems, loss) = {
+                let c = h.client(ci);
+                (
+                    c.upload_payload(),
+                    c.enc.len(),
+                    c.aggregation_loss(tpgf_mode, total_layers).unwrap_or(1.0),
+                )
+            };
             let frame_len = h
                 .wire
                 .encode_to(MsgType::PrefixUpload, &payload, loss, &mut bar_scratch)
                 .len() as u64;
-            agg_branch[ci] = h.net.bulk_up_framed(
+            let t = h.net.bulk_up_framed(
                 ci,
                 Framed {
                     wire: frame_len,
                     raw: (payload.len() * 4) as u64,
                 },
             );
+            let pos = roster.binary_search(&ci).expect("slot drawn from roster");
+            agg_entries[pos].1 = t;
             let dec = h.wire.decode(&bar_scratch.frame)?;
-            uploads.push((ci, c.enc.len(), dec.data, dec.aux));
+            uploads.push((ci, prefix_elems, dec.data, dec.aux));
         }
-        h.charge_barrier_phase(&agg_branch);
+        h.charge_barrier_phase(&agg_entries);
 
         if !uploads.is_empty() {
             let updates: Vec<ClientUpdate<'_>> = uploads
                 .iter()
                 .map(|(ci, prefix_elems, data, loss)| {
-                    let c = &h.clients[*ci];
+                    let c = h.client(*ci);
                     ClientUpdate {
                         client: c.id,
                         depth: c.depth,
@@ -810,17 +1185,19 @@ fn run_ssfl(rt: &Runtime, h: &mut Harness) -> Result<()> {
         // client's round-start weights here. Clients sharing a depth
         // receive byte-identical frames, so encode/decode once per
         // distinct prefix length and charge each client its copy.
-        let mut bc_branch = vec![0.0f64; n];
+        let mut bc_entries: Vec<(usize, f64)> = roster.iter().map(|&id| (id, 0.0)).collect();
         // (prefix elems, frame bytes, decoded tensor) per distinct depth.
         let mut bc_cache: Vec<(usize, u64, Vec<f32>)> = Vec::new();
-        for ci in 0..n {
-            // Dead and mid-round-crashed clients receive no broadcast:
-            // they catch up through the charged resync when they rejoin.
-            if fc.is_down(round_u, ci) || fc.crash_at(round_u, ci).is_some() {
+        for s in &slots {
+            let ci = s.ci;
+            // Dead, sitting-out and mid-round-crashed clients receive no
+            // broadcast: they catch up through the charged resync when
+            // they rejoin.
+            if fc.crash_at(round_u, ci).is_some() {
                 continue;
             }
-            let prefix_elems = h.clients[ci].enc.len();
-            let slot = match bc_cache.iter().position(|(e, _, _)| *e == prefix_elems) {
+            let prefix_elems = h.client(ci).enc.len();
+            let cache_slot = match bc_cache.iter().position(|(e, _, _)| *e == prefix_elems) {
                 Some(i) => i,
                 None => {
                     let frame_len = h
@@ -837,21 +1214,32 @@ fn run_ssfl(rt: &Runtime, h: &mut Harness) -> Result<()> {
                     bc_cache.len() - 1
                 }
             };
-            let (_, frame_bytes, decoded) = &bc_cache[slot];
-            bc_branch[ci] = h.net.bulk_down_framed(
+            let frame_bytes = bc_cache[cache_slot].1;
+            let t = h.net.bulk_down_framed(
                 ci,
                 Framed {
-                    wire: *frame_bytes,
+                    wire: frame_bytes,
                     raw: (prefix_elems * 4) as u64,
                 },
             );
-            h.clients[ci].sync_from_global(decoded);
+            let pos = roster.binary_search(&ci).expect("slot drawn from roster");
+            bc_entries[pos].1 = t;
+            h.client_mut(ci).sync_from_global(&bc_cache[cache_slot].2);
         }
-        h.charge_barrier_phase(&bc_branch);
+        h.charge_barrier_phase(&bc_entries);
 
         // ---- Evaluate + record ----
         let acc = h.eval_global(rt)?;
-        let hit = h.finish_round(round, round_dt, &busy, acc, fallback_steps, server_steps, faults);
+        let hit = h.finish_round(
+            round,
+            round_dt,
+            &roster,
+            &busy,
+            acc,
+            fallback_steps,
+            server_steps,
+            faults,
+        );
         if hit {
             break;
         }
@@ -1230,5 +1618,157 @@ mod tests {
         let res = run_experiment(&rt, &cfg).unwrap();
         assert_eq!(res.metrics.rounds.len(), 1);
         assert_eq!(res.metrics.rounds_to_target, Some(1));
+    }
+
+    #[test]
+    fn full_participation_reports_the_whole_fleet() {
+        let rt = runtime();
+        let res = run_experiment(&rt, &tiny_cfg()).unwrap();
+        if std::env::var("SUPERSFL_FAULTS").is_err() && std::env::var("SUPERSFL_SAMPLE").is_err() {
+            for r in &res.metrics.rounds {
+                assert_eq!(r.participants, 4);
+            }
+            // No sampling ⇒ no pooled state.
+            assert_eq!(res.pool.max_materialized, 0);
+        }
+    }
+
+    /// Tentpole: a sampled run completes, each round's participants are
+    /// the cohort, and every pooled high-water mark tracks the cohort
+    /// size — never the fleet.
+    #[test]
+    fn sampled_run_completes_and_pools_to_the_cohort() {
+        if std::env::var("SUPERSFL_SAMPLE").is_ok() || std::env::var("SUPERSFL_FAULTS").is_ok() {
+            return; // this test pins its own participation + schedule
+        }
+        let rt = runtime();
+        let mut cfg = tiny_cfg().with_sample(crate::config::SampleSpec::Count(3));
+        cfg.fleet.clients = 8;
+        cfg.train.rounds = 3;
+        let res = run_experiment(&rt, &cfg).unwrap();
+        assert_eq!(res.metrics.rounds.len(), 3);
+        for r in &res.metrics.rounds {
+            assert_eq!(r.participants, 3, "round {}: clean cohort all runs", r.round);
+        }
+        assert_eq!(res.pool.max_cohort, 3);
+        assert_eq!(res.pool.max_materialized, 3);
+        assert!(res.pool.max_lane_f32 > 0);
+        assert!(res.depths.len() <= 3);
+        assert!(res.metrics.total_comm_mb > 0.0);
+        assert!(res.metrics.total_energy_j > 0.0);
+    }
+
+    /// The cohort (and the whole sampled trajectory) is a pure function
+    /// of (seed, round): two runs are bitwise identical, and so are runs
+    /// at different thread counts.
+    #[test]
+    fn sampled_runs_are_deterministic_and_thread_invariant() {
+        if std::env::var("SUPERSFL_SAMPLE").is_ok() {
+            return;
+        }
+        let rt = runtime();
+        let run = |threads: usize| {
+            let mut cfg = tiny_cfg().with_sample(crate::config::SampleSpec::Count(3));
+            cfg.fleet.clients = 6;
+            cfg.train.rounds = 3;
+            cfg.threads = threads;
+            run_experiment(&rt, &cfg).unwrap()
+        };
+        let a = run(1);
+        let a2 = run(1);
+        assert_eq!(
+            a.metrics.final_accuracy.to_bits(),
+            a2.metrics.final_accuracy.to_bits()
+        );
+        for threads in [2usize, 4] {
+            let b = run(threads);
+            for (ra, rb) in a.metrics.rounds.iter().zip(b.metrics.rounds.iter()) {
+                assert_eq!(ra.accuracy.to_bits(), rb.accuracy.to_bits(), "threads {threads}");
+                assert_eq!(ra.sim_time_s.to_bits(), rb.sim_time_s.to_bits());
+                assert_eq!(ra.energy_j.to_bits(), rb.energy_j.to_bits());
+                assert_eq!(ra.participants, rb.participants);
+            }
+            assert_eq!(
+                a.metrics.total_comm_mb.to_bits(),
+                b.metrics.total_comm_mb.to_bits()
+            );
+        }
+    }
+
+    /// Sampled participation works for the baselines too (they share the
+    /// harness roster/pool machinery).
+    #[test]
+    fn sampled_baselines_complete() {
+        if std::env::var("SUPERSFL_SAMPLE").is_ok() {
+            return;
+        }
+        let rt = runtime();
+        for method in [Method::Sfl, Method::Dfl] {
+            let mut cfg = tiny_cfg()
+                .with_method(method)
+                .with_sample(crate::config::SampleSpec::Count(3));
+            cfg.fleet.clients = 8;
+            cfg.train.rounds = 3;
+            let res = run_experiment(&rt, &cfg).unwrap();
+            assert_eq!(res.metrics.rounds.len(), 3, "{method:?}");
+            for r in &res.metrics.rounds {
+                assert!(r.participants <= 3, "{method:?}");
+                assert!((0.0..=1.0).contains(&r.accuracy), "{method:?}");
+            }
+            assert!(res.pool.max_materialized <= 3, "{method:?}");
+        }
+    }
+
+    /// Satellite bugfix regression: the rejoin-resync download must ride
+    /// the faulted exchange path. Under `corrupt=1` every resync frame
+    /// fails its CRC, so the crashed client can never rejoin: it stays
+    /// down (participants stay short), `missed_rounds` keeps ticking,
+    /// and the corruption is counted — previously `wire.decode(...)?`
+    /// aborted the whole run the moment a resync frame was corrupt, and
+    /// the download itself was exempt from every fault.
+    #[test]
+    fn failed_resync_keeps_the_client_down_instead_of_aborting() {
+        if std::env::var("SUPERSFL_FAULTS").is_ok() {
+            return; // this test pins its own schedule
+        }
+        let rt = runtime();
+        let mut cfg = tiny_cfg();
+        cfg.train.rounds = 4;
+        cfg.net.faults = FaultConfig::parse("corrupt=1,crash=2:1:0:1").unwrap();
+        let res = run_experiment(&rt, &cfg).unwrap();
+        assert_eq!(res.metrics.rounds.len(), 4, "the run must complete");
+        let participants: Vec<usize> =
+            res.metrics.rounds.iter().map(|r| r.participants).collect();
+        // Round 2: crash mid-round (the lane still exists). Round 3: the
+        // down window. Round 4: rejoin attempt — the resync frame is
+        // corrupt, so the client sits out again.
+        assert_eq!(participants, vec![4, 4, 3, 3]);
+        assert_eq!(res.metrics.total_crashes, 1);
+        assert!(
+            res.metrics.rounds[3].corruptions >= 1,
+            "the failed resync must be counted as a corruption"
+        );
+    }
+
+    /// The other resync failure mode: every packet drops, the retry
+    /// budget exhausts, and the client stays down with drops + retries
+    /// counted (no infinite loop, no panic, no free rejoin).
+    #[test]
+    fn resync_retry_exhaustion_counts_and_keeps_the_client_down() {
+        if std::env::var("SUPERSFL_FAULTS").is_ok() {
+            return;
+        }
+        let rt = runtime();
+        let mut cfg = tiny_cfg();
+        cfg.train.rounds = 4;
+        cfg.net.drop_prob = 1.0;
+        cfg.net.faults = FaultConfig::parse("retry=2:0.1:2,crash=2:1:0:1").unwrap();
+        let res = run_experiment(&rt, &cfg).unwrap();
+        assert_eq!(res.metrics.rounds.len(), 4);
+        let participants: Vec<usize> =
+            res.metrics.rounds.iter().map(|r| r.participants).collect();
+        assert_eq!(participants, vec![4, 4, 3, 3]);
+        assert!(res.metrics.rounds[3].drops >= 1);
+        assert!(res.metrics.rounds[3].retries >= 1);
     }
 }

@@ -52,6 +52,31 @@ impl Pcg32 {
         ((self.next_u32() as u64) << 32) | self.next_u32() as u64
     }
 
+    /// Jump the generator forward by `delta` steps in O(log delta)
+    /// (Brown's algorithm: the LCG transition is affine, so its
+    /// `delta`-fold composition folds by square-and-multiply). After
+    /// `advance(k)` the generator is bit-identical to one that called
+    /// [`Pcg32::next_u32`] `k` times — the property that lets a lazy
+    /// fleet reproduce client *i*'s profile without drawing the first
+    /// `5·i` values.
+    pub fn advance(&mut self, delta: u64) {
+        let mut acc_mult: u64 = 1;
+        let mut acc_plus: u64 = 0;
+        let mut cur_mult = PCG_MULT;
+        let mut cur_plus = self.inc;
+        let mut d = delta;
+        while d > 0 {
+            if d & 1 == 1 {
+                acc_mult = acc_mult.wrapping_mul(cur_mult);
+                acc_plus = acc_plus.wrapping_mul(cur_mult).wrapping_add(cur_plus);
+            }
+            cur_plus = cur_mult.wrapping_add(1).wrapping_mul(cur_plus);
+            cur_mult = cur_mult.wrapping_mul(cur_mult);
+            d >>= 1;
+        }
+        self.state = acc_mult.wrapping_mul(self.state).wrapping_add(acc_plus);
+    }
+
     /// Uniform in [0, 1).
     pub fn uniform(&mut self) -> f64 {
         (self.next_u32() as f64) / (u32::MAX as f64 + 1.0)
@@ -62,9 +87,12 @@ impl Pcg32 {
         lo + (hi - lo) * self.uniform()
     }
 
-    /// Uniform integer in [0, n) (Lemire-style rejection-free for sim use).
+    /// Uniform integer in [0, n). Total: `n == 0` is a hard assert in
+    /// every build profile — the old `debug_assert!` compiled away in
+    /// release, leaving `% 0` to panic with an inscrutable
+    /// divide-by-zero deep inside a run.
     pub fn uniform_usize(&mut self, n: usize) -> usize {
-        debug_assert!(n > 0);
+        assert!(n > 0, "uniform_usize(0): empty range");
         (self.uniform() * n as f64) as usize % n
     }
 
@@ -131,17 +159,35 @@ impl Pcg32 {
         }
     }
 
-    /// Sample an index from an (unnormalized) weight vector.
+    /// Sample an index from an (unnormalized) weight vector. Total over
+    /// its stated domain: an empty slice or a non-positive total weight
+    /// is a hard assert (the old fallback underflowed on `len() - 1`),
+    /// and the rounding fallback lands on the last *positive-weight*
+    /// index, never on a trailing zero-weight one. Exactly one uniform
+    /// draw per call, always — callers replay streams.
     pub fn categorical(&mut self, weights: &[f64]) -> usize {
         let total: f64 = weights.iter().sum();
-        let mut t = self.uniform() * total;
-        for (i, w) in weights.iter().enumerate() {
+        let u = self.uniform();
+        assert!(
+            !weights.is_empty() && total > 0.0,
+            "categorical: need at least one positive weight (len {}, total {total})",
+            weights.len()
+        );
+        let mut t = u * total;
+        for (i, &w) in weights.iter().enumerate() {
+            if w <= 0.0 {
+                continue;
+            }
             t -= w;
             if t <= 0.0 {
                 return i;
             }
         }
-        weights.len() - 1
+        // f64 rounding exhausted the scan: last positive-weight index.
+        weights
+            .iter()
+            .rposition(|&w| w > 0.0)
+            .expect("unreachable: total > 0 implies a positive weight")
     }
 }
 
@@ -263,5 +309,76 @@ mod tests {
         let mut r = Pcg32::seeded(10);
         let hits = (0..10_000).filter(|_| r.bernoulli(0.3)).count();
         assert!((hits as f64 / 10_000.0 - 0.3).abs() < 0.02);
+    }
+
+    #[test]
+    #[should_panic(expected = "uniform_usize(0)")]
+    fn uniform_usize_zero_is_a_hard_assert_in_every_profile() {
+        // Regression: the guard was a debug_assert!, so release builds
+        // fell through to `% 0` and died with a bare arithmetic panic.
+        Pcg32::seeded(1).uniform_usize(0);
+    }
+
+    #[test]
+    #[should_panic(expected = "categorical")]
+    fn categorical_empty_weights_is_a_hard_assert() {
+        // Regression: the fallback `weights.len() - 1` underflowed.
+        Pcg32::seeded(1).categorical(&[]);
+    }
+
+    #[test]
+    #[should_panic(expected = "categorical")]
+    fn categorical_all_zero_weights_is_a_hard_assert() {
+        Pcg32::seeded(1).categorical(&[0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn categorical_never_returns_trailing_zero_weight_index() {
+        // Regression: the rounding fallback used to land on
+        // `weights.len() - 1` even when that weight was exactly zero.
+        let w = [0.0, 2.0, 1.0, 0.0, 0.0];
+        let mut r = Pcg32::seeded(11);
+        for _ in 0..50_000 {
+            let i = r.categorical(&w);
+            assert!(w[i] > 0.0, "drew zero-weight index {i}");
+        }
+    }
+
+    #[test]
+    fn categorical_burns_exactly_one_draw() {
+        // Replayed streams (lanes, shards) depend on the draw count
+        // being one uniform per call regardless of the weight shape.
+        let mut a = Pcg32::seeded(12);
+        let mut b = Pcg32::seeded(12);
+        for w in [vec![1.0], vec![0.0, 1.0, 0.0], vec![0.5, 0.5, 3.0]] {
+            a.categorical(&w);
+            let _ = b.next_u32();
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+    }
+
+    #[test]
+    fn advance_matches_sequential_draws() {
+        for (seed, stream, k) in [(42u64, 0u64, 0u64), (7, 3, 1), (9, 1, 5), (123, 54, 1000)] {
+            let mut seq = Pcg32::new(seed, stream);
+            for _ in 0..k {
+                seq.next_u32();
+            }
+            let mut jumped = Pcg32::new(seed, stream);
+            jumped.advance(k);
+            for _ in 0..8 {
+                assert_eq!(seq.next_u32(), jumped.next_u32(), "seed {seed} k {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn advance_composes_additively() {
+        let mut a = Pcg32::seeded(99);
+        a.advance(70);
+        let mut b = Pcg32::seeded(99);
+        b.advance(64);
+        b.advance(6);
+        assert_eq!(a.next_u32(), b.next_u32());
     }
 }

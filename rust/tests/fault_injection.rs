@@ -233,6 +233,59 @@ fn backoff_and_drops_are_pure_functions_of_seed_round_client() {
     assert_ne!(t_round2, t_round3, "round must enter the lane stream");
 }
 
+/// Sampled participation composes with the chaos engine: a hostile run
+/// over a larger fleet with a per-round cohort completes, keeps its
+/// pooled state cohort-bounded, and stays bit-identical across
+/// `--threads` and `--kernel-threads` (the cohort is a pure function of
+/// `(seed, round)`, resolved before the fan-out).
+#[test]
+fn sampled_hostile_schedule_is_thread_and_kernel_thread_invariant() {
+    if env_pins_faults() || std::env::var("SUPERSFL_SAMPLE").is_ok() {
+        return;
+    }
+    let rt = Runtime::native();
+    let run = |threads: usize, kernel_threads: usize| {
+        let mut cfg = hostile_cfg()
+            .with_clients(16)
+            .with_sample(supersfl::config::SampleSpec::Count(6));
+        cfg.threads = threads;
+        cfg.kernel_threads = kernel_threads;
+        run_experiment(&rt, &cfg).unwrap()
+    };
+    let a = run(1, 1);
+    assert_eq!(a.metrics.rounds.len(), 3, "all rounds must complete");
+    assert!(a.pool.max_materialized <= 6, "pool must stay cohort-bounded");
+    for r in &a.metrics.rounds {
+        assert!(r.participants <= 6, "round {} ran {} clients", r.round, r.participants);
+    }
+    for (threads, kernel_threads) in [(4usize, 1usize), (2, 3)] {
+        let b = run(threads, kernel_threads);
+        assert_eq!(
+            a.metrics.final_accuracy.to_bits(),
+            b.metrics.final_accuracy.to_bits(),
+            "threads={threads} kernel_threads={kernel_threads}"
+        );
+        assert_eq!(
+            a.metrics.total_comm_mb.to_bits(),
+            b.metrics.total_comm_mb.to_bits()
+        );
+        assert_eq!(
+            a.metrics.total_energy_j.to_bits(),
+            b.metrics.total_energy_j.to_bits()
+        );
+        for (ra, rb) in a.metrics.rounds.iter().zip(b.metrics.rounds.iter()) {
+            assert_eq!(ra.accuracy.to_bits(), rb.accuracy.to_bits());
+            assert_eq!(ra.sim_time_s.to_bits(), rb.sim_time_s.to_bits());
+            assert_eq!(ra.participants, rb.participants);
+            assert_eq!(
+                (ra.timeouts, ra.drops, ra.corruptions, ra.retries, ra.crashes),
+                (rb.timeouts, rb.drops, rb.corruptions, rb.retries, rb.crashes),
+                "fault counters drifted at threads={threads}"
+            );
+        }
+    }
+}
+
 /// `--faults` pricing is visible end to end: the same run with retries
 /// enabled under a lossy link charges strictly more uplink bytes and
 /// simulated time than with retries off (each retry re-transmits the

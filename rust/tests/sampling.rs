@@ -1,0 +1,138 @@
+//! Sampled-participation integration tests: `--sample` driven end to
+//! end through `run_experiment`.
+//!
+//! The claims under test are the scaling contract from the orchestrator
+//! docs: the per-round cohort is a pure function of `(seed, round)`;
+//! pooled client state is bounded by the cohort, *not* the fleet; and a
+//! sampled run is deterministic run to run. (`sample=off` bit-identity
+//! to the pre-sampling trajectory is covered by the golden-metrics
+//! snapshots; thread invariance under a hostile fault schedule lives in
+//! `tests/fault_injection.rs`.)
+//!
+//! Every test pins `cfg.sample` itself, so they stand down when the
+//! `SUPERSFL_SAMPLE` env override is active (env wins over config), and
+//! likewise under `SUPERSFL_FAULTS` (resync outcomes would perturb the
+//! participant counts asserted here).
+
+use supersfl::config::{ExperimentConfig, Method, SampleSpec};
+use supersfl::orchestrator::run_experiment;
+use supersfl::runtime::Runtime;
+
+fn env_pinned() -> bool {
+    std::env::var("SUPERSFL_SAMPLE").is_ok() || std::env::var("SUPERSFL_FAULTS").is_ok()
+}
+
+/// A fast learnable scenario over `fleet` clients sampling `k` per round.
+fn sampled_cfg(fleet: usize, k: usize, rounds: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default()
+        .with_name("sampling")
+        .with_clients(fleet)
+        .with_rounds(rounds)
+        .with_seed(5)
+        .with_sample(SampleSpec::Count(k));
+    cfg.data.train_per_class = 20;
+    cfg.data.test_total = 100;
+    cfg.train.local_steps = 2;
+    cfg.train.eval_samples = 100;
+    cfg
+}
+
+/// Pooled client state must not grow with the fleet: the same cohort
+/// over a 2× fleet materializes exactly as many clients.
+#[test]
+fn pooled_state_is_flat_in_fleet_size() {
+    if env_pinned() {
+        return;
+    }
+    let rt = Runtime::native();
+    let small = run_experiment(&rt, &sampled_cfg(40, 4, 3)).unwrap();
+    let large = run_experiment(&rt, &sampled_cfg(80, 4, 3)).unwrap();
+    assert!(small.pool.max_materialized <= 4);
+    assert!(large.pool.max_materialized <= 4);
+    assert_eq!(
+        small.pool.max_materialized, large.pool.max_materialized,
+        "pool high-water must be cohort-bounded, not fleet-bounded"
+    );
+    assert_eq!(small.pool.max_cohort, 4);
+    assert_eq!(large.pool.max_cohort, 4);
+}
+
+/// A sampled run over a four-digit fleet completes every round with
+/// cohort-bounded state — the smoke-scale version of the 10k-client
+/// bench rung (`benches/fig4_speedup.rs` runs the full ladder).
+#[test]
+fn sampled_run_completes_over_a_large_fleet() {
+    if env_pinned() {
+        return;
+    }
+    let rt = Runtime::native();
+    let mut cfg = sampled_cfg(1000, 6, 2);
+    // Enough samples that the partition repair can feed every client.
+    cfg.data.train_per_class = 120;
+    let res = run_experiment(&rt, &cfg).unwrap();
+    assert_eq!(res.metrics.rounds.len(), 2, "all rounds must complete");
+    assert!(res.pool.max_materialized <= 6);
+    for r in &res.metrics.rounds {
+        assert!(
+            r.participants >= 1 && r.participants <= 6,
+            "round {}: {} participants for a cohort of 6",
+            r.round,
+            r.participants
+        );
+    }
+    assert!(res.metrics.final_accuracy.is_finite());
+}
+
+/// Run-to-run determinism: two identical sampled runs replay the same
+/// cohorts and the same trajectory bit for bit; a different seed draws
+/// different cohorts.
+#[test]
+fn sampled_runs_replay_bit_identically_and_seed_enters_the_cohort() {
+    if env_pinned() {
+        return;
+    }
+    let rt = Runtime::native();
+    let a = run_experiment(&rt, &sampled_cfg(24, 5, 3)).unwrap();
+    let b = run_experiment(&rt, &sampled_cfg(24, 5, 3)).unwrap();
+    assert_eq!(
+        a.metrics.final_accuracy.to_bits(),
+        b.metrics.final_accuracy.to_bits()
+    );
+    assert_eq!(
+        a.metrics.total_comm_mb.to_bits(),
+        b.metrics.total_comm_mb.to_bits()
+    );
+    for (ra, rb) in a.metrics.rounds.iter().zip(b.metrics.rounds.iter()) {
+        assert_eq!(ra.accuracy.to_bits(), rb.accuracy.to_bits());
+        assert_eq!(ra.participants, rb.participants);
+    }
+
+    let mut other = sampled_cfg(24, 5, 3);
+    other.train.seed = 6;
+    let c = run_experiment(&rt, &other).unwrap();
+    assert_ne!(
+        a.metrics.final_accuracy.to_bits(),
+        c.metrics.final_accuracy.to_bits(),
+        "a different seed must draw different cohorts"
+    );
+}
+
+/// `Frac` cohorts resolve against the fleet size, and the baselines run
+/// sampled too (pooled, cohort-bounded, all rounds complete).
+#[test]
+fn frac_spec_and_baselines_run_sampled() {
+    if env_pinned() {
+        return;
+    }
+    let rt = Runtime::native();
+    for method in [Method::Sfl, Method::Dfl] {
+        let mut cfg = sampled_cfg(20, 5, 2).with_method(method);
+        cfg.sample = SampleSpec::Frac(0.25); // 5 of 20
+        let res = run_experiment(&rt, &cfg).unwrap();
+        assert_eq!(res.metrics.rounds.len(), 2, "{method:?}");
+        assert!(res.pool.max_materialized <= 5, "{method:?}");
+        for r in &res.metrics.rounds {
+            assert!(r.participants <= 5, "{method:?} round {}", r.round);
+        }
+    }
+}
