@@ -535,10 +535,16 @@ fn main() -> supersfl::Result<()> {
     root.set("exec", exec);
     round_section(&rt, &mut root, rounds)?;
 
+    // Shared provenance stamp: the kernel bench always runs the native
+    // backend, so stamp the default config pinned to it.
+    let mut prov_cfg = ExperimentConfig::default();
+    prov_cfg.backend = supersfl::config::BackendKind::Native;
+    root.set("provenance", supersfl::bench_util::provenance(&prov_cfg));
+
     let path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
         .join("..")
         .join("BENCH_native.json");
-    std::fs::write(&path, root.to_string_pretty())?;
+    supersfl::util::fs::atomic_write(&path, root.to_string_pretty().as_bytes())?;
     println!("\nwrote {}", path.display());
     Ok(())
 }

@@ -13,9 +13,10 @@
 
 use std::path::PathBuf;
 
+use supersfl::bench_util::provenance;
 use supersfl::bench_util::scenarios::{
-    efficiency_grid, efficiency_numbers, fleet_ladder, ladder_config, paper_table1, run_cell,
-    smoke, Scale,
+    cell_config, efficiency_grid, efficiency_numbers, fleet_ladder, ladder_config, paper_table1,
+    run_cell, smoke, Scale,
 };
 use supersfl::config::{ExperimentConfig, Method};
 use supersfl::metrics::Table;
@@ -136,10 +137,22 @@ fn main() -> supersfl::Result<()> {
     println!("{}", l_table.render());
     println!("shape: pooled state is cohort-bounded — the 10k-client rung pools no more than the 1k rung.");
 
+    // Stamp the shared provenance block (anchored on the grid's first
+    // SSFL cell — every other cell derives from the same base config).
+    root.set(
+        "provenance",
+        provenance(&cell_config(
+            &scale,
+            &efficiency_grid()[0],
+            Method::SuperSfl,
+            42,
+        )),
+    );
+
     let path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
         .join("..")
         .join("BENCH_fig4.json");
-    std::fs::write(&path, root.to_string_pretty())?;
+    supersfl::util::fs::atomic_write(&path, root.to_string_pretty().as_bytes())?;
     println!("wrote {}", path.display());
     Ok(())
 }

@@ -193,10 +193,14 @@ fn main() -> supersfl::Result<()> {
     root.set("quorum_sweep", JsonValue::Array(q_rows));
     println!("{}", q_table.render());
 
+    // Shared provenance stamp, anchored on the bench's base config (the
+    // availability/fault sweeps derive from it).
+    root.set("provenance", supersfl::bench_util::provenance(&cfg(1.0, 42)));
+
     let path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
         .join("..")
         .join("BENCH_table3.json");
-    std::fs::write(&path, root.to_string_pretty())?;
+    supersfl::util::fs::atomic_write(&path, root.to_string_pretty().as_bytes())?;
     println!("wrote {}", path.display());
     Ok(())
 }

@@ -41,6 +41,7 @@ use crate::network::{DeviceProfile, Framed, NetLane};
 use crate::orchestrator::engine::{self, RoundLedger};
 use crate::orchestrator::Harness;
 use crate::runtime::Runtime;
+use crate::trace::{InstantKind, SpanKind, TRACK_SERVER};
 use crate::util::math;
 use crate::util::rng::Pcg32;
 use crate::wire::{MsgType, WireScratch};
@@ -126,6 +127,7 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
     // Identical fault schedule to SuperSFL (shared lane streams + churn
     // windows); DFL has no quorum concept or local fallback.
     let fc = h.cfg.net.faults.clone();
+    let lane_trace = h.tracer.as_ref().is_some_and(|t| t.lane_events_enabled());
 
     for round in 1..=h.cfg.train.rounds {
         let round_u = round as u64;
@@ -197,7 +199,7 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
 
         // ---- Fan out: one worker per replica; clients of a replica run
         // in id order on its private backbone copy ----
-        let ledgers: Vec<RoundLedger> = {
+        let mut ledgers: Vec<RoundLedger> = {
             let Harness {
                 clients,
                 pool,
@@ -233,13 +235,17 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
                     continue;
                 }
                 let s = *slot_it.next().expect("peeked");
+                let mut lane_net = net.lane(ci, round_u);
+                if lane_trace {
+                    lane_net.enable_attempt_log();
+                }
                 groups[ci % r].members.push(DflClientLane {
                     profile: s.profile,
                     cut: s.cut,
                     srv_time: s.srv_time,
                     steps: s.steps,
-                    net: net.lane(ci, round_u),
-                    ledger: RoundLedger::new(ci),
+                    net: lane_net,
+                    ledger: RoundLedger::traced(ci, lane_trace),
                     client,
                 });
             }
@@ -255,7 +261,9 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
                         let z = rt.client_fwd(depth, &m.client.enc, &batch.x)?;
                         let t_fwd =
                             cost.time_s(cost.client_fwd_flops(depth), m.profile.flops);
+                        let p1_t0 = m.ledger.branch_s;
                         m.ledger.work(&m.profile, t_fwd);
+                        m.ledger.trace.span(SpanKind::LocalUpdate, p1_t0, t_fwd, 0, 0);
 
                         // Wire-framed exchange (see orchestrator docs).
                         // Frames stage in the member's reusable lane
@@ -263,6 +271,10 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
                         let up_len = wire
                             .encode_to(MsgType::Smashed, &z, 0.0, &mut m.net.scratch)
                             .len() as u64;
+                        m.ledger
+                            .trace
+                            .span(SpanKind::Encode, m.ledger.branch_s, 0.0, up_len, 0);
+                        let ex_t0 = m.ledger.branch_s;
                         let ex = m.net.exchange_framed(
                             Framed {
                                 wire: up_len,
@@ -275,6 +287,9 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
                             m.srv_time,
                         );
                         m.ledger.exchange(&m.profile, ex.time_s(), m.srv_time);
+                        m.ledger
+                            .trace
+                            .exchange_spans(ex_t0, &m.net.attempts, up_len);
 
                         if ex.is_ok() {
                             // CRC/decode failure = exchange fault: count
@@ -284,6 +299,9 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
                                 .is_err()
                             {
                                 m.net.faults.corruptions += 1;
+                                m.ledger
+                                    .trace
+                                    .instant(InstantKind::Corruption, m.ledger.branch_s);
                                 m.ledger.fallback_steps += 1;
                                 continue;
                             }
@@ -306,19 +324,34 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
                                 .is_err()
                             {
                                 m.net.faults.corruptions += 1;
+                                m.ledger
+                                    .trace
+                                    .instant(InstantKind::Corruption, m.ledger.branch_s);
                                 m.ledger.fallback_steps += 1;
                                 continue;
                             }
+                            m.ledger.trace.span(
+                                SpanKind::Decode,
+                                m.ledger.branch_s,
+                                0.0,
+                                gz_frame_len,
+                                0,
+                            );
                             let g_enc =
                                 rt.client_bwd(depth, &m.client.enc, &batch.x, &m.net.scratch.decoded)?;
                             let lr = m.client.lr;
                             math::sgd_step(&mut m.client.enc, &g_enc, lr);
                             let t_bwd =
                                 cost.time_s(cost.client_bwd_flops(depth), m.profile.flops);
+                            let bwd_t0 = m.ledger.branch_s;
                             m.ledger.work(&m.profile, t_bwd);
+                            m.ledger.trace.span(SpanKind::Fusion, bwd_t0, t_bwd, 0, 0);
                         } else {
                             // Server-dependent: no local supervision, step lost.
                             m.ledger.fallback_steps += 1;
+                            m.ledger
+                                .trace
+                                .span(SpanKind::Fallback, m.ledger.branch_s, 0.0, 0, 0);
                         }
                     }
                 }
@@ -338,15 +371,19 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
                     net.absorb_lane(&lane);
                     let mut ledger = ledger;
                     ledger.faults.add(&lane.faults);
+                    ledger.wire_bytes = lane.traffic.total_bytes();
                     if fc.crash_at(round_u, ledger.client).is_some() {
                         ledger.faults.crashes += 1;
+                        ledger
+                            .trace
+                            .instant(InstantKind::Crash, ledger.branch_s);
                     }
                     ledger
                 })
                 .collect()
         };
 
-        let (round_dt, busy, stalled, server_steps, mut faults) = h.absorb_ledgers(&ledgers);
+        let (round_dt, busy, stalled, server_steps, mut faults) = h.absorb_ledgers(&mut ledgers);
         faults.add(&resync_faults);
 
         // ---- Replica coordination: ship every replica both ways and
@@ -354,6 +391,8 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
         // with the client prefixes. ----
         // One logical transfer per replica per direction, each paying
         // the fed-link half-RTT.
+        let agg_t0 = h.clock.now();
+        let mut agg_bytes = (full_bytes + (clf_len * 4) as u64) * r as u64 * 2;
         let fed_t = h
             .net
             .fed_link((full_bytes + (clf_len * 4) as u64) * r as u64 * 2, r as u64 * 2);
@@ -393,6 +432,7 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
                 .binary_search(&s.ci)
                 .expect("slot drawn from roster");
             agg_entries[pos].1 = t;
+            agg_bytes += frame_len;
             uploads.push((s.ci, h.wire.decode(&bar_scratch.frame)?.data));
         }
         h.charge_barrier_phase(&agg_entries);
@@ -424,11 +464,27 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
             rep_enc[rep].copy_from_slice(&h.server.enc);
             rep_clf[rep].copy_from_slice(&h.server.clf_s);
         }
+        // The aggregate span covers replica coordination plus the
+        // layer-aligned FedAvg of client prefixes.
+        let agg_dur = h.clock.now() - agg_t0;
+        if let Some(tr) = h.tracer.as_mut() {
+            tr.track_span(
+                TRACK_SERVER,
+                SpanKind::Aggregate,
+                agg_t0,
+                agg_dur,
+                agg_bytes,
+                uploads.len() as u64,
+            );
+        }
 
         // ---- Full-backbone provisioning for the dynamic split ----
         // Every client receives the same full backbone, so the Broadcast
         // frame is encoded (and decoded) once and charged per client;
         // clients sync from the decoded tensor.
+        let bc_t0 = h.clock.now();
+        let mut bc_bytes = 0u64;
+        let mut bc_count = 0u64;
         let frame_len = h
             .wire
             .encode_to(MsgType::Broadcast, &h.server.enc, 0.0, &mut bar_scratch)
@@ -447,9 +503,15 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
                 .binary_search(&s.ci)
                 .expect("slot drawn from roster");
             bc_entries[pos].1 = h.net.bulk_down_framed(s.ci, bc_framed);
+            bc_bytes += frame_len;
+            bc_count += 1;
             h.client_mut(s.ci).sync_from_global(&bc_payload);
         }
         h.charge_barrier_phase(&bc_entries);
+        let bc_dur = h.clock.now() - bc_t0;
+        if let Some(tr) = h.tracer.as_mut() {
+            tr.track_span(TRACK_SERVER, SpanKind::Broadcast, bc_t0, bc_dur, bc_bytes, bc_count);
+        }
 
         let acc = h.eval_global(rt)?;
         if h.finish_round(

@@ -29,6 +29,7 @@ use crate::network::{DeviceProfile, Framed, NetLane};
 use crate::orchestrator::engine::{self, RoundLedger};
 use crate::orchestrator::Harness;
 use crate::runtime::Runtime;
+use crate::trace::{InstantKind, SpanKind, TRACK_SERVER};
 use crate::util::math;
 use crate::wire::{MsgType, WireScratch};
 use crate::Result;
@@ -100,6 +101,7 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
     // are apples to apples. SplitFed has no quorum concept — the fault
     // surface here is churn, bursty links, outages and corruption.
     let fc = h.cfg.net.faults.clone();
+    let lane_trace = h.tracer.as_ref().is_some_and(|t| t.lane_events_enabled());
 
     for round in 1..=h.cfg.train.rounds {
         let round_u = round as u64;
@@ -156,7 +158,7 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
         }
 
         // ---- Fan out: every client branch on a worker thread ----
-        let ledgers: Vec<RoundLedger> = {
+        let mut ledgers: Vec<RoundLedger> = {
             let Harness {
                 clients,
                 pool,
@@ -194,14 +196,18 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
                 let srv = srv_it.nth(skip).expect("copies sized to roster");
                 let clf = clf_it.nth(skip).expect("copies sized to roster");
                 next_buf = s.buf + 1;
+                let mut lane_net = net.lane(ci, round_u);
+                if lane_trace {
+                    lane_net.enable_attempt_log();
+                }
                 lanes.push(SflLane {
                     client,
                     profile: s.profile,
                     srv,
                     clf,
                     steps: s.steps,
-                    net: net.lane(ci, round_u),
-                    ledger: RoundLedger::new(ci),
+                    net: lane_net,
+                    ledger: RoundLedger::traced(ci, lane_trace),
                 });
             }
             debug_assert!(slot_it.peek().is_none(), "every slot must get a lane");
@@ -213,7 +219,9 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
 
                     let z = rt.client_fwd(depth, &lane.client.enc, &batch.x)?;
                     let t_fwd = cost.time_s(cost.client_fwd_flops(depth), lane.profile.flops);
+                    let p1_t0 = lane.ledger.branch_s;
                     lane.ledger.work(&lane.profile, t_fwd);
+                    lane.ledger.trace.span(SpanKind::LocalUpdate, p1_t0, t_fwd, 0, 0);
 
                     // Wire-framed exchange: encoded bytes on the link,
                     // analytic f32 count as raw (see orchestrator docs).
@@ -222,6 +230,10 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
                     let up_len = wire
                         .encode_to(MsgType::Smashed, &z, 0.0, &mut lane.net.scratch)
                         .len() as u64;
+                    lane.ledger
+                        .trace
+                        .span(SpanKind::Encode, lane.ledger.branch_s, 0.0, up_len, 0);
+                    let ex_t0 = lane.ledger.branch_s;
                     let ex = lane.net.exchange_framed(
                         Framed {
                             wire: up_len,
@@ -234,6 +246,9 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
                         srv_time,
                     );
                     lane.ledger.exchange(&lane.profile, ex.time_s(), srv_time);
+                    lane.ledger
+                        .trace
+                        .exchange_spans(ex_t0, &lane.net.attempts, up_len);
 
                     if ex.is_ok() {
                         // CRC/decode failure is an exchange fault: count
@@ -244,6 +259,9 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
                             .is_err()
                         {
                             lane.net.faults.corruptions += 1;
+                            lane.ledger
+                                .trace
+                                .instant(InstantKind::Corruption, lane.ledger.branch_s);
                             lane.ledger.fallback_steps += 1;
                             continue;
                         }
@@ -266,19 +284,34 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
                             .is_err()
                         {
                             lane.net.faults.corruptions += 1;
+                            lane.ledger
+                                .trace
+                                .instant(InstantKind::Corruption, lane.ledger.branch_s);
                             lane.ledger.fallback_steps += 1;
                             continue;
                         }
+                        lane.ledger.trace.span(
+                            SpanKind::Decode,
+                            lane.ledger.branch_s,
+                            0.0,
+                            gz_frame_len,
+                            0,
+                        );
                         let g_enc =
                             rt.client_bwd(depth, &lane.client.enc, &batch.x, &lane.net.scratch.decoded)?;
                         let lr = lane.client.lr;
                         math::sgd_step(&mut lane.client.enc, &g_enc, lr);
                         let t_bwd =
                             cost.time_s(cost.client_bwd_flops(depth), lane.profile.flops);
+                        let bwd_t0 = lane.ledger.branch_s;
                         lane.ledger.work(&lane.profile, t_bwd);
+                        lane.ledger.trace.span(SpanKind::Fusion, bwd_t0, t_bwd, 0, 0);
                     } else {
                         // No fallback path in SplitFed: the step is lost.
                         lane.ledger.fallback_steps += 1;
+                        lane.ledger
+                            .trace
+                            .span(SpanKind::Fallback, lane.ledger.branch_s, 0.0, 0, 0);
                     }
                 }
                 Ok(())
@@ -290,15 +323,19 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
                     net.absorb_lane(&lane.net);
                     let mut ledger = lane.ledger;
                     ledger.faults.add(&lane.net.faults);
+                    ledger.wire_bytes = lane.net.traffic.total_bytes();
                     if fc.crash_at(round_u, ledger.client).is_some() {
                         ledger.faults.crashes += 1;
+                        ledger
+                            .trace
+                            .instant(InstantKind::Crash, ledger.branch_s);
                     }
                     ledger
                 })
                 .collect()
         };
 
-        let (round_dt, busy, stalled, server_steps, mut faults) = h.absorb_ledgers(&ledgers);
+        let (round_dt, busy, stalled, server_steps, mut faults) = h.absorb_ledgers(&mut ledgers);
         faults.add(&resync_faults);
 
         // ---- FedAvg of client-side models (sample-count weights) ----
@@ -307,6 +344,8 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
         // and the server averages the *decoded* prefixes.
         // Dead and mid-round-crashed clients skip the barrier; FedAvg
         // weights renormalize over the actual participants.
+        let agg_t0 = h.clock.now();
+        let mut agg_bytes = 0u64;
         let mut agg_entries: Vec<(usize, f64)> = roster.iter().map(|&id| (id, 0.0)).collect();
         let mut uploads: Vec<(usize, usize, Vec<f32>)> = Vec::with_capacity(slots.len());
         for s in &slots {
@@ -329,6 +368,7 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
                 .binary_search(&s.ci)
                 .expect("slot drawn from roster");
             agg_entries[pos].1 = t;
+            agg_bytes += frame_len;
             uploads.push((s.ci, s.buf, h.wire.decode(&bar_scratch.frame)?.data));
         }
         h.charge_barrier_phase(&agg_entries);
@@ -381,11 +421,21 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
                 }
             }
         }
+        // The aggregate span covers both FedAvg legs: prefix uploads and
+        // the fed-link round trip of the server-side copies.
+        agg_bytes += copy_bytes * n_par * 2;
+        let agg_dur = h.clock.now() - agg_t0;
+        if let Some(tr) = h.tracer.as_mut() {
+            tr.track_span(TRACK_SERVER, SpanKind::Aggregate, agg_t0, agg_dur, agg_bytes, n_par);
+        }
 
         // ---- Broadcast the aggregated client-side model ----
         // One fixed split → every client receives the same prefix, so the
         // Broadcast frame is encoded (and decoded) once and charged per
         // client; clients sync from the decoded tensor.
+        let bc_t0 = h.clock.now();
+        let mut bc_bytes = 0u64;
+        let mut bc_count = 0u64;
         let frame_len = h
             .wire
             .encode_to(MsgType::Broadcast, &h.server.enc[..cut], 0.0, &mut bar_scratch)
@@ -404,9 +454,15 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
                 .binary_search(&s.ci)
                 .expect("slot drawn from roster");
             bc_entries[pos].1 = h.net.bulk_down_framed(s.ci, bc_framed);
+            bc_bytes += frame_len;
+            bc_count += 1;
             h.client_mut(s.ci).sync_from_global(&bc_payload);
         }
         h.charge_barrier_phase(&bc_entries);
+        let bc_dur = h.clock.now() - bc_t0;
+        if let Some(tr) = h.tracer.as_mut() {
+            tr.track_span(TRACK_SERVER, SpanKind::Broadcast, bc_t0, bc_dur, bc_bytes, bc_count);
+        }
 
         let acc = h.eval_global(rt)?;
         if h.finish_round(

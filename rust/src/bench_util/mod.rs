@@ -10,6 +10,47 @@ pub mod scenarios;
 
 use std::time::Instant;
 
+use crate::config::ExperimentConfig;
+use crate::util::json::JsonValue;
+
+/// FNV-1a 64-bit hash — tiny, deterministic, dependency-free. Used to
+/// fingerprint configs in provenance stamps (not cryptographic).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// The shared provenance block stamped on every machine-readable
+/// artifact (run-summary JSON, `BENCH_*.json`, trace metadata): enough
+/// to re-run the exact experiment that produced the numbers. The
+/// `config_fnv1a64` fingerprint covers the *full* canonical config
+/// JSON, so any knob the named fields don't spell out still changes
+/// the hash.
+pub fn provenance(cfg: &ExperimentConfig) -> JsonValue {
+    let mut o = JsonValue::object();
+    o.set("seed", JsonValue::Number(cfg.train.seed as f64));
+    o.set(
+        "backend",
+        JsonValue::String(cfg.backend.as_str().to_string()),
+    );
+    o.set("wire_codec", JsonValue::String(cfg.wire.label()));
+    o.set("threads", JsonValue::Number(cfg.threads as f64));
+    o.set(
+        "kernel_threads",
+        JsonValue::Number(cfg.kernel_threads as f64),
+    );
+    o.set("faults", JsonValue::String(cfg.net.faults.to_spec()));
+    o.set("sample", JsonValue::String(cfg.sample.label()));
+    o.set("trace", JsonValue::String(cfg.trace.label()));
+    let hash = fnv1a64(cfg.to_json().to_string_compact().as_bytes());
+    o.set("config_fnv1a64", JsonValue::String(format!("{hash:016x}")));
+    o
+}
+
 /// Timing statistics over the measured iterations.
 #[derive(Clone, Copy, Debug)]
 pub struct Sample {
@@ -104,6 +145,52 @@ mod tests {
         assert!(format_time(2e-3).ends_with(" ms"));
         assert!(format_time(2e-6).ends_with(" µs"));
         assert!(format_time(2e-10).ends_with(" ns"));
+    }
+
+    #[test]
+    fn fnv1a64_matches_reference_vectors() {
+        // Published FNV-1a test vectors.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn provenance_names_the_run_and_fingerprints_the_config() {
+        let cfg = ExperimentConfig::default();
+        let p = provenance(&cfg);
+        assert_eq!(
+            p.get("seed").and_then(|v| v.as_f64()),
+            Some(cfg.train.seed as f64)
+        );
+        for key in [
+            "backend",
+            "wire_codec",
+            "faults",
+            "sample",
+            "trace",
+            "config_fnv1a64",
+        ] {
+            assert!(
+                p.get(key).and_then(|v| v.as_str()).is_some(),
+                "provenance missing string field {key}"
+            );
+        }
+        let hash = p
+            .get("config_fnv1a64")
+            .and_then(|v| v.as_str())
+            .unwrap()
+            .to_string();
+        assert_eq!(hash.len(), 16);
+        // The fingerprint must move when any config knob moves.
+        let mut cfg2 = ExperimentConfig::default();
+        cfg2.train.seed += 1;
+        let hash2 = provenance(&cfg2)
+            .get("config_fnv1a64")
+            .and_then(|v| v.as_str())
+            .unwrap()
+            .to_string();
+        assert_ne!(hash, hash2);
     }
 
     #[test]

@@ -54,7 +54,6 @@ impl Args {
             .collect()
     }
 
-    #[allow(dead_code)] // part of the parser's public surface; used in tests
     pub fn has_flag(&self, key: &str) -> bool {
         self.flags.iter().any(|f| f == key)
     }

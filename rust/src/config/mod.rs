@@ -8,6 +8,7 @@
 use std::path::{Path, PathBuf};
 
 use crate::network::faults::FaultConfig;
+use crate::trace::TraceSpec;
 use crate::util::json::{self, JsonValue};
 use crate::wire::WireCodecKind;
 use crate::{Error, Result};
@@ -484,6 +485,14 @@ pub struct ExperimentConfig {
     /// byte-identical to the pre-sampling simulator. The cohort is a
     /// pure function of `(seed, round)` — see [`SampleSpec`].
     pub sample: SampleSpec,
+    /// Tracing mode (`--trace off|summary|<path>`). `off` (the default)
+    /// records nothing and keeps every output byte-identical to the
+    /// untraced simulator; `summary` folds per-client straggler
+    /// histograms into the metrics; a path additionally exports the
+    /// full Chrome trace-event stream. See [`crate::trace`].
+    pub trace: TraceSpec,
+    /// Emit a live per-round progress line on stderr (`--progress`).
+    pub progress: bool,
     /// Where `make artifacts` put the HLO + manifest.
     pub artifacts_dir: PathBuf,
 }
@@ -507,6 +516,8 @@ impl Default for ExperimentConfig {
             backend: BackendKind::Auto,
             wire: WireCodecKind::Fp32,
             sample: SampleSpec::Off,
+            trace: TraceSpec::Off,
+            progress: false,
             artifacts_dir: PathBuf::from("artifacts"),
         }
     }
@@ -571,6 +582,12 @@ impl ExperimentConfig {
     /// Per-round participation sampling.
     pub fn with_sample(mut self, s: SampleSpec) -> Self {
         self.sample = s;
+        self
+    }
+
+    /// Tracing mode (off / summary / Chrome-trace file).
+    pub fn with_trace(mut self, t: TraceSpec) -> Self {
+        self.trace = t;
         self
     }
 
@@ -662,6 +679,12 @@ impl ExperimentConfig {
                     Some(sv) => SampleSpec::parse(sv)?,
                     None => SampleSpec::parse(&f(v)?.to_string())?,
                 }
+            }
+            "trace" => self.trace = TraceSpec::parse(s(v, key)?)?,
+            "progress" => {
+                self.progress = v
+                    .as_bool()
+                    .ok_or_else(|| Error::Config("progress must be bool".into()))?
             }
             "artifacts_dir" => self.artifacts_dir = PathBuf::from(s(v, key)?),
             "clients" => self.fleet.clients = f(v)? as usize,
@@ -759,6 +782,8 @@ impl ExperimentConfig {
         o.set("backend", JsonValue::String(self.backend.as_str().into()));
         o.set("wire_codec", JsonValue::String(self.wire.label()));
         o.set("sample", JsonValue::String(self.sample.label()));
+        o.set("trace", JsonValue::String(self.trace.label()));
+        o.set("progress", JsonValue::Bool(self.progress));
         if let Some(t) = self.train.target_accuracy {
             o.set("target_accuracy", n(t));
         }
@@ -978,6 +1003,28 @@ mod tests {
         assert!(c.apply_json(&json::parse(r#"{"sample": 0}"#).unwrap()).is_err());
         assert!(c.apply_json(&json::parse(r#"{"sample": "most"}"#).unwrap()).is_err());
         assert_eq!(c.sample, SampleSpec::Off, "failed overrides must not apply");
+    }
+
+    #[test]
+    fn trace_and_progress_keys_parse_and_roundtrip() {
+        let c = ExperimentConfig::default();
+        assert_eq!(c.trace, TraceSpec::Off);
+        assert!(!c.progress);
+
+        let mut c = ExperimentConfig::default();
+        let v = json::parse(r#"{"trace": "summary", "progress": true}"#).unwrap();
+        c.apply_json(&v).unwrap();
+        assert_eq!(c.trace, TraceSpec::Summary);
+        assert!(c.progress);
+
+        let c = ExperimentConfig::default()
+            .with_trace(TraceSpec::File(std::path::PathBuf::from("run.trace.json")));
+        let mut c2 = ExperimentConfig::default();
+        c2.apply_json(&c.to_json()).unwrap();
+        assert_eq!(c2.trace, c.trace);
+
+        let v = json::parse(r#"{"progress": 1}"#).unwrap();
+        assert!(ExperimentConfig::default().apply_json(&v).is_err());
     }
 
     #[test]

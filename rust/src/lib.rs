@@ -32,6 +32,8 @@
 //! * [`server`] — the main server: deep-suffix execution over the shared
 //!   super-network.
 //! * [`fedserver`] — collaborative layer-aligned aggregation (paper Eq. 6–8).
+//! * [`trace`] — deterministic span tracing + per-client straggler
+//!   telemetry (Chrome-trace export, fixed-log-bucket histograms).
 //! * [`orchestrator`] — the round loop tying everything together.
 //! * [`baselines`] — SFL (SplitFed) and DFL comparators.
 //! * [`bench_util`] — the bench harness used by `cargo bench` targets.
@@ -56,6 +58,7 @@ pub mod orchestrator;
 pub mod runtime;
 pub mod server;
 pub mod tpgf;
+pub mod trace;
 pub mod util;
 pub mod wire;
 

@@ -54,6 +54,7 @@ fn usage() {
          [--wire-codec fp32|fp16|int8|topk:<k>] \
          [--faults off|ge=..,outage=..,crash=..,corrupt=..,retry=..,quorum=..] \
          [--sample off|N|0.frac] \
+         [--trace off|summary|FILE.trace.json] [--progress] \
          [--config file.json] [--set key=value]... [--artifacts DIR] [--out DIR]"
     );
 }
@@ -95,6 +96,27 @@ fn build_config(args: &cli::Args) -> Result<ExperimentConfig> {
     }
     if let Some(v) = args.get("sample") {
         cfg.sample = supersfl::config::SampleSpec::parse(v)?;
+    }
+    if args.has_flag("trace") {
+        return Err(Error::Config(
+            "--trace needs a value: off, summary, or a .trace.json output path".into(),
+        ));
+    }
+    if let Some(v) = args.get("trace") {
+        cfg.trace = supersfl::trace::TraceSpec::parse(v)?;
+    }
+    if let Some(v) = args.get("progress") {
+        cfg.progress = match v {
+            "true" | "on" | "1" => true,
+            "false" | "off" | "0" => false,
+            other => {
+                return Err(Error::Config(format!(
+                    "--progress takes no value (or on/off), got '{other}'"
+                )))
+            }
+        };
+    } else if args.has_flag("progress") {
+        cfg.progress = true;
     }
     if let Some(v) = args.get("target") {
         cfg.train.target_accuracy = Some(v.parse()?);
@@ -197,15 +219,60 @@ fn cmd_train(args: &cli::Args) -> Result<()> {
     if let Some(reason) = &st.fallback_reason {
         println!("note: fell back to the native backend ({reason})");
     }
+    if let Some(s) = &res.metrics.straggler {
+        println!(
+            "stragglers: round time p50 {:.2}s p95 {:.2}s p99 {:.2}s | bytes p50 {:.1} KB p99 {:.1} KB | retries p99 {:.0}",
+            s.time_p50, s.time_p95, s.time_p99,
+            s.bytes_p50 / 1e3, s.bytes_p99 / 1e3, s.retries_p99
+        );
+    }
+
+    // Chrome-trace export: sim-time events only; host-side numbers
+    // (wall clock, runtime stats) ride the metadata block so the event
+    // stream stays byte-identical across thread counts and machines.
+    if let supersfl::trace::TraceSpec::File(path) = &cfg.trace {
+        let report = res.trace.as_ref().ok_or_else(|| {
+            Error::Config("trace file requested but the run produced no trace".into())
+        })?;
+        let mut meta = supersfl::bench_util::provenance(&cfg);
+        let mut host = JsonValue::object();
+        host.set("host_wall_s", JsonValue::Number(wall));
+        host.set("backend", JsonValue::String(st.backend.to_string()));
+        host.set("executions", JsonValue::Number(st.executions as f64));
+        host.set("exec_time_s", JsonValue::Number(st.exec_time_s));
+        host.set("kernel_time_s", JsonValue::Number(st.kernel_time_s));
+        host.set(
+            "kernel_threads",
+            JsonValue::Number(st.kernel_threads as f64),
+        );
+        meta.set("host", host);
+        supersfl::util::fs::atomic_write(
+            path,
+            report.to_chrome_json(&cfg.wire.label(), &meta).as_bytes(),
+        )?;
+        println!(
+            "wrote trace to {} ({} events, {} dropped)",
+            path.display(),
+            report.events().len(),
+            report.dropped()
+        );
+    }
 
     if let Some(out) = args.get("out") {
         let dir = PathBuf::from(out);
         let base = format!("{}_{}", cfg.name, cfg.method.as_str());
         res.metrics.write_csv(&dir.join(format!("{base}.csv")))?;
-        res.metrics.write_json(&dir.join(format!("{base}.json")))?;
-        std::fs::write(
-            dir.join(format!("{base}_config.json")),
-            cfg.to_json().to_string_pretty(),
+        // The run-summary JSON carries the shared provenance stamp, so
+        // an artifact directory is self-describing.
+        let mut run_json = res.metrics.to_json();
+        run_json.set("provenance", supersfl::bench_util::provenance(&cfg));
+        supersfl::util::fs::atomic_write(
+            &dir.join(format!("{base}.json")),
+            run_json.to_string_pretty().as_bytes(),
+        )?;
+        supersfl::util::fs::atomic_write(
+            &dir.join(format!("{base}_config.json")),
+            cfg.to_json().to_string_pretty().as_bytes(),
         )?;
         println!("wrote results to {}", dir.display());
     }

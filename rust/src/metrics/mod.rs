@@ -3,6 +3,8 @@
 use std::io::Write;
 use std::path::Path;
 
+use crate::trace::StragglerStats;
+use crate::util::fs::{atomic_write, atomic_write_with};
 use crate::util::json::JsonValue;
 use crate::Result;
 
@@ -49,6 +51,12 @@ pub struct RoundRecord {
     pub retries: u64,
     /// Mid-round client crashes this round.
     pub crashes: u64,
+    /// Per-client straggler percentiles for this round (branch time,
+    /// wire bytes, retries), present only when telemetry is on
+    /// (`--trace summary|<path>`). `None` keeps the exported shape —
+    /// CSV header and JSON keys — byte-identical to the pre-trace
+    /// simulator, so goldens never re-bless.
+    pub straggler: Option<StragglerStats>,
 }
 
 impl RoundRecord {
@@ -76,8 +84,21 @@ impl RoundRecord {
         o.set("corruptions", n(self.corruptions as f64));
         o.set("retries", n(self.retries as f64));
         o.set("crashes", n(self.crashes as f64));
+        if let Some(s) = &self.straggler {
+            o.set("straggler", straggler_json(s));
+        }
         o
     }
+}
+
+/// The nine straggler percentiles as one JSON object (key order matches
+/// [`StragglerStats::CSV_COLUMNS`]).
+fn straggler_json(s: &StragglerStats) -> JsonValue {
+    let mut o = JsonValue::object();
+    for (key, v) in StragglerStats::CSV_COLUMNS.split(',').zip(s.csv_fields()) {
+        o.set(key, JsonValue::Number(v));
+    }
+    o
 }
 
 /// Whole-run result + the per-round trajectory.
@@ -116,6 +137,10 @@ pub struct RunMetrics {
     pub total_corruptions: u64,
     pub total_retries: u64,
     pub total_crashes: u64,
+    /// Run-level straggler percentiles (per-client round samples merged
+    /// across every round); telemetry-gated like
+    /// [`RoundRecord::straggler`]. Filled in by the orchestrator.
+    pub straggler: Option<StragglerStats>,
 }
 
 impl RunMetrics {
@@ -165,45 +190,65 @@ impl RunMetrics {
             total_corruptions: rounds.iter().map(|r| r.corruptions).sum(),
             total_retries: rounds.iter().map(|r| r.retries).sum(),
             total_crashes: rounds.iter().map(|r| r.crashes).sum(),
+            straggler: None,
             rounds,
         }
     }
 
-    /// CSV of the per-round trajectory (one file per run).
+    /// CSV of the per-round trajectory (one file per run). Written
+    /// atomically (temp sibling + rename): readers never observe a
+    /// truncated artifact. The straggler percentile columns appear only
+    /// when the run recorded telemetry, keeping untraced headers
+    /// byte-identical to the pre-trace simulator.
     pub fn write_csv(&self, path: &Path) -> Result<()> {
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
         }
-        let mut f = std::fs::File::create(path)?;
-        writeln!(
-            f,
-            "round,sim_time_s,accuracy,mean_client_loss,mean_server_loss,comm_mb,cum_comm_mb,raw_mb,cum_raw_mb,compression,energy_j,fallback_steps,server_steps,participants,timeouts,drops,corruptions,retries,crashes"
-        )?;
-        for r in &self.rounds {
-            writeln!(
+        let telemetry = self.rounds.iter().any(|r| r.straggler.is_some());
+        atomic_write_with(path, |f| {
+            write!(
                 f,
-                "{},{:.3},{:.4},{:.4},{:.4},{:.3},{:.3},{:.3},{:.3},{:.3},{:.1},{},{},{},{},{},{},{},{}",
-                r.round,
-                r.sim_time_s,
-                r.accuracy,
-                r.mean_client_loss,
-                r.mean_server_loss,
-                r.comm_mb,
-                r.cum_comm_mb,
-                r.raw_mb,
-                r.cum_raw_mb,
-                r.compression,
-                r.energy_j,
-                r.fallback_steps,
-                r.server_steps,
-                r.participants,
-                r.timeouts,
-                r.drops,
-                r.corruptions,
-                r.retries,
-                r.crashes
+                "round,sim_time_s,accuracy,mean_client_loss,mean_server_loss,comm_mb,cum_comm_mb,raw_mb,cum_raw_mb,compression,energy_j,fallback_steps,server_steps,participants,timeouts,drops,corruptions,retries,crashes"
             )?;
-        }
+            if telemetry {
+                writeln!(f, ",{}", StragglerStats::CSV_COLUMNS)?;
+            } else {
+                writeln!(f)?;
+            }
+            for r in &self.rounds {
+                write!(
+                    f,
+                    "{},{:.3},{:.4},{:.4},{:.4},{:.3},{:.3},{:.3},{:.3},{:.3},{:.1},{},{},{},{},{},{},{},{}",
+                    r.round,
+                    r.sim_time_s,
+                    r.accuracy,
+                    r.mean_client_loss,
+                    r.mean_server_loss,
+                    r.comm_mb,
+                    r.cum_comm_mb,
+                    r.raw_mb,
+                    r.cum_raw_mb,
+                    r.compression,
+                    r.energy_j,
+                    r.fallback_steps,
+                    r.server_steps,
+                    r.participants,
+                    r.timeouts,
+                    r.drops,
+                    r.corruptions,
+                    r.retries,
+                    r.crashes
+                )?;
+                if telemetry {
+                    let s = r.straggler.unwrap_or_default();
+                    for v in s.csv_fields() {
+                        write!(f, ",{v:.4}")?;
+                    }
+                }
+                writeln!(f)?;
+            }
+            Ok(())
+        })?;
         Ok(())
     }
 
@@ -243,6 +288,9 @@ impl RunMetrics {
         o.set("total_corruptions", n(self.total_corruptions as f64));
         o.set("total_retries", n(self.total_retries as f64));
         o.set("total_crashes", n(self.total_crashes as f64));
+        if let Some(s) = &self.straggler {
+            o.set("straggler", straggler_json(s));
+        }
         o.set(
             "rounds",
             JsonValue::Array(self.rounds.iter().map(|r| r.to_json()).collect()),
@@ -250,11 +298,13 @@ impl RunMetrics {
         o
     }
 
+    /// Atomic like [`RunMetrics::write_csv`]: a crash mid-write leaves
+    /// either the previous complete file or nothing, never a torn one.
     pub fn write_json(&self, path: &Path) -> Result<()> {
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
         }
-        std::fs::write(path, self.to_json().to_string_pretty())?;
+        atomic_write(path, self.to_json().to_string_pretty().as_bytes())?;
         Ok(())
     }
 }
@@ -432,6 +482,48 @@ mod tests {
         // Round 2's row carries its cause-classified counts.
         let row2: Vec<&str> = text.lines().nth(2).unwrap().split(',').collect();
         assert_eq!(&row2[row2.len() - 5..], &["3", "2", "0", "0", "0"]);
+        std::fs::remove_file(&tmp).ok();
+    }
+
+    #[test]
+    fn straggler_columns_appear_only_with_telemetry() {
+        // Untraced: shape identical to the pre-trace exporter.
+        let m = RunMetrics::from_rounds("t", "ssfl", rounds(), None, 1.0, 1.0, 1.0);
+        let j = m.to_json();
+        assert!(j.get("straggler").is_none());
+        let r0 = &j.get("rounds").and_then(|r| r.as_array()).unwrap()[0];
+        assert!(r0.get("straggler").is_none());
+
+        // Traced: percentile columns land in both exports.
+        let mut rs = rounds();
+        for r in &mut rs {
+            r.straggler = Some(StragglerStats {
+                time_p50: 1.5,
+                time_p95: 2.0,
+                time_p99: 2.5,
+                bytes_p50: 1000.0,
+                ..StragglerStats::default()
+            });
+        }
+        let mut m = RunMetrics::from_rounds("t", "ssfl", rs, None, 1.0, 1.0, 1.0);
+        m.straggler = m.rounds[0].straggler;
+        let j = m.to_json();
+        let run_s = j.get("straggler").expect("run-level straggler key");
+        assert_eq!(run_s.f64_at("time_p50").unwrap(), 1.5);
+        let r0 = &j.get("rounds").and_then(|r| r.as_array()).unwrap()[0];
+        let s = r0.get("straggler").expect("round straggler key");
+        assert_eq!(s.f64_at("bytes_p50").unwrap(), 1000.0);
+        assert_eq!(s.f64_at("retries_p99").unwrap(), 0.0);
+
+        let tmp = std::env::temp_dir().join("supersfl_test_straggler_metrics.csv");
+        m.write_csv(&tmp).unwrap();
+        let text = std::fs::read_to_string(&tmp).unwrap();
+        let header = text.lines().next().unwrap();
+        assert!(header.ends_with(StragglerStats::CSV_COLUMNS));
+        let cols = header.split(',').count();
+        for line in text.lines().skip(1) {
+            assert_eq!(line.split(',').count(), cols, "ragged row: {line}");
+        }
         std::fs::remove_file(&tmp).ok();
     }
 

@@ -19,6 +19,7 @@ pub use faults::{CrashSpec, FaultConfig, FaultCounters, GeState};
 pub use fleet::{sample_cohort, sample_fleet, DeviceProfile, Fleet};
 
 use crate::config::NetConfig;
+use crate::trace::{AttemptOutcome, AttemptRec};
 use crate::util::rng::Pcg32;
 use crate::wire::frame::{HEADER_LEN, TRAILER_LEN};
 use crate::wire::WireScratch;
@@ -147,6 +148,7 @@ fn exchange_impl(
     mut ge: Option<&mut GeState>,
     counters: &mut FaultCounters,
     traffic: &mut [(&mut Traffic, &mut Traffic)],
+    mut log: Option<&mut Vec<AttemptRec>>,
     server_up: bool,
     up: Framed,
     down: Framed,
@@ -155,9 +157,11 @@ fn exchange_impl(
     let fc = &cfg.faults;
     let mut total_s = 0.0f64;
     for attempt in 0..=fc.retries {
+        let mut backoff = 0.0f64;
         if attempt > 0 {
             counters.retries += 1;
-            total_s += fc.backoff_s(attempt, rng);
+            backoff = fc.backoff_s(attempt, rng);
+            total_s += backoff;
         }
         for (t, raw) in traffic.iter_mut() {
             t.up_bytes += up.wire;
@@ -168,20 +172,41 @@ fn exchange_impl(
             None => rng.bernoulli(cfg.drop_prob),
         };
         if !server_up || dropped {
-            if server_up {
+            let outcome = if server_up {
                 counters.drops += 1;
+                AttemptOutcome::Drop
             } else {
                 counters.timeouts += 1;
-            }
+                AttemptOutcome::Timeout
+            };
             total_s += cfg.timeout_s;
+            if let Some(l) = log.as_deref_mut() {
+                l.push(AttemptRec {
+                    backoff_s: backoff,
+                    cost_s: cfg.timeout_s,
+                    up_s: 0.0,
+                    server_s: 0.0,
+                    outcome,
+                });
+            }
             continue;
         }
-        let t = link.up_time(up.wire) + server_time_s + link.down_time(down.wire);
+        let up_s = link.up_time(up.wire);
+        let t = up_s + server_time_s + link.down_time(down.wire);
         if t > cfg.timeout_s {
             // Link too slow for the timeout window: same observable
             // behaviour as an outage (paper §II-C fallback trigger).
             counters.timeouts += 1;
             total_s += cfg.timeout_s;
+            if let Some(l) = log.as_deref_mut() {
+                l.push(AttemptRec {
+                    backoff_s: backoff,
+                    cost_s: cfg.timeout_s,
+                    up_s: 0.0,
+                    server_s: 0.0,
+                    outcome: AttemptOutcome::Timeout,
+                });
+            }
             continue;
         }
         for (tr, raw) in traffic.iter_mut() {
@@ -189,6 +214,15 @@ fn exchange_impl(
             raw.down_bytes += down.raw;
         }
         total_s += t;
+        if let Some(l) = log.as_deref_mut() {
+            l.push(AttemptRec {
+                backoff_s: backoff,
+                cost_s: t,
+                up_s,
+                server_s: server_time_s,
+                outcome: AttemptOutcome::Ok,
+            });
+        }
         return Exchange::Ok { time_s: total_s };
     }
     Exchange::TimedOut { time_s: total_s }
@@ -225,11 +259,24 @@ pub struct NetLane {
     /// vehicle — the bytes on the wire are identical (see
     /// [`crate::wire::WireScratch`]).
     pub scratch: WireScratch,
+    /// Per-attempt replay log of the most recent faulted transfer,
+    /// consumed by the tracing layer to reconstruct the retry/backoff
+    /// timeline. Empty (and never written) unless
+    /// [`NetLane::enable_attempt_log`] was called — the untraced hot
+    /// path pays one branch per attempt and allocates nothing.
+    pub attempts: Vec<AttemptRec>,
+    log_attempts: bool,
 }
 
 impl NetLane {
     pub fn server_available(&self) -> bool {
         self.server_up
+    }
+
+    /// Turn on per-attempt logging for this lane (tracing only; has no
+    /// effect on times, bytes, or the lane's draw stream).
+    pub fn enable_attempt_log(&mut self) {
+        self.log_attempts = true;
     }
 
     pub fn up_time(&self, bytes: u64) -> f64 {
@@ -273,6 +320,8 @@ impl NetLane {
     /// this lane's private stream only when `corrupt_prob > 0`, so the
     /// inert schedule burns no extra randomness.
     pub fn exchange_framed(&mut self, up: Framed, down: Framed, server_time_s: f64) -> Exchange {
+        self.attempts.clear();
+        let log = self.log_attempts.then_some(&mut self.attempts);
         let ex = exchange_impl(
             &self.cfg,
             &self.link,
@@ -280,6 +329,7 @@ impl NetLane {
             self.ge.as_mut(),
             &mut self.faults,
             &mut [(&mut self.traffic, &mut self.raw_traffic)],
+            log,
             self.server_up,
             up,
             down,
@@ -306,6 +356,8 @@ impl NetLane {
     /// [`NetLane::scratch`] (the caller decodes from there; a flipped
     /// byte then fails the CRC check exactly like a round-path frame).
     pub fn faulted_download(&mut self, down: Framed, server_time_s: f64) -> Exchange {
+        self.attempts.clear();
+        let log = self.log_attempts.then_some(&mut self.attempts);
         let ex = exchange_impl(
             &self.cfg,
             &self.link,
@@ -313,6 +365,7 @@ impl NetLane {
             self.ge.as_mut(),
             &mut self.faults,
             &mut [(&mut self.traffic, &mut self.raw_traffic)],
+            log,
             self.server_up,
             Framed { wire: 0, raw: 0 },
             down,
@@ -483,6 +536,8 @@ impl NetworkSim {
             traffic: Traffic::default(),
             raw_traffic: Traffic::default(),
             scratch: WireScratch::default(),
+            attempts: Vec::new(),
+            log_attempts: false,
         }
     }
 
@@ -530,6 +585,7 @@ impl NetworkSim {
                 (&mut self.traffic, &mut self.raw_traffic),
                 (&mut self.round_traffic, &mut self.round_raw_traffic),
             ],
+            None,
             self.server_up_this_round,
             Framed::uncoded(up_bytes),
             Framed::uncoded(down_bytes),

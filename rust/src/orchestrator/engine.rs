@@ -94,6 +94,7 @@
 
 use crate::energy::{EnergyMeter, PowerState};
 use crate::network::{DeviceProfile, FaultCounters};
+use crate::trace::TraceBuf;
 use crate::Result;
 
 /// Per-client accounting for one round, merged deterministically at the
@@ -118,12 +119,30 @@ pub struct RoundLedger {
     /// round record at the barrier so availability tables can report
     /// *why* fallbacks happened.
     pub faults: FaultCounters,
+    /// Wire bytes this lane put on the link this round (telemetry only —
+    /// the authoritative byte accounting stays on `NetLane`/`Traffic`).
+    pub wire_bytes: u64,
+    /// Lane-local trace buffer ([`crate::trace`]): events at
+    /// branch-relative sim time, drained in client-id order at the
+    /// barrier. Disabled (a branch-and-return no-op) unless the run is
+    /// traced.
+    pub trace: TraceBuf,
 }
 
 impl RoundLedger {
     pub fn new(client: usize) -> RoundLedger {
         RoundLedger {
             client,
+            ..RoundLedger::default()
+        }
+    }
+
+    /// A ledger whose trace buffer records events (traced runs only; the
+    /// plain [`RoundLedger::new`] keeps tracing off the hot path).
+    pub fn traced(client: usize, record_events: bool) -> RoundLedger {
+        RoundLedger {
+            client,
+            trace: TraceBuf::new(record_events),
             ..RoundLedger::default()
         }
     }

@@ -76,6 +76,7 @@ use crate::network::{
 };
 use crate::runtime::Runtime;
 use crate::server::ServerState;
+use crate::trace::{InstantKind, SpanKind, TraceBuf, TraceReport, Tracer, TRACK_BARRIER, TRACK_SERVER};
 use crate::util::math;
 use crate::util::rng::Pcg32;
 use crate::wire::{MsgType, Wire, WireCodecKind, WireScratch};
@@ -129,6 +130,10 @@ pub struct Harness {
     shard_base: Pcg32,
     /// Fleet-wide `(lat_min, lat_max)` for lazy Eq. 1 depth assignment.
     lat_extremes: (f64, f64),
+    /// Span/telemetry recorder (`cfg.trace`); `None` keeps the hot path
+    /// free of trace work and the output shape identical to the
+    /// pre-trace simulator.
+    pub tracer: Option<Tracer>,
     /// Host wall-clock anchor (perf reporting, not simulation).
     host_t0: std::time::Instant,
 }
@@ -154,6 +159,10 @@ pub struct RunResult {
     pub depths: Vec<usize>,
     /// Pooled-state high-water marks (zeros under `sample=off`).
     pub pool: PoolStats,
+    /// The run's recorded event stream (`--trace <path>` only; `None`
+    /// under `off`/`summary`). Sim-time-only, so two traced runs of the
+    /// same config match event for event at any thread count.
+    pub trace: Option<TraceReport>,
 }
 
 impl Harness {
@@ -304,6 +313,7 @@ impl Harness {
             shards: kept_shards,
             shard_base,
             lat_extremes,
+            tracer: Tracer::from_spec(&cfg.trace),
             host_t0: std::time::Instant::now(),
         })
     }
@@ -431,7 +441,11 @@ impl Harness {
             .cost
             .time_s(self.cost.eval_flops(self.eval_indices.len()), self.cfg.fleet.server_gflops * 1e9);
         self.meter.server_busy(t);
+        let t0 = self.clock.now();
         self.clock.advance(t);
+        if let Some(tr) = self.tracer.as_mut() {
+            tr.track_span(TRACK_SERVER, SpanKind::Eval, t0, t, 0, self.eval_indices.len() as u64);
+        }
         Ok(acc)
     }
 
@@ -460,6 +474,10 @@ impl Harness {
         let mut any = false;
         let mut faults = FaultCounters::default();
         let mut sitting_out: Vec<usize> = Vec::new();
+        let keep_events = self
+            .tracer
+            .as_ref()
+            .is_some_and(|t| t.lane_events_enabled());
         for (pos, &ci) in roster.iter().enumerate() {
             if fc.is_down(round_u, ci) {
                 // Missed round: reset the loss accumulators so stale
@@ -472,6 +490,9 @@ impl Harness {
             if self.client(ci).missed_rounds > 0 {
                 let prefix_elems = self.client(ci).enc.len();
                 let mut lane = self.net.resync_lane(ci, round_u);
+                if keep_events {
+                    lane.enable_attempt_log();
+                }
                 let frame_len = self
                     .wire
                     .encode_to(
@@ -490,6 +511,7 @@ impl Harness {
                 );
                 entries[pos].1 = ex.time_s();
                 let mut synced = false;
+                let mut corrupt = false;
                 if ex.is_ok() {
                     match self.wire.decode(&lane.scratch.frame) {
                         Ok(dec) => {
@@ -502,7 +524,26 @@ impl Harness {
                             // Delivered but failed the CRC/decode: an
                             // exchange fault, not a programming error.
                             lane.faults.corruptions += 1;
+                            corrupt = true;
                         }
+                    }
+                }
+                if keep_events {
+                    // Replay the resync timeline onto the client's
+                    // track: a `resync` parent over the full faulted
+                    // download, the per-attempt retry/backoff detail,
+                    // and a corruption instant when the frame arrived
+                    // but failed its CRC. The resync phase starts at
+                    // the current barrier clock for every rejoiner.
+                    let mut buf = TraceBuf::new(true);
+                    buf.span(SpanKind::Resync, 0.0, ex.time_s(), frame_len, 0);
+                    buf.exchange_spans(0.0, &lane.attempts, frame_len);
+                    if corrupt {
+                        buf.instant(InstantKind::Corruption, ex.time_s());
+                    }
+                    let t0 = self.clock.now();
+                    if let Some(tr) = self.tracer.as_mut() {
+                        tr.drain_lane(ci, t0, &mut buf);
                     }
                 }
                 if !synced {
@@ -549,14 +590,15 @@ impl Harness {
     /// don't exist, so they cost neither an event nor a vector slot.
     pub fn absorb_ledgers(
         &mut self,
-        ledgers: &[RoundLedger],
+        ledgers: &mut [RoundLedger],
     ) -> (f64, Vec<(usize, f64)>, usize, usize, FaultCounters) {
+        let round_t0 = self.clock.now();
         let mut busy = Vec::with_capacity(ledgers.len());
         let mut fallback_steps = 0usize;
         let mut server_steps = 0usize;
         let mut faults = FaultCounters::default();
         let mut events = EventQueue::new();
-        for l in ledgers {
+        for l in ledgers.iter_mut() {
             events.schedule(l.branch_s, Event::BranchDone { client: l.client });
             busy.push((l.client, l.busy_s));
             self.meter.add_client_energy(l.client, l.energy_j);
@@ -564,8 +606,26 @@ impl Harness {
             fallback_steps += l.fallback_steps;
             server_steps += l.server_steps;
             faults.add(&l.faults);
+            if let Some(tr) = self.tracer.as_mut() {
+                // Lane events are branch-relative; every branch starts
+                // at the barrier clock. Ledgers arrive in client-id
+                // order (the merge contract), so the drained stream is
+                // thread-invariant.
+                tr.drain_lane(l.client, round_t0, &mut l.trace);
+                tr.fold_client(l.branch_s, l.wire_bytes, l.faults.retries);
+            }
         }
         let round_dt = Self::drain_barrier(&mut events);
+        if let Some(tr) = self.tracer.as_mut() {
+            tr.track_span(
+                TRACK_BARRIER,
+                SpanKind::BarrierWait,
+                round_t0,
+                round_dt,
+                0,
+                ledgers.len() as u64,
+            );
+        }
         self.clock.advance(round_dt);
         (round_dt, busy, fallback_steps, server_steps, faults)
     }
@@ -638,6 +698,7 @@ impl Harness {
             .collect();
         let round_wire = self.net.round_traffic.total_bytes();
         let round_raw = self.net.round_raw_traffic.total_bytes();
+        let straggler = self.tracer.as_mut().map(|t| t.finish_round());
         let rec = RoundRecord {
             round,
             sim_time_s: self.clock.now(),
@@ -662,7 +723,27 @@ impl Harness {
             corruptions: faults.corruptions,
             retries: faults.retries,
             crashes: faults.crashes,
+            straggler,
         };
+        if self.cfg.progress {
+            // Live per-round status on stderr (never stdout — artifact
+            // pipes stay clean). Host-side only; no effect on any
+            // deterministic output.
+            eprintln!(
+                "round {:>4}/{}  acc {:.3}  cum {:.2} MB  \
+                 faults to:{} dr:{} cor:{} re:{} cr:{}  pool hw {}",
+                round,
+                self.cfg.train.rounds,
+                accuracy,
+                rec.cum_comm_mb,
+                faults.timeouts,
+                faults.drops,
+                faults.corruptions,
+                faults.retries,
+                faults.crashes,
+                self.pool_stats.max_materialized,
+            );
+        }
         self.records.push(rec);
         match self.cfg.train.target_accuracy {
             Some(t) => accuracy >= t,
@@ -685,6 +766,7 @@ impl Harness {
         );
         metrics.host_wall_s = self.host_t0.elapsed().as_secs_f64();
         metrics.wire_codec = self.wire.label();
+        metrics.straggler = self.tracer.as_ref().map(|t| t.run_straggler());
         let depths = if self.cohort_k.is_none() {
             self.clients.iter().map(|c| c.depth).collect()
         } else {
@@ -694,6 +776,13 @@ impl Harness {
             metrics,
             depths,
             pool: self.pool_stats,
+            trace: self.tracer.take().and_then(|t| {
+                if t.lane_events_enabled() {
+                    Some(t.into_report())
+                } else {
+                    None // `summary` keeps the columns, not the stream
+                }
+            }),
         }
     }
 }
@@ -781,6 +870,9 @@ fn run_ssfl(rt: &Runtime, h: &mut Harness) -> Result<()> {
     // (round, schedule), so every fault decision below is identical for
     // any `--threads N`.
     let fc = h.cfg.net.faults.clone();
+    // Whether lanes record trace events (File mode). Constant for the
+    // run, captured before the fan-out borrows the harness.
+    let lane_trace = h.tracer.as_ref().is_some_and(|t| t.lane_events_enabled());
 
     for round in 1..=h.cfg.train.rounds {
         let round_u = round as u64;
@@ -854,7 +946,7 @@ fn run_ssfl(rt: &Runtime, h: &mut Harness) -> Result<()> {
         }
 
         // ---- Fan out: every roster branch on a worker thread ----
-        let ledgers: Vec<RoundLedger> = {
+        let mut ledgers: Vec<RoundLedger> = {
             let Harness {
                 clients,
                 pool,
@@ -886,6 +978,10 @@ fn run_ssfl(rt: &Runtime, h: &mut Harness) -> Result<()> {
                     continue;
                 }
                 let s = slot_it.next().expect("peeked");
+                let mut lane_net = net.lane(ci, round_u);
+                if lane_trace {
+                    lane_net.enable_attempt_log();
+                }
                 lanes.push(SsflLane {
                     client,
                     profile: s.profile,
@@ -893,8 +989,8 @@ fn run_ssfl(rt: &Runtime, h: &mut Harness) -> Result<()> {
                     clf: clf_it.next().expect("lane buffers pooled to slots"),
                     srv_time: s.srv_time,
                     steps: s.steps,
-                    net: net.lane(ci, round_u),
-                    ledger: RoundLedger::new(ci),
+                    net: lane_net,
+                    ledger: RoundLedger::traced(ci, lane_trace),
                 });
             }
             debug_assert!(slot_it.peek().is_none(), "every slot found its state");
@@ -909,7 +1005,9 @@ fn run_ssfl(rt: &Runtime, h: &mut Harness) -> Result<()> {
                     // Phase 1 (always; also the entire fallback step).
                     let local = lane.client.phase1(rt, classes, &batch)?;
                     let t1 = cost.time_s(cost.client_local_flops(depth), lane.profile.flops);
+                    let p1_t0 = lane.ledger.branch_s;
                     lane.ledger.work(&lane.profile, t1);
+                    lane.ledger.trace.span(SpanKind::LocalUpdate, p1_t0, t1, 0, 0);
 
                     // Phase 2 attempt: smashed activations up, g_z down,
                     // both as wire frames — the link is charged with the
@@ -922,6 +1020,10 @@ fn run_ssfl(rt: &Runtime, h: &mut Harness) -> Result<()> {
                     let up_len = wire
                         .encode_to(MsgType::Smashed, &local.z, 0.0, &mut lane.net.scratch)
                         .len() as u64;
+                    lane.ledger
+                        .trace
+                        .span(SpanKind::Encode, lane.ledger.branch_s, 0.0, up_len, 0);
+                    let ex_t0 = lane.ledger.branch_s;
                     let ex = lane.net.exchange_framed(
                         Framed {
                             wire: up_len,
@@ -934,6 +1036,9 @@ fn run_ssfl(rt: &Runtime, h: &mut Harness) -> Result<()> {
                         srv_time,
                     );
                     lane.ledger.exchange(&lane.profile, ex.time_s(), srv_time);
+                    lane.ledger
+                        .trace
+                        .exchange_spans(ex_t0, &lane.net.attempts, up_len);
 
                     if ex.is_ok() {
                         // Lane-local server step against the round-start
@@ -950,8 +1055,14 @@ fn run_ssfl(rt: &Runtime, h: &mut Harness) -> Result<()> {
                             .is_err()
                         {
                             lane.net.faults.corruptions += 1;
+                            lane.ledger
+                                .trace
+                                .instant(InstantKind::Corruption, lane.ledger.branch_s);
                             lane.client.fallback_update(&local);
                             lane.ledger.fallback_steps += 1;
+                            lane.ledger
+                                .trace
+                                .span(SpanKind::Fallback, lane.ledger.branch_s, 0.0, 0, 0);
                             continue;
                         }
                         let out = rt.server_step(
@@ -996,10 +1107,23 @@ fn run_ssfl(rt: &Runtime, h: &mut Harness) -> Result<()> {
                             // frame was unusable: the client falls back
                             // to its local-only update for this step.
                             lane.net.faults.corruptions += 1;
+                            lane.ledger
+                                .trace
+                                .instant(InstantKind::Corruption, lane.ledger.branch_s);
                             lane.client.fallback_update(&local);
                             lane.ledger.fallback_steps += 1;
+                            lane.ledger
+                                .trace
+                                .span(SpanKind::Fallback, lane.ledger.branch_s, 0.0, 0, 0);
                             continue;
                         }
+                        lane.ledger.trace.span(
+                            SpanKind::Decode,
+                            lane.ledger.branch_s,
+                            0.0,
+                            gz_frame_len,
+                            0,
+                        );
 
                         // Phase 2 client backprop + Phase 3 fusion.
                         lane.client.phase2_phase3(
@@ -1016,11 +1140,16 @@ fn run_ssfl(rt: &Runtime, h: &mut Harness) -> Result<()> {
                             cost.client_bwd_flops(depth) + cost.tpgf_fuse_flops(depth),
                             lane.profile.flops,
                         );
+                        let f_t0 = lane.ledger.branch_s;
                         lane.ledger.work(&lane.profile, t23);
+                        lane.ledger.trace.span(SpanKind::Fusion, f_t0, t23, 0, 0);
                     } else {
                         // Fault-tolerant fallback (Alg. 3): local-only update.
                         lane.client.fallback_update(&local);
                         lane.ledger.fallback_steps += 1;
+                        lane.ledger
+                            .trace
+                            .span(SpanKind::Fallback, lane.ledger.branch_s, 0.0, 0, 0);
                     }
                 }
                 Ok(())
@@ -1035,8 +1164,15 @@ fn run_ssfl(rt: &Runtime, h: &mut Harness) -> Result<()> {
                     net.absorb_lane(&lane.net);
                     let mut ledger = lane.ledger;
                     ledger.faults.add(&lane.net.faults);
+                    // Telemetry-only byte attribution: this lane's wire
+                    // traffic (the authoritative accounting already
+                    // flowed through `absorb_lane` above).
+                    ledger.wire_bytes = lane.net.traffic.total_bytes();
                     if fc.crash_at(round_u, ledger.client).is_some() {
                         ledger.faults.crashes += 1;
+                        ledger
+                            .trace
+                            .instant(InstantKind::Crash, ledger.branch_s);
                     }
                     ledger
                 })
@@ -1044,7 +1180,7 @@ fn run_ssfl(rt: &Runtime, h: &mut Harness) -> Result<()> {
         };
 
         let (round_dt, busy, fallback_steps, server_steps, mut faults) =
-            h.absorb_ledgers(&ledgers);
+            h.absorb_ledgers(&mut ledgers);
         faults.add(&resync_faults);
 
         // ---- Merge lane server deltas into the shared super-network ----
@@ -1126,6 +1262,8 @@ fn run_ssfl(rt: &Runtime, h: &mut Harness) -> Result<()> {
         // ship nothing this round (a crasher's next contribution comes
         // after the charged resync on rejoin).
         let mut uploads: Vec<(usize, usize, Vec<f32>, f64)> = Vec::with_capacity(slots.len());
+        let agg_t0 = h.clock.now();
+        let mut agg_bytes = 0u64;
         for s in &slots {
             let ci = s.ci;
             if fc.crash_at(round_u, ci).is_some() {
@@ -1152,6 +1290,7 @@ fn run_ssfl(rt: &Runtime, h: &mut Harness) -> Result<()> {
             );
             let pos = roster.binary_search(&ci).expect("slot drawn from roster");
             agg_entries[pos].1 = t;
+            agg_bytes += frame_len;
             let dec = h.wire.decode(&bar_scratch.frame)?;
             uploads.push((ci, prefix_elems, dec.data, dec.aux));
         }
@@ -1177,6 +1316,11 @@ fn run_ssfl(rt: &Runtime, h: &mut Harness) -> Result<()> {
             h.meter.server_busy(agg_compute);
             h.clock.advance(agg_compute);
         }
+        let n_uploads = uploads.len() as u64;
+        let agg_dur = h.clock.now() - agg_t0;
+        if let Some(tr) = h.tracer.as_mut() {
+            tr.track_span(TRACK_SERVER, SpanKind::Aggregate, agg_t0, agg_dur, agg_bytes, n_uploads);
+        }
 
         // ---- Broadcast the refreshed prefixes ----
         // One Broadcast frame per client; the client syncs from the
@@ -1188,6 +1332,9 @@ fn run_ssfl(rt: &Runtime, h: &mut Harness) -> Result<()> {
         let mut bc_entries: Vec<(usize, f64)> = roster.iter().map(|&id| (id, 0.0)).collect();
         // (prefix elems, frame bytes, decoded tensor) per distinct depth.
         let mut bc_cache: Vec<(usize, u64, Vec<f32>)> = Vec::new();
+        let bc_t0 = h.clock.now();
+        let mut bc_bytes = 0u64;
+        let mut bc_count = 0u64;
         for s in &slots {
             let ci = s.ci;
             // Dead, sitting-out and mid-round-crashed clients receive no
@@ -1224,9 +1371,15 @@ fn run_ssfl(rt: &Runtime, h: &mut Harness) -> Result<()> {
             );
             let pos = roster.binary_search(&ci).expect("slot drawn from roster");
             bc_entries[pos].1 = t;
+            bc_bytes += frame_bytes;
+            bc_count += 1;
             h.client_mut(ci).sync_from_global(&bc_cache[cache_slot].2);
         }
         h.charge_barrier_phase(&bc_entries);
+        let bc_dur = h.clock.now() - bc_t0;
+        if let Some(tr) = h.tracer.as_mut() {
+            tr.track_span(TRACK_SERVER, SpanKind::Broadcast, bc_t0, bc_dur, bc_bytes, bc_count);
+        }
 
         // ---- Evaluate + record ----
         let acc = h.eval_global(rt)?;

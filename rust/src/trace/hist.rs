@@ -1,0 +1,318 @@
+//! Zero-alloc fixed-log-bucket histograms for per-client telemetry.
+//!
+//! [`LogHist`] is an HDR-style log-linear histogram over non-negative
+//! `f64` samples: 64 octaves (binary exponents −32…31) × 4 linear
+//! sub-buckets per octave, plus a dedicated zero bucket — 257 fixed
+//! `u64` counters, no heap, no libm. Bucket boundaries are
+//! `2^e · (1 + m/4)` (exactly representable), so indexing is pure f64
+//! bit manipulation and the relative quantization error is ≤ 12.5%
+//! (half a sub-bucket at the midpoint representative).
+//!
+//! Merging is element-wise addition — associative and commutative — so
+//! per-round histograms fold into run-level ones in any grouping and
+//! the result is identical (pinned by a property test below).
+
+/// Zero bucket + 64 octaves × 4 sub-buckets.
+const BUCKETS: usize = 257;
+
+/// Fixed-size log-linear histogram (see module docs).
+#[derive(Clone, Debug)]
+pub struct LogHist {
+    counts: [u64; BUCKETS],
+    n: u64,
+}
+
+impl Default for LogHist {
+    fn default() -> Self {
+        LogHist {
+            counts: [0; BUCKETS],
+            n: 0,
+        }
+    }
+}
+
+/// Bucket index for a sample. Zero, negatives and NaN land in the zero
+/// bucket (telemetry values are non-negative by construction; a NaN
+/// must not poison the percentiles). Values below 2^−32 clamp into the
+/// first real bucket, values at or above 2^32 into the last.
+fn bucket_index(v: f64) -> usize {
+    if !(v > 0.0) {
+        return 0;
+    }
+    let bits = v.to_bits();
+    let e = ((bits >> 52) & 0x7ff) as i64 - 1023;
+    if e < -32 {
+        return 1;
+    }
+    if e > 31 {
+        return BUCKETS - 1;
+    }
+    let m = ((bits >> 50) & 0b11) as usize;
+    (1 + (e + 32) * 4) as usize + m
+}
+
+/// `[lo, hi)` boundaries of a bucket. Bucket 0 is the zero bucket.
+fn bucket_bounds(idx: usize) -> (f64, f64) {
+    if idx == 0 {
+        return (0.0, 0.0);
+    }
+    let q = idx - 1;
+    let e = (q / 4) as i32 - 32;
+    let m = (q % 4) as f64;
+    let step = f64::exp2(e as f64) * 0.25;
+    let lo = f64::exp2(e as f64) + m * step;
+    (lo, lo + step)
+}
+
+/// Representative value reported for a bucket: the arithmetic midpoint
+/// (so the worst-case relative error against any in-bucket sample is
+/// 12.5%). The zero bucket reports exactly 0.
+fn representative(idx: usize) -> f64 {
+    let (lo, hi) = bucket_bounds(idx);
+    (lo + hi) * 0.5
+}
+
+impl LogHist {
+    pub fn new() -> LogHist {
+        LogHist::default()
+    }
+
+    /// Record one sample. O(1), allocation-free.
+    pub fn record(&mut self, v: f64) {
+        self.counts[bucket_index(v)] += 1;
+        self.n += 1;
+    }
+
+    /// Number of recorded samples.
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    /// Fold `other` into `self` (element-wise add — associative, so
+    /// round→run folding order never matters).
+    pub fn merge(&mut self, other: &LogHist) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += *b;
+        }
+        self.n += other.n;
+    }
+
+    /// Reset to empty (round-boundary reuse; no allocation).
+    pub fn clear(&mut self) {
+        self.counts = [0; BUCKETS];
+        self.n = 0;
+    }
+
+    /// Nearest-rank percentile: the representative of the bucket holding
+    /// the `max(1, ⌈q·n⌉)`-th smallest sample. Empty histogram → 0.
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        let rank = ((q * self.n as f64).ceil() as u64).clamp(1, self.n);
+        let mut seen = 0u64;
+        for (idx, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return representative(idx);
+            }
+        }
+        representative(BUCKETS - 1)
+    }
+}
+
+/// The straggler-skew signal: p50/p95/p99 of per-client round time,
+/// wire bytes, and retry count across one round (or a whole run — the
+/// same shape lands in `RoundRecord` and `RunMetrics`).
+#[derive(Clone, Copy, Debug, PartialEq, Default)]
+pub struct StragglerStats {
+    pub time_p50: f64,
+    pub time_p95: f64,
+    pub time_p99: f64,
+    pub bytes_p50: f64,
+    pub bytes_p95: f64,
+    pub bytes_p99: f64,
+    pub retries_p50: f64,
+    pub retries_p95: f64,
+    pub retries_p99: f64,
+}
+
+impl StragglerStats {
+    pub fn from_hists(time: &LogHist, bytes: &LogHist, retries: &LogHist) -> StragglerStats {
+        StragglerStats {
+            time_p50: time.percentile(0.50),
+            time_p95: time.percentile(0.95),
+            time_p99: time.percentile(0.99),
+            bytes_p50: bytes.percentile(0.50),
+            bytes_p95: bytes.percentile(0.95),
+            bytes_p99: bytes.percentile(0.99),
+            retries_p50: retries.percentile(0.50),
+            retries_p95: retries.percentile(0.95),
+            retries_p99: retries.percentile(0.99),
+        }
+    }
+
+    /// CSV column names, in emission order (appended to the metrics
+    /// header only when telemetry ran — `--trace off` keeps the legacy
+    /// header byte-identical).
+    pub const CSV_COLUMNS: &str =
+        "time_p50,time_p95,time_p99,bytes_p50,bytes_p95,bytes_p99,\
+         retries_p50,retries_p95,retries_p99";
+
+    /// Values in [`Self::CSV_COLUMNS`] order.
+    pub fn csv_fields(&self) -> [f64; 9] {
+        [
+            self.time_p50,
+            self.time_p95,
+            self.time_p99,
+            self.bytes_p50,
+            self.bytes_p95,
+            self.bytes_p99,
+            self.retries_p50,
+            self.retries_p95,
+            self.retries_p99,
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn zero_and_pathological_samples_land_in_zero_bucket() {
+        assert_eq!(bucket_index(0.0), 0);
+        assert_eq!(bucket_index(-1.0), 0);
+        assert_eq!(bucket_index(f64::NAN), 0);
+        let mut h = LogHist::new();
+        h.record(0.0);
+        assert_eq!(h.percentile(0.5), 0.0);
+    }
+
+    #[test]
+    fn bucket_boundaries_are_exact() {
+        // Every bucket's low boundary must index into that bucket, and
+        // the high boundary into the next (half-open intervals).
+        forall(0xB0B5, 400, |rng: &mut Pcg32| {
+            let idx = 1 + rng.uniform_usize(BUCKETS - 2); // skip zero + top catch-all
+            let (lo, hi) = bucket_bounds(idx);
+            assert_eq!(bucket_index(lo), idx, "lo {lo} of bucket {idx}");
+            assert_eq!(bucket_index(hi), idx + 1, "hi {hi} of bucket {idx}");
+            // An interior point stays put.
+            let mid = lo + (hi - lo) * rng.uniform();
+            if mid < hi {
+                assert_eq!(bucket_index(mid), idx, "mid {mid} of bucket {idx}");
+            }
+        });
+    }
+
+    #[test]
+    fn representative_is_within_quantization_error() {
+        forall(0xC4FE, 400, |rng: &mut Pcg32| {
+            // Log-uniform samples across the whole representable range.
+            let e = rng.uniform() * 60.0 - 30.0;
+            let v = f64::exp2(e) * (1.0 + rng.uniform());
+            let h = {
+                let mut h = LogHist::new();
+                h.record(v);
+                h
+            };
+            let rep = h.percentile(0.5);
+            let rel = (rep - v).abs() / v;
+            assert!(rel <= 0.125 + 1e-12, "v={v} rep={rep} rel={rel}");
+        });
+    }
+
+    #[test]
+    fn merge_is_associative_and_matches_bulk_recording() {
+        forall(0xAB5, 60, |rng: &mut Pcg32| {
+            let sample = |rng: &mut Pcg32, n: usize| {
+                let mut h = LogHist::new();
+                let mut vals = Vec::new();
+                for _ in 0..n {
+                    let v = f64::exp2(rng.uniform() * 40.0 - 20.0);
+                    h.record(v);
+                    vals.push(v);
+                }
+                (h, vals)
+            };
+            let (a, va) = sample(rng, rng.uniform_usize(20));
+            let (b, vb) = sample(rng, rng.uniform_usize(20));
+            let (c, vc) = sample(rng, rng.uniform_usize(20));
+
+            // (a ⊕ b) ⊕ c == a ⊕ (b ⊕ c) == one hist of all samples.
+            let mut left = a.clone();
+            left.merge(&b);
+            left.merge(&c);
+            let mut bc = b.clone();
+            bc.merge(&c);
+            let mut right = a.clone();
+            right.merge(&bc);
+            let mut bulk = LogHist::new();
+            for v in va.iter().chain(&vb).chain(&vc) {
+                bulk.record(*v);
+            }
+            assert_eq!(left.counts, right.counts);
+            assert_eq!(left.counts, bulk.counts);
+            assert_eq!(left.n, bulk.n);
+            for q in [0.0, 0.5, 0.95, 0.99, 1.0] {
+                assert_eq!(left.percentile(q).to_bits(), right.percentile(q).to_bits());
+            }
+        });
+    }
+
+    /// Percentiles vs a sorted-vector nearest-rank oracle at awkward
+    /// sizes. The histogram may only differ by its ≤ 12.5% bucket
+    /// quantization — rank selection itself must match exactly.
+    #[test]
+    fn percentiles_match_sorted_vector_oracle_at_awkward_sizes() {
+        for n in [0usize, 1, 2, 33] {
+            forall(0x0DDB ^ n as u64, 40, |rng: &mut Pcg32| {
+                let mut vals = Vec::with_capacity(n);
+                let mut h = LogHist::new();
+                for _ in 0..n {
+                    let v = f64::exp2(rng.uniform() * 24.0 - 12.0);
+                    vals.push(v);
+                    h.record(v);
+                }
+                vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                for q in [0.5, 0.95, 0.99] {
+                    let got = h.percentile(q);
+                    if n == 0 {
+                        assert_eq!(got, 0.0);
+                        continue;
+                    }
+                    let rank = ((q * n as f64).ceil() as usize).clamp(1, n);
+                    let oracle = vals[rank - 1];
+                    let rel = (got - oracle).abs() / oracle;
+                    assert!(
+                        rel <= 0.125 + 1e-12,
+                        "n={n} q={q}: oracle {oracle} vs hist {got} (rel {rel})"
+                    );
+                }
+            });
+        }
+    }
+
+    #[test]
+    fn straggler_stats_fold_three_signals() {
+        let mut t = LogHist::new();
+        let mut b = LogHist::new();
+        let mut r = LogHist::new();
+        for i in 1..=100u32 {
+            t.record(i as f64);
+            b.record(1000.0 * i as f64);
+            r.record(if i > 90 { 2.0 } else { 0.0 });
+        }
+        let s = StragglerStats::from_hists(&t, &b, &r);
+        assert!((s.time_p50 - 50.0).abs() / 50.0 <= 0.125);
+        assert!((s.time_p99 - 99.0).abs() / 99.0 <= 0.125);
+        assert!(s.time_p95 <= s.time_p99);
+        assert!((s.bytes_p50 - 50_000.0).abs() / 50_000.0 <= 0.125);
+        assert_eq!(s.retries_p50, 0.0);
+        assert!(s.retries_p99 > 1.0);
+        assert_eq!(s.csv_fields().len(), 9);
+    }
+}

@@ -1,0 +1,784 @@
+//! Deterministic span tracing + per-client telemetry.
+//!
+//! A zero-dependency structured tracing subsystem threaded through the
+//! whole round path (SSFL/SFL/DFL), answering the attribution questions
+//! the fleet-level aggregates cannot: which clients straggle, how much
+//! of a hostile round is retry/backoff vs compute, what the split-point
+//! allocator should react to.
+//!
+//! ## Clocks and determinism
+//!
+//! Every event carries **deterministic `SimClock` sim-time only**. Host
+//! wall-time and backend profiling counters (`RuntimeStats`) are
+//! *segregated by construction*: they ride in the caller-supplied
+//! metadata block of the exported file and never into `traceEvents`, so
+//! a traced run's event stream is byte-identical across `--threads` /
+//! `--kernel-threads` and `--trace off` runs stay bit-identical to the
+//! pre-trace goldens (no golden re-bless).
+//!
+//! ## Fork discipline
+//!
+//! Each client lane records into its own [`TraceBuf`] (riding the
+//! `RoundLedger` the same way `NetLane` forks do); the harness drains
+//! the buffers **in client-id order at the round barrier**, so the
+//! merged event stream is independent of worker-thread interleaving.
+//! `--trace off` (the default) makes every record call a
+//! branch-on-bool no-op on the hot path.
+//!
+//! ## Outputs
+//!
+//! * Chrome trace-event JSON (`--trace out.trace.json`): one track per
+//!   client lane plus `server` and `barrier` tracks; loadable in
+//!   Perfetto / `chrome://tracing`.
+//! * Per-client round summaries folded into [`hist::LogHist`]
+//!   fixed-log-bucket histograms; their p50/p95/p99 (round time, wire
+//!   bytes, retries) land as straggler columns in
+//!   `RoundRecord`/`RunMetrics` (`--trace summary` enables this without
+//!   writing an event file).
+
+pub mod hist;
+
+pub use hist::{LogHist, StragglerStats};
+
+use std::path::PathBuf;
+
+use crate::util::json::JsonValue;
+use crate::{Error, Result};
+
+/// Tracing mode (`--trace off|summary|<path>`, `trace` config key).
+#[derive(Clone, Debug, PartialEq, Eq, Default)]
+pub enum TraceSpec {
+    /// No tracing (the default): zero hot-path work, output shape
+    /// byte-identical to the pre-trace simulator.
+    #[default]
+    Off,
+    /// Per-client telemetry (straggler histograms + percentile columns)
+    /// without retaining the event stream.
+    Summary,
+    /// Full event recording, exported as Chrome trace-event JSON to the
+    /// given path (plus everything `Summary` produces).
+    File(PathBuf),
+}
+
+impl TraceSpec {
+    pub fn parse(s: &str) -> Result<TraceSpec> {
+        let t = s.trim();
+        if t.is_empty() {
+            return Err(Error::Config(
+                "--trace expects off|summary|<path.json>".into(),
+            ));
+        }
+        match t.to_ascii_lowercase().as_str() {
+            "off" => Ok(TraceSpec::Off),
+            "summary" => Ok(TraceSpec::Summary),
+            _ => Ok(TraceSpec::File(PathBuf::from(t))),
+        }
+    }
+
+    /// Canonical string form: `TraceSpec::parse(x.label()) == x`.
+    pub fn label(&self) -> String {
+        match self {
+            TraceSpec::Off => "off".into(),
+            TraceSpec::Summary => "summary".into(),
+            TraceSpec::File(p) => p.display().to_string(),
+        }
+    }
+
+    /// Whether any telemetry is recorded at all.
+    pub fn enabled(&self) -> bool {
+        *self != TraceSpec::Off
+    }
+
+    /// Whether the full event stream is retained for export.
+    pub fn keeps_events(&self) -> bool {
+        matches!(self, TraceSpec::File(_))
+    }
+}
+
+/// Span categories. Names are the Chrome-trace event names.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpanKind {
+    /// TPGF Phase 1 (or the baselines' client forward): the client-side
+    /// local update producing smashed activations + local gradients.
+    LocalUpdate,
+    /// Server-side deep-suffix compute, attributed inside the exchange
+    /// window of the client that requested it.
+    ServerCompute,
+    /// TPGF Phase 3 gradient fusion + weight update (baselines: the
+    /// client backward pass).
+    Fusion,
+    /// Alg. 3 local-only fallback step after a failed exchange.
+    Fallback,
+    /// Wire-frame encode (bytes attr = encoded frame length).
+    Encode,
+    /// Wire-frame decode.
+    Decode,
+    /// One full faulted exchange including every retry and backoff.
+    Exchange,
+    /// A single attempt within an exchange (aux = 1-based attempt no).
+    Attempt,
+    /// Retry backoff sleep between attempts.
+    Backoff,
+    /// Crash-rejoin resync download at the round barrier.
+    Resync,
+    /// Aggregation uploads + merge at the barrier (server track).
+    Aggregate,
+    /// Global-model broadcast (server track).
+    Broadcast,
+    /// Round evaluation (server track).
+    Eval,
+    /// Straggler wait at the round barrier (barrier track).
+    BarrierWait,
+}
+
+impl SpanKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::LocalUpdate => "local_update",
+            SpanKind::ServerCompute => "server_compute",
+            SpanKind::Fusion => "fusion",
+            SpanKind::Fallback => "fallback",
+            SpanKind::Encode => "encode",
+            SpanKind::Decode => "decode",
+            SpanKind::Exchange => "exchange",
+            SpanKind::Attempt => "attempt",
+            SpanKind::Backoff => "backoff",
+            SpanKind::Resync => "resync",
+            SpanKind::Aggregate => "aggregate",
+            SpanKind::Broadcast => "broadcast",
+            SpanKind::Eval => "eval",
+            SpanKind::BarrierWait => "barrier_wait",
+        }
+    }
+
+    /// Wire-layer spans get the run's codec label as an event attr.
+    fn is_wire(self) -> bool {
+        matches!(
+            self,
+            SpanKind::Encode | SpanKind::Decode | SpanKind::Exchange | SpanKind::Attempt
+        )
+    }
+}
+
+/// Fault instants — one per ledger fault class, so every counted fault
+/// is visible on the timeline of the client it hit.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InstantKind {
+    Timeout,
+    Drop,
+    Corruption,
+    Crash,
+}
+
+impl InstantKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            InstantKind::Timeout => "timeout",
+            InstantKind::Drop => "drop",
+            InstantKind::Corruption => "corruption",
+            InstantKind::Crash => "crash",
+        }
+    }
+}
+
+/// One recorded event. Times are sim-seconds; lane-local buffers store
+/// branch-relative times which the harness offsets to absolute sim time
+/// when draining at the barrier.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum TraceEvent {
+    Span {
+        kind: SpanKind,
+        t0: f64,
+        dur: f64,
+        /// Wire bytes attributed to the span (0 = no byte attr).
+        bytes: u64,
+        /// Kind-specific attr (attempt number, participant count, …).
+        aux: u64,
+    },
+    Instant { kind: InstantKind, t: f64 },
+}
+
+impl TraceEvent {
+    /// Start time (for ordering / nesting checks).
+    pub fn t0(&self) -> f64 {
+        match self {
+            TraceEvent::Span { t0, .. } => *t0,
+            TraceEvent::Instant { t, .. } => *t,
+        }
+    }
+
+    fn shifted(self, dt: f64) -> TraceEvent {
+        match self {
+            TraceEvent::Span {
+                kind,
+                t0,
+                dur,
+                bytes,
+                aux,
+            } => TraceEvent::Span {
+                kind,
+                t0: t0 + dt,
+                dur,
+                bytes,
+                aux,
+            },
+            TraceEvent::Instant { kind, t } => TraceEvent::Instant { kind, t: t + dt },
+        }
+    }
+}
+
+/// Per-attempt record of one faulted exchange, written by
+/// `network::exchange_impl` into the lane's `NetLane` when tracing is
+/// on, and replayed into spans by the call site (which owns the
+/// sim-time cursor). Keeping the record here — not in `network` —
+/// keeps the dependency direction `network → trace`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AttemptRec {
+    /// Backoff charged before this attempt (0 for the first).
+    pub backoff_s: f64,
+    /// Sim-time this attempt consumed (timeout window on failure;
+    /// up + server + down on success).
+    pub cost_s: f64,
+    /// Uplink transfer time (success only; 0 otherwise).
+    pub up_s: f64,
+    /// Server compute inside the exchange window (success only).
+    pub server_s: f64,
+    pub outcome: AttemptOutcome,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AttemptOutcome {
+    Ok,
+    /// Server unreachable or response past the timeout window.
+    Timeout,
+    /// Transient link drop (GE bad state or `drop_prob`).
+    Drop,
+}
+
+/// Hard cap on events one lane can record in one round — a backstop
+/// against a pathological schedule ballooning memory, not a limit any
+/// real round approaches (a traced round records O(steps) events).
+const MAX_LANE_EVENTS: usize = 1 << 16;
+
+/// Lane-local event buffer. Rides the `RoundLedger` through the fork /
+/// absorb-in-client-id-order discipline, so traced runs stay bitwise
+/// thread-invariant. When disabled every call is a branch-and-return.
+#[derive(Clone, Debug, Default)]
+pub struct TraceBuf {
+    enabled: bool,
+    events: Vec<TraceEvent>,
+    dropped: u64,
+}
+
+impl TraceBuf {
+    pub fn new(enabled: bool) -> TraceBuf {
+        TraceBuf {
+            enabled,
+            events: Vec::new(),
+            dropped: 0,
+        }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    fn push(&mut self, ev: TraceEvent) {
+        if self.events.len() >= MAX_LANE_EVENTS {
+            self.dropped += 1;
+            return;
+        }
+        self.events.push(ev);
+    }
+
+    /// Record a span at branch-relative `t0`.
+    pub fn span(&mut self, kind: SpanKind, t0: f64, dur: f64, bytes: u64, aux: u64) {
+        if self.enabled {
+            self.push(TraceEvent::Span {
+                kind,
+                t0,
+                dur,
+                bytes,
+                aux,
+            });
+        }
+    }
+
+    /// Record a fault instant at branch-relative `t`.
+    pub fn instant(&mut self, kind: InstantKind, t: f64) {
+        if self.enabled {
+            self.push(TraceEvent::Instant { kind, t });
+        }
+    }
+
+    /// Replay one exchange's attempt log into spans + fault instants:
+    /// an `exchange` parent span covering every retry, per-attempt
+    /// `attempt` spans (server compute nested inside the successful
+    /// one), `backoff` spans between attempts, and a timeout/drop
+    /// instant at the point each failed attempt gave up.
+    pub fn exchange_spans(&mut self, t0: f64, attempts: &[AttemptRec], bytes: u64) {
+        if !self.enabled || attempts.is_empty() {
+            return;
+        }
+        let total: f64 = attempts.iter().map(|a| a.backoff_s + a.cost_s).sum();
+        self.span(SpanKind::Exchange, t0, total, bytes, attempts.len() as u64);
+        let mut t = t0;
+        for (i, a) in attempts.iter().enumerate() {
+            if a.backoff_s > 0.0 {
+                self.span(SpanKind::Backoff, t, a.backoff_s, 0, i as u64);
+                t += a.backoff_s;
+            }
+            self.span(SpanKind::Attempt, t, a.cost_s, 0, i as u64 + 1);
+            match a.outcome {
+                AttemptOutcome::Ok => {
+                    if a.server_s > 0.0 {
+                        self.span(SpanKind::ServerCompute, t + a.up_s, a.server_s, 0, 0);
+                    }
+                }
+                AttemptOutcome::Timeout => self.instant(InstantKind::Timeout, t + a.cost_s),
+                AttemptOutcome::Drop => self.instant(InstantKind::Drop, t + a.cost_s),
+            }
+            t += a.cost_s;
+        }
+    }
+}
+
+/// Fixed Chrome-trace track ids.
+pub const TRACK_SERVER: u32 = 0;
+pub const TRACK_BARRIER: u32 = 1;
+
+/// Track id for a client lane.
+pub fn client_track(client: usize) -> u32 {
+    2 + client as u32
+}
+
+/// The harness-owned recorder: absorbs lane buffers at the barrier,
+/// folds per-client round summaries into histograms, and (in `File`
+/// mode) accumulates the global event stream for export.
+#[derive(Debug)]
+pub struct Tracer {
+    keep_events: bool,
+    events: Vec<(u32, TraceEvent)>,
+    dropped: u64,
+    round_time: LogHist,
+    round_bytes: LogHist,
+    round_retries: LogHist,
+    run_time: LogHist,
+    run_bytes: LogHist,
+    run_retries: LogHist,
+}
+
+impl Tracer {
+    /// `None` when tracing is off — the round loops then skip every
+    /// trace call via `Option` checks that cost one branch.
+    pub fn from_spec(spec: &TraceSpec) -> Option<Tracer> {
+        if !spec.enabled() {
+            return None;
+        }
+        Some(Tracer {
+            keep_events: spec.keeps_events(),
+            events: Vec::new(),
+            dropped: 0,
+            round_time: LogHist::new(),
+            round_bytes: LogHist::new(),
+            round_retries: LogHist::new(),
+            run_time: LogHist::new(),
+            run_bytes: LogHist::new(),
+            run_retries: LogHist::new(),
+        })
+    }
+
+    /// Whether lane `TraceBuf`s should record events (File mode). In
+    /// Summary mode lanes skip event recording entirely.
+    pub fn lane_events_enabled(&self) -> bool {
+        self.keep_events
+    }
+
+    /// Absorb one lane's buffer at the barrier. `round_t0` is the
+    /// absolute sim time the branch started; lane events are
+    /// branch-relative. MUST be called in ascending client-id order —
+    /// the caller's existing absorb loop already is.
+    pub fn drain_lane(&mut self, client: usize, round_t0: f64, buf: &mut TraceBuf) {
+        self.dropped += buf.dropped;
+        buf.dropped = 0;
+        if !self.keep_events {
+            buf.events.clear();
+            return;
+        }
+        let track = client_track(client);
+        for ev in buf.events.drain(..) {
+            self.events.push((track, ev.shifted(round_t0)));
+        }
+    }
+
+    /// Record a span on the server/barrier track at absolute sim time.
+    pub fn track_span(&mut self, track: u32, kind: SpanKind, t0: f64, dur: f64, bytes: u64, aux: u64) {
+        if self.keep_events {
+            self.events.push((
+                track,
+                TraceEvent::Span {
+                    kind,
+                    t0,
+                    dur,
+                    bytes,
+                    aux,
+                },
+            ));
+        }
+    }
+
+    /// Record a fault instant on an arbitrary track at absolute sim time.
+    pub fn track_instant(&mut self, track: u32, kind: InstantKind, t: f64) {
+        if self.keep_events {
+            self.events.push((track, TraceEvent::Instant { kind, t }));
+        }
+    }
+
+    /// Fold one client's round summary into the straggler histograms.
+    pub fn fold_client(&mut self, time_s: f64, wire_bytes: u64, retries: u64) {
+        self.round_time.record(time_s);
+        self.round_bytes.record(wire_bytes as f64);
+        self.round_retries.record(retries as f64);
+    }
+
+    /// Close the round: emit its straggler percentiles, merge the round
+    /// histograms into the run-level ones, and reset for the next round.
+    pub fn finish_round(&mut self) -> StragglerStats {
+        let stats =
+            StragglerStats::from_hists(&self.round_time, &self.round_bytes, &self.round_retries);
+        self.run_time.merge(&self.round_time);
+        self.run_bytes.merge(&self.round_bytes);
+        self.run_retries.merge(&self.round_retries);
+        self.round_time.clear();
+        self.round_bytes.clear();
+        self.round_retries.clear();
+        stats
+    }
+
+    /// Run-level straggler percentiles (merged across all rounds).
+    pub fn run_straggler(&self) -> StragglerStats {
+        StragglerStats::from_hists(&self.run_time, &self.run_bytes, &self.run_retries)
+    }
+
+    /// Finish the run: hand the accumulated event stream to the report.
+    pub fn into_report(self) -> TraceReport {
+        TraceReport {
+            events: self.events,
+            dropped: self.dropped,
+        }
+    }
+}
+
+/// The exported event stream of one run, returned on
+/// `RunResult::trace` so tests can verify determinism and nesting
+/// without any file I/O.
+#[derive(Clone, Debug, Default)]
+pub struct TraceReport {
+    events: Vec<(u32, TraceEvent)>,
+    dropped: u64,
+}
+
+impl TraceReport {
+    pub fn events(&self) -> &[(u32, TraceEvent)] {
+        &self.events
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Human label for a track id.
+    pub fn track_label(track: u32) -> String {
+        match track {
+            TRACK_SERVER => "server".into(),
+            TRACK_BARRIER => "barrier".into(),
+            c => format!("client {}", c - 2),
+        }
+    }
+
+    /// Serialize as Chrome trace-event JSON (the `chrome://tracing` /
+    /// Perfetto format): `ph:"X"` complete events for spans, `ph:"i"`
+    /// thread-scoped instants for faults, `ph:"M"` thread_name metadata
+    /// for every track that appears. Timestamps are sim-time
+    /// microseconds — **deterministic by construction**. Host-side
+    /// context (wall time, `RuntimeStats`) belongs in `metadata`, which
+    /// the caller controls; passing the same metadata yields
+    /// byte-identical output for any `--threads`/`--kernel-threads`.
+    pub fn to_chrome_json(&self, codec: &str, metadata: &JsonValue) -> String {
+        let num = JsonValue::Number;
+        let st = |s: &str| JsonValue::String(s.to_string());
+        let mut root = JsonValue::object();
+        root.set("displayTimeUnit", st("ms"));
+        root.set("metadata", metadata.clone());
+        if self.dropped > 0 {
+            root.set("dropped_events", num(self.dropped as f64));
+        }
+        let mut evs = Vec::new();
+
+        // One thread_name metadata event per track, in track order.
+        let mut tracks: Vec<u32> = self.events.iter().map(|(t, _)| *t).collect();
+        tracks.sort_unstable();
+        tracks.dedup();
+        for &t in &tracks {
+            let mut m = JsonValue::object();
+            m.set("name", st("thread_name"));
+            m.set("ph", st("M"));
+            m.set("pid", num(0.0));
+            m.set("tid", num(t as f64));
+            let mut args = JsonValue::object();
+            args.set("name", JsonValue::String(Self::track_label(t)));
+            m.set("args", args);
+            evs.push(m);
+        }
+
+        for (track, ev) in &self.events {
+            let mut o = JsonValue::object();
+            match ev {
+                TraceEvent::Span {
+                    kind,
+                    t0,
+                    dur,
+                    bytes,
+                    aux,
+                } => {
+                    o.set("name", st(kind.name()));
+                    o.set("ph", st("X"));
+                    o.set("pid", num(0.0));
+                    o.set("tid", num(*track as f64));
+                    o.set("ts", num(t0 * 1e6));
+                    o.set("dur", num(dur * 1e6));
+                    let mut args = JsonValue::object();
+                    if *bytes > 0 {
+                        args.set("bytes", num(*bytes as f64));
+                    }
+                    if *aux > 0 {
+                        args.set("n", num(*aux as f64));
+                    }
+                    if kind.is_wire() {
+                        args.set("codec", st(codec));
+                    }
+                    if args.entries().map(|e| !e.is_empty()).unwrap_or(false) {
+                        o.set("args", args);
+                    }
+                }
+                TraceEvent::Instant { kind, t } => {
+                    o.set("name", st(kind.name()));
+                    o.set("ph", st("i"));
+                    o.set("s", st("t"));
+                    o.set("pid", num(0.0));
+                    o.set("tid", num(*track as f64));
+                    o.set("ts", num(t * 1e6));
+                }
+            }
+            evs.push(o);
+        }
+        root.set("traceEvents", JsonValue::Array(evs));
+        root.to_string_pretty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_parses_and_roundtrips() {
+        assert_eq!(TraceSpec::parse("off").unwrap(), TraceSpec::Off);
+        assert_eq!(TraceSpec::parse("OFF").unwrap(), TraceSpec::Off);
+        assert_eq!(TraceSpec::parse("summary").unwrap(), TraceSpec::Summary);
+        assert_eq!(
+            TraceSpec::parse("out.trace.json").unwrap(),
+            TraceSpec::File(PathBuf::from("out.trace.json"))
+        );
+        assert!(TraceSpec::parse("  ").is_err());
+        for sp in [
+            TraceSpec::Off,
+            TraceSpec::Summary,
+            TraceSpec::File(PathBuf::from("/tmp/t.json")),
+        ] {
+            assert_eq!(TraceSpec::parse(&sp.label()).unwrap(), sp);
+        }
+        assert!(!TraceSpec::Off.enabled());
+        assert!(TraceSpec::Summary.enabled());
+        assert!(!TraceSpec::Summary.keeps_events());
+        assert!(TraceSpec::File(PathBuf::from("x")).keeps_events());
+    }
+
+    #[test]
+    fn disabled_buf_records_nothing() {
+        let mut buf = TraceBuf::new(false);
+        buf.span(SpanKind::LocalUpdate, 0.0, 1.0, 10, 0);
+        buf.instant(InstantKind::Crash, 0.5);
+        buf.exchange_spans(
+            0.0,
+            &[AttemptRec {
+                backoff_s: 0.0,
+                cost_s: 1.0,
+                up_s: 0.2,
+                server_s: 0.5,
+                outcome: AttemptOutcome::Ok,
+            }],
+            100,
+        );
+        assert!(buf.events.is_empty());
+    }
+
+    #[test]
+    fn exchange_replay_builds_nested_retry_timeline() {
+        let mut buf = TraceBuf::new(true);
+        let attempts = [
+            AttemptRec {
+                backoff_s: 0.0,
+                cost_s: 5.0,
+                up_s: 0.0,
+                server_s: 0.0,
+                outcome: AttemptOutcome::Timeout,
+            },
+            AttemptRec {
+                backoff_s: 0.1,
+                cost_s: 5.0,
+                up_s: 0.0,
+                server_s: 0.0,
+                outcome: AttemptOutcome::Drop,
+            },
+            AttemptRec {
+                backoff_s: 0.2,
+                cost_s: 1.0,
+                up_s: 0.25,
+                server_s: 0.5,
+                outcome: AttemptOutcome::Ok,
+            },
+        ];
+        buf.exchange_spans(2.0, &attempts, 4096);
+        // exchange + 3 attempts + 2 backoffs + server_compute + 2 instants.
+        assert_eq!(buf.events.len(), 9);
+        match buf.events[0] {
+            TraceEvent::Span {
+                kind: SpanKind::Exchange,
+                t0,
+                dur,
+                bytes,
+                aux,
+            } => {
+                assert_eq!(t0, 2.0);
+                assert!((dur - 11.3).abs() < 1e-12);
+                assert_eq!(bytes, 4096);
+                assert_eq!(aux, 3);
+            }
+            ref other => panic!("expected exchange parent, got {other:?}"),
+        }
+        // The successful attempt's server compute nests inside it.
+        let server = buf
+            .events
+            .iter()
+            .find_map(|e| match e {
+                TraceEvent::Span {
+                    kind: SpanKind::ServerCompute,
+                    t0,
+                    dur,
+                    ..
+                } => Some((*t0, *dur)),
+                _ => None,
+            })
+            .unwrap();
+        assert!((server.0 - (2.0 + 5.0 + 0.1 + 5.0 + 0.2 + 0.25)).abs() < 1e-12);
+        assert_eq!(server.1, 0.5);
+        // Fault instants: one timeout, one drop.
+        let instants: Vec<_> = buf
+            .events
+            .iter()
+            .filter_map(|e| match e {
+                TraceEvent::Instant { kind, .. } => Some(*kind),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(instants, vec![InstantKind::Timeout, InstantKind::Drop]);
+    }
+
+    #[test]
+    fn tracer_drains_lanes_with_round_offset_and_summary_mode_drops_events() {
+        let mut tr = Tracer::from_spec(&TraceSpec::File(PathBuf::from("x"))).unwrap();
+        let mut buf = TraceBuf::new(tr.lane_events_enabled());
+        buf.span(SpanKind::LocalUpdate, 1.0, 2.0, 0, 0);
+        tr.drain_lane(3, 100.0, &mut buf);
+        let rep = tr.into_report();
+        assert_eq!(rep.events().len(), 1);
+        let (track, ev) = rep.events()[0];
+        assert_eq!(track, client_track(3));
+        assert_eq!(ev.t0(), 101.0);
+
+        let mut tr = Tracer::from_spec(&TraceSpec::Summary).unwrap();
+        assert!(!tr.lane_events_enabled());
+        let mut buf = TraceBuf::new(true); // even a recording buf is discarded
+        buf.span(SpanKind::LocalUpdate, 1.0, 2.0, 0, 0);
+        tr.drain_lane(0, 0.0, &mut buf);
+        assert!(tr.into_report().events().is_empty());
+    }
+
+    #[test]
+    fn chrome_export_is_deterministic_and_parses() {
+        let build = || {
+            let mut tr = Tracer::from_spec(&TraceSpec::File(PathBuf::from("x"))).unwrap();
+            let mut buf = TraceBuf::new(true);
+            buf.span(SpanKind::Encode, 0.0, 0.0, 128, 0);
+            buf.exchange_spans(
+                0.0,
+                &[AttemptRec {
+                    backoff_s: 0.0,
+                    cost_s: 0.5,
+                    up_s: 0.1,
+                    server_s: 0.3,
+                    outcome: AttemptOutcome::Ok,
+                }],
+                128,
+            );
+            buf.instant(InstantKind::Corruption, 0.6);
+            tr.drain_lane(0, 10.0, &mut buf);
+            tr.track_span(TRACK_SERVER, SpanKind::Broadcast, 11.0, 0.25, 2048, 4);
+            tr.into_report().to_chrome_json("fp32", &JsonValue::object())
+        };
+        let a = build();
+        let b = build();
+        assert_eq!(a, b, "chrome export must be byte-deterministic");
+        let parsed = crate::util::json::parse(&a).unwrap();
+        let evs = parsed.get("traceEvents").and_then(|v| v.as_array()).unwrap();
+        // 2 thread_name + 5 lane events + 1 server span.
+        assert_eq!(evs.len(), 8);
+        // Wire spans carry the codec attr.
+        let enc = evs
+            .iter()
+            .find(|e| e.str_at("name").ok() == Some("encode"))
+            .unwrap();
+        let args = enc.get("args").unwrap();
+        assert_eq!(args.str_at("codec").unwrap(), "fp32");
+        assert_eq!(args.f64_at("bytes").unwrap(), 128.0);
+        // Instants are thread-scoped.
+        let inst = evs
+            .iter()
+            .find(|e| e.str_at("name").ok() == Some("corruption"))
+            .unwrap();
+        assert_eq!(inst.str_at("ph").unwrap(), "i");
+        assert_eq!(inst.str_at("s").unwrap(), "t");
+    }
+
+    #[test]
+    fn straggler_fold_round_and_run_levels() {
+        let mut tr = Tracer::from_spec(&TraceSpec::Summary).unwrap();
+        for c in 0..10u64 {
+            tr.fold_client(1.0 + c as f64, 1000 * (c + 1), c / 8);
+        }
+        let round = tr.finish_round();
+        assert!(round.time_p99 >= round.time_p50);
+        assert!(round.bytes_p50 > 0.0);
+        // Second round with different samples; the run-level view must
+        // cover both rounds.
+        for _ in 0..10 {
+            tr.fold_client(100.0, 5, 0);
+        }
+        let round2 = tr.finish_round();
+        assert!(round2.time_p50 > round.time_p99);
+        let run = tr.run_straggler();
+        assert!(run.time_p50 >= round.time_p50);
+        assert!(run.time_p99 >= round2.time_p50 * 0.875);
+    }
+}

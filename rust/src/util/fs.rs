@@ -1,0 +1,118 @@
+//! Atomic artifact writes.
+//!
+//! Every machine-readable artifact the simulator emits (metrics CSV/JSON,
+//! `BENCH_*.json`, trace files) goes through [`atomic_write`]: the bytes
+//! land in a temp file *in the same directory* and are renamed into
+//! place, so a killed chaos/smoke run can never leave a truncated file at
+//! the destination — the reader either sees the old complete artifact or
+//! the new complete one. Same-directory matters: `rename(2)` is only
+//! atomic within one filesystem.
+
+use std::fs::File;
+use std::io::{self, Write};
+use std::path::{Path, PathBuf};
+
+/// Sibling temp path for `path`, unique per process so concurrent test
+/// binaries writing the same artifact never clobber each other's
+/// in-flight temp file.
+fn temp_sibling(path: &Path) -> PathBuf {
+    let mut name = path.file_name().unwrap_or_default().to_os_string();
+    name.push(format!(".tmp.{}", std::process::id()));
+    path.with_file_name(name)
+}
+
+/// Write `bytes` to `path` atomically (temp file + rename). On any
+/// failure the destination is untouched and the temp file is removed.
+pub fn atomic_write(path: &Path, bytes: &[u8]) -> io::Result<()> {
+    atomic_write_with(path, |f| f.write_all(bytes))
+}
+
+/// [`atomic_write`] with a caller-supplied producer, so large artifacts
+/// can stream into the temp file instead of buffering a `String`. The
+/// rename only happens if `produce` returns `Ok` — a mid-write failure
+/// (the regression this module exists for) leaves no partial file at
+/// `path`.
+pub fn atomic_write_with<F>(path: &Path, produce: F) -> io::Result<()>
+where
+    F: FnOnce(&mut File) -> io::Result<()>,
+{
+    let tmp = temp_sibling(path);
+    let mut f = File::create(&tmp)?;
+    match produce(&mut f).and_then(|()| f.flush()) {
+        Ok(()) => {
+            drop(f);
+            std::fs::rename(&tmp, path).inspect_err(|_| {
+                std::fs::remove_file(&tmp).ok();
+            })
+        }
+        Err(e) => {
+            drop(f);
+            std::fs::remove_file(&tmp).ok();
+            Err(e)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("supersfl_fs_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn atomic_write_lands_full_contents() {
+        let d = tdir("ok");
+        let p = d.join("out.json");
+        atomic_write(&p, b"{\"a\": 1}\n").unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), b"{\"a\": 1}\n");
+        // No temp debris left behind.
+        let leftovers: Vec<_> = std::fs::read_dir(&d)
+            .unwrap()
+            .filter(|e| e.as_ref().unwrap().file_name() != "out.json")
+            .collect();
+        assert!(leftovers.is_empty(), "temp file leaked: {leftovers:?}");
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn mid_write_failure_never_leaves_a_partial_destination() {
+        let d = tdir("fail");
+        let p = d.join("out.json");
+
+        // Fresh destination: a failure mid-produce must leave *nothing*.
+        let err = atomic_write_with(&p, |f| {
+            f.write_all(b"{\"truncat")?; // partial payload, then the crash
+            Err(io::Error::other("simulated mid-write failure"))
+        });
+        assert!(err.is_err());
+        assert!(!p.exists(), "partial file landed at the destination");
+
+        // Existing destination: a failed rewrite must leave the old
+        // complete artifact untouched.
+        atomic_write(&p, b"complete-v1").unwrap();
+        let err = atomic_write_with(&p, |f| {
+            f.write_all(b"half-of-")?;
+            Err(io::Error::other("simulated mid-write failure"))
+        });
+        assert!(err.is_err());
+        assert_eq!(std::fs::read(&p).unwrap(), b"complete-v1");
+
+        // And no temp debris in either case.
+        assert_eq!(std::fs::read_dir(&d).unwrap().count(), 1);
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn overwrite_replaces_atomically() {
+        let d = tdir("replace");
+        let p = d.join("out.csv");
+        atomic_write(&p, b"old").unwrap();
+        atomic_write(&p, b"new-and-longer").unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), b"new-and-longer");
+        std::fs::remove_dir_all(&d).ok();
+    }
+}

@@ -4,6 +4,7 @@
 //! these substrates are implemented here from scratch (DESIGN.md §4.5) and
 //! unit/property-tested like any other module.
 
+pub mod fs;
 pub mod json;
 pub mod math;
 pub mod prop;

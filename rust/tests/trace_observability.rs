@@ -1,0 +1,262 @@
+//! Observability integration tests: the deterministic span tracer
+//! driven end to end through the real training loops under the hostile
+//! fault schedule.
+//!
+//! The contract under test:
+//! * a traced run's **sim-time event stream is byte-identical** across
+//!   `--threads` / `--kernel-threads` (host data rides the caller's
+//!   metadata block, never the event stream);
+//! * spans are **well nested per track** (Perfetto renders them as a
+//!   flame graph — overlap would be a lie about the simulation);
+//! * every fault class the ledgers count shows up as a **trace
+//!   instant**, so the trace never under-reports the chaos engine;
+//! * straggler percentile telemetry appears **only when tracing is on**
+//!   (`--trace off` keeps the artifact shape bit-identical to the
+//!   goldens).
+//!
+//! Tests pin their own fault schedule, so they stand down when the
+//! `SUPERSFL_FAULTS` env override is active (the CI chaos leg).
+
+use supersfl::config::ExperimentConfig;
+use supersfl::network::FaultConfig;
+use supersfl::orchestrator::run_experiment;
+use supersfl::runtime::Runtime;
+use supersfl::trace::{InstantKind, SpanKind, TraceEvent, TraceSpec};
+use supersfl::util::json::JsonValue;
+
+/// Every fault class at once (mirrors `tests/fault_injection.rs`): GE
+/// bursty links, a round-2 server outage, a mid-round crash + rejoin,
+/// 12% frame corruption, bounded retry/backoff, 50% quorum.
+const HOSTILE: &str =
+    "ge=0.08:0.25:1:0,outage=2:1,crash=1:3:4:1,corrupt=0.12,retry=2:0.02:2:0.5,quorum=0.5";
+
+fn env_pins_faults() -> bool {
+    std::env::var("SUPERSFL_FAULTS").is_ok()
+}
+
+fn hostile_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default()
+        .with_name("traced_hostile")
+        .with_clients(8)
+        .with_rounds(3)
+        .with_seed(7)
+        .with_threads(2);
+    cfg.data.train_per_class = 20;
+    cfg.data.test_total = 200;
+    cfg.data.noise = 0.4;
+    cfg.train.local_steps = 8;
+    cfg.train.eval_samples = 100;
+    cfg.net.faults = FaultConfig::parse(HOSTILE).unwrap();
+    cfg
+}
+
+fn traced_cfg() -> ExperimentConfig {
+    hostile_cfg().with_trace(TraceSpec::File("unused.trace.json".into()))
+}
+
+/// The tentpole guarantee: the recorded sim-time stream — and therefore
+/// the exported Chrome-trace JSON, byte for byte — is invariant under
+/// the engine's and the kernel core's thread counts. Host-side numbers
+/// ride the caller-supplied metadata block, which is pinned here.
+#[test]
+fn traced_hostile_run_is_byte_identical_across_thread_counts() {
+    if env_pins_faults() {
+        return;
+    }
+    let rt = Runtime::native();
+    let run = |threads: usize, kernel_threads: usize| {
+        let mut cfg = traced_cfg();
+        cfg.threads = threads;
+        cfg.kernel_threads = kernel_threads;
+        let res = run_experiment(&rt, &cfg).unwrap();
+        let report = res.trace.expect("file-mode run must return a trace");
+        report.to_chrome_json("fp32_raw", &JsonValue::object())
+    };
+    let a = run(1, 1);
+    assert!(a.len() > 1000, "hostile traced run must record real events");
+    for (threads, kernel_threads) in [(4usize, 1usize), (2, 3), (8, 2)] {
+        let b = run(threads, kernel_threads);
+        assert_eq!(
+            a, b,
+            "trace JSON must be byte-identical at threads={threads} kernel_threads={kernel_threads}"
+        );
+    }
+}
+
+/// Spans on one track must nest like a call stack: each span either
+/// starts after the previous one ended or sits fully inside it. The
+/// stream is stack-checked in recorded order (parents are recorded
+/// before their children), with an epsilon for float fold-order slack
+/// between a parent's summed duration and its children's cursor.
+#[test]
+fn trace_spans_are_well_nested_per_track() {
+    if env_pins_faults() {
+        return;
+    }
+    let rt = Runtime::native();
+    let res = run_experiment(&rt, &traced_cfg()).unwrap();
+    let report = res.trace.expect("file-mode run must return a trace");
+    assert_eq!(report.dropped(), 0, "hostile run must not hit the event cap");
+
+    let mut tracks: Vec<u32> = report.events().iter().map(|(t, _)| *t).collect();
+    tracks.sort_unstable();
+    tracks.dedup();
+    assert!(
+        tracks.len() > 3,
+        "expected server, barrier and client tracks, got {tracks:?}"
+    );
+
+    let eps = 1e-9;
+    for track in tracks {
+        let mut stack: Vec<(f64, f64)> = Vec::new(); // (t0, end)
+        let mut checked = 0usize;
+        for (t, ev) in report.events() {
+            if *t != track {
+                continue;
+            }
+            let TraceEvent::Span { kind, t0, dur, .. } = ev else {
+                continue;
+            };
+            assert!(
+                dur.is_finite() && *dur >= 0.0 && t0.is_finite() && *t0 >= -eps,
+                "span {} on track {track} has bad bounds: t0={t0} dur={dur}",
+                kind.name()
+            );
+            let (s, e) = (*t0, t0 + dur);
+            while let Some(&(_, top_end)) = stack.last() {
+                if s >= top_end - eps {
+                    stack.pop();
+                } else {
+                    break;
+                }
+            }
+            if let Some(&(top_t0, top_end)) = stack.last() {
+                assert!(
+                    s >= top_t0 - eps && e <= top_end + eps,
+                    "span {} [{s}, {e}] on track {track} straddles enclosing [{top_t0}, {top_end}]",
+                    kind.name()
+                );
+            }
+            stack.push((s, e));
+            checked += 1;
+        }
+        assert!(checked > 0, "track {track} recorded no spans");
+    }
+}
+
+/// The trace must tell the same story as the fault ledgers: every fault
+/// class with a nonzero run total has at least one matching instant in
+/// the event stream, and every TPGF phase + wire stage shows up as a
+/// span kind.
+#[test]
+fn ledger_fault_classes_and_phases_all_appear_in_the_trace() {
+    if env_pins_faults() {
+        return;
+    }
+    let rt = Runtime::native();
+    let res = run_experiment(&rt, &traced_cfg()).unwrap();
+    let m = &res.metrics;
+    let report = res.trace.expect("file-mode run must return a trace");
+
+    let instants = |kind: InstantKind| -> usize {
+        report
+            .events()
+            .iter()
+            .filter(|(_, ev)| matches!(ev, TraceEvent::Instant { kind: k, .. } if *k == kind))
+            .count()
+    };
+    let spans = |kind: SpanKind| -> usize {
+        report
+            .events()
+            .iter()
+            .filter(|(_, ev)| matches!(ev, TraceEvent::Span { kind: k, .. } if *k == kind))
+            .count()
+    };
+
+    // The hostile schedule trips every class (pinned by
+    // tests/fault_injection.rs); each must surface as an instant.
+    for (total, kind, label) in [
+        (m.total_timeouts, InstantKind::Timeout, "timeouts"),
+        (m.total_drops, InstantKind::Drop, "drops"),
+        (m.total_corruptions, InstantKind::Corruption, "corruptions"),
+        (m.total_crashes, InstantKind::Crash, "crashes"),
+    ] {
+        assert!(total > 0, "hostile schedule should produce {label}");
+        assert!(
+            instants(kind) > 0,
+            "{total} ledger {label} but no {label} instants in the trace"
+        );
+    }
+
+    // TPGF phase attribution + wire stages + server/barrier phases.
+    for kind in [
+        SpanKind::LocalUpdate,
+        SpanKind::ServerCompute,
+        SpanKind::Fusion,
+        SpanKind::Encode,
+        SpanKind::Decode,
+        SpanKind::Exchange,
+        SpanKind::Attempt,
+        SpanKind::Backoff,
+        SpanKind::Aggregate,
+        SpanKind::Broadcast,
+        SpanKind::Eval,
+        SpanKind::BarrierWait,
+    ] {
+        assert!(
+            spans(kind) > 0,
+            "expected at least one {} span in the hostile trace",
+            kind.name()
+        );
+    }
+    // Retries imply backoff spans.
+    assert!(m.total_retries > 0);
+}
+
+/// Telemetry gating: percentile columns/keys exist exactly when tracing
+/// is on. `off` keeps the JSON shape identical to the pre-trace
+/// goldens (the golden test's symmetric compare enforces the rest);
+/// `summary` buys the percentiles without an event stream; file mode
+/// has both. Summary and file mode fold identical telemetry.
+#[test]
+fn straggler_telemetry_appears_only_when_traced() {
+    if env_pins_faults() {
+        return;
+    }
+    let rt = Runtime::native();
+
+    let off = run_experiment(&rt, &hostile_cfg()).unwrap();
+    assert!(off.trace.is_none());
+    assert!(off.metrics.straggler.is_none());
+    assert!(off.metrics.rounds.iter().all(|r| r.straggler.is_none()));
+    let off_json = off.metrics.to_json();
+    assert!(off_json.get("straggler").is_none());
+    for r in off_json.get("rounds").unwrap().as_array().unwrap() {
+        assert!(r.get("straggler").is_none());
+    }
+
+    let summary = run_experiment(&rt, &hostile_cfg().with_trace(TraceSpec::Summary)).unwrap();
+    assert!(
+        summary.trace.is_none(),
+        "summary mode must not keep the event stream"
+    );
+    let s = summary
+        .metrics
+        .straggler
+        .expect("summary mode must fold percentiles");
+    assert!(summary.metrics.rounds.iter().all(|r| r.straggler.is_some()));
+    assert!(
+        summary.metrics.to_json().get("straggler").is_some(),
+        "run-level straggler block must serialize"
+    );
+    // Percentiles are ordered and positive for a run with real rounds.
+    assert!(s.time_p50 > 0.0 && s.time_p50 <= s.time_p95 && s.time_p95 <= s.time_p99);
+    assert!(s.bytes_p50 > 0.0 && s.bytes_p50 <= s.bytes_p99);
+    assert!(s.retries_p50 <= s.retries_p99);
+
+    let file = run_experiment(&rt, &traced_cfg()).unwrap();
+    let f = file.metrics.straggler.expect("file mode folds percentiles");
+    assert!(file.trace.is_some());
+    // Same telemetry regardless of whether events were kept.
+    assert_eq!(s.csv_fields(), f.csv_fields());
+}
