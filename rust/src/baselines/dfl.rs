@@ -130,6 +130,10 @@ pub fn run(rt: &Runtime, h: &mut Harness) -> Result<()> {
     let lane_trace = h.tracer.as_ref().is_some_and(|t| t.lane_events_enabled());
 
     for round in 1..=h.cfg.train.rounds {
+        if crate::transport::shutdown::requested() {
+            h.interrupted = Some(round);
+            break;
+        }
         let round_u = round as u64;
         let roster = h.roster(round);
         h.materialize_cohort(rt, &roster)?;

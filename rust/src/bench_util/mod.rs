@@ -46,6 +46,7 @@ pub fn provenance(cfg: &ExperimentConfig) -> JsonValue {
     o.set("faults", JsonValue::String(cfg.net.faults.to_spec()));
     o.set("sample", JsonValue::String(cfg.sample.label()));
     o.set("trace", JsonValue::String(cfg.trace.label()));
+    o.set("transport", JsonValue::String(cfg.transport.label()));
     let hash = fnv1a64(cfg.to_json().to_string_compact().as_bytes());
     o.set("config_fnv1a64", JsonValue::String(format!("{hash:016x}")));
     o

@@ -68,6 +68,21 @@ impl LossAcc {
     pub fn reset(&mut self) {
         *self = LossAcc::default();
     }
+
+    /// Raw accumulator state `(sum, n)`. The TCP transport ships these
+    /// in the end-of-round report so the server's shadow clients
+    /// reproduce the simulator's round record bit for bit (the f64 sum
+    /// is the exact push-order fold the client computed).
+    pub fn raw(&self) -> (f64, u64) {
+        (self.sum, self.n as u64)
+    }
+
+    /// Inject received accumulator state (server-side shadow of a
+    /// remote client).
+    pub fn inject_raw(&mut self, sum: f64, n: u64) {
+        self.sum = sum;
+        self.n = n as usize;
+    }
 }
 
 impl ClientState {

@@ -9,6 +9,7 @@ use std::path::{Path, PathBuf};
 
 use crate::network::faults::FaultConfig;
 use crate::trace::TraceSpec;
+use crate::transport::TransportSpec;
 use crate::util::json::{self, JsonValue};
 use crate::wire::WireCodecKind;
 use crate::{Error, Result};
@@ -493,6 +494,12 @@ pub struct ExperimentConfig {
     pub trace: TraceSpec,
     /// Emit a live per-round progress line on stderr (`--progress`).
     pub progress: bool,
+    /// How frames move (`--transport sim|serve:<addr>|connect:<addr>`;
+    /// the `SUPERSFL_TRANSPORT` env var wins). `sim` (the default) runs
+    /// everything in-process and is byte-identical to the pre-transport
+    /// simulator; `serve`/`connect` split the run into real processes
+    /// exchanging the same frames over TCP. See [`crate::transport`].
+    pub transport: TransportSpec,
     /// Where `make artifacts` put the HLO + manifest.
     pub artifacts_dir: PathBuf,
 }
@@ -518,6 +525,7 @@ impl Default for ExperimentConfig {
             sample: SampleSpec::Off,
             trace: TraceSpec::Off,
             progress: false,
+            transport: TransportSpec::Sim,
             artifacts_dir: PathBuf::from("artifacts"),
         }
     }
@@ -591,6 +599,12 @@ impl ExperimentConfig {
         self
     }
 
+    /// Frame transport (in-process sim or a real TCP role).
+    pub fn with_transport(mut self, t: TransportSpec) -> Self {
+        self.transport = t;
+        self
+    }
+
     /// Validate cross-field invariants before running.
     pub fn validate(&self) -> Result<()> {
         if self.fleet.clients == 0 {
@@ -610,6 +624,38 @@ impl ExperimentConfig {
         }
         if self.ssfl.lambda < 0.0 {
             return Err(Error::Config("ssfl.lambda must be >= 0".into()));
+        }
+        if !self.transport.is_sim() {
+            // TCP mode: the world is replicated across processes, so
+            // everything that only the simulator can roll determinist-
+            // ically must be off — reality provides the faults.
+            if self.method != Method::SuperSfl {
+                return Err(Error::Config(
+                    "transport serve/connect supports method=ssfl only".into(),
+                ));
+            }
+            if self.sample != SampleSpec::Off {
+                return Err(Error::Config(
+                    "transport serve/connect requires sample=off (every client is a process)"
+                        .into(),
+                ));
+            }
+            if self.net.server_availability != 1.0 {
+                return Err(Error::Config(
+                    "transport serve/connect requires net.server_availability=1.0 \
+                     (real outages come from the wire, not the coin)"
+                        .into(),
+                ));
+            }
+            let fc = &self.net.faults;
+            if fc.has_stochastic_injectors() || self.net.drop_prob > 0.0 {
+                return Err(Error::Config(
+                    "transport serve/connect rejects stochastic fault injectors \
+                     (ge/outage/crash/corrupt/drop_prob) — the socket provides the faults; \
+                     retry/quorum knobs still apply"
+                        .into(),
+                ));
+            }
         }
         Ok(())
     }
@@ -681,6 +727,7 @@ impl ExperimentConfig {
                 }
             }
             "trace" => self.trace = TraceSpec::parse(s(v, key)?)?,
+            "transport" => self.transport = TransportSpec::parse(s(v, key)?)?,
             "progress" => {
                 self.progress = v
                     .as_bool()
@@ -783,6 +830,7 @@ impl ExperimentConfig {
         o.set("wire_codec", JsonValue::String(self.wire.label()));
         o.set("sample", JsonValue::String(self.sample.label()));
         o.set("trace", JsonValue::String(self.trace.label()));
+        o.set("transport", JsonValue::String(self.transport.label()));
         o.set("progress", JsonValue::Bool(self.progress));
         if let Some(t) = self.train.target_accuracy {
             o.set("target_accuracy", n(t));
@@ -807,6 +855,39 @@ mod tests {
         assert_eq!(c.ssfl.lambda, 0.01); // §II-D
         assert_eq!(c.data.dirichlet_alpha, 0.5); // §III-A
         c.validate().unwrap();
+    }
+
+    #[test]
+    fn transport_knob_parses_round_trips_and_gates_tcp_mode() {
+        let mut c = ExperimentConfig::default();
+        c.apply_json(&json::parse(r#"{"transport": "serve:127.0.0.1:7171"}"#).unwrap())
+            .unwrap();
+        assert_eq!(c.transport, TransportSpec::Serve("127.0.0.1:7171".into()));
+        c.validate().unwrap();
+        // Label round-trips through to_json → apply.
+        let mut back = ExperimentConfig::default();
+        back.apply_json(&c.to_json()).unwrap();
+        assert_eq!(back.transport, c.transport);
+        // Typos fail fast instead of silently running in-process.
+        assert!(ExperimentConfig::default()
+            .apply_json(&json::parse(r#"{"transport": "tcp:127.0.0.1:1"}"#).unwrap())
+            .is_err());
+        // TCP mode gates: baselines, sampling, and stochastic fault
+        // injectors are simulator-only.
+        let mut bad = c.clone();
+        bad.method = Method::Sfl;
+        assert!(bad.validate().is_err());
+        let mut bad = c.clone();
+        bad.sample = SampleSpec::Count(2);
+        assert!(bad.validate().is_err());
+        let mut bad = c.clone();
+        bad.net.faults.corrupt_prob = 0.5;
+        assert!(bad.validate().is_err());
+        // ...while the deterministic recovery knobs stay allowed.
+        let mut ok = c.clone();
+        ok.net.faults.quorum = 1.0;
+        ok.net.faults.retries = 2;
+        ok.validate().unwrap();
     }
 
     #[test]

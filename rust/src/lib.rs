@@ -34,6 +34,10 @@
 //! * [`fedserver`] — collaborative layer-aligned aggregation (paper Eq. 6–8).
 //! * [`trace`] — deterministic span tracing + per-client straggler
 //!   telemetry (Chrome-trace export, fixed-log-bucket histograms).
+//! * [`transport`] — real TCP transport speaking the [`wire`] frame
+//!   envelope over sockets (server + client processes), plus the
+//!   incremental frame reader, control-message protocol, and graceful
+//!   shutdown latch (`--transport sim|serve:<addr>|connect:<addr>`).
 //! * [`orchestrator`] — the round loop tying everything together.
 //! * [`baselines`] — SFL (SplitFed) and DFL comparators.
 //! * [`bench_util`] — the bench harness used by `cargo bench` targets.
@@ -59,6 +63,7 @@ pub mod runtime;
 pub mod server;
 pub mod tpgf;
 pub mod trace;
+pub mod transport;
 pub mod util;
 pub mod wire;
 

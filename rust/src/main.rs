@@ -22,6 +22,10 @@ use supersfl::{allocation, network, orchestrator, util::rng::Pcg32, Error, Resul
 mod cli;
 
 fn main() -> ExitCode {
+    // Graceful SIGINT/SIGTERM: the round loops check the latch at each
+    // round boundary and break out, so a signalled run still flushes
+    // its partial artifacts and reports the interrupted round.
+    supersfl::transport::shutdown::install();
     let args = cli::Args::parse(std::env::args().skip(1));
     let result = match args.positional.first().map(|s| s.as_str()) {
         Some("train") => cmd_train(&args),
@@ -54,6 +58,8 @@ fn usage() {
          [--wire-codec fp32|fp16|int8|topk:<k>] \
          [--faults off|ge=..,outage=..,crash=..,corrupt=..,retry=..,quorum=..] \
          [--sample off|N|0.frac] \
+         [--transport sim|serve:<addr>|connect:<addr>] [--client-id N] \
+         [--chaos-exit round:step] \
          [--trace off|summary|FILE.trace.json] [--progress] \
          [--config file.json] [--set key=value]... [--artifacts DIR] [--out DIR]"
     );
@@ -96,6 +102,9 @@ fn build_config(args: &cli::Args) -> Result<ExperimentConfig> {
     }
     if let Some(v) = args.get("sample") {
         cfg.sample = supersfl::config::SampleSpec::parse(v)?;
+    }
+    if let Some(v) = args.get("transport") {
+        cfg.transport = supersfl::transport::TransportSpec::parse(v)?;
     }
     if args.has_flag("trace") {
         return Err(Error::Config(
@@ -146,7 +155,11 @@ fn build_config(args: &cli::Args) -> Result<ExperimentConfig> {
 }
 
 fn cmd_train(args: &cli::Args) -> Result<()> {
-    let cfg = build_config(args)?;
+    let mut cfg = build_config(args)?;
+    // Env-var-wins, same idiom as SUPERSFL_FAULTS/SUPERSFL_SAMPLE; the
+    // TCP-mode gates are re-checked after the override.
+    cfg.transport = supersfl::transport::TransportSpec::from_env_or(cfg.transport.clone());
+    cfg.validate()?;
     println!(
         "supersfl train: method={} clients={} classes={} rounds={} seed={} threads={} wire={}",
         cfg.method.as_str(),
@@ -167,9 +180,36 @@ fn cmd_train(args: &cli::Args) -> Result<()> {
     if let Some(k) = cfg.sample.cohort_size(cfg.fleet.clients) {
         println!("sampling: {k} of {} clients per round", cfg.fleet.clients);
     }
+    if !cfg.transport.is_sim() {
+        println!("transport: {}", cfg.transport.label());
+    }
     let rt = Runtime::from_config(&cfg)?;
     println!("backend: {}", rt.backend_name());
-    let res = orchestrator::run_experiment(&rt, &cfg)?;
+    let (res, tstats) = match cfg.transport.clone() {
+        supersfl::transport::TransportSpec::Sim => {
+            (orchestrator::run_experiment(&rt, &cfg)?, None)
+        }
+        supersfl::transport::TransportSpec::Serve(addr) => {
+            let (res, stats) = supersfl::transport::server::run_served(&rt, &cfg, &addr)?;
+            (res, Some(stats))
+        }
+        supersfl::transport::TransportSpec::Connect(addr) => {
+            // Client process: local compute + frames only. The server
+            // process owns the metrics, artifacts and reporting.
+            let id: usize = args
+                .get("client-id")
+                .ok_or_else(|| {
+                    Error::Config("--transport connect:<addr> requires --client-id N".into())
+                })?
+                .parse()?;
+            let chaos = args
+                .get("chaos-exit")
+                .map(supersfl::transport::client::ChaosExit::parse)
+                .transpose()?;
+            supersfl::transport::client::run_client(&rt, &cfg, &addr, id, chaos)?;
+            return Ok(());
+        }
+    };
     let wall = res.metrics.host_wall_s;
 
     let mut table = Table::new(&["round", "acc", "loss(c)", "loss(s)", "comm MB", "sim t(s)", "fallback"]);
@@ -226,6 +266,32 @@ fn cmd_train(args: &cli::Args) -> Result<()> {
             s.bytes_p50 / 1e3, s.bytes_p99 / 1e3, s.retries_p99
         );
     }
+    if let Some(ts) = &tstats {
+        let socket_data = ts.data_bytes_in + ts.data_bytes_out;
+        println!(
+            "transport[{}]: {:.1} MB data on sockets vs {:.1} MB simulated ({}) | \
+             {:.1} KB control | {} resyncs | {} quorum holds | {} frame errors",
+            cfg.transport.label(),
+            socket_data as f64 / 1e6,
+            ts.sim_wire_bytes as f64 / 1e6,
+            if socket_data == ts.sim_wire_bytes {
+                "ledgers match"
+            } else {
+                "ledgers differ: faults rode the socket"
+            },
+            ts.ctl_bytes as f64 / 1e3,
+            ts.resyncs,
+            ts.quorum_holds,
+            ts.frame_errors
+        );
+    }
+    if let Some(r) = res.metrics.interrupted_at {
+        println!(
+            "interrupted by signal before round {r}: partial metrics for {} completed \
+             rounds flushed below",
+            res.metrics.rounds.len()
+        );
+    }
 
     // Chrome-trace export: sim-time events only; host-side numbers
     // (wall clock, runtime stats) ride the metadata block so the event
@@ -266,6 +332,9 @@ fn cmd_train(args: &cli::Args) -> Result<()> {
         // an artifact directory is self-describing.
         let mut run_json = res.metrics.to_json();
         run_json.set("provenance", supersfl::bench_util::provenance(&cfg));
+        if let Some(ts) = &tstats {
+            run_json.set("transport", ts.to_json(&cfg.transport.label()));
+        }
         supersfl::util::fs::atomic_write(
             &dir.join(format!("{base}.json")),
             run_json.to_string_pretty().as_bytes(),

@@ -141,6 +141,12 @@ pub struct RunMetrics {
     /// across every round); telemetry-gated like
     /// [`RoundRecord::straggler`]. Filled in by the orchestrator.
     pub straggler: Option<StragglerStats>,
+    /// Set when a SIGINT/SIGTERM cut the run short: the 1-based round
+    /// the loop was about to start. The artifacts written are the
+    /// partial trajectory up to the previous round. Filled in by the
+    /// orchestrator; `None` for completed runs keeps the JSON shape
+    /// (and the goldens) unchanged.
+    pub interrupted_at: Option<usize>,
 }
 
 impl RunMetrics {
@@ -191,6 +197,7 @@ impl RunMetrics {
             total_retries: rounds.iter().map(|r| r.retries).sum(),
             total_crashes: rounds.iter().map(|r| r.crashes).sum(),
             straggler: None,
+            interrupted_at: None,
             rounds,
         }
     }
@@ -290,6 +297,9 @@ impl RunMetrics {
         o.set("total_crashes", n(self.total_crashes as f64));
         if let Some(s) = &self.straggler {
             o.set("straggler", straggler_json(s));
+        }
+        if let Some(r) = self.interrupted_at {
+            o.set("interrupted_at", n(r as f64));
         }
         o.set(
             "rounds",

@@ -164,6 +164,18 @@ impl FaultConfig {
         reporting as f64 + 1e-9 >= self.quorum * n_live as f64
     }
 
+    /// Whether any *stochastic* injector is configured (bursty links,
+    /// outage windows, scheduled crashes, corruption rolls). The TCP
+    /// transport rejects these — on a real wire the faults come from the
+    /// sockets — while the deterministic recovery knobs (retry budget,
+    /// quorum fraction) stay honored.
+    pub fn has_stochastic_injectors(&self) -> bool {
+        self.ge_p_gb > 0.0
+            || self.outage_len > 0
+            || !self.crashes.is_empty()
+            || self.corrupt_prob > 0.0
+    }
+
     /// Backoff before retry `attempt` (1-based), optionally jittered
     /// from the lane stream. Only draws from `rng` when jitter is
     /// configured, so jitter-free schedules burn no extra randomness.

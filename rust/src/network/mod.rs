@@ -347,6 +347,83 @@ impl NetLane {
         ex
     }
 
+    /// TCP-mode replay of the exchange arithmetic from a
+    /// socket-**observed** outcome — no RNG draws, reality already
+    /// rolled the dice. `delivered = true` follows
+    /// [`NetLane::exchange_framed`]'s success branch bit for bit (uplink
+    /// + server + downlink transfer model, timeout window honored), so a
+    /// fault-free served run charges exactly what the in-process
+    /// simulator charges. `delivered = false` (the socket died or the
+    /// response never came) charges the uplink frame plus the timeout
+    /// window and counts a drop — identical to the sim's single-attempt
+    /// failure under the inert retry budget. Retries are not replayed:
+    /// on a real wire a dead connection has nothing to retry against;
+    /// the reconnect path owns recovery.
+    pub fn exchange_observed(
+        &mut self,
+        up: Framed,
+        down: Framed,
+        server_time_s: f64,
+        delivered: bool,
+    ) -> Exchange {
+        self.attempts.clear();
+        // The client transmitted before it could observe any failure:
+        // uplink bytes are always charged (same invariant as the sim).
+        self.traffic.up_bytes += up.wire;
+        self.raw_traffic.up_bytes += up.raw;
+        if !delivered {
+            self.faults.drops += 1;
+            if self.log_attempts {
+                self.attempts.push(AttemptRec {
+                    backoff_s: 0.0,
+                    cost_s: self.cfg.timeout_s,
+                    up_s: 0.0,
+                    server_s: 0.0,
+                    outcome: AttemptOutcome::Drop,
+                });
+            }
+            return Exchange::TimedOut {
+                time_s: self.cfg.timeout_s,
+            };
+        }
+        let up_s = self.link.up_time(up.wire);
+        let t = up_s + server_time_s + self.link.down_time(down.wire);
+        if t > self.cfg.timeout_s {
+            self.faults.timeouts += 1;
+            if self.log_attempts {
+                self.attempts.push(AttemptRec {
+                    backoff_s: 0.0,
+                    cost_s: self.cfg.timeout_s,
+                    up_s: 0.0,
+                    server_s: 0.0,
+                    outcome: AttemptOutcome::Timeout,
+                });
+            }
+            return Exchange::TimedOut {
+                time_s: self.cfg.timeout_s,
+            };
+        }
+        self.traffic.down_bytes += down.wire;
+        self.raw_traffic.down_bytes += down.raw;
+        if self.log_attempts {
+            self.attempts.push(AttemptRec {
+                backoff_s: 0.0,
+                cost_s: t,
+                up_s,
+                server_s: server_time_s,
+                outcome: AttemptOutcome::Ok,
+            });
+        }
+        Exchange::Ok { time_s: t }
+    }
+
+    /// Download-only sibling of [`NetLane::exchange_observed`] — the
+    /// served resync/broadcast accounting (zero-byte request up, one
+    /// frame down).
+    pub fn download_observed(&mut self, down: Framed, server_time_s: f64, delivered: bool) -> Exchange {
+        self.exchange_observed(Framed { wire: 0, raw: 0 }, down, server_time_s, delivered)
+    }
+
     /// A download-only faulted transfer: the rejoin-resync path (a
     /// recovering client pulling the current global weights). Runs
     /// through the same GE/drop/timeout/retry/backoff machinery as

@@ -134,6 +134,10 @@ pub struct Harness {
     /// free of trace work and the output shape identical to the
     /// pre-trace simulator.
     pub tracer: Option<Tracer>,
+    /// Set when a SIGINT/SIGTERM arrived mid-run: the 1-based round the
+    /// loop was about to start when it broke out. Partial artifacts are
+    /// still flushed through the normal atomic-write path.
+    pub interrupted: Option<usize>,
     /// Host wall-clock anchor (perf reporting, not simulation).
     host_t0: std::time::Instant,
 }
@@ -314,6 +318,7 @@ impl Harness {
             shard_base,
             lat_extremes,
             tracer: Tracer::from_spec(&cfg.trace),
+            interrupted: None,
             host_t0: std::time::Instant::now(),
         })
     }
@@ -767,6 +772,7 @@ impl Harness {
         metrics.host_wall_s = self.host_t0.elapsed().as_secs_f64();
         metrics.wire_codec = self.wire.label();
         metrics.straggler = self.tracer.as_ref().map(|t| t.run_straggler());
+        metrics.interrupted_at = self.interrupted;
         let depths = if self.cohort_k.is_none() {
             self.clients.iter().map(|c| c.depth).collect()
         } else {
@@ -875,6 +881,13 @@ fn run_ssfl(rt: &Runtime, h: &mut Harness) -> Result<()> {
     let lane_trace = h.tracer.as_ref().is_some_and(|t| t.lane_events_enabled());
 
     for round in 1..=h.cfg.train.rounds {
+        // Graceful shutdown: a SIGINT/SIGTERM between rounds breaks out
+        // here; `main` flushes the partial artifacts and reports the
+        // interrupted round.
+        if crate::transport::shutdown::requested() {
+            h.interrupted = Some(round);
+            break;
+        }
         let round_u = round as u64;
 
         // ---- Roster + cohort state (sampled mode materializes here) ----
@@ -1088,8 +1101,17 @@ fn run_ssfl(rt: &Runtime, h: &mut Harness) -> Result<()> {
                         // the shipped bytes diverged: fail loudly in
                         // every build, not just debug (the seed's
                         // debug_assert silently vanished in release).
+                        // aux carries the server-side loss (f32→f64 is
+                        // exact) — the TCP transport's clients read
+                        // l_server from this slot, and carrying it here
+                        // too keeps sim and socket frames byte-equal.
                         let down_len = wire
-                            .encode_to(MsgType::ActGrad, &out.g_z, 0.0, &mut lane.net.scratch)
+                            .encode_to(
+                                MsgType::ActGrad,
+                                &out.g_z,
+                                f64::from(out.loss),
+                                &mut lane.net.scratch,
+                            )
                             .len() as u64;
                         if down_len != gz_frame_len {
                             return Err(crate::Error::Wire(format!(

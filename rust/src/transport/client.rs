@@ -1,0 +1,277 @@
+//! The client-process side of the TCP transport.
+//!
+//! `run_client` builds the same deterministic world as the server
+//! (verified by the config fingerprint in the `Hello` handshake), keeps
+//! exactly one [`ClientState`] of it — its own — and follows the
+//! server's round protocol: Phase 1 on its shard, `Smashed` frames up,
+//! `ActGrad` (or `Nack`) frames back, Phase 2/3 fusion, one
+//! `PrefixUpload` + `RoundEnd` report at the barrier, then the
+//! `Broadcast` resync of its prefix.
+//!
+//! The client holds no clock, no ledger and no fault machinery: the
+//! server's replicated simulator prices everything. What the client
+//! *does* own is the training math the sim ran in-process — the bytes
+//! it ships are the bytes the sim would have shipped, so a fault-free
+//! run is trajectory-identical across transports.
+//!
+//! Failure behavior mirrors Alg. 3's conservatism: a `Nack` (the
+//! server's deterministic timeout pricing, or a corrupt uplink) and a
+//! CRC-failed `ActGrad` both take the local-only fallback update; a
+//! CRC-failed `Broadcast` keeps the stale prefix rather than aborting.
+//! After a crash, re-running `run_client` re-dials, and the `HelloAck`
+//! carries resume coordinates: the shard-RNG fast-forward count that
+//! realigns batch draws with the server's shadow, plus the resync
+//! broadcast. (The rejoiner's φ_i head is freshly initialized — the sim
+//! keeps φ_i across an outage, the real world lost the process; see the
+//! README's divergence notes.)
+
+use crate::client::ClientState;
+use crate::config::ExperimentConfig;
+use crate::orchestrator::Harness;
+use crate::runtime::Runtime;
+use crate::transport::proto::{self, Hello, HelloAck, RoundEnd, RoundStart};
+use crate::transport::tcp::{self, Conn};
+use crate::transport::{shutdown, world_fingerprint, Transport};
+use crate::wire::{MsgType, WireScratch};
+use crate::{Error, Result};
+
+/// Deterministic kill switch for the reconnect e2e tests: the client
+/// process exits (code 41) at the top of the given round/step, before
+/// drawing a batch or sending a frame — a reproducible stand-in for a
+/// real mid-round crash.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChaosExit {
+    /// 1-based round to die in.
+    pub round: u32,
+    /// 0-based step within that round.
+    pub step: u32,
+}
+
+/// Exit code `ChaosExit` dies with, so the test harness can tell a
+/// scheduled kill from a genuine failure.
+pub const CHAOS_EXIT_CODE: i32 = 41;
+
+impl ChaosExit {
+    /// Parse `round:step` (e.g. `2:1` = die in round 2 before step 1).
+    pub fn parse(s: &str) -> Result<ChaosExit> {
+        let err = || {
+            Error::Config(format!(
+                "invalid --chaos-exit '{s}' (expected round:step, e.g. 2:0)"
+            ))
+        };
+        let (r, st) = s.trim().split_once(':').ok_or_else(err)?;
+        Ok(ChaosExit {
+            round: r.trim().parse().map_err(|_| err())?,
+            step: st.trim().parse().map_err(|_| err())?,
+        })
+    }
+}
+
+/// Run one client process: dial `addr`, hand-shake into the fleet, and
+/// follow the server's round protocol until `Bye` (or a graceful
+/// shutdown signal).
+pub fn run_client(
+    rt: &Runtime,
+    cfg: &ExperimentConfig,
+    addr: &str,
+    client_id: usize,
+    chaos: Option<ChaosExit>,
+) -> Result<()> {
+    // Build the identical deterministic world the server builds (same
+    // shards, same init, same wire codec), then keep only this
+    // client's slice of it.
+    let h = Harness::prepare(rt, cfg)?;
+    if client_id >= h.cfg.fleet.clients {
+        return Err(Error::Config(format!(
+            "--client-id {client_id} out of range: the fleet has {} clients",
+            h.cfg.fleet.clients
+        )));
+    }
+    let fnv = world_fingerprint(&h.cfg);
+    let classes = h.cfg.data.classes;
+    let batch_n = rt.model().batch;
+    let total_layers = rt.model().depth;
+    let tpgf_mode = h.cfg.ssfl.tpgf_mode;
+    let fuse_via_artifact = h.cfg.ssfl.fuse_via_artifact;
+    let Harness {
+        mut clients,
+        train,
+        wire,
+        ..
+    } = h;
+    let mut client: ClientState = clients.swap_remove(client_id);
+    drop(clients);
+    let mut scratch = WireScratch::default();
+    let mut gz = Vec::new();
+
+    let mut conn = Conn::dial(addr, tcp::DEFAULT_DIAL_TIMEOUT)?;
+    conn.send(
+        &Hello {
+            client_id: client_id as u32,
+            config_fnv: fnv,
+        }
+        .encode(),
+    )?;
+    let ack = HelloAck::decode(&conn.recv()?)?;
+
+    // Resume coordinates: replay this shard's RNG draws up to where the
+    // server's shadow stands, so the labels behind every future Smashed
+    // frame match the shadow's books draw for draw.
+    for _ in 0..ack.ff_draws {
+        let _ = client.shard.next_batch(&train, batch_n);
+    }
+    if ack.resync {
+        let frame = conn.recv()?;
+        let dec = wire.decode(&frame)?;
+        if dec.msg != MsgType::Broadcast {
+            return Err(Error::Wire(format!(
+                "expected the resync Broadcast after HelloAck, got {}",
+                dec.msg.as_str()
+            )));
+        }
+        client.sync_from_global(&dec.data);
+    }
+    eprintln!(
+        "transport: client {client_id} joined at round {} (ff {} draws, resync {})",
+        ack.next_round, ack.ff_draws, ack.resync
+    );
+
+    loop {
+        if shutdown::requested() {
+            // Graceful exit: the server sees the closed socket and takes
+            // the churn path; rejoining later resumes via HelloAck.
+            eprintln!("transport: client {client_id} shutting down on signal");
+            return Ok(());
+        }
+        let frame = conn.recv()?;
+        match proto::msg_of(&frame)? {
+            MsgType::RoundStart => {
+                let rs = RoundStart::decode(&frame)?;
+                client.begin_round();
+                let mut fallback_steps = 0u64;
+                let mut corruptions = 0u64;
+                for step in 0..rs.steps {
+                    if let Some(cx) = chaos {
+                        if cx.round == rs.round && cx.step == step {
+                            eprintln!(
+                                "transport: client {client_id} chaos-exit at \
+                                 round {}:{step}",
+                                rs.round
+                            );
+                            std::process::exit(CHAOS_EXIT_CODE);
+                        }
+                    }
+                    let batch = client.shard.next_batch(&train, batch_n);
+                    let local = client.phase1(rt, classes, &batch)?;
+                    let up = wire.encode_to(MsgType::Smashed, &local.z, 0.0, &mut scratch);
+                    conn.send(up)?;
+                    let reply = conn.recv()?;
+                    match proto::msg_of(&reply)? {
+                        MsgType::ActGrad => match wire.decode_into(&reply, &mut gz) {
+                            Ok(head) => {
+                                // aux carries l_server (f64 holding an
+                                // exact f32) — the same value the sim's
+                                // in-process loop hands to the fusion.
+                                client.phase2_phase3(
+                                    rt,
+                                    &batch,
+                                    &local,
+                                    &gz,
+                                    head.aux as f32,
+                                    tpgf_mode,
+                                    fuse_via_artifact,
+                                    total_layers,
+                                )?;
+                            }
+                            Err(_) => {
+                                // The gradient frame failed its CRC on a
+                                // real wire: fall back, count it, keep
+                                // going — never abort the run.
+                                corruptions += 1;
+                                client.fallback_update(&local);
+                                fallback_steps += 1;
+                            }
+                        },
+                        MsgType::Nack => {
+                            // The server's deterministic pricing failed
+                            // this exchange (timeout class) or the
+                            // uplink arrived corrupt: Alg. 3 fallback,
+                            // same as the sim twin.
+                            client.fallback_update(&local);
+                            fallback_steps += 1;
+                        }
+                        other => {
+                            return Err(Error::Wire(format!(
+                                "expected ActGrad or Nack mid-step, got {}",
+                                other.as_str()
+                            )));
+                        }
+                    }
+                }
+
+                // ---- Barrier: subnetwork upload + round report ----
+                let payload = client.upload_payload();
+                let loss = client
+                    .aggregation_loss(tpgf_mode, total_layers)
+                    .unwrap_or(1.0);
+                let up = wire.encode_to(MsgType::PrefixUpload, &payload, loss, &mut scratch);
+                conn.send(up)?;
+                let (local_sum, local_n) = client.round_local_loss.raw();
+                let (server_sum, server_n) = client.round_server_loss.raw();
+                conn.send(
+                    &RoundEnd {
+                        local_sum,
+                        local_n,
+                        server_sum,
+                        server_n,
+                        fallback_steps,
+                        corruptions,
+                    }
+                    .encode(),
+                )?;
+            }
+            MsgType::Broadcast => match wire.decode(&frame) {
+                Ok(dec) => client.sync_from_global(&dec.data),
+                Err(e) => {
+                    // Corrupt broadcast: train on from the stale prefix
+                    // (the next round's broadcast heals it) rather than
+                    // dying — mirrors the sim's resync failure path.
+                    eprintln!(
+                        "transport: client {client_id} kept stale weights \
+                         (broadcast decode failed: {e})"
+                    );
+                }
+            },
+            MsgType::Bye => {
+                eprintln!("transport: client {client_id} done (server said bye)");
+                return Ok(());
+            }
+            other => {
+                return Err(Error::Wire(format!(
+                    "unexpected {} frame between rounds",
+                    other.as_str()
+                )));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chaos_exit_parses_and_rejects() {
+        assert_eq!(
+            ChaosExit::parse("2:1").unwrap(),
+            ChaosExit { round: 2, step: 1 }
+        );
+        assert_eq!(
+            ChaosExit::parse(" 10:0 ").unwrap(),
+            ChaosExit { round: 10, step: 0 }
+        );
+        for bad in ["", "2", "2:", ":1", "a:b", "1:2:3"] {
+            assert!(ChaosExit::parse(bad).is_err(), "'{bad}' must be rejected");
+        }
+    }
+}

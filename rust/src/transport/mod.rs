@@ -1,0 +1,216 @@
+//! Real transports behind the framed wire layer.
+//!
+//! Until this module existed every byte in the repo flowed through the
+//! in-process [`crate::network::NetworkSim`]. The wire envelope
+//! ([`crate::wire::frame`]) was always transport-ready — versioned,
+//! length-prefixed, CRC-checksummed — so this module puts actual sockets
+//! under it: the binary splits into one server process and N client
+//! processes exchanging **the exact frames the simulator prices**, while
+//! the simulator keeps running server-side as the authoritative
+//! cost/fault model (its ledger is cross-validated against measured
+//! socket bytes — see [`server`]).
+//!
+//! Selection follows the `--faults`/`--sample` idiom:
+//! `--transport sim|serve:<addr>|connect:<addr>`, with the
+//! `SUPERSFL_TRANSPORT` env var winning over both and an invalid value
+//! failing fast.
+//!
+//! * [`framing`] — incremental [`framing::FrameReader`] reassembly under
+//!   adversarial segment boundaries, bounded write staging;
+//! * [`proto`]   — the fixed-layout control payloads (Hello/HelloAck/
+//!   RoundStart/RoundEnd/Bye/Nack) that ride the same envelope;
+//! * [`tcp`]     — the blocking socket connection: timeouts, per-peer
+//!   byte ledgers, reconnect dialing;
+//! * [`server`]  — the served SuperSFL round loop (mirrors the
+//!   orchestrator's sim loop step for step);
+//! * [`client`]  — the client-process loop (local compute + frames);
+//! * [`shutdown`] — SIGINT/SIGTERM latch for graceful artifact flush.
+
+pub mod client;
+pub mod framing;
+pub mod proto;
+pub mod server;
+pub mod shutdown;
+pub mod tcp;
+
+use crate::{Error, Result};
+
+/// How a run moves its frames.
+#[derive(Clone, Debug, PartialEq, Eq, Default)]
+pub enum TransportSpec {
+    /// Everything in-process through `NetworkSim` (the default; bitwise
+    /// identical to every pre-transport release).
+    #[default]
+    Sim,
+    /// Run as the server process: bind `addr`, wait for the fleet, drive
+    /// rounds over sockets.
+    Serve(String),
+    /// Run as one client process: dial `addr` and follow the server's
+    /// round protocol (requires `--client-id`).
+    Connect(String),
+}
+
+impl TransportSpec {
+    /// Parse `sim | serve:<addr> | connect:<addr>`. Fail-fast: a typo
+    /// must not silently fall back to the simulator.
+    pub fn parse(s: &str) -> Result<TransportSpec> {
+        let t = s.trim();
+        if t.eq_ignore_ascii_case("sim") || t.eq_ignore_ascii_case("off") {
+            return Ok(TransportSpec::Sim);
+        }
+        let (kind, addr) = t.split_once(':').ok_or_else(|| {
+            Error::Config(format!(
+                "unknown transport '{s}' (expected sim|serve:<addr>|connect:<addr>)"
+            ))
+        })?;
+        let addr = addr.trim();
+        if addr.is_empty() || !addr.contains(':') {
+            return Err(Error::Config(format!(
+                "transport '{s}': address must be host:port (e.g. 127.0.0.1:7070)"
+            )));
+        }
+        match kind.to_ascii_lowercase().as_str() {
+            "serve" => Ok(TransportSpec::Serve(addr.to_string())),
+            "connect" => Ok(TransportSpec::Connect(addr.to_string())),
+            _ => Err(Error::Config(format!(
+                "unknown transport '{s}' (expected sim|serve:<addr>|connect:<addr>)"
+            ))),
+        }
+    }
+
+    /// Canonical string form; round-trips through [`TransportSpec::parse`].
+    pub fn label(&self) -> String {
+        match self {
+            TransportSpec::Sim => "sim".into(),
+            TransportSpec::Serve(a) => format!("serve:{a}"),
+            TransportSpec::Connect(a) => format!("connect:{a}"),
+        }
+    }
+
+    /// `SUPERSFL_TRANSPORT` overrides every other selection path. An
+    /// explicitly set but invalid value fails fast — a typo'd env var
+    /// must not silently run in-process.
+    pub fn from_env_or(fallback: TransportSpec) -> TransportSpec {
+        match std::env::var("SUPERSFL_TRANSPORT") {
+            Ok(v) => match TransportSpec::parse(&v) {
+                Ok(t) => t,
+                Err(e) => panic!("invalid SUPERSFL_TRANSPORT value '{v}': {e}"),
+            },
+            Err(_) => fallback,
+        }
+    }
+
+    pub fn is_sim(&self) -> bool {
+        matches!(self, TransportSpec::Sim)
+    }
+}
+
+/// Fingerprint of the *world* a config builds, used by the Hello
+/// handshake to reject a client process whose replicated world would
+/// diverge from the server's. The transport spec itself is normalized
+/// to `sim` before hashing: server and client processes necessarily
+/// differ in that one knob (`serve:` vs `connect:`) while building the
+/// same world from everything else.
+pub fn world_fingerprint(cfg: &crate::config::ExperimentConfig) -> u64 {
+    let mut c = cfg.clone();
+    c.transport = TransportSpec::Sim;
+    crate::bench_util::fnv1a64(c.to_json().to_string_compact().as_bytes())
+}
+
+/// One peer-to-peer frame channel. Implemented by the real socket
+/// connection ([`tcp::Conn`]) and by the in-process loopback used to
+/// test the protocol logic without sockets — the served loop and the
+/// client loop only ever talk through this surface.
+pub trait Transport {
+    /// Ship one complete frame (blocking; rides the write path's
+    /// bounded staging + the socket's own send-buffer backpressure).
+    fn send(&mut self, frame: &[u8]) -> Result<()>;
+    /// Receive the next complete, validated frame (blocking up to the
+    /// transport's read timeout).
+    fn recv(&mut self) -> Result<Vec<u8>>;
+    /// Data-frame bytes shipped so far (control frames excluded — this
+    /// is the ledger cross-validated against `NetworkSim`).
+    fn data_bytes_out(&self) -> u64;
+    /// Data-frame bytes received so far (control frames excluded).
+    fn data_bytes_in(&self) -> u64;
+}
+
+/// Whether a raw frame is a control frame (for byte-ledger
+/// classification without a full decode). Truncated buffers count as
+/// control so they never pollute the data ledger.
+pub fn frame_is_control(frame: &[u8]) -> bool {
+    frame
+        .get(5)
+        .and_then(|&b| crate::wire::MsgType::from_u8(b).ok())
+        .map(|m| m.is_control())
+        .unwrap_or(true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_parses_all_three_forms() {
+        assert_eq!(TransportSpec::parse("sim").unwrap(), TransportSpec::Sim);
+        assert_eq!(TransportSpec::parse("SIM").unwrap(), TransportSpec::Sim);
+        assert_eq!(
+            TransportSpec::parse("serve:127.0.0.1:7070").unwrap(),
+            TransportSpec::Serve("127.0.0.1:7070".into())
+        );
+        assert_eq!(
+            TransportSpec::parse("connect:localhost:9") .unwrap(),
+            TransportSpec::Connect("localhost:9".into())
+        );
+    }
+
+    #[test]
+    fn spec_fails_fast_on_typos() {
+        for bad in [
+            "serv:127.0.0.1:7070",
+            "tcp:127.0.0.1:7070",
+            "serve:",
+            "serve:nohostport",
+            "connect",
+            "",
+            "simx",
+        ] {
+            assert!(TransportSpec::parse(bad).is_err(), "'{bad}' must be rejected");
+        }
+    }
+
+    #[test]
+    fn spec_labels_round_trip() {
+        for t in [
+            TransportSpec::Sim,
+            TransportSpec::Serve("127.0.0.1:7070".into()),
+            TransportSpec::Connect("10.0.0.2:443".into()),
+        ] {
+            assert_eq!(TransportSpec::parse(&t.label()).unwrap(), t);
+        }
+    }
+
+    #[test]
+    fn world_fingerprint_ignores_the_transport_knob_only() {
+        let base = crate::config::ExperimentConfig::default();
+        let serve = base
+            .clone()
+            .with_transport(TransportSpec::Serve("127.0.0.1:7070".into()));
+        let connect = base
+            .clone()
+            .with_transport(TransportSpec::Connect("127.0.0.1:7070".into()));
+        assert_eq!(world_fingerprint(&base), world_fingerprint(&serve));
+        assert_eq!(world_fingerprint(&serve), world_fingerprint(&connect));
+        let mut other = serve.clone();
+        other.train.seed += 1;
+        assert_ne!(world_fingerprint(&serve), world_fingerprint(&other));
+    }
+
+    #[test]
+    fn control_frame_classifier() {
+        use crate::wire::{write_frame, MsgType};
+        assert!(frame_is_control(&write_frame(MsgType::Hello, 0, 0, 0.0, &[])));
+        assert!(!frame_is_control(&write_frame(MsgType::Smashed, 0, 1, 0.0, &[0; 4])));
+        assert!(frame_is_control(&[0u8; 3])); // truncated: never data
+    }
+}

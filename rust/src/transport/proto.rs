@@ -1,0 +1,226 @@
+//! Transport control messages.
+//!
+//! Control traffic rides the same `wire::frame` envelope as tensor
+//! traffic (same magic/version/CRC machinery, `elems = 0`, raw-byte
+//! payloads with fixed little-endian layouts) so one [`super::framing::FrameReader`]
+//! per connection handles everything. Control frames are **excluded from
+//! the data-byte ledger** — they are transport bookkeeping the simulator
+//! never priced, and the cross-validation against `NetworkSim` counts
+//! data frames only.
+
+use crate::wire::{read_frame, write_frame, MsgType};
+use crate::{Error, Result};
+
+/// Client → server join request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Hello {
+    pub client_id: u32,
+    /// FNV-1a of the canonical config JSON. The server refuses a peer
+    /// built from a different config — in the replicated-world design
+    /// both processes must derive the identical deterministic world.
+    pub config_fnv: u64,
+}
+
+/// Server → client join acknowledgement.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HelloAck {
+    /// The next round the server will start (1-based).
+    pub next_round: u32,
+    /// How many `next_batch` draws this client's shard has consumed in
+    /// the server's replicated world. A rejoining client fast-forwards
+    /// its freshly built shard by this many draws so batch labels stay
+    /// aligned with the activations it ships.
+    pub ff_draws: u64,
+    /// When true, a `Broadcast` resync frame (current global prefix)
+    /// follows immediately — the charged `resync_roster` path made
+    /// physical.
+    pub resync: bool,
+}
+
+/// Server → client round kickoff.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RoundStart {
+    pub round: u32,
+    pub steps: u32,
+}
+
+/// Client → server end-of-round report: the loss accumulators the
+/// server needs to reproduce the simulator's round record, plus the
+/// client-side fault tallies (ActGrad CRC failures happen client-side
+/// on a real wire).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RoundEnd {
+    pub local_sum: f64,
+    pub local_n: u64,
+    pub server_sum: f64,
+    pub server_n: u64,
+    pub fallback_steps: u64,
+    pub corruptions: u64,
+}
+
+fn le_u32(b: &[u8], at: usize) -> u32 {
+    u32::from_le_bytes([b[at], b[at + 1], b[at + 2], b[at + 3]])
+}
+
+fn le_u64(b: &[u8], at: usize) -> u64 {
+    let mut x = [0u8; 8];
+    x.copy_from_slice(&b[at..at + 8]);
+    u64::from_le_bytes(x)
+}
+
+fn expect(msg: MsgType, frame: &[u8], payload_len: usize) -> Result<Vec<u8>> {
+    let (h, p) = read_frame(frame)?;
+    if h.msg != msg {
+        return Err(Error::Wire(format!(
+            "expected a {} control frame, got {}",
+            msg.as_str(),
+            h.msg.as_str()
+        )));
+    }
+    if p.len() != payload_len {
+        return Err(Error::Wire(format!(
+            "{} payload is {} bytes, expected {payload_len}",
+            msg.as_str(),
+            p.len()
+        )));
+    }
+    Ok(p.to_vec())
+}
+
+impl Hello {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut p = Vec::with_capacity(12);
+        p.extend_from_slice(&self.client_id.to_le_bytes());
+        p.extend_from_slice(&self.config_fnv.to_le_bytes());
+        write_frame(MsgType::Hello, 0, 0, 0.0, &p)
+    }
+
+    pub fn decode(frame: &[u8]) -> Result<Hello> {
+        let p = expect(MsgType::Hello, frame, 12)?;
+        Ok(Hello {
+            client_id: le_u32(&p, 0),
+            config_fnv: le_u64(&p, 4),
+        })
+    }
+}
+
+impl HelloAck {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut p = Vec::with_capacity(13);
+        p.extend_from_slice(&self.next_round.to_le_bytes());
+        p.extend_from_slice(&self.ff_draws.to_le_bytes());
+        p.push(self.resync as u8);
+        write_frame(MsgType::HelloAck, 0, 0, 0.0, &p)
+    }
+
+    pub fn decode(frame: &[u8]) -> Result<HelloAck> {
+        let p = expect(MsgType::HelloAck, frame, 13)?;
+        Ok(HelloAck {
+            next_round: le_u32(&p, 0),
+            ff_draws: le_u64(&p, 4),
+            resync: p[12] != 0,
+        })
+    }
+}
+
+impl RoundStart {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut p = Vec::with_capacity(8);
+        p.extend_from_slice(&self.round.to_le_bytes());
+        p.extend_from_slice(&self.steps.to_le_bytes());
+        write_frame(MsgType::RoundStart, 0, 0, 0.0, &p)
+    }
+
+    pub fn decode(frame: &[u8]) -> Result<RoundStart> {
+        let p = expect(MsgType::RoundStart, frame, 8)?;
+        Ok(RoundStart {
+            round: le_u32(&p, 0),
+            steps: le_u32(&p, 4),
+        })
+    }
+}
+
+impl RoundEnd {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut p = Vec::with_capacity(48);
+        p.extend_from_slice(&self.local_sum.to_le_bytes());
+        p.extend_from_slice(&self.local_n.to_le_bytes());
+        p.extend_from_slice(&self.server_sum.to_le_bytes());
+        p.extend_from_slice(&self.server_n.to_le_bytes());
+        p.extend_from_slice(&self.fallback_steps.to_le_bytes());
+        p.extend_from_slice(&self.corruptions.to_le_bytes());
+        write_frame(MsgType::RoundEnd, 0, 0, 0.0, &p)
+    }
+
+    pub fn decode(frame: &[u8]) -> Result<RoundEnd> {
+        let p = expect(MsgType::RoundEnd, frame, 48)?;
+        Ok(RoundEnd {
+            local_sum: f64::from_le_bytes(p[0..8].try_into().expect("len checked")),
+            local_n: le_u64(&p, 8),
+            server_sum: f64::from_le_bytes(p[16..24].try_into().expect("len checked")),
+            server_n: le_u64(&p, 24),
+            fallback_steps: le_u64(&p, 32),
+            corruptions: le_u64(&p, 40),
+        })
+    }
+}
+
+/// Payload-free control frames.
+pub fn bye() -> Vec<u8> {
+    write_frame(MsgType::Bye, 0, 0, 0.0, &[])
+}
+
+pub fn nack() -> Vec<u8> {
+    write_frame(MsgType::Nack, 0, 0, 0.0, &[])
+}
+
+/// Message type of a validated frame (for dispatch).
+pub fn msg_of(frame: &[u8]) -> Result<MsgType> {
+    Ok(read_frame(frame)?.0.msg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn control_payloads_round_trip_exactly() {
+        let h = Hello { client_id: 3, config_fnv: 0xDEAD_BEEF_CAFE_F00D };
+        assert_eq!(Hello::decode(&h.encode()).unwrap(), h);
+
+        let a = HelloAck { next_round: 7, ff_draws: 42, resync: true };
+        assert_eq!(HelloAck::decode(&a.encode()).unwrap(), a);
+        let a2 = HelloAck { next_round: 1, ff_draws: 0, resync: false };
+        assert_eq!(HelloAck::decode(&a2.encode()).unwrap(), a2);
+
+        let rs = RoundStart { round: 12, steps: 4 };
+        assert_eq!(RoundStart::decode(&rs.encode()).unwrap(), rs);
+
+        let re = RoundEnd {
+            local_sum: -1.25e-3,
+            local_n: 4,
+            server_sum: 7.0 / 3.0,
+            server_n: 3,
+            fallback_steps: 1,
+            corruptions: 2,
+        };
+        let got = RoundEnd::decode(&re.encode()).unwrap();
+        assert_eq!(got.local_sum.to_bits(), re.local_sum.to_bits());
+        assert_eq!(got.server_sum.to_bits(), re.server_sum.to_bits());
+        assert_eq!((got.local_n, got.server_n), (re.local_n, re.server_n));
+        assert_eq!((got.fallback_steps, got.corruptions), (1, 2));
+    }
+
+    #[test]
+    fn wrong_type_and_wrong_length_are_rejected() {
+        let h = Hello { client_id: 1, config_fnv: 2 }.encode();
+        assert!(HelloAck::decode(&h).is_err());
+        assert!(RoundStart::decode(&bye()).is_err());
+        // A truncated payload fails the envelope's own length echo.
+        let mut short = h.clone();
+        short.truncate(short.len() - 6);
+        assert!(Hello::decode(&short).is_err());
+        assert_eq!(msg_of(&bye()).unwrap(), MsgType::Bye);
+        assert_eq!(msg_of(&nack()).unwrap(), MsgType::Nack);
+    }
+}

@@ -1,0 +1,868 @@
+//! The served SuperSFL round loop: real sockets under the sim's ledger.
+//!
+//! `run_served` is the transport twin of the orchestrator's `run_ssfl`.
+//! The two processes split the work along the paper's own seam:
+//!
+//! * the **client process** runs the client-side math for real — Phase 1
+//!   on its own shard, the Phase 2/3 fusion, its φ_i head — and ships
+//!   the exact frames the simulator prices (Smashed up, subnetwork
+//!   PrefixUpload at the barrier);
+//! * the **server process** keeps the replicated world: the full
+//!   [`Harness`] with its network simulator, energy meter, clock and
+//!   fault counters, the authoritative super-network, and one *shadow*
+//!   [`ClientState`] per peer. A shadow never trains θ_i — it exists to
+//!   replay the deterministic parts the accounting needs: the label
+//!   draws of the client's RNG stream (bit-equal by construction), the
+//!   prefix geometry, and the loss accumulators injected from each
+//!   round-end report.
+//!
+//! Every exchange the socket carries is *also* priced through the
+//! simulator via [`crate::network::NetLane::exchange_observed`] — the
+//! same arithmetic `exchange_framed` runs, minus the fault roll
+//! (reality already decided delivery). A fault-free loopback run
+//! therefore reproduces the in-process trajectory **bit for bit**:
+//! same round records, same byte ledger, and the measured socket data
+//! bytes equal the simulator's framed ledger
+//! ([`TransportStats::sim_wire_bytes`] is stamped for the cross-check).
+//!
+//! Socket faults map onto the recovery vocabulary the fault-injection
+//! release introduced:
+//!
+//! | socket event                   | recovery path                        |
+//! |--------------------------------|--------------------------------------|
+//! | recv/send fails mid-round      | drop + crash counters, lane stops    |
+//! | dead peer at the next boundary | no lane (like a churned-out client)  |
+//! | reconnect `Hello`              | charged resync via `resync_roster`   |
+//! | frame fails CRC                | corruption counter + `Nack` fallback |
+//! | deterministic timeout pricing  | `Nack` → client's Alg. 3 fallback    |
+//! | too few lanes report           | quorum barrier gates the merge       |
+
+use std::net::{TcpListener, TcpStream};
+
+use crate::client::ClientState;
+use crate::config::ExperimentConfig;
+use crate::fedserver::ClientUpdate;
+use crate::network::{DeviceProfile, Framed, NetLane};
+use crate::orchestrator::engine::{self, RoundLedger};
+use crate::orchestrator::{Harness, RunResult};
+use crate::runtime::Runtime;
+use crate::trace::{InstantKind, SpanKind, TRACK_SERVER};
+use crate::transport::proto::{self, Hello, HelloAck, RoundEnd, RoundStart};
+use crate::transport::tcp::{self, Conn};
+use crate::transport::{shutdown, world_fingerprint, Transport};
+use crate::util::json::JsonValue;
+use crate::util::math;
+use crate::wire::{MsgType, WireScratch};
+use crate::{Error, Result};
+
+/// Socket-side counters for one served run, reported next to the run
+/// metrics and cross-validated against the simulator's byte ledger.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TransportStats {
+    /// Data-frame bytes received over sockets (Smashed + PrefixUpload).
+    pub data_bytes_in: u64,
+    /// Data-frame bytes sent over sockets (ActGrad + Broadcast,
+    /// including reconnect resync broadcasts).
+    pub data_bytes_out: u64,
+    /// Control-frame bytes both ways (Hello/HelloAck/RoundStart/
+    /// RoundEnd/Bye/Nack) — protocol overhead the simulator does not
+    /// price.
+    pub ctl_bytes: u64,
+    /// Frames the incremental readers rejected (CRC, header, bounds).
+    pub frame_errors: u64,
+    /// Reconnects admitted mid-run; each rides the charged
+    /// `resync_roster` path the simulator's crash rejoiners pay.
+    pub resyncs: u64,
+    /// Rounds whose merge was gated because too few live lanes reported
+    /// (the quorum barrier holding against absent peers).
+    pub quorum_holds: u64,
+    /// The simulator's own framed byte ledger at the end of the run
+    /// (up + down). In a fault-free run
+    /// `data_bytes_in + data_bytes_out == sim_wire_bytes`.
+    pub sim_wire_bytes: u64,
+}
+
+impl TransportStats {
+    pub fn to_json(&self, spec_label: &str) -> JsonValue {
+        let n = |v: u64| JsonValue::Number(v as f64);
+        let mut o = JsonValue::object();
+        o.set("spec", JsonValue::String(spec_label.to_string()));
+        o.set("socket_data_bytes_in", n(self.data_bytes_in));
+        o.set("socket_data_bytes_out", n(self.data_bytes_out));
+        o.set("socket_ctl_bytes", n(self.ctl_bytes));
+        o.set("frame_errors", n(self.frame_errors));
+        o.set("resyncs", n(self.resyncs));
+        o.set("quorum_holds", n(self.quorum_holds));
+        o.set("sim_wire_bytes", n(self.sim_wire_bytes));
+        o
+    }
+
+    /// Fold a finished (or dying) connection's byte ledgers in. Called
+    /// before a connection is dropped so mid-run deaths don't lose
+    /// their traffic from the cross-check.
+    fn retire(&mut self, conn: &Conn) {
+        self.data_bytes_in += conn.data_bytes_in();
+        self.data_bytes_out += conn.data_bytes_out();
+        let (ci, co) = conn.control_bytes();
+        self.ctl_bytes += ci + co;
+        self.frame_errors += conn.frame_errors();
+    }
+}
+
+/// One connected client's worker-thread context for a round: its shadow
+/// state, its socket, lane-local server buffers and the round ledger —
+/// the TCP twin of the orchestrator's `SsflLane`.
+struct TcpLane<'a> {
+    shadow: &'a mut ClientState,
+    conn: &'a mut Conn,
+    profile: DeviceProfile,
+    srv: &'a mut Vec<f32>,
+    clf: &'a mut Vec<f32>,
+    srv_time: f64,
+    steps: usize,
+    net: NetLane,
+    ledger: RoundLedger,
+    round: u32,
+    /// Shadow batch draws this round (folded into the server's
+    /// fast-forward table so a rejoiner can resume the RNG stream).
+    draws: u64,
+    /// The socket died mid-round: the lane stops where the sim's
+    /// mid-round crash would, and the peer is retired at the barrier.
+    dead: bool,
+    /// The client's PrefixUpload frame, received at end of round and
+    /// consumed by the main-thread aggregation barrier.
+    upload: Option<Vec<u8>>,
+}
+
+/// Round-roster entry (the TCP twin of the orchestrator's `LaneSlot`):
+/// fixed before the fan-out from connectivity + shard geometry alone.
+struct Slot {
+    ci: usize,
+    profile: DeviceProfile,
+    srv_len: usize,
+    srv_time: f64,
+    steps: usize,
+}
+
+/// Handshake one fresh socket: read `Hello`, verify the peer built the
+/// same world, reply `HelloAck`. Returns the admitted client id and its
+/// connection; the caller picks the resume coordinates (`next_round`,
+/// the shard-RNG fast-forward count) and whether a resync follows.
+fn handshake(
+    stream: TcpStream,
+    fnv: u64,
+    fleet: usize,
+    next_round: u32,
+    draws: &[u64],
+) -> Result<(usize, Conn)> {
+    let mut conn = Conn::new(stream, tcp::DEFAULT_READ_TIMEOUT)?;
+    let hello = Hello::decode(&conn.recv()?)?;
+    let ci = hello.client_id as usize;
+    if ci >= fleet {
+        return Err(Error::Config(format!(
+            "hello from client id {ci} but the fleet has {fleet} clients"
+        )));
+    }
+    if hello.config_fnv != fnv {
+        return Err(Error::Config(format!(
+            "client {ci} built a different world (config fingerprint {:016x}, server has \
+             {:016x}) — every process must run the exact same config",
+            hello.config_fnv, fnv
+        )));
+    }
+    conn.send(
+        &HelloAck {
+            next_round,
+            ff_draws: draws[ci],
+            resync: next_round > 1,
+        }
+        .encode(),
+    )?;
+    Ok((ci, conn))
+}
+
+/// Run the SuperSFL experiment as the server process: bind `addr`, wait
+/// for the whole fleet to say `Hello`, then drive the round protocol
+/// over sockets while the replicated simulator keeps the books.
+pub fn run_served(
+    rt: &Runtime,
+    cfg: &ExperimentConfig,
+    addr: &str,
+) -> Result<(RunResult, TransportStats)> {
+    let mut h = Harness::prepare(rt, cfg)?;
+    let fleet = h.cfg.fleet.clients;
+    let fnv = world_fingerprint(&h.cfg);
+    let mut stats = TransportStats::default();
+    let mut draws = vec![0u64; fleet];
+
+    let listener = TcpListener::bind(addr)?;
+    eprintln!("transport: serving on {addr}, waiting for {fleet} clients (world {fnv:016x})");
+    let mut conns: Vec<Option<Conn>> = (0..fleet).map(|_| None).collect();
+    while conns.iter().any(|c| c.is_none()) {
+        let (stream, peer) = listener.accept()?;
+        // Fleet assembly is strict: a bad handshake here is a
+        // misconfigured launch, not survivable churn.
+        let (ci, conn) = handshake(stream, fnv, fleet, 1, &draws)?;
+        if let Some(old) = conns[ci].take() {
+            stats.retire(&old);
+        }
+        eprintln!("transport: client {ci} connected from {peer}");
+        conns[ci] = Some(conn);
+    }
+    // Reconnects are drained non-blockingly at round boundaries.
+    listener.set_nonblocking(true)?;
+
+    // ---- The run constants, exactly as `run_ssfl` resolves them ----
+    let classes = h.cfg.data.classes;
+    let batch_n = rt.model().batch;
+    let dim = rt.model().dim;
+    let local_steps = h.cfg.train.local_steps;
+    let lr_server = h.cfg.train.lr_server as f32;
+    let server_flops = h.cfg.fleet.server_gflops * 1e9;
+    let threads = h.cfg.threads;
+    let enc_len = h.server.enc.len();
+    let clf_len = h.server.clf_s.len();
+    let smashed = h.cost.smashed_bytes(dim);
+    let smashed_elems = rt.model().smashed_elems();
+    let gz_frame_len = h.wire.frame_len(MsgType::ActGrad, smashed_elems);
+    let fc = h.cfg.net.faults.clone();
+    let lane_trace = h.tracer.as_ref().is_some_and(|t| t.lane_events_enabled());
+
+    let mut lane_srv: Vec<Vec<f32>> = Vec::new();
+    let mut lane_clf: Vec<Vec<f32>> = Vec::new();
+    let mut enc_snapshot = vec![0.0f32; enc_len];
+    let mut clf_snapshot = vec![0.0f32; clf_len];
+    let mut bar_scratch = WireScratch::default();
+
+    for round in 1..=h.cfg.train.rounds {
+        if shutdown::requested() {
+            h.interrupted = Some(round);
+            break;
+        }
+        let round_u = round as u64;
+
+        // ---- Reconnects: drain the listener at the round boundary ----
+        // An admitted rejoiner got resume coordinates in its HelloAck
+        // (the shard-RNG fast-forward count the shadow stands at) and
+        // now receives the physical resync broadcast; flagging the
+        // shadow stale makes `resync_roster` below charge exactly this
+        // download — the same priced path the sim's crash rejoiners
+        // take. (At round 1 nothing has moved yet: a re-dial is a plain
+        // admit, no resync.)
+        loop {
+            let stream = match listener.accept() {
+                Ok((stream, _)) => stream,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) => return Err(e.into()),
+            };
+            match handshake(stream, fnv, fleet, round as u32, &draws) {
+                Ok((ci, mut conn)) => {
+                    if round > 1 {
+                        let prefix_elems = h.client(ci).enc.len();
+                        let frame = h
+                            .wire
+                            .encode_to(
+                                MsgType::Broadcast,
+                                &h.server.enc[..prefix_elems],
+                                0.0,
+                                &mut bar_scratch,
+                            )
+                            .to_vec();
+                        if let Err(e) = conn.send(&frame) {
+                            eprintln!("transport: client {ci} died during resync: {e}");
+                            stats.retire(&conn);
+                            continue;
+                        }
+                        // Stale like a crash rejoiner: the charged
+                        // resync below clears it (kept at 0 while
+                        // disconnected so absent peers never charge
+                        // phantom resyncs).
+                        h.client_mut(ci).missed_rounds = 1;
+                        stats.resyncs += 1;
+                    }
+                    if let Some(old) = conns[ci].take() {
+                        stats.retire(&old);
+                    }
+                    conns[ci] = Some(conn);
+                    eprintln!("transport: client {ci} reconnected at round {round}");
+                }
+                Err(e) => eprintln!("transport: rejected connection: {e}"),
+            }
+        }
+
+        let roster = h.roster(round);
+        h.materialize_cohort(rt, &roster)?;
+        h.net.begin_round();
+        let server_up = h.net.server_available();
+
+        // Charged resync for this round's rejoiners — identical path
+        // (and identical pricing) to the sim's churn barrier.
+        let (sitting_out, resync_faults) = h.resync_roster(round_u, &roster, &fc);
+
+        // ---- Lane roster: connected peers with data ----
+        let mut slots: Vec<Slot> = Vec::with_capacity(roster.len());
+        for &ci in &roster {
+            if conns[ci].is_none() || sitting_out.binary_search(&ci).is_ok() {
+                continue;
+            }
+            let c = h.client(ci);
+            if c.shard.is_empty() {
+                continue;
+            }
+            slots.push(Slot {
+                ci,
+                profile: h.profile(ci),
+                srv_len: enc_len - h.server.prefix_len(c.depth),
+                srv_time: h.server_step_time(c.depth),
+                steps: local_steps,
+            });
+        }
+
+        if lane_srv.len() < slots.len() {
+            lane_srv.resize_with(slots.len(), Vec::new);
+            lane_clf.resize_with(slots.len(), Vec::new);
+        }
+        for (j, s) in slots.iter().enumerate() {
+            lane_srv[j].resize(s.srv_len, 0.0);
+            lane_clf[j].resize(clf_len, 0.0);
+            if server_up {
+                lane_srv[j].copy_from_slice(&h.server.enc[enc_len - s.srv_len..]);
+                lane_clf[j].copy_from_slice(&h.server.clf_s);
+            }
+        }
+        let lane_f32: usize = lane_srv[..slots.len()].iter().map(|b| b.len()).sum::<usize>()
+            + lane_clf[..slots.len()].iter().map(|b| b.len()).sum::<usize>();
+        h.pool_stats.max_lane_f32 = h.pool_stats.max_lane_f32.max(lane_f32);
+        if server_up {
+            enc_snapshot.copy_from_slice(&h.server.enc);
+            clf_snapshot.copy_from_slice(&h.server.clf_s);
+        }
+
+        // ---- Fan out: one lane per connected peer ----
+        // Folds to `(ledger, dead, upload frame, shadow draws)` per
+        // lane, slot order (== client-id order).
+        let folded: Vec<(RoundLedger, bool, Option<Vec<u8>>, u64)> = {
+            let Harness {
+                clients,
+                net,
+                cost,
+                train,
+                wire,
+                ..
+            } = &mut h;
+            let cost = &*cost;
+            let train = &*train;
+            let wire = &*wire;
+
+            let mut lanes: Vec<TcpLane<'_>> = Vec::with_capacity(slots.len());
+            let mut srv_it = lane_srv.iter_mut();
+            let mut clf_it = lane_clf.iter_mut();
+            let mut slot_it = slots.iter().peekable();
+            for ((ci, shadow), conn) in clients.iter_mut().enumerate().zip(conns.iter_mut()) {
+                let Some(s) = slot_it.peek() else { break };
+                if s.ci != ci {
+                    continue;
+                }
+                let s = slot_it.next().expect("peeked");
+                let mut lane_net = net.lane(ci, round_u);
+                if lane_trace {
+                    lane_net.enable_attempt_log();
+                }
+                lanes.push(TcpLane {
+                    shadow,
+                    conn: conn.as_mut().expect("slots only cover connected peers"),
+                    profile: s.profile,
+                    srv: srv_it.next().expect("lane buffers pooled to slots"),
+                    clf: clf_it.next().expect("lane buffers pooled to slots"),
+                    srv_time: s.srv_time,
+                    steps: s.steps,
+                    net: lane_net,
+                    ledger: RoundLedger::traced(ci, lane_trace),
+                    round: round as u32,
+                    draws: 0,
+                    dead: false,
+                    upload: None,
+                });
+            }
+            debug_assert!(slot_it.peek().is_none(), "every slot found its peer");
+
+            engine::run_lanes(threads, &mut lanes, |lane| {
+                let depth = lane.shadow.depth;
+                let srv_time = lane.srv_time;
+                lane.shadow.begin_round();
+                if lane
+                    .conn
+                    .send(
+                        &RoundStart {
+                            round: lane.round,
+                            steps: lane.steps as u32,
+                        }
+                        .encode(),
+                    )
+                    .is_err()
+                {
+                    lane.dead = true;
+                    return Ok(());
+                }
+                for _ in 0..lane.steps {
+                    // Shadow draw: the same RNG stream the client's own
+                    // shard advances, so labels (and the fast-forward
+                    // count a rejoiner resumes from) stay in lockstep.
+                    let batch = lane.shadow.shard.next_batch(train, batch_n);
+                    lane.draws += 1;
+
+                    // Phase 1 runs on the client process; its cost is
+                    // priced here exactly as the sim prices it.
+                    let t1 = cost.time_s(cost.client_local_flops(depth), lane.profile.flops);
+                    let p1_t0 = lane.ledger.branch_s;
+                    lane.ledger.work(&lane.profile, t1);
+                    lane.ledger.trace.span(SpanKind::LocalUpdate, p1_t0, t1, 0, 0);
+
+                    // The uplink frame size is a pure function of
+                    // (msg, elems) — priced before (and whether or not)
+                    // the bytes actually arrive, exactly like the sim.
+                    let up_len = wire.frame_len(MsgType::Smashed, smashed_elems);
+                    let up_frame = match lane.conn.recv() {
+                        Ok(f) => f,
+                        Err(_) => {
+                            // The socket died mid-exchange: price it as
+                            // the drop fault class (uplink charged, no
+                            // response) and stop the lane where a sim
+                            // mid-round crash would.
+                            let ex = lane.net.exchange_observed(
+                                Framed {
+                                    wire: up_len,
+                                    raw: smashed,
+                                },
+                                Framed {
+                                    wire: gz_frame_len,
+                                    raw: smashed,
+                                },
+                                srv_time,
+                                false,
+                            );
+                            lane.ledger.exchange(&lane.profile, ex.time_s(), srv_time);
+                            lane.dead = true;
+                            return Ok(());
+                        }
+                    };
+                    if proto::msg_of(&up_frame)? != MsgType::Smashed {
+                        return Err(Error::Wire(format!(
+                            "client {} sent a {} frame where Smashed was due",
+                            lane.ledger.client,
+                            proto::msg_of(&up_frame)?.as_str()
+                        )));
+                    }
+                    if up_frame.len() as u64 != up_len {
+                        return Err(Error::Wire(format!(
+                            "client {} Smashed frame is {} bytes but the exchange is \
+                             priced at {up_len} — frame pricing drifted from encoding",
+                            lane.ledger.client,
+                            up_frame.len()
+                        )));
+                    }
+                    lane.ledger
+                        .trace
+                        .span(SpanKind::Encode, lane.ledger.branch_s, 0.0, up_len, 0);
+                    let ex_t0 = lane.ledger.branch_s;
+                    let ex = lane.net.exchange_observed(
+                        Framed {
+                            wire: up_len,
+                            raw: smashed,
+                        },
+                        Framed {
+                            wire: gz_frame_len,
+                            raw: smashed,
+                        },
+                        srv_time,
+                        true,
+                    );
+                    lane.ledger.exchange(&lane.profile, ex.time_s(), srv_time);
+                    lane.ledger
+                        .trace
+                        .exchange_spans(ex_t0, &lane.net.attempts, up_len);
+
+                    if ex.is_ok() {
+                        if wire
+                            .decode_into(&up_frame, &mut lane.net.scratch.decoded)
+                            .is_err()
+                        {
+                            // Smashed frame corrupt end to end: an
+                            // exchange fault, not an abort. Nack tells
+                            // the client to take its Alg. 3 fallback for
+                            // this step (it reports the fallback in its
+                            // RoundEnd, which overwrites this ledger's
+                            // fallback count below).
+                            lane.net.faults.corruptions += 1;
+                            lane.ledger
+                                .trace
+                                .instant(InstantKind::Corruption, lane.ledger.branch_s);
+                            if lane.conn.send(&proto::nack()).is_err() {
+                                lane.dead = true;
+                                return Ok(());
+                            }
+                            lane.ledger
+                                .trace
+                                .span(SpanKind::Fallback, lane.ledger.branch_s, 0.0, 0, 0);
+                            continue;
+                        }
+                        let out = rt.server_step(
+                            depth,
+                            classes,
+                            &*lane.srv,
+                            &*lane.clf,
+                            &lane.net.scratch.decoded,
+                            &batch.y,
+                        )?;
+                        math::sgd_step(lane.srv, &out.g_srv, lr_server);
+                        math::sgd_step(lane.clf, &out.g_clf_s, lr_server);
+                        lane.ledger.server_step(srv_time);
+                        // aux carries l_server (f32→f64 exact) in the
+                        // same slot the sim loop fills — sim and socket
+                        // ActGrad frames are byte-identical.
+                        let frame = wire.encode_to(
+                            MsgType::ActGrad,
+                            &out.g_z,
+                            f64::from(out.loss),
+                            &mut lane.net.scratch,
+                        );
+                        if frame.len() as u64 != gz_frame_len {
+                            return Err(Error::Wire(format!(
+                                "ActGrad frame is {} bytes but the exchange was charged \
+                                 {gz_frame_len} — frame pricing drifted from encoding",
+                                frame.len()
+                            )));
+                        }
+                        if lane.conn.send(frame).is_err() {
+                            lane.dead = true;
+                            return Ok(());
+                        }
+                        lane.ledger.trace.span(
+                            SpanKind::Decode,
+                            lane.ledger.branch_s,
+                            0.0,
+                            gz_frame_len,
+                            0,
+                        );
+                        let t23 = cost.time_s(
+                            cost.client_bwd_flops(depth) + cost.tpgf_fuse_flops(depth),
+                            lane.profile.flops,
+                        );
+                        let f_t0 = lane.ledger.branch_s;
+                        lane.ledger.work(&lane.profile, t23);
+                        lane.ledger.trace.span(SpanKind::Fusion, f_t0, t23, 0, 0);
+                    } else {
+                        // Deterministic pricing says this exchange timed
+                        // out. The physical reply is withheld (Nack) so
+                        // the client takes the same Alg. 3 fallback its
+                        // sim twin takes — the replicated worlds stay in
+                        // lockstep even under timeout-tight configs.
+                        if lane.conn.send(&proto::nack()).is_err() {
+                            lane.dead = true;
+                            return Ok(());
+                        }
+                        lane.ledger
+                            .trace
+                            .span(SpanKind::Fallback, lane.ledger.branch_s, 0.0, 0, 0);
+                    }
+                }
+
+                // ---- End of round: subnetwork upload + report ----
+                let up_frame = match lane.conn.recv() {
+                    Ok(f) => f,
+                    Err(_) => {
+                        lane.dead = true;
+                        return Ok(());
+                    }
+                };
+                if proto::msg_of(&up_frame)? != MsgType::PrefixUpload {
+                    return Err(Error::Wire(format!(
+                        "client {} sent a {} frame where PrefixUpload was due",
+                        lane.ledger.client,
+                        proto::msg_of(&up_frame)?.as_str()
+                    )));
+                }
+                let re_frame = match lane.conn.recv() {
+                    Ok(f) => f,
+                    Err(_) => {
+                        lane.dead = true;
+                        return Ok(());
+                    }
+                };
+                let re = RoundEnd::decode(&re_frame)?;
+                // Inject the client's exact loss accumulators into the
+                // shadow: `finish_round` and the Eq. 6 aggregation read
+                // the same f64 folds the sim's in-process client builds.
+                lane.shadow
+                    .round_local_loss
+                    .inject_raw(re.local_sum, re.local_n);
+                lane.shadow
+                    .round_server_loss
+                    .inject_raw(re.server_sum, re.server_n);
+                lane.ledger.fallback_steps = re.fallback_steps as usize;
+                // Client-side decode failures are invisible to the
+                // server's own counters; the report carries them.
+                lane.net.faults.corruptions += re.corruptions;
+                lane.upload = Some(up_frame);
+                Ok(())
+            })?;
+
+            lanes
+                .into_iter()
+                .map(|lane| {
+                    net.absorb_lane(&lane.net);
+                    let mut ledger = lane.ledger;
+                    ledger.faults.add(&lane.net.faults);
+                    ledger.wire_bytes = lane.net.traffic.total_bytes();
+                    if lane.dead {
+                        // A mid-round socket death is the crash fault
+                        // class; stamped at the barrier like the sim's
+                        // schedule-driven crashers.
+                        ledger.faults.crashes += 1;
+                        ledger.trace.instant(InstantKind::Crash, ledger.branch_s);
+                    }
+                    (ledger, lane.dead, lane.upload, lane.draws)
+                })
+                .collect()
+        };
+
+        let mut ledgers: Vec<RoundLedger> = Vec::with_capacity(folded.len());
+        let mut dead: Vec<bool> = Vec::with_capacity(folded.len());
+        let mut upload_frames: Vec<Option<Vec<u8>>> = Vec::with_capacity(folded.len());
+        for (ledger, d, upload, dr) in folded {
+            draws[ledger.client] += dr;
+            if d {
+                eprintln!(
+                    "transport: client {} dropped mid-round {round}; \
+                     continuing via the recovery path",
+                    ledger.client
+                );
+                if let Some(old) = conns[ledger.client].take() {
+                    stats.retire(&old);
+                }
+            }
+            ledgers.push(ledger);
+            dead.push(d);
+            upload_frames.push(upload);
+        }
+
+        let (round_dt, busy, fallback_steps, server_steps, mut faults) =
+            h.absorb_ledgers(&mut ledgers);
+        faults.add(&resync_faults);
+
+        // ---- Merge lane server deltas (quorum-gated, 1/n_live) ----
+        // Identical arithmetic to the sim loop; dead lanes play the
+        // role of its mid-round crashers (no report, no merge).
+        let n_live = slots.len();
+        let reporting = ledgers
+            .iter()
+            .zip(dead.iter())
+            .filter(|(l, d)| l.server_steps > 0 && !**d)
+            .count();
+        let quorum_ok = fc.quorum_met(reporting, n_live);
+        if server_up && n_live > 0 && !quorum_ok {
+            stats.quorum_holds += 1;
+            eprintln!(
+                "transport: quorum held at round {round} ({reporting}/{n_live} lanes reported)"
+            );
+        }
+        if server_up && n_live > 0 && quorum_ok {
+            let inv_n = 1.0f32 / n_live as f32;
+            for j in 0..slots.len() {
+                if dead[j] {
+                    continue;
+                }
+                let srv = &lane_srv[j];
+                let off = enc_len - srv.len();
+                let dst = &mut h.server.enc[off..];
+                for ((d, &l), &p) in dst.iter_mut().zip(srv.iter()).zip(enc_snapshot[off..].iter())
+                {
+                    *d += (l - p) * inv_n;
+                }
+                for ((d, &l), &p) in h
+                    .server
+                    .clf_s
+                    .iter_mut()
+                    .zip(lane_clf[j].iter())
+                    .zip(clf_snapshot.iter())
+                {
+                    *d += (l - p) * inv_n;
+                }
+            }
+        }
+
+        // ---- Collaborative aggregation (Eq. 6–8) over received frames ----
+        // The sim builds each PrefixUpload frame from its in-process
+        // client; here the frame arrived over the socket. Pricing and
+        // decode are identical — and the frame length is checked against
+        // the priced length, failing loudly if the worlds diverged.
+        let mut agg_entries: Vec<(usize, f64)> = roster.iter().map(|&id| (id, 0.0)).collect();
+        let mut uploads: Vec<(usize, usize, Vec<f32>, f64)> = Vec::with_capacity(slots.len());
+        let agg_t0 = h.clock.now();
+        let mut agg_bytes = 0u64;
+        for (j, s) in slots.iter().enumerate() {
+            if dead[j] {
+                continue;
+            }
+            let Some(frame) = upload_frames[j].take() else {
+                continue;
+            };
+            let ci = s.ci;
+            let (prefix_elems, upload_elems) = {
+                let c = h.client(ci);
+                (c.enc.len(), c.upload_elems())
+            };
+            let frame_len = frame.len() as u64;
+            let priced = h.wire.frame_len(MsgType::PrefixUpload, upload_elems);
+            if frame_len != priced {
+                return Err(Error::Wire(format!(
+                    "client {ci} PrefixUpload frame is {frame_len} bytes but its \
+                     subnetwork prices at {priced} — replicated worlds diverged"
+                )));
+            }
+            let t = h.net.bulk_up_framed(
+                ci,
+                Framed {
+                    wire: frame_len,
+                    raw: (upload_elems * 4) as u64,
+                },
+            );
+            let pos = roster.binary_search(&ci).expect("slot drawn from roster");
+            agg_entries[pos].1 = t;
+            agg_bytes += frame_len;
+            let dec = h.wire.decode(&frame)?;
+            uploads.push((ci, prefix_elems, dec.data, dec.aux));
+        }
+        h.charge_barrier_phase(&agg_entries);
+
+        if !uploads.is_empty() {
+            let updates: Vec<ClientUpdate<'_>> = uploads
+                .iter()
+                .map(|(ci, prefix_elems, data, loss)| {
+                    let c = h.client(*ci);
+                    ClientUpdate {
+                        client: c.id,
+                        depth: c.depth,
+                        params: &data[..*prefix_elems],
+                        loss: *loss,
+                    }
+                })
+                .collect();
+            h.server
+                .aggregate_updates(&updates, h.cfg.ssfl.lambda, h.cfg.ssfl.eps);
+            let agg_compute = h.cost.time_s(2.0 * enc_len as f64, server_flops);
+            h.meter.server_busy(agg_compute);
+            h.clock.advance(agg_compute);
+        }
+        let n_uploads = uploads.len() as u64;
+        let agg_dur = h.clock.now() - agg_t0;
+        if let Some(tr) = h.tracer.as_mut() {
+            tr.track_span(
+                TRACK_SERVER,
+                SpanKind::Aggregate,
+                agg_t0,
+                agg_dur,
+                agg_bytes,
+                n_uploads,
+            );
+        }
+
+        // ---- Broadcast the refreshed prefixes, physically ----
+        // Peers sharing a depth receive byte-identical frames: encode
+        // once per distinct prefix length, ship each its copy, charge
+        // each its copy.
+        let mut bc_entries: Vec<(usize, f64)> = roster.iter().map(|&id| (id, 0.0)).collect();
+        // (prefix elems, frame, decoded tensor) per distinct depth.
+        let mut bc_cache: Vec<(usize, Vec<u8>, Vec<f32>)> = Vec::new();
+        let bc_t0 = h.clock.now();
+        let mut bc_bytes = 0u64;
+        let mut bc_count = 0u64;
+        for (j, s) in slots.iter().enumerate() {
+            if dead[j] {
+                continue;
+            }
+            let ci = s.ci;
+            let prefix_elems = h.client(ci).enc.len();
+            let cache_slot = match bc_cache.iter().position(|(e, _, _)| *e == prefix_elems) {
+                Some(i) => i,
+                None => {
+                    let frame = h
+                        .wire
+                        .encode_to(
+                            MsgType::Broadcast,
+                            &h.server.enc[..prefix_elems],
+                            0.0,
+                            &mut bar_scratch,
+                        )
+                        .to_vec();
+                    let dec = h.wire.decode(&frame)?;
+                    bc_cache.push((prefix_elems, frame, dec.data));
+                    bc_cache.len() - 1
+                }
+            };
+            let frame_bytes = bc_cache[cache_slot].1.len() as u64;
+            let t = h.net.bulk_down_framed(
+                ci,
+                Framed {
+                    wire: frame_bytes,
+                    raw: (prefix_elems * 4) as u64,
+                },
+            );
+            let pos = roster.binary_search(&ci).expect("slot drawn from roster");
+            bc_entries[pos].1 = t;
+            bc_bytes += frame_bytes;
+            bc_count += 1;
+            let delivered = match conns[ci].as_mut() {
+                Some(conn) => conn.send(&bc_cache[cache_slot].1).is_ok(),
+                None => false,
+            };
+            if !delivered {
+                eprintln!("transport: client {ci} died at broadcast");
+                if let Some(old) = conns[ci].take() {
+                    stats.retire(&old);
+                }
+                continue;
+            }
+            h.client_mut(ci).sync_from_global(&bc_cache[cache_slot].2);
+        }
+        h.charge_barrier_phase(&bc_entries);
+        let bc_dur = h.clock.now() - bc_t0;
+        if let Some(tr) = h.tracer.as_mut() {
+            tr.track_span(
+                TRACK_SERVER,
+                SpanKind::Broadcast,
+                bc_t0,
+                bc_dur,
+                bc_bytes,
+                bc_count,
+            );
+        }
+
+        // ---- Evaluate + record ----
+        let acc = h.eval_global(rt)?;
+        let hit = h.finish_round(
+            round,
+            round_dt,
+            &roster,
+            &busy,
+            acc,
+            fallback_steps,
+            server_steps,
+            faults,
+        );
+        if hit {
+            break;
+        }
+    }
+
+    // Teardown: every surviving peer gets a Bye; its byte ledgers fold
+    // into the cross-check totals.
+    for conn in conns.iter_mut().flatten() {
+        let _ = conn.send(&proto::bye());
+    }
+    for conn in conns.into_iter().flatten() {
+        stats.retire(&conn);
+    }
+    stats.sim_wire_bytes = h.net.traffic.total_bytes();
+    Ok((h.finalize(), stats))
+}

@@ -1,0 +1,77 @@
+//! SIGINT/SIGTERM latch for graceful shutdown.
+//!
+//! A long run killed at round 40/50 used to lose everything — artifacts
+//! were only written after the loop. With the latch installed, the round
+//! loops (sim and served alike) check [`requested`] at each round
+//! boundary and break early; `main` then flushes the partial CSV/JSON
+//! artifacts through the same `util/fs` atomic-write path a completed
+//! run uses and reports the interrupted round.
+//!
+//! Zero dependencies: the handler is registered through the C `signal`
+//! interface the platform libc already links (std itself links libc on
+//! unix), and does nothing but set one atomic flag — the only
+//! async-signal-safe thing worth doing. Non-unix builds compile to a
+//! no-op install.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+static SHUTDOWN: AtomicBool = AtomicBool::new(false);
+
+#[cfg(unix)]
+mod sys {
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+
+    extern "C" fn on_signal(_sig: i32) {
+        super::SHUTDOWN.store(true, std::sync::atomic::Ordering::SeqCst);
+    }
+
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+
+    pub fn install() {
+        unsafe {
+            signal(SIGINT, on_signal);
+            signal(SIGTERM, on_signal);
+        }
+    }
+}
+
+#[cfg(not(unix))]
+mod sys {
+    pub fn install() {}
+}
+
+/// Register the SIGINT/SIGTERM handler (idempotent).
+pub fn install() {
+    sys::install();
+}
+
+/// Whether a shutdown signal has arrived. Checked by the round loops at
+/// round boundaries.
+pub fn requested() -> bool {
+    SHUTDOWN.load(Ordering::SeqCst)
+}
+
+/// Tests (and nothing else) reset the latch.
+pub fn reset() {
+    SHUTDOWN.store(false, Ordering::SeqCst);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latch_starts_clear_and_resets() {
+        // The process-global latch may have been set by a sibling test's
+        // raise; normalize first.
+        reset();
+        assert!(!requested());
+        SHUTDOWN.store(true, Ordering::SeqCst);
+        assert!(requested());
+        reset();
+        assert!(!requested());
+    }
+}

@@ -1,0 +1,293 @@
+//! Blocking TCP connection speaking the `wire::frame` envelope.
+//!
+//! One [`Conn`] per peer: frames go out through the bounded
+//! [`WriteBuf`] staging (plus the kernel send-buffer's own
+//! backpressure), and come back through the incremental [`FrameReader`]
+//! — partial reads, coalesced frames and adversarial segment boundaries
+//! are all handled by the reassembler, never by ad-hoc socket logic.
+//!
+//! Failure surface: read timeouts, EOF (peer died), reset connections
+//! and framing violations all return [`crate::Error`] — the protocol
+//! loops map them onto the PR 6 fault classes (timeout/drop/crash) and
+//! take the recovery path instead of aborting.
+
+use std::io::Read;
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::{Duration, Instant};
+
+use super::framing::{FrameReader, WriteBuf};
+use super::{frame_is_control, Transport};
+use crate::{Error, Result};
+
+/// Read timeout on an established connection. Generous: a client waits
+/// on `RoundStart` while the server runs eval + barriers for the whole
+/// fleet; a dead peer surfaces as EOF/reset long before this fires.
+pub const DEFAULT_READ_TIMEOUT: Duration = Duration::from_secs(120);
+/// How long a client keeps re-dialing the server before giving up
+/// (covers a server still binding, and reconnect-after-kill).
+pub const DEFAULT_DIAL_TIMEOUT: Duration = Duration::from_secs(30);
+/// Per-peer write staging bound (frames above this write straight
+/// through; below it they coalesce into one syscall).
+const WRITE_STAGE_BYTES: usize = 256 * 1024;
+
+/// One framed peer connection.
+#[derive(Debug)]
+pub struct Conn {
+    stream: TcpStream,
+    reader: FrameReader,
+    wbuf: WriteBuf,
+    data_in: u64,
+    data_out: u64,
+    ctl_in: u64,
+    ctl_out: u64,
+}
+
+impl Conn {
+    pub fn new(stream: TcpStream, read_timeout: Duration) -> Result<Conn> {
+        stream.set_nodelay(true).map_err(Error::Io)?;
+        stream
+            .set_read_timeout(Some(read_timeout))
+            .map_err(Error::Io)?;
+        stream
+            .set_write_timeout(Some(read_timeout))
+            .map_err(Error::Io)?;
+        Ok(Conn {
+            stream,
+            reader: FrameReader::new(),
+            wbuf: WriteBuf::with_capacity(WRITE_STAGE_BYTES),
+            data_in: 0,
+            data_out: 0,
+            ctl_in: 0,
+            ctl_out: 0,
+        })
+    }
+
+    /// Dial `addr`, retrying with a short sleep until `timeout` elapses
+    /// — the fleet races the server's bind, and a reconnecting client
+    /// races the server's round boundary.
+    pub fn dial(addr: &str, timeout: Duration) -> Result<Conn> {
+        let deadline = Instant::now() + timeout;
+        let mut last: Option<std::io::Error> = None;
+        loop {
+            let addrs: Vec<_> = addr
+                .to_socket_addrs()
+                .map_err(|e| Error::Config(format!("transport address '{addr}': {e}")))?
+                .collect();
+            for sa in &addrs {
+                match TcpStream::connect_timeout(sa, Duration::from_secs(2)) {
+                    Ok(s) => return Conn::new(s, DEFAULT_READ_TIMEOUT),
+                    Err(e) => last = Some(e),
+                }
+            }
+            if Instant::now() >= deadline {
+                return Err(Error::Io(last.unwrap_or_else(|| {
+                    std::io::Error::new(std::io::ErrorKind::TimedOut, "connect timed out")
+                })));
+            }
+            std::thread::sleep(Duration::from_millis(100));
+        }
+    }
+
+    /// Control-frame bytes moved (telemetry; excluded from the
+    /// cross-validated data ledger).
+    pub fn control_bytes(&self) -> (u64, u64) {
+        (self.ctl_in, self.ctl_out)
+    }
+
+    /// Framing rejections observed on this connection.
+    pub fn frame_errors(&self) -> u64 {
+        self.reader.errors()
+    }
+}
+
+impl Transport for Conn {
+    fn send(&mut self, frame: &[u8]) -> Result<()> {
+        // Stage + flush every frame: the protocol is request/response,
+        // so latency beats batching; the bound still protects the
+        // broadcast fan-out path if a caller queues without flushing.
+        self.wbuf.queue(&mut self.stream, frame)?;
+        self.wbuf.flush(&mut self.stream)?;
+        if frame_is_control(frame) {
+            self.ctl_out += frame.len() as u64;
+        } else {
+            self.data_out += frame.len() as u64;
+        }
+        Ok(())
+    }
+
+    fn recv(&mut self) -> Result<Vec<u8>> {
+        let mut chunk = [0u8; 64 * 1024];
+        loop {
+            if let Some(frame) = self.reader.poll()? {
+                if frame_is_control(&frame) {
+                    self.ctl_in += frame.len() as u64;
+                } else {
+                    self.data_in += frame.len() as u64;
+                }
+                return Ok(frame);
+            }
+            let n = self.stream.read(&mut chunk).map_err(Error::Io)?;
+            if n == 0 {
+                return Err(Error::Io(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    if self.reader.pending() > 0 {
+                        "peer closed mid-frame"
+                    } else {
+                        "peer closed"
+                    },
+                )));
+            }
+            self.reader.feed(&chunk[..n]);
+        }
+    }
+
+    fn data_bytes_out(&self) -> u64 {
+        self.data_out
+    }
+
+    fn data_bytes_in(&self) -> u64 {
+        self.data_in
+    }
+}
+
+/// In-memory loopback transport (a pair of byte queues), used by unit
+/// tests to drive the protocol logic without sockets — the second
+/// implementor that keeps the [`Transport`] surface honest.
+#[derive(Debug, Default)]
+pub struct Loopback {
+    inbox: std::collections::VecDeque<Vec<u8>>,
+    outbox: std::collections::VecDeque<Vec<u8>>,
+    data_in: u64,
+    data_out: u64,
+}
+
+impl Loopback {
+    pub fn new() -> Loopback {
+        Loopback::default()
+    }
+
+    /// Test harness side: deliver a frame into the inbox.
+    pub fn deliver(&mut self, frame: Vec<u8>) {
+        self.inbox.push_back(frame);
+    }
+
+    /// Test harness side: take what the code under test sent.
+    pub fn take_sent(&mut self) -> Option<Vec<u8>> {
+        self.outbox.pop_front()
+    }
+}
+
+impl Transport for Loopback {
+    fn send(&mut self, frame: &[u8]) -> Result<()> {
+        if !frame_is_control(frame) {
+            self.data_out += frame.len() as u64;
+        }
+        self.outbox.push_back(frame.to_vec());
+        Ok(())
+    }
+
+    fn recv(&mut self) -> Result<Vec<u8>> {
+        match self.inbox.pop_front() {
+            Some(f) => {
+                if !frame_is_control(&f) {
+                    self.data_in += f.len() as u64;
+                }
+                Ok(f)
+            }
+            None => Err(Error::Io(std::io::Error::new(
+                std::io::ErrorKind::WouldBlock,
+                "loopback inbox empty",
+            ))),
+        }
+    }
+
+    fn data_bytes_out(&self) -> u64 {
+        self.data_out
+    }
+
+    fn data_bytes_in(&self) -> u64 {
+        self.data_in
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::wire::{write_frame, MsgType};
+    use std::io::Write;
+    use std::net::TcpListener;
+
+    /// Frames survive a real socket under adversarial write chunking:
+    /// the sender dribbles bytes in tiny writes, the receiver's
+    /// incremental reader reassembles them byte-identically.
+    #[test]
+    fn socket_roundtrip_under_one_byte_writes() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let frames = vec![
+            write_frame(MsgType::Smashed, 0, 3, 0.5, &[1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12]),
+            write_frame(MsgType::Hello, 0, 0, 0.0, &[0xEE; 12]),
+            write_frame(MsgType::Broadcast, 2, 16, 0.0, &[0x42; 24]),
+        ];
+        let sent = frames.clone();
+        let writer = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.set_nodelay(true).unwrap();
+            for f in &sent {
+                for b in f {
+                    s.write_all(std::slice::from_ref(b)).unwrap();
+                }
+            }
+        });
+        let (stream, _) = listener.accept().unwrap();
+        let mut conn = Conn::new(stream, Duration::from_secs(10)).unwrap();
+        for want in &frames {
+            let got = conn.recv().unwrap();
+            assert_eq!(&got, want);
+        }
+        writer.join().unwrap();
+        // Ledger classification: Smashed + Broadcast are data, Hello is
+        // control.
+        assert_eq!(
+            conn.data_bytes_in(),
+            (frames[0].len() + frames[2].len()) as u64
+        );
+        assert_eq!(conn.control_bytes().0, frames[1].len() as u64);
+        assert_eq!(conn.frame_errors(), 0);
+    }
+
+    #[test]
+    fn peer_death_mid_frame_is_an_error_not_a_hang() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let writer = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            let f = write_frame(MsgType::Smashed, 0, 4, 0.0, &[7u8; 16]);
+            s.write_all(&f[..10]).unwrap(); // die mid-frame
+        });
+        let (stream, _) = listener.accept().unwrap();
+        let mut conn = Conn::new(stream, Duration::from_secs(10)).unwrap();
+        writer.join().unwrap();
+        assert!(conn.recv().is_err());
+    }
+
+    #[test]
+    fn dial_times_out_against_a_dead_address() {
+        // Port 1 on loopback: nothing listens there in this container.
+        let err = Conn::dial("127.0.0.1:1", Duration::from_millis(200));
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn loopback_implements_the_same_surface() {
+        let mut lb = Loopback::new();
+        let data = write_frame(MsgType::ActGrad, 0, 2, 0.0, &[1, 2, 3, 4, 5, 6, 7, 8]);
+        lb.deliver(data.clone());
+        assert_eq!(lb.recv().unwrap(), data);
+        assert_eq!(lb.data_bytes_in(), data.len() as u64);
+        lb.send(&super::super::proto::bye()).unwrap();
+        assert_eq!(lb.data_bytes_out(), 0); // control excluded
+        assert!(lb.take_sent().is_some());
+        assert!(lb.recv().is_err());
+    }
+}

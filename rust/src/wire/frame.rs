@@ -52,6 +52,22 @@ pub enum MsgType {
     /// Post-aggregation downlink: the refreshed parameter broadcast
     /// (prefix for SSFL/SFL, the full backbone for DFL provisioning).
     Broadcast = 4,
+    /// Transport control (TCP mode): client → server join request
+    /// carrying the client id and a config fingerprint.
+    Hello = 5,
+    /// Transport control: server → client join acknowledgement carrying
+    /// the current round and the shard fast-forward count.
+    HelloAck = 6,
+    /// Transport control: server → client round kickoff.
+    RoundStart = 7,
+    /// Transport control: client → server end-of-round report (loss
+    /// accumulators, fallback/corruption counts).
+    RoundEnd = 8,
+    /// Transport control: orderly teardown in either direction.
+    Bye = 9,
+    /// Transport control: server → client negative step response (the
+    /// uplink frame failed its CRC server-side; take the Alg. 3 fallback).
+    Nack = 10,
 }
 
 impl MsgType {
@@ -61,6 +77,12 @@ impl MsgType {
             2 => Ok(MsgType::ActGrad),
             3 => Ok(MsgType::PrefixUpload),
             4 => Ok(MsgType::Broadcast),
+            5 => Ok(MsgType::Hello),
+            6 => Ok(MsgType::HelloAck),
+            7 => Ok(MsgType::RoundStart),
+            8 => Ok(MsgType::RoundEnd),
+            9 => Ok(MsgType::Bye),
+            10 => Ok(MsgType::Nack),
             other => Err(Error::Wire(format!("unknown message type {other}"))),
         }
     }
@@ -71,6 +93,12 @@ impl MsgType {
             MsgType::ActGrad => "act_grad",
             MsgType::PrefixUpload => "prefix_upload",
             MsgType::Broadcast => "broadcast",
+            MsgType::Hello => "hello",
+            MsgType::HelloAck => "hello_ack",
+            MsgType::RoundStart => "round_start",
+            MsgType::RoundEnd => "round_end",
+            MsgType::Bye => "bye",
+            MsgType::Nack => "nack",
         }
     }
 
@@ -80,6 +108,21 @@ impl MsgType {
     /// zeroes most of the model if applied to raw weights.
     pub fn is_params(&self) -> bool {
         matches!(self, MsgType::PrefixUpload | MsgType::Broadcast)
+    }
+
+    /// Whether this is a transport-control frame (raw-byte payload,
+    /// `elems = 0`, never routed through a tensor codec and never charged
+    /// to the data-frame byte ledger).
+    pub fn is_control(&self) -> bool {
+        matches!(
+            self,
+            MsgType::Hello
+                | MsgType::HelloAck
+                | MsgType::RoundStart
+                | MsgType::RoundEnd
+                | MsgType::Bye
+                | MsgType::Nack
+        )
     }
 }
 
@@ -281,12 +324,19 @@ mod tests {
         buf[4] = 9; // future version
         assert!(matches!(read_frame(&buf), Err(crate::Error::Wire(_))));
         assert!(MsgType::from_u8(0).is_err());
-        assert!(MsgType::from_u8(5).is_err());
+        assert!(MsgType::from_u8(11).is_err());
+        assert!(MsgType::from_u8(99).is_err());
         for m in [
             MsgType::Smashed,
             MsgType::ActGrad,
             MsgType::PrefixUpload,
             MsgType::Broadcast,
+            MsgType::Hello,
+            MsgType::HelloAck,
+            MsgType::RoundStart,
+            MsgType::RoundEnd,
+            MsgType::Bye,
+            MsgType::Nack,
         ] {
             assert_eq!(MsgType::from_u8(m as u8).unwrap(), m);
         }
@@ -298,6 +348,18 @@ mod tests {
         assert!(!MsgType::ActGrad.is_params());
         assert!(MsgType::PrefixUpload.is_params());
         assert!(MsgType::Broadcast.is_params());
+        for m in [
+            MsgType::Hello,
+            MsgType::HelloAck,
+            MsgType::RoundStart,
+            MsgType::RoundEnd,
+            MsgType::Bye,
+            MsgType::Nack,
+        ] {
+            assert!(m.is_control() && !m.is_params());
+        }
+        assert!(!MsgType::Smashed.is_control());
+        assert!(!MsgType::Broadcast.is_control());
     }
 
     #[test]

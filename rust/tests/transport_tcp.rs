@@ -1,0 +1,417 @@
+//! Loopback end-to-end tests for the real TCP transport.
+//!
+//! These spawn the actual `supersfl` binary — one `--transport serve:`
+//! server process plus four `--transport connect:` client processes on
+//! 127.0.0.1 — and hold the headline acceptance bars of the transport
+//! work:
+//!
+//! * a fault-free socket run reproduces the in-process simulator's
+//!   trajectory **bit for bit** (every round record and every summary
+//!   metric in the run JSON), under both the fp32 and int8 codecs;
+//! * the measured socket data bytes equal the `NetworkSim` ledger the
+//!   server prices in parallel;
+//! * a client killed mid-round (`--chaos-exit`) reconnects on respawn,
+//!   rides the charged resync path, trips the quorum gate for the round
+//!   it missed, and the run still completes every round;
+//! * SIGTERM lands between rounds, flushes partial artifacts, and the
+//!   run JSON records the interrupted round.
+//!
+//! Every child is spawned with the `SUPERSFL_*` overrides scrubbed so a
+//! CI chaos/sampling leg cannot leak into the replicated worlds (the
+//! server rejects a client whose config fingerprint diverges).
+
+use std::fs::{self, File};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use supersfl::transport::client::CHAOS_EXIT_CODE;
+use supersfl::util::json::{self, JsonValue};
+
+const BIN: &str = env!("CARGO_BIN_EXE_supersfl");
+
+/// Every run-JSON key that must be bit-identical between the simulator
+/// and the socket transport. `host_wall_s`, `provenance` and
+/// `transport` are the only summary keys legitimately allowed to
+/// differ (wall clock, process identity, transport stats).
+const COMPARE_KEYS: &[&str] = &[
+    "name",
+    "method",
+    "rounds_run",
+    "final_accuracy",
+    "best_accuracy",
+    "rounds_to_target",
+    "comm_mb_to_target",
+    "sim_time_to_target",
+    "total_comm_mb",
+    "total_raw_mb",
+    "compression",
+    "wire_codec",
+    "total_sim_time_s",
+    "total_energy_j",
+    "avg_power_w",
+    "power_per_acc",
+    "co2_g",
+    "total_timeouts",
+    "total_drops",
+    "total_corruptions",
+    "total_retries",
+    "total_crashes",
+    "straggler",
+    "interrupted_at",
+    "rounds",
+];
+
+fn scratch_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("supersfl_tcp_{tag}_{}", std::process::id()));
+    let _ = fs::remove_dir_all(&dir);
+    fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Bind-then-release on 127.0.0.1:0 to pick a port the server can take.
+fn free_port() -> u16 {
+    std::net::TcpListener::bind("127.0.0.1:0")
+        .unwrap()
+        .local_addr()
+        .unwrap()
+        .port()
+}
+
+/// The shared world config, passed identically to the server, every
+/// client, and the reference sim run — the Hello handshake fingerprints
+/// it, so any drift here is a hard connect-time failure, not a silent
+/// trajectory split.
+fn world_args(rounds: usize, codec: &str) -> Vec<String> {
+    let mut v: Vec<String> = [
+        "train",
+        "--method",
+        "ssfl",
+        "--clients",
+        "4",
+        "--classes",
+        "10",
+        "--seed",
+        "7",
+        "--threads",
+        "1",
+        "--kernel-threads",
+        "1",
+        "--backend",
+        "native",
+        "--set",
+        "name=tcpe2e",
+        "--set",
+        "train_per_class=12",
+        "--set",
+        "test_total=60",
+        "--set",
+        "local_steps=2",
+        "--set",
+        "eval_samples=60",
+        "--set",
+        "noise=0.4",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    v.extend(["--rounds".into(), rounds.to_string()]);
+    v.extend(["--wire-codec".into(), codec.to_string()]);
+    v
+}
+
+fn spawn(args: &[String], log: &Path) -> Child {
+    let out = File::create(log).unwrap();
+    let err = out.try_clone().unwrap();
+    Command::new(BIN)
+        .args(args)
+        .env_remove("SUPERSFL_FAULTS")
+        .env_remove("SUPERSFL_SAMPLE")
+        .env_remove("SUPERSFL_TRANSPORT")
+        .env_remove("SUPERSFL_WIRE")
+        .env_remove("SUPERSFL_BACKEND")
+        .env_remove("SUPERSFL_KERNEL_THREADS")
+        .stdout(Stdio::from(out))
+        .stderr(Stdio::from(err))
+        .spawn()
+        .unwrap()
+}
+
+fn dump_log(name: &str, log: &Path) {
+    eprintln!(
+        "---- {name} log ({}) ----\n{}",
+        log.display(),
+        fs::read_to_string(log).unwrap_or_default()
+    );
+}
+
+/// Wait for a child with a hard deadline; on timeout, kill it, dump its
+/// log, and fail the test.
+fn wait_for(child: &mut Child, secs: u64, name: &str, log: &Path) -> i32 {
+    let deadline = Instant::now() + Duration::from_secs(secs);
+    loop {
+        if let Some(st) = child.try_wait().unwrap() {
+            return st.code().unwrap_or(-1);
+        }
+        if Instant::now() >= deadline {
+            let _ = child.kill();
+            let _ = child.wait();
+            dump_log(name, log);
+            panic!("{name} did not exit within {secs}s");
+        }
+        std::thread::sleep(Duration::from_millis(25));
+    }
+}
+
+fn read_run_json(dir: &Path) -> JsonValue {
+    json::parse_file(&dir.join("tcpe2e_ssfl.json")).expect("run JSON must exist and parse")
+}
+
+/// Compare two run JSONs key by key so a divergence names the exact
+/// metric instead of burying it in a giant string diff.
+fn assert_runs_match(sim: &JsonValue, tcp: &JsonValue) {
+    for key in COMPARE_KEYS {
+        let a = sim
+            .get(key)
+            .map(|v| v.to_string_compact())
+            .unwrap_or_else(|| "<absent>".into());
+        let b = tcp
+            .get(key)
+            .map(|v| v.to_string_compact())
+            .unwrap_or_else(|| "<absent>".into());
+        assert_eq!(a, b, "run JSON key '{key}' diverged between sim and tcp");
+    }
+}
+
+fn transport_counter(run: &JsonValue, key: &str) -> u64 {
+    run.get("transport")
+        .and_then(|t| t.get(key))
+        .and_then(|v| v.as_f64())
+        .unwrap_or_else(|| panic!("transport block must carry '{key}'")) as u64
+}
+
+/// Spawn server + 4 clients on a loopback port, wait for everything,
+/// and return the server's run JSON. `chaos` kills that client with
+/// `--chaos-exit round:step` and respawns it without the flag, modeling
+/// a crash + operator restart.
+fn run_tcp_cluster(
+    tag: &str,
+    rounds: usize,
+    codec: &str,
+    extra: &[&str],
+    chaos: Option<(usize, &str)>,
+) -> JsonValue {
+    let dir = scratch_dir(tag);
+    let port = free_port();
+    let mut world = world_args(rounds, codec);
+    world.extend(extra.iter().map(|s| s.to_string()));
+
+    let mut server_args = world.clone();
+    server_args.extend([
+        "--transport".into(),
+        format!("serve:127.0.0.1:{port}"),
+        "--out".into(),
+        dir.display().to_string(),
+    ]);
+    let server_log = dir.join("server.log");
+    let mut server = spawn(&server_args, &server_log);
+
+    let client_args = |id: usize, with_chaos: bool| {
+        let mut a = world.clone();
+        a.extend([
+            "--transport".into(),
+            format!("connect:127.0.0.1:{port}"),
+            "--client-id".into(),
+            id.to_string(),
+        ]);
+        if with_chaos {
+            if let Some((_, spec)) = chaos {
+                a.extend(["--chaos-exit".into(), spec.to_string()]);
+            }
+        }
+        a
+    };
+    let mut clients: Vec<(Child, PathBuf, String)> = (0..4)
+        .map(|id| {
+            let log = dir.join(format!("client{id}.log"));
+            let doomed = chaos.is_some_and(|(ci, _)| ci == id);
+            (
+                spawn(&client_args(id, doomed), &log),
+                log,
+                format!("client {id}"),
+            )
+        })
+        .collect();
+
+    if let Some((ci, _)) = chaos {
+        // The doomed client must die with the chaos code, then come
+        // back as a fresh process with no kill switch — the reconnect
+        // drain admits it at the next round boundary.
+        let (child, log, name) = &mut clients[ci];
+        let code = wait_for(child, 300, name, log);
+        assert_eq!(
+            code, CHAOS_EXIT_CODE,
+            "chaos client must exit with the scheduled-kill code"
+        );
+        let relog = dir.join(format!("client{ci}_respawn.log"));
+        clients[ci] = (
+            spawn(&client_args(ci, false), &relog),
+            relog,
+            format!("client {ci} (respawned)"),
+        );
+    }
+
+    for (child, log, name) in &mut clients {
+        let code = wait_for(child, 300, name, log);
+        if code != 0 {
+            dump_log(name, log);
+            dump_log("server", &server_log);
+            panic!("{name} exited with code {code}");
+        }
+    }
+    let code = wait_for(&mut server, 300, "server", &server_log);
+    if code != 0 {
+        dump_log("server", &server_log);
+        panic!("server exited with code {code}");
+    }
+    read_run_json(&dir)
+}
+
+/// Run the reference in-process simulator with the identical world and
+/// return its run JSON.
+fn run_sim(tag: &str, rounds: usize, codec: &str) -> JsonValue {
+    let dir = scratch_dir(tag);
+    let mut args = world_args(rounds, codec);
+    args.extend(["--out".into(), dir.display().to_string()]);
+    let log = dir.join("sim.log");
+    let mut child = spawn(&args, &log);
+    let code = wait_for(&mut child, 300, "sim run", &log);
+    if code != 0 {
+        dump_log("sim run", &log);
+        panic!("sim run exited with code {code}");
+    }
+    read_run_json(&dir)
+}
+
+/// Acceptance bar 1: a fault-free loopback TCP run is
+/// trajectory-identical to the simulator — same rounds, same losses,
+/// same accuracy, same comm/energy ledgers — and the bytes that crossed
+/// real sockets equal the bytes the sim charged.
+#[test]
+fn loopback_fp32_matches_sim_bit_for_bit() {
+    let tcp = run_tcp_cluster("fp32", 3, "fp32", &[], None);
+    let sim = run_sim("fp32_sim", 3, "fp32");
+    assert_runs_match(&sim, &tcp);
+
+    let socket_data = transport_counter(&tcp, "socket_data_bytes_in")
+        + transport_counter(&tcp, "socket_data_bytes_out");
+    let sim_bytes = transport_counter(&tcp, "sim_wire_bytes");
+    assert_eq!(
+        socket_data, sim_bytes,
+        "fault-free run: measured socket data bytes must equal the sim ledger"
+    );
+    assert!(socket_data > 0, "frames must actually cross the sockets");
+    assert_eq!(transport_counter(&tcp, "frame_errors"), 0);
+    assert_eq!(transport_counter(&tcp, "resyncs"), 0);
+    assert_eq!(transport_counter(&tcp, "quorum_holds"), 0);
+}
+
+/// Same bar under the lossy-but-deterministic int8 codec: quantization
+/// must not open any gap between the transports (both run the identical
+/// encode/decode), and the byte ledgers still reconcile exactly.
+#[test]
+fn loopback_int8_matches_sim_bit_for_bit() {
+    let tcp = run_tcp_cluster("int8", 3, "int8", &[], None);
+    let sim = run_sim("int8_sim", 3, "int8");
+    assert_runs_match(&sim, &tcp);
+
+    let socket_data = transport_counter(&tcp, "socket_data_bytes_in")
+        + transport_counter(&tcp, "socket_data_bytes_out");
+    assert_eq!(
+        socket_data,
+        transport_counter(&tcp, "sim_wire_bytes"),
+        "int8 run: socket ledger must equal the sim ledger"
+    );
+}
+
+/// Acceptance bar 2: kill a client mid-round, restart it, and the fleet
+/// heals through the PR 6 recovery machinery — the dead socket is
+/// priced as a drop + crash, the round it darkens trips the 100% quorum
+/// gate, the rejoiner rides the charged resync path, and every round
+/// still completes.
+#[test]
+fn killed_client_reconnects_resyncs_and_completes() {
+    let run = run_tcp_cluster(
+        "chaos",
+        5,
+        "fp32",
+        &["--faults", "quorum=1.0"],
+        Some((3, "2:0")),
+    );
+
+    let rounds = run.get("rounds").and_then(|v| v.as_array()).unwrap();
+    assert_eq!(rounds.len(), 5, "the run must complete every round");
+    assert!(
+        run.get("interrupted_at").is_none(),
+        "a healed run is not an interrupted run"
+    );
+    assert!(
+        transport_counter(&run, "resyncs") >= 1,
+        "the respawned client must be admitted through the resync path"
+    );
+    assert!(
+        transport_counter(&run, "quorum_holds") >= 1,
+        "the darkened round must hold the quorum-gated merge"
+    );
+    let total = |k: &str| run.get(k).and_then(|v| v.as_f64()).unwrap() as u64;
+    assert!(
+        total("total_drops") >= 1,
+        "the severed socket must be priced as a drop"
+    );
+    assert!(
+        total("total_crashes") >= 1,
+        "the dead lane must land on the crash ledger"
+    );
+}
+
+/// Acceptance bar 3 (satellite: graceful shutdown): SIGTERM between
+/// rounds stops the run cleanly — exit code 0, partial artifacts on
+/// disk, and `interrupted_at` recording the first round that never ran.
+#[test]
+fn sigterm_flushes_partial_artifacts() {
+    let dir = scratch_dir("sigterm");
+    let mut args = world_args(5000, "fp32");
+    args.extend(["--out".into(), dir.display().to_string()]);
+    let log = dir.join("run.log");
+    let mut child = spawn(&args, &log);
+
+    // Let it get a couple of rounds in, then signal. 5000 rounds is far
+    // more than 2 seconds of work, so the run cannot finish first.
+    std::thread::sleep(Duration::from_secs(2));
+    let status = Command::new("kill")
+        .args(["-TERM", &child.id().to_string()])
+        .status()
+        .unwrap();
+    assert!(status.success(), "kill -TERM must be deliverable");
+
+    let code = wait_for(&mut child, 120, "signalled run", &log);
+    if code != 0 {
+        dump_log("signalled run", &log);
+        panic!("signalled run exited with code {code}");
+    }
+    let run = read_run_json(&dir);
+    let interrupted = run
+        .get("interrupted_at")
+        .and_then(|v| v.as_usize())
+        .expect("run JSON must record interrupted_at");
+    let completed = run.get("rounds").and_then(|v| v.as_array()).unwrap().len();
+    assert_eq!(
+        completed,
+        interrupted - 1,
+        "every round before the interrupt must be flushed"
+    );
+    assert!(
+        dir.join("tcpe2e_ssfl.csv").exists(),
+        "the per-round CSV must be flushed too"
+    );
+}
