@@ -42,6 +42,10 @@
 //! * [`baselines`] — SFL (SplitFed) and DFL comparators.
 //! * [`bench_util`] — the bench harness used by `cargo bench` targets.
 
+// Crate-level (not workspace) so bins/benches/examples — where `pub` at
+// crate root is meaningless but harmless — stay out of scope.
+#![deny(unreachable_pub)]
+
 #[cfg(not(feature = "xla"))]
 compile_error!(
     "supersfl requires the `xla` feature (enabled by default). It resolves to \

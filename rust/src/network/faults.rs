@@ -295,6 +295,7 @@ impl FaultConfig {
     /// silently training under the wrong fault schedule is worse than
     /// crashing at startup.
     pub fn from_env_or(fallback: FaultConfig) -> FaultConfig {
+        // audit:allow(env-read) -- documented env-wins override mirroring the other from_env_or sites; invalid specs fail fast.
         match std::env::var("SUPERSFL_FAULTS") {
             Ok(s) => match FaultConfig::parse(&s) {
                 Ok(fc) => fc,

@@ -319,6 +319,7 @@ impl Harness {
             lat_extremes,
             tracer: Tracer::from_spec(&cfg.trace),
             interrupted: None,
+            // audit:allow(wall-clock) -- host-side elapsed-time telemetry only; sim time drives every trajectory-visible decision.
             host_t0: std::time::Instant::now(),
         })
     }

@@ -127,6 +127,7 @@ pub struct Runtime {
 /// a fail-fast panic — silently degrading a typo'd selection to `auto`
 /// would let e.g. a CI leg green-light the wrong backend.
 fn env_backend() -> Option<BackendKind> {
+    // audit:allow(env-read) -- documented env-wins override for the CI backend matrix; precedence is spelled out in the doc comment above.
     let v = std::env::var("SUPERSFL_BACKEND").ok()?;
     match BackendKind::parse(&v) {
         Ok(b) => Some(b),

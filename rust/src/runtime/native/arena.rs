@@ -32,7 +32,7 @@
 /// threads through a mutex; locks are held only for checkout/checkin,
 /// never during kernel execution.
 #[derive(Debug, Default)]
-pub struct ScratchArena {
+pub(crate) struct ScratchArena {
     /// Idle buffers, any order (checkout scans for best fit).
     free: Vec<Vec<f32>>,
     /// Total capacity (bytes) of every arena-managed buffer, idle or
@@ -47,13 +47,13 @@ pub struct ScratchArena {
 }
 
 impl ScratchArena {
-    pub fn new() -> ScratchArena {
+    pub(crate) fn new() -> ScratchArena {
         ScratchArena::default()
     }
 
     /// Check out a zero-filled buffer of exactly `elems` elements,
     /// reusing (or, on a cold path, growing) a pooled allocation.
-    pub fn take(&mut self, elems: usize) -> Vec<f32> {
+    pub(crate) fn take(&mut self, elems: usize) -> Vec<f32> {
         if elems == 0 {
             return Vec::new();
         }
@@ -90,7 +90,7 @@ impl ScratchArena {
 
     /// Return a buffer to the pool. Zero-capacity buffers (the `take(0)`
     /// placeholders) are dropped rather than pooled.
-    pub fn put(&mut self, mut buf: Vec<f32>) {
+    pub(crate) fn put(&mut self, mut buf: Vec<f32>) {
         if buf.capacity() == 0 {
             return;
         }
@@ -99,17 +99,17 @@ impl ScratchArena {
     }
 
     /// Peak bytes ever held across all arena buffers.
-    pub fn hwm_bytes(&self) -> u64 {
+    pub(crate) fn hwm_bytes(&self) -> u64 {
         self.hwm_bytes
     }
 
     /// Cumulative allocation/regrow events (stable once warm).
-    pub fn alloc_events(&self) -> u64 {
+    pub(crate) fn alloc_events(&self) -> u64 {
         self.allocs
     }
 
     /// Buffers currently idle in the pool.
-    pub fn pooled(&self) -> usize {
+    pub(crate) fn pooled(&self) -> usize {
         self.free.len()
     }
 }

@@ -537,6 +537,9 @@ struct SendMut(*mut f32);
 // SAFETY: shards write pairwise-disjoint ranges (ShardPlan geometry) and
 // the pool joins every shard before the owning call returns.
 unsafe impl Send for SendMut {}
+// SAFETY: the wrapper itself is only copied across threads; every write
+// through the pointer goes via `sub_mut`, whose disjoint-range contract
+// (enforced by ShardPlan geometry) rules out aliasing between workers.
 unsafe impl Sync for SendMut {}
 
 /// Slice `len` elements starting `offset` into a [`SendMut`] buffer.
@@ -546,7 +549,10 @@ unsafe impl Sync for SendMut {}
 /// pairwise disjoint and inside the original buffer.
 #[inline]
 unsafe fn sub_mut<'a>(p: SendMut, offset: usize, len: usize) -> &'a mut [f32] {
-    std::slice::from_raw_parts_mut(p.0.add(offset), len)
+    // SAFETY: the caller upholds the function contract above — the range
+    // is inside the original buffer and disjoint from every concurrent
+    // call, so a unique `&mut` to it cannot alias.
+    unsafe { std::slice::from_raw_parts_mut(p.0.add(offset), len) }
 }
 
 /// Row-sharded [`gemm_bias`] — bitwise identical to the direct kernel

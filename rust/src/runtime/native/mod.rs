@@ -156,6 +156,7 @@ impl Default for NativeBackend {
 /// are bit-identical for every resolved value — this knob is pure
 /// throughput.
 pub fn resolve_kernel_threads(requested: usize) -> usize {
+    // audit:allow(env-read) -- documented env-wins override for the CI matrix; the knob is pure throughput, never trajectory-visible.
     let requested = match std::env::var("SUPERSFL_KERNEL_THREADS") {
         Ok(v) => match crate::config::parse_kernel_threads(&v) {
             Ok(n) => n,

@@ -158,6 +158,10 @@ pub fn run_client(
                                  round {}:{step}",
                                 rs.round
                             );
+                            // Deliberate hard kill: the crash-recovery
+                            // tests need a worker that dies without
+                            // unwinding or flushing.
+                            #[allow(clippy::exit)]
                             std::process::exit(CHAOS_EXIT_CODE);
                         }
                     }

@@ -91,6 +91,7 @@ impl TransportSpec {
     /// explicitly set but invalid value fails fast — a typo'd env var
     /// must not silently run in-process.
     pub fn from_env_or(fallback: TransportSpec) -> TransportSpec {
+        // audit:allow(env-read) -- documented env-wins override for the CI transport matrix; invalid values fail fast.
         match std::env::var("SUPERSFL_TRANSPORT") {
             Ok(v) => match TransportSpec::parse(&v) {
                 Ok(t) => t,

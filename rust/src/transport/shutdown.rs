@@ -30,7 +30,10 @@ mod sys {
         fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
     }
 
-    pub fn install() {
+    pub(super) fn install() {
+        // SAFETY: `signal` is always safe to call with a valid handler
+        // pointer; `on_signal` is `extern "C"`, never unwinds, and only
+        // touches one atomic — the async-signal-safe subset.
         unsafe {
             signal(SIGINT, on_signal);
             signal(SIGTERM, on_signal);
@@ -40,7 +43,7 @@ mod sys {
 
 #[cfg(not(unix))]
 mod sys {
-    pub fn install() {}
+    pub(super) fn install() {}
 }
 
 /// Register the SIGINT/SIGTERM handler (idempotent).

@@ -598,7 +598,7 @@ mod tests {
             let mut order: Vec<usize> = (0..n).collect();
             order.sort_by(|&i, &j| data[j].abs().total_cmp(&data[i].abs()).then(i.cmp(&j)));
             let k = codec.count(n);
-            let keep: std::collections::HashSet<usize> = order[..k].iter().copied().collect();
+            let keep: std::collections::BTreeSet<usize> = order[..k].iter().copied().collect();
 
             for (i, (&x, &d)) in data.iter().zip(dec.iter()).enumerate() {
                 if keep.contains(&i) {

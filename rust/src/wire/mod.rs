@@ -96,6 +96,7 @@ impl WireCodecKind {
     /// CI matrix). An explicitly set but invalid value fails fast — a
     /// typo'd env var must not silently run the wrong codec.
     pub fn from_env_or(fallback: WireCodecKind) -> WireCodecKind {
+        // audit:allow(env-read) -- documented env-wins override for the CI wire matrix; invalid values fail fast.
         match std::env::var("SUPERSFL_WIRE") {
             Ok(v) => match WireCodecKind::parse(&v) {
                 Ok(k) => k,

@@ -1,0 +1,139 @@
+//! Allocation-count guard: turns the "zero allocations on the
+//! steady-state exec and wire paths" claim (PR 6's arena, PR 9's wire
+//! scratch) into an enforced assertion rather than a high-water-mark
+//! statistic. A counting `#[global_allocator]` wraps the system
+//! allocator; the single test below (one `#[test]` fn on purpose — a
+//! second test would run on a sibling thread and pollute the counts)
+//! measures exact allocation deltas across warm steady-state windows:
+//!
+//! * `Wire::encode_to` / `Wire::decode_into` with a warm scratch: **0**
+//!   allocations per frame.
+//! * Native-backend `exec` after one pass per op shape: a small flat
+//!   per-call count (the returned output `Vec`s — scratch comes from
+//!   the arena), identical between consecutive windows.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use supersfl::runtime::native::NativeBackend;
+use supersfl::runtime::{Arg, Backend};
+use supersfl::util::rng::Pcg32;
+use supersfl::wire::{MsgType, Wire, WireCodecKind, WireScratch};
+
+/// Counts every allocation event (fresh allocs and growing reallocs);
+/// frees are irrelevant to the steady-state contract.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+// SAFETY: defers verbatim to `System`, which upholds the GlobalAlloc
+// contract; the counter is a relaxed atomic add with no other effects.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        // SAFETY: forwarded layout is the caller's valid layout.
+        unsafe { System.alloc(layout) }
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        // SAFETY: ptr/layout come from a matching `alloc` by contract.
+        unsafe { System.dealloc(ptr, layout) }
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        // SAFETY: ptr/layout/new_size are forwarded from a caller
+        // honoring the GlobalAlloc realloc contract.
+        unsafe { System.realloc(ptr, layout, new_size) }
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+#[test]
+fn steady_state_wire_and_exec_paths_do_not_allocate() {
+    // ---- Wire encode/decode: exactly zero once the scratch is warm ----
+    let wire = Wire::new(WireCodecKind::Fp32);
+    let mut rng = Pcg32::seeded(0xA110C);
+    let data: Vec<f32> = (0..4096).map(|_| rng.normal() as f32).collect();
+    let mut scratch = WireScratch::default();
+    let mut rx = WireScratch::default();
+
+    // Warm-up: first encode/decode size the frame, payload and decode
+    // buffers.
+    let frame: Vec<u8> = wire.encode_to(MsgType::Smashed, &data, 0.0, &mut scratch).to_vec();
+    wire.decode_into(&frame, &mut rx.decoded).unwrap();
+
+    let before = allocs();
+    for _ in 0..100 {
+        let f = wire.encode_to(MsgType::Smashed, &data, 0.0, &mut scratch);
+        debug_assert_eq!(f.len(), frame.len());
+    }
+    assert_eq!(
+        allocs() - before,
+        0,
+        "warm Wire::encode_to must not allocate"
+    );
+
+    let before = allocs();
+    for _ in 0..100 {
+        wire.decode_into(&frame, &mut rx.decoded).unwrap();
+    }
+    assert_eq!(
+        allocs() - before,
+        0,
+        "warm Wire::decode_into must not allocate"
+    );
+
+    // ---- Native exec: flat, small per-call count once the arena is warm ----
+    // kernel-threads=1 keeps the pool out of the picture (no job boxes,
+    // no cross-thread handoff) so the only allowed allocations are the
+    // returned output vectors.
+    let b = NativeBackend::with_kernel_threads(1);
+    let m = b.model().clone();
+    let enc = b.load_init("init_enc_c10").unwrap();
+    let x: Vec<f32> = (0..m.batch * m.image_elems())
+        .map(|_| rng.normal() as f32)
+        .collect();
+    let depth = 4usize;
+    let name = format!("client_fwd_d{depth}");
+    let enc_d = &enc[..m.enc_size(depth)];
+
+    // Warm-up passes populate the arena for this op shape.
+    for _ in 0..2 {
+        b.exec(&name, &[Arg::F32(enc_d), Arg::F32(&x)]).unwrap();
+    }
+
+    let window = |n: u64| {
+        let before = allocs();
+        for _ in 0..n {
+            let out = b.exec(&name, &[Arg::F32(enc_d), Arg::F32(&x)]).unwrap();
+            assert_eq!(out[0].len(), m.smashed_elems());
+        }
+        allocs() - before
+    };
+
+    let w1 = window(8);
+    let w2 = window(8);
+    assert_eq!(
+        w1, w2,
+        "steady-state exec allocation count must be flat across windows"
+    );
+    let per_call = w1 / 8;
+    assert!(
+        per_call <= 8,
+        "steady-state exec must only allocate its output vectors \
+         (got {per_call} allocations/call)"
+    );
+    // And the arena corroborates: no scratch growth between windows.
+    let s1 = b.stats();
+    b.exec(&name, &[Arg::F32(enc_d), Arg::F32(&x)]).unwrap();
+    let s2 = b.stats();
+    assert_eq!(s1.arena_allocs, s2.arena_allocs);
+    assert_eq!(s1.arena_hwm_bytes, s2.arena_hwm_bytes);
+}

@@ -1,0 +1,4 @@
+// Fixture: config/ is where env-wins precedence is implemented.
+pub fn backend() -> String {
+    std::env::var("SUPERSFL_BACKEND").unwrap_or_else(|_| "native".into())
+}

@@ -1,0 +1,4 @@
+// Fixture: an env read outside config/, main.rs, bench_util/ fires.
+pub fn wire_kind() -> String {
+    std::env::var("SUPERSFL_WIRE").unwrap_or_default()
+}

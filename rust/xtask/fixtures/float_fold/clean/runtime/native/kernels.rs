@@ -1,0 +1,17 @@
+// Fixture: an explicit sequential fold pins the reduction order; f64
+// accumulation is likewise fine.
+pub fn l2(xs: &[f32]) -> f32 {
+    let mut acc = 0.0f32;
+    for x in xs {
+        acc += x * x;
+    }
+    acc.sqrt()
+}
+
+pub fn mean(xs: &[f32]) -> f64 {
+    let mut acc = 0.0f64;
+    for x in xs {
+        acc += *x as f64;
+    }
+    acc / xs.len().max(1) as f64
+}

@@ -1,0 +1,5 @@
+// Fixture: implicit f32 iterator fold in the kernel core fires —
+// fold order must be spelled out.
+pub fn l2(xs: &[f32]) -> f32 {
+    xs.iter().map(|x| x * x).sum::<f32>().sqrt()
+}

@@ -1,0 +1,4 @@
+// Fixture: a bare allow (no ` -- justification`) is itself a failure
+// and does not suppress the underlying violation.
+// audit:allow(unordered-iter)
+pub type Registry = std::collections::HashMap<u64, u32>;

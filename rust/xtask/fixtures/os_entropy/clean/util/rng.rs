@@ -1,0 +1,25 @@
+// Fixture: seeded Pcg32 lane streams are the sanctioned randomness.
+// Mentioning thread_rng in a comment is inert.
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+}
+
+impl Pcg32 {
+    pub fn new(seed: u64, lane: u64) -> Self {
+        Self {
+            state: seed.wrapping_mul(6364136223846793005).wrapping_add(lane | 1),
+            inc: lane | 1,
+        }
+    }
+
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+}

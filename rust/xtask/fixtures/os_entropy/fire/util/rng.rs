@@ -1,0 +1,4 @@
+// Fixture: ambient entropy fires even inside a string literal.
+pub fn entropy_path() -> &'static str {
+    "/dev/urandom"
+}

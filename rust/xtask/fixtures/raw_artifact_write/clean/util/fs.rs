@@ -1,0 +1,13 @@
+// Fixture: util/fs.rs is the one sanctioned write site (the atomic
+// temp + rename funnel).
+use std::fs::File;
+use std::io::Write;
+use std::path::Path;
+
+pub fn atomic_write(path: &Path, bytes: &[u8]) -> std::io::Result<()> {
+    let tmp = path.with_extension("tmp");
+    let mut f = File::create(&tmp)?;
+    f.write_all(bytes)?;
+    f.sync_all()?;
+    std::fs::rename(&tmp, path)
+}

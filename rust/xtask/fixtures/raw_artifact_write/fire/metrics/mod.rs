@@ -1,0 +1,4 @@
+// Fixture: a direct artifact write outside util/fs.rs fires.
+pub fn dump(path: &str, body: &str) -> std::io::Result<()> {
+    std::fs::write(path, body)
+}

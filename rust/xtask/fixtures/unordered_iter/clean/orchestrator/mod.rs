@@ -1,0 +1,17 @@
+// Fixture: BTreeMap is deterministic; HashMap in comments and strings
+// is inert; a justified allow suppresses a real use.
+use std::collections::BTreeMap;
+
+pub fn merge(updates: &[(u64, f32)]) -> BTreeMap<u64, f32> {
+    // A HashMap would leak hash order here.
+    let banner = "HashMap is banned on the round path";
+    let _ = banner;
+    let mut acc = BTreeMap::new();
+    for &(k, v) in updates {
+        *acc.entry(k).or_insert(0.0) += v;
+    }
+    acc
+}
+
+// audit:allow(unordered-iter) -- cache keyed by opaque id; iteration order never observed.
+pub type Cache = std::collections::HashMap<u64, f32>;

@@ -1,0 +1,10 @@
+// Fixture: HashMap on the round path must fire `unordered-iter`.
+use std::collections::HashMap;
+
+pub fn merge(updates: &[(u64, f32)]) -> HashMap<u64, f32> {
+    let mut acc = HashMap::new();
+    for &(k, v) in updates {
+        *acc.entry(k).or_insert(0.0) += v;
+    }
+    acc
+}

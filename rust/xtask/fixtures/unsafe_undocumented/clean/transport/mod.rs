@@ -1,0 +1,16 @@
+// Fixture: documented unsafe passes in all three shapes — comment
+// directly above, multi-line comment block, and trailing comment.
+pub fn read_first(p: *const u8) -> u8 {
+    // SAFETY: callers pass a pointer to at least one readable byte.
+    unsafe { *p }
+}
+
+pub struct Shard(*mut f32);
+
+// SAFETY: each Shard addresses a disjoint half-open range of the
+// backing buffer, so moving one across threads cannot alias another.
+unsafe impl Send for Shard {}
+
+pub fn zero(s: &Shard) {
+    unsafe { s.0.write(0.0) } // SAFETY: Shard pointers are valid for writes by construction.
+}

@@ -1,0 +1,4 @@
+// Fixture: an unsafe block with no SAFETY comment fires.
+pub fn read_first(p: *const u8) -> u8 {
+    unsafe { *p }
+}

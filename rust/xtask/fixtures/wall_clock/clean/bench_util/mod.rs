@@ -1,0 +1,6 @@
+// Fixture: bench_util/ is on the wall-clock allowlist.
+pub fn measure<F: FnOnce()>(f: F) -> u128 {
+    let t0 = std::time::Instant::now();
+    f();
+    t0.elapsed().as_nanos()
+}

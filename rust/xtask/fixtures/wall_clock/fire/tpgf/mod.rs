@@ -1,0 +1,4 @@
+// Fixture: wall-clock read outside the host-timing allowlist fires.
+pub fn stamp() -> std::time::Instant {
+    std::time::Instant::now()
+}

@@ -1,0 +1,553 @@
+//! A hand-rolled Rust source lexer for the determinism audit.
+//!
+//! The audit does not need a parse tree — every rule is a token- or
+//! line-level check — but it must never fire on text inside comments or
+//! string literals, and it must know which regions are `#[cfg(test)]`
+//! code. So the lexer produces three aligned *views* of each file, all
+//! byte-for-byte the same length as the original (newlines preserved, so
+//! byte offsets and line numbers agree across views):
+//!
+//! * `code` — comments and string/char-literal contents masked to spaces.
+//!   Rules that match identifiers and paths (`HashMap`, `Instant::now`,
+//!   `env::var`, …) scan this view.
+//! * `code_strings` — comments masked, string literals kept. Rules that
+//!   must see literal contents (`"/dev/urandom"`) scan this one.
+//! * `comments` — every comment segment with its line number, for the
+//!   `// SAFETY:` and `// audit:allow(...)` conventions.
+//!
+//! Handled syntax: line comments, nested block comments, doc comments,
+//! regular/byte strings with escapes, raw strings `r#"…"#` (any hash
+//! count, `br` included), char literals vs. lifetimes, and
+//! `#[cfg(test)]`-gated items (the whole braced item body is recorded as
+//! a test region).
+
+/// One comment segment. Block comments spanning N lines produce N
+/// entries, one per line, so line-based lookups stay trivial.
+#[derive(Debug, Clone)]
+pub struct Comment {
+    /// 1-based line number.
+    pub line: usize,
+    /// The comment text on that line (delimiters included).
+    pub text: String,
+    /// True when the line holds nothing but whitespace + this comment
+    /// (an "own-line" comment, as opposed to a trailing one).
+    pub own_line: bool,
+}
+
+/// The lexed views of one source file.
+pub struct Lexed {
+    pub code: String,
+    pub code_strings: String,
+    pub comments: Vec<Comment>,
+    /// Byte offset of the start of each line (index 0 = line 1).
+    pub line_starts: Vec<usize>,
+    /// Byte ranges of `#[cfg(test)]`-gated items.
+    pub test_regions: Vec<(usize, usize)>,
+}
+
+impl Lexed {
+    /// 1-based line number containing byte `offset`.
+    pub fn line_of(&self, offset: usize) -> usize {
+        match self.line_starts.binary_search(&offset) {
+            Ok(i) => i + 1,
+            Err(i) => i,
+        }
+    }
+
+    /// Whether byte `offset` falls inside `#[cfg(test)]`-gated code.
+    pub fn in_test(&self, offset: usize) -> bool {
+        self.test_regions.iter().any(|&(a, b)| offset >= a && offset < b)
+    }
+
+    /// The comment entries on `line`, if any.
+    pub fn comments_on(&self, line: usize) -> impl Iterator<Item = &Comment> {
+        self.comments.iter().filter(move |c| c.line == line)
+    }
+
+    /// True when `line` holds only whitespace/comments in the code view.
+    pub fn line_is_codeless(&self, line: usize) -> bool {
+        self.line_text(&self.code, line).trim().is_empty()
+    }
+
+    /// The text of `line` (1-based) in the given view.
+    pub fn line_text<'a>(&self, view: &'a str, line: usize) -> &'a str {
+        let start = self.line_starts[line - 1];
+        let end = self
+            .line_starts
+            .get(line)
+            .copied()
+            .unwrap_or(view.len());
+        view[start..end].trim_end_matches('\n')
+    }
+
+    pub fn line_count(&self) -> usize {
+        self.line_starts.len()
+    }
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum State {
+    Normal,
+    LineComment,
+    BlockComment(u32),
+    Str,
+    RawStr(u32),
+    Char,
+}
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Byte length of the UTF-8 sequence starting with `lead`.
+fn utf8_len(lead: u8) -> usize {
+    match lead {
+        0x00..=0x7f => 1,
+        0xc0..=0xdf => 2,
+        0xe0..=0xef => 3,
+        _ => 4,
+    }
+}
+
+/// Lex `src` into the aligned views. Never panics on malformed input —
+/// an unterminated literal or comment simply masks to end of file.
+pub fn lex(src: &str) -> Lexed {
+    let bytes = src.as_bytes();
+    let n = bytes.len();
+    let mut code = bytes.to_vec();
+    let mut code_strings = bytes.to_vec();
+    let mut comments: Vec<Comment> = Vec::new();
+    let mut line_starts = vec![0usize];
+    for (i, &b) in bytes.iter().enumerate() {
+        if b == b'\n' && i + 1 < n {
+            line_starts.push(i + 1);
+        }
+    }
+
+    // Collect raw comment spans first; they are split per line below.
+    let mut comment_spans: Vec<(usize, usize)> = Vec::new();
+
+    let mut state = State::Normal;
+    let mut i = 0usize;
+    let mut seg_start = 0usize; // start of the current comment/string
+    while i < n {
+        let b = bytes[i];
+        match state {
+            State::Normal => {
+                if b == b'/' && i + 1 < n && bytes[i + 1] == b'/' {
+                    state = State::LineComment;
+                    seg_start = i;
+                    i += 2;
+                } else if b == b'/' && i + 1 < n && bytes[i + 1] == b'*' {
+                    state = State::BlockComment(1);
+                    seg_start = i;
+                    i += 2;
+                } else if b == b'"' {
+                    state = State::Str;
+                    seg_start = i;
+                    i += 1;
+                } else if (b == b'r' || b == b'b')
+                    && (i == 0 || !is_ident(bytes[i - 1]))
+                {
+                    // Possible raw/byte string start: r" r#" b" br" br#".
+                    let mut j = i + 1;
+                    if b == b'b' && j < n && bytes[j] == b'r' {
+                        j += 1;
+                    }
+                    let raw = j > i + 1 || b == b'r';
+                    let mut hashes = 0u32;
+                    while raw && j < n && bytes[j] == b'#' {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    if j < n && bytes[j] == b'"' && (raw || b == b'b') {
+                        seg_start = i;
+                        state = if raw { State::RawStr(hashes) } else { State::Str };
+                        i = j + 1;
+                    } else {
+                        i += 1;
+                    }
+                } else if b == b'\'' {
+                    // Char literal or lifetime. A char literal closes
+                    // with a quote right after one (escaped or plain,
+                    // possibly multibyte) character; a lifetime
+                    // (`'static`, `'a`) never does.
+                    let j = i + 1;
+                    if j < n && bytes[j] == b'\\' {
+                        state = State::Char;
+                        seg_start = i;
+                        i += 2; // skip the backslash + escaped byte
+                        continue;
+                    }
+                    if j < n && bytes[j] != b'\'' {
+                        let k = j + utf8_len(bytes[j]);
+                        if k < n && bytes[k] == b'\'' {
+                            // Plain char literal 'x' — covers '"' too,
+                            // which must not open a string state.
+                            mask(&mut code, i, k + 1);
+                            mask(&mut code_strings, i, k + 1);
+                            i = k + 1;
+                            continue;
+                        }
+                    }
+                    // Lifetime or stray quote: leave as-is.
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+            State::LineComment => {
+                if b == b'\n' {
+                    comment_spans.push((seg_start, i));
+                    mask(&mut code, seg_start, i);
+                    mask(&mut code_strings, seg_start, i);
+                    state = State::Normal;
+                }
+                i += 1;
+            }
+            State::BlockComment(depth) => {
+                if b == b'/' && i + 1 < n && bytes[i + 1] == b'*' {
+                    state = State::BlockComment(depth + 1);
+                    i += 2;
+                } else if b == b'*' && i + 1 < n && bytes[i + 1] == b'/' {
+                    if depth == 1 {
+                        comment_spans.push((seg_start, i + 2));
+                        mask(&mut code, seg_start, i + 2);
+                        mask(&mut code_strings, seg_start, i + 2);
+                        state = State::Normal;
+                    } else {
+                        state = State::BlockComment(depth - 1);
+                    }
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            State::Str => {
+                if b == b'\\' {
+                    i += 2;
+                } else if b == b'"' {
+                    mask(&mut code, seg_start, i + 1);
+                    state = State::Normal;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+            State::RawStr(hashes) => {
+                if b == b'"' {
+                    let mut j = i + 1;
+                    let mut h = 0u32;
+                    while h < hashes && j < n && bytes[j] == b'#' {
+                        h += 1;
+                        j += 1;
+                    }
+                    if h == hashes {
+                        mask(&mut code, seg_start, j);
+                        state = State::Normal;
+                        i = j;
+                        continue;
+                    }
+                }
+                i += 1;
+            }
+            State::Char => {
+                if b == b'\'' {
+                    mask(&mut code, seg_start, i + 1);
+                    mask(&mut code_strings, seg_start, i + 1);
+                    state = State::Normal;
+                }
+                i += 1;
+            }
+        }
+    }
+    // Unterminated segments mask (and record) to EOF.
+    match state {
+        State::LineComment | State::BlockComment(_) => {
+            comment_spans.push((seg_start, n));
+            mask(&mut code, seg_start, n);
+            mask(&mut code_strings, seg_start, n);
+        }
+        State::Str | State::RawStr(_) | State::Char => {
+            mask(&mut code, seg_start, n);
+            if state == State::Char {
+                mask(&mut code_strings, seg_start, n);
+            }
+        }
+        State::Normal => {}
+    }
+
+    // Masked views are pure-ASCII replacements of byte ranges; both stay
+    // valid UTF-8 because masking always covers whole literals/comments.
+    let code = String::from_utf8(code).expect("masked view stays UTF-8");
+    let code_strings =
+        String::from_utf8(code_strings).expect("masked view stays UTF-8");
+
+    let mut lexed = Lexed {
+        code,
+        code_strings,
+        comments: Vec::new(),
+        line_starts,
+        test_regions: Vec::new(),
+    };
+
+    // Split comment spans per line, and compute own-line-ness against
+    // the code view (which has the comments already blanked).
+    for (a, b) in comment_spans {
+        let first = lexed.line_of(a);
+        let last = lexed.line_of(b.saturating_sub(1).max(a));
+        for line in first..=last {
+            let ls = lexed.line_starts[line - 1];
+            let le = lexed
+                .line_starts
+                .get(line)
+                .copied()
+                .unwrap_or(src.len());
+            let s = a.max(ls);
+            let e = b.min(le);
+            if s >= e {
+                continue;
+            }
+            let text = src[s..e].trim_end_matches('\n').to_string();
+            let own_line = lexed.code[ls..e.min(lexed.code.len())]
+                .trim()
+                .is_empty()
+                && lexed.code[e.min(lexed.code.len())..le]
+                    .trim()
+                    .is_empty();
+            lexed.comments.push(Comment {
+                line,
+                text,
+                own_line,
+            });
+        }
+    }
+
+    lexed.test_regions = find_test_regions(&lexed.code);
+    lexed
+}
+
+fn mask(buf: &mut [u8], from: usize, to: usize) {
+    for b in buf[from..to.min(buf.len())].iter_mut() {
+        if *b != b'\n' {
+            *b = b' ';
+        }
+    }
+}
+
+/// Find `#[cfg(test)]`-gated item ranges in the comment-free code view.
+/// Any `#[cfg(...)]` attribute whose argument list contains the word
+/// `test` gates the next item: the byte range runs from the attribute to
+/// the item's closing brace (or terminating semicolon for brace-less
+/// items such as `use` declarations).
+fn find_test_regions(code: &str) -> Vec<(usize, usize)> {
+    let bytes = code.as_bytes();
+    let n = bytes.len();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i + 1 < n {
+        if bytes[i] == b'#' && bytes[i + 1] == b'[' {
+            let attr_start = i;
+            // Balanced-bracket scan of the attribute body.
+            let mut depth = 0usize;
+            let mut j = i + 1;
+            while j < n {
+                match bytes[j] {
+                    b'[' => depth += 1,
+                    b']' => {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                    _ => {}
+                }
+                j += 1;
+            }
+            if j >= n {
+                break;
+            }
+            let body = &code[i + 2..j];
+            if attr_gates_test(body) {
+                if let Some(end) = item_end(bytes, j + 1) {
+                    out.push((attr_start, end));
+                    i = end;
+                    continue;
+                }
+            }
+            i = j + 1;
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+/// `cfg(test)`, `cfg(all(test, …))`, `cfg(any(…, test))` — a `cfg`
+/// attribute mentioning the bare predicate `test`.
+fn attr_gates_test(body: &str) -> bool {
+    let t = body.trim();
+    if !t.starts_with("cfg") {
+        return false;
+    }
+    // Word-boundary search for `test` inside the predicate.
+    let b = t.as_bytes();
+    let pat = b"test";
+    let mut k = 0usize;
+    while k + pat.len() <= b.len() {
+        if &b[k..k + pat.len()] == pat {
+            let before_ok = k == 0 || !is_ident(b[k - 1]);
+            let after = k + pat.len();
+            let after_ok = after >= b.len() || !is_ident(b[after]);
+            if before_ok && after_ok {
+                return true;
+            }
+        }
+        k += 1;
+    }
+    false
+}
+
+/// End offset (exclusive) of the item starting after an attribute: skip
+/// further attributes, then run to the matching close of the first `{`,
+/// or to the first `;` if that comes before any brace.
+fn item_end(bytes: &[u8], mut i: usize) -> Option<usize> {
+    let n = bytes.len();
+    loop {
+        // Skip whitespace.
+        while i < n && bytes[i].is_ascii_whitespace() {
+            i += 1;
+        }
+        // Skip stacked attributes.
+        if i + 1 < n && bytes[i] == b'#' && bytes[i + 1] == b'[' {
+            let mut depth = 0usize;
+            while i < n {
+                match bytes[i] {
+                    b'[' => depth += 1,
+                    b']' => {
+                        depth -= 1;
+                        if depth == 0 {
+                            i += 1;
+                            break;
+                        }
+                    }
+                    _ => {}
+                }
+                i += 1;
+            }
+            continue;
+        }
+        break;
+    }
+    // Scan to first `{` or `;`.
+    while i < n {
+        match bytes[i] {
+            b'{' => {
+                let mut depth = 0usize;
+                while i < n {
+                    match bytes[i] {
+                        b'{' => depth += 1,
+                        b'}' => {
+                            depth -= 1;
+                            if depth == 0 {
+                                return Some(i + 1);
+                            }
+                        }
+                        _ => {}
+                    }
+                    i += 1;
+                }
+                return Some(n);
+            }
+            b';' => return Some(i + 1),
+            _ => i += 1,
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_and_strings_are_masked_in_code_view() {
+        let src = "let a = \"HashMap\"; // HashMap here\nlet b = HashMap::new();\n";
+        let l = lex(src);
+        assert!(!l.code.contains("HashMap here"));
+        assert_eq!(l.code.matches("HashMap").count(), 1);
+        assert_eq!(l.line_of(l.code.find("HashMap").unwrap()), 2);
+        // The string view keeps the literal but drops the comment.
+        assert!(l.code_strings.contains("\"HashMap\""));
+        assert!(!l.code_strings.contains("HashMap here"));
+    }
+
+    #[test]
+    fn raw_strings_and_char_literals_mask() {
+        let src = "let r = r#\"Instant::now()\"#;\nlet c = '\\n';\nlet lt: &'static str = x;\n";
+        let l = lex(src);
+        assert!(!l.code.contains("Instant::now"));
+        assert!(l.code_strings.contains("Instant::now")); // strings kept
+        assert!(l.code.contains("'static")); // lifetime untouched
+    }
+
+    #[test]
+    fn nested_block_comments_close_correctly() {
+        let src = "/* outer /* inner */ still */ let x = SystemTime;\n";
+        let l = lex(src);
+        assert!(l.code.contains("SystemTime"));
+        assert!(!l.code.contains("outer"));
+    }
+
+    #[test]
+    fn views_keep_byte_alignment() {
+        let src = "let s = \"π multi”byte\"; // trailing π\nlet t = 1;\n";
+        let l = lex(src);
+        assert_eq!(l.code.len(), src.len());
+        assert_eq!(l.code_strings.len(), src.len());
+        assert_eq!(l.line_of(l.code.find("let t").unwrap()), 2);
+    }
+
+    #[test]
+    fn cfg_test_module_is_a_test_region() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() { HashMap::new(); }\n}\nfn after() {}\n";
+        let l = lex(src);
+        let off = l.code.find("HashMap").unwrap();
+        assert!(l.in_test(off));
+        assert!(!l.in_test(l.code.find("live").unwrap()));
+        assert!(!l.in_test(l.code.find("after").unwrap()));
+    }
+
+    #[test]
+    fn cfg_all_test_counts_and_attributes_stack() {
+        let src = "#[cfg(all(test, unix))]\n#[allow(dead_code)]\nfn helper() { x() }\nfn live() {}\n";
+        let l = lex(src);
+        assert!(l.in_test(l.code.find("x()").unwrap()));
+        assert!(!l.in_test(l.code.find("live").unwrap()));
+    }
+
+    #[test]
+    fn cfg_not_test_does_not_gate() {
+        let src = "#[cfg(unix)]\nfn a() { y() }\n";
+        let l = lex(src);
+        assert!(!l.in_test(l.code.find("y()").unwrap()));
+    }
+
+    #[test]
+    fn own_line_vs_trailing_comments() {
+        let src = "// own line\nlet x = 1; // trailing\n";
+        let l = lex(src);
+        let own: Vec<_> = l.comments_on(1).collect();
+        assert!(own[0].own_line);
+        let tr: Vec<_> = l.comments_on(2).collect();
+        assert!(!tr[0].own_line);
+    }
+
+    #[test]
+    fn multi_line_block_comment_yields_per_line_entries() {
+        let src = "/* SAFETY: part one\n   part two */\nunsafe impl Send for X {}\n";
+        let l = lex(src);
+        assert!(l.comments_on(1).any(|c| c.text.contains("SAFETY:")));
+        assert!(l.comments_on(2).next().is_some());
+    }
+}

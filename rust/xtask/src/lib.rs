@@ -1,0 +1,67 @@
+//! Determinism-contract audit for the SuperSFL reproduction.
+//!
+//! `cargo run -p xtask -- audit` walks `rust/src` with a hand-rolled,
+//! comment/string/attribute-aware Rust lexer (no `syn`, no external
+//! dependencies) and enforces the named lints in [`rules::RULES`]:
+//! hash-order leaks, wall-clock reads, ambient entropy, undocumented
+//! `unsafe`, raw artifact writes, stray env reads, and implicit f32
+//! iterator folds. Diagnostics are `file:line`; the machine-readable
+//! report lands in `AUDIT.json` (atomic write, provenance-stamped).
+//!
+//! Escape hatch: `// audit:allow(<rule>) -- <justification>` on or
+//! directly above the flagged line. Bare allows are rejected.
+
+#![deny(unreachable_pub)]
+
+pub mod lexer;
+pub mod report;
+pub mod rules;
+
+use rules::{Allow, Violation};
+use std::path::Path;
+
+/// Aggregate result of auditing a tree.
+pub struct AuditOutcome {
+    pub files_scanned: usize,
+    pub violations: Vec<Violation>,
+    pub allows: Vec<Allow>,
+    pub malformed: Vec<Violation>,
+}
+
+impl AuditOutcome {
+    pub fn clean(&self) -> bool {
+        self.violations.is_empty() && self.malformed.is_empty()
+    }
+}
+
+/// Audit every `.rs` file under `src_root`. Findings come back sorted
+/// by (file, line) for deterministic diagnostics and reports.
+pub fn audit_tree(src_root: &Path) -> std::io::Result<AuditOutcome> {
+    let files = rules::collect_rs_files(src_root)?;
+    let mut out = AuditOutcome {
+        files_scanned: files.len(),
+        violations: Vec::new(),
+        allows: Vec::new(),
+        malformed: Vec::new(),
+    };
+    for path in &files {
+        let rel = path
+            .strip_prefix(src_root)
+            .unwrap_or(path)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/");
+        let text = std::fs::read_to_string(path)?;
+        let rep = rules::audit_file(&rel, &text);
+        out.violations.extend(rep.violations);
+        out.allows.extend(rep.allows);
+        out.malformed.extend(rep.malformed);
+    }
+    // collect_rs_files sorts paths; per-file findings are already in
+    // line order, so a stable sort on file keeps everything canonical.
+    out.violations.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    out.allows.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    out.malformed.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    Ok(out)
+}

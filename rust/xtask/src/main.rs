@@ -1,0 +1,106 @@
+//! CLI entry point: `cargo run -p xtask -- audit [--src DIR] [--json PATH]`.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn usage() -> ExitCode {
+    eprintln!("usage: cargo run -p xtask -- audit [--src DIR] [--json PATH]");
+    eprintln!();
+    eprintln!("  audit   run the determinism-contract lints over rust/src");
+    eprintln!("  --src   scan DIR instead of rust/src (no AUDIT.json unless --json)");
+    eprintln!("  --json  write the report to PATH (default: <repo>/AUDIT.json)");
+    ExitCode::from(2)
+}
+
+fn main() -> ExitCode {
+    let mut args = std::env::args().skip(1);
+    match args.next().as_deref() {
+        Some("audit") => {}
+        _ => return usage(),
+    }
+    let mut src_override: Option<PathBuf> = None;
+    let mut json_override: Option<PathBuf> = None;
+    while let Some(flag) = args.next() {
+        match flag.as_str() {
+            "--src" => match args.next() {
+                Some(v) => src_override = Some(PathBuf::from(v)),
+                None => return usage(),
+            },
+            "--json" => match args.next() {
+                Some(v) => json_override = Some(PathBuf::from(v)),
+                None => return usage(),
+            },
+            _ => return usage(),
+        }
+    }
+
+    // xtask lives at <repo>/rust/xtask; pop twice for the repo root.
+    let repo_root = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .and_then(|p| p.parent())
+        .map(|p| p.to_path_buf())
+        .unwrap_or_else(|| PathBuf::from("."));
+    let default_src = repo_root.join("rust").join("src");
+    let src = src_override.clone().unwrap_or_else(|| default_src.clone());
+
+    let outcome = match xtask::audit_tree(&src) {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("audit: cannot scan {}: {e}", src.display());
+            return ExitCode::from(2);
+        }
+    };
+
+    for v in &outcome.violations {
+        eprintln!("audit: {}: {}:{}: {}", v.rule, v.file, v.line, v.message);
+        eprintln!("       | {}", v.snippet);
+    }
+    for m in &outcome.malformed {
+        eprintln!("audit: malformed-allow: {}:{}: {}", m.file, m.line, m.message);
+        eprintln!("       | {}", m.snippet);
+    }
+
+    // Only the default full-tree run writes AUDIT.json, unless an
+    // explicit --json path asks for one (fixture runs stay write-free).
+    let json_path = match (&json_override, &src_override) {
+        (Some(p), _) => Some(p.clone()),
+        (None, None) => Some(repo_root.join("AUDIT.json")),
+        (None, Some(_)) => None,
+    };
+    if let Some(path) = json_path {
+        let src_label = if src == default_src {
+            "rust/src".to_string()
+        } else {
+            src.display().to_string()
+        };
+        let doc = xtask::report::render(
+            &src_label,
+            outcome.files_scanned,
+            &outcome.violations,
+            &outcome.allows,
+            &outcome.malformed,
+        );
+        if let Err(e) = xtask::report::write_atomic(&path, &doc) {
+            eprintln!("audit: cannot write {}: {e}", path.display());
+            return ExitCode::from(2);
+        }
+        eprintln!("audit: report written to {}", path.display());
+    }
+
+    if outcome.clean() {
+        eprintln!(
+            "audit: clean — {} files, {} allows, 0 violations",
+            outcome.files_scanned,
+            outcome.allows.len()
+        );
+        ExitCode::SUCCESS
+    } else {
+        eprintln!(
+            "audit: FAILED — {} violation(s), {} malformed allow(s) across {} files",
+            outcome.violations.len(),
+            outcome.malformed.len(),
+            outcome.files_scanned
+        );
+        ExitCode::FAILURE
+    }
+}

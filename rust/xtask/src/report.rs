@@ -1,0 +1,184 @@
+//! `AUDIT.json` emission: hand-rolled JSON (the workspace has zero
+//! external dependencies and the audit keeps that), provenance-stamped
+//! with an FNV-1a hash of the rule table like the BENCH artifacts, and
+//! written atomically (temp + rename) so an interrupted run never
+//! leaves a truncated report — the same contract `raw-artifact-write`
+//! enforces on the library.
+
+use crate::rules::{Allow, Violation, RULES};
+use std::fmt::Write as _;
+use std::path::Path;
+
+pub const TOOL: &str = "supersfl-xtask-audit";
+pub const VERSION: &str = "1";
+
+/// FNV-1a 64-bit, matching `bench_util::fnv1a64`.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Hash of the rule table: names, patterns, scopes. Changing any rule
+/// changes the stamp, so a stale AUDIT.json is detectable.
+pub fn rules_fingerprint() -> u64 {
+    let mut buf = String::new();
+    for r in RULES {
+        let _ = write!(
+            buf,
+            "{}|{:?}|{:?}|{:?}|{:?}|{};",
+            r.name, r.code_patterns, r.string_patterns, r.allow_files, r.only_files, r.include_tests
+        );
+    }
+    fnv1a64(buf.as_bytes())
+}
+
+fn esc(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// Render the full report. Deterministic: no timestamps, inputs arrive
+/// pre-sorted (files in path order, findings in line order).
+pub fn render(
+    src_root: &str,
+    files_scanned: usize,
+    violations: &[Violation],
+    allows: &[Allow],
+    malformed: &[Violation],
+) -> String {
+    let mut o = String::with_capacity(4096);
+    o.push_str("{\n");
+    let _ = write!(o, "  \"tool\": ");
+    esc(&mut o, TOOL);
+    let _ = write!(o, ",\n  \"version\": ");
+    esc(&mut o, VERSION);
+    let _ = write!(o, ",\n  \"rules_fnv1a64\": \"{:016x}\"", rules_fingerprint());
+    let _ = write!(o, ",\n  \"src_root\": ");
+    esc(&mut o, src_root);
+    let _ = write!(o, ",\n  \"files_scanned\": {files_scanned}");
+    let _ = write!(
+        o,
+        ",\n  \"clean\": {}",
+        violations.is_empty() && malformed.is_empty()
+    );
+
+    o.push_str(",\n  \"rules\": [");
+    for (i, r) in RULES.iter().enumerate() {
+        if i > 0 {
+            o.push(',');
+        }
+        o.push_str("\n    {\"name\": ");
+        esc(&mut o, r.name);
+        o.push_str(", \"description\": ");
+        esc(&mut o, r.description);
+        let v = violations.iter().filter(|v| v.rule == r.name).count();
+        let a = allows.iter().filter(|a| a.rule == r.name).count();
+        let _ = write!(o, ", \"violations\": {v}, \"allowed\": {a}}}");
+    }
+    o.push_str("\n  ]");
+
+    o.push_str(",\n  \"violations\": [");
+    for (i, v) in violations.iter().enumerate() {
+        if i > 0 {
+            o.push(',');
+        }
+        o.push_str("\n    {\"rule\": ");
+        esc(&mut o, &v.rule);
+        o.push_str(", \"file\": ");
+        esc(&mut o, &v.file);
+        let _ = write!(o, ", \"line\": {}, \"snippet\": ", v.line);
+        esc(&mut o, &v.snippet);
+        o.push('}');
+    }
+    o.push_str("\n  ]");
+
+    o.push_str(",\n  \"allows\": [");
+    for (i, a) in allows.iter().enumerate() {
+        if i > 0 {
+            o.push(',');
+        }
+        o.push_str("\n    {\"rule\": ");
+        esc(&mut o, &a.rule);
+        o.push_str(", \"file\": ");
+        esc(&mut o, &a.file);
+        let _ = write!(o, ", \"line\": {}, \"justification\": ", a.line);
+        esc(&mut o, &a.justification);
+        o.push('}');
+    }
+    o.push_str("\n  ]");
+
+    o.push_str(",\n  \"malformed_allows\": [");
+    for (i, m) in malformed.iter().enumerate() {
+        if i > 0 {
+            o.push(',');
+        }
+        o.push_str("\n    {\"file\": ");
+        esc(&mut o, &m.file);
+        let _ = write!(o, ", \"line\": {}, \"reason\": ", m.line);
+        esc(&mut o, &m.message);
+        o.push('}');
+    }
+    o.push_str("\n  ]\n}\n");
+    o
+}
+
+/// Atomic write: temp file in the destination directory, then rename.
+pub fn write_atomic(path: &Path, contents: &str) -> std::io::Result<()> {
+    let dir = path.parent().unwrap_or_else(|| Path::new("."));
+    let tmp = dir.join(".AUDIT.json.tmp");
+    std::fs::write(&tmp, contents)?;
+    std::fs::rename(&tmp, path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv_matches_reference_vectors() {
+        // Same vectors bench_util asserts.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+    }
+
+    #[test]
+    fn report_is_valid_shape_and_escapes() {
+        let v = vec![Violation {
+            rule: "env-read".into(),
+            file: "wire/mod.rs".into(),
+            line: 9,
+            message: "m".into(),
+            snippet: "let v = env::var(\"X\\n\");".into(),
+        }];
+        let r = render("rust/src", 3, &v, &[], &[]);
+        assert!(r.contains("\"clean\": false"));
+        assert!(r.contains("\\\"X\\\\n\\\""));
+        assert!(r.contains("\"files_scanned\": 3"));
+        // Every rule appears in the summary table.
+        for rule in RULES {
+            assert!(r.contains(rule.name));
+        }
+    }
+
+    #[test]
+    fn fingerprint_is_stable_within_a_build() {
+        assert_eq!(rules_fingerprint(), rules_fingerprint());
+    }
+}

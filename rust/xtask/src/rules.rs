@@ -1,0 +1,583 @@
+//! The determinism-contract rules and the `audit:allow` escape hatch.
+//!
+//! Each rule is a named lint with file:line diagnostics. A violation is
+//! suppressed only by an inline annotation of the form
+//!
+//! ```text
+//! // audit:allow(rule-name) -- justification text
+//! ```
+//!
+//! either trailing on the flagged line or as an own-line comment
+//! immediately above it (attribute/comment lines in between are fine).
+//! A bare `audit:allow(rule)` without a ` -- justification`, or one
+//! naming an unknown rule, is itself a failure (`malformed-allow`).
+
+use crate::lexer::{lex, Lexed};
+use std::path::Path;
+
+/// Identity of one lint. `allow_files` are path prefixes (relative to
+/// the src root, `/`-separated) where the pattern is part of the
+/// documented contract and never flagged.
+pub struct Rule {
+    pub name: &'static str,
+    pub description: &'static str,
+    /// Identifier-boundary patterns matched on the comment+string-free
+    /// code view.
+    pub code_patterns: &'static [&'static str],
+    /// Substring patterns matched on the comment-free view that keeps
+    /// string literals (for contraband like `"/dev/urandom"`).
+    pub string_patterns: &'static [&'static str],
+    /// Path prefixes exempt from this rule.
+    pub allow_files: &'static [&'static str],
+    /// When set, the rule only applies under these path prefixes.
+    pub only_files: &'static [&'static str],
+    /// Whether `#[cfg(test)]` regions are scanned.
+    pub include_tests: bool,
+}
+
+/// The determinism contract, one row per rule. Order is report order.
+pub const RULES: &[Rule] = &[
+    Rule {
+        name: "unordered-iter",
+        description: "no HashMap/HashSet construction or iteration: hash \
+                      iteration order is unspecified and would leak into \
+                      merge order, wire bytes, or trace streams; use \
+                      BTreeMap/BTreeSet or sorted vectors",
+        code_patterns: &["HashMap", "HashSet"],
+        string_patterns: &[],
+        allow_files: &[],
+        only_files: &[],
+        include_tests: true,
+    },
+    Rule {
+        name: "wall-clock",
+        description: "no Instant::now/SystemTime outside the allowlisted \
+                      host-timing sites (runtime kernel/compile timers, \
+                      transport socket deadlines, bench_util, main): wall \
+                      clock on the round path would diverge trajectories \
+                      across hosts and thread counts",
+        code_patterns: &["Instant::now", "SystemTime"],
+        string_patterns: &[],
+        allow_files: &[
+            "runtime/pjrt.rs",
+            "runtime/native/mod.rs",
+            "runtime/native/kernels.rs",
+            "transport/tcp.rs",
+            "bench_util/",
+            "main.rs",
+        ],
+        only_files: &[],
+        include_tests: false,
+    },
+    Rule {
+        name: "os-entropy",
+        description: "no OS or ambient randomness anywhere (rand, \
+                      thread_rng, RandomState, OsRng, getrandom, \
+                      /dev/urandom): all randomness flows through seeded \
+                      Pcg32 lane streams",
+        code_patterns: &["thread_rng", "RandomState", "OsRng", "getrandom", "from_entropy"],
+        string_patterns: &["/dev/urandom", "/dev/random"],
+        allow_files: &[],
+        only_files: &[],
+        include_tests: true,
+    },
+    Rule {
+        name: "unsafe-undocumented",
+        description: "every unsafe block/impl must carry a `// SAFETY:` \
+                      comment within two lines above (or trailing)",
+        code_patterns: &[], // custom logic
+        string_patterns: &[],
+        allow_files: &[],
+        only_files: &[],
+        include_tests: true,
+    },
+    Rule {
+        name: "raw-artifact-write",
+        description: "no direct File::create/fs::write outside util/fs.rs: \
+                      run artifacts must go through the atomic \
+                      temp+rename funnel so interrupted runs never leave \
+                      truncated files",
+        code_patterns: &["File::create", "fs::write"],
+        string_patterns: &[],
+        allow_files: &["util/fs.rs"],
+        only_files: &[],
+        include_tests: false,
+    },
+    Rule {
+        name: "env-read",
+        description: "std::env::var only in config/, main.rs and \
+                      bench_util/: every other env-wins override site \
+                      must be annotated so the documented precedence \
+                      stays auditable",
+        code_patterns: &["env::var", "env::var_os", "env::vars"],
+        string_patterns: &[],
+        allow_files: &["config/", "main.rs", "bench_util/"],
+        only_files: &[],
+        include_tests: false,
+    },
+    Rule {
+        name: "float-fold",
+        description: "no .sum::<f32>()/.product::<f32>() iterator folds in \
+                      runtime/native: fold order must be spelled out per \
+                      the kernels.rs bitwise contract",
+        code_patterns: &["sum::<f32>", "product::<f32>"],
+        string_patterns: &[],
+        allow_files: &[],
+        only_files: &["runtime/native/"],
+        include_tests: true,
+    },
+];
+
+pub fn rule_by_name(name: &str) -> Option<&'static Rule> {
+    RULES.iter().find(|r| r.name == name)
+}
+
+/// One diagnostic. `rule` may also be the pseudo-rule `malformed-allow`.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    pub rule: String,
+    pub file: String,
+    pub line: usize,
+    pub message: String,
+    pub snippet: String,
+}
+
+/// One accepted escape hatch.
+#[derive(Debug, Clone)]
+pub struct Allow {
+    pub rule: String,
+    pub file: String,
+    pub line: usize,
+    /// The code line this allow governs.
+    pub target_line: usize,
+    pub justification: String,
+}
+
+/// Everything the audit learned about one file.
+pub struct FileReport {
+    pub violations: Vec<Violation>,
+    pub allows: Vec<Allow>,
+    pub malformed: Vec<Violation>,
+}
+
+fn path_matches(rel: &str, prefixes: &[&str]) -> bool {
+    prefixes.iter().any(|p| rel.starts_with(p))
+}
+
+fn ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// All identifier-boundary occurrences of `pat` in `view`: the bytes
+/// just before and after the match must not extend an identifier.
+fn find_pattern(view: &str, pat: &str) -> Vec<usize> {
+    let v = view.as_bytes();
+    let p = pat.as_bytes();
+    let mut out = Vec::new();
+    if p.is_empty() || v.len() < p.len() {
+        return out;
+    }
+    let first_ident = ident_byte(p[0]);
+    let last_ident = ident_byte(p[p.len() - 1]);
+    let mut i = 0usize;
+    while i + p.len() <= v.len() {
+        if &v[i..i + p.len()] == p {
+            let before_ok = !first_ident || i == 0 || !ident_byte(v[i - 1]);
+            let after = i + p.len();
+            let after_ok = !last_ident || after >= v.len() || !ident_byte(v[after]);
+            if before_ok && after_ok {
+                out.push(i);
+            }
+        }
+        i += 1;
+    }
+    out
+}
+
+/// Parse the `audit:allow(...)` annotations in a file's comments.
+fn collect_allows(
+    rel: &str,
+    lx: &Lexed,
+    allows: &mut Vec<Allow>,
+    malformed: &mut Vec<Violation>,
+) {
+    for c in &lx.comments {
+        let Some(pos) = c.text.find("audit:allow") else {
+            continue;
+        };
+        let rest = &c.text[pos + "audit:allow".len()..];
+        let parsed = (|| {
+            let rest = rest.strip_prefix('(')?;
+            let close = rest.find(')')?;
+            let rule = rest[..close].trim().to_string();
+            let after = &rest[close + 1..];
+            let just = after.trim_start().strip_prefix("--")?.trim().to_string();
+            Some((rule, just))
+        })();
+        let (rule, just) = match parsed {
+            Some(p) => p,
+            None => {
+                malformed.push(Violation {
+                    rule: "malformed-allow".into(),
+                    file: rel.into(),
+                    line: c.line,
+                    message: "audit:allow must be written \
+                              `audit:allow(<rule>) -- <justification>`"
+                        .into(),
+                    snippet: c.text.trim().to_string(),
+                });
+                continue;
+            }
+        };
+        if rule_by_name(&rule).is_none() {
+            malformed.push(Violation {
+                rule: "malformed-allow".into(),
+                file: rel.into(),
+                line: c.line,
+                message: format!("audit:allow names unknown rule '{rule}'"),
+                snippet: c.text.trim().to_string(),
+            });
+            continue;
+        }
+        if just.is_empty() {
+            malformed.push(Violation {
+                rule: "malformed-allow".into(),
+                file: rel.into(),
+                line: c.line,
+                message: format!(
+                    "bare audit:allow({rule}) — a non-empty justification \
+                     after ` -- ` is required"
+                ),
+                snippet: c.text.trim().to_string(),
+            });
+            continue;
+        }
+        // An own-line allow governs the next line holding code; a
+        // trailing allow governs its own line.
+        let target_line = if c.own_line {
+            let mut l = c.line + 1;
+            while l <= lx.line_count() && lx.line_is_codeless(l) {
+                l += 1;
+            }
+            l
+        } else {
+            c.line
+        };
+        allows.push(Allow {
+            rule,
+            file: rel.into(),
+            line: c.line,
+            target_line,
+            justification: just,
+        });
+    }
+}
+
+/// True when `line` has a SAFETY comment either trailing or in the
+/// contiguous comment block ending within two lines above (attribute
+/// lines may intervene).
+fn has_safety_comment(lx: &Lexed, line: usize) -> bool {
+    if lx.comments_on(line).any(|c| c.text.contains("SAFETY:")) {
+        return true;
+    }
+    // Find the nearest comment line within the two lines above, skipping
+    // attribute-only lines.
+    let mut probe = line;
+    let mut hops = 0;
+    while probe > 1 && hops < 2 {
+        probe -= 1;
+        hops += 1;
+        let code_line = lx.line_text(&lx.code, probe).trim().to_string();
+        let is_attr = code_line.starts_with("#[") || code_line.starts_with("#![");
+        if lx.comments_on(probe).next().is_some() {
+            // Walk the contiguous comment block upward.
+            let mut l = probe;
+            loop {
+                if lx.comments_on(l).any(|c| c.text.contains("SAFETY:")) {
+                    return true;
+                }
+                if l == 1 || lx.comments_on(l - 1).next().is_none() {
+                    break;
+                }
+                l -= 1;
+            }
+            return false;
+        }
+        if !code_line.is_empty() && !is_attr {
+            return false; // real code intervenes
+        }
+        if is_attr {
+            hops -= 1; // attributes don't consume the two-line budget
+        }
+    }
+    false
+}
+
+/// Scan for `unsafe` blocks / impls / traits missing a SAFETY comment.
+/// `unsafe fn` declarations are exempt here: their contract lives in the
+/// `# Safety` doc section, and their bodies' inner `unsafe {}` blocks
+/// are still scanned (and forced to exist by `unsafe_op_in_unsafe_fn`).
+fn check_unsafe(rel: &str, lx: &Lexed, out: &mut Vec<Violation>) {
+    for off in find_pattern(&lx.code, "unsafe") {
+        let after = lx.code[off + "unsafe".len()..].trim_start();
+        let kind = if after.starts_with("fn") {
+            continue;
+        } else if after.starts_with("impl") || after.starts_with("trait") {
+            "impl"
+        } else if after.starts_with('{') {
+            "block"
+        } else {
+            continue; // e.g. `unsafe` in a macro path or attr argument
+        };
+        let line = lx.line_of(off);
+        if !has_safety_comment(lx, line) {
+            out.push(Violation {
+                rule: "unsafe-undocumented".into(),
+                file: rel.into(),
+                line,
+                message: format!(
+                    "unsafe {kind} without a `// SAFETY:` comment within \
+                     two lines"
+                ),
+                snippet: lx.line_text(&lx.code, line).trim().to_string(),
+            });
+        }
+    }
+}
+
+/// Run every rule over one file. `rel` is the `/`-separated path
+/// relative to the src root.
+pub fn audit_file(rel: &str, text: &str) -> FileReport {
+    let lx = lex(text);
+    let mut allows = Vec::new();
+    let mut malformed = Vec::new();
+    collect_allows(rel, &lx, &mut allows, &mut malformed);
+
+    let mut raw: Vec<Violation> = Vec::new();
+    for rule in RULES {
+        if path_matches(rel, rule.allow_files) {
+            continue;
+        }
+        if !rule.only_files.is_empty() && !path_matches(rel, rule.only_files) {
+            continue;
+        }
+        if rule.name == "unsafe-undocumented" {
+            check_unsafe(rel, &lx, &mut raw);
+            continue;
+        }
+        for (view, pats) in [
+            (&lx.code, rule.code_patterns),
+            (&lx.code_strings, rule.string_patterns),
+        ] {
+            for pat in pats {
+                for off in find_pattern(view, pat) {
+                    if !rule.include_tests && lx.in_test(off) {
+                        continue;
+                    }
+                    let line = lx.line_of(off);
+                    raw.push(Violation {
+                        rule: rule.name.into(),
+                        file: rel.into(),
+                        line,
+                        message: format!("{pat} — {}", rule.description),
+                        snippet: lx.line_text(&lx.code_strings, line).trim().to_string(),
+                    });
+                }
+            }
+        }
+    }
+
+    // Apply the escape hatch: an allow suppresses violations of its rule
+    // on its target line.
+    let violations: Vec<Violation> = raw
+        .into_iter()
+        .filter(|v| {
+            !allows
+                .iter()
+                .any(|a| a.rule == v.rule && a.target_line == v.line)
+        })
+        .collect();
+
+    FileReport {
+        violations,
+        allows,
+        malformed,
+    }
+}
+
+/// Recursively collect `.rs` files under `root`, sorted for
+/// deterministic report order.
+pub fn collect_rs_files(root: &Path) -> std::io::Result<Vec<std::path::PathBuf>> {
+    let mut out = Vec::new();
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        for entry in std::fs::read_dir(&dir)? {
+            let entry = entry?;
+            let p = entry.path();
+            if p.is_dir() {
+                stack.push(p);
+            } else if p.extension().and_then(|e| e.to_str()) == Some("rs") {
+                out.push(p);
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn violations_of(rel: &str, src: &str, rule: &str) -> Vec<Violation> {
+        let rep = audit_file(rel, src);
+        rep.violations
+            .into_iter()
+            .filter(|v| v.rule == rule)
+            .collect()
+    }
+
+    #[test]
+    fn hashmap_fires_and_btreemap_does_not() {
+        let fire = violations_of(
+            "orchestrator/mod.rs",
+            "use std::collections::HashMap;\n",
+            "unordered-iter",
+        );
+        assert_eq!(fire.len(), 1);
+        assert_eq!(fire[0].line, 1);
+        let clean = audit_file("orchestrator/mod.rs", "use std::collections::BTreeMap;\n");
+        assert!(clean.violations.is_empty());
+    }
+
+    #[test]
+    fn comments_and_strings_never_fire() {
+        let src = "// HashMap is banned\nlet s = \"HashMap\";\n";
+        assert!(audit_file("wire/mod.rs", src).violations.is_empty());
+    }
+
+    #[test]
+    fn wall_clock_respects_the_allowlist() {
+        let src = "let t0 = std::time::Instant::now();\n";
+        assert_eq!(violations_of("orchestrator/mod.rs", src, "wall-clock").len(), 1);
+        assert!(violations_of("runtime/native/mod.rs", src, "wall-clock").is_empty());
+        assert!(violations_of("bench_util/mod.rs", src, "wall-clock").is_empty());
+    }
+
+    #[test]
+    fn wall_clock_skips_cfg_test_code() {
+        let src = "#[cfg(test)]\nmod tests {\n  fn t() { let _ = std::time::Instant::now(); }\n}\n";
+        assert!(violations_of("tpgf/mod.rs", src, "wall-clock").is_empty());
+    }
+
+    #[test]
+    fn os_entropy_sees_through_string_literals() {
+        let src = "let p = \"/dev/urandom\";\n";
+        assert_eq!(violations_of("util/rng.rs", src, "os-entropy").len(), 1);
+        let ident = "let r = thread_rng();\n";
+        assert_eq!(violations_of("client/mod.rs", ident, "os-entropy").len(), 1);
+    }
+
+    #[test]
+    fn undocumented_unsafe_fires_documented_passes() {
+        let bad = "fn f() { unsafe { g() } }\n";
+        assert_eq!(
+            violations_of("transport/tcp.rs", bad, "unsafe-undocumented").len(),
+            1
+        );
+        let good = "fn f() {\n    // SAFETY: g has no preconditions here.\n    unsafe { g() }\n}\n";
+        assert!(violations_of("transport/tcp.rs", good, "unsafe-undocumented").is_empty());
+        let trailing = "unsafe impl Send for X {} // SAFETY: X owns its data.\n";
+        assert!(violations_of("a.rs", trailing, "unsafe-undocumented").is_empty());
+    }
+
+    #[test]
+    fn safety_comment_blocks_extend_upward() {
+        let src = "// SAFETY: the borrow is pinned by the pool mutex\n// and outlives every worker dereference.\nunsafe impl Send for Job {}\n";
+        assert!(violations_of("pool.rs", src, "unsafe-undocumented").is_empty());
+    }
+
+    #[test]
+    fn unsafe_fn_decl_is_not_flagged_but_its_block_is() {
+        let src = "unsafe fn sub(p: *mut f32) -> &'static mut [f32] {\n    unsafe { std::slice::from_raw_parts_mut(p, 1) }\n}\n";
+        let v = violations_of("k.rs", src, "unsafe-undocumented");
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].line, 2);
+    }
+
+    #[test]
+    fn raw_artifact_write_funnel_exemption() {
+        let src = "let f = File::create(&tmp)?;\n";
+        assert_eq!(
+            violations_of("metrics/mod.rs", src, "raw-artifact-write").len(),
+            1
+        );
+        assert!(violations_of("util/fs.rs", src, "raw-artifact-write").is_empty());
+    }
+
+    #[test]
+    fn env_read_only_in_config_main_bench_util() {
+        let src = "let v = std::env::var(\"SUPERSFL_X\");\n";
+        assert_eq!(violations_of("wire/mod.rs", src, "env-read").len(), 1);
+        assert!(violations_of("config/mod.rs", src, "env-read").is_empty());
+        assert!(violations_of("main.rs", src, "env-read").is_empty());
+    }
+
+    #[test]
+    fn float_fold_only_under_runtime_native() {
+        let src = "let s = xs.iter().sum::<f32>();\n";
+        assert_eq!(
+            violations_of("runtime/native/kernels.rs", src, "float-fold").len(),
+            1
+        );
+        assert!(violations_of("metrics/mod.rs", src, "float-fold").is_empty());
+        // f64 folds are fine even in the kernel core.
+        let f64_fold = "let s = xs.iter().sum::<f64>();\n";
+        assert!(violations_of("runtime/native/mod.rs", f64_fold, "float-fold").is_empty());
+    }
+
+    #[test]
+    fn justified_allow_suppresses_own_line_and_trailing() {
+        let own = "// audit:allow(unordered-iter) -- compile cache; iteration order never observed.\nlet c: HashMap<String, u32> = HashMap::new();\n";
+        let rep = audit_file("runtime/pjrt.rs", own);
+        assert!(rep.violations.is_empty(), "{:?}", rep.violations);
+        assert_eq!(rep.allows.len(), 1);
+        assert_eq!(rep.allows[0].target_line, 2);
+
+        let trailing = "use std::collections::HashMap; // audit:allow(unordered-iter) -- cache key set, order-free.\n";
+        let rep = audit_file("runtime/pjrt.rs", trailing);
+        assert!(rep.violations.is_empty());
+    }
+
+    #[test]
+    fn bare_or_unknown_allow_is_malformed() {
+        let bare = "// audit:allow(unordered-iter)\nlet m = HashMap::new();\n";
+        let rep = audit_file("a.rs", bare);
+        assert_eq!(rep.malformed.len(), 1);
+        assert_eq!(rep.violations.len(), 1, "bare allow must not suppress");
+
+        let unknown = "// audit:allow(no-such-rule) -- because.\nlet m = HashMap::new();\n";
+        let rep = audit_file("a.rs", unknown);
+        assert_eq!(rep.malformed.len(), 1);
+        assert_eq!(rep.violations.len(), 1);
+
+        let empty_just = "// audit:allow(unordered-iter) -- \nlet m = HashMap::new();\n";
+        let rep = audit_file("a.rs", empty_just);
+        assert_eq!(rep.malformed.len(), 1);
+    }
+
+    #[test]
+    fn allow_for_the_wrong_rule_does_not_suppress() {
+        let src = "// audit:allow(wall-clock) -- wrong rule on purpose.\nlet m = HashMap::new();\n";
+        let rep = audit_file("server/mod.rs", src);
+        assert_eq!(rep.violations.len(), 1);
+    }
+
+    #[test]
+    fn var_os_is_caught_but_other_idents_are_not() {
+        let src = "let v = std::env::var_os(\"X\");\n";
+        assert_eq!(violations_of("wire/mod.rs", src, "env-read").len(), 1);
+        let not_env = "let v = my_env::variable();\n";
+        assert!(violations_of("wire/mod.rs", not_env, "env-read").is_empty());
+    }
+}

@@ -1,0 +1,159 @@
+//! Self-test: every rule has a firing fixture and a non-firing fixture
+//! under `fixtures/<rule>/{fire,clean}`. The fire trees must produce at
+//! least one violation of exactly that rule; the clean trees must audit
+//! clean. The CLI is exercised too, so the exit-code contract the CI
+//! job relies on is itself under test.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+fn fixture(rule_dir: &str, kind: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("fixtures")
+        .join(rule_dir)
+        .join(kind)
+}
+
+fn assert_fires(rule_dir: &str, rule: &str) {
+    let out = xtask::audit_tree(&fixture(rule_dir, "fire")).expect("scan fire fixture");
+    assert!(
+        !out.clean(),
+        "{rule_dir}/fire must not audit clean"
+    );
+    let total = out.violations.len() + out.malformed.len();
+    let hits = out
+        .violations
+        .iter()
+        .chain(out.malformed.iter())
+        .filter(|v| v.rule == rule)
+        .count();
+    assert!(hits >= 1, "{rule_dir}/fire must fire `{rule}`: {:?}", out.violations);
+    assert_eq!(
+        hits, total,
+        "{rule_dir}/fire must fire ONLY `{rule}`: {:?} {:?}",
+        out.violations, out.malformed
+    );
+}
+
+fn assert_clean(rule_dir: &str) {
+    let out = xtask::audit_tree(&fixture(rule_dir, "clean")).expect("scan clean fixture");
+    assert!(
+        out.clean(),
+        "{rule_dir}/clean must audit clean: {:?} {:?}",
+        out.violations, out.malformed
+    );
+}
+
+#[test]
+fn unordered_iter_fixture_pair() {
+    assert_fires("unordered_iter", "unordered-iter");
+    assert_clean("unordered_iter");
+    // The clean tree exercises the escape hatch; make sure the allow
+    // was actually recorded rather than the pattern being missed.
+    let out = xtask::audit_tree(&fixture("unordered_iter", "clean")).unwrap();
+    assert_eq!(out.allows.len(), 1);
+    assert_eq!(out.allows[0].rule, "unordered-iter");
+    assert!(!out.allows[0].justification.is_empty());
+}
+
+#[test]
+fn wall_clock_fixture_pair() {
+    assert_fires("wall_clock", "wall-clock");
+    assert_clean("wall_clock");
+}
+
+#[test]
+fn os_entropy_fixture_pair() {
+    assert_fires("os_entropy", "os-entropy");
+    assert_clean("os_entropy");
+}
+
+#[test]
+fn unsafe_undocumented_fixture_pair() {
+    assert_fires("unsafe_undocumented", "unsafe-undocumented");
+    assert_clean("unsafe_undocumented");
+}
+
+#[test]
+fn raw_artifact_write_fixture_pair() {
+    assert_fires("raw_artifact_write", "raw-artifact-write");
+    assert_clean("raw_artifact_write");
+}
+
+#[test]
+fn env_read_fixture_pair() {
+    assert_fires("env_read", "env-read");
+    assert_clean("env_read");
+}
+
+#[test]
+fn float_fold_fixture_pair() {
+    assert_fires("float_fold", "float-fold");
+    assert_clean("float_fold");
+}
+
+#[test]
+fn malformed_allow_fires_and_does_not_suppress() {
+    let out = xtask::audit_tree(&fixture("malformed_allow", "fire")).unwrap();
+    assert!(!out.clean());
+    assert_eq!(out.malformed.len(), 1, "{:?}", out.malformed);
+    assert_eq!(
+        out.violations.len(),
+        1,
+        "bare allow must leave the violation standing: {:?}",
+        out.violations
+    );
+    assert_eq!(out.violations[0].rule, "unordered-iter");
+}
+
+#[test]
+fn cli_exit_codes_match_the_audit_verdict() {
+    let bin = env!("CARGO_BIN_EXE_xtask");
+    let fire = Command::new(bin)
+        .args(["audit", "--src"])
+        .arg(fixture("unordered_iter", "fire"))
+        .output()
+        .expect("run xtask on fire fixture");
+    assert!(
+        !fire.status.success(),
+        "fire fixture must exit nonzero: {}",
+        String::from_utf8_lossy(&fire.stderr)
+    );
+
+    let clean = Command::new(bin)
+        .args(["audit", "--src"])
+        .arg(fixture("float_fold", "clean"))
+        .output()
+        .expect("run xtask on clean fixture");
+    assert!(
+        clean.status.success(),
+        "clean fixture must exit zero: {}",
+        String::from_utf8_lossy(&clean.stderr)
+    );
+}
+
+#[test]
+fn the_real_tree_audits_clean() {
+    // The acceptance criterion itself: rust/src carries zero
+    // unannotated violations and every allow is justified.
+    let src = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("rust/")
+        .join("src");
+    let out = xtask::audit_tree(&src).expect("scan rust/src");
+    assert!(
+        out.clean(),
+        "rust/src must audit clean — violations: {:#?} malformed: {:#?}",
+        out.violations,
+        out.malformed
+    );
+    assert!(out.files_scanned > 10, "walker saw the real tree");
+    for a in &out.allows {
+        assert!(
+            !a.justification.is_empty(),
+            "bare allow at {}:{}",
+            a.file,
+            a.line
+        );
+    }
+}
